@@ -1,0 +1,177 @@
+"""AOT compile path: lower the L2 graphs to HLO *text* + manifest.json.
+
+Run once by ``make artifacts``; the rust runtime
+(rust/src/runtime/) loads the text with ``HloModuleProto::from_text_file``,
+compiles on the PJRT CPU client and executes.  Python never runs on the
+request path.
+
+HLO text — NOT ``lowered.compile().serialize()`` and NOT the proto bytes:
+jax >= 0.5 emits HloModuleProto with 64-bit instruction ids which
+xla_extension 0.5.1 rejects (``proto.id() <= INT_MAX``); the text parser
+reassigns ids and round-trips cleanly (see /opt/xla-example/README.md).
+"""
+
+import argparse
+import functools
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from . import model
+
+F32 = jnp.float32
+I8 = jnp.int8
+
+
+def to_hlo_text(lowered) -> str:
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def spec(shape, dtype=F32):
+    return jax.ShapeDtypeStruct(shape, dtype)
+
+
+# Canonical problem shapes baked into artifacts (HLO is shape-specialized).
+#   gaussian toy:  Phi in R^{256x512}, s=32  (paper §10)
+#   astro r=32:    L=10 antennas -> M = 2*L^2 = 200 stacked-real rows,
+#                  N = 32*32 = 1024 pixels, s=16
+#   tiny:          fast CI shape
+SHAPES = [
+    {"name": "tiny_64x128", "m": 64, "n": 128, "s": 8},
+    {"name": "gauss_256x512", "m": 256, "n": 512, "s": 32},
+    {"name": "astro_200x1024", "m": 200, "n": 1024, "s": 16},
+]
+
+
+def build_entries(m: int, n: int, s: int):
+    """(entry_name, lowered, input/output descriptors) for one shape."""
+    c1t = spec((n, m), I8)
+    c2 = spec((m, n), I8)
+    sc = spec((1,))
+    y = spec((m,))
+    x = spec((n,))
+    g = spec((n,))
+    mu = spec((1,))
+    phi = spec((m, n))
+
+    def io(names, specs):
+        return [
+            {"name": nm, "dtype": str(sp.dtype), "shape": list(sp.shape)}
+            for nm, sp in zip(names, specs)
+        ]
+
+    one = spec((1,))
+    entries = []
+
+    lowered = jax.jit(
+        functools.partial(model.qniht_step, s=s)
+    ).lower(c1t, c2, sc, sc, y, x)
+    entries.append(
+        (
+            "qniht_step",
+            lowered,
+            io(["codes1_t", "codes2", "sc1", "sc2", "y", "x"], [c1t, c2, sc, sc, y, x]),
+            io(
+                ["x_next", "g", "mu", "dx_nsq", "phi1_dx_nsq", "resid_nsq"],
+                [x, g, one, one, one, one],
+            ),
+        )
+    )
+
+    lowered = jax.jit(
+        functools.partial(model.apply_step, s=s)
+    ).lower(c1t, sc, x, g, mu)
+    entries.append(
+        (
+            "apply_step",
+            lowered,
+            io(["codes1_t", "sc1", "x", "g", "mu"], [c1t, sc, x, g, mu]),
+            io(["x_next", "dx_nsq", "phi1_dx_nsq"], [x, one, one]),
+        )
+    )
+
+    lowered = jax.jit(model.qgrad).lower(c1t, c2, sc, sc, y, x)
+    entries.append(
+        (
+            "qgrad",
+            lowered,
+            io(["codes1_t", "codes2", "sc1", "sc2", "y", "x"], [c1t, c2, sc, sc, y, x]),
+            io(["g", "resid_nsq"], [g, one]),
+        )
+    )
+
+    lowered = jax.jit(
+        functools.partial(model.niht_step_dense, s=s)
+    ).lower(phi, y, x)
+    entries.append(
+        (
+            "niht_step_f32",
+            lowered,
+            io(["phi", "y", "x"], [phi, y, x]),
+            io(
+                ["x_next", "g", "mu", "dx_nsq", "phi_dx_nsq", "resid_nsq"],
+                [x, g, one, one, one, one],
+            ),
+        )
+    )
+
+    lowered = jax.jit(
+        functools.partial(model.apply_step_dense, s=s)
+    ).lower(phi, x, g, mu)
+    entries.append(
+        (
+            "apply_step_f32",
+            lowered,
+            io(["phi", "x", "g", "mu"], [phi, x, g, mu]),
+            io(["x_next", "dx_nsq", "phi_dx_nsq"], [x, one, one]),
+        )
+    )
+
+    return entries
+
+
+def main() -> None:
+    parser = argparse.ArgumentParser(description=__doc__)
+    parser.add_argument("--out", default="../artifacts")
+    args = parser.parse_args()
+    os.makedirs(args.out, exist_ok=True)
+
+    manifest = {"format": "hlo-text", "entries": []}
+    for shp in SHAPES:
+        m, n, s = shp["m"], shp["n"], shp["s"]
+        for entry, lowered, inputs, outputs in build_entries(m, n, s):
+            fname = f"{entry}_{shp['name']}.hlo.txt"
+            path = os.path.join(args.out, fname)
+            text = to_hlo_text(lowered)
+            with open(path, "w") as f:
+                f.write(text)
+            manifest["entries"].append(
+                {
+                    "name": f"{entry}_{shp['name']}",
+                    "entry": entry,
+                    "shape_tag": shp["name"],
+                    "file": fname,
+                    "m": m,
+                    "n": n,
+                    "s": s,
+                    "inputs": inputs,
+                    "outputs": outputs,
+                }
+            )
+            print(f"wrote {path} ({len(text)} chars)")
+
+    with open(os.path.join(args.out, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=2)
+    print(f"wrote {os.path.join(args.out, 'manifest.json')}: "
+          f"{len(manifest['entries'])} entries")
+
+
+if __name__ == "__main__":
+    main()

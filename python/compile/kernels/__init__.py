@@ -1,0 +1,1 @@
+from . import qmatvec, quantize, ref, threshold  # noqa: F401

@@ -1,0 +1,106 @@
+"""Layer-1 Pallas kernels: fused dequantize + matvec.
+
+This is the paper's compute hot-spot (§9: "the bulk of the computation is
+accounted for by two routines: a matrix-vector multiplication ... and a
+matrix times a sparse vector").  The measurement matrix lives in memory as
+small integer *codes*; the kernel streams code tiles, dequantizes them
+in-register (VMEM on a real TPU) and accumulates the product — so the
+memory traffic per iteration is ``M*N*b/8`` bytes instead of ``4*M*N``.
+
+Hardware adaptation (paper targets FPGA/AVX2, we target a TPU-shaped
+memory hierarchy): the FPGA gradient unit consumes a fixed-rate stream of
+packed values; the AVX2 version widens SIMD lanes.  Here the same insight
+is expressed as a BlockSpec schedule: int8 code tiles are the HBM→VMEM
+traffic, dequantization happens after the copy, and the MXU sees f32
+tiles.  Kernels are lowered with ``interpret=True`` (CPU PJRT cannot run
+Mosaic custom-calls); on-TPU characteristics are estimated in
+DESIGN.md §Perf from the tile footprint.
+
+VMEM budget at the default (128, 256) tile (f32 accumulation):
+  codes tile 128*256*1 B = 32 KiB, dequant tile 128*256*4 B = 128 KiB,
+  x tile 1 KiB, acc 0.5 KiB -> fits a 16 MiB VMEM with deep double
+  buffering; MXU sees (128, 256) @ (256,) fragments.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def pick_block(dim: int, cap: int) -> int:
+    """Largest divisor of ``dim`` that is <= cap (grid must tile exactly)."""
+    for d in range(min(dim, cap), 0, -1):
+        if dim % d == 0:
+            return d
+    return 1
+
+
+def _mv_kernel(codes_ref, sc_ref, x_ref, o_ref):
+    j = pl.program_id(1)
+
+    @pl.when(j == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    tile = codes_ref[...].astype(jnp.float32) * sc_ref[0]
+    o_ref[...] += tile @ x_ref[...]
+
+
+@functools.partial(jax.jit, static_argnames=("bm", "bn"))
+def matvec(codes, scale_over_half, x, bm: int = 128, bn: int = 256):
+    """y = (codes * scale_over_half) @ x.
+
+    codes: (M, N) int8, scale_over_half: (1,) f32, x: (N,) f32 -> (M,) f32.
+    """
+    m, n = codes.shape
+    bm = pick_block(m, bm)
+    bn = pick_block(n, bn)
+    return pl.pallas_call(
+        _mv_kernel,
+        grid=(m // bm, n // bn),
+        in_specs=[
+            pl.BlockSpec((bm, bn), lambda i, j: (i, j)),
+            pl.BlockSpec((1,), lambda i, j: (0,)),
+            pl.BlockSpec((bn,), lambda i, j: (j,)),
+        ],
+        out_specs=pl.BlockSpec((bm,), lambda i, j: (i,)),
+        out_shape=jax.ShapeDtypeStruct((m,), jnp.float32),
+        interpret=True,
+    )(codes, scale_over_half, x)
+
+
+def _mvt_kernel(codes_ref, sc_ref, v_ref, o_ref):
+    i = pl.program_id(1)  # reduction dim (rows) iterates innermost
+
+    @pl.when(i == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    tile = codes_ref[...].astype(jnp.float32) * sc_ref[0]
+    o_ref[...] += v_ref[...] @ tile
+
+
+@functools.partial(jax.jit, static_argnames=("bm", "bn"))
+def matvec_t(codes, scale_over_half, v, bm: int = 128, bn: int = 256):
+    """y = (codes * scale_over_half).T @ v.
+
+    codes: (R, C) int8, v: (R,) f32 -> (C,) f32.  The grid iterates the
+    reduction (row) dimension innermost so the output tile stays resident.
+    """
+    r, c = codes.shape
+    br = pick_block(r, bm)
+    bc = pick_block(c, bn)
+    return pl.pallas_call(
+        _mvt_kernel,
+        grid=(c // bc, r // br),
+        in_specs=[
+            pl.BlockSpec((br, bc), lambda jc, ir: (ir, jc)),
+            pl.BlockSpec((1,), lambda jc, ir: (0,)),
+            pl.BlockSpec((br,), lambda jc, ir: (ir,)),
+        ],
+        out_specs=pl.BlockSpec((bc,), lambda jc, ir: (jc,)),
+        out_shape=jax.ShapeDtypeStruct((c,), jnp.float32),
+        interpret=True,
+    )(codes, scale_over_half, v)

@@ -1,0 +1,46 @@
+"""Layer-1 Pallas kernel: stochastic quantizer (paper §3, Algorithm 1 input).
+
+Maps f32 values onto the odd-level b-bit grid (see kernels/ref.py for the
+scheme).  Randomness is an explicit input tensor of uniform(0,1) variates —
+the rust coordinator owns the RNG (XORShift, as in the paper's CPU
+implementation), which keeps the AOT artifact a pure function.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from .qmatvec import pick_block
+
+
+def _quantize_kernel(v_ref, u_ref, inv_ref, half_ref, o_ref):
+    half = half_ref[0]
+    t = v_ref[...] * inv_ref[0] * half  # v / scale * half
+    lo = jnp.floor(t)
+    code = lo + (u_ref[...] < (t - lo)).astype(t.dtype)
+    o_ref[...] = jnp.clip(code, -half, half).astype(jnp.int8)
+
+
+@functools.partial(jax.jit, static_argnames=("block",))
+def quantize(v, u, inv_scale, half, block: int = 4096):
+    """Stochastically quantize flat ``v`` (n,) to int8 codes.
+
+    inv_scale: (1,) f32 = 1/scale; half: (1,) f32 = 2**(bits-2).
+    """
+    (n,) = v.shape
+    b = pick_block(n, block)
+    return pl.pallas_call(
+        _quantize_kernel,
+        grid=(n // b,),
+        in_specs=[
+            pl.BlockSpec((b,), lambda i: (i,)),
+            pl.BlockSpec((b,), lambda i: (i,)),
+            pl.BlockSpec((1,), lambda i: (0,)),
+            pl.BlockSpec((1,), lambda i: (0,)),
+        ],
+        out_specs=pl.BlockSpec((b,), lambda i: (i,)),
+        out_shape=jax.ShapeDtypeStruct((n,), jnp.int8),
+        interpret=True,
+    )(v, u, inv_scale, half)

@@ -1,0 +1,99 @@
+"""Pure-jnp oracles for every Pallas kernel (L1 correctness ground truth).
+
+The quantization scheme mirrors the paper (§3 "Quantization" + Remark 3):
+an *odd* number of levels, ``2**(b-1) + 1``, equally spaced on
+``[-scale, +scale]``.  Codes are stored as small signed integers
+``k in {-half, ..., +half}`` with ``half = 2**(b-2)`` and dequantize as
+``value = scale * k / half``.  The level spacing is ``scale / 2**(b-2)`` so
+the per-element stochastic-rounding error is at most ``scale / 2**(b-1)`` —
+exactly the constant in the paper's Lemma 4.
+
+Stochastic rounding is *externally seeded*: callers pass uniform(0,1)
+variates of the same shape, which keeps the kernels pure, makes AOT
+artifacts deterministic functions of their inputs, and lets the rust L3
+own the RNG (the paper's CPU implementation does the same with XORShift).
+"""
+
+import jax
+import jax.numpy as jnp
+
+
+def half_levels(bits: int) -> int:
+    """Number of positive levels: codes live in [-half, +half]."""
+    if bits < 2:
+        raise ValueError(f"need bits >= 2, got {bits}")
+    return 2 ** (bits - 2)
+
+
+def spacing(bits: int) -> float:
+    """Level spacing on the normalized [-1, 1] grid."""
+    return 1.0 / half_levels(bits)
+
+
+def quantize_ref(v, u, bits: int, scale):
+    """Stochastically round ``v`` onto the b-bit grid. Returns int8 codes.
+
+    ``u`` are iid uniform(0,1) variates, same shape as ``v``.
+    ``scale`` must satisfy ``scale >= max|v|`` for the codes to be in range
+    (values are clamped otherwise, matching the rust implementation).
+    """
+    half = half_levels(bits)
+    t = v / scale * half  # in [-half, half]
+    lo = jnp.floor(t)
+    frac = t - lo
+    code = lo + (u < frac).astype(t.dtype)
+    code = jnp.clip(code, -half, half)
+    return code.astype(jnp.int8)
+
+
+def dequantize_ref(codes, bits: int, scale):
+    return codes.astype(jnp.float32) * (scale / half_levels(bits))
+
+
+def matvec_ref(codes, scale_over_half, x):
+    """A @ x with A = codes * scale_over_half (codes: (M, N), x: (N,))."""
+    return (codes.astype(jnp.float32) @ x) * scale_over_half
+
+
+def matvec_t_ref(codes, scale_over_half, v):
+    """A.T @ v with A = codes * scale_over_half (codes: (R, C), v: (R,))."""
+    return (codes.astype(jnp.float32).T @ v) * scale_over_half
+
+
+def threshold_apply_ref(v, thr):
+    """Zero every entry with |v| < thr (value-threshold form of H_s)."""
+    return jnp.where(jnp.abs(v) >= thr, v, 0.0)
+
+
+def hard_threshold_ref(v, s: int):
+    """Exact H_s: keep the s largest-magnitude entries (index-based)."""
+    idx = jax.lax.top_k(jnp.abs(v), s)[1]
+    mask = jnp.zeros(v.shape, bool).at[idx].set(True)
+    return jnp.where(mask, v, 0.0)
+
+
+def grad_ref(phi1_t_codes, codes2, scale1_over_half, scale2_over_half, y, x):
+    """g = Phi1^T (y - Phi2 x), quantized operands.
+
+    ``phi1_t_codes`` is Phi1 stored transposed, (N, M); ``codes2`` is (M, N).
+    """
+    r = y - matvec_ref(codes2, scale2_over_half, x)
+    return matvec_ref(phi1_t_codes, scale1_over_half, r)
+
+
+def niht_step_dense_ref(phi, y, x, s: int, eps: float = 1e-30):
+    """Full-precision NIHT step oracle (the 32-bit baseline semantics)."""
+    r = y - phi @ x
+    g = phi.T @ r
+    mask = x != 0
+    any_supp = jnp.any(mask)
+    mask = jnp.where(any_supp, mask, hard_threshold_ref(g, s) != 0)
+    g_m = jnp.where(mask, g, 0.0)
+    num = g_m @ g_m
+    pg = phi @ g_m
+    den = pg @ pg
+    mu = num / jnp.maximum(den, eps)
+    x_next = hard_threshold_ref(x + mu * g, s)
+    dx = x_next - x
+    phi_dx = phi @ dx
+    return x_next, g, mu, dx @ dx, phi_dx @ phi_dx, r @ r

@@ -1,0 +1,37 @@
+"""Layer-1 Pallas kernel: magnitude thresholding (the H_s apply stage).
+
+The s-th largest magnitude is found with ``lax.top_k`` at the model layer
+(a reduction XLA already does well); this kernel performs the bandwidth-
+bound apply pass ``v <- v * [|v| >= thr]`` over the full vector.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from .qmatvec import pick_block
+
+
+def _threshold_kernel(v_ref, t_ref, o_ref):
+    v = v_ref[...]
+    o_ref[...] = jnp.where(jnp.abs(v) >= t_ref[0], v, 0.0)
+
+
+@functools.partial(jax.jit, static_argnames=("block",))
+def threshold_apply(v, thr, block: int = 4096):
+    """Zero entries of flat ``v`` (n,) with magnitude below thr (1,)."""
+    (n,) = v.shape
+    b = pick_block(n, block)
+    return pl.pallas_call(
+        _threshold_kernel,
+        grid=(n // b,),
+        in_specs=[
+            pl.BlockSpec((b,), lambda i: (i,)),
+            pl.BlockSpec((1,), lambda i: (0,)),
+        ],
+        out_specs=pl.BlockSpec((b,), lambda i: (i,)),
+        out_shape=jax.ShapeDtypeStruct((n,), jnp.float32),
+        interpret=True,
+    )(v, thr)

@@ -1,0 +1,162 @@
+"""Layer-2: the QNIHT update as a JAX compute graph (paper Algorithm 1).
+
+Build-time only — lowered once by aot.py to HLO text and executed from the
+rust runtime.  The heavy operands are quantized codes (int8) so the graph's
+memory traffic matches the paper's low-precision story; the Pallas kernels
+in ``kernels/`` do the fused dequantize-matvec.
+
+Conventions
+-----------
+* ``codes1_t``: Phi_hat_1 stored TRANSPOSED, shape (N, M) int8.  The
+  gradient needs Phi1^T r (a (N,M) matvec — row-major friendly) and the
+  line-search needs Phi1 dx (the transposed matvec over the same buffer).
+  This mirrors the paper's CPU layout where both routines stream the matrix
+  contiguously.
+* ``codes2``: Phi_hat_2, shape (M, N) int8 (used for Phi2 x).
+* ``sc1`` / ``sc2``: (1,) f32 = scale / half_levels(bits) — the dequant
+  multiplier.  Bit width is folded into the multiplier so one artifact
+  serves every precision.
+* scalars are carried as shape-(1,) f32 so the PJRT boundary stays
+  array-only.
+
+Step-size note: Algorithm 1 computes the numerator/denominator of mu with
+``Phi_Gamma`` (ambiguous between the full-precision and quantized matrix in
+the paper's notation).  At runtime only the quantized matrix exists, so we
+use Phi_hat_2 — consistent with the convergence argument, which only needs
+``mu <= 1/beta_hat^2``-type bounds on the *quantized* RICs (Remark 2).
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from .kernels import qmatvec
+
+EPS = 1e-30
+
+
+def topk_mask(v, s: int):
+    """Boolean mask of the s largest |v| entries, lower index wins ties.
+
+    Implemented with sort + cumsum instead of ``lax.top_k``: jax lowers
+    top_k to the HLO ``TopK`` op whose text attributes (``largest=true``)
+    the xla_extension 0.5.1 parser used by the rust runtime rejects. Sort
+    and cumsum are classic HLO and round-trip cleanly. Semantics match
+    ``ref.hard_threshold_ref`` exactly (including ties).
+    """
+    absv = jnp.abs(v)
+    sorted_desc = jnp.sort(absv)[::-1]
+    thr = sorted_desc[s - 1]
+    gt = absv > thr
+    eq = absv == thr
+    need = s - jnp.sum(gt)
+    rank = jnp.cumsum(eq)  # 1-based rank among the tied entries
+    return gt | (eq & (rank <= need))
+
+
+def _support_mask(x, g, s: int):
+    """supp(x), or supp(H_s(g)) on the first iteration (x == 0)."""
+    mask = x != 0
+    return jnp.where(jnp.any(mask), mask, topk_mask(g, s))
+
+
+def _hs(v, s: int):
+    """H_s: keep exactly the s largest-magnitude entries."""
+    return jnp.where(topk_mask(v, s), v, 0.0)
+
+
+def qniht_step(codes1_t, codes2, sc1, sc2, y, x, *, s: int):
+    """One quantized NIHT step (gradient + adaptive mu + threshold).
+
+    Returns (x_next, g, mu, dx_nsq, phi1_dx_nsq, resid_nsq) — everything
+    the rust coordinator needs to run Algorithm 1's support check and mu
+    line search without touching full-precision data.
+    """
+    r = y - qmatvec.matvec(codes2, sc2, x)
+    g = qmatvec.matvec(codes1_t, sc1, r)
+    mask = _support_mask(x, g, s)
+    g_m = jnp.where(mask, g, 0.0)
+    num = g_m @ g_m
+    pg = qmatvec.matvec(codes2, sc2, g_m)
+    den = pg @ pg
+    mu = num / jnp.maximum(den, EPS)
+    x_next = _hs(x + mu * g, s)
+    dx = x_next - x
+    phi1_dx = qmatvec.matvec_t(codes1_t, sc1, dx)
+    return (
+        x_next,
+        g,
+        mu[None],
+        (dx @ dx)[None],
+        (phi1_dx @ phi1_dx)[None],
+        (r @ r)[None],
+    )
+
+
+def apply_step(codes1_t, sc1, x, g, mu, *, s: int):
+    """Re-apply a (shrunken) step: x+ = H_s(x + mu g), plus the line-search
+    norms ||x+ - x||^2 and ||Phi1 (x+ - x)||^2 (Algorithm 1's b^[n])."""
+    x_next = _hs(x + mu[0] * g, s)
+    dx = x_next - x
+    phi1_dx = qmatvec.matvec_t(codes1_t, sc1, dx)
+    return x_next, (dx @ dx)[None], (phi1_dx @ phi1_dx)[None]
+
+
+def qgrad(codes1_t, codes2, sc1, sc2, y, x):
+    """Gradient only: g = Phi1^T (y - Phi2 x), plus residual norm."""
+    r = y - qmatvec.matvec(codes2, sc2, x)
+    g = qmatvec.matvec(codes1_t, sc1, r)
+    return g, (r @ r)[None]
+
+
+def niht_step_dense(phi, y, x, *, s: int):
+    """Full-precision (32-bit) NIHT step — the paper's baseline engine.
+
+    Pure jnp (XLA fuses dense matvecs well; the Pallas path is only
+    beneficial for quantized operands)."""
+    r = y - phi @ x
+    g = phi.T @ r
+    mask = _support_mask(x, g, s)
+    g_m = jnp.where(mask, g, 0.0)
+    num = g_m @ g_m
+    pg = phi @ g_m
+    den = pg @ pg
+    mu = num / jnp.maximum(den, EPS)
+    x_next = _hs(x + mu * g, s)
+    dx = x_next - x
+    phi_dx = phi @ dx
+    return (
+        x_next,
+        g,
+        mu[None],
+        (dx @ dx)[None],
+        (phi_dx @ phi_dx)[None],
+        (r @ r)[None],
+    )
+
+
+def apply_step_dense(phi, x, g, mu, *, s: int):
+    x_next = _hs(x + mu[0] * g, s)
+    dx = x_next - x
+    phi_dx = phi @ dx
+    return x_next, (dx @ dx)[None], (phi_dx @ phi_dx)[None]
+
+
+# ---------------------------------------------------------------------------
+# jit wrappers with static sparsity (top_k needs a static k)
+
+
+@functools.partial(jax.jit, static_argnames=("s",))
+def qniht_step_jit(codes1_t, codes2, sc1, sc2, y, x, s):
+    return qniht_step(codes1_t, codes2, sc1, sc2, y, x, s=s)
+
+
+@functools.partial(jax.jit, static_argnames=("s",))
+def apply_step_jit(codes1_t, sc1, x, g, mu, s):
+    return apply_step(codes1_t, sc1, x, g, mu, s=s)
+
+
+@functools.partial(jax.jit, static_argnames=("s",))
+def niht_step_dense_jit(phi, y, x, s):
+    return niht_step_dense(phi, y, x, s=s)

@@ -1,0 +1,142 @@
+"""L2 model graphs: quantized step vs dense oracle, shape/semantics checks."""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile import model
+from compile.kernels import ref
+
+
+def _problem(m, n, s, seed, bits=8):
+    rng = np.random.default_rng(seed)
+    phi = rng.standard_normal((m, n)).astype(np.float32) / np.sqrt(m)
+    x_true = np.zeros(n, np.float32)
+    supp = rng.choice(n, s, replace=False)
+    x_true[supp] = rng.standard_normal(s).astype(np.float32)
+    y = phi @ x_true
+    half = ref.half_levels(bits)
+    scale = np.abs(phi).max()
+    u1 = rng.random((n, m)).astype(np.float32)
+    u2 = rng.random((m, n)).astype(np.float32)
+    c1t = np.asarray(ref.quantize_ref(jnp.asarray(phi.T), jnp.asarray(u1), bits, scale))
+    c2 = np.asarray(ref.quantize_ref(jnp.asarray(phi), jnp.asarray(u2), bits, scale))
+    sc = np.asarray([scale / half], np.float32)
+    return phi, x_true, y.astype(np.float32), c1t, c2, sc
+
+
+def test_dense_step_matches_oracle():
+    m, n, s = 32, 64, 4
+    phi, x_true, y, *_ = _problem(m, n, s, 0)
+    x0 = jnp.zeros(n, jnp.float32)
+    got = model.niht_step_dense_jit(jnp.asarray(phi), jnp.asarray(y), x0, s)
+    want = ref.niht_step_dense_ref(jnp.asarray(phi), jnp.asarray(y), x0, s)
+    for g, w in zip(got, want):
+        np.testing.assert_allclose(
+            np.asarray(g).ravel(), np.asarray(w).ravel(), rtol=1e-4, atol=1e-5
+        )
+
+
+def test_qniht_step_close_to_dense_at_8bit():
+    """At 8 bits the quantized step should track the dense step closely."""
+    m, n, s = 32, 64, 4
+    phi, x_true, y, c1t, c2, sc = _problem(m, n, s, 1, bits=8)
+    x0 = jnp.zeros(n, jnp.float32)
+    xq, gq, *_ = model.qniht_step_jit(
+        jnp.asarray(c1t), jnp.asarray(c2), jnp.asarray(sc), jnp.asarray(sc),
+        jnp.asarray(y), x0, s,
+    )
+    xd, gd, *_ = model.niht_step_dense_jit(jnp.asarray(phi), jnp.asarray(y), x0, s)
+    # gradients agree to quantization noise
+    rel = np.linalg.norm(np.asarray(gq) - np.asarray(gd)) / np.linalg.norm(np.asarray(gd))
+    assert rel < 0.1, rel
+
+
+def test_qniht_step_first_iteration_support():
+    """At x=0 the step must select support from H_s(Phi^T y)."""
+    m, n, s = 24, 48, 3
+    _, _, y, c1t, c2, sc = _problem(m, n, s, 2)
+    x0 = jnp.zeros(n, jnp.float32)
+    x1, g, mu, *_ = model.qniht_step_jit(
+        jnp.asarray(c1t), jnp.asarray(c2), jnp.asarray(sc), jnp.asarray(sc),
+        jnp.asarray(y), x0, s,
+    )
+    x1 = np.asarray(x1)
+    g_top = np.asarray(ref.hard_threshold_ref(g, s))
+    assert set(np.nonzero(x1)[0]) <= set(np.nonzero(g_top)[0] if (g_top != 0).any() else [])
+    assert (x1 != 0).sum() <= s
+
+
+def test_apply_step_consistent_with_full_step():
+    """apply_step with the mu returned by qniht_step reproduces x_next."""
+    m, n, s = 32, 64, 4
+    _, _, y, c1t, c2, sc = _problem(m, n, s, 3)
+    x0 = jnp.zeros(n, jnp.float32)
+    args = (jnp.asarray(c1t), jnp.asarray(c2), jnp.asarray(sc), jnp.asarray(sc),
+            jnp.asarray(y), x0)
+    x1, g, mu, dx_nsq, p1dx_nsq, _ = model.qniht_step_jit(*args, s)
+    x1b, dx_nsq_b, p1dx_nsq_b = model.apply_step_jit(
+        jnp.asarray(c1t), jnp.asarray(sc), x0, g, mu, s
+    )
+    np.testing.assert_allclose(np.asarray(x1), np.asarray(x1b), rtol=1e-5, atol=1e-6)
+    np.testing.assert_allclose(float(dx_nsq[0]), float(dx_nsq_b[0]), rtol=1e-4)
+    np.testing.assert_allclose(float(p1dx_nsq[0]), float(p1dx_nsq_b[0]), rtol=1e-4)
+
+
+def test_iterating_dense_step_recovers_planted_signal():
+    """A few dense NIHT steps on a well-conditioned problem reduce error."""
+    m, n, s = 64, 128, 4
+    phi, x_true, y, *_ = _problem(m, n, s, 4)
+    x = jnp.zeros(n, jnp.float32)
+    err0 = float(np.linalg.norm(x_true))
+    for _ in range(15):
+        x = model.niht_step_dense_jit(jnp.asarray(phi), jnp.asarray(y), x, s)[0]
+    err = float(np.linalg.norm(np.asarray(x) - x_true))
+    assert err < 0.05 * err0, (err, err0)
+
+
+def test_iterating_qniht_8bit_recovers_planted_signal():
+    m, n, s = 64, 128, 4
+    phi, x_true, y, c1t, c2, sc = _problem(m, n, s, 5, bits=8)
+    x = jnp.zeros(n, jnp.float32)
+    for _ in range(15):
+        x = model.qniht_step_jit(
+            jnp.asarray(c1t), jnp.asarray(c2), jnp.asarray(sc), jnp.asarray(sc),
+            jnp.asarray(y), x, s,
+        )[0]
+    err = float(np.linalg.norm(np.asarray(x) - x_true))
+    assert err < 0.15 * float(np.linalg.norm(x_true)), err
+
+
+@settings(max_examples=8, deadline=None)
+@given(
+    m=st.integers(16, 48),
+    seed=st.integers(0, 2**31 - 1),
+    bits=st.sampled_from([4, 8]),
+)
+def test_qgrad_matches_ref_hypothesis(m, seed, bits):
+    n, s = 2 * m, 4
+    _, _, y, c1t, c2, sc = _problem(m, n, s, seed, bits)
+    rng = np.random.default_rng(seed ^ 0x5555)
+    x = jnp.asarray(rng.standard_normal(n).astype(np.float32) * 0.1)
+    g, rn = model.qgrad(
+        jnp.asarray(c1t), jnp.asarray(c2), jnp.asarray(sc), jnp.asarray(sc),
+        jnp.asarray(y), x,
+    )
+    want = ref.grad_ref(
+        jnp.asarray(c1t), jnp.asarray(c2), sc[0], sc[0], jnp.asarray(y), x
+    )
+    np.testing.assert_allclose(np.asarray(g), np.asarray(want), rtol=1e-4, atol=1e-4)
+
+
+def test_mu_positive_and_finite():
+    m, n, s = 32, 64, 4
+    _, _, y, c1t, c2, sc = _problem(m, n, s, 6)
+    x0 = jnp.zeros(n, jnp.float32)
+    _, _, mu, *_ = model.qniht_step_jit(
+        jnp.asarray(c1t), jnp.asarray(c2), jnp.asarray(sc), jnp.asarray(sc),
+        jnp.asarray(y), x0, s,
+    )
+    mu = float(mu[0])
+    assert np.isfinite(mu) and mu > 0

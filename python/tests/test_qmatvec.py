@@ -1,0 +1,98 @@
+"""Pallas fused dequant-matvec vs oracle, hypothesis shape/tile sweep."""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import qmatvec, ref
+
+
+def _mk(m, n, seed, bits=4):
+    rng = np.random.default_rng(seed)
+    half = ref.half_levels(bits)
+    codes = jnp.asarray(rng.integers(-half, half + 1, (m, n)), jnp.int8)
+    x = jnp.asarray(rng.standard_normal(n), jnp.float32)
+    sc = jnp.asarray([0.37 / half], jnp.float32)
+    return codes, sc, x
+
+
+@pytest.mark.parametrize("m,n", [(4, 8), (64, 128), (100, 96), (256, 512)])
+def test_matvec_matches_ref(m, n):
+    codes, sc, x = _mk(m, n, m * 1000 + n)
+    got = qmatvec.matvec(codes, sc, x)
+    want = ref.matvec_ref(codes, sc[0], x)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=1e-5, atol=1e-5)
+
+
+@pytest.mark.parametrize("r,c", [(8, 4), (128, 64), (96, 100)])
+def test_matvec_t_matches_ref(r, c):
+    codes, sc, _ = _mk(r, c, r * 31 + c)
+    rng = np.random.default_rng(5)
+    v = jnp.asarray(rng.standard_normal(r), jnp.float32)
+    got = qmatvec.matvec_t(codes, sc, v)
+    want = ref.matvec_t_ref(codes, sc[0], v)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=1e-5, atol=1e-5)
+
+
+@settings(max_examples=20, deadline=None)
+@given(
+    m=st.integers(1, 96),
+    n=st.integers(1, 96),
+    bits=st.sampled_from([2, 4, 8]),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_matvec_hypothesis(m, n, bits, seed):
+    codes, sc, x = _mk(m, n, seed, bits)
+    got = qmatvec.matvec(codes, sc, x)
+    want = ref.matvec_ref(codes, sc[0], x)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=1e-4, atol=1e-4)
+
+
+@settings(max_examples=20, deadline=None)
+@given(
+    r=st.integers(1, 96),
+    c=st.integers(1, 96),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_matvec_t_hypothesis(r, c, seed):
+    codes, sc, _ = _mk(r, c, seed)
+    rng = np.random.default_rng(seed ^ 0xABCD)
+    v = jnp.asarray(rng.standard_normal(r), jnp.float32)
+    got = qmatvec.matvec_t(codes, sc, v)
+    want = ref.matvec_t_ref(codes, sc[0], v)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=1e-4, atol=1e-4)
+
+
+@settings(max_examples=10, deadline=None)
+@given(
+    bm=st.sampled_from([8, 16, 32, 64]),
+    bn=st.sampled_from([8, 16, 32, 64]),
+)
+def test_matvec_tile_invariance(bm, bn):
+    """The result must not depend on the BlockSpec tiling."""
+    codes, sc, x = _mk(64, 64, 42)
+    base = qmatvec.matvec(codes, sc, x, bm=64, bn=64)
+    got = qmatvec.matvec(codes, sc, x, bm=bm, bn=bn)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(base), rtol=1e-5, atol=1e-5)
+
+
+def test_zero_codes_give_zero():
+    codes = jnp.zeros((16, 32), jnp.int8)
+    sc = jnp.asarray([1.0], jnp.float32)
+    x = jnp.ones(32, jnp.float32)
+    assert float(jnp.max(jnp.abs(qmatvec.matvec(codes, sc, x)))) == 0.0
+
+
+def test_scale_linearity():
+    codes, sc, x = _mk(32, 48, 9)
+    y1 = np.asarray(qmatvec.matvec(codes, sc, x))
+    y2 = np.asarray(qmatvec.matvec(codes, 2.0 * sc, x))
+    np.testing.assert_allclose(y2, 2.0 * y1, rtol=1e-5, atol=1e-6)
+
+
+def test_pick_block_divides():
+    for dim in (1, 7, 64, 100, 200, 1024):
+        for cap in (1, 8, 128, 256):
+            b = qmatvec.pick_block(dim, cap)
+            assert dim % b == 0 and 1 <= b <= max(cap, 1)

@@ -1,0 +1,104 @@
+"""Pallas stochastic quantizer vs ref.py oracle + statistical properties."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import quantize as qk
+from compile.kernels import ref
+
+
+def _quantize_pallas(v, u, bits, scale):
+    inv = jnp.array([1.0 / scale], jnp.float32)
+    half = jnp.array([float(ref.half_levels(bits))], jnp.float32)
+    return qk.quantize(v, u, inv, half)
+
+
+@pytest.mark.parametrize("bits", [2, 3, 4, 6, 8])
+def test_kernel_matches_ref(bits):
+    rng = np.random.default_rng(bits)
+    v = jnp.asarray(rng.standard_normal(512), jnp.float32)
+    u = jnp.asarray(rng.random(512), jnp.float32)
+    scale = float(jnp.max(jnp.abs(v)))
+    got = _quantize_pallas(v, u, bits, scale)
+    want = ref.quantize_ref(v, u, bits, scale)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    n=st.integers(1, 257),
+    bits=st.integers(2, 8),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_kernel_matches_ref_hypothesis(n, bits, seed):
+    rng = np.random.default_rng(seed)
+    v = jnp.asarray(rng.standard_normal(n) * 3.0, jnp.float32)
+    u = jnp.asarray(rng.random(n), jnp.float32)
+    scale = float(max(np.max(np.abs(np.asarray(v))), 1e-6))
+    got = _quantize_pallas(v, u, bits, scale)
+    want = ref.quantize_ref(v, u, bits, scale)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+@pytest.mark.parametrize("bits", [2, 4, 8])
+def test_codes_in_range(bits):
+    rng = np.random.default_rng(7)
+    v = jnp.asarray(rng.standard_normal(1024), jnp.float32)
+    u = jnp.asarray(rng.random(1024), jnp.float32)
+    scale = float(jnp.max(jnp.abs(v)))
+    codes = np.asarray(_quantize_pallas(v, u, bits, scale))
+    half = ref.half_levels(bits)
+    assert codes.min() >= -half and codes.max() <= half
+
+
+def test_unbiased():
+    """E[Q(v)] = v: average dequantized value over many rounding draws."""
+    rng = np.random.default_rng(11)
+    v = jnp.asarray(rng.uniform(-1, 1, 64), jnp.float32)
+    scale, bits, reps = 1.0, 2, 4000
+    acc = np.zeros(64)
+    for i in range(reps):
+        u = jnp.asarray(rng.random(64), jnp.float32)
+        acc += np.asarray(ref.dequantize_ref(
+            ref.quantize_ref(v, u, bits, scale), bits, scale))
+    err = np.abs(acc / reps - np.asarray(v))
+    # std of the mean ~ spacing/sqrt(reps) ~ 0.016 at b=2
+    assert err.max() < 0.08, err.max()
+
+
+def test_lemma4_error_bound():
+    """E||Q(v) - v||_2 <= c sqrt(M) / 2^{b-1} (paper Lemma 4)."""
+    rng = np.random.default_rng(3)
+    m = 256
+    v = jnp.asarray(rng.uniform(-1, 1, m), jnp.float32)
+    for bits in (2, 4, 8):
+        errs = []
+        for i in range(50):
+            u = jnp.asarray(rng.random(m), jnp.float32)
+            dq = ref.dequantize_ref(ref.quantize_ref(v, u, bits, 1.0), bits, 1.0)
+            errs.append(float(jnp.linalg.norm(dq - v)))
+        bound = np.sqrt(m) / 2 ** (bits - 1)
+        assert np.mean(errs) <= bound, (bits, np.mean(errs), bound)
+
+
+def test_grid_values_are_fixed_points():
+    """Values already on the grid quantize deterministically to themselves."""
+    bits = 4
+    half = ref.half_levels(bits)
+    codes = jnp.arange(-half, half + 1, dtype=jnp.float32)
+    v = codes / half
+    for uval in (0.0, 0.5, 0.999):
+        u = jnp.full_like(v, uval)
+        got = ref.quantize_ref(v, u, bits, 1.0)
+        np.testing.assert_array_equal(np.asarray(got), np.asarray(codes, np.int8))
+
+
+def test_clamps_out_of_range():
+    bits = 2
+    v = jnp.asarray([5.0, -5.0], jnp.float32)
+    u = jnp.asarray([0.5, 0.5], jnp.float32)
+    got = np.asarray(ref.quantize_ref(v, u, bits, 1.0))
+    np.testing.assert_array_equal(got, np.asarray([1, -1], np.int8))

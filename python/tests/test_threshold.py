@@ -1,0 +1,55 @@
+"""Pallas threshold-apply kernel vs oracle + H_s semantics."""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import ref, threshold
+
+
+@pytest.mark.parametrize("n", [4, 100, 512])
+def test_matches_ref(n):
+    rng = np.random.default_rng(n)
+    v = jnp.asarray(rng.standard_normal(n), jnp.float32)
+    thr = jnp.asarray([0.5], jnp.float32)
+    got = threshold.threshold_apply(v, thr)
+    want = ref.threshold_apply_ref(v, thr[0])
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+@settings(max_examples=30, deadline=None)
+@given(
+    n=st.integers(1, 300),
+    t=st.floats(0.0, 3.0),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_matches_ref_hypothesis(n, t, seed):
+    rng = np.random.default_rng(seed)
+    v = jnp.asarray(rng.standard_normal(n), jnp.float32)
+    thr = jnp.asarray([t], jnp.float32)
+    got = threshold.threshold_apply(v, thr)
+    want = ref.threshold_apply_ref(v, thr[0])
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+def test_hard_threshold_keeps_exactly_s():
+    rng = np.random.default_rng(0)
+    v = jnp.asarray(rng.standard_normal(128), jnp.float32)
+    for s in (1, 5, 64, 128):
+        out = np.asarray(ref.hard_threshold_ref(v, s))
+        assert (out != 0).sum() == s
+
+
+def test_hard_threshold_keeps_largest():
+    v = jnp.asarray([0.1, -5.0, 2.0, 0.01, -3.0], jnp.float32)
+    out = np.asarray(ref.hard_threshold_ref(v, 2))
+    np.testing.assert_array_equal(out, [0, -5.0, 0, 0, -3.0])
+
+
+def test_hard_threshold_idempotent():
+    rng = np.random.default_rng(1)
+    v = jnp.asarray(rng.standard_normal(64), jnp.float32)
+    once = ref.hard_threshold_ref(v, 8)
+    twice = ref.hard_threshold_ref(once, 8)
+    np.testing.assert_array_equal(np.asarray(once), np.asarray(twice))

@@ -1,0 +1,72 @@
+//! Bench E11: recovery-service throughput/latency — queue + batcher +
+//! worker-pool overhead on top of the raw solver.
+
+use lpcs::algorithms::qniht::{qniht, RequantMode};
+use lpcs::algorithms::SolveOptions;
+use lpcs::benchkit;
+use lpcs::config::{EngineKind, ServiceConfig};
+use lpcs::coordinator::{JobSpec, ProblemHandle, RecoveryService};
+use lpcs::linalg::Mat;
+use lpcs::rng::XorShift128Plus;
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+fn planted(m: usize, n: usize, s: usize, seed: u64) -> (Arc<Mat>, Vec<f32>) {
+    let mut rng = XorShift128Plus::new(seed);
+    let phi = Mat::from_fn(m, n, |_, _| rng.gaussian_f32() / (m as f32).sqrt());
+    let mut x = vec![0.0f32; n];
+    for i in rng.choose_k(n, s) {
+        x[i] = 1.5;
+    }
+    let y = phi.matvec(&x);
+    (Arc::new(phi), y)
+}
+
+fn main() {
+    let (m, n, s) = (128usize, 256usize, 8usize);
+    let (phi, y) = planted(m, n, s, 1);
+    let opts = SolveOptions { max_iters: 40, ..Default::default() };
+
+    // Baseline: raw solver, no service.
+    let raw = benchkit::run("raw qniht solve (no service)", 1, 9, || {
+        qniht(&phi, &y, s, 4, 8, RequantMode::Fixed, 1, &opts)
+    });
+
+    for workers in [1usize, 2, 4] {
+        let service = RecoveryService::start(
+            ServiceConfig { workers, queue_capacity: 256, max_batch: 8, max_wait_ms: 0 },
+            opts.clone(),
+            "artifacts".into(),
+        );
+        let jobs = 64;
+        let t0 = Instant::now();
+        let ids: Vec<_> = (0..jobs)
+            .map(|k| {
+                service
+                    .submit(JobSpec {
+                        problem: ProblemHandle::new(phi.clone()),
+                        y: y.clone(),
+                        s,
+                        bits_phi: 4,
+                        bits_y: 8,
+                        engine: EngineKind::NativeQuant,
+                        seed: k,
+                    })
+                    .unwrap()
+            })
+            .collect();
+        for id in ids {
+            service.wait(id, Duration::from_secs(120)).expect("job done");
+        }
+        let wall = t0.elapsed();
+        println!(
+            "service {workers} workers: {jobs} jobs in {wall:>9.3?} = {:>7.1} jobs/s  \
+             (raw solve {:.3?} -> ideal {:.1} jobs/s/worker)  {}",
+            jobs as f64 / wall.as_secs_f64(),
+            raw.median,
+            1.0 / raw.median_s(),
+            service.metrics().snapshot()
+        );
+        service.shutdown();
+    }
+}

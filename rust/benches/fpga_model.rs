@@ -1,0 +1,42 @@
+//! Bench E5 (Fig 6): the FPGA bandwidth-model sweep at paper scale
+//! (M = 900 complex = LOFAR CS302, N = 65,536 = 256×256 grid).
+
+use lpcs::perfmodel::fpga::FpgaModel;
+
+fn main() {
+    let f = FpgaModel::default();
+    let (m, n) = (900usize, 65536usize);
+    println!(
+        "== Fig 6: FPGA model, P = {} GB/s, {}x{} (paper scale) ==",
+        f.bandwidth / 1e9,
+        m,
+        n
+    );
+    println!(
+        "{:>8} {:>8} {:>14} {:>12} {:>12}",
+        "bits_phi", "bits_y", "iter_time_ms", "speedup", "vals/line"
+    );
+    for (bp, by) in [(32u32, 32u32), (16, 16), (8, 8), (4, 8), (2, 8)] {
+        println!(
+            "{:>8} {:>8} {:>14.3} {:>12.2} {:>12}",
+            bp,
+            by,
+            f.iteration_time(m, n, bp, by) * 1e3,
+            f.iteration_speedup(m, n, bp, by),
+            f.values_per_line(bp)
+        );
+    }
+
+    // End-to-end shape with the paper's implied iteration ratio.
+    println!("\nend-to-end (iterations from the paper's 9.19x headline):");
+    let t32 = f.end_to_end_time(m, n, 32, 32, 100);
+    for (bp, by, iters) in [(32u32, 32u32, 100usize), (8, 8, 120), (4, 8, 140), (2, 8, 174)] {
+        let te = f.end_to_end_time(m, n, bp, by, iters);
+        println!(
+            "  {bp:>2}&{by}-bit: {iters:>4} iters x {:>8.3} ms = {:>8.1} ms  speedup {:.2}x",
+            f.iteration_time(m, n, bp, by) * 1e3,
+            te * 1e3,
+            t32 / te
+        );
+    }
+}

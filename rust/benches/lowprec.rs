@@ -1,0 +1,61 @@
+//! Bench E4 (Fig 5): low-precision matvec kernels vs f32 — per-iteration
+//! speedup at the paper's two CPU routines (matvec + sparse scale-and-add).
+
+use lpcs::benchkit;
+use lpcs::linalg::Mat;
+use lpcs::lowprec;
+use lpcs::perfmodel::cpu::traffic_speedup_bound;
+use lpcs::quant::packed::PackedMatrix;
+use lpcs::quant::QuantizedMatrix;
+use lpcs::rng::XorShift128Plus;
+
+fn main() {
+    // Paper-scale matrix (LOFAR CS302: M = 900 baselines × N = 65,536
+    // pixels ⇒ 236 MB at f32). This is deliberately larger than LLC so the
+    // f32 path is DRAM-bound — the regime the paper's speedup lives in.
+    let (m, n) = (900usize, 65536usize);
+    let mut rng = XorShift128Plus::new(1);
+    let a = Mat::from_fn(m, n, |_, _| rng.gaussian_f32());
+    let x = rng.gaussian_vec(n);
+    let v = rng.gaussian_vec(m);
+
+    println!("== Fig 5: per-iteration kernels, {m}x{n} ==");
+    let f32_stats = benchkit::run("matvec f32 (baseline)", 3, 15, || a.matvec(&x));
+
+    for bits in [2u8, 4, 8] {
+        let qm = QuantizedMatrix::from_mat(&a, bits, &mut rng);
+        let p = PackedMatrix::pack(&qm);
+        let s = benchkit::run(
+            &format!("matvec packed {bits}-bit"),
+            3,
+            15,
+            || lowprec::packed_matvec(&p, &x),
+        );
+        println!(
+            "    -> speedup {:.2}x (traffic bound {:.0}x, bytes {} vs {})",
+            f32_stats.median_s() / s.median_s(),
+            traffic_speedup_bound(bits as u32),
+            p.bytes(),
+            a.bytes_f32()
+        );
+    }
+
+    println!("\n== unpacked int8 codes path ==");
+    let qm8 = QuantizedMatrix::from_mat(&a, 8, &mut rng);
+    let s = benchkit::run("matvec int8 codes", 3, 15, || {
+        lowprec::qmatvec(&qm8.codes, m, n, qm8.multiplier(), &x)
+    });
+    println!("    -> speedup {:.2}x over f32", f32_stats.median_s() / s.median_s());
+    benchkit::run("matvec_t int8 codes", 3, 15, || {
+        lowprec::qmatvec_t(&qm8.codes, m, n, qm8.multiplier(), &v)
+    });
+
+    println!("\n== sparse scale-and-add (Φ · x_sparse, |supp| = 30) ==");
+    let qt = qm8.transposed();
+    let idx: Vec<usize> = (0..30).map(|k| k * 133 % n).collect();
+    let vals = vec![1.0f32; 30];
+    benchkit::run("qmatvec_sparse (col-contiguous)", 3, 15, || {
+        lowprec::qmatvec_sparse(&qt.codes, n, m, qt.multiplier(), &idx, &vals)
+    });
+    benchkit::run("matvec_sparse f32", 3, 15, || a.matvec_sparse(&idx, &vals));
+}

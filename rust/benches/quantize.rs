@@ -1,0 +1,40 @@
+//! Bench: stochastic quantization + packing throughput (setup cost of the
+//! low-precision path; amortized over the solve in Fixed mode, per
+//! iteration in Fresh mode).
+
+use lpcs::benchkit;
+use lpcs::linalg::Mat;
+use lpcs::quant::packed::PackedMatrix;
+use lpcs::quant::{QuantizedMatrix, Quantizer};
+use lpcs::rng::XorShift128Plus;
+
+fn main() {
+    let (m, n) = (1800usize, 4096usize);
+    let mut rng = XorShift128Plus::new(1);
+    let a = Mat::from_fn(m, n, |_, _| rng.gaussian_f32());
+    let elems = (m * n) as f64;
+
+    println!("== quantization throughput, {m}x{n} ({:.1} M elements) ==", elems / 1e6);
+    for bits in [2u8, 4, 8] {
+        let mut q_rng = XorShift128Plus::new(2);
+        let s = benchkit::run(&format!("quantize {bits}-bit"), 1, 7, || {
+            QuantizedMatrix::from_mat(&a, bits, &mut q_rng)
+        });
+        println!("    -> {:.1} M elem/s", elems / s.median_s() / 1e6);
+    }
+
+    let qm = QuantizedMatrix::from_mat(&a, 2, &mut rng);
+    let s = benchkit::run("pack 2-bit codes", 1, 7, || PackedMatrix::pack(&qm));
+    println!("    -> {:.1} M elem/s", elems / s.median_s() / 1e6);
+    let p = PackedMatrix::pack(&qm);
+    benchkit::run("unpack 2-bit codes", 1, 7, || p.unpack());
+
+    // Per-element quantize (the scalar hot path).
+    let q = Quantizer::new(2);
+    let mut r2 = XorShift128Plus::new(3);
+    let v = r2.gaussian_vec(1 << 16);
+    let s = benchkit::run("quantize_slice 64k", 3, 31, || {
+        q.quantize_slice(&v, 1.0, &mut r2)
+    });
+    println!("    -> {:.1} M elem/s", (1 << 16) as f64 / s.median_s() / 1e6);
+}

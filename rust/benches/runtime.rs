@@ -1,0 +1,52 @@
+//! Bench: PJRT engine step latency vs the native engines — the cost of
+//! running the AOT JAX/Pallas artifact per NIHT step (compile amortization,
+//! literal marshalling, execute).
+
+use lpcs::algorithms::qniht::{QuantKernel, RequantMode};
+use lpcs::algorithms::NihtKernel;
+use lpcs::benchkit;
+use lpcs::linalg::Mat;
+use lpcs::rng::XorShift128Plus;
+use lpcs::runtime::{XlaDenseKernel, XlaQuantKernel};
+use std::path::Path;
+
+fn main() {
+    let dir = Path::new("artifacts");
+    if !dir.join("manifest.json").exists() {
+        println!("run `make artifacts` first — skipping runtime bench");
+        return;
+    }
+    let (m, n, s) = (256usize, 512usize, 32usize);
+    let mut rng = XorShift128Plus::new(1);
+    let phi = Mat::from_fn(m, n, |_, _| rng.gaussian_f32() / (m as f32).sqrt());
+    let mut x_true = vec![0.0f32; n];
+    for i in rng.choose_k(n, s) {
+        x_true[i] = 1.5;
+    }
+    let y = phi.matvec(&x_true);
+    let x0 = vec![0.0f32; n];
+    let x_mid = {
+        // a partially-converged iterate (exercises the non-initial path)
+        let mut k = QuantKernel::new(&phi, &y, 8, 8, RequantMode::Fixed, 1);
+        let st = k.full_step(&x0, s);
+        st.x_next
+    };
+
+    println!("== step latency, gauss_256x512, s={s} ==");
+    let mut nk = QuantKernel::new(&phi, &y, 8, 8, RequantMode::Fixed, 1);
+    benchkit::run("native quant full_step", 2, 21, || nk.full_step(&x_mid, s));
+
+    let t0 = std::time::Instant::now();
+    let mut xk = XlaQuantKernel::new(dir, "gauss_256x512", &phi, &y, 8, 8, 1).unwrap();
+    let _ = xk.full_step(&x0, s); // includes compile
+    println!("xla first step (incl. compile): {:.3?}", t0.elapsed());
+    benchkit::run("xla quant full_step (warm)", 2, 21, || xk.full_step(&x_mid, s));
+    benchkit::run("xla quant apply_step (warm)", 2, 21, || {
+        let g = vec![0.01f32; n];
+        xk.apply_step(&x_mid, &g, 0.5, s)
+    });
+
+    let mut dk = XlaDenseKernel::new(dir, "gauss_256x512", &phi, &y).unwrap();
+    let _ = dk.full_step(&x0, s);
+    benchkit::run("xla dense full_step (warm)", 2, 21, || dk.full_step(&x_mid, s));
+}

@@ -1,0 +1,41 @@
+//! Bench E3 (Fig 4 cost side): per-solve wall time of every method on the
+//! same astro problem — the "fair comparison involves speed" discussion.
+
+use lpcs::algorithms::cosamp::cosamp;
+use lpcs::algorithms::fista::{fista, FistaOptions};
+use lpcs::algorithms::iht::iht;
+use lpcs::algorithms::niht::niht_dense;
+use lpcs::algorithms::qniht::{qniht, RequantMode};
+use lpcs::algorithms::SolveOptions;
+use lpcs::benchkit;
+use lpcs::telescope::{AstroConfig, AstroProblem};
+
+fn main() {
+    let cfg = AstroConfig {
+        antennas: 10,
+        resolution: 32,
+        sources: 12,
+        snr_db: 10.0,
+        ..Default::default()
+    };
+    let p = AstroProblem::build(&cfg, 1);
+    let s = cfg.sources;
+    let opts = SolveOptions { max_iters: 50, ..Default::default() };
+    println!("== solver wall time, astro M={} N={} s={s}, 50 iters cap ==", p.m(), p.n());
+
+    benchkit::run("niht 32-bit", 1, 7, || niht_dense(&p.phi, &p.y, s, &opts));
+    benchkit::run("qniht 8&8 fixed", 1, 7, || {
+        qniht(&p.phi, &p.y, s, 8, 8, RequantMode::Fixed, 1, &opts)
+    });
+    benchkit::run("qniht 4&8 fixed", 1, 7, || {
+        qniht(&p.phi, &p.y, s, 4, 8, RequantMode::Fixed, 1, &opts)
+    });
+    benchkit::run("qniht 2&8 fixed", 1, 7, || {
+        qniht(&p.phi, &p.y, s, 2, 8, RequantMode::Fixed, 1, &opts)
+    });
+    benchkit::run("iht (rescaled)", 1, 7, || iht(&p.phi, &p.y, s, &opts));
+    benchkit::run("cosamp", 1, 7, || cosamp(&p.phi, &p.y, s, &opts));
+    benchkit::run("fista + debias", 1, 7, || {
+        fista(&p.phi, &p.y, &opts, &FistaOptions { prune_to: Some(s), ..Default::default() })
+    });
+}

@@ -1,0 +1,104 @@
+//! CoSaMP (Needell & Tropp 2008) — greedy baseline of Fig 4.
+//!
+//! Per iteration: proxy `g = Φᵀr`, identify the 2s largest proxy entries,
+//! merge with the current support (≤ 3s columns), least-squares solve on
+//! the merged support (CGNR, `linalg::cg`), prune to the s largest, update
+//! the residual. The paper notes CoSaMP degrades when Φ has similar-
+//! magnitude entries / fails RIP — Fig 4 and our fig4 bench reproduce that.
+
+use super::support::{support_of, support_union, top_s_indices};
+use super::{SolveOptions, SolveResult};
+use crate::linalg::{self, cg, Mat};
+
+pub fn cosamp(phi: &Mat, y: &[f32], s: usize, opts: &SolveOptions) -> SolveResult {
+    assert_eq!(phi.rows, y.len());
+    assert!(s >= 1);
+    let n = phi.cols;
+    let mut x = vec![0.0f32; n];
+    let mut r = y.to_vec();
+    let mut converged = false;
+    let mut iters = 0;
+
+    for it in 0..opts.max_iters {
+        let g = phi.matvec_t(&r);
+        let omega = top_s_indices(&g, (2 * s).min(n));
+        let merged = support_union(&omega, &support_of(&x));
+        // LS solve restricted to the merged support.
+        let sub = phi.take_cols(&merged);
+        let ls = cg::lsqr_cg(&sub, y, 4 * merged.len().max(8), 1e-6);
+        // Embed and prune to s.
+        let mut b = vec![0.0f32; n];
+        for (k, &j) in merged.iter().enumerate() {
+            b[j] = ls.z[k];
+        }
+        let keep = top_s_indices(&b, s);
+        let mut x_next = vec![0.0f32; n];
+        for &j in &keep {
+            x_next[j] = b[j];
+        }
+        let dx_nsq = linalg::norm2_sq(&linalg::sub(&x_next, &x));
+        let x_nsq = linalg::norm2_sq(&x);
+        x = x_next;
+        // Residual update uses the sparse x.
+        let idx = support_of(&x);
+        let vals: Vec<f32> = idx.iter().map(|&i| x[i]).collect();
+        r = linalg::sub(y, &phi.matvec_sparse(&idx, &vals));
+        iters = it + 1;
+        if it > 0 && dx_nsq <= opts.tol * opts.tol * x_nsq.max(1e-12) {
+            converged = true;
+            break;
+        }
+    }
+    SolveResult { x, iterations: iters, converged, shrink_events: 0, history: vec![] }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rng::XorShift128Plus;
+
+    fn planted(m: usize, n: usize, s: usize, seed: u64) -> (Mat, Vec<f32>, Vec<f32>) {
+        let mut rng = XorShift128Plus::new(seed);
+        let phi = Mat::from_fn(m, n, |_, _| rng.gaussian_f32() / (m as f32).sqrt());
+        let mut x = vec![0.0f32; n];
+        for i in rng.choose_k(n, s) {
+            x[i] = 2.0 * rng.gaussian_f32().signum() + 0.3 * rng.gaussian_f32();
+        }
+        let y = phi.matvec(&x);
+        (phi, y, x)
+    }
+
+    #[test]
+    fn recovers_planted_noiseless() {
+        let (phi, y, x_true) = planted(80, 160, 5, 1);
+        let r = cosamp(&phi, &y, 5, &SolveOptions::default());
+        assert_eq!(support_of(&r.x), support_of(&x_true));
+        let rel = linalg::norm2(&linalg::sub(&r.x, &x_true)) / linalg::norm2(&x_true);
+        assert!(rel < 1e-2, "rel={rel}");
+    }
+
+    #[test]
+    fn converges_fast_on_good_rip() {
+        let (phi, y, _) = planted(128, 256, 4, 2);
+        let r = cosamp(&phi, &y, 4, &SolveOptions::default());
+        assert!(r.converged);
+        assert!(r.iterations < 25, "iters={}", r.iterations);
+    }
+
+    #[test]
+    fn output_is_s_sparse() {
+        let (phi, y, _) = planted(60, 120, 6, 3);
+        let r = cosamp(&phi, &y, 6, &SolveOptions::default());
+        assert!(support_of(&r.x).len() <= 6);
+    }
+
+    #[test]
+    fn noisy_recovery_reasonable() {
+        let (phi, y0, x_true) = planted(96, 192, 5, 4);
+        let mut rng = XorShift128Plus::new(40);
+        let y: Vec<f32> = y0.iter().map(|v| v + 0.02 * rng.gaussian_f32()).collect();
+        let r = cosamp(&phi, &y, 5, &SolveOptions::default());
+        let rel = linalg::norm2(&linalg::sub(&r.x, &x_true)) / linalg::norm2(&x_true);
+        assert!(rel < 0.1, "rel={rel}");
+    }
+}

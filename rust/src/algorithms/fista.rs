@@ -1,0 +1,180 @@
+//! FISTA — the ℓ₁-minimization baseline ("the ℓ1-based approach" of Fig 4).
+//!
+//! Solves `min_x ½‖y − Φx‖² + λ‖x‖₁` with Beck–Teboulle accelerated
+//! proximal gradient: step 1/L with L = σ_max(Φ)², soft-thresholding prox,
+//! Nesterov momentum. λ defaults to `0.05·‖Φᵀy‖_∞` (a standard
+//! regularization-path heuristic; the paper "optimized each algorithm
+//! independently", and our fig4 harness sweeps λ). An optional debias pass
+//! re-fits the values on the recovered support by least squares.
+
+use super::support::{support_of, top_s_indices};
+use super::{SolveOptions, SolveResult};
+use crate::linalg::{self, cg, svd, Mat};
+
+/// Soft-thresholding operator.
+#[inline]
+pub fn soft_threshold(v: f32, t: f32) -> f32 {
+    if v > t {
+        v - t
+    } else if v < -t {
+        v + t
+    } else {
+        0.0
+    }
+}
+
+#[derive(Debug, Clone)]
+pub struct FistaOptions {
+    /// ℓ₁ weight; `None` → 0.05·‖Φᵀy‖_∞.
+    pub lambda: Option<f32>,
+    /// Re-fit values on the final support by LS.
+    pub debias: bool,
+    /// Prune the final iterate to the s largest entries (for support
+    /// metrics comparable with the greedy methods); `None` keeps all.
+    pub prune_to: Option<usize>,
+}
+
+impl Default for FistaOptions {
+    fn default() -> Self {
+        Self { lambda: None, debias: true, prune_to: None }
+    }
+}
+
+pub fn fista(
+    phi: &Mat,
+    y: &[f32],
+    opts: &SolveOptions,
+    fopts: &FistaOptions,
+) -> SolveResult {
+    assert_eq!(phi.rows, y.len());
+    let n = phi.cols;
+    let lip = {
+        let sigma = svd::spectral_norm(phi, 1e-5, 2000, 0xF157A);
+        (sigma * sigma).max(f32::MIN_POSITIVE)
+    };
+    let step = 1.0 / lip;
+    let aty = phi.matvec_t(y);
+    let lambda = fopts
+        .lambda
+        .unwrap_or_else(|| 0.05 * aty.iter().fold(0.0f32, |a, &b| a.max(b.abs())));
+    let thr = lambda * step;
+
+    let mut x = vec![0.0f32; n];
+    let mut z = x.clone();
+    let mut t = 1.0f32;
+    let mut converged = false;
+    let mut iters = 0;
+
+    for it in 0..opts.max_iters {
+        let r = linalg::sub(y, &phi.matvec(&z));
+        let g = phi.matvec_t(&r);
+        let x_next: Vec<f32> = z
+            .iter()
+            .zip(&g)
+            .map(|(zi, gi)| soft_threshold(zi + step * gi, thr))
+            .collect();
+        let t_next = 0.5 * (1.0 + (1.0 + 4.0 * t * t).sqrt());
+        let beta = (t - 1.0) / t_next;
+        z = x_next
+            .iter()
+            .zip(&x)
+            .map(|(xn, xo)| xn + beta * (xn - xo))
+            .collect();
+        let dx_nsq = linalg::norm2_sq(&linalg::sub(&x_next, &x));
+        let x_nsq = linalg::norm2_sq(&x);
+        x = x_next;
+        t = t_next;
+        iters = it + 1;
+        if it > 0 && dx_nsq <= opts.tol * opts.tol * x_nsq.max(1e-12) {
+            converged = true;
+            break;
+        }
+    }
+
+    if let Some(s) = fopts.prune_to {
+        let keep = top_s_indices(&x, s);
+        let mut pruned = vec![0.0f32; n];
+        for &i in &keep {
+            pruned[i] = x[i];
+        }
+        x = pruned;
+    }
+
+    if fopts.debias {
+        let supp = support_of(&x);
+        if !supp.is_empty() {
+            let sub = phi.take_cols(&supp);
+            let ls = cg::lsqr_cg(&sub, y, 4 * supp.len().max(8), 1e-6);
+            for (k, &j) in supp.iter().enumerate() {
+                x[j] = ls.z[k];
+            }
+        }
+    }
+
+    SolveResult { x, iterations: iters, converged, shrink_events: 0, history: vec![] }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rng::XorShift128Plus;
+
+    fn planted(m: usize, n: usize, s: usize, seed: u64) -> (Mat, Vec<f32>, Vec<f32>) {
+        let mut rng = XorShift128Plus::new(seed);
+        let phi = Mat::from_fn(m, n, |_, _| rng.gaussian_f32() / (m as f32).sqrt());
+        let mut x = vec![0.0f32; n];
+        for i in rng.choose_k(n, s) {
+            x[i] = 2.0 * rng.gaussian_f32().signum() + 0.3 * rng.gaussian_f32();
+        }
+        let y = phi.matvec(&x);
+        (phi, y, x)
+    }
+
+    #[test]
+    fn soft_threshold_cases() {
+        assert_eq!(soft_threshold(3.0, 1.0), 2.0);
+        assert_eq!(soft_threshold(-3.0, 1.0), -2.0);
+        assert_eq!(soft_threshold(0.5, 1.0), 0.0);
+        assert_eq!(soft_threshold(-0.5, 1.0), 0.0);
+    }
+
+    #[test]
+    fn recovers_planted_support_with_prune() {
+        let (phi, y, x_true) = planted(80, 160, 5, 1);
+        let fopts = FistaOptions { prune_to: Some(5), ..Default::default() };
+        let opts = SolveOptions { max_iters: 400, ..Default::default() };
+        let r = fista(&phi, &y, &opts, &fopts);
+        assert_eq!(support_of(&r.x), support_of(&x_true));
+    }
+
+    #[test]
+    fn debias_reduces_error() {
+        let (phi, y, x_true) = planted(80, 160, 5, 2);
+        let opts = SolveOptions { max_iters: 300, ..Default::default() };
+        let no_db = fista(&phi, &y, &opts,
+            &FistaOptions { debias: false, prune_to: Some(5), ..Default::default() });
+        let db = fista(&phi, &y, &opts,
+            &FistaOptions { debias: true, prune_to: Some(5), ..Default::default() });
+        let e0 = linalg::norm2(&linalg::sub(&no_db.x, &x_true));
+        let e1 = linalg::norm2(&linalg::sub(&db.x, &x_true));
+        assert!(e1 <= e0 + 1e-5, "debias must not hurt: {e1} vs {e0}");
+    }
+
+    #[test]
+    fn larger_lambda_sparser_solution() {
+        let (phi, y, _) = planted(60, 120, 5, 3);
+        let opts = SolveOptions { max_iters: 300, ..Default::default() };
+        let small = fista(&phi, &y, &opts,
+            &FistaOptions { lambda: Some(0.001), debias: false, prune_to: None });
+        let large = fista(&phi, &y, &opts,
+            &FistaOptions { lambda: Some(0.5), debias: false, prune_to: None });
+        assert!(support_of(&large.x).len() <= support_of(&small.x).len());
+    }
+
+    #[test]
+    fn zero_observation_gives_zero() {
+        let (phi, _, _) = planted(30, 60, 3, 4);
+        let r = fista(&phi, &vec![0.0; 30], &SolveOptions::default(), &FistaOptions::default());
+        assert!(r.x.iter().all(|&v| v == 0.0));
+    }
+}

@@ -1,0 +1,87 @@
+//! Plain IHT (Blumensath & Davies 2008): `x ← H_s(x + Φᵀ(y − Φx))` with
+//! unit step. Convergence requires ‖Φ‖₂ < 1, so the solver rescales the
+//! problem internally (`Φ/η, y/η` with `η = 1.01·σ_max` — the "re-scaling
+//! of the measurement matrix" the paper's Remark 1 says NIHT makes
+//! unnecessary) and un-scales the result. Kept as the classical baseline.
+
+use super::support::hard_threshold;
+use super::{SolveOptions, SolveResult};
+use crate::linalg::{self, svd, Mat};
+
+pub fn iht(phi: &Mat, y: &[f32], s: usize, opts: &SolveOptions) -> SolveResult {
+    assert_eq!(phi.rows, y.len());
+    let sigma = svd::spectral_norm(phi, 1e-5, 2000, 0x1417);
+    let eta = 1.01 * sigma.max(f32::MIN_POSITIVE);
+    let mut phi_s = phi.clone();
+    phi_s.scale(1.0 / eta);
+    let y_s: Vec<f32> = y.iter().map(|v| v / eta).collect();
+
+    let n = phi.cols;
+    let mut x = vec![0.0f32; n];
+    let mut converged = false;
+    let mut iters = 0;
+    for it in 0..opts.max_iters {
+        let r = linalg::sub(&y_s, &phi_s.matvec(&x));
+        let g = phi_s.matvec_t(&r);
+        let a: Vec<f32> = x.iter().zip(&g).map(|(xi, gi)| xi + gi).collect();
+        let x_next = hard_threshold(&a, s);
+        let dx_nsq = linalg::norm2_sq(&linalg::sub(&x_next, &x));
+        let x_nsq = linalg::norm2_sq(&x);
+        x = x_next;
+        iters = it + 1;
+        if it > 0 && dx_nsq <= opts.tol * opts.tol * x_nsq.max(1e-12) {
+            converged = true;
+            break;
+        }
+    }
+    SolveResult { x, iterations: iters, converged, shrink_events: 0, history: vec![] }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::algorithms::support::support_of;
+    use crate::rng::XorShift128Plus;
+
+    fn planted(m: usize, n: usize, s: usize, seed: u64) -> (Mat, Vec<f32>, Vec<f32>) {
+        let mut rng = XorShift128Plus::new(seed);
+        let phi = Mat::from_fn(m, n, |_, _| rng.gaussian_f32() / (m as f32).sqrt());
+        let mut x = vec![0.0f32; n];
+        for i in rng.choose_k(n, s) {
+            x[i] = 2.0 * rng.gaussian_f32().signum() + rng.gaussian_f32() * 0.2;
+        }
+        let y = phi.matvec(&x);
+        (phi, y, x)
+    }
+
+    #[test]
+    fn recovers_planted_noiseless() {
+        let (phi, y, x_true) = planted(80, 160, 5, 1);
+        let opts = SolveOptions { max_iters: 500, ..Default::default() };
+        let r = iht(&phi, &y, 5, &opts);
+        assert_eq!(support_of(&r.x), support_of(&x_true));
+        let rel = linalg::norm2(&linalg::sub(&r.x, &x_true)) / linalg::norm2(&x_true);
+        assert!(rel < 0.05, "rel={rel}");
+    }
+
+    #[test]
+    fn rescaling_makes_it_converge_on_unscaled_matrix() {
+        // Entries O(1): ‖Φ‖ ≫ 1 — plain IHT without rescaling would diverge.
+        let mut rng = XorShift128Plus::new(2);
+        let phi = Mat::from_fn(40, 80, |_, _| rng.gaussian_f32());
+        let mut x_true = vec![0.0f32; 80];
+        x_true[3] = 1.0;
+        x_true[50] = -2.0;
+        let y = phi.matvec(&x_true);
+        let r = iht(&phi, &y, 2, &SolveOptions { max_iters: 500, ..Default::default() });
+        assert!(r.x.iter().all(|v| v.is_finite()));
+        assert_eq!(support_of(&r.x), vec![3, 50]);
+    }
+
+    #[test]
+    fn output_is_s_sparse() {
+        let (phi, y, _) = planted(40, 80, 3, 3);
+        let r = iht(&phi, &y, 3, &SolveOptions::default());
+        assert!(support_of(&r.x).len() <= 3);
+    }
+}

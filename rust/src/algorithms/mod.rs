@@ -1,0 +1,104 @@
+//! Sparse-recovery solver suite (S7): the paper's QNIHT plus every baseline
+//! its evaluation compares against.
+//!
+//! * [`niht`] — Normalized IHT with the full Algorithm-1 control flow
+//!   (adaptive step, support check, μ line search), generic over a
+//!   [`NihtKernel`] so the same driver runs the dense f32, quantized-native,
+//!   packed and PJRT/XLA execution engines.
+//! * [`qniht`] — quantized operand kernels (the paper's contribution).
+//! * [`iht`] — plain IHT (μ = 1, ‖Φ‖₂ < 1), the classical baseline.
+//! * [`cosamp`] — Compressive Sampling Matching Pursuit.
+//! * [`fista`] — ℓ₁ baseline (FISTA), "the ℓ1-based approach" of Fig 4.
+//! * [`clean`] — the CLEAN deconvolution baseline (Algorithm 2, Fig 9).
+//! * [`support`] — H_s, top-s selection, support-set utilities.
+
+pub mod clean;
+pub mod cosamp;
+pub mod fista;
+pub mod iht;
+pub mod niht;
+pub mod qniht;
+pub mod support;
+
+/// Everything one NIHT step produces (mirrors the AOT artifact outputs).
+#[derive(Debug, Clone)]
+pub struct StepOut {
+    pub x_next: Vec<f32>,
+    pub g: Vec<f32>,
+    pub mu: f32,
+    pub dx_nsq: f32,
+    pub phi1_dx_nsq: f32,
+    pub resid_nsq: f32,
+}
+
+/// A NIHT step engine: the only interface the Algorithm-1 driver needs.
+/// Implementations: dense f32, quantized int8, bit-packed, PJRT executable.
+pub trait NihtKernel {
+    fn m(&self) -> usize;
+    fn n(&self) -> usize;
+
+    /// One full step at the adaptive μ (gradient + μ + threshold + norms).
+    fn full_step(&mut self, x: &[f32], s: usize) -> StepOut;
+
+    /// Re-apply `x⁺ = H_s(x + μ g)` at a caller-chosen μ, returning
+    /// `(x_next, ‖dx‖², ‖Φ̂₁dx‖²)` — the line-search inner call.
+    fn apply_step(&mut self, x: &[f32], g: &[f32], mu: f32, s: usize)
+        -> (Vec<f32>, f32, f32);
+
+    /// Called at the start of each outer iteration — lets quantized kernels
+    /// draw fresh quantizations (Algorithm 1's {Φ̂₁ … Φ̂₂ₙ*}).
+    fn begin_iteration(&mut self, _iter: usize) {}
+}
+
+/// Solver options shared by the iterative methods.
+#[derive(Debug, Clone)]
+pub struct SolveOptions {
+    pub max_iters: usize,
+    /// Convergence: stop when ‖x⁺ − x‖² ≤ tol² · ‖x‖².
+    pub tol: f32,
+    /// Algorithm-1 line-search constant c ∈ (0, 1).
+    pub c: f32,
+    /// Algorithm-1 shrinkage κ > 1/(1−c).
+    pub kappa: f32,
+    /// Record per-iteration statistics.
+    pub track_history: bool,
+}
+
+impl Default for SolveOptions {
+    fn default() -> Self {
+        Self { max_iters: 200, tol: 1e-5, c: 0.1, kappa: 1.2, track_history: false }
+    }
+}
+
+/// Per-iteration statistics (history entry).
+#[derive(Debug, Clone, Copy)]
+pub struct IterStat {
+    pub iter: usize,
+    pub resid_nsq: f32,
+    pub mu: f32,
+    pub support_changed: bool,
+    pub shrink_count: usize,
+}
+
+/// Solver output.
+#[derive(Debug, Clone)]
+pub struct SolveResult {
+    pub x: Vec<f32>,
+    pub iterations: usize,
+    pub converged: bool,
+    /// Total μ-shrinkage events across the run (Algorithm-1 line search).
+    pub shrink_events: usize,
+    pub history: Vec<IterStat>,
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn default_options_satisfy_alg1_constraint() {
+        // Algorithm 1 requires κ > 1/(1−c).
+        let o = SolveOptions::default();
+        assert!(o.kappa > 1.0 / (1.0 - o.c));
+    }
+}

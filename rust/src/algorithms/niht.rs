@@ -1,0 +1,250 @@
+//! Normalized IHT — the Algorithm-1 driver and the dense f32 kernel.
+//!
+//! The driver implements the paper's Algorithm 1 control flow:
+//!
+//! 1. `g = Φ̂₁ᵀ(ŷ − Φ̂₂x)`, adaptive `μ = ‖g_Γ‖²/‖Φ̂ g_Γ‖²`;
+//! 2. proposal `x⁺ = H_s(x + μ g)`;
+//! 3. if the support changed, require `μ ≤ (1−c)·b` with
+//!    `b = ‖x⁺−x‖²/‖Φ̂₁(x⁺−x)‖²`; otherwise shrink `μ ← μ/(κ(1−c))` and
+//!    re-propose until the condition holds (guaranteed to terminate since
+//!    μ → 0 keeps the support fixed).
+//!
+//! Note: the paper's Algorithm-1 box contains two obvious typos (it assigns
+//! `x[n+1] = x[n]` on *accept* paths, which would freeze the iterate); we
+//! implement the underlying normalized-IHT rule from Blumensath & Davies
+//! (2010), which the text describes (Eqns. 6–7) and which the convergence
+//! theory (Theorem 2/3) actually analyzes.
+
+use super::support::{hard_threshold, support_of, supports_equal, top_s_indices};
+use super::{IterStat, NihtKernel, SolveOptions, SolveResult, StepOut};
+use crate::linalg::{self, Mat};
+
+/// Run Algorithm 1 with any [`NihtKernel`].
+pub fn solve<K: NihtKernel>(kernel: &mut K, s: usize, opts: &SolveOptions) -> SolveResult {
+    assert!(s >= 1, "sparsity must be >= 1");
+    assert!(s <= kernel.n(), "sparsity exceeds dimension");
+    let n = kernel.n();
+    let mut x = vec![0.0f32; n];
+    let mut supp = Vec::new(); // empty support at x = 0
+    let mut shrink_events = 0usize;
+    let mut history = Vec::new();
+    let mut converged = false;
+    let mut iters = 0usize;
+
+    for it in 0..opts.max_iters {
+        kernel.begin_iteration(it);
+        let st = kernel.full_step(&x, s);
+        let mut mu = st.mu;
+        let mut x_next = st.x_next;
+        let mut dx_nsq = st.dx_nsq;
+        let mut phi1_dx_nsq = st.phi1_dx_nsq;
+        let mut supp_next = support_of(&x_next);
+        let changed = !supports_equal(&supp, &supp_next);
+        let mut shrinks_this_iter = 0usize;
+
+        if changed && it > 0 {
+            // Line search: μ must satisfy μ ≤ (1−c)·‖dx‖²/‖Φ̂₁dx‖².
+            loop {
+                if dx_nsq == 0.0 {
+                    break; // proposal collapsed onto x — accept
+                }
+                let b = dx_nsq / phi1_dx_nsq.max(f32::MIN_POSITIVE);
+                if mu <= (1.0 - opts.c) * b {
+                    break;
+                }
+                mu /= opts.kappa * (1.0 - opts.c);
+                let (xn, dn, pn) = kernel.apply_step(&x, &st.g, mu, s);
+                x_next = xn;
+                dx_nsq = dn;
+                phi1_dx_nsq = pn;
+                shrinks_this_iter += 1;
+                shrink_events += 1;
+                supp_next = support_of(&x_next);
+                if !(!supports_equal(&supp, &supp_next)) {
+                    break; // support stabilized — μ is safe
+                }
+                if shrinks_this_iter > 100 {
+                    break; // safety valve; μ is ~0 by now
+                }
+            }
+        }
+
+        if opts.track_history {
+            history.push(IterStat {
+                iter: it,
+                resid_nsq: st.resid_nsq,
+                mu,
+                support_changed: changed,
+                shrink_count: shrinks_this_iter,
+            });
+        }
+
+        let x_nsq = linalg::norm2_sq(&x);
+        iters = it + 1;
+        x = x_next;
+        supp = supp_next;
+        if it > 0 && dx_nsq <= opts.tol * opts.tol * x_nsq.max(1e-12) {
+            converged = true;
+            break;
+        }
+    }
+
+    SolveResult { x, iterations: iters, converged, shrink_events, history }
+}
+
+/// Dense full-precision kernel (the 32-bit baseline): Φ̂₁ = Φ̂₂ = Φ.
+pub struct DenseKernel<'a> {
+    pub phi: &'a Mat,
+    pub y: &'a [f32],
+}
+
+impl<'a> DenseKernel<'a> {
+    pub fn new(phi: &'a Mat, y: &'a [f32]) -> Self {
+        assert_eq!(phi.rows, y.len());
+        Self { phi, y }
+    }
+
+    fn gradient(&self, x: &[f32]) -> (Vec<f32>, f32) {
+        let yx = self.phi.matvec(x);
+        let r: Vec<f32> = self.y.iter().zip(&yx).map(|(a, b)| a - b).collect();
+        let g = self.phi.matvec_t(&r);
+        let rn = linalg::norm2_sq(&r);
+        (g, rn)
+    }
+}
+
+impl NihtKernel for DenseKernel<'_> {
+    fn m(&self) -> usize {
+        self.phi.rows
+    }
+
+    fn n(&self) -> usize {
+        self.phi.cols
+    }
+
+    fn full_step(&mut self, x: &[f32], s: usize) -> StepOut {
+        let (g, resid_nsq) = self.gradient(x);
+        // Support mask: supp(x), or supp(H_s(g)) on the first iteration.
+        let supp = if x.iter().any(|&v| v != 0.0) {
+            support_of(x)
+        } else {
+            top_s_indices(&g, s)
+        };
+        let mut g_m = vec![0.0f32; g.len()];
+        for &i in &supp {
+            g_m[i] = g[i];
+        }
+        let num = linalg::norm2_sq(&g_m);
+        let pg = self.phi.matvec_sparse(&supp, &supp.iter().map(|&i| g[i]).collect::<Vec<_>>());
+        let den = linalg::norm2_sq(&pg);
+        let mu = num / den.max(f32::MIN_POSITIVE);
+        let (x_next, dx_nsq, phi1_dx_nsq) = self.apply_step(x, &g, mu, s);
+        StepOut { x_next, g, mu, dx_nsq, phi1_dx_nsq, resid_nsq }
+    }
+
+    fn apply_step(&mut self, x: &[f32], g: &[f32], mu: f32, s: usize) -> (Vec<f32>, f32, f32) {
+        let a: Vec<f32> = x.iter().zip(g).map(|(xi, gi)| xi + mu * gi).collect();
+        let x_next = hard_threshold(&a, s);
+        let dx: Vec<f32> = x_next.iter().zip(x).map(|(a, b)| a - b).collect();
+        let dx_nsq = linalg::norm2_sq(&dx);
+        let idx = support_of(&dx);
+        let vals: Vec<f32> = idx.iter().map(|&i| dx[i]).collect();
+        let phi_dx = self.phi.matvec_sparse(&idx, &vals);
+        (x_next, dx_nsq, linalg::norm2_sq(&phi_dx))
+    }
+}
+
+/// Convenience: full-precision NIHT solve.
+pub fn niht_dense(phi: &Mat, y: &[f32], s: usize, opts: &SolveOptions) -> SolveResult {
+    let mut k = DenseKernel::new(phi, y);
+    solve(&mut k, s, opts)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rng::XorShift128Plus;
+
+    /// Planted sparse problem with a well-conditioned Gaussian matrix.
+    fn planted(m: usize, n: usize, s: usize, seed: u64) -> (Mat, Vec<f32>, Vec<f32>) {
+        let mut rng = XorShift128Plus::new(seed);
+        let phi = Mat::from_fn(m, n, |_, _| rng.gaussian_f32() / (m as f32).sqrt());
+        let mut x = vec![0.0f32; n];
+        for i in rng.choose_k(n, s) {
+            x[i] = rng.gaussian_f32() + if rng.uniform() > 0.5 { 1.5 } else { -1.5 };
+        }
+        let y = phi.matvec(&x);
+        (phi, y, x)
+    }
+
+    #[test]
+    fn recovers_planted_noiseless() {
+        let (phi, y, x_true) = planted(64, 128, 5, 1);
+        let r = niht_dense(&phi, &y, 5, &SolveOptions::default());
+        let err = linalg::norm2(&linalg::sub(&r.x, &x_true)) / linalg::norm2(&x_true);
+        assert!(err < 1e-3, "relative error {err}");
+        assert!(r.converged);
+    }
+
+    #[test]
+    fn recovers_support_exactly() {
+        let (phi, y, x_true) = planted(80, 160, 8, 2);
+        let r = niht_dense(&phi, &y, 8, &SolveOptions::default());
+        assert_eq!(support_of(&r.x), support_of(&x_true));
+    }
+
+    #[test]
+    fn noisy_recovery_error_bounded_by_noise() {
+        let (phi, y0, x_true) = planted(96, 192, 6, 3);
+        let mut rng = XorShift128Plus::new(30);
+        let noise_scale = 0.01;
+        let y: Vec<f32> = y0.iter().map(|v| v + noise_scale * rng.gaussian_f32()).collect();
+        let r = niht_dense(&phi, &y, 6, &SolveOptions::default());
+        let err = linalg::norm2(&linalg::sub(&r.x, &x_true));
+        // Theorem 2: error ≈ O(‖e‖/β); allow a generous constant.
+        let noise_norm = noise_scale * (96f32).sqrt();
+        assert!(err < 10.0 * noise_norm, "err={err} noise={noise_norm}");
+    }
+
+    #[test]
+    fn result_is_s_sparse() {
+        let (phi, y, _) = planted(48, 96, 4, 4);
+        let r = niht_dense(&phi, &y, 4, &SolveOptions::default());
+        assert!(support_of(&r.x).len() <= 4);
+    }
+
+    #[test]
+    fn residual_monotone_under_history() {
+        let (phi, y, _) = planted(64, 128, 5, 5);
+        let opts = SolveOptions { track_history: true, ..Default::default() };
+        let r = niht_dense(&phi, &y, 5, &opts);
+        let resids: Vec<f32> = r.history.iter().map(|h| h.resid_nsq).collect();
+        for w in resids.windows(2) {
+            assert!(w[1] <= w[0] * 1.001, "residual must not increase: {resids:?}");
+        }
+    }
+
+    #[test]
+    fn more_iterations_never_hurt() {
+        let (phi, y, x_true) = planted(64, 128, 5, 6);
+        let r5 = niht_dense(&phi, &y, 5, &SolveOptions { max_iters: 5, ..Default::default() });
+        let r50 = niht_dense(&phi, &y, 5, &SolveOptions { max_iters: 50, ..Default::default() });
+        let e5 = linalg::norm2(&linalg::sub(&r5.x, &x_true));
+        let e50 = linalg::norm2(&linalg::sub(&r50.x, &x_true));
+        assert!(e50 <= e5 + 1e-6);
+    }
+
+    #[test]
+    fn handles_s_equal_one() {
+        let (phi, y, x_true) = planted(32, 64, 1, 7);
+        let r = niht_dense(&phi, &y, 1, &SolveOptions::default());
+        assert_eq!(support_of(&r.x), support_of(&x_true));
+    }
+
+    #[test]
+    #[should_panic]
+    fn rejects_zero_sparsity() {
+        let (phi, y, _) = planted(16, 32, 2, 8);
+        niht_dense(&phi, &y, 0, &SolveOptions::default());
+    }
+}

@@ -1,0 +1,358 @@
+//! QNIHT — the paper's contribution: NIHT over quantized operands.
+//!
+//! The kernel holds Φ̂ in two orientations (codes2 = Φ̂₂ row-major for
+//! `Φ̂x`; codes1_t = Φ̂₁ᵀ row-major for the gradient `Φ̂₁ᵀr` *and* the
+//! line-search norm `Φ̂₁dx` via the sparse scale-and-add) plus the
+//! quantized observation ŷ — exactly the two routines + data layout of the
+//! paper's CPU implementation (§9).
+//!
+//! Quantization modes:
+//! * [`RequantMode::Fixed`] — quantize once, reuse every iteration. This is
+//!   what the CPU/FPGA systems do: the full-precision matrix is never
+//!   touched after setup, so the bandwidth saving is real.
+//! * [`RequantMode::Fresh`] — draw independent Φ̂₂ₙ₋₁, Φ̂₂ₙ each iteration
+//!   from the retained full-precision Φ (Algorithm 1's
+//!   `{Φ̂₁ … Φ̂₂ₙ*}`) — the theory-faithful mode used to validate
+//!   Theorem 3's expectation bound.
+
+use super::niht::solve;
+use super::support::{hard_threshold, support_of, top_s_indices};
+use super::{NihtKernel, SolveOptions, SolveResult, StepOut};
+use crate::linalg::{self, Mat};
+use crate::lowprec;
+use crate::quant::packed::PackedMatrix;
+use crate::quant::{QuantizedMatrix, Quantizer};
+use crate::rng::XorShift128Plus;
+
+/// How Φ̂ is refreshed across iterations.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum RequantMode {
+    /// One quantization, reused (systems mode — default).
+    Fixed,
+    /// Fresh independent quantizations each iteration (theory mode).
+    Fresh,
+}
+
+/// Quantized NIHT kernel (native execution engine).
+///
+/// In `Fixed` mode the matrix is stored BIT-PACKED (b bits per code) and
+/// every matvec streams the packed words through `lowprec::packed_matvec`
+/// / `packed_scale_add` — the traffic per iteration is genuinely
+/// `m·n·b/8` bytes, which is where the Fig 5 speedup comes from. `Fresh`
+/// mode re-quantizes each iteration (theory mode) and uses the unpacked
+/// int8 path.
+pub struct QuantKernel {
+    /// Φ̂₂ codes, m×n row-major.
+    codes2: QuantizedMatrix,
+    /// Φ̂₁ᵀ codes, n×m row-major.
+    codes1_t: QuantizedMatrix,
+    /// Packed Φ̂₂ (Fixed mode only).
+    packed2: Option<PackedMatrix>,
+    /// Packed Φ̂₁ᵀ = Φ̂ᵀ (Fixed mode only: Φ̂₁ = Φ̂₂).
+    packed1_t: Option<PackedMatrix>,
+    /// Dequantized observation ŷ (f32 image of Q(y)).
+    y_hat: Vec<f32>,
+    mode: RequantMode,
+    /// Full-precision Φ retained only in `Fresh` mode.
+    full: Option<Mat>,
+    rng: XorShift128Plus,
+    m: usize,
+    n: usize,
+}
+
+impl QuantKernel {
+    /// Quantize a problem: Φ at `bits_phi`, y at `bits_y`.
+    pub fn new(
+        phi: &Mat,
+        y: &[f32],
+        bits_phi: u8,
+        bits_y: u8,
+        mode: RequantMode,
+        seed: u64,
+    ) -> Self {
+        assert_eq!(phi.rows, y.len());
+        let mut rng = XorShift128Plus::new(seed);
+        let codes2 = QuantizedMatrix::from_mat(phi, bits_phi, &mut rng);
+        // Fixed mode stores ONE quantized matrix (Φ̂₁ = Φ̂₂ = Φ̂): that is
+        // the systems setting (one packed buffer in memory) and it makes
+        // g the exact gradient of ‖ŷ − Φ̂x‖², so NIHT's descent guarantees
+        // apply to the quantized problem. Independent Φ̂₁ ≠ Φ̂₂ only makes
+        // sense with FRESH draws every iteration (Theorem 3's expectation);
+        // a *fixed* mismatched pair is a biased cross-gradient and can
+        // oscillate at 2 bits.
+        let phi_t = phi.transpose();
+        let codes1_t = match mode {
+            RequantMode::Fixed => codes2.transposed(),
+            RequantMode::Fresh => {
+                QuantizedMatrix::from_mat_with_scale(&phi_t, bits_phi, codes2.scale, &mut rng)
+            }
+        };
+        let (packed2, packed1_t) = if mode == RequantMode::Fixed && matches!(bits_phi, 2 | 4 | 8)
+        {
+            (Some(PackedMatrix::pack(&codes2)), Some(PackedMatrix::pack(&codes1_t)))
+        } else {
+            (None, None)
+        };
+        let qy = Quantizer::new(bits_y);
+        let (y_codes, y_scale) = qy.quantize_auto(y, &mut rng);
+        let y_hat = qy.dequantize_slice(&y_codes, y_scale);
+        let full = match mode {
+            RequantMode::Fixed => None,
+            RequantMode::Fresh => Some(phi.clone()),
+        };
+        Self {
+            codes2,
+            codes1_t,
+            packed2,
+            packed1_t,
+            y_hat,
+            mode,
+            full,
+            rng,
+            m: phi.rows,
+            n: phi.cols,
+        }
+    }
+
+    /// Bytes of Φ̂ traffic per full step at the ideal packed width
+    /// (gradient streams Φ̂₁ᵀ once, the residual matvec streams Φ̂₂ once).
+    pub fn bytes_per_iteration(&self) -> usize {
+        self.codes2.bytes_ideal() + self.codes1_t.bytes_ideal()
+    }
+
+    pub fn bits_phi(&self) -> u8 {
+        self.codes2.bits
+    }
+
+    /// Φ̂₂ x (sparse x → the paper's dense scale-and-add over columns).
+    fn phi2_x(&self, x: &[f32]) -> Vec<f32> {
+        let supp = support_of(x);
+        if !supp.is_empty() && supp.len() * 8 < self.n {
+            let vals: Vec<f32> = supp.iter().map(|&i| x[i]).collect();
+            // Fixed mode: columns of Φ̂₂ are the rows of packed1_t.
+            if let Some(p1t) = &self.packed1_t {
+                return lowprec::packed_scale_add(p1t, &supp, &vals);
+            }
+            return lowprec::qmatvec_sparse_cols(
+                &self.codes2.codes,
+                self.m,
+                self.n,
+                self.codes2.multiplier(),
+                &supp,
+                &vals,
+            );
+        }
+        if let Some(p2) = &self.packed2 {
+            return lowprec::packed_matvec(p2, x);
+        }
+        lowprec::qmatvec(&self.codes2.codes, self.m, self.n, self.codes2.multiplier(), x)
+    }
+
+    /// Φ̂₁ᵀ v — the gradient matvec (streams the packed Φ̂ᵀ in Fixed mode).
+    fn phi1t_v(&self, v: &[f32]) -> Vec<f32> {
+        if let Some(p1t) = &self.packed1_t {
+            return lowprec::packed_matvec(p1t, v);
+        }
+        lowprec::qmatvec(&self.codes1_t.codes, self.n, self.m, self.codes1_t.multiplier(), v)
+    }
+
+    /// Φ̂₁ applied to a sparse vector (line-search norm).
+    fn phi1_sparse(&self, idx: &[usize], vals: &[f32]) -> Vec<f32> {
+        if let Some(p1t) = &self.packed1_t {
+            return lowprec::packed_scale_add(p1t, idx, vals);
+        }
+        lowprec::qmatvec_sparse(
+            &self.codes1_t.codes,
+            self.n,
+            self.m,
+            self.codes1_t.multiplier(),
+            idx,
+            vals,
+        )
+    }
+
+    fn residual(&self, x: &[f32]) -> Vec<f32> {
+        let yx = self.phi2_x(x);
+        self.y_hat.iter().zip(&yx).map(|(a, b)| a - b).collect()
+    }
+}
+
+impl NihtKernel for QuantKernel {
+    fn m(&self) -> usize {
+        self.m
+    }
+
+    fn n(&self) -> usize {
+        self.n
+    }
+
+    fn begin_iteration(&mut self, _iter: usize) {
+        if self.mode == RequantMode::Fresh {
+            let phi = self.full.as_ref().expect("Fresh mode retains Φ");
+            let bits = self.codes2.bits;
+            let scale = self.codes2.scale;
+            self.codes2 = QuantizedMatrix::from_mat_with_scale(phi, bits, scale, &mut self.rng);
+            let phi_t = phi.transpose();
+            self.codes1_t =
+                QuantizedMatrix::from_mat_with_scale(&phi_t, bits, scale, &mut self.rng);
+        }
+    }
+
+    fn full_step(&mut self, x: &[f32], s: usize) -> StepOut {
+        let r = self.residual(x);
+        let resid_nsq = linalg::norm2_sq(&r);
+        // g = Φ̂₁ᵀ r — a row-major matvec over the transposed buffer.
+        let g = self.phi1t_v(&r);
+        let supp = if x.iter().any(|&v| v != 0.0) {
+            support_of(x)
+        } else {
+            top_s_indices(&g, s)
+        };
+        let vals: Vec<f32> = supp.iter().map(|&i| g[i]).collect();
+        let num: f32 = vals.iter().map(|v| v * v).sum();
+        // Φ̂₂ g_Γ restricted to the support (packed scale-and-add in
+        // Fixed mode, dense column-restricted matvec otherwise).
+        let pg = if let Some(p1t) = &self.packed1_t {
+            lowprec::packed_scale_add(p1t, &supp, &vals)
+        } else {
+            lowprec::qmatvec_sparse_cols(
+                &self.codes2.codes,
+                self.m,
+                self.n,
+                self.codes2.multiplier(),
+                &supp,
+                &vals,
+            )
+        };
+        let den = linalg::norm2_sq(&pg);
+        let mu = num / den.max(f32::MIN_POSITIVE);
+        let (x_next, dx_nsq, phi1_dx_nsq) = self.apply_step(x, &g, mu, s);
+        StepOut { x_next, g, mu, dx_nsq, phi1_dx_nsq, resid_nsq }
+    }
+
+    fn apply_step(&mut self, x: &[f32], g: &[f32], mu: f32, s: usize) -> (Vec<f32>, f32, f32) {
+        let a: Vec<f32> = x.iter().zip(g).map(|(xi, gi)| xi + mu * gi).collect();
+        let x_next = hard_threshold(&a, s);
+        let dx: Vec<f32> = x_next.iter().zip(x).map(|(a, b)| a - b).collect();
+        let dx_nsq = linalg::norm2_sq(&dx);
+        // ‖Φ̂₁ dx‖²: columns of Φ̂₁ are rows of codes1_t — sparse scale-and-add.
+        let idx = support_of(&dx);
+        let vals: Vec<f32> = idx.iter().map(|&i| dx[i]).collect();
+        let p1dx = self.phi1_sparse(&idx, &vals);
+        (x_next, dx_nsq, linalg::norm2_sq(&p1dx))
+    }
+}
+
+/// Convenience: quantized NIHT solve (the paper's `b_Φ & b_y` variants).
+pub fn qniht(
+    phi: &Mat,
+    y: &[f32],
+    s: usize,
+    bits_phi: u8,
+    bits_y: u8,
+    mode: RequantMode,
+    seed: u64,
+    opts: &SolveOptions,
+) -> SolveResult {
+    let mut k = QuantKernel::new(phi, y, bits_phi, bits_y, mode, seed);
+    solve(&mut k, s, opts)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn planted(m: usize, n: usize, s: usize, seed: u64) -> (Mat, Vec<f32>, Vec<f32>) {
+        let mut rng = XorShift128Plus::new(seed);
+        let phi = Mat::from_fn(m, n, |_, _| rng.gaussian_f32() / (m as f32).sqrt());
+        let mut x = vec![0.0f32; n];
+        for i in rng.choose_k(n, s) {
+            x[i] = rng.gaussian_f32() + if rng.uniform() > 0.5 { 2.0 } else { -2.0 };
+        }
+        let y = phi.matvec(&x);
+        (phi, y, x)
+    }
+
+    #[test]
+    fn qniht_8bit_recovers_support() {
+        let (phi, y, x_true) = planted(96, 192, 6, 1);
+        let r = qniht(&phi, &y, 6, 8, 8, RequantMode::Fixed, 42, &SolveOptions::default());
+        assert_eq!(support_of(&r.x), support_of(&x_true));
+    }
+
+    #[test]
+    fn qniht_8bit_error_small() {
+        let (phi, y, x_true) = planted(96, 192, 6, 2);
+        let r = qniht(&phi, &y, 6, 8, 8, RequantMode::Fixed, 43, &SolveOptions::default());
+        let rel = linalg::norm2(&linalg::sub(&r.x, &x_true)) / linalg::norm2(&x_true);
+        assert!(rel < 0.05, "rel={rel}");
+    }
+
+    #[test]
+    fn qniht_2bit_fresh_recovers_support() {
+        // 2-bit Φ & 8-bit y on a Gaussian problem (paper §10: "performs
+        // slightly worse ... robust to noise as good as 32 bit"). Fresh
+        // quantizations per iteration (Algorithm 1's setting) average the
+        // rounding noise out and recover nearly the full support.
+        let (phi, y, x_true) = planted(192, 256, 5, 3);
+        let r = qniht(&phi, &y, 5, 2, 8, RequantMode::Fresh, 44, &SolveOptions::default());
+        let st = support_of(&x_true);
+        let sr = support_of(&r.x);
+        let inter = super::super::support::support_intersection(&st, &sr);
+        assert!(inter >= 4, "recovered {inter}/5");
+    }
+
+    #[test]
+    fn qniht_2bit_fresh_beats_fixed_on_gaussian() {
+        // Algorithm 1's fresh quantizations are what make 2-bit viable on a
+        // Gaussian matrix (the expectation in Theorem 3 is over Q draws).
+        let mut fresh_hits = 0usize;
+        let mut fixed_hits = 0usize;
+        for seed in 0..4u64 {
+            let (phi, y, x_true) = planted(192, 256, 5, 100 + seed);
+            let st = support_of(&x_true);
+            let rf = qniht(&phi, &y, 5, 2, 8, RequantMode::Fresh, seed, &SolveOptions::default());
+            let rx = qniht(&phi, &y, 5, 2, 8, RequantMode::Fixed, seed, &SolveOptions::default());
+            fresh_hits +=
+                super::super::support::support_intersection(&st, &support_of(&rf.x));
+            fixed_hits +=
+                super::super::support::support_intersection(&st, &support_of(&rx.x));
+        }
+        assert!(fresh_hits >= fixed_hits, "fresh {fresh_hits} vs fixed {fixed_hits}");
+        assert!(fresh_hits >= 16, "fresh should recover most of 20: {fresh_hits}");
+    }
+
+    #[test]
+    fn error_decreases_with_bits() {
+        let (phi, y, x_true) = planted(96, 192, 5, 4);
+        let mut errs = vec![];
+        for bits in [2u8, 4, 8] {
+            let r = qniht(&phi, &y, 5, bits, 8, RequantMode::Fresh, 45, &SolveOptions::default());
+            errs.push(linalg::norm2(&linalg::sub(&r.x, &x_true)));
+        }
+        assert!(errs[2] < errs[0], "8-bit must beat 2-bit: {errs:?}");
+    }
+
+    #[test]
+    fn fresh_mode_differs_from_fixed() {
+        let (phi, y, _) = planted(64, 128, 4, 5);
+        let rf = qniht(&phi, &y, 4, 4, 8, RequantMode::Fixed, 46, &SolveOptions::default());
+        let rr = qniht(&phi, &y, 4, 4, 8, RequantMode::Fresh, 46, &SolveOptions::default());
+        assert_ne!(rf.x, rr.x);
+    }
+
+    #[test]
+    fn bytes_per_iteration_scales_with_bits() {
+        let (phi, y, _) = planted(32, 64, 3, 6);
+        let k2 = QuantKernel::new(&phi, &y, 2, 8, RequantMode::Fixed, 1);
+        let k8 = QuantKernel::new(&phi, &y, 8, 8, RequantMode::Fixed, 1);
+        assert_eq!(k8.bytes_per_iteration(), 4 * k2.bytes_per_iteration());
+    }
+
+    #[test]
+    fn result_is_s_sparse() {
+        let (phi, y, _) = planted(48, 96, 4, 7);
+        let r = qniht(&phi, &y, 4, 4, 8, RequantMode::Fixed, 47, &SolveOptions::default());
+        assert!(support_of(&r.x).len() <= 4);
+    }
+}

@@ -1,0 +1,215 @@
+//! Hard thresholding and support-set utilities.
+//!
+//! `H_s(x)` keeps the `s` largest-magnitude entries. Selection uses an
+//! O(n + s·log s) partial quickselect rather than a full sort — this runs
+//! once per iteration on a length-N vector, so it matters at sky scale.
+//! Ties are broken by lower index (deterministic, matches the canonical
+//! top-k semantics used on the JAX side).
+
+/// Indices of the `s` largest |x| entries, ascending index order.
+pub fn top_s_indices(x: &[f32], s: usize) -> Vec<usize> {
+    let n = x.len();
+    if s >= n {
+        return (0..n).collect();
+    }
+    if s == 0 {
+        return vec![];
+    }
+    // Quickselect on (|x|, reverse index) keys to find the s-th largest.
+    let mut idx: Vec<usize> = (0..n).collect();
+    let key = |i: usize| (x[i].abs(), std::cmp::Reverse(i));
+    let (mut lo, mut hi) = (0usize, n);
+    let target = s; // want the top `s` in idx[..s]
+    while hi - lo > 1 {
+        // median-of-three pivot
+        let mid = lo + (hi - lo) / 2;
+        let mut trio = [idx[lo], idx[mid], idx[hi - 1]];
+        trio.sort_by(|&a, &b| key(b).partial_cmp(&key(a)).unwrap());
+        let pivot = key(trio[1]);
+        // partition: larger-than-pivot first
+        let mut i = lo;
+        let mut j = hi;
+        let mut k = lo;
+        while k < j {
+            let c = key(idx[k]).partial_cmp(&pivot).unwrap();
+            match c {
+                std::cmp::Ordering::Greater => {
+                    idx.swap(i, k);
+                    i += 1;
+                    k += 1;
+                }
+                std::cmp::Ordering::Less => {
+                    j -= 1;
+                    idx.swap(k, j);
+                }
+                std::cmp::Ordering::Equal => k += 1,
+            }
+        }
+        // idx[lo..i] > pivot, idx[i..j] == pivot, idx[j..hi] < pivot
+        if target <= i {
+            hi = i;
+        } else if target >= j {
+            lo = j;
+        } else {
+            break; // target falls inside the equal block — done
+        }
+    }
+    let mut out = idx[..s].to_vec();
+    out.sort_unstable();
+    out
+}
+
+/// H_s: zero all but the s largest-magnitude entries.
+pub fn hard_threshold(x: &[f32], s: usize) -> Vec<f32> {
+    let keep = top_s_indices(x, s);
+    let mut out = vec![0.0f32; x.len()];
+    for i in keep {
+        out[i] = x[i];
+    }
+    out
+}
+
+/// In-place variant writing into `out` (hot-path, no allocation).
+pub fn hard_threshold_into(x: &[f32], s: usize, out: &mut [f32]) {
+    debug_assert_eq!(x.len(), out.len());
+    out.fill(0.0);
+    for i in top_s_indices(x, s) {
+        out[i] = x[i];
+    }
+}
+
+/// Support (indices of nonzeros), ascending.
+pub fn support_of(x: &[f32]) -> Vec<usize> {
+    x.iter().enumerate().filter(|(_, &v)| v != 0.0).map(|(i, _)| i).collect()
+}
+
+/// Set equality of two ascending index lists.
+pub fn supports_equal(a: &[usize], b: &[usize]) -> bool {
+    a == b
+}
+
+/// |a ∩ b| for ascending index lists (merge scan).
+pub fn support_intersection(a: &[usize], b: &[usize]) -> usize {
+    let (mut i, mut j, mut count) = (0, 0, 0);
+    while i < a.len() && j < b.len() {
+        match a[i].cmp(&b[j]) {
+            std::cmp::Ordering::Less => i += 1,
+            std::cmp::Ordering::Greater => j += 1,
+            std::cmp::Ordering::Equal => {
+                count += 1;
+                i += 1;
+                j += 1;
+            }
+        }
+    }
+    count
+}
+
+/// Union of two ascending index lists.
+pub fn support_union(a: &[usize], b: &[usize]) -> Vec<usize> {
+    let mut out = Vec::with_capacity(a.len() + b.len());
+    let (mut i, mut j) = (0, 0);
+    while i < a.len() || j < b.len() {
+        if j >= b.len() || (i < a.len() && a[i] < b[j]) {
+            out.push(a[i]);
+            i += 1;
+        } else if i >= a.len() || b[j] < a[i] {
+            out.push(b[j]);
+            j += 1;
+        } else {
+            out.push(a[i]);
+            i += 1;
+            j += 1;
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rng::XorShift128Plus;
+
+    fn naive_top_s(x: &[f32], s: usize) -> Vec<usize> {
+        let mut idx: Vec<usize> = (0..x.len()).collect();
+        idx.sort_by(|&a, &b| {
+            (x[b].abs(), std::cmp::Reverse(b))
+                .partial_cmp(&(x[a].abs(), std::cmp::Reverse(a)))
+                .unwrap()
+        });
+        let mut out = idx[..s.min(x.len())].to_vec();
+        out.sort_unstable();
+        out
+    }
+
+    #[test]
+    fn top_s_matches_naive_random() {
+        let mut rng = XorShift128Plus::new(1);
+        for trial in 0..50 {
+            let n = 1 + rng.below(200);
+            let x = rng.gaussian_vec(n);
+            let s = rng.below(n + 1);
+            assert_eq!(top_s_indices(&x, s), naive_top_s(&x, s), "trial {trial} n={n} s={s}");
+        }
+    }
+
+    #[test]
+    fn top_s_with_ties() {
+        let x = vec![1.0, -1.0, 1.0, 1.0];
+        // Ties break toward lower index.
+        assert_eq!(top_s_indices(&x, 2), vec![0, 1]);
+        assert_eq!(top_s_indices(&x, 3), vec![0, 1, 2]);
+    }
+
+    #[test]
+    fn top_s_zero_and_full() {
+        let x = vec![3.0, 1.0, 2.0];
+        assert_eq!(top_s_indices(&x, 0), Vec::<usize>::new());
+        assert_eq!(top_s_indices(&x, 3), vec![0, 1, 2]);
+        assert_eq!(top_s_indices(&x, 10), vec![0, 1, 2]);
+    }
+
+    #[test]
+    fn hard_threshold_keeps_exactly_s() {
+        let mut rng = XorShift128Plus::new(2);
+        let x = rng.gaussian_vec(100);
+        for s in [1usize, 7, 50, 100] {
+            let h = hard_threshold(&x, s);
+            assert_eq!(support_of(&h).len(), s);
+        }
+    }
+
+    #[test]
+    fn hard_threshold_values_preserved() {
+        let x = vec![0.1, -5.0, 2.0, 0.01, -3.0];
+        assert_eq!(hard_threshold(&x, 2), vec![0.0, -5.0, 0.0, 0.0, -3.0]);
+    }
+
+    #[test]
+    fn hard_threshold_idempotent() {
+        let mut rng = XorShift128Plus::new(3);
+        let x = rng.gaussian_vec(64);
+        let once = hard_threshold(&x, 8);
+        let twice = hard_threshold(&once, 8);
+        assert_eq!(once, twice);
+    }
+
+    #[test]
+    fn hard_threshold_into_matches() {
+        let mut rng = XorShift128Plus::new(4);
+        let x = rng.gaussian_vec(64);
+        let mut out = vec![9.0f32; 64];
+        hard_threshold_into(&x, 5, &mut out);
+        assert_eq!(out, hard_threshold(&x, 5));
+    }
+
+    #[test]
+    fn set_ops() {
+        let a = vec![1, 3, 5, 7];
+        let b = vec![3, 4, 7, 9];
+        assert_eq!(support_intersection(&a, &b), 2);
+        assert_eq!(support_union(&a, &b), vec![1, 3, 4, 5, 7, 9]);
+        assert!(supports_equal(&a, &a.clone()));
+        assert!(!supports_equal(&a, &b));
+    }
+}

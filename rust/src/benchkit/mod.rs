@@ -1,0 +1,86 @@
+//! In-tree micro-benchmark harness (no criterion offline; DESIGN.md §6).
+//!
+//! Deliberately small: warmup, fixed iteration count, robust statistics
+//! (median / mean / p10 / p90), and a black-box sink to defeat dead-code
+//! elimination. All `cargo bench` targets (harness = false) use this.
+
+use std::hint::black_box;
+use std::time::{Duration, Instant};
+
+#[derive(Debug, Clone, Copy)]
+pub struct BenchStats {
+    pub iters: usize,
+    pub median: Duration,
+    pub mean: Duration,
+    pub p10: Duration,
+    pub p90: Duration,
+}
+
+impl BenchStats {
+    pub fn median_s(&self) -> f64 {
+        self.median.as_secs_f64()
+    }
+}
+
+/// Time `f` with `warmup` + `iters` repetitions; returns robust stats.
+pub fn bench<T>(warmup: usize, iters: usize, mut f: impl FnMut() -> T) -> BenchStats {
+    assert!(iters >= 1);
+    for _ in 0..warmup {
+        black_box(f());
+    }
+    let mut samples: Vec<Duration> = Vec::with_capacity(iters);
+    for _ in 0..iters {
+        let t0 = Instant::now();
+        black_box(f());
+        samples.push(t0.elapsed());
+    }
+    samples.sort();
+    let mean = samples.iter().sum::<Duration>() / iters as u32;
+    BenchStats {
+        iters,
+        median: samples[iters / 2],
+        mean,
+        p10: samples[iters / 10],
+        p90: samples[(iters * 9) / 10],
+    }
+}
+
+/// Print one result line in a fixed parseable format.
+pub fn report(name: &str, stats: &BenchStats) {
+    println!(
+        "bench {name:<44} median {:>12.3?}  mean {:>12.3?}  p10 {:>12.3?}  p90 {:>12.3?}  (n={})",
+        stats.median, stats.mean, stats.p10, stats.p90, stats.iters
+    );
+}
+
+/// Convenience wrapper: run + report + return stats.
+pub fn run<T>(name: &str, warmup: usize, iters: usize, f: impl FnMut() -> T) -> BenchStats {
+    let stats = bench(warmup, iters, f);
+    report(name, &stats);
+    stats
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn stats_ordering() {
+        let s = bench(2, 50, || {
+            let mut acc = 0u64;
+            for i in 0..1000u64 {
+                acc = acc.wrapping_add(i * i);
+            }
+            acc
+        });
+        assert!(s.p10 <= s.median && s.median <= s.p90);
+        assert!(s.mean.as_nanos() > 0);
+    }
+
+    #[test]
+    fn measures_sleep_roughly() {
+        let s = bench(0, 3, || std::thread::sleep(Duration::from_millis(2)));
+        assert!(s.median >= Duration::from_millis(2));
+        assert!(s.median < Duration::from_millis(50));
+    }
+}

@@ -1,0 +1,238 @@
+//! Configuration system (S14): typed config with JSON file loading and
+//! `key=value` CLI overrides. (The offline build vendors no TOML crate, so
+//! the on-disk format is JSON via `io::json` — DESIGN.md §6.)
+
+use crate::algorithms::qniht::RequantMode;
+use crate::algorithms::SolveOptions;
+use crate::io::json::Json;
+use crate::telescope::AstroConfig;
+use anyhow::{anyhow, bail, Result};
+use std::path::{Path, PathBuf};
+
+/// Which execution engine runs the NIHT step.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum EngineKind {
+    /// Dense f32 rust kernels (32-bit baseline).
+    NativeDense,
+    /// int8 quantized rust kernels (the paper's low-precision path).
+    NativeQuant,
+    /// PJRT executables from the JAX/Pallas AOT artifacts.
+    XlaQuant,
+    /// PJRT dense f32 artifact.
+    XlaDense,
+}
+
+impl EngineKind {
+    pub fn parse(s: &str) -> Result<Self> {
+        Ok(match s {
+            "native-dense" | "dense" => Self::NativeDense,
+            "native-quant" | "quant" | "native" => Self::NativeQuant,
+            "xla-quant" | "xla" => Self::XlaQuant,
+            "xla-dense" => Self::XlaDense,
+            other => bail!("unknown engine '{other}' (native-dense|native-quant|xla-quant|xla-dense)"),
+        })
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            Self::NativeDense => "native-dense",
+            Self::NativeQuant => "native-quant",
+            Self::XlaQuant => "xla-quant",
+            Self::XlaDense => "xla-dense",
+        }
+    }
+}
+
+/// Quantization settings.
+#[derive(Debug, Clone, Copy)]
+pub struct QuantConfig {
+    pub bits_phi: u8,
+    pub bits_y: u8,
+    pub mode: RequantMode,
+}
+
+impl Default for QuantConfig {
+    fn default() -> Self {
+        Self { bits_phi: 2, bits_y: 8, mode: RequantMode::Fixed }
+    }
+}
+
+/// Recovery-service settings.
+#[derive(Debug, Clone, Copy)]
+pub struct ServiceConfig {
+    pub workers: usize,
+    pub queue_capacity: usize,
+    pub max_batch: usize,
+    pub max_wait_ms: u64,
+}
+
+impl Default for ServiceConfig {
+    fn default() -> Self {
+        Self { workers: 2, queue_capacity: 256, max_batch: 8, max_wait_ms: 5 }
+    }
+}
+
+/// Top-level configuration.
+#[derive(Debug, Clone)]
+pub struct LpcsConfig {
+    pub artifact_dir: PathBuf,
+    pub out_dir: PathBuf,
+    pub seed: u64,
+    pub sparsity: usize,
+    pub engine: EngineKind,
+    pub quant: QuantConfig,
+    pub solver: SolveOptions,
+    pub astro: AstroConfig,
+    pub service: ServiceConfig,
+}
+
+impl Default for LpcsConfig {
+    fn default() -> Self {
+        Self {
+            artifact_dir: PathBuf::from("artifacts"),
+            out_dir: PathBuf::from("results"),
+            seed: 7,
+            sparsity: 30,
+            engine: EngineKind::NativeQuant,
+            quant: QuantConfig::default(),
+            solver: SolveOptions::default(),
+            astro: AstroConfig::default(),
+            service: ServiceConfig::default(),
+        }
+    }
+}
+
+impl LpcsConfig {
+    /// Load from a JSON file; missing keys keep defaults.
+    pub fn from_file(path: &Path) -> Result<Self> {
+        let text = std::fs::read_to_string(path)
+            .map_err(|e| anyhow!("reading config {path:?}: {e}"))?;
+        let j = Json::parse(&text).map_err(|e| anyhow!("parsing config {path:?}: {e}"))?;
+        let mut cfg = Self::default();
+        let obj = j.as_obj().ok_or_else(|| anyhow!("config root must be an object"))?;
+        for (k, v) in obj {
+            cfg.apply_json(k, v)?;
+        }
+        Ok(cfg)
+    }
+
+    fn apply_json(&mut self, key: &str, v: &Json) -> Result<()> {
+        let sv = v.dump();
+        let sv = sv.trim_matches('"');
+        self.set(key, sv)
+    }
+
+    /// Apply one `key=value` override (dotted keys).
+    pub fn set(&mut self, key: &str, value: &str) -> Result<()> {
+        let vf = || -> Result<f64> {
+            value.parse::<f64>().map_err(|_| anyhow!("'{key}': expected a number, got '{value}'"))
+        };
+        match key {
+            "artifact_dir" => self.artifact_dir = PathBuf::from(value),
+            "out_dir" => self.out_dir = PathBuf::from(value),
+            "seed" => self.seed = vf()? as u64,
+            "sparsity" | "s" => self.sparsity = vf()? as usize,
+            "engine" => self.engine = EngineKind::parse(value)?,
+            "quant.bits_phi" | "bits_phi" => self.quant.bits_phi = vf()? as u8,
+            "quant.bits_y" | "bits_y" => self.quant.bits_y = vf()? as u8,
+            "quant.mode" => {
+                self.quant.mode = match value {
+                    "fixed" => RequantMode::Fixed,
+                    "fresh" => RequantMode::Fresh,
+                    _ => bail!("quant.mode must be fixed|fresh"),
+                }
+            }
+            "solver.max_iters" | "max_iters" => self.solver.max_iters = vf()? as usize,
+            "solver.tol" => self.solver.tol = vf()? as f32,
+            "solver.c" => self.solver.c = vf()? as f32,
+            "solver.kappa" => self.solver.kappa = vf()? as f32,
+            "solver.track_history" => self.solver.track_history = value == "true",
+            "astro.antennas" => self.astro.antennas = vf()? as usize,
+            "astro.resolution" => self.astro.resolution = vf()? as usize,
+            "astro.fov_half_width" => self.astro.fov_half_width = vf()?,
+            "astro.sources" => self.astro.sources = vf()? as usize,
+            "astro.snr_db" => self.astro.snr_db = vf()?,
+            "astro.freq_hz" => self.astro.freq_hz = vf()?,
+            "service.workers" => self.service.workers = vf()? as usize,
+            "service.queue_capacity" => self.service.queue_capacity = vf()? as usize,
+            "service.max_batch" => self.service.max_batch = vf()? as usize,
+            "service.max_wait_ms" => self.service.max_wait_ms = vf()? as u64,
+            other => bail!("unknown config key '{other}'"),
+        }
+        Ok(())
+    }
+
+    /// Validate cross-field invariants.
+    pub fn validate(&self) -> Result<()> {
+        if !(2..=8).contains(&self.quant.bits_phi) || !(2..=8).contains(&self.quant.bits_y) {
+            bail!("bit widths must be in 2..=8");
+        }
+        if self.sparsity == 0 {
+            bail!("sparsity must be >= 1");
+        }
+        if self.solver.kappa <= 1.0 / (1.0 - self.solver.c) {
+            bail!("Algorithm 1 requires kappa > 1/(1-c)");
+        }
+        if self.service.workers == 0 || self.service.max_batch == 0 {
+            bail!("service.workers and service.max_batch must be >= 1");
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn defaults_validate() {
+        LpcsConfig::default().validate().unwrap();
+    }
+
+    #[test]
+    fn set_overrides() {
+        let mut c = LpcsConfig::default();
+        c.set("bits_phi", "4").unwrap();
+        c.set("engine", "xla-quant").unwrap();
+        c.set("astro.resolution", "128").unwrap();
+        c.set("quant.mode", "fresh").unwrap();
+        assert_eq!(c.quant.bits_phi, 4);
+        assert_eq!(c.engine, EngineKind::XlaQuant);
+        assert_eq!(c.astro.resolution, 128);
+        assert_eq!(c.quant.mode, RequantMode::Fresh);
+    }
+
+    #[test]
+    fn unknown_key_rejected() {
+        assert!(LpcsConfig::default().set("nope", "1").is_err());
+    }
+
+    #[test]
+    fn invalid_values_rejected() {
+        let mut c = LpcsConfig::default();
+        assert!(c.set("bits_phi", "abc").is_err());
+        c.set("bits_phi", "1").unwrap();
+        assert!(c.validate().is_err());
+    }
+
+    #[test]
+    fn from_file_roundtrip() {
+        let dir = std::env::temp_dir().join("lpcs_cfg_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let p = dir.join("cfg.json");
+        std::fs::write(&p, r#"{"bits_phi": 4, "engine": "native-dense", "seed": 99}"#).unwrap();
+        let c = LpcsConfig::from_file(&p).unwrap();
+        assert_eq!(c.quant.bits_phi, 4);
+        assert_eq!(c.engine, EngineKind::NativeDense);
+        assert_eq!(c.seed, 99);
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn engine_parse_names() {
+        for k in ["native-dense", "native-quant", "xla-quant", "xla-dense"] {
+            assert_eq!(EngineKind::parse(k).unwrap().name(), k);
+        }
+        assert!(EngineKind::parse("gpu").is_err());
+    }
+}

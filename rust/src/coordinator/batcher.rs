@@ -1,0 +1,95 @@
+//! Batching policy — a pure function from a job stream to batches, so the
+//! invariants are property-testable without threads.
+//!
+//! Policy: a batch is a maximal run of consecutive jobs (FIFO order) that
+//! share a [`BatchKey`], capped at `max_batch`. Consecutive-run batching
+//! (rather than global grouping) preserves fairness: a job never overtakes
+//! an earlier job with a different key.
+
+use super::job::{BatchKey, JobId, JobSpec};
+
+/// A formed batch: the shared key + (id, spec) pairs.
+#[derive(Debug)]
+pub struct Batch {
+    pub key: BatchKey,
+    pub jobs: Vec<(JobId, JobSpec)>,
+}
+
+impl Batch {
+    pub fn len(&self) -> usize {
+        self.jobs.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.jobs.is_empty()
+    }
+}
+
+/// Split a FIFO job list into batches (used by tests and by the worker loop
+/// when it drains the queue).
+pub fn form_batches(jobs: Vec<(JobId, JobSpec)>, max_batch: usize) -> Vec<Batch> {
+    assert!(max_batch >= 1);
+    let mut out: Vec<Batch> = Vec::new();
+    for (id, spec) in jobs {
+        let key = spec.batch_key();
+        match out.last_mut() {
+            Some(b) if b.key == key && b.len() < max_batch => b.jobs.push((id, spec)),
+            _ => out.push(Batch { key, jobs: vec![(id, spec)] }),
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::EngineKind;
+    use crate::coordinator::job::ProblemHandle;
+    use crate::linalg::Mat;
+    use std::sync::Arc;
+
+    fn spec(phi: &Arc<Mat>, bits: u8) -> JobSpec {
+        JobSpec {
+            problem: ProblemHandle::new(phi.clone()),
+            y: vec![0.0; phi.rows],
+            s: 2,
+            bits_phi: bits,
+            bits_y: 8,
+            engine: EngineKind::NativeQuant,
+            seed: 0,
+        }
+    }
+
+    #[test]
+    fn groups_consecutive_same_key() {
+        let phi = Arc::new(Mat::zeros(4, 8));
+        let jobs = vec![(1, spec(&phi, 2)), (2, spec(&phi, 2)), (3, spec(&phi, 2))];
+        let b = form_batches(jobs, 8);
+        assert_eq!(b.len(), 1);
+        assert_eq!(b[0].len(), 3);
+    }
+
+    #[test]
+    fn splits_on_key_change_and_preserves_order() {
+        let phi = Arc::new(Mat::zeros(4, 8));
+        let jobs = vec![(1, spec(&phi, 2)), (2, spec(&phi, 4)), (3, spec(&phi, 2))];
+        let b = form_batches(jobs, 8);
+        // 3 batches: key changes break runs even if an earlier key recurs.
+        assert_eq!(b.len(), 3);
+        let ids: Vec<JobId> = b.iter().flat_map(|b| b.jobs.iter().map(|(i, _)| *i)).collect();
+        assert_eq!(ids, vec![1, 2, 3], "FIFO order preserved");
+    }
+
+    #[test]
+    fn respects_max_batch() {
+        let phi = Arc::new(Mat::zeros(4, 8));
+        let jobs: Vec<_> = (0..10).map(|i| (i, spec(&phi, 2))).collect();
+        let b = form_batches(jobs, 4);
+        assert_eq!(b.iter().map(Batch::len).collect::<Vec<_>>(), vec![4, 4, 2]);
+    }
+
+    #[test]
+    fn empty_input_empty_output() {
+        assert!(form_batches(vec![], 4).is_empty());
+    }
+}

@@ -1,0 +1,310 @@
+//! Job model: specs, the state machine, and the store clients wait on.
+
+use crate::algorithms::SolveResult;
+use crate::config::EngineKind;
+use crate::linalg::Mat;
+use std::collections::HashMap;
+use std::sync::{Arc, Condvar, Mutex};
+use std::time::{Duration, Instant};
+
+pub type JobId = u64;
+
+/// The measurement matrix a job recovers against. Jobs sharing the same
+/// `Arc` are batchable (one quantization pass amortized over the batch).
+#[derive(Debug, Clone)]
+pub struct ProblemHandle {
+    pub phi: Arc<Mat>,
+    /// Artifact shape tag if this Φ matches an AOT shape (XLA engines).
+    pub shape_tag: Option<String>,
+}
+
+impl ProblemHandle {
+    pub fn new(phi: Arc<Mat>) -> Self {
+        Self { phi, shape_tag: None }
+    }
+
+    pub fn with_shape_tag(phi: Arc<Mat>, tag: &str) -> Self {
+        Self { phi, shape_tag: Some(tag.to_string()) }
+    }
+}
+
+/// A recovery request.
+#[derive(Debug, Clone)]
+pub struct JobSpec {
+    pub problem: ProblemHandle,
+    pub y: Vec<f32>,
+    pub s: usize,
+    pub bits_phi: u8,
+    pub bits_y: u8,
+    pub engine: EngineKind,
+    pub seed: u64,
+}
+
+impl JobSpec {
+    /// Batching key: jobs are batchable iff they share Φ (by identity) and
+    /// the full execution configuration.
+    pub fn batch_key(&self) -> BatchKey {
+        BatchKey {
+            phi_ptr: Arc::as_ptr(&self.problem.phi) as usize,
+            s: self.s,
+            bits_phi: self.bits_phi,
+            bits_y: self.bits_y,
+            engine: self.engine,
+        }
+    }
+}
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub struct BatchKey {
+    pub phi_ptr: usize,
+    pub s: usize,
+    pub bits_phi: u8,
+    pub bits_y: u8,
+    pub engine: EngineKind,
+}
+
+/// Lifecycle states.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum JobState {
+    Queued,
+    Running,
+    Done,
+    Failed,
+}
+
+impl JobState {
+    /// Legal transitions of the state machine.
+    pub fn can_transition(self, next: JobState) -> bool {
+        matches!(
+            (self, next),
+            (JobState::Queued, JobState::Running)
+                | (JobState::Queued, JobState::Failed) // rejected before start
+                | (JobState::Running, JobState::Done)
+                | (JobState::Running, JobState::Failed)
+        )
+    }
+}
+
+/// Completed-job payload.
+#[derive(Debug, Clone)]
+pub struct JobOutcome {
+    pub id: JobId,
+    pub state: JobState,
+    pub result: Option<SolveResult>,
+    pub error: Option<String>,
+    pub queued_for: Duration,
+    pub ran_for: Duration,
+}
+
+#[derive(Debug)]
+struct Record {
+    state: JobState,
+    result: Option<SolveResult>,
+    error: Option<String>,
+    submitted: Instant,
+    started: Option<Instant>,
+    finished: Option<Instant>,
+}
+
+/// Shared job table with completion signalling.
+#[derive(Debug, Default)]
+pub struct JobStore {
+    inner: Mutex<HashMap<JobId, Record>>,
+    done: Condvar,
+}
+
+impl JobStore {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn insert_queued(&self, id: JobId) {
+        let mut g = self.inner.lock().unwrap();
+        let prev = g.insert(
+            id,
+            Record {
+                state: JobState::Queued,
+                result: None,
+                error: None,
+                submitted: Instant::now(),
+                started: None,
+                finished: None,
+            },
+        );
+        assert!(prev.is_none(), "job id {id} reused");
+    }
+
+    /// Transition enforcing state-machine legality.
+    pub fn transition(&self, id: JobId, next: JobState) {
+        let mut g = self.inner.lock().unwrap();
+        let r = g.get_mut(&id).unwrap_or_else(|| panic!("unknown job {id}"));
+        assert!(
+            r.state.can_transition(next),
+            "illegal transition {:?} -> {next:?} for job {id}",
+            r.state
+        );
+        r.state = next;
+        match next {
+            JobState::Running => r.started = Some(Instant::now()),
+            JobState::Done | JobState::Failed => {
+                r.finished = Some(Instant::now());
+            }
+            JobState::Queued => unreachable!(),
+        }
+        if matches!(next, JobState::Done | JobState::Failed) {
+            drop(g);
+            self.done.notify_all();
+        }
+    }
+
+    pub fn complete(&self, id: JobId, result: SolveResult) {
+        {
+            let mut g = self.inner.lock().unwrap();
+            let r = g.get_mut(&id).unwrap();
+            r.result = Some(result);
+        }
+        self.transition(id, JobState::Done);
+    }
+
+    pub fn fail(&self, id: JobId, error: String) {
+        {
+            let mut g = self.inner.lock().unwrap();
+            let r = g.get_mut(&id).unwrap();
+            r.error = Some(error);
+        }
+        self.transition(id, JobState::Failed);
+    }
+
+    pub fn state(&self, id: JobId) -> Option<JobState> {
+        self.inner.lock().unwrap().get(&id).map(|r| r.state)
+    }
+
+    /// Block until the job reaches a terminal state (or timeout).
+    pub fn wait(&self, id: JobId, timeout: Duration) -> Option<JobOutcome> {
+        let deadline = Instant::now() + timeout;
+        let mut g = self.inner.lock().unwrap();
+        loop {
+            match g.get(&id) {
+                None => return None,
+                Some(r) if matches!(r.state, JobState::Done | JobState::Failed) => {
+                    let queued_for = r
+                        .started
+                        .unwrap_or_else(|| r.finished.unwrap())
+                        .duration_since(r.submitted);
+                    let ran_for = match (r.started, r.finished) {
+                        (Some(s), Some(f)) => f.duration_since(s),
+                        _ => Duration::ZERO,
+                    };
+                    return Some(JobOutcome {
+                        id,
+                        state: r.state,
+                        result: r.result.clone(),
+                        error: r.error.clone(),
+                        queued_for,
+                        ran_for,
+                    });
+                }
+                Some(_) => {
+                    let now = Instant::now();
+                    if now >= deadline {
+                        return None;
+                    }
+                    let (gg, _) = self.done.wait_timeout(g, deadline - now).unwrap();
+                    g = gg;
+                }
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn dummy_result() -> SolveResult {
+        SolveResult { x: vec![], iterations: 1, converged: true, shrink_events: 0, history: vec![] }
+    }
+
+    #[test]
+    fn legal_lifecycle() {
+        let s = JobStore::new();
+        s.insert_queued(1);
+        assert_eq!(s.state(1), Some(JobState::Queued));
+        s.transition(1, JobState::Running);
+        s.complete(1, dummy_result());
+        assert_eq!(s.state(1), Some(JobState::Done));
+    }
+
+    #[test]
+    #[should_panic(expected = "illegal transition")]
+    fn illegal_transition_panics() {
+        let s = JobStore::new();
+        s.insert_queued(1);
+        s.transition(1, JobState::Done); // must pass through Running
+    }
+
+    #[test]
+    #[should_panic(expected = "reused")]
+    fn duplicate_id_panics() {
+        let s = JobStore::new();
+        s.insert_queued(1);
+        s.insert_queued(1);
+    }
+
+    #[test]
+    fn wait_returns_outcome() {
+        let s = Arc::new(JobStore::new());
+        s.insert_queued(5);
+        let s2 = s.clone();
+        let h = std::thread::spawn(move || {
+            std::thread::sleep(Duration::from_millis(10));
+            s2.transition(5, JobState::Running);
+            s2.complete(5, dummy_result());
+        });
+        let out = s.wait(5, Duration::from_secs(2)).expect("job must finish");
+        assert_eq!(out.state, JobState::Done);
+        assert!(out.result.is_some());
+        h.join().unwrap();
+    }
+
+    #[test]
+    fn wait_times_out() {
+        let s = JobStore::new();
+        s.insert_queued(9);
+        assert!(s.wait(9, Duration::from_millis(20)).is_none());
+    }
+
+    #[test]
+    fn failed_jobs_carry_error() {
+        let s = JobStore::new();
+        s.insert_queued(2);
+        s.transition(2, JobState::Running);
+        s.fail(2, "boom".into());
+        let out = s.wait(2, Duration::from_millis(10)).unwrap();
+        assert_eq!(out.state, JobState::Failed);
+        assert_eq!(out.error.as_deref(), Some("boom"));
+    }
+
+    #[test]
+    fn batch_key_identity() {
+        let phi = Arc::new(Mat::zeros(2, 3));
+        let spec = |phi: &Arc<Mat>| JobSpec {
+            problem: ProblemHandle::new(phi.clone()),
+            y: vec![0.0; 2],
+            s: 1,
+            bits_phi: 2,
+            bits_y: 8,
+            engine: EngineKind::NativeQuant,
+            seed: 0,
+        };
+        let a = spec(&phi);
+        let b = spec(&phi);
+        assert_eq!(a.batch_key(), b.batch_key());
+        let other = Arc::new(Mat::zeros(2, 3));
+        let c = spec(&other);
+        assert_ne!(a.batch_key(), c.batch_key());
+        let mut d = spec(&phi);
+        d.bits_phi = 4;
+        assert_ne!(a.batch_key(), d.batch_key());
+    }
+}

@@ -1,0 +1,26 @@
+//! Recovery service (S13) — the L3 coordination layer.
+//!
+//! A telescope station produces a stream of visibility snapshots that share
+//! one measurement matrix Φ (the geometry is fixed while the grid/pointing
+//! is). The service accepts recovery jobs (y, s, precision, engine), routes
+//! them through a bounded queue with backpressure, groups jobs that share Φ
+//! and configuration into batches (one quantization pass amortized over the
+//! batch), and executes them on a worker pool. PJRT handles are not `Send`,
+//! so each worker owns its own [`runtime::Runtime`]; compiled executables
+//! are cached per worker.
+//!
+//! Components:
+//! * [`queue`] — bounded MPMC queue (Mutex + Condvar) with try/timeout
+//!   semantics and compatible-batch draining.
+//! * [`job`] — job specs, the state machine (Queued → Running → Done|Failed)
+//!   and the store clients wait on.
+//! * [`batcher`] — pure batching policy (grouping key + batch limits).
+//! * [`service`] — worker pool wiring, engine dispatch, metrics.
+
+pub mod batcher;
+pub mod job;
+pub mod queue;
+pub mod service;
+
+pub use job::{JobId, JobOutcome, JobSpec, JobState, ProblemHandle};
+pub use service::{RecoveryService, ServiceMetrics};

@@ -1,0 +1,283 @@
+//! Bounded MPMC queue with backpressure (Mutex + Condvar; no external
+//! crates). FIFO per priority class, two classes (High ahead of Normal).
+
+use std::collections::VecDeque;
+use std::sync::{Condvar, Mutex};
+use std::time::{Duration, Instant};
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Priority {
+    Normal,
+    High,
+}
+
+#[derive(Debug)]
+struct Inner<T> {
+    high: VecDeque<T>,
+    normal: VecDeque<T>,
+    closed: bool,
+}
+
+impl<T> Inner<T> {
+    fn len(&self) -> usize {
+        self.high.len() + self.normal.len()
+    }
+
+    fn pop(&mut self) -> Option<T> {
+        self.high.pop_front().or_else(|| self.normal.pop_front())
+    }
+}
+
+/// Bounded two-priority FIFO queue.
+#[derive(Debug)]
+pub struct BoundedQueue<T> {
+    inner: Mutex<Inner<T>>,
+    not_empty: Condvar,
+    not_full: Condvar,
+    capacity: usize,
+}
+
+#[derive(Debug, PartialEq, Eq)]
+pub enum PushError<T> {
+    Full(T),
+    Closed(T),
+}
+
+impl<T> BoundedQueue<T> {
+    pub fn new(capacity: usize) -> Self {
+        assert!(capacity >= 1);
+        Self {
+            inner: Mutex::new(Inner { high: VecDeque::new(), normal: VecDeque::new(), closed: false }),
+            not_empty: Condvar::new(),
+            not_full: Condvar::new(),
+            capacity,
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        self.inner.lock().unwrap().len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    pub fn capacity(&self) -> usize {
+        self.capacity
+    }
+
+    /// Non-blocking push; `Err(Full)` is the backpressure signal.
+    pub fn try_push(&self, item: T, prio: Priority) -> Result<(), PushError<T>> {
+        let mut g = self.inner.lock().unwrap();
+        if g.closed {
+            return Err(PushError::Closed(item));
+        }
+        if g.len() >= self.capacity {
+            return Err(PushError::Full(item));
+        }
+        match prio {
+            Priority::High => g.high.push_back(item),
+            Priority::Normal => g.normal.push_back(item),
+        }
+        drop(g);
+        self.not_empty.notify_one();
+        Ok(())
+    }
+
+    /// Blocking push with timeout.
+    pub fn push_timeout(&self, item: T, prio: Priority, timeout: Duration) -> Result<(), PushError<T>> {
+        let deadline = Instant::now() + timeout;
+        let mut g = self.inner.lock().unwrap();
+        loop {
+            if g.closed {
+                return Err(PushError::Closed(item));
+            }
+            if g.len() < self.capacity {
+                match prio {
+                    Priority::High => g.high.push_back(item),
+                    Priority::Normal => g.normal.push_back(item),
+                }
+                drop(g);
+                self.not_empty.notify_one();
+                return Ok(());
+            }
+            let now = Instant::now();
+            if now >= deadline {
+                return Err(PushError::Full(item));
+            }
+            let (gg, _) = self.not_full.wait_timeout(g, deadline - now).unwrap();
+            g = gg;
+        }
+    }
+
+    /// Blocking pop with timeout; `None` on timeout or when closed+drained.
+    pub fn pop_timeout(&self, timeout: Duration) -> Option<T> {
+        let deadline = Instant::now() + timeout;
+        let mut g = self.inner.lock().unwrap();
+        loop {
+            if let Some(item) = g.pop() {
+                drop(g);
+                self.not_full.notify_one();
+                return Some(item);
+            }
+            if g.closed {
+                return None;
+            }
+            let now = Instant::now();
+            if now >= deadline {
+                return None;
+            }
+            let (gg, _) = self.not_empty.wait_timeout(g, deadline - now).unwrap();
+            g = gg;
+        }
+    }
+
+    /// Drain up to `limit` additional items matching `pred` (batch
+    /// formation: caller already holds the batch leader).
+    pub fn drain_matching(&self, limit: usize, pred: impl Fn(&T) -> bool) -> Vec<T> {
+        let mut g = self.inner.lock().unwrap();
+        let mut out = Vec::new();
+        // Only take from the FRONT while it matches — preserves FIFO order
+        // for non-matching jobs. High-priority queue first.
+        while out.len() < limit && g.high.front().map(&pred).unwrap_or(false) {
+            out.push(g.high.pop_front().unwrap());
+        }
+        while out.len() < limit && g.normal.front().map(&pred).unwrap_or(false) {
+            out.push(g.normal.pop_front().unwrap());
+        }
+        if !out.is_empty() {
+            drop(g);
+            self.not_full.notify_all();
+        }
+        out
+    }
+
+    /// Close: pushes fail, pops drain the remainder then return None.
+    pub fn close(&self) {
+        self.inner.lock().unwrap().closed = true;
+        self.not_empty.notify_all();
+        self.not_full.notify_all();
+    }
+
+    pub fn is_closed(&self) -> bool {
+        self.inner.lock().unwrap().closed
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::Arc;
+
+    #[test]
+    fn fifo_order_per_priority() {
+        let q = BoundedQueue::new(10);
+        q.try_push(1, Priority::Normal).unwrap();
+        q.try_push(2, Priority::Normal).unwrap();
+        q.try_push(99, Priority::High).unwrap();
+        assert_eq!(q.pop_timeout(Duration::from_millis(1)), Some(99));
+        assert_eq!(q.pop_timeout(Duration::from_millis(1)), Some(1));
+        assert_eq!(q.pop_timeout(Duration::from_millis(1)), Some(2));
+    }
+
+    #[test]
+    fn capacity_enforced() {
+        let q = BoundedQueue::new(2);
+        q.try_push(1, Priority::Normal).unwrap();
+        q.try_push(2, Priority::Normal).unwrap();
+        assert!(matches!(q.try_push(3, Priority::Normal), Err(PushError::Full(3))));
+        assert_eq!(q.len(), 2);
+    }
+
+    #[test]
+    fn pop_timeout_on_empty() {
+        let q: BoundedQueue<i32> = BoundedQueue::new(1);
+        let t0 = Instant::now();
+        assert_eq!(q.pop_timeout(Duration::from_millis(20)), None);
+        assert!(t0.elapsed() >= Duration::from_millis(18));
+    }
+
+    #[test]
+    fn close_drains_then_none() {
+        let q = BoundedQueue::new(4);
+        q.try_push(1, Priority::Normal).unwrap();
+        q.close();
+        assert!(matches!(q.try_push(2, Priority::Normal), Err(PushError::Closed(2))));
+        assert_eq!(q.pop_timeout(Duration::from_millis(1)), Some(1));
+        assert_eq!(q.pop_timeout(Duration::from_millis(1)), None);
+    }
+
+    #[test]
+    fn drain_matching_takes_prefix_only() {
+        let q = BoundedQueue::new(10);
+        for v in [2, 4, 5, 6] {
+            q.try_push(v, Priority::Normal).unwrap();
+        }
+        // Front run of evens is [2, 4]; 5 blocks the drain even though 6
+        // matches (FIFO preservation).
+        let got = q.drain_matching(10, |v| v % 2 == 0);
+        assert_eq!(got, vec![2, 4]);
+        assert_eq!(q.len(), 2);
+    }
+
+    #[test]
+    fn drain_matching_respects_limit() {
+        let q = BoundedQueue::new(10);
+        for v in 0..6 {
+            q.try_push(v, Priority::Normal).unwrap();
+        }
+        let got = q.drain_matching(3, |_| true);
+        assert_eq!(got.len(), 3);
+    }
+
+    #[test]
+    fn blocking_push_unblocks_on_pop() {
+        let q = Arc::new(BoundedQueue::new(1));
+        q.try_push(1, Priority::Normal).unwrap();
+        let q2 = q.clone();
+        let h = std::thread::spawn(move || {
+            q2.push_timeout(2, Priority::Normal, Duration::from_secs(2))
+        });
+        std::thread::sleep(Duration::from_millis(20));
+        assert_eq!(q.pop_timeout(Duration::from_millis(100)), Some(1));
+        assert!(h.join().unwrap().is_ok());
+        assert_eq!(q.pop_timeout(Duration::from_millis(100)), Some(2));
+    }
+
+    #[test]
+    fn concurrent_producers_consumers_conserve_items() {
+        let q = Arc::new(BoundedQueue::new(8));
+        let producers: Vec<_> = (0..4)
+            .map(|p| {
+                let q = q.clone();
+                std::thread::spawn(move || {
+                    for i in 0..50 {
+                        q.push_timeout(p * 1000 + i, Priority::Normal, Duration::from_secs(5))
+                            .unwrap();
+                    }
+                })
+            })
+            .collect();
+        let consumers: Vec<_> = (0..2)
+            .map(|_| {
+                let q = q.clone();
+                std::thread::spawn(move || {
+                    let mut got = vec![];
+                    while let Some(v) = q.pop_timeout(Duration::from_millis(300)) {
+                        got.push(v);
+                    }
+                    got
+                })
+            })
+            .collect();
+        for p in producers {
+            p.join().unwrap();
+        }
+        let mut all: Vec<i32> = consumers.into_iter().flat_map(|c| c.join().unwrap()).collect();
+        all.sort_unstable();
+        let mut want: Vec<i32> =
+            (0..4).flat_map(|p| (0..50).map(move |i| p * 1000 + i)).collect();
+        want.sort_unstable();
+        assert_eq!(all, want);
+    }
+}

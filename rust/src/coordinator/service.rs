@@ -1,0 +1,385 @@
+//! The recovery service: router + worker pool + metrics.
+
+use super::job::{JobId, JobOutcome, JobSpec, JobState, JobStore};
+use super::queue::{BoundedQueue, Priority, PushError};
+use crate::algorithms::niht::{solve, DenseKernel};
+use crate::algorithms::qniht::{QuantKernel, RequantMode};
+use crate::algorithms::SolveOptions;
+use crate::config::{EngineKind, ServiceConfig};
+use crate::runtime::{Runtime, XlaDenseKernel, XlaQuantKernel};
+use anyhow::{anyhow, Result};
+use std::path::PathBuf;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Arc;
+use std::time::Duration;
+
+/// Atomic counters exported by the service.
+#[derive(Debug, Default)]
+pub struct ServiceMetrics {
+    pub submitted: AtomicU64,
+    pub rejected: AtomicU64,
+    pub completed: AtomicU64,
+    pub failed: AtomicU64,
+    pub batches: AtomicU64,
+    /// Sum of batch sizes (mean batch size = batched_jobs / batches).
+    pub batched_jobs: AtomicU64,
+    /// Total solve wall time, microseconds.
+    pub solve_us: AtomicU64,
+}
+
+impl ServiceMetrics {
+    pub fn snapshot(&self) -> String {
+        format!(
+            "submitted={} rejected={} completed={} failed={} batches={} mean_batch={:.2} solve_ms={}",
+            self.submitted.load(Ordering::Relaxed),
+            self.rejected.load(Ordering::Relaxed),
+            self.completed.load(Ordering::Relaxed),
+            self.failed.load(Ordering::Relaxed),
+            self.batches.load(Ordering::Relaxed),
+            self.batched_jobs.load(Ordering::Relaxed) as f64
+                / self.batches.load(Ordering::Relaxed).max(1) as f64,
+            self.solve_us.load(Ordering::Relaxed) / 1000,
+        )
+    }
+}
+
+/// Handle to a running service.
+pub struct RecoveryService {
+    queue: Arc<BoundedQueue<(JobId, JobSpec)>>,
+    store: Arc<JobStore>,
+    metrics: Arc<ServiceMetrics>,
+    workers: Vec<std::thread::JoinHandle<()>>,
+    next_id: AtomicU64,
+    solver: SolveOptions,
+}
+
+impl RecoveryService {
+    /// Start the worker pool.
+    pub fn start(cfg: ServiceConfig, solver: SolveOptions, artifact_dir: PathBuf) -> Self {
+        let queue = Arc::new(BoundedQueue::new(cfg.queue_capacity));
+        let store = Arc::new(JobStore::new());
+        let metrics = Arc::new(ServiceMetrics::default());
+        let workers = (0..cfg.workers)
+            .map(|w| {
+                let queue = queue.clone();
+                let store = store.clone();
+                let metrics = metrics.clone();
+                let solver = solver.clone();
+                let artifact_dir = artifact_dir.clone();
+                std::thread::Builder::new()
+                    .name(format!("lpcs-worker-{w}"))
+                    .spawn(move || worker_loop(cfg, queue, store, metrics, solver, artifact_dir))
+                    .expect("spawn worker")
+            })
+            .collect();
+        Self { queue, store, metrics, workers, next_id: AtomicU64::new(1), solver }
+    }
+
+    pub fn solver_options(&self) -> &SolveOptions {
+        &self.solver
+    }
+
+    /// Submit a job; `Err` is the backpressure signal (queue full).
+    pub fn submit(&self, spec: JobSpec) -> Result<JobId> {
+        self.submit_prio(spec, Priority::Normal)
+    }
+
+    pub fn submit_prio(&self, spec: JobSpec, prio: Priority) -> Result<JobId> {
+        anyhow::ensure!(spec.y.len() == spec.problem.phi.rows, "y length mismatch");
+        let id = self.next_id.fetch_add(1, Ordering::Relaxed);
+        self.store.insert_queued(id);
+        self.metrics.submitted.fetch_add(1, Ordering::Relaxed);
+        match self.queue.try_push((id, spec), prio) {
+            Ok(()) => Ok(id),
+            Err(PushError::Full(_)) => {
+                self.metrics.rejected.fetch_add(1, Ordering::Relaxed);
+                self.store.fail(id, "rejected: queue full (backpressure)".into());
+                Err(anyhow!("queue full"))
+            }
+            Err(PushError::Closed(_)) => {
+                self.store.fail(id, "rejected: service shutting down".into());
+                Err(anyhow!("service closed"))
+            }
+        }
+    }
+
+    /// Block until a job finishes.
+    pub fn wait(&self, id: JobId, timeout: Duration) -> Option<JobOutcome> {
+        self.store.wait(id, timeout)
+    }
+
+    pub fn queue_depth(&self) -> usize {
+        self.queue.len()
+    }
+
+    pub fn metrics(&self) -> &ServiceMetrics {
+        &self.metrics
+    }
+
+    /// Drain and stop; joins all workers.
+    pub fn shutdown(self) {
+        self.queue.close();
+        for w in self.workers {
+            w.join().expect("worker panicked");
+        }
+    }
+}
+
+fn worker_loop(
+    cfg: ServiceConfig,
+    queue: Arc<BoundedQueue<(JobId, JobSpec)>>,
+    store: Arc<JobStore>,
+    metrics: Arc<ServiceMetrics>,
+    solver: SolveOptions,
+    artifact_dir: PathBuf,
+) {
+    // PJRT handles are not Send: the runtime lives and dies in this thread.
+    let mut xla_rt: Option<Runtime> = None;
+    loop {
+        let Some((lead_id, lead_spec)) = queue.pop_timeout(Duration::from_millis(50)) else {
+            if queue.is_closed() {
+                return;
+            }
+            continue;
+        };
+        // Form a batch: drain compatible jobs from the queue front.
+        let key = lead_spec.batch_key();
+        let mut batch = vec![(lead_id, lead_spec)];
+        if cfg.max_batch > 1 {
+            // Small wait lets closely-spaced submissions coalesce.
+            if queue.is_empty() && cfg.max_wait_ms > 0 {
+                std::thread::sleep(Duration::from_millis(cfg.max_wait_ms));
+            }
+            batch.extend(queue.drain_matching(cfg.max_batch - 1, |(_, s)| s.batch_key() == key));
+        }
+        metrics.batches.fetch_add(1, Ordering::Relaxed);
+        metrics.batched_jobs.fetch_add(batch.len() as u64, Ordering::Relaxed);
+
+        let t0 = std::time::Instant::now();
+        for (id, spec) in batch {
+            store.transition(id, JobState::Running);
+            let result = run_job(&spec, &solver, &artifact_dir, &mut xla_rt);
+            // Count before completing: `wait` returns as soon as the store
+            // transitions, so the counter must already be visible then.
+            match result {
+                Ok(res) => {
+                    metrics.completed.fetch_add(1, Ordering::Relaxed);
+                    store.complete(id, res);
+                }
+                Err(e) => {
+                    metrics.failed.fetch_add(1, Ordering::Relaxed);
+                    store.fail(id, format!("{e:#}"));
+                }
+            }
+        }
+        metrics
+            .solve_us
+            .fetch_add(t0.elapsed().as_micros() as u64, Ordering::Relaxed);
+    }
+}
+
+fn run_job(
+    spec: &JobSpec,
+    solver: &SolveOptions,
+    artifact_dir: &std::path::Path,
+    xla_rt: &mut Option<Runtime>,
+) -> Result<crate::algorithms::SolveResult> {
+    let phi = &spec.problem.phi;
+    match spec.engine {
+        EngineKind::NativeDense => {
+            let mut k = DenseKernel::new(phi, &spec.y);
+            Ok(solve(&mut k, spec.s, solver))
+        }
+        EngineKind::NativeQuant => {
+            let mut k = QuantKernel::new(
+                phi,
+                &spec.y,
+                spec.bits_phi,
+                spec.bits_y,
+                RequantMode::Fixed,
+                spec.seed,
+            );
+            Ok(solve(&mut k, spec.s, solver))
+        }
+        EngineKind::XlaQuant => {
+            let tag = spec
+                .problem
+                .shape_tag
+                .as_deref()
+                .ok_or_else(|| anyhow!("XLA engine requires a shape tag"))?;
+            if xla_rt.is_none() {
+                *xla_rt = Some(Runtime::new(artifact_dir)?);
+            }
+            let rt = xla_rt.as_mut().unwrap();
+            let mut k = XlaQuantKernel::with_runtime(
+                rt,
+                tag,
+                phi,
+                &spec.y,
+                spec.bits_phi,
+                spec.bits_y,
+                spec.seed,
+            )?;
+            anyhow::ensure!(k.artifact_s() == spec.s, "artifact s mismatch");
+            Ok(solve(&mut k, spec.s, solver))
+        }
+        EngineKind::XlaDense => {
+            let tag = spec
+                .problem
+                .shape_tag
+                .as_deref()
+                .ok_or_else(|| anyhow!("XLA engine requires a shape tag"))?;
+            if xla_rt.is_none() {
+                *xla_rt = Some(Runtime::new(artifact_dir)?);
+            }
+            let rt = xla_rt.as_mut().unwrap();
+            let mut k = XlaDenseKernel::with_runtime(rt, tag, phi, &spec.y)?;
+            anyhow::ensure!(k.artifact_s() == spec.s, "artifact s mismatch");
+            Ok(solve(&mut k, spec.s, solver))
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::job::ProblemHandle;
+    use crate::linalg::Mat;
+    use crate::rng::XorShift128Plus;
+
+    fn planted(m: usize, n: usize, s: usize, seed: u64) -> (Arc<Mat>, Vec<f32>, Vec<f32>) {
+        let mut rng = XorShift128Plus::new(seed);
+        let phi = Mat::from_fn(m, n, |_, _| rng.gaussian_f32() / (m as f32).sqrt());
+        let mut x = vec![0.0f32; n];
+        for i in rng.choose_k(n, s) {
+            x[i] = 2.0 * rng.gaussian_f32().signum();
+        }
+        let y = phi.matvec(&x);
+        (Arc::new(phi), y, x)
+    }
+
+    fn svc(workers: usize) -> RecoveryService {
+        RecoveryService::start(
+            ServiceConfig { workers, queue_capacity: 64, max_batch: 4, max_wait_ms: 0 },
+            SolveOptions::default(),
+            PathBuf::from("artifacts"),
+        )
+    }
+
+    #[test]
+    fn end_to_end_single_job() {
+        let service = svc(1);
+        let (phi, y, x_true) = planted(64, 128, 4, 1);
+        let id = service
+            .submit(JobSpec {
+                problem: ProblemHandle::new(phi),
+                y,
+                s: 4,
+                bits_phi: 8,
+                bits_y: 8,
+                engine: EngineKind::NativeQuant,
+                seed: 1,
+            })
+            .unwrap();
+        let out = service.wait(id, Duration::from_secs(30)).expect("finishes");
+        assert_eq!(out.state, JobState::Done);
+        let x = out.result.unwrap().x;
+        let err = crate::metrics::recovery_error(&x, &x_true);
+        assert!(err < 0.05, "err={err}");
+        service.shutdown();
+    }
+
+    #[test]
+    fn many_jobs_share_matrix_and_batch() {
+        let service = svc(2);
+        let (phi, _, _) = planted(48, 96, 3, 2);
+        let mut rng = XorShift128Plus::new(9);
+        let ids: Vec<_> = (0..12)
+            .map(|k| {
+                let mut x = vec![0.0f32; 96];
+                for i in rng.choose_k(96, 3) {
+                    x[i] = 1.5;
+                }
+                let y = phi.matvec(&x);
+                service
+                    .submit(JobSpec {
+                        problem: ProblemHandle::new(phi.clone()),
+                        y,
+                        s: 3,
+                        bits_phi: 8,
+                        bits_y: 8,
+                        engine: EngineKind::NativeQuant,
+                        seed: k,
+                    })
+                    .unwrap()
+            })
+            .collect();
+        for id in ids {
+            let out = service.wait(id, Duration::from_secs(60)).expect("finishes");
+            assert_eq!(out.state, JobState::Done, "{:?}", out.error);
+        }
+        let m = service.metrics();
+        assert_eq!(m.completed.load(Ordering::Relaxed), 12);
+        service.shutdown();
+    }
+
+    #[test]
+    fn backpressure_rejects_when_full() {
+        // Tiny queue + zero workers processing slowly: fill it up.
+        let service = RecoveryService::start(
+            ServiceConfig { workers: 1, queue_capacity: 2, max_batch: 1, max_wait_ms: 0 },
+            SolveOptions { max_iters: 2000, ..Default::default() },
+            PathBuf::from("artifacts"),
+        );
+        let (phi, y, _) = planted(128, 512, 8, 3);
+        let spec = JobSpec {
+            problem: ProblemHandle::new(phi),
+            y,
+            s: 8,
+            bits_phi: 8,
+            bits_y: 8,
+            engine: EngineKind::NativeDense,
+            seed: 0,
+        };
+        let mut rejected = 0;
+        let mut ids = vec![];
+        for _ in 0..40 {
+            match service.submit(spec.clone()) {
+                Ok(id) => ids.push(id),
+                Err(_) => rejected += 1,
+            }
+        }
+        assert!(rejected > 0, "queue of capacity 2 must reject a 40-job burst");
+        for id in ids {
+            service.wait(id, Duration::from_secs(120)).expect("accepted jobs finish");
+        }
+        service.shutdown();
+    }
+
+    #[test]
+    fn dense_engine_works() {
+        let service = svc(1);
+        let (phi, y, x_true) = planted(64, 128, 4, 4);
+        let id = service
+            .submit(JobSpec {
+                problem: ProblemHandle::new(phi),
+                y,
+                s: 4,
+                bits_phi: 8,
+                bits_y: 8,
+                engine: EngineKind::NativeDense,
+                seed: 0,
+            })
+            .unwrap();
+        let out = service.wait(id, Duration::from_secs(30)).unwrap();
+        let err = crate::metrics::recovery_error(&out.result.unwrap().x, &x_true);
+        assert!(err < 1e-2);
+        service.shutdown();
+    }
+
+    #[test]
+    fn shutdown_joins_cleanly() {
+        let service = svc(3);
+        service.shutdown();
+    }
+}

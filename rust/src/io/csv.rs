@@ -1,0 +1,129 @@
+//! CSV emission for the figure-regeneration harness (results/ *.csv).
+
+use std::fmt::Write as _;
+use std::io::Write as _;
+use std::path::Path;
+
+/// A simple CSV table: header + f64 rows, with optional string columns.
+#[derive(Debug, Clone)]
+pub struct CsvTable {
+    pub header: Vec<String>,
+    pub rows: Vec<Vec<String>>,
+}
+
+impl CsvTable {
+    pub fn new(header: &[&str]) -> Self {
+        Self { header: header.iter().map(|s| s.to_string()).collect(), rows: vec![] }
+    }
+
+    pub fn row(&mut self, cells: &[String]) {
+        assert_eq!(cells.len(), self.header.len(), "row arity mismatch");
+        self.rows.push(cells.to_vec());
+    }
+
+    /// Convenience: all-numeric row.
+    pub fn row_f64(&mut self, cells: &[f64]) {
+        self.row(&cells.iter().map(|v| format_num(*v)).collect::<Vec<_>>());
+    }
+
+    /// Mixed row: leading label + numbers.
+    pub fn row_labeled(&mut self, label: &str, cells: &[f64]) {
+        let mut v = vec![label.to_string()];
+        v.extend(cells.iter().map(|c| format_num(*c)));
+        self.row(&v);
+    }
+
+    pub fn to_string(&self) -> String {
+        let mut out = String::new();
+        writeln!(out, "{}", self.header.join(",")).unwrap();
+        for r in &self.rows {
+            writeln!(out, "{}", r.join(",")).unwrap();
+        }
+        out
+    }
+
+    pub fn write_to(&self, path: &Path) -> std::io::Result<()> {
+        if let Some(dir) = path.parent() {
+            std::fs::create_dir_all(dir)?;
+        }
+        let mut f = std::fs::File::create(path)?;
+        f.write_all(self.to_string().as_bytes())
+    }
+
+    /// Render as an aligned markdown-ish table for stdout.
+    pub fn pretty(&self) -> String {
+        let ncol = self.header.len();
+        let mut widths: Vec<usize> = self.header.iter().map(|h| h.len()).collect();
+        for r in &self.rows {
+            for (i, c) in r.iter().enumerate() {
+                widths[i] = widths[i].max(c.len());
+            }
+        }
+        let mut out = String::new();
+        let fmt_row = |cells: &[String], widths: &[usize]| -> String {
+            cells
+                .iter()
+                .enumerate()
+                .map(|(i, c)| format!("{:>w$}", c, w = widths[i]))
+                .collect::<Vec<_>>()
+                .join("  ")
+        };
+        writeln!(out, "{}", fmt_row(&self.header, &widths)).unwrap();
+        writeln!(out, "{}", "-".repeat(widths.iter().sum::<usize>() + 2 * (ncol - 1))).unwrap();
+        for r in &self.rows {
+            writeln!(out, "{}", fmt_row(r, &widths)).unwrap();
+        }
+        out
+    }
+}
+
+fn format_num(v: f64) -> String {
+    if v == v.trunc() && v.abs() < 1e12 {
+        format!("{}", v as i64)
+    } else {
+        format!("{v:.6}")
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn header_and_rows() {
+        let mut t = CsvTable::new(&["a", "b"]);
+        t.row_f64(&[1.0, 2.5]);
+        t.row_labeled("x", &[3.0]);
+        let s = t.to_string();
+        assert!(s.starts_with("a,b\n"));
+        assert!(s.contains("1,2.500000"));
+        assert!(s.contains("x,3"));
+    }
+
+    #[test]
+    #[should_panic]
+    fn arity_mismatch_panics() {
+        let mut t = CsvTable::new(&["a", "b"]);
+        t.row_f64(&[1.0]);
+    }
+
+    #[test]
+    fn writes_file() {
+        let mut t = CsvTable::new(&["v"]);
+        t.row_f64(&[9.0]);
+        let dir = std::env::temp_dir().join("lpcs_csv_test");
+        let path = dir.join("t.csv");
+        t.write_to(&path).unwrap();
+        let read = std::fs::read_to_string(&path).unwrap();
+        assert_eq!(read, "v\n9\n");
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn pretty_aligns() {
+        let mut t = CsvTable::new(&["name", "val"]);
+        t.row_labeled("long-name", &[1.0]);
+        let p = t.pretty();
+        assert!(p.contains("long-name"));
+    }
+}

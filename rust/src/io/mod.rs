@@ -1,0 +1,6 @@
+//! I/O substrate (S16): minimal JSON parser (the build environment vendors
+//! no serde), CSV emission, and PGM image dumps for sky maps.
+
+pub mod csv;
+pub mod json;
+pub mod pgm;

@@ -1,0 +1,66 @@
+//! PGM (portable graymap) image dumps — the Fig 1 / Fig 9 sky maps.
+//!
+//! Binary P5, 8-bit, with linear scaling from [min, max] of the data (or a
+//! caller-fixed range so panels of a figure share a colour scale).
+
+use std::io::Write as _;
+use std::path::Path;
+
+/// Write an r×r (row-major) image to `path` as binary PGM.
+/// `range` fixes the scaling; `None` auto-scales to the data extremes.
+pub fn write_pgm(
+    path: &Path,
+    data: &[f32],
+    width: usize,
+    height: usize,
+    range: Option<(f32, f32)>,
+) -> std::io::Result<()> {
+    assert_eq!(data.len(), width * height);
+    let (lo, hi) = range.unwrap_or_else(|| {
+        let lo = data.iter().cloned().fold(f32::MAX, f32::min);
+        let hi = data.iter().cloned().fold(f32::MIN, f32::max);
+        (lo, hi)
+    });
+    let span = (hi - lo).max(f32::MIN_POSITIVE);
+    if let Some(dir) = path.parent() {
+        std::fs::create_dir_all(dir)?;
+    }
+    let mut f = std::fs::File::create(path)?;
+    write!(f, "P5\n{width} {height}\n255\n")?;
+    let bytes: Vec<u8> = data
+        .iter()
+        .map(|&v| (((v - lo) / span).clamp(0.0, 1.0) * 255.0) as u8)
+        .collect();
+    f.write_all(&bytes)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn writes_valid_header_and_size() {
+        let dir = std::env::temp_dir().join("lpcs_pgm_test");
+        let path = dir.join("t.pgm");
+        let data = vec![0.0f32, 0.5, 1.0, 0.25];
+        write_pgm(&path, &data, 2, 2, None).unwrap();
+        let bytes = std::fs::read(&path).unwrap();
+        assert!(bytes.starts_with(b"P5\n2 2\n255\n"));
+        assert_eq!(bytes.len(), 11 + 4);
+        // Max value maps to 255, min to 0.
+        assert_eq!(bytes[11], 0);
+        assert_eq!(bytes[13], 255);
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn fixed_range_clamps() {
+        let dir = std::env::temp_dir().join("lpcs_pgm_test2");
+        let path = dir.join("t.pgm");
+        write_pgm(&path, &[-1.0, 2.0], 2, 1, Some((0.0, 1.0))).unwrap();
+        let bytes = std::fs::read(&path).unwrap();
+        let px = &bytes[bytes.len() - 2..];
+        assert_eq!(px, &[0u8, 255]);
+        std::fs::remove_dir_all(&dir).ok();
+    }
+}

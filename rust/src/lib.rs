@@ -1,0 +1,39 @@
+//! # LPCS — Low-Precision Compressive Sensing
+//!
+//! Production-grade reproduction of *"Compressive Sensing with Low Precision
+//! Data Representation: Theory and Applications"* (Gürel et al.).
+//!
+//! The crate implements the paper's quantized Normalized Iterative Hard
+//! Thresholding (QNIHT) solver together with every substrate the paper's
+//! evaluation depends on: stochastic quantization with bit-packed storage,
+//! low-precision matvec kernels, a radio-interferometry simulator (LOFAR-like
+//! station, measurement-matrix formation, visibility synthesis), the full
+//! baseline suite (NIHT, IHT, CoSaMP, FISTA, CLEAN), an RIP toolkit, an FPGA
+//! bandwidth-model simulator, a PJRT runtime that executes the JAX/Pallas
+//! AOT artifacts, and an async recovery service.
+//!
+//! Layers (see DESIGN.md):
+//! * L3 (this crate): coordination, control flow of Algorithm 1, serving.
+//! * L2/L1 (python/compile): JAX step graphs + Pallas kernels, AOT-lowered
+//!   to `artifacts/*.hlo.txt`, loaded by [`runtime`].
+
+pub mod algorithms;
+pub mod benchkit;
+pub mod config;
+pub mod coordinator;
+pub mod io;
+pub mod linalg;
+pub mod lowprec;
+pub mod metrics;
+pub mod par;
+pub mod perfmodel;
+pub mod quant;
+pub mod repro;
+pub mod rip;
+pub mod rng;
+pub mod runtime;
+pub mod telescope;
+pub mod testkit;
+
+pub use linalg::Mat;
+pub use quant::{QuantizedMatrix, Quantizer};

@@ -1,0 +1,99 @@
+//! Conjugate-gradient least squares (CGNR) — used by the CoSaMP baseline's
+//! support-restricted least-squares solve and by diagnostics.
+//!
+//! Solves `min_z ‖A z − b‖₂` via CG on the normal equations
+//! `AᵀA z = Aᵀ b` without forming AᵀA.
+
+use super::{dot, Mat};
+
+/// CGNR result.
+#[derive(Debug, Clone)]
+pub struct CgResult {
+    pub z: Vec<f32>,
+    pub iterations: usize,
+    pub residual_norm: f32,
+}
+
+/// Least-squares solve `min ‖A z − b‖` (A: m×n, b: m). `tol` is relative on
+/// the normal residual ‖Aᵀ(b − Az)‖.
+pub fn lsqr_cg(a: &Mat, b: &[f32], max_iter: usize, tol: f32) -> CgResult {
+    assert_eq!(b.len(), a.rows);
+    let n = a.cols;
+    let mut z = vec![0.0f32; n];
+    // r = Aᵀb − AᵀA z  (z = 0 initially)
+    let mut r = a.matvec_t(b);
+    let mut p = r.clone();
+    let mut rsq = dot(&r, &r);
+    let rsq0 = rsq.max(1e-30);
+    let mut it = 0;
+    while it < max_iter && rsq > tol * tol * rsq0 {
+        let ap = a.matvec_t(&a.matvec(&p));
+        let pap = dot(&p, &ap);
+        if pap <= 0.0 {
+            break; // numerical breakdown (A rank-deficient on this support)
+        }
+        let alpha = rsq / pap;
+        for i in 0..n {
+            z[i] += alpha * p[i];
+            r[i] -= alpha * ap[i];
+        }
+        let rsq_new = dot(&r, &r);
+        let beta = rsq_new / rsq;
+        for i in 0..n {
+            p[i] = r[i] + beta * p[i];
+        }
+        rsq = rsq_new;
+        it += 1;
+    }
+    let resid = super::sub(b, &a.matvec(&z));
+    CgResult { z, iterations: it, residual_norm: super::norm2(&resid) }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rng::XorShift128Plus;
+
+    #[test]
+    fn solves_identity() {
+        let a = Mat::identity(5);
+        let b = vec![1.0, -2.0, 3.0, 0.0, 0.5];
+        let r = lsqr_cg(&a, &b, 100, 1e-7);
+        for (zi, bi) in r.z.iter().zip(&b) {
+            assert!((zi - bi).abs() < 1e-4);
+        }
+    }
+
+    #[test]
+    fn solves_consistent_overdetermined() {
+        let mut rng = XorShift128Plus::new(1);
+        let a = Mat::from_fn(40, 10, |_, _| rng.gaussian_f32());
+        let z_true = rng.gaussian_vec(10);
+        let b = a.matvec(&z_true);
+        let r = lsqr_cg(&a, &b, 200, 1e-7);
+        for (zi, ti) in r.z.iter().zip(&z_true) {
+            assert!((zi - ti).abs() < 1e-3, "{} vs {}", zi, ti);
+        }
+        assert!(r.residual_norm < 1e-3);
+    }
+
+    #[test]
+    fn least_squares_residual_orthogonal() {
+        // At the LS optimum, Aᵀ(b − Az) ≈ 0 even for inconsistent b.
+        let mut rng = XorShift128Plus::new(2);
+        let a = Mat::from_fn(30, 8, |_, _| rng.gaussian_f32());
+        let b = rng.gaussian_vec(30);
+        let r = lsqr_cg(&a, &b, 300, 1e-7);
+        let resid = crate::linalg::sub(&b, &a.matvec(&r.z));
+        let normal = a.matvec_t(&resid);
+        assert!(crate::linalg::norm2(&normal) < 1e-2, "{normal:?}");
+    }
+
+    #[test]
+    fn zero_rhs_gives_zero() {
+        let mut rng = XorShift128Plus::new(3);
+        let a = Mat::from_fn(10, 4, |_, _| rng.gaussian_f32());
+        let r = lsqr_cg(&a, &vec![0.0; 10], 50, 1e-8);
+        assert!(r.z.iter().all(|&v| v.abs() < 1e-6));
+    }
+}

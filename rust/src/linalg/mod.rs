@@ -1,0 +1,314 @@
+//! Dense linear algebra substrate (S5): row-major f32 matrices, matvecs,
+//! norms, and extremal singular values (see [`svd`]). No external BLAS —
+//! everything the solvers and the RIP toolkit need is implemented here.
+
+pub mod cg;
+pub mod svd;
+
+use crate::par;
+
+/// Dense row-major `f32` matrix.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Mat {
+    pub rows: usize,
+    pub cols: usize,
+    pub data: Vec<f32>,
+}
+
+impl Mat {
+    pub fn zeros(rows: usize, cols: usize) -> Self {
+        Self { rows, cols, data: vec![0.0; rows * cols] }
+    }
+
+    pub fn from_vec(rows: usize, cols: usize, data: Vec<f32>) -> Self {
+        assert_eq!(data.len(), rows * cols, "shape mismatch");
+        Self { rows, cols, data }
+    }
+
+    /// Build from a generator `f(row, col)`.
+    pub fn from_fn(rows: usize, cols: usize, mut f: impl FnMut(usize, usize) -> f32) -> Self {
+        let mut data = Vec::with_capacity(rows * cols);
+        for i in 0..rows {
+            for j in 0..cols {
+                data.push(f(i, j));
+            }
+        }
+        Self { rows, cols, data }
+    }
+
+    pub fn identity(n: usize) -> Self {
+        Self::from_fn(n, n, |i, j| if i == j { 1.0 } else { 0.0 })
+    }
+
+    #[inline]
+    pub fn at(&self, i: usize, j: usize) -> f32 {
+        self.data[i * self.cols + j]
+    }
+
+    #[inline]
+    pub fn at_mut(&mut self, i: usize, j: usize) -> &mut f32 {
+        &mut self.data[i * self.cols + j]
+    }
+
+    #[inline]
+    pub fn row(&self, i: usize) -> &[f32] {
+        &self.data[i * self.cols..(i + 1) * self.cols]
+    }
+
+    /// y = A x  (parallel over rows for large matrices).
+    pub fn matvec(&self, x: &[f32]) -> Vec<f32> {
+        assert_eq!(x.len(), self.cols, "matvec dim mismatch");
+        let mut y = vec![0.0f32; self.rows];
+        let cols = self.cols;
+        let data = &self.data;
+        par::par_chunks_mut(&mut y, 64, |start, chunk| {
+            for (k, yi) in chunk.iter_mut().enumerate() {
+                let row = &data[(start + k) * cols..(start + k + 1) * cols];
+                *yi = dot(row, x);
+            }
+        });
+        y
+    }
+
+    /// y = A^T x.
+    pub fn matvec_t(&self, x: &[f32]) -> Vec<f32> {
+        assert_eq!(x.len(), self.rows, "matvec_t dim mismatch");
+        let cols = self.cols;
+        let data = &self.data;
+        let mut y = vec![0.0f32; self.cols];
+        // Accumulate row-by-row (cache friendly on row-major storage).
+        // Parallel over column blocks to avoid write conflicts.
+        par::par_chunks_mut(&mut y, 256, |start, chunk| {
+            for (i, &xi) in x.iter().enumerate() {
+                if xi == 0.0 {
+                    continue;
+                }
+                let row = &data[i * cols + start..i * cols + start + chunk.len()];
+                for (c, &r) in chunk.iter_mut().zip(row) {
+                    *c += xi * r;
+                }
+            }
+        });
+        y
+    }
+
+    /// y = A x for sparse x given as (indices, values) — the paper's
+    /// "matrix times a sparse vector" routine, cast as column scale-and-add.
+    pub fn matvec_sparse(&self, idx: &[usize], vals: &[f32]) -> Vec<f32> {
+        assert_eq!(idx.len(), vals.len());
+        let mut y = vec![0.0f32; self.rows];
+        for i in 0..self.rows {
+            let row = self.row(i);
+            let mut acc = 0.0f32;
+            for (&j, &v) in idx.iter().zip(vals) {
+                acc += row[j] * v;
+            }
+            y[i] = acc;
+        }
+        y
+    }
+
+    /// Extract the submatrix of the given columns (support set Γ).
+    pub fn take_cols(&self, cols_idx: &[usize]) -> Mat {
+        let mut out = Mat::zeros(self.rows, cols_idx.len());
+        for i in 0..self.rows {
+            let row = self.row(i);
+            for (k, &j) in cols_idx.iter().enumerate() {
+                out.data[i * cols_idx.len() + k] = row[j];
+            }
+        }
+        out
+    }
+
+    pub fn transpose(&self) -> Mat {
+        let mut out = Mat::zeros(self.cols, self.rows);
+        for i in 0..self.rows {
+            for j in 0..self.cols {
+                out.data[j * self.rows + i] = self.at(i, j);
+            }
+        }
+        out
+    }
+
+    pub fn scale(&mut self, c: f32) {
+        for v in &mut self.data {
+            *v *= c;
+        }
+    }
+
+    pub fn frobenius(&self) -> f32 {
+        norm2(&self.data)
+    }
+
+    pub fn max_abs(&self) -> f32 {
+        self.data.iter().fold(0.0f32, |a, &b| a.max(b.abs()))
+    }
+
+    /// Size in bytes at full (f32) precision — the paper's traffic metric.
+    pub fn bytes_f32(&self) -> usize {
+        self.data.len() * 4
+    }
+}
+
+/// Dot product with 16 contiguous accumulator lanes.
+///
+/// Perf note (EXPERIMENTS.md §Perf): float reduction loops cannot be
+/// reassociated by LLVM, so a scalar `sum += a[i]*b[i]` never vectorizes.
+/// A *lane array* `acc[k] += a[16i+k]*b[16i+k]` maps 1:1 onto SIMD
+/// registers (one AVX-512 or two AVX2 vectors) and turns the loop into
+/// pure FMA streams — 5–6× over the previous 4-way strided unroll.
+#[inline]
+pub fn dot(a: &[f32], b: &[f32]) -> f32 {
+    debug_assert_eq!(a.len(), b.len());
+    const LANES: usize = 16;
+    let mut acc = [0.0f32; LANES];
+    let chunks = a.len() / LANES;
+    for c in 0..chunks {
+        let i = c * LANES;
+        let (av, bv) = (&a[i..i + LANES], &b[i..i + LANES]);
+        for k in 0..LANES {
+            acc[k] += av[k] * bv[k];
+        }
+    }
+    let mut s = 0.0f32;
+    for k in 0..LANES {
+        s += acc[k];
+    }
+    for i in chunks * LANES..a.len() {
+        s += a[i] * b[i];
+    }
+    s
+}
+
+/// Euclidean norm.
+#[inline]
+pub fn norm2(v: &[f32]) -> f32 {
+    dot(v, v).sqrt()
+}
+
+/// Squared Euclidean norm.
+#[inline]
+pub fn norm2_sq(v: &[f32]) -> f32 {
+    dot(v, v)
+}
+
+/// L1 norm.
+#[inline]
+pub fn norm1(v: &[f32]) -> f32 {
+    v.iter().map(|x| x.abs()).sum()
+}
+
+/// a - b elementwise.
+pub fn sub(a: &[f32], b: &[f32]) -> Vec<f32> {
+    debug_assert_eq!(a.len(), b.len());
+    a.iter().zip(b).map(|(x, y)| x - y).collect()
+}
+
+/// a + c*b elementwise.
+pub fn axpy(a: &[f32], c: f32, b: &[f32]) -> Vec<f32> {
+    debug_assert_eq!(a.len(), b.len());
+    a.iter().zip(b).map(|(x, y)| x + c * y).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn small() -> Mat {
+        Mat::from_vec(2, 3, vec![1.0, 2.0, 3.0, 4.0, 5.0, 6.0])
+    }
+
+    #[test]
+    fn matvec_known() {
+        let a = small();
+        assert_eq!(a.matvec(&[1.0, 0.0, -1.0]), vec![-2.0, -2.0]);
+    }
+
+    #[test]
+    fn matvec_t_known() {
+        let a = small();
+        assert_eq!(a.matvec_t(&[1.0, 1.0]), vec![5.0, 7.0, 9.0]);
+    }
+
+    #[test]
+    fn matvec_t_matches_explicit_transpose() {
+        let mut rng = crate::rng::XorShift128Plus::new(3);
+        let a = Mat::from_fn(17, 29, |_, _| rng.gaussian_f32());
+        let x = rng.gaussian_vec(17);
+        let got = a.matvec_t(&x);
+        let want = a.transpose().matvec(&x);
+        for (g, w) in got.iter().zip(&want) {
+            assert!((g - w).abs() < 1e-4);
+        }
+    }
+
+    #[test]
+    fn matvec_sparse_matches_dense() {
+        let mut rng = crate::rng::XorShift128Plus::new(5);
+        let a = Mat::from_fn(13, 31, |_, _| rng.gaussian_f32());
+        let mut x = vec![0.0f32; 31];
+        x[4] = 1.5;
+        x[20] = -0.5;
+        let dense = a.matvec(&x);
+        let sparse = a.matvec_sparse(&[4, 20], &[1.5, -0.5]);
+        for (d, s) in dense.iter().zip(&sparse) {
+            assert!((d - s).abs() < 1e-5);
+        }
+    }
+
+    #[test]
+    fn take_cols_selects() {
+        let a = small();
+        let b = a.take_cols(&[2, 0]);
+        assert_eq!(b.data, vec![3.0, 1.0, 6.0, 4.0]);
+    }
+
+    #[test]
+    fn transpose_involution() {
+        let a = small();
+        assert_eq!(a.transpose().transpose(), a);
+    }
+
+    #[test]
+    fn identity_matvec_is_id() {
+        let i = Mat::identity(5);
+        let x = vec![1.0, -2.0, 3.0, 0.5, 0.0];
+        assert_eq!(i.matvec(&x), x);
+    }
+
+    #[test]
+    fn dot_matches_naive() {
+        let mut rng = crate::rng::XorShift128Plus::new(7);
+        for n in [0, 1, 3, 4, 7, 64, 129] {
+            let a = rng.gaussian_vec(n);
+            let b = rng.gaussian_vec(n);
+            let naive: f32 = a.iter().zip(&b).map(|(x, y)| x * y).sum();
+            assert!((dot(&a, &b) - naive).abs() < 1e-3, "n={n}");
+        }
+    }
+
+    #[test]
+    fn norms() {
+        assert!((norm2(&[3.0, 4.0]) - 5.0).abs() < 1e-6);
+        assert!((norm1(&[-3.0, 4.0]) - 7.0).abs() < 1e-6);
+        assert!((norm2_sq(&[3.0, 4.0]) - 25.0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn frobenius_known() {
+        let a = Mat::from_vec(2, 2, vec![1.0, 2.0, 2.0, 4.0]);
+        assert!((a.frobenius() - 5.0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn axpy_sub() {
+        assert_eq!(axpy(&[1.0, 2.0], 2.0, &[3.0, -1.0]), vec![7.0, 0.0]);
+        assert_eq!(sub(&[1.0, 2.0], &[3.0, -1.0]), vec![-2.0, 3.0]);
+    }
+
+    #[test]
+    #[should_panic]
+    fn matvec_dim_mismatch_panics() {
+        small().matvec(&[1.0, 2.0]);
+    }
+}

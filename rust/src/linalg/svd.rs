@@ -1,0 +1,143 @@
+//! Extremal singular values via power iteration (no external LAPACK).
+//!
+//! The RIP toolkit (Figs 3, 7, 8) needs σ_max and σ_min of Φ and of column
+//! submatrices Φ_Γ. Both are obtained from power iterations on the Gram
+//! operator `v -> A^T (A v)`:
+//!   * σ_max² = λ_max(AᵀA): plain power iteration.
+//!   * σ_min² = λ_min(AᵀA): power iteration on the spectrally shifted
+//!     operator `c·I − AᵀA` with `c ≥ λ_max` (deflation-free, robust for the
+//!     well-separated spectra we probe).
+
+use super::Mat;
+use crate::rng::XorShift128Plus;
+
+/// Result of an extremal singular-value probe.
+#[derive(Debug, Clone, Copy)]
+pub struct SingularExtremes {
+    pub sigma_max: f32,
+    pub sigma_min: f32,
+    pub iterations: usize,
+}
+
+fn normalize(v: &mut [f32]) -> f32 {
+    let n = super::norm2(v);
+    if n > 0.0 {
+        for x in v.iter_mut() {
+            *x /= n;
+        }
+    }
+    n
+}
+
+/// λ_max of the PSD operator `op` (size n), by power iteration.
+fn lambda_max(op: &dyn Fn(&[f32]) -> Vec<f32>, n: usize, tol: f32, max_iter: usize, seed: u64) -> (f32, usize) {
+    let mut rng = XorShift128Plus::new(seed);
+    let mut v = rng.gaussian_vec(n);
+    normalize(&mut v);
+    let mut lambda = 0.0f32;
+    for it in 0..max_iter {
+        let mut w = op(&v);
+        let new_lambda = super::dot(&v, &w);
+        let growth = normalize(&mut w);
+        if growth == 0.0 {
+            return (0.0, it);
+        }
+        v = w;
+        if it > 2 && (new_lambda - lambda).abs() <= tol * new_lambda.abs().max(1e-12) {
+            return (new_lambda.max(0.0), it);
+        }
+        lambda = new_lambda;
+    }
+    (lambda.max(0.0), max_iter)
+}
+
+/// Extremal singular values of `a` (tolerance is relative on λ).
+pub fn singular_extremes(a: &Mat, tol: f32, max_iter: usize, seed: u64) -> SingularExtremes {
+    let n = a.cols;
+    let gram = |v: &[f32]| a.matvec_t(&a.matvec(v));
+    let (lmax, it1) = lambda_max(&gram, n, tol, max_iter, seed);
+    // Shifted operator: c I - AᵀA with c slightly above λ_max.
+    let c = lmax * 1.0001 + 1e-12;
+    let shifted = |v: &[f32]| {
+        let g = gram(v);
+        v.iter().zip(&g).map(|(x, y)| c * x - y).collect::<Vec<f32>>()
+    };
+    let (lshift, it2) = lambda_max(&shifted, n, tol, max_iter, seed ^ 0xDEADBEEF);
+    let lmin = (c - lshift).max(0.0);
+    SingularExtremes {
+        sigma_max: lmax.sqrt(),
+        sigma_min: lmin.sqrt(),
+        iterations: it1 + it2,
+    }
+}
+
+/// Spectral norm ‖A‖₂ = σ_max(A).
+pub fn spectral_norm(a: &Mat, tol: f32, max_iter: usize, seed: u64) -> f32 {
+    singular_extremes(a, tol, max_iter, seed).sigma_max
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn diagonal_matrix_exact() {
+        // diag(3, 2, 1) has σ_max=3, σ_min=1.
+        let a = Mat::from_fn(3, 3, |i, j| {
+            if i == j {
+                (3 - i) as f32
+            } else {
+                0.0
+            }
+        });
+        let se = singular_extremes(&a, 1e-7, 2000, 1);
+        assert!((se.sigma_max - 3.0).abs() < 1e-3, "{se:?}");
+        assert!((se.sigma_min - 1.0).abs() < 1e-2, "{se:?}");
+    }
+
+    #[test]
+    fn identity_all_ones() {
+        let a = Mat::identity(8);
+        let se = singular_extremes(&a, 1e-7, 2000, 2);
+        assert!((se.sigma_max - 1.0).abs() < 1e-3);
+        assert!((se.sigma_min - 1.0).abs() < 1e-3);
+    }
+
+    #[test]
+    fn rank_deficient_sigma_min_zero() {
+        // Two identical columns: σ_min = 0.
+        let a = Mat::from_vec(2, 2, vec![1.0, 1.0, 2.0, 2.0]);
+        let se = singular_extremes(&a, 1e-7, 4000, 3);
+        assert!(se.sigma_min < 1e-2, "{se:?}");
+    }
+
+    #[test]
+    fn scaling_scales_sigma() {
+        let mut rng = crate::rng::XorShift128Plus::new(4);
+        let a = Mat::from_fn(20, 10, |_, _| rng.gaussian_f32());
+        let mut a2 = a.clone();
+        a2.scale(3.0);
+        let s1 = singular_extremes(&a, 1e-7, 4000, 5);
+        let s2 = singular_extremes(&a2, 1e-7, 4000, 5);
+        assert!((s2.sigma_max / s1.sigma_max - 3.0).abs() < 0.01);
+        assert!((s2.sigma_min / s1.sigma_min - 3.0).abs() < 0.05);
+    }
+
+    #[test]
+    fn gaussian_tall_matrix_marchenko_pastur_ballpark() {
+        // For an m×n Gaussian matrix /sqrt(m), σ ≈ 1 ± sqrt(n/m).
+        let (m, n) = (400, 100);
+        let mut rng = crate::rng::XorShift128Plus::new(6);
+        let a = Mat::from_fn(m, n, |_, _| rng.gaussian_f32() / (m as f32).sqrt());
+        let se = singular_extremes(&a, 1e-6, 4000, 7);
+        let edge = (n as f32 / m as f32).sqrt();
+        assert!((se.sigma_max - (1.0 + edge)).abs() < 0.12, "{se:?}");
+        assert!((se.sigma_min - (1.0 - edge)).abs() < 0.12, "{se:?}");
+    }
+
+    #[test]
+    fn spectral_norm_consistent() {
+        let a = Mat::from_vec(2, 2, vec![0.0, 2.0, 0.0, 0.0]);
+        assert!((spectral_norm(&a, 1e-7, 1000, 8) - 2.0).abs() < 1e-3);
+    }
+}

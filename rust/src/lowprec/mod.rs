@@ -1,0 +1,523 @@
+//! Low-precision matvec kernels (S4) — the rust analog of the paper's AVX2
+//! routines (§9).
+//!
+//! Two hot routines dominate NIHT (paper §9):
+//!   1. the dense matvec `Φᵀr` (gradient), cast as per-row dot products over
+//!      the packed matrix, and
+//!   2. `Φ · x_sparse` (residual update), cast as a dense scale-and-add over
+//!      the columns in the support.
+//!
+//! Kernels come in three flavours:
+//!   * `qmatvec*` — int8 codes (unpacked), f32 accumulate: the general path.
+//!   * `packed_matvec` — streams the b-bit packed words and dequantizes
+//!     in-register: 4–16× less memory traffic than f32 (the Fig 5 lever).
+//!   * `packed_matvec_q8` — both operands quantized: pure integer dots
+//!     (the paper's "casts its computation in terms of dot-products").
+
+use crate::par;
+use crate::quant::packed::PackedMatrix;
+
+/// y = mult · (codes @ x); codes row-major m×n int8.
+pub fn qmatvec(codes: &[i8], m: usize, n: usize, mult: f32, x: &[f32]) -> Vec<f32> {
+    assert_eq!(codes.len(), m * n);
+    assert_eq!(x.len(), n);
+    let mut y = vec![0.0f32; m];
+    par::par_chunks_mut(&mut y, 32, |start, chunk| {
+        for (k, yi) in chunk.iter_mut().enumerate() {
+            let row = &codes[(start + k) * n..(start + k + 1) * n];
+            *yi = mult * dot_i8_f32(row, x);
+        }
+    });
+    y
+}
+
+/// y = mult · (codesᵀ @ v); codes row-major m×n int8, v length m.
+pub fn qmatvec_t(codes: &[i8], m: usize, n: usize, mult: f32, v: &[f32]) -> Vec<f32> {
+    assert_eq!(codes.len(), m * n);
+    assert_eq!(v.len(), m);
+    let mut y = vec![0.0f32; n];
+    par::par_chunks_mut(&mut y, 256, |start, chunk| {
+        for (i, &vi) in v.iter().enumerate() {
+            if vi == 0.0 {
+                continue;
+            }
+            let row = &codes[i * n + start..i * n + start + chunk.len()];
+            for (c, &r) in chunk.iter_mut().zip(row) {
+                *c += vi * r as f32;
+            }
+        }
+    });
+    for c in &mut y {
+        *c *= mult;
+    }
+    y
+}
+
+/// y = mult · Φ x for sparse x, using the TRANSPOSED code buffer
+/// (`codes_t` is n×m row-major, i.e. columns of Φ are contiguous rows):
+/// the paper's dense scale-and-add routine.
+pub fn qmatvec_sparse(
+    codes_t: &[i8],
+    n: usize,
+    m: usize,
+    mult: f32,
+    idx: &[usize],
+    vals: &[f32],
+) -> Vec<f32> {
+    assert_eq!(codes_t.len(), n * m);
+    assert_eq!(idx.len(), vals.len());
+    let mut y = vec![0.0f32; m];
+    for (&j, &xj) in idx.iter().zip(vals) {
+        debug_assert!(j < n);
+        let col = &codes_t[j * m..(j + 1) * m];
+        for (yi, &c) in y.iter_mut().zip(col) {
+            *yi += xj * c as f32;
+        }
+    }
+    for yi in &mut y {
+        *yi *= mult;
+    }
+    y
+}
+
+/// y = mult · Φ x for sparse x, on ROW-MAJOR codes (m×n): column-restricted
+/// accumulation (strided column access — use `qmatvec_sparse` with a
+/// transposed buffer when one is available).
+pub fn qmatvec_sparse_cols(
+    codes: &[i8],
+    m: usize,
+    n: usize,
+    mult: f32,
+    idx: &[usize],
+    vals: &[f32],
+) -> Vec<f32> {
+    assert_eq!(codes.len(), m * n);
+    assert_eq!(idx.len(), vals.len());
+    let mut y = vec![0.0f32; m];
+    for i in 0..m {
+        let row = &codes[i * n..(i + 1) * n];
+        let mut acc = 0.0f32;
+        for (&j, &v) in idx.iter().zip(vals) {
+            acc += row[j] as f32 * v;
+        }
+        y[i] = acc * mult;
+    }
+    y
+}
+
+/// Dot of an int8 row with an f32 vector — 16 contiguous accumulator
+/// lanes (see `linalg::dot` for the vectorization rationale; the i8→f32
+/// widening maps onto VPMOVSXBD + VCVTDQ2PS).
+#[inline]
+pub fn dot_i8_f32(row: &[i8], x: &[f32]) -> f32 {
+    debug_assert_eq!(row.len(), x.len());
+    const LANES: usize = 16;
+    let mut acc = [0.0f32; LANES];
+    let chunks = row.len() / LANES;
+    for c in 0..chunks {
+        let i = c * LANES;
+        let (rv, xv) = (&row[i..i + LANES], &x[i..i + LANES]);
+        for k in 0..LANES {
+            acc[k] += rv[k] as f32 * xv[k];
+        }
+    }
+    let mut s = 0.0f32;
+    for k in 0..LANES {
+        s += acc[k];
+    }
+    for i in chunks * LANES..row.len() {
+        s += row[i] as f32 * x[i];
+    }
+    s
+}
+
+/// Pure integer dot: packed row (b-bit fields, biased by half) against an
+/// int8 vector. Returns the raw integer accumulator (caller applies scales).
+#[inline]
+fn packed_dot_q8(words: &[u64], bits: u8, half: i32, n: usize, xq: &[i8]) -> i64 {
+    let lanes = 64 / bits as usize;
+    let mask = (1u64 << bits) - 1;
+    let mut acc: i64 = 0;
+    let mut j = 0usize;
+    for &w in words {
+        let mut ww = w;
+        let take = lanes.min(n - j);
+        for k in 0..take {
+            let code = (ww & mask) as i32 - half;
+            acc += (code as i64) * (xq[j + k] as i64);
+            ww >>= bits;
+        }
+        j += take;
+        if j >= n {
+            break;
+        }
+    }
+    acc
+}
+
+/// Byte → 4 signed 2-bit codes, packed little-endian into one u32
+/// (field − half, half = 1): one table hit + one unaligned store decodes
+/// 4 elements.
+fn lut2_u32() -> &'static [u32; 256] {
+    static LUT: std::sync::OnceLock<[u32; 256]> = std::sync::OnceLock::new();
+    LUT.get_or_init(|| {
+        let mut t = [0u32; 256];
+        for (b, entry) in t.iter_mut().enumerate() {
+            let mut bytes = [0u8; 4];
+            for k in 0..4 {
+                bytes[k] = ((((b >> (2 * k)) & 0b11) as i8) - 1) as u8;
+            }
+            *entry = u32::from_le_bytes(bytes);
+        }
+        t
+    })
+}
+
+/// Byte → 2 signed 4-bit codes packed into one u16 (field − half, half=4).
+fn lut4_u16() -> &'static [u16; 256] {
+    static LUT: std::sync::OnceLock<[u16; 256]> = std::sync::OnceLock::new();
+    LUT.get_or_init(|| {
+        let mut t = [0u16; 256];
+        for (b, entry) in t.iter_mut().enumerate() {
+            let lo = ((((b >> 0) & 0xF) as i8) - 4) as u8;
+            let hi = ((((b >> 4) & 0xF) as i8) - 4) as u8;
+            *entry = u16::from_le_bytes([lo, hi]);
+        }
+        t
+    })
+}
+
+/// Generic shift/mask decode (tail path + odd widths).
+fn decode_generic(words: &[u64], bits: u8, n: usize, scratch: &mut [i8]) {
+    let lanes = 64 / bits as usize;
+    let mask = (1u64 << bits) - 1;
+    let half = crate::quant::Quantizer::new(bits).half();
+    let mut j = 0;
+    for &w in words {
+        let mut ww = w;
+        let take = lanes.min(n - j);
+        for k in 0..take {
+            scratch[j + k] = ((ww & mask) as i32 - half) as i8;
+            ww >>= bits;
+        }
+        j += take;
+        if j >= n {
+            break;
+        }
+    }
+}
+
+/// Decode one packed row into an i8 scratch buffer (length >= n).
+///
+/// Perf note (EXPERIMENTS.md §Perf): per-lane shift/mask extraction costs
+/// ~4 ops/element and defeats vectorization. The hot path decodes whole
+/// words through byte LUTs that emit 4 (2-bit) or 2 (4-bit) codes per
+/// single u32/u16 store into an L1-resident scratch row; the vectorized
+/// `dot_i8_f32` then consumes the row. Ragged tails fall back to the
+/// generic shift/mask loop.
+#[inline]
+pub fn decode_row(words: &[u64], bits: u8, n: usize, scratch: &mut [i8]) {
+    debug_assert!(scratch.len() >= n);
+    let lanes = 64 / bits as usize;
+    let full_words = n / lanes;
+    let out = scratch.as_mut_ptr() as *mut u8;
+    match bits {
+        2 => {
+            let lut = lut2_u32();
+            for (wi, &w) in words[..full_words].iter().enumerate() {
+                let bytes = w.to_le_bytes();
+                let base = wi * 32;
+                for (bi, b) in bytes.into_iter().enumerate() {
+                    // SAFETY: base+4bi+4 <= full_words*32 <= n <= scratch.len()
+                    unsafe {
+                        (out.add(base + 4 * bi) as *mut u32)
+                            .write_unaligned(lut[b as usize]);
+                    }
+                }
+            }
+        }
+        4 => {
+            let lut = lut4_u16();
+            for (wi, &w) in words[..full_words].iter().enumerate() {
+                let bytes = w.to_le_bytes();
+                let base = wi * 16;
+                for (bi, b) in bytes.into_iter().enumerate() {
+                    unsafe {
+                        (out.add(base + 2 * bi) as *mut u16)
+                            .write_unaligned(lut[b as usize]);
+                    }
+                }
+            }
+        }
+        8 => {
+            // field = code + 64: subtract in the byte domain (wrapping sub
+            // vectorizes to one psubb over the whole row).
+            let src = &words[..full_words];
+            for (wi, &w) in src.iter().enumerate() {
+                let bytes = w.to_le_bytes();
+                let base = wi * 8;
+                for (bi, b) in bytes.into_iter().enumerate() {
+                    scratch[base + bi] = b.wrapping_sub(64) as i8;
+                }
+            }
+        }
+        _ => {
+            decode_generic(words, bits, n, scratch);
+            return;
+        }
+    }
+    // Ragged tail (n not a multiple of lanes-per-word).
+    let done = full_words * lanes;
+    if done < n {
+        decode_generic(&words[full_words..], bits, n - done, &mut scratch[done..]);
+    }
+}
+
+/// Dot of a u8 row with an f32 vector (16 accumulator lanes).
+#[inline]
+fn dot_u8_f32(row: &[u8], x: &[f32]) -> f32 {
+    debug_assert_eq!(row.len(), x.len());
+    const LANES: usize = 16;
+    let mut acc = [0.0f32; LANES];
+    let chunks = row.len() / LANES;
+    for c in 0..chunks {
+        let i = c * LANES;
+        let (rv, xv) = (&row[i..i + LANES], &x[i..i + LANES]);
+        for k in 0..LANES {
+            acc[k] += rv[k] as f32 * xv[k];
+        }
+    }
+    let mut s = 0.0f32;
+    for k in 0..LANES {
+        s += acc[k];
+    }
+    for i in chunks * LANES..row.len() {
+        s += row[i] as f32 * x[i];
+    }
+    s
+}
+
+/// y = A x streaming the packed representation.
+///
+/// * 8-bit: no decode at all — the packed bytes ARE `code + 64`, so
+///   `dot = Σ byte·x − 64·Σx` with Σx hoisted out of the row loop
+///   (one u8·f32 dot straight over the packed storage).
+/// * 2/4-bit: LUT-decode each row into an L1 scratch, then the
+///   vectorized i8 dot.
+pub fn packed_matvec(p: &PackedMatrix, x: &[f32]) -> Vec<f32> {
+    assert_eq!(x.len(), p.n);
+    let mult = p.multiplier();
+    let mut y = vec![0.0f32; p.m];
+    let wpr = p.words_per_row;
+    let words = &p.words;
+    let (bits, n) = (p.bits, p.n);
+    if bits == 8 && n % 8 == 0 {
+        let sum_x: f32 = x.iter().sum();
+        par::par_chunks_mut(&mut y, 32, |start, chunk| {
+            for (k, yi) in chunk.iter_mut().enumerate() {
+                let i = start + k;
+                let row = &words[i * wpr..(i + 1) * wpr];
+                // SAFETY: u64 words reinterpreted as bytes, len = n.
+                let bytes: &[u8] = unsafe {
+                    std::slice::from_raw_parts(row.as_ptr() as *const u8, n)
+                };
+                *yi = mult * (dot_u8_f32(bytes, x) - 64.0 * sum_x);
+            }
+        });
+        return y;
+    }
+    par::par_chunks_mut(&mut y, 32, |start, chunk| {
+        let mut scratch = vec![0i8; n];
+        for (k, yi) in chunk.iter_mut().enumerate() {
+            let i = start + k;
+            let row = &words[i * wpr..(i + 1) * wpr];
+            decode_row(row, bits, n, &mut scratch);
+            *yi = mult * dot_i8_f32(&scratch[..n], x);
+        }
+    });
+    y
+}
+
+/// y += c · (decoded row) for each (row, c) pair — the packed form of the
+/// paper's dense scale-and-add (Φ·x_sparse over a transposed buffer).
+pub fn packed_scale_add(p: &PackedMatrix, idx: &[usize], vals: &[f32]) -> Vec<f32> {
+    assert_eq!(idx.len(), vals.len());
+    let mult = p.multiplier();
+    let mut y = vec![0.0f32; p.n];
+    let mut scratch = vec![0i8; p.n];
+    for (&r, &c) in idx.iter().zip(vals) {
+        debug_assert!(r < p.m);
+        decode_row(p.row_words(r), p.bits, p.n, &mut scratch);
+        let cm = c * mult;
+        for (yi, &s) in y.iter_mut().zip(scratch.iter()) {
+            *yi += cm * s as f32;
+        }
+    }
+    y
+}
+
+/// y = A x with x quantized to int8 (integer dot path). `x_mult` is x's
+/// dequantization multiplier; the result is in f32 units.
+pub fn packed_matvec_q8(p: &PackedMatrix, xq: &[i8], x_mult: f32) -> Vec<f32> {
+    assert_eq!(xq.len(), p.n);
+    let half = crate::quant::Quantizer::new(p.bits).half();
+    let mult = p.multiplier() * x_mult;
+    let mut y = vec![0.0f32; p.m];
+    let wpr = p.words_per_row;
+    let words = &p.words;
+    let (bits, n) = (p.bits, p.n);
+    par::par_chunks_mut(&mut y, 32, |start, chunk| {
+        for (k, yi) in chunk.iter_mut().enumerate() {
+            let i = start + k;
+            let row = &words[i * wpr..(i + 1) * wpr];
+            *yi = mult * packed_dot_q8(row, bits, half, n, xq) as f32;
+        }
+    });
+    y
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::linalg::Mat;
+    use crate::quant::QuantizedMatrix;
+    use crate::rng::XorShift128Plus;
+
+    fn setup(m: usize, n: usize, bits: u8, seed: u64) -> (QuantizedMatrix, Vec<f32>, Vec<f32>) {
+        let mut rng = XorShift128Plus::new(seed);
+        let a = Mat::from_fn(m, n, |_, _| rng.gaussian_f32());
+        let qm = QuantizedMatrix::from_mat(&a, bits, &mut rng);
+        let x = rng.gaussian_vec(n);
+        let want = qm.to_mat().matvec(&x);
+        (qm, x, want)
+    }
+
+    #[test]
+    fn qmatvec_matches_dense() {
+        for bits in [2u8, 4, 8] {
+            let (qm, x, want) = setup(23, 57, bits, bits as u64);
+            let got = qmatvec(&qm.codes, qm.m, qm.n, qm.multiplier(), &x);
+            for (g, w) in got.iter().zip(&want) {
+                assert!((g - w).abs() < 1e-3, "bits={bits}");
+            }
+        }
+    }
+
+    #[test]
+    fn qmatvec_t_matches_dense() {
+        let (qm, _, _) = setup(23, 57, 4, 10);
+        let mut rng = XorShift128Plus::new(99);
+        let v = rng.gaussian_vec(23);
+        let got = qmatvec_t(&qm.codes, qm.m, qm.n, qm.multiplier(), &v);
+        let want = qm.to_mat().matvec_t(&v);
+        for (g, w) in got.iter().zip(&want) {
+            assert!((g - w).abs() < 1e-3);
+        }
+    }
+
+    #[test]
+    fn qmatvec_sparse_matches_dense() {
+        let (qm, _, _) = setup(23, 57, 4, 11);
+        let qt = qm.transposed();
+        let idx = vec![3usize, 17, 44];
+        let vals = vec![1.5f32, -0.25, 2.0];
+        let got = qmatvec_sparse(&qt.codes, qm.n, qm.m, qm.multiplier(), &idx, &vals);
+        let mut x = vec![0.0f32; 57];
+        for (&j, &v) in idx.iter().zip(&vals) {
+            x[j] = v;
+        }
+        let want = qm.to_mat().matvec(&x);
+        for (g, w) in got.iter().zip(&want) {
+            assert!((g - w).abs() < 1e-3);
+        }
+    }
+
+    #[test]
+    fn packed_matvec_matches_qmatvec() {
+        for bits in [2u8, 4, 8] {
+            let (qm, x, _) = setup(17, 41, bits, 20 + bits as u64);
+            let p = PackedMatrix::pack(&qm);
+            let got = packed_matvec(&p, &x);
+            let want = qmatvec(&qm.codes, qm.m, qm.n, qm.multiplier(), &x);
+            for (g, w) in got.iter().zip(&want) {
+                assert!((g - w).abs() < 1e-3, "bits={bits}");
+            }
+        }
+    }
+
+    #[test]
+    fn packed_matvec_q8_integer_path() {
+        let (qm, x, _) = setup(17, 41, 2, 30);
+        let p = PackedMatrix::pack(&qm);
+        // Quantize x to 8 bits.
+        let mut rng = XorShift128Plus::new(31);
+        let q8 = crate::quant::Quantizer::new(8);
+        let (xq, xscale) = q8.quantize_auto(&x, &mut rng);
+        let got = packed_matvec_q8(&p, &xq, xscale / q8.half() as f32);
+        // Reference: dense product of both dequantized operands.
+        let xdq = q8.dequantize_slice(&xq, xscale);
+        let want = qm.to_mat().matvec(&xdq);
+        for (g, w) in got.iter().zip(&want) {
+            assert!((g - w).abs() < 1e-2);
+        }
+    }
+
+    #[test]
+    fn empty_support_sparse_is_zero() {
+        let (qm, _, _) = setup(5, 9, 4, 40);
+        let qt = qm.transposed();
+        let y = qmatvec_sparse(&qt.codes, 9, 5, qm.multiplier(), &[], &[]);
+        assert!(y.iter().all(|&v| v == 0.0));
+    }
+
+    #[test]
+    fn decode_row_matches_unpack() {
+        for bits in [2u8, 4, 8] {
+            for n in [1usize, 5, 31, 64, 129] {
+                let (qm, _, _) = setup(3, n, bits, 60 + n as u64);
+                let p = PackedMatrix::pack(&qm);
+                let mut scratch = vec![0i8; n];
+                for i in 0..3 {
+                    decode_row(p.row_words(i), bits, n, &mut scratch);
+                    assert_eq!(
+                        &scratch[..n],
+                        &qm.codes[i * n..(i + 1) * n],
+                        "bits={bits} n={n} row={i}"
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn packed_scale_add_matches_dense() {
+        // Φ = qm (40×24); pt packs Φᵀ so pt rows are Φ's columns.
+        let (qm, _, _) = setup(40, 24, 2, 70);
+        let qt = qm.transposed();
+        let pt = PackedMatrix::pack(&qt);
+        let idx = vec![1usize, 7, 20];
+        let vals = vec![0.5f32, -1.0, 2.0];
+        let got = packed_scale_add(&pt, &idx, &vals);
+        // Reference: dense Φ x with sparse x over the columns in idx.
+        let mut x = vec![0.0f32; 24];
+        for (&j, &v) in idx.iter().zip(&vals) {
+            x[j] = v;
+        }
+        let dense = qm.to_mat().matvec(&x);
+        assert_eq!(got.len(), dense.len());
+        for (g, w) in got.iter().zip(&dense) {
+            assert!((g - w).abs() < 1e-3);
+        }
+    }
+
+    #[test]
+    fn dot_i8_f32_matches_naive() {
+        let mut rng = XorShift128Plus::new(50);
+        for n in [0usize, 1, 3, 5, 64, 101] {
+            let row: Vec<i8> = (0..n).map(|_| (rng.below(255) as i32 - 127) as i8).collect();
+            let x = rng.gaussian_vec(n);
+            let naive: f32 = row.iter().zip(&x).map(|(&c, &v)| c as f32 * v).sum();
+            assert!((dot_i8_f32(&row, &x) - naive).abs() < 1e-2, "n={n}");
+        }
+    }
+}

@@ -1,0 +1,249 @@
+//! `lpcs` — launcher CLI for the low-precision compressive-sensing stack.
+//!
+//! Subcommands:
+//!   solve    one recovery on a synthetic problem (gaussian | astro)
+//!   serve    run the recovery service on a stream of synthetic jobs
+//!   repro    regenerate a paper figure (fig1..fig11 | all)
+//!   info     list AOT artifacts and environment
+//!
+//! Options are `--key value` / `key=value` pairs applied onto the config
+//! (see `config::LpcsConfig::set` for the full key list); `--config FILE`
+//! loads a JSON config first. (No clap offline — hand-rolled parsing,
+//! DESIGN.md §6.)
+
+use anyhow::{bail, Context, Result};
+use lpcs::algorithms::niht::niht_dense;
+use lpcs::algorithms::qniht::qniht;
+use lpcs::algorithms::niht;
+use lpcs::config::{EngineKind, LpcsConfig};
+use lpcs::coordinator::{JobSpec, ProblemHandle, RecoveryService};
+use lpcs::linalg::Mat;
+use lpcs::metrics;
+use lpcs::rng::XorShift128Plus;
+use lpcs::runtime::{Runtime, XlaDenseKernel, XlaQuantKernel};
+use lpcs::telescope::AstroProblem;
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+fn main() {
+    if let Err(e) = real_main() {
+        eprintln!("error: {e:#}");
+        std::process::exit(1);
+    }
+}
+
+fn usage() -> ! {
+    eprintln!(
+        "usage: lpcs <solve|serve|repro|info> [args] [--key value ...]\n\
+         \n\
+         lpcs solve [gaussian|astro] [--engine native-quant|native-dense|xla-quant|xla-dense]\n\
+         lpcs serve [--service.workers N]\n\
+         lpcs repro <fig1|fig3|fig4|fig5|fig6|fig7|fig8|fig9|fig11|all> [--out_dir DIR]\n\
+         lpcs info"
+    );
+    std::process::exit(2);
+}
+
+/// Parse trailing `--key value` / `key=value` pairs onto the config;
+/// returns positional arguments.
+fn parse_args(cfg: &mut LpcsConfig, args: &[String]) -> Result<Vec<String>> {
+    let mut positional = Vec::new();
+    let mut i = 0;
+    while i < args.len() {
+        let a = &args[i];
+        if let Some(key) = a.strip_prefix("--") {
+            if key == "config" {
+                let path = args.get(i + 1).context("--config needs a file")?;
+                *cfg = LpcsConfig::from_file(std::path::Path::new(path))?;
+                i += 2;
+                continue;
+            }
+            if let Some((k, v)) = key.split_once('=') {
+                cfg.set(k, v)?;
+                i += 1;
+            } else {
+                let v = args.get(i + 1).with_context(|| format!("--{key} needs a value"))?;
+                cfg.set(key, v)?;
+                i += 2;
+            }
+        } else if let Some((k, v)) = a.split_once('=') {
+            cfg.set(k, v)?;
+            i += 1;
+        } else {
+            positional.push(a.clone());
+            i += 1;
+        }
+    }
+    Ok(positional)
+}
+
+fn real_main() -> Result<()> {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let Some(cmd) = args.first() else { usage() };
+    let mut cfg = LpcsConfig::default();
+    let rest = parse_args(&mut cfg, &args[1..])?;
+    cfg.validate()?;
+
+    match cmd.as_str() {
+        "solve" => cmd_solve(&cfg, rest.first().map(|s| s.as_str()).unwrap_or("gaussian")),
+        "serve" => cmd_serve(&cfg),
+        "repro" => {
+            let which = rest.first().map(|s| s.as_str()).unwrap_or("all");
+            lpcs::repro::run(which, &cfg)
+        }
+        "info" => cmd_info(&cfg),
+        _ => usage(),
+    }
+}
+
+/// Build a synthetic problem. Gaussian problems use the artifact shape
+/// (256×512, s=32) so every engine can run them.
+fn gaussian_problem(seed: u64) -> (Mat, Vec<f32>, Vec<f32>, usize, &'static str) {
+    let (m, n, s) = (256usize, 512usize, 32usize);
+    let mut rng = XorShift128Plus::new(seed);
+    let phi = Mat::from_fn(m, n, |_, _| rng.gaussian_f32() / (m as f32).sqrt());
+    let mut x = vec![0.0f32; n];
+    for i in rng.choose_k(n, s) {
+        x[i] = rng.gaussian_f32() + 1.5 * rng.gaussian_f32().signum();
+    }
+    let y = phi.matvec(&x);
+    (phi, y, x, s, "gauss_256x512")
+}
+
+fn cmd_solve(cfg: &LpcsConfig, kind: &str) -> Result<()> {
+    let t_total = Instant::now();
+    let (phi, y, x_true, s, tag) = match kind {
+        "gaussian" => gaussian_problem(cfg.seed),
+        "astro" => {
+            let p = AstroProblem::build(&cfg.astro, cfg.seed);
+            let s = cfg.sparsity.min(cfg.astro.sources);
+            let AstroProblem { phi, y, x_true, .. } = p;
+            (phi, y, x_true, s, "astro")
+        }
+        other => bail!("unknown problem kind '{other}' (gaussian|astro)"),
+    };
+    println!(
+        "problem={kind} M={} N={} s={s} engine={} bits={}&{}",
+        phi.rows, phi.cols, cfg.engine.name(), cfg.quant.bits_phi, cfg.quant.bits_y
+    );
+
+    let t0 = Instant::now();
+    let result = match cfg.engine {
+        EngineKind::NativeDense => niht_dense(&phi, &y, s, &cfg.solver),
+        EngineKind::NativeQuant => qniht(
+            &phi, &y, s, cfg.quant.bits_phi, cfg.quant.bits_y, cfg.quant.mode, cfg.seed,
+            &cfg.solver,
+        ),
+        EngineKind::XlaQuant => {
+            let mut k = XlaQuantKernel::new(
+                &cfg.artifact_dir, tag, &phi, &y, cfg.quant.bits_phi, cfg.quant.bits_y, cfg.seed,
+            )?;
+            let s_art = k.artifact_s();
+            niht::solve(&mut k, s_art, &cfg.solver)
+        }
+        EngineKind::XlaDense => {
+            let mut k = XlaDenseKernel::new(&cfg.artifact_dir, tag, &phi, &y)?;
+            let s_art = k.artifact_s();
+            niht::solve(&mut k, s_art, &cfg.solver)
+        }
+    };
+    let solve_time = t0.elapsed();
+
+    println!(
+        "iterations={} converged={} shrink_events={} solve_time={:.3?} total={:.3?}",
+        result.iterations, result.converged, result.shrink_events, solve_time,
+        t_total.elapsed()
+    );
+    println!(
+        "recovery_error={:.6} support_recovery={:.4}",
+        metrics::recovery_error(&result.x, &x_true),
+        metrics::exact_recovery_top_s(&result.x, &x_true)
+    );
+    Ok(())
+}
+
+fn cmd_serve(cfg: &LpcsConfig) -> Result<()> {
+    let jobs: usize =
+        std::env::var("LPCS_SERVE_JOBS").ok().and_then(|v| v.parse().ok()).unwrap_or(32);
+    println!(
+        "recovery service: workers={} queue={} max_batch={} — submitting {jobs} jobs",
+        cfg.service.workers, cfg.service.queue_capacity, cfg.service.max_batch
+    );
+    let service =
+        RecoveryService::start(cfg.service, cfg.solver.clone(), cfg.artifact_dir.clone());
+
+    // A snapshot stream: many observations share one Φ.
+    let (phi, _, _, s, _) = gaussian_problem(cfg.seed);
+    let phi = Arc::new(phi);
+    let mut rng = XorShift128Plus::new(cfg.seed ^ 0x5EEE);
+    let t0 = Instant::now();
+    let mut ids = Vec::new();
+    let mut x_true_by_id = std::collections::HashMap::new();
+    for j in 0..jobs {
+        let mut x = vec![0.0f32; phi.cols];
+        for i in rng.choose_k(phi.cols, s) {
+            x[i] = 1.0 + rng.uniform_f32();
+        }
+        let y = phi.matvec(&x);
+        match service.submit(JobSpec {
+            problem: ProblemHandle::new(phi.clone()),
+            y,
+            s,
+            bits_phi: cfg.quant.bits_phi,
+            bits_y: cfg.quant.bits_y,
+            engine: cfg.engine,
+            seed: j as u64,
+        }) {
+            Ok(id) => {
+                ids.push(id);
+                x_true_by_id.insert(id, x);
+            }
+            Err(e) => println!("job {j} rejected (backpressure): {e}"),
+        }
+    }
+    let mut errs = Vec::new();
+    let mut lat = Vec::new();
+    for id in &ids {
+        let out = service.wait(*id, Duration::from_secs(600)).context("job timed out")?;
+        if let Some(res) = out.result {
+            errs.push(metrics::recovery_error(&res.x, &x_true_by_id[id]));
+        }
+        lat.push(out.queued_for + out.ran_for);
+    }
+    let wall = t0.elapsed();
+    lat.sort();
+    println!(
+        "completed {}/{} in {:.3?}  throughput={:.1} jobs/s  p50={:.3?} p95={:.3?}",
+        errs.len(),
+        jobs,
+        wall,
+        errs.len() as f64 / wall.as_secs_f64(),
+        lat[lat.len() / 2],
+        lat[(lat.len() * 95) / 100],
+    );
+    println!(
+        "mean recovery error = {:.6}",
+        errs.iter().sum::<f64>() / errs.len().max(1) as f64
+    );
+    println!("metrics: {}", service.metrics().snapshot());
+    service.shutdown();
+    Ok(())
+}
+
+fn cmd_info(cfg: &LpcsConfig) -> Result<()> {
+    println!("lpcs {} — low-precision compressive sensing", env!("CARGO_PKG_VERSION"));
+    println!("artifact dir: {:?}", cfg.artifact_dir);
+    match Runtime::new(&cfg.artifact_dir) {
+        Ok(rt) => {
+            println!("PJRT CPU client OK; {} artifacts:", rt.manifest().entries.len());
+            for e in &rt.manifest().entries {
+                println!(
+                    "  {:<36} {}x{} s={} ({} inputs, {} outputs)",
+                    e.name, e.m, e.n, e.s, e.inputs.len(), e.outputs.len()
+                );
+            }
+        }
+        Err(e) => println!("runtime unavailable: {e:#}"),
+    }
+    Ok(())
+}

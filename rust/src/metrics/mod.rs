@@ -1,0 +1,197 @@
+//! Recovery metrics (S9): everything Figs 1, 4, 9, 11 report.
+
+use crate::algorithms::support::{support_intersection, support_of, top_s_indices};
+
+/// Relative recovery error ‖x̂ − x‖₂ / ‖x‖₂ (Fig 11's metric).
+pub fn recovery_error(x_hat: &[f32], x_true: &[f32]) -> f64 {
+    assert_eq!(x_hat.len(), x_true.len());
+    let num: f64 = x_hat
+        .iter()
+        .zip(x_true)
+        .map(|(a, b)| ((a - b) as f64).powi(2))
+        .sum::<f64>()
+        .sqrt();
+    let den: f64 = x_true.iter().map(|&v| (v as f64).powi(2)).sum::<f64>().sqrt();
+    if den == 0.0 {
+        if num == 0.0 {
+            0.0
+        } else {
+            f64::INFINITY
+        }
+    } else {
+        num / den
+    }
+}
+
+/// Exact (support) recovery: |supp(x̂) ∩ supp(x)| / |supp(x)| (Fig 4/11).
+pub fn exact_recovery(x_hat: &[f32], x_true: &[f32]) -> f64 {
+    let st = support_of(x_true);
+    if st.is_empty() {
+        return 1.0;
+    }
+    let sh = support_of(x_hat);
+    support_intersection(&sh, &st) as f64 / st.len() as f64
+}
+
+/// Support recovery against the top-s entries of the estimate (used when
+/// the estimate is not exactly sparse, e.g. FISTA without pruning).
+pub fn exact_recovery_top_s(x_hat: &[f32], x_true: &[f32]) -> f64 {
+    let st = support_of(x_true);
+    if st.is_empty() {
+        return 1.0;
+    }
+    let sh = top_s_indices(x_hat, st.len());
+    support_intersection(&sh, &st) as f64 / st.len() as f64
+}
+
+/// Source-resolution metric (radio-astronomy tolerance, Fig 4 discussion):
+/// a true source at pixel p counts as resolved if the estimate has a
+/// component within `tol_pixels` (Chebyshev distance on the r×r grid) whose
+/// flux is at least `flux_floor` of the true flux. Returns the
+/// true-positive count.
+pub fn sources_resolved(
+    x_hat: &[f32],
+    sources: &[(usize, f32)],
+    resolution: usize,
+    tol_pixels: usize,
+    flux_floor: f32,
+) -> usize {
+    let mut resolved = 0;
+    for &(p, flux) in sources {
+        let (pr, pc) = (p / resolution, p % resolution);
+        let mut hit = false;
+        'search: for dr in -(tol_pixels as isize)..=(tol_pixels as isize) {
+            for dc in -(tol_pixels as isize)..=(tol_pixels as isize) {
+                let r = pr as isize + dr;
+                let c = pc as isize + dc;
+                if r < 0 || c < 0 || r >= resolution as isize || c >= resolution as isize {
+                    continue;
+                }
+                let q = r as usize * resolution + c as usize;
+                if x_hat[q] >= flux_floor * flux {
+                    hit = true;
+                    break 'search;
+                }
+            }
+        }
+        if hit {
+            resolved += 1;
+        }
+    }
+    resolved
+}
+
+/// False positives: estimate components not within `tol_pixels` of any true
+/// source (counts the CLEAN over-detection of Fig 9).
+pub fn false_positives(
+    x_hat: &[f32],
+    sources: &[(usize, f32)],
+    resolution: usize,
+    tol_pixels: usize,
+    flux_floor_abs: f32,
+) -> usize {
+    let mut fp = 0;
+    for (q, &v) in x_hat.iter().enumerate() {
+        if v < flux_floor_abs {
+            continue;
+        }
+        let (qr, qc) = (q / resolution, q % resolution);
+        let near_source = sources.iter().any(|&(p, _)| {
+            let (pr, pc) = (p / resolution, p % resolution);
+            (pr as isize - qr as isize).abs() <= tol_pixels as isize
+                && (pc as isize - qc as isize).abs() <= tol_pixels as isize
+        });
+        if !near_source {
+            fp += 1;
+        }
+    }
+    fp
+}
+
+/// PSNR (dB) of the reconstruction against the true image.
+pub fn psnr(x_hat: &[f32], x_true: &[f32]) -> f64 {
+    assert_eq!(x_hat.len(), x_true.len());
+    let peak = x_true.iter().fold(0.0f32, |a, &b| a.max(b.abs())) as f64;
+    let mse: f64 = x_hat
+        .iter()
+        .zip(x_true)
+        .map(|(a, b)| ((a - b) as f64).powi(2))
+        .sum::<f64>()
+        / x_true.len() as f64;
+    if mse == 0.0 {
+        f64::INFINITY
+    } else {
+        10.0 * (peak * peak / mse).log10()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn recovery_error_zero_for_exact() {
+        let x = vec![1.0, 0.0, -2.0];
+        assert_eq!(recovery_error(&x, &x), 0.0);
+    }
+
+    #[test]
+    fn recovery_error_relative() {
+        let xt = vec![3.0, 4.0];
+        let xh = vec![3.0, 0.0];
+        assert!((recovery_error(&xh, &xt) - 0.8).abs() < 1e-9);
+    }
+
+    #[test]
+    fn exact_recovery_fractions() {
+        let xt = vec![1.0, 0.0, 2.0, 0.0];
+        assert_eq!(exact_recovery(&[1.0, 0.0, 2.0, 0.0], &xt), 1.0);
+        assert_eq!(exact_recovery(&[1.0, 0.0, 0.0, 5.0], &xt), 0.5);
+        assert_eq!(exact_recovery(&[0.0, 1.0, 0.0, 5.0], &xt), 0.0);
+    }
+
+    #[test]
+    fn exact_recovery_top_s_ignores_small_tail() {
+        let xt = vec![1.0, 0.0, 2.0, 0.0];
+        // Dense estimate whose top-2 matches the truth.
+        let xh = vec![0.9, 0.01, 1.8, -0.02];
+        assert_eq!(exact_recovery_top_s(&xh, &xt), 1.0);
+    }
+
+    #[test]
+    fn sources_resolved_tolerance() {
+        // 8×8 grid, source at (2, 2) = pixel 18.
+        let sources = vec![(18usize, 1.0f32)];
+        let mut xh = vec![0.0f32; 64];
+        xh[19] = 0.9; // one pixel off
+        assert_eq!(sources_resolved(&xh, &sources, 8, 1, 0.5), 1);
+        assert_eq!(sources_resolved(&xh, &sources, 8, 0, 0.5), 0);
+        // Too weak:
+        xh[19] = 0.3;
+        assert_eq!(sources_resolved(&xh, &sources, 8, 1, 0.5), 0);
+    }
+
+    #[test]
+    fn false_positive_count() {
+        let sources = vec![(18usize, 1.0f32)];
+        let mut xh = vec![0.0f32; 64];
+        xh[18] = 1.0; // true positive
+        xh[60] = 0.8; // far away — false positive
+        xh[61] = 0.01; // below floor — ignored
+        assert_eq!(false_positives(&xh, &sources, 8, 1, 0.1), 1);
+    }
+
+    #[test]
+    fn psnr_infinite_for_exact() {
+        let x = vec![1.0, 2.0];
+        assert!(psnr(&x, &x).is_infinite());
+    }
+
+    #[test]
+    fn psnr_decreases_with_error() {
+        let xt = vec![1.0, 0.0, 0.0, 0.0];
+        let a = psnr(&[0.9, 0.0, 0.0, 0.0], &xt);
+        let b = psnr(&[0.5, 0.0, 0.0, 0.0], &xt);
+        assert!(a > b);
+    }
+}

@@ -1,0 +1,101 @@
+//! Minimal data-parallel helpers over `std::thread::scope`.
+//!
+//! The offline build environment has no rayon, so the few hot loops that
+//! benefit from threads use this module instead. The API is deliberately
+//! tiny: chunked parallel-for over an output slice, and a parallel map over
+//! an index range.
+
+/// Number of worker threads to use (cores, capped; overridable via
+/// `LPCS_THREADS` for benchmarking).
+pub fn num_threads() -> usize {
+    if let Ok(v) = std::env::var("LPCS_THREADS") {
+        if let Ok(n) = v.parse::<usize>() {
+            return n.max(1);
+        }
+    }
+    std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1)
+}
+
+/// Split `out` into contiguous chunks and run `f(chunk_start, chunk)` on a
+/// thread per chunk. `f` must be pure per-chunk (no overlap by construction).
+pub fn par_chunks_mut<T: Send, F>(out: &mut [T], min_chunk: usize, f: F)
+where
+    F: Fn(usize, &mut [T]) + Sync,
+{
+    let n = out.len();
+    if n == 0 {
+        return;
+    }
+    let threads = num_threads().min(n.div_ceil(min_chunk.max(1))).max(1);
+    if threads <= 1 {
+        f(0, out);
+        return;
+    }
+    let chunk = n.div_ceil(threads);
+    std::thread::scope(|s| {
+        let mut rest = out;
+        let mut start = 0;
+        while !rest.is_empty() {
+            let take = chunk.min(rest.len());
+            let (head, tail) = rest.split_at_mut(take);
+            let fref = &f;
+            s.spawn(move || fref(start, head));
+            start += take;
+            rest = tail;
+        }
+    });
+}
+
+/// Parallel map over `0..n`, collecting results in order.
+pub fn par_map<T: Send, F>(n: usize, f: F) -> Vec<T>
+where
+    F: Fn(usize) -> T + Sync,
+    T: Default + Clone,
+{
+    let mut out = vec![T::default(); n];
+    par_chunks_mut(&mut out, 1, |start, chunk| {
+        for (k, slot) in chunk.iter_mut().enumerate() {
+            *slot = f(start + k);
+        }
+    });
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn par_chunks_covers_all_indices() {
+        let mut v = vec![0usize; 1000];
+        par_chunks_mut(&mut v, 16, |start, chunk| {
+            for (k, x) in chunk.iter_mut().enumerate() {
+                *x = start + k;
+            }
+        });
+        assert!(v.iter().enumerate().all(|(i, &x)| x == i));
+    }
+
+    #[test]
+    fn par_chunks_empty_ok() {
+        let mut v: Vec<u8> = vec![];
+        par_chunks_mut(&mut v, 4, |_, _| panic!("must not be called"));
+    }
+
+    #[test]
+    fn par_map_matches_serial() {
+        let got = par_map(257, |i| i * i);
+        let want: Vec<usize> = (0..257).map(|i| i * i).collect();
+        assert_eq!(got, want);
+    }
+
+    #[test]
+    fn single_element() {
+        let mut v = vec![0i32; 1];
+        par_chunks_mut(&mut v, 1024, |s, c| {
+            assert_eq!(s, 0);
+            c[0] = 7;
+        });
+        assert_eq!(v[0], 7);
+    }
+}

@@ -1,0 +1,66 @@
+//! CPU performance model + measurement hooks (paper §9 / Fig 5).
+//!
+//! The analytic side mirrors the FPGA model: a memory-bound matvec moves
+//! `m·n·b/8` bytes, so the *expected* speedup over f32 is `32/b`, capped by
+//! the decode/compute throughput of the packed kernels (measured, not
+//! assumed — `measure_matvec` times the real kernels in-process).
+
+use crate::benchkit;
+use crate::linalg::Mat;
+use crate::lowprec;
+use crate::quant::packed::PackedMatrix;
+use crate::quant::QuantizedMatrix;
+use crate::rng::XorShift128Plus;
+
+/// Analytic traffic-ratio speedup bound (the bandwidth roofline).
+pub fn traffic_speedup_bound(bits: u32) -> f64 {
+    32.0 / bits as f64
+}
+
+/// Measured per-iteration matvec time at a precision, plus the f32 baseline.
+#[derive(Debug, Clone, Copy)]
+pub struct MatvecMeasurement {
+    pub bits: u32,
+    pub time_s: f64,
+    pub baseline_f32_s: f64,
+}
+
+impl MatvecMeasurement {
+    pub fn speedup(&self) -> f64 {
+        self.baseline_f32_s / self.time_s
+    }
+}
+
+/// Time the packed b-bit matvec against the dense f32 matvec on an m×n
+/// Gaussian matrix (median of `iters` runs).
+pub fn measure_matvec(m: usize, n: usize, bits: u8, iters: usize, seed: u64) -> MatvecMeasurement {
+    let mut rng = XorShift128Plus::new(seed);
+    let a = Mat::from_fn(m, n, |_, _| rng.gaussian_f32());
+    let qm = QuantizedMatrix::from_mat(&a, bits, &mut rng);
+    let p = PackedMatrix::pack(&qm);
+    let x = rng.gaussian_vec(n);
+
+    let t_f32 = benchkit::bench(2, iters, || a.matvec(&x)).median_s();
+    let t_q = benchkit::bench(2, iters, || lowprec::packed_matvec(&p, &x)).median_s();
+    MatvecMeasurement { bits: bits as u32, time_s: t_q, baseline_f32_s: t_f32 }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn traffic_bound_values() {
+        assert_eq!(traffic_speedup_bound(2), 16.0);
+        assert_eq!(traffic_speedup_bound(4), 8.0);
+        assert_eq!(traffic_speedup_bound(8), 4.0);
+        assert_eq!(traffic_speedup_bound(32), 1.0);
+    }
+
+    #[test]
+    fn measurement_runs_and_is_positive() {
+        let m = measure_matvec(64, 256, 4, 5, 1);
+        assert!(m.time_s > 0.0 && m.baseline_f32_s > 0.0);
+        assert!(m.speedup() > 0.0);
+    }
+}

@@ -1,0 +1,5 @@
+//! Performance models (S10/S11): the FPGA bandwidth-bound simulator behind
+//! Fig 6 and the CPU traffic model behind Fig 5's analytic expectation.
+
+pub mod cpu;
+pub mod fpga;

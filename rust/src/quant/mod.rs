@@ -1,0 +1,266 @@
+//! Stochastic quantization (S2) — the paper's `Q_b(·)` operator.
+//!
+//! Scheme (§3 "Quantization" + Remark 3): an odd number of levels,
+//! `2^{b-1}+1`, equally spaced on `[-scale, +scale]`. Codes are signed
+//! integers `k ∈ {-half, …, +half}` with `half = 2^{b-2}`, dequantizing as
+//! `value = scale · k / half`. Stochastic rounding assigns the two
+//! neighbouring levels with probabilities proportional to proximity, so the
+//! quantizer is **unbiased** (`E[Q(v)] = v`) and the per-element error is at
+//! most `scale/2^{b-1}` in expectation — the constant of Lemma 4.
+//!
+//! This module is the rust twin of `python/compile/kernels/quantize.py`
+//! (same grid, same rounding rule) so codes produced here feed the AOT
+//! artifacts directly.
+
+pub mod packed;
+
+use crate::linalg::Mat;
+use crate::rng::XorShift128Plus;
+
+/// A b-bit stochastic quantizer (2 ≤ b ≤ 8).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Quantizer {
+    pub bits: u8,
+}
+
+impl Quantizer {
+    pub fn new(bits: u8) -> Self {
+        assert!((2..=8).contains(&bits), "bits must be in 2..=8, got {bits}");
+        Self { bits }
+    }
+
+    /// Codes live in `[-half, +half]`.
+    #[inline]
+    pub fn half(&self) -> i32 {
+        1 << (self.bits - 2)
+    }
+
+    /// Number of levels (odd): 2^{b-1} + 1.
+    #[inline]
+    pub fn levels(&self) -> u32 {
+        (1u32 << (self.bits - 1)) + 1
+    }
+
+    /// Quantize one value given a uniform(0,1) draw.
+    #[inline]
+    pub fn quantize_one(&self, v: f32, u: f32, scale: f32) -> i8 {
+        let half = self.half() as f32;
+        let t = v / scale * half;
+        let lo = t.floor();
+        let code = lo + if u < t - lo { 1.0 } else { 0.0 };
+        code.clamp(-half, half) as i8
+    }
+
+    #[inline]
+    pub fn dequantize_one(&self, code: i8, scale: f32) -> f32 {
+        code as f32 * (scale / self.half() as f32)
+    }
+
+    /// Quantize a slice with the given scale. Returns codes.
+    pub fn quantize_slice(&self, v: &[f32], scale: f32, rng: &mut XorShift128Plus) -> Vec<i8> {
+        v.iter().map(|&x| self.quantize_one(x, rng.uniform_f32(), scale)).collect()
+    }
+
+    /// Quantize with auto scale = max|v| (the paper's setting: data is
+    /// normalized to [-1, 1] a priori). Returns (codes, scale).
+    pub fn quantize_auto(&self, v: &[f32], rng: &mut XorShift128Plus) -> (Vec<i8>, f32) {
+        let scale = v.iter().fold(0.0f32, |a, &b| a.max(b.abs())).max(f32::MIN_POSITIVE);
+        (self.quantize_slice(v, scale, rng), scale)
+    }
+
+    pub fn dequantize_slice(&self, codes: &[i8], scale: f32) -> Vec<f32> {
+        let mult = scale / self.half() as f32;
+        codes.iter().map(|&c| c as f32 * mult).collect()
+    }
+}
+
+/// A quantized matrix: int8 codes + scale + bit width (row-major, `m×n`).
+#[derive(Debug, Clone)]
+pub struct QuantizedMatrix {
+    pub m: usize,
+    pub n: usize,
+    pub bits: u8,
+    pub scale: f32,
+    pub codes: Vec<i8>,
+}
+
+impl QuantizedMatrix {
+    /// Quantize a dense matrix (scale = max|Φ|, per the paper).
+    pub fn from_mat(a: &Mat, bits: u8, rng: &mut XorShift128Plus) -> Self {
+        let q = Quantizer::new(bits);
+        let (codes, scale) = q.quantize_auto(&a.data, rng);
+        Self { m: a.rows, n: a.cols, bits, scale, codes }
+    }
+
+    /// Quantize with an explicit scale (for paired quantizations that must
+    /// share the grid).
+    pub fn from_mat_with_scale(a: &Mat, bits: u8, scale: f32, rng: &mut XorShift128Plus) -> Self {
+        let q = Quantizer::new(bits);
+        let codes = q.quantize_slice(&a.data, scale, rng);
+        Self { m: a.rows, n: a.cols, bits, scale, codes }
+    }
+
+    /// Dequantization multiplier `scale / half` (what the kernels consume).
+    #[inline]
+    pub fn multiplier(&self) -> f32 {
+        self.scale / Quantizer::new(self.bits).half() as f32
+    }
+
+    /// Dense reconstruction Q(Φ) as f32 (for diagnostics / RIP probes).
+    pub fn to_mat(&self) -> Mat {
+        let mult = self.multiplier();
+        Mat::from_vec(self.m, self.n, self.codes.iter().map(|&c| c as f32 * mult).collect())
+    }
+
+    /// Transposed copy (codes^T), used for the Φᵀ-oriented buffer.
+    pub fn transposed(&self) -> QuantizedMatrix {
+        let mut codes = vec![0i8; self.codes.len()];
+        for i in 0..self.m {
+            for j in 0..self.n {
+                codes[j * self.m + i] = self.codes[i * self.n + j];
+            }
+        }
+        QuantizedMatrix { m: self.n, n: self.m, bits: self.bits, scale: self.scale, codes }
+    }
+
+    /// Ideal packed size in bytes at this bit width (the traffic metric
+    /// driving Figs 5/6: bytes = m·n·b/8).
+    pub fn bytes_ideal(&self) -> usize {
+        (self.m * self.n * self.bits as usize).div_ceil(8)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn half_and_levels() {
+        assert_eq!(Quantizer::new(2).half(), 1);
+        assert_eq!(Quantizer::new(2).levels(), 3);
+        assert_eq!(Quantizer::new(4).half(), 4);
+        assert_eq!(Quantizer::new(4).levels(), 9);
+        assert_eq!(Quantizer::new(8).half(), 64);
+        assert_eq!(Quantizer::new(8).levels(), 129);
+    }
+
+    #[test]
+    #[should_panic]
+    fn bits_out_of_range_panics() {
+        Quantizer::new(1);
+    }
+
+    #[test]
+    fn codes_in_range() {
+        let mut rng = XorShift128Plus::new(1);
+        for bits in 2..=8u8 {
+            let q = Quantizer::new(bits);
+            let v = rng.gaussian_vec(512);
+            let (codes, _) = q.quantize_auto(&v, &mut rng);
+            let half = q.half() as i32;
+            assert!(codes.iter().all(|&c| (c as i32).abs() <= half), "bits={bits}");
+        }
+    }
+
+    #[test]
+    fn grid_points_are_fixed() {
+        // Values exactly on the grid quantize deterministically.
+        let q = Quantizer::new(4);
+        let mut rng = XorShift128Plus::new(2);
+        for k in -4i32..=4 {
+            let v = k as f32 / 4.0;
+            let c = q.quantize_one(v, rng.uniform_f32(), 1.0);
+            assert_eq!(c as i32, k);
+        }
+    }
+
+    #[test]
+    fn clamps_out_of_range() {
+        let q = Quantizer::new(2);
+        assert_eq!(q.quantize_one(5.0, 0.5, 1.0), 1);
+        assert_eq!(q.quantize_one(-5.0, 0.5, 1.0), -1);
+    }
+
+    #[test]
+    fn unbiased_in_expectation() {
+        let q = Quantizer::new(2);
+        let mut rng = XorShift128Plus::new(3);
+        let v = 0.3f32;
+        let reps = 60_000;
+        let mean: f64 = (0..reps)
+            .map(|_| q.dequantize_one(q.quantize_one(v, rng.uniform_f32(), 1.0), 1.0) as f64)
+            .sum::<f64>()
+            / reps as f64;
+        assert!((mean - v as f64).abs() < 0.01, "mean={mean}");
+    }
+
+    #[test]
+    fn lemma4_expected_error_bound() {
+        // E‖Q(v)−v‖₂ ≤ scale·√M / 2^{b−1}
+        let mut rng = XorShift128Plus::new(4);
+        let m = 256usize;
+        let v: Vec<f32> = (0..m).map(|_| rng.uniform_in(-1.0, 1.0) as f32).collect();
+        for bits in [2u8, 4, 8] {
+            let q = Quantizer::new(bits);
+            let mut acc = 0.0f64;
+            let reps = 60;
+            for _ in 0..reps {
+                let codes = q.quantize_slice(&v, 1.0, &mut rng);
+                let dq = q.dequantize_slice(&codes, 1.0);
+                acc += crate::linalg::norm2(&crate::linalg::sub(&dq, &v)) as f64;
+            }
+            let bound = (m as f64).sqrt() / (1u64 << (bits - 1)) as f64;
+            assert!(acc / reps as f64 <= bound, "bits={bits}");
+        }
+    }
+
+    #[test]
+    fn roundtrip_error_within_half_spacing() {
+        let mut rng = XorShift128Plus::new(5);
+        for bits in [2u8, 4, 8] {
+            let q = Quantizer::new(bits);
+            let spacing = 1.0 / q.half() as f32;
+            for _ in 0..200 {
+                let v = rng.uniform_in(-1.0, 1.0) as f32;
+                let dq = q.dequantize_one(q.quantize_one(v, rng.uniform_f32(), 1.0), 1.0);
+                assert!((dq - v).abs() <= spacing + 1e-6, "bits={bits} v={v} dq={dq}");
+            }
+        }
+    }
+
+    #[test]
+    fn matrix_quantization_dims_and_scale() {
+        let mut rng = XorShift128Plus::new(6);
+        let a = Mat::from_fn(10, 20, |_, _| rng.gaussian_f32());
+        let qm = QuantizedMatrix::from_mat(&a, 4, &mut rng);
+        assert_eq!((qm.m, qm.n), (10, 20));
+        assert!((qm.scale - a.max_abs()).abs() < 1e-6);
+        assert_eq!(qm.bytes_ideal(), 10 * 20 * 4 / 8);
+    }
+
+    #[test]
+    fn transposed_codes_match() {
+        let mut rng = XorShift128Plus::new(7);
+        let a = Mat::from_fn(5, 8, |_, _| rng.gaussian_f32());
+        let qm = QuantizedMatrix::from_mat(&a, 8, &mut rng);
+        let qt = qm.transposed();
+        for i in 0..5 {
+            for j in 0..8 {
+                assert_eq!(qm.codes[i * 8 + j], qt.codes[j * 5 + i]);
+            }
+        }
+    }
+
+    #[test]
+    fn quantization_error_decreases_with_bits() {
+        let mut rng = XorShift128Plus::new(8);
+        let a = Mat::from_fn(40, 40, |_, _| rng.gaussian_f32());
+        let mut errs = vec![];
+        for bits in [2u8, 4, 8] {
+            let qm = QuantizedMatrix::from_mat(&a, bits, &mut rng);
+            let diff: Vec<f32> = a.data.iter().zip(&qm.to_mat().data).map(|(x, y)| x - y).collect();
+            errs.push(crate::linalg::norm2(&diff));
+        }
+        assert!(errs[0] > errs[1] && errs[1] > errs[2], "{errs:?}");
+    }
+}

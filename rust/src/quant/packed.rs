@@ -1,0 +1,175 @@
+//! Bit-packed code storage (S3) — the memory layout behind the speedups.
+//!
+//! The FPGA/CPU speedups in the paper (Figs 5–6) come from moving
+//! `m·n·b/8` bytes instead of `4·m·n`: quantized values are *packed*, b bits
+//! each, into machine words. This module implements that layout for
+//! b ∈ {2, 4, 8}: codes are biased by `half` into unsigned b-bit fields
+//! (`field = code + half`, so b=2 fields hold {0,1,2}), packed little-endian
+//! into `u64` words, each **row padded to a word boundary** so rows can be
+//! streamed independently (the paper's FPGA gradient unit consumes whole
+//! cache lines per row segment).
+
+use super::{QuantizedMatrix, Quantizer};
+
+/// Bit-packed quantized matrix (row-major, row-aligned to u64 words).
+#[derive(Debug, Clone)]
+pub struct PackedMatrix {
+    pub m: usize,
+    pub n: usize,
+    pub bits: u8,
+    pub scale: f32,
+    /// Words per row (row stride).
+    pub words_per_row: usize,
+    pub words: Vec<u64>,
+}
+
+impl PackedMatrix {
+    /// Codes per 64-bit word at this width.
+    #[inline]
+    pub fn lanes(bits: u8) -> usize {
+        64 / bits as usize
+    }
+
+    pub fn pack(qm: &QuantizedMatrix) -> Self {
+        let bits = qm.bits;
+        assert!(
+            matches!(bits, 2 | 4 | 8),
+            "packed storage supports b ∈ {{2,4,8}}, got {bits}"
+        );
+        let half = Quantizer::new(bits).half();
+        let lanes = Self::lanes(bits);
+        let words_per_row = qm.n.div_ceil(lanes);
+        let mut words = vec![0u64; qm.m * words_per_row];
+        let mask = (1u64 << bits) - 1;
+        for i in 0..qm.m {
+            for j in 0..qm.n {
+                let code = qm.codes[i * qm.n + j] as i32;
+                let field = ((code + half) as u64) & mask;
+                let w = i * words_per_row + j / lanes;
+                let off = (j % lanes) * bits as usize;
+                words[w] |= field << off;
+            }
+        }
+        Self { m: qm.m, n: qm.n, bits, scale: qm.scale, words_per_row, words }
+    }
+
+    /// Unpack back to int8 codes (round-trip must be exact).
+    pub fn unpack(&self) -> QuantizedMatrix {
+        let half = Quantizer::new(self.bits).half();
+        let lanes = Self::lanes(self.bits);
+        let mask = (1u64 << self.bits) - 1;
+        let mut codes = vec![0i8; self.m * self.n];
+        for i in 0..self.m {
+            for j in 0..self.n {
+                let w = self.words[i * self.words_per_row + j / lanes];
+                let field = (w >> ((j % lanes) * self.bits as usize)) & mask;
+                codes[i * self.n + j] = (field as i32 - half) as i8;
+            }
+        }
+        QuantizedMatrix {
+            m: self.m,
+            n: self.n,
+            bits: self.bits,
+            scale: self.scale,
+            codes,
+        }
+    }
+
+    /// Actual storage footprint in bytes — the paper's traffic metric with
+    /// row-padding included.
+    pub fn bytes(&self) -> usize {
+        self.words.len() * 8
+    }
+
+    /// Dequantization multiplier scale/half.
+    #[inline]
+    pub fn multiplier(&self) -> f32 {
+        self.scale / Quantizer::new(self.bits).half() as f32
+    }
+
+    #[inline]
+    pub fn row_words(&self, i: usize) -> &[u64] {
+        &self.words[i * self.words_per_row..(i + 1) * self.words_per_row]
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::linalg::Mat;
+    use crate::rng::XorShift128Plus;
+
+    fn random_qm(m: usize, n: usize, bits: u8, seed: u64) -> QuantizedMatrix {
+        let mut rng = XorShift128Plus::new(seed);
+        let a = Mat::from_fn(m, n, |_, _| rng.gaussian_f32());
+        QuantizedMatrix::from_mat(&a, bits, &mut rng)
+    }
+
+    #[test]
+    fn roundtrip_exact_all_widths() {
+        for bits in [2u8, 4, 8] {
+            for (m, n) in [(1, 1), (3, 7), (16, 64), (10, 33)] {
+                let qm = random_qm(m, n, bits, (bits as u64) << 8 | m as u64);
+                let packed = PackedMatrix::pack(&qm);
+                let back = packed.unpack();
+                assert_eq!(qm.codes, back.codes, "bits={bits} m={m} n={n}");
+                assert_eq!(qm.scale, back.scale);
+            }
+        }
+    }
+
+    #[test]
+    fn lanes_per_word() {
+        assert_eq!(PackedMatrix::lanes(2), 32);
+        assert_eq!(PackedMatrix::lanes(4), 16);
+        assert_eq!(PackedMatrix::lanes(8), 8);
+    }
+
+    #[test]
+    fn footprint_shrinks_with_bits() {
+        let (m, n) = (32, 256);
+        let b2 = PackedMatrix::pack(&random_qm(m, n, 2, 1)).bytes();
+        let b4 = PackedMatrix::pack(&random_qm(m, n, 4, 2)).bytes();
+        let b8 = PackedMatrix::pack(&random_qm(m, n, 8, 3)).bytes();
+        assert_eq!(b4, 2 * b2);
+        assert_eq!(b8, 2 * b4);
+        // vs f32: 16x / 8x / 4x smaller
+        assert_eq!(m * n * 4 / b2, 16);
+    }
+
+    #[test]
+    fn row_padding_word_aligned() {
+        // n=5 at 2 bits -> 1 word per row despite 32 lanes.
+        let qm = random_qm(4, 5, 2, 4);
+        let p = PackedMatrix::pack(&qm);
+        assert_eq!(p.words_per_row, 1);
+        assert_eq!(p.words.len(), 4);
+        // n=33 at 2 bits -> 2 words per row.
+        let qm = random_qm(4, 33, 2, 5);
+        assert_eq!(PackedMatrix::pack(&qm).words_per_row, 2);
+    }
+
+    #[test]
+    #[should_panic]
+    fn pack_rejects_odd_widths() {
+        let qm = random_qm(2, 2, 3, 6);
+        PackedMatrix::pack(&qm);
+    }
+
+    #[test]
+    fn extreme_codes_roundtrip() {
+        // Explicit max/min codes at every width.
+        for bits in [2u8, 4, 8] {
+            let half = Quantizer::new(bits).half() as i8;
+            let qm = QuantizedMatrix {
+                m: 1,
+                n: 3,
+                bits,
+                scale: 1.0,
+                codes: vec![-half, 0, half],
+            };
+            let back = PackedMatrix::pack(&qm).unpack();
+            assert_eq!(back.codes, vec![-half, 0, half]);
+        }
+    }
+}

@@ -1,0 +1,61 @@
+//! Fig 11 / E9 — the Gaussian toy example (paper §10): Φ ∈ ℝ^{256×512}
+//! iid N(0,1), observations at a range of SNRs, 100 realizations.
+//! Reports mean recovery error ‖x−xˢ‖/‖xˢ‖ and exact support recovery for
+//! 32-bit NIHT vs 2&8-bit QNIHT. Expected shape: 2&8-bit slightly worse,
+//! equally robust to noise.
+
+use crate::algorithms::niht::niht_dense;
+use crate::algorithms::qniht::{qniht, RequantMode};
+use crate::config::LpcsConfig;
+use crate::io::csv::CsvTable;
+use crate::linalg::Mat;
+use crate::metrics;
+use crate::rng::XorShift128Plus;
+use anyhow::Result;
+
+pub fn run(cfg: &LpcsConfig) -> Result<()> {
+    let (m, n, s) = (256usize, 512usize, 16usize);
+    let realizations =
+        std::env::var("LPCS_FIG11_REPS").ok().and_then(|v| v.parse().ok()).unwrap_or(100usize);
+    let snrs_db = [-10.0f64, -5.0, 0.0, 5.0, 10.0, 20.0];
+    println!("Gaussian toy: Φ∈R^{{{m}x{n}}}, s={s}, {realizations} realizations per SNR");
+
+    let mut t = CsvTable::new(&[
+        "snr_db",
+        "err_32bit",
+        "exact_32bit",
+        "err_2_8bit",
+        "exact_2_8bit",
+    ]);
+
+    for &snr in &snrs_db {
+        let mut acc = [0.0f64; 4];
+        for rep in 0..realizations {
+            let mut rng = XorShift128Plus::new(cfg.seed ^ ((snr as i64 as u64) << 24) ^ rep as u64);
+            let phi = Mat::from_fn(m, n, |_, _| rng.gaussian_f32());
+            let mut x = vec![0.0f32; n];
+            for i in rng.choose_k(n, s) {
+                x[i] = rng.gaussian_f32();
+            }
+            let clean = phi.matvec(&x);
+            let sig_p = crate::linalg::norm2_sq(&clean) as f64;
+            let noise_p = sig_p / 10f64.powf(snr / 10.0);
+            let sd = (noise_p / m as f64).sqrt() as f32;
+            let y: Vec<f32> = clean.iter().map(|v| v + sd * rng.gaussian_f32()).collect();
+
+            let x32 = niht_dense(&phi, &y, s, &cfg.solver).x;
+            let xq = qniht(&phi, &y, s, 2, 8, RequantMode::Fresh, rep as u64, &cfg.solver).x;
+            acc[0] += metrics::recovery_error(&x32, &x);
+            acc[1] += metrics::exact_recovery(&x32, &x);
+            acc[2] += metrics::recovery_error(&xq, &x);
+            acc[3] += metrics::exact_recovery(&xq, &x);
+        }
+        let r = realizations as f64;
+        t.row_f64(&[snr, acc[0] / r, acc[1] / r, acc[2] / r, acc[3] / r]);
+    }
+
+    print!("{}", t.pretty());
+    t.write_to(&cfg.out_dir.join("fig11.csv"))?;
+    println!("wrote fig11.csv to {:?}", cfg.out_dir);
+    Ok(())
+}

@@ -1,0 +1,74 @@
+//! Fig 4 / E3 — recovery error and exact (support) recovery vs iteration
+//! count, for: 32-bit NIHT, 2&8-bit QNIHT, 4&8-bit QNIHT, CoSaMP, and the
+//! ℓ1 approach (FISTA), on the radio-interferometry problem.
+
+use crate::algorithms::cosamp::cosamp;
+use crate::algorithms::fista::{fista, FistaOptions};
+use crate::algorithms::niht::niht_dense;
+use crate::algorithms::qniht::{qniht, RequantMode};
+use crate::algorithms::SolveOptions;
+use crate::config::LpcsConfig;
+use crate::io::csv::CsvTable;
+use crate::metrics;
+use crate::telescope::{AstroConfig, AstroProblem};
+use anyhow::Result;
+
+pub fn run(cfg: &LpcsConfig) -> Result<()> {
+    // Fig 4 scale: keep the harness snappy (r ≤ 32) unless overridden.
+    let astro = AstroConfig {
+        resolution: cfg.astro.resolution.min(32),
+        sources: cfg.astro.sources.min(12),
+        ..cfg.astro.clone()
+    };
+    let p = AstroProblem::build(&astro, cfg.seed);
+    let s = astro.sources;
+    println!(
+        "methods comparison on astro problem: M={} N={} s={} SNR={}dB",
+        p.m(), p.n(), s, astro.snr_db
+    );
+
+    let iters = [1usize, 2, 4, 8, 16, 32, 64];
+    let mut t = CsvTable::new(&["method", "iterations", "recovery_error", "exact_recovery"]);
+
+    let opts_k = |k: usize| SolveOptions { max_iters: k, tol: 0.0, ..cfg.solver.clone() };
+
+    for &k in &iters {
+        let x = niht_dense(&p.phi, &p.y, s, &opts_k(k)).x;
+        t.row(&row("niht_32bit", k, &x, &p.x_true));
+    }
+    for (bits, name) in [(2u8, "qniht_2&8bit"), (4u8, "qniht_4&8bit")] {
+        for &k in &iters {
+            let x = qniht(&p.phi, &p.y, s, bits, 8, RequantMode::Fixed, cfg.seed, &opts_k(k)).x;
+            t.row(&row(name, k, &x, &p.x_true));
+        }
+    }
+    for &k in &iters {
+        let x = cosamp(&p.phi, &p.y, s, &opts_k(k)).x;
+        t.row(&row("cosamp", k, &x, &p.x_true));
+    }
+    for &k in &iters {
+        // FISTA needs more inner iterations per unit progress; scale ×4.
+        let x = fista(
+            &p.phi,
+            &p.y,
+            &opts_k(4 * k),
+            &FistaOptions { prune_to: Some(s), ..Default::default() },
+        )
+        .x;
+        t.row(&row("l1_fista", k, &x, &p.x_true));
+    }
+
+    print!("{}", t.pretty());
+    t.write_to(&cfg.out_dir.join("fig4.csv"))?;
+    println!("wrote fig4.csv to {:?}", cfg.out_dir);
+    Ok(())
+}
+
+fn row(name: &str, k: usize, x: &[f32], x_true: &[f32]) -> Vec<String> {
+    vec![
+        name.to_string(),
+        k.to_string(),
+        format!("{:.6}", metrics::recovery_error(x, x_true)),
+        format!("{:.4}", metrics::exact_recovery_top_s(x, x_true)),
+    ]
+}

@@ -1,0 +1,206 @@
+//! Deterministic pseudo-random numbers (S1).
+//!
+//! The paper's CPU implementation (§9) uses XORShift to generate the random
+//! numbers for stochastic rounding; we use `xorshift128+` — tiny state, fast,
+//! and good enough for rounding noise and synthetic-data generation — plus a
+//! Box–Muller Gaussian layer. Everything in the repository that needs
+//! randomness threads one of these through explicitly, so every experiment is
+//! reproducible from a single `u64` seed.
+
+/// `xorshift128+` generator (Vigna 2014).
+#[derive(Debug, Clone)]
+pub struct XorShift128Plus {
+    s0: u64,
+    s1: u64,
+    /// Cached second Gaussian from Box–Muller.
+    spare: Option<f64>,
+}
+
+/// SplitMix64 step — used to expand a single seed into the 128-bit state
+/// (the construction recommended by the xorshift authors).
+fn splitmix64(state: &mut u64) -> u64 {
+    *state = state.wrapping_add(0x9E3779B97F4A7C15);
+    let mut z = *state;
+    z = (z ^ (z >> 30)).wrapping_mul(0xBF58476D1CE4E5B9);
+    z = (z ^ (z >> 27)).wrapping_mul(0x94D049BB133111EB);
+    z ^ (z >> 31)
+}
+
+impl XorShift128Plus {
+    pub fn new(seed: u64) -> Self {
+        let mut sm = seed;
+        let s0 = splitmix64(&mut sm);
+        let mut s1 = splitmix64(&mut sm);
+        if s0 == 0 && s1 == 0 {
+            s1 = 1; // all-zero state is a fixed point
+        }
+        Self { s0, s1, spare: None }
+    }
+
+    /// Derive an independent stream (for parallel workers / fresh
+    /// quantizations) without correlating with the parent.
+    pub fn fork(&mut self, tag: u64) -> Self {
+        let mixed = self.next_u64() ^ tag.wrapping_mul(0x9E3779B97F4A7C15);
+        Self::new(mixed)
+    }
+
+    #[inline]
+    pub fn next_u64(&mut self) -> u64 {
+        let mut x = self.s0;
+        let y = self.s1;
+        self.s0 = y;
+        x ^= x << 23;
+        self.s1 = x ^ y ^ (x >> 17) ^ (y >> 26);
+        self.s1.wrapping_add(y)
+    }
+
+    /// Uniform in `[0, 1)` with 53-bit resolution.
+    #[inline]
+    pub fn uniform(&mut self) -> f64 {
+        (self.next_u64() >> 11) as f64 * (1.0 / (1u64 << 53) as f64)
+    }
+
+    /// Uniform f32 in `[0, 1)` (what the quantizer consumes).
+    #[inline]
+    pub fn uniform_f32(&mut self) -> f32 {
+        self.uniform() as f32
+    }
+
+    /// Uniform in `[lo, hi)`.
+    #[inline]
+    pub fn uniform_in(&mut self, lo: f64, hi: f64) -> f64 {
+        lo + (hi - lo) * self.uniform()
+    }
+
+    /// Uniform integer in `[0, n)`.
+    #[inline]
+    pub fn below(&mut self, n: usize) -> usize {
+        debug_assert!(n > 0);
+        (self.next_u64() % n as u64) as usize
+    }
+
+    /// Standard normal via Box–Muller (cached pair).
+    pub fn gaussian(&mut self) -> f64 {
+        if let Some(z) = self.spare.take() {
+            return z;
+        }
+        // u in (0, 1] to avoid ln(0)
+        let u = 1.0 - self.uniform();
+        let v = self.uniform();
+        let r = (-2.0 * u.ln()).sqrt();
+        let theta = 2.0 * std::f64::consts::PI * v;
+        self.spare = Some(r * theta.sin());
+        r * theta.cos()
+    }
+
+    #[inline]
+    pub fn gaussian_f32(&mut self) -> f32 {
+        self.gaussian() as f32
+    }
+
+    /// Vector of standard normals.
+    pub fn gaussian_vec(&mut self, n: usize) -> Vec<f32> {
+        (0..n).map(|_| self.gaussian_f32()).collect()
+    }
+
+    /// Vector of uniform(0,1) f32.
+    pub fn uniform_vec(&mut self, n: usize) -> Vec<f32> {
+        (0..n).map(|_| self.uniform_f32()).collect()
+    }
+
+    /// Sample `k` distinct indices from `[0, n)` (partial Fisher–Yates).
+    pub fn choose_k(&mut self, n: usize, k: usize) -> Vec<usize> {
+        assert!(k <= n, "cannot choose {k} from {n}");
+        let mut idx: Vec<usize> = (0..n).collect();
+        for i in 0..k {
+            let j = i + self.below(n - i);
+            idx.swap(i, j);
+        }
+        idx.truncate(k);
+        idx
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn deterministic_from_seed() {
+        let mut a = XorShift128Plus::new(42);
+        let mut b = XorShift128Plus::new(42);
+        for _ in 0..100 {
+            assert_eq!(a.next_u64(), b.next_u64());
+        }
+    }
+
+    #[test]
+    fn different_seeds_differ() {
+        let mut a = XorShift128Plus::new(1);
+        let mut b = XorShift128Plus::new(2);
+        let same = (0..64).filter(|_| a.next_u64() == b.next_u64()).count();
+        assert!(same < 2);
+    }
+
+    #[test]
+    fn uniform_in_unit_interval() {
+        let mut r = XorShift128Plus::new(7);
+        for _ in 0..10_000 {
+            let u = r.uniform();
+            assert!((0.0..1.0).contains(&u));
+        }
+    }
+
+    #[test]
+    fn uniform_mean_near_half() {
+        let mut r = XorShift128Plus::new(9);
+        let mean: f64 = (0..100_000).map(|_| r.uniform()).sum::<f64>() / 100_000.0;
+        assert!((mean - 0.5).abs() < 0.01, "mean={mean}");
+    }
+
+    #[test]
+    fn gaussian_moments() {
+        let mut r = XorShift128Plus::new(11);
+        let n = 200_000;
+        let xs: Vec<f64> = (0..n).map(|_| r.gaussian()).collect();
+        let mean = xs.iter().sum::<f64>() / n as f64;
+        let var = xs.iter().map(|x| (x - mean) * (x - mean)).sum::<f64>() / n as f64;
+        assert!(mean.abs() < 0.02, "mean={mean}");
+        assert!((var - 1.0).abs() < 0.03, "var={var}");
+    }
+
+    #[test]
+    fn choose_k_distinct_and_in_range() {
+        let mut r = XorShift128Plus::new(13);
+        let picks = r.choose_k(100, 30);
+        assert_eq!(picks.len(), 30);
+        let set: std::collections::HashSet<_> = picks.iter().collect();
+        assert_eq!(set.len(), 30);
+        assert!(picks.iter().all(|&i| i < 100));
+    }
+
+    #[test]
+    fn choose_k_full_is_permutation() {
+        let mut r = XorShift128Plus::new(17);
+        let mut picks = r.choose_k(20, 20);
+        picks.sort_unstable();
+        assert_eq!(picks, (0..20).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn fork_streams_decorrelate() {
+        let mut parent = XorShift128Plus::new(21);
+        let mut c1 = parent.fork(1);
+        let mut c2 = parent.fork(2);
+        let same = (0..64).filter(|_| c1.next_u64() == c2.next_u64()).count();
+        assert!(same < 2);
+    }
+
+    #[test]
+    fn below_bounds() {
+        let mut r = XorShift128Plus::new(23);
+        for _ in 0..1000 {
+            assert!(r.below(7) < 7);
+        }
+    }
+}

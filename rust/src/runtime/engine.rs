@@ -1,0 +1,338 @@
+//! PJRT execution engine: compiled-artifact cache + NihtKernel adapters.
+
+use super::manifest::Manifest;
+use crate::algorithms::{NihtKernel, StepOut};
+use crate::linalg::Mat;
+use crate::quant::{QuantizedMatrix, Quantizer};
+use crate::rng::XorShift128Plus;
+use anyhow::{anyhow, Context, Result};
+use std::collections::HashMap;
+use std::path::Path;
+
+/// PJRT CPU client + compiled-executable cache over the artifact manifest.
+pub struct Runtime {
+    client: xla::PjRtClient,
+    manifest: Manifest,
+    cache: HashMap<String, xla::PjRtLoadedExecutable>,
+}
+
+impl Runtime {
+    pub fn new(artifact_dir: &Path) -> Result<Self> {
+        let manifest = Manifest::load(artifact_dir)?;
+        let client = xla::PjRtClient::cpu().map_err(|e| anyhow!("PJRT cpu client: {e:?}"))?;
+        Ok(Self { client, manifest, cache: HashMap::new() })
+    }
+
+    pub fn manifest(&self) -> &Manifest {
+        &self.manifest
+    }
+
+    /// Compile (or fetch from cache) the named artifact.
+    pub fn load(&mut self, name: &str) -> Result<&xla::PjRtLoadedExecutable> {
+        if !self.cache.contains_key(name) {
+            let entry = self
+                .manifest
+                .find(name)
+                .ok_or_else(|| anyhow!("artifact '{name}' not in manifest"))?
+                .clone();
+            let proto = xla::HloModuleProto::from_text_file(
+                entry.file.to_str().context("artifact path not utf-8")?,
+            )
+            .map_err(|e| anyhow!("parsing HLO text {:?}: {e:?}", entry.file))?;
+            let comp = xla::XlaComputation::from_proto(&proto);
+            let exe = self
+                .client
+                .compile(&comp)
+                .map_err(|e| anyhow!("compiling '{name}': {e:?}"))?;
+            self.cache.insert(name.to_string(), exe);
+        }
+        Ok(&self.cache[name])
+    }
+
+    /// Execute an artifact; unwraps the 1-tuple-of-tuple convention
+    /// (return_tuple=True on the jax side) into a flat Vec<Literal>.
+    pub fn execute(&mut self, name: &str, inputs: &[&xla::Literal]) -> Result<Vec<xla::Literal>> {
+        let exe = self.load(name)?;
+        let result = exe
+            .execute::<&xla::Literal>(inputs)
+            .map_err(|e| anyhow!("executing '{name}': {e:?}"))?;
+        let lit = result[0][0]
+            .to_literal_sync()
+            .map_err(|e| anyhow!("fetching result of '{name}': {e:?}"))?;
+        lit.to_tuple().map_err(|e| anyhow!("untupling result of '{name}': {e:?}"))
+    }
+}
+
+/// f32 literal with the given dims.
+pub fn lit_f32(data: &[f32], dims: &[usize]) -> Result<xla::Literal> {
+    let n: usize = dims.iter().product();
+    assert_eq!(data.len(), n);
+    if dims.len() == 1 {
+        return Ok(xla::Literal::vec1(data));
+    }
+    let dims64: Vec<i64> = dims.iter().map(|&d| d as i64).collect();
+    xla::Literal::vec1(data)
+        .reshape(&dims64)
+        .map_err(|e| anyhow!("reshape: {e:?}"))
+}
+
+/// int8 literal with the given dims.
+pub fn lit_i8(data: &[i8], dims: &[usize]) -> Result<xla::Literal> {
+    let n: usize = dims.iter().product();
+    assert_eq!(data.len(), n);
+    let bytes: &[u8] = unsafe { std::slice::from_raw_parts(data.as_ptr() as *const u8, n) };
+    xla::Literal::create_from_shape_and_untyped_data(xla::ElementType::S8, dims, bytes)
+        .map_err(|e| anyhow!("i8 literal: {e:?}"))
+}
+
+pub fn to_vec_f32(lit: &xla::Literal) -> Result<Vec<f32>> {
+    lit.to_vec::<f32>().map_err(|e| anyhow!("literal to f32 vec: {e:?}"))
+}
+
+fn scalar1(lits: &xla::Literal) -> Result<f32> {
+    Ok(to_vec_f32(lits)?[0])
+}
+
+/// [`NihtKernel`] over the `qniht_step_*` / `apply_step_*` artifacts —
+/// the quantized solve running entirely through PJRT.
+///
+/// Generic over how the [`Runtime`] is held: `XlaQuantKernel<Runtime>` owns
+/// one (simple, recompiles per instance), `XlaQuantKernel<&mut Runtime>`
+/// borrows a per-thread runtime so the compiled-executable cache is shared
+/// across jobs (what the coordinator workers do — PJRT handles are not
+/// `Send`, so each worker thread owns its runtime).
+pub struct XlaQuantKernel<R: std::borrow::BorrowMut<Runtime> = Runtime> {
+    rt: R,
+    step_name: String,
+    apply_name: String,
+    m: usize,
+    n: usize,
+    s: usize,
+    codes1_t: xla::Literal,
+    codes2: xla::Literal,
+    sc1: xla::Literal,
+    sc2: xla::Literal,
+    y: xla::Literal,
+}
+
+impl XlaQuantKernel<Runtime> {
+    /// Quantize (Φ, y) at (bits_phi, bits_y) and bind to the artifacts for
+    /// `shape_tag`. The problem shape must match the artifact shape.
+    pub fn new(
+        artifact_dir: &Path,
+        shape_tag: &str,
+        phi: &Mat,
+        y: &[f32],
+        bits_phi: u8,
+        bits_y: u8,
+        seed: u64,
+    ) -> Result<Self> {
+        let rt = Runtime::new(artifact_dir)?;
+        Self::with_runtime(rt, shape_tag, phi, y, bits_phi, bits_y, seed)
+    }
+}
+
+impl<R: std::borrow::BorrowMut<Runtime>> XlaQuantKernel<R> {
+    /// Bind to an existing runtime (shared executable cache).
+    pub fn with_runtime(
+        mut rt: R,
+        shape_tag: &str,
+        phi: &Mat,
+        y: &[f32],
+        bits_phi: u8,
+        bits_y: u8,
+        seed: u64,
+    ) -> Result<Self> {
+        let rt_ref = rt.borrow_mut();
+        let step = rt_ref
+            .manifest()
+            .find_kind("qniht_step", shape_tag)
+            .ok_or_else(|| anyhow!("no qniht_step artifact for '{shape_tag}'"))?
+            .clone();
+        let apply = rt_ref
+            .manifest()
+            .find_kind("apply_step", shape_tag)
+            .ok_or_else(|| anyhow!("no apply_step artifact for '{shape_tag}'"))?
+            .clone();
+        anyhow::ensure!(
+            phi.rows == step.m && phi.cols == step.n,
+            "problem {}×{} does not match artifact {}×{}",
+            phi.rows,
+            phi.cols,
+            step.m,
+            step.n
+        );
+        let mut rng = XorShift128Plus::new(seed);
+        let q2 = QuantizedMatrix::from_mat(phi, bits_phi, &mut rng);
+        // One stored quantization (Φ̂₁ = Φ̂₂): see qniht::QuantKernel — a
+        // fixed mismatched pair yields a biased cross-gradient.
+        let q1t = q2.transposed();
+        let qy = Quantizer::new(bits_y);
+        let (yc, ysc) = qy.quantize_auto(y, &mut rng);
+        let y_hat = qy.dequantize_slice(&yc, ysc);
+
+        Ok(Self {
+            m: step.m,
+            n: step.n,
+            s: step.s,
+            codes1_t: lit_i8(&q1t.codes, &[step.n, step.m])?,
+            codes2: lit_i8(&q2.codes, &[step.m, step.n])?,
+            sc1: lit_f32(&[q1t.multiplier()], &[1])?,
+            sc2: lit_f32(&[q2.multiplier()], &[1])?,
+            y: lit_f32(&y_hat, &[step.m])?,
+            step_name: step.name,
+            apply_name: apply.name,
+            rt,
+        })
+    }
+
+    /// The artifact's baked sparsity (top-k is shape-specialized).
+    pub fn artifact_s(&self) -> usize {
+        self.s
+    }
+
+    fn run_step(&mut self, x: &[f32]) -> Result<StepOut> {
+        let xl = lit_f32(x, &[self.n])?;
+        let outs = self.rt.borrow_mut().execute(
+            &self.step_name.clone(),
+            &[&self.codes1_t, &self.codes2, &self.sc1, &self.sc2, &self.y, &xl],
+        )?;
+        anyhow::ensure!(outs.len() == 6, "qniht_step must return 6 outputs");
+        Ok(StepOut {
+            x_next: to_vec_f32(&outs[0])?,
+            g: to_vec_f32(&outs[1])?,
+            mu: scalar1(&outs[2])?,
+            dx_nsq: scalar1(&outs[3])?,
+            phi1_dx_nsq: scalar1(&outs[4])?,
+            resid_nsq: scalar1(&outs[5])?,
+        })
+    }
+
+    fn run_apply(&mut self, x: &[f32], g: &[f32], mu: f32) -> Result<(Vec<f32>, f32, f32)> {
+        let xl = lit_f32(x, &[self.n])?;
+        let gl = lit_f32(g, &[self.n])?;
+        let mul = lit_f32(&[mu], &[1])?;
+        let outs = self.rt.borrow_mut().execute(
+            &self.apply_name.clone(),
+            &[&self.codes1_t, &self.sc1, &xl, &gl, &mul],
+        )?;
+        anyhow::ensure!(outs.len() == 3, "apply_step must return 3 outputs");
+        Ok((to_vec_f32(&outs[0])?, scalar1(&outs[1])?, scalar1(&outs[2])?))
+    }
+}
+
+impl<R: std::borrow::BorrowMut<Runtime>> NihtKernel for XlaQuantKernel<R> {
+    fn m(&self) -> usize {
+        self.m
+    }
+
+    fn n(&self) -> usize {
+        self.n
+    }
+
+    fn full_step(&mut self, x: &[f32], s: usize) -> StepOut {
+        assert_eq!(s, self.s, "artifact is specialized to s={}", self.s);
+        self.run_step(x).expect("PJRT qniht_step failed")
+    }
+
+    fn apply_step(&mut self, x: &[f32], g: &[f32], mu: f32, s: usize) -> (Vec<f32>, f32, f32) {
+        assert_eq!(s, self.s, "artifact is specialized to s={}", self.s);
+        self.run_apply(x, g, mu).expect("PJRT apply_step failed")
+    }
+}
+
+/// [`NihtKernel`] over the dense `niht_step_f32_*` artifacts (the 32-bit
+/// baseline executing through PJRT).
+pub struct XlaDenseKernel<R: std::borrow::BorrowMut<Runtime> = Runtime> {
+    rt: R,
+    step_name: String,
+    apply_name: String,
+    m: usize,
+    n: usize,
+    s: usize,
+    phi: xla::Literal,
+    y: xla::Literal,
+}
+
+impl XlaDenseKernel<Runtime> {
+    pub fn new(artifact_dir: &Path, shape_tag: &str, phi: &Mat, y: &[f32]) -> Result<Self> {
+        let rt = Runtime::new(artifact_dir)?;
+        Self::with_runtime(rt, shape_tag, phi, y)
+    }
+}
+
+impl<R: std::borrow::BorrowMut<Runtime>> XlaDenseKernel<R> {
+    pub fn with_runtime(mut rt: R, shape_tag: &str, phi: &Mat, y: &[f32]) -> Result<Self> {
+        let rt_ref = rt.borrow_mut();
+        let step = rt_ref
+            .manifest()
+            .find_kind("niht_step_f32", shape_tag)
+            .ok_or_else(|| anyhow!("no niht_step_f32 artifact for '{shape_tag}'"))?
+            .clone();
+        let apply = rt_ref
+            .manifest()
+            .find_kind("apply_step_f32", shape_tag)
+            .ok_or_else(|| anyhow!("no apply_step_f32 artifact for '{shape_tag}'"))?
+            .clone();
+        anyhow::ensure!(phi.rows == step.m && phi.cols == step.n, "shape mismatch");
+        Ok(Self {
+            m: step.m,
+            n: step.n,
+            s: step.s,
+            phi: lit_f32(&phi.data, &[step.m, step.n])?,
+            y: lit_f32(y, &[step.m])?,
+            step_name: step.name,
+            apply_name: apply.name,
+            rt,
+        })
+    }
+
+    pub fn artifact_s(&self) -> usize {
+        self.s
+    }
+}
+
+impl<R: std::borrow::BorrowMut<Runtime>> NihtKernel for XlaDenseKernel<R> {
+    fn m(&self) -> usize {
+        self.m
+    }
+
+    fn n(&self) -> usize {
+        self.n
+    }
+
+    fn full_step(&mut self, x: &[f32], s: usize) -> StepOut {
+        assert_eq!(s, self.s, "artifact is specialized to s={}", self.s);
+        let xl = lit_f32(x, &[self.n]).expect("literal");
+        let outs = self
+            .rt
+            .borrow_mut()
+            .execute(&self.step_name.clone(), &[&self.phi, &self.y, &xl])
+            .expect("PJRT niht_step_f32 failed");
+        StepOut {
+            x_next: to_vec_f32(&outs[0]).unwrap(),
+            g: to_vec_f32(&outs[1]).unwrap(),
+            mu: scalar1(&outs[2]).unwrap(),
+            dx_nsq: scalar1(&outs[3]).unwrap(),
+            phi1_dx_nsq: scalar1(&outs[4]).unwrap(),
+            resid_nsq: scalar1(&outs[5]).unwrap(),
+        }
+    }
+
+    fn apply_step(&mut self, x: &[f32], g: &[f32], mu: f32, s: usize) -> (Vec<f32>, f32, f32) {
+        assert_eq!(s, self.s);
+        let xl = lit_f32(x, &[self.n]).expect("literal");
+        let gl = lit_f32(g, &[self.n]).expect("literal");
+        let mul = lit_f32(&[mu], &[1]).expect("literal");
+        let outs = self
+            .rt
+            .borrow_mut()
+            .execute(&self.apply_name.clone(), &[&self.phi, &xl, &gl, &mul])
+            .expect("PJRT apply_step_f32 failed");
+        (
+            to_vec_f32(&outs[0]).unwrap(),
+            scalar1(&outs[1]).unwrap(),
+            scalar1(&outs[2]).unwrap(),
+        )
+    }
+}

@@ -1,0 +1,173 @@
+//! `artifacts/manifest.json` — the contract between `python/compile/aot.py`
+//! and the rust runtime: one entry per compiled HLO module with its shape
+//! and I/O signature.
+
+use crate::io::json::Json;
+use anyhow::{anyhow, Context, Result};
+use std::path::{Path, PathBuf};
+
+/// Tensor descriptor in an artifact signature.
+#[derive(Debug, Clone, PartialEq)]
+pub struct TensorSpec {
+    pub name: String,
+    pub dtype: String,
+    pub shape: Vec<usize>,
+}
+
+impl TensorSpec {
+    pub fn elements(&self) -> usize {
+        self.shape.iter().product()
+    }
+}
+
+/// One AOT-compiled computation.
+#[derive(Debug, Clone)]
+pub struct ArtifactEntry {
+    /// Full name, e.g. `qniht_step_gauss_256x512`.
+    pub name: String,
+    /// Entry kind, e.g. `qniht_step`, `apply_step`, `niht_step_f32`.
+    pub entry: String,
+    /// Shape tag, e.g. `gauss_256x512`.
+    pub shape_tag: String,
+    pub file: PathBuf,
+    pub m: usize,
+    pub n: usize,
+    pub s: usize,
+    pub inputs: Vec<TensorSpec>,
+    pub outputs: Vec<TensorSpec>,
+}
+
+/// The parsed manifest.
+#[derive(Debug, Clone)]
+pub struct Manifest {
+    pub dir: PathBuf,
+    pub entries: Vec<ArtifactEntry>,
+}
+
+fn parse_specs(v: &Json) -> Result<Vec<TensorSpec>> {
+    v.as_arr()
+        .ok_or_else(|| anyhow!("signature must be an array"))?
+        .iter()
+        .map(|t| {
+            Ok(TensorSpec {
+                name: t
+                    .get("name")
+                    .and_then(Json::as_str)
+                    .ok_or_else(|| anyhow!("tensor missing name"))?
+                    .to_string(),
+                dtype: t
+                    .get("dtype")
+                    .and_then(Json::as_str)
+                    .ok_or_else(|| anyhow!("tensor missing dtype"))?
+                    .to_string(),
+                shape: t
+                    .get("shape")
+                    .and_then(Json::as_arr)
+                    .ok_or_else(|| anyhow!("tensor missing shape"))?
+                    .iter()
+                    .map(|d| d.as_usize().ok_or_else(|| anyhow!("bad dim")))
+                    .collect::<Result<Vec<_>>>()?,
+            })
+        })
+        .collect()
+}
+
+impl Manifest {
+    pub fn load(dir: &Path) -> Result<Self> {
+        let path = dir.join("manifest.json");
+        let text = std::fs::read_to_string(&path)
+            .with_context(|| format!("reading {path:?} — run `make artifacts` first"))?;
+        let j = Json::parse(&text).map_err(|e| anyhow!("parsing {path:?}: {e}"))?;
+        let entries = j
+            .get("entries")
+            .and_then(Json::as_arr)
+            .ok_or_else(|| anyhow!("manifest missing entries"))?
+            .iter()
+            .map(|e| -> Result<ArtifactEntry> {
+                let field = |k: &str| -> Result<&Json> {
+                    e.get(k).ok_or_else(|| anyhow!("entry missing '{k}'"))
+                };
+                Ok(ArtifactEntry {
+                    name: field("name")?.as_str().unwrap_or_default().to_string(),
+                    entry: field("entry")?.as_str().unwrap_or_default().to_string(),
+                    shape_tag: field("shape_tag")?.as_str().unwrap_or_default().to_string(),
+                    file: dir.join(field("file")?.as_str().unwrap_or_default()),
+                    m: field("m")?.as_usize().ok_or_else(|| anyhow!("bad m"))?,
+                    n: field("n")?.as_usize().ok_or_else(|| anyhow!("bad n"))?,
+                    s: field("s")?.as_usize().ok_or_else(|| anyhow!("bad s"))?,
+                    inputs: parse_specs(field("inputs")?)?,
+                    outputs: parse_specs(field("outputs")?)?,
+                })
+            })
+            .collect::<Result<Vec<_>>>()?;
+        Ok(Self { dir: dir.to_path_buf(), entries })
+    }
+
+    pub fn find(&self, name: &str) -> Option<&ArtifactEntry> {
+        self.entries.iter().find(|e| e.name == name)
+    }
+
+    /// Find by (entry kind, shape tag), e.g. ("qniht_step", "tiny_64x128").
+    pub fn find_kind(&self, entry: &str, shape_tag: &str) -> Option<&ArtifactEntry> {
+        self.entries.iter().find(|e| e.entry == entry && e.shape_tag == shape_tag)
+    }
+
+    /// All shape tags present.
+    pub fn shape_tags(&self) -> Vec<String> {
+        let mut tags: Vec<String> = self.entries.iter().map(|e| e.shape_tag.clone()).collect();
+        tags.sort();
+        tags.dedup();
+        tags
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn write_fake_manifest(dir: &Path) {
+        std::fs::create_dir_all(dir).unwrap();
+        let text = r#"{
+          "format": "hlo-text",
+          "entries": [
+            {"name": "qniht_step_tiny", "entry": "qniht_step", "shape_tag": "tiny",
+             "file": "qniht_step_tiny.hlo.txt", "m": 64, "n": 128, "s": 8,
+             "inputs": [{"name": "x", "dtype": "float32", "shape": [128]}],
+             "outputs": [{"name": "x_next", "dtype": "float32", "shape": [128]}]}
+          ]
+        }"#;
+        std::fs::write(dir.join("manifest.json"), text).unwrap();
+    }
+
+    #[test]
+    fn loads_and_finds() {
+        let dir = std::env::temp_dir().join("lpcs_manifest_test");
+        write_fake_manifest(&dir);
+        let m = Manifest::load(&dir).unwrap();
+        assert_eq!(m.entries.len(), 1);
+        let e = m.find("qniht_step_tiny").unwrap();
+        assert_eq!((e.m, e.n, e.s), (64, 128, 8));
+        assert_eq!(e.inputs[0].elements(), 128);
+        assert!(m.find_kind("qniht_step", "tiny").is_some());
+        assert!(m.find_kind("qniht_step", "absent").is_none());
+        assert_eq!(m.shape_tags(), vec!["tiny".to_string()]);
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn missing_manifest_is_helpful_error() {
+        let err = Manifest::load(Path::new("/nonexistent_lpcs")).unwrap_err();
+        assert!(format!("{err:#}").contains("make artifacts"));
+    }
+
+    #[test]
+    fn real_manifest_parses_if_present() {
+        // Soft check against the actual artifacts dir when built.
+        let dir = Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+        if dir.join("manifest.json").exists() {
+            let m = Manifest::load(&dir).unwrap();
+            assert!(m.find_kind("qniht_step", "tiny_64x128").is_some());
+            assert!(m.find_kind("niht_step_f32", "gauss_256x512").is_some());
+        }
+    }
+}

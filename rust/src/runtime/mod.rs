@@ -1,0 +1,14 @@
+//! PJRT runtime (S12): loads the JAX/Pallas AOT artifacts and executes them
+//! from the rust hot path. Python never runs at request time.
+//!
+//! Flow (see /opt/xla-example/load_hlo/): `PjRtClient::cpu()` →
+//! `HloModuleProto::from_text_file(artifacts/<name>.hlo.txt)` →
+//! `client.compile` → `execute`. HLO **text** is the interchange format —
+//! jax ≥ 0.5 emits protos with 64-bit instruction ids that xla_extension
+//! 0.5.1 rejects; the text parser reassigns ids.
+
+pub mod engine;
+pub mod manifest;
+
+pub use engine::{Runtime, XlaDenseKernel, XlaQuantKernel};
+pub use manifest::{ArtifactEntry, Manifest};

@@ -1,0 +1,127 @@
+//! Dirty image and dirty beam (paper §7, Eqns. 62–64).
+//!
+//! The *dirty image* is the adjoint (matched-filter / least-squares)
+//! estimate `I_d = Φᴴ y`, i.e. the inverse Fourier transform of the
+//! non-uniformly sampled visibilities — in the stacked-real embedding it is
+//! exactly `Φ_stackedᵀ y_stacked`. The *dirty beam* is the point-spread
+//! function `I_db(Δl, Δm) = Σ_baselines cos(2π(u·Δl + v·Δm))`, needed by
+//! the CLEAN baseline (Algorithm 2).
+
+use super::{AntennaArray, ImageGrid};
+use crate::linalg::Mat;
+
+/// Dirty image (length-N sky vector) from stacked-real Φ and y,
+/// normalized by the number of complex baselines M = L².
+pub fn dirty_image(phi_stacked: &Mat, y_stacked: &[f32]) -> Vec<f32> {
+    let m_complex = phi_stacked.rows / 2;
+    let mut img = phi_stacked.matvec_t(y_stacked);
+    let inv = 1.0 / m_complex as f32;
+    for v in &mut img {
+        *v *= inv;
+    }
+    img
+}
+
+/// Dirty beam patch on a (2r-1)×(2r-1) grid of pixel offsets, normalized
+/// to beam(0,0) = 1. Entry [dr + r-1][dc + r-1] is the response at an
+/// offset of (dr, dc) pixels.
+pub fn dirty_beam(array: &AntennaArray, grid: &ImageGrid) -> Mat {
+    let r = grid.resolution;
+    let size = 2 * r - 1;
+    let cell = grid.cell();
+    let baselines = array.baselines_wavelengths();
+    let m = baselines.len() as f64;
+    let two_pi = 2.0 * std::f64::consts::PI;
+    let mut beam = Mat::zeros(size, size);
+    for dr in 0..size {
+        let dm = (dr as isize - (r as isize - 1)) as f64 * cell;
+        for dc in 0..size {
+            let dl = (dc as isize - (r as isize - 1)) as f64 * cell;
+            let mut acc = 0.0f64;
+            for b in &baselines {
+                acc += (two_pi * (b[0] * dl + b[1] * dm)).cos();
+            }
+            *beam.at_mut(dr, dc) = (acc / m) as f32;
+        }
+    }
+    beam
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rng::XorShift128Plus;
+    use crate::telescope::{steering, visibility};
+
+    fn setup() -> (AntennaArray, ImageGrid, Mat) {
+        let mut rng = XorShift128Plus::new(1);
+        let a = AntennaArray::lofar_like(8, 50e6, &mut rng);
+        let g = ImageGrid::new(12, 0.4);
+        let phi = steering::stacked_measurement_matrix(&a, &g);
+        (a, g, phi)
+    }
+
+    #[test]
+    fn dirty_beam_peak_at_center_is_one() {
+        let (a, g, _) = setup();
+        let beam = dirty_beam(&a, &g);
+        let c = g.resolution - 1;
+        assert!((beam.at(c, c) - 1.0).abs() < 1e-6);
+        // Center is the global max.
+        for v in &beam.data {
+            assert!(*v <= 1.0 + 1e-6);
+        }
+    }
+
+    #[test]
+    fn dirty_image_peaks_at_source() {
+        // A single noiseless point source: the dirty image peaks there.
+        let (_, g, phi) = setup();
+        let mut x = vec![0.0f32; g.pixels()];
+        let src = 5 * g.resolution + 7;
+        x[src] = 1.0;
+        let y = visibility::observe_clean(&phi, &x);
+        let img = dirty_image(&phi, &y);
+        let argmax = img
+            .iter()
+            .enumerate()
+            .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+            .unwrap()
+            .0;
+        assert_eq!(argmax, src);
+    }
+
+    #[test]
+    fn dirty_image_of_single_source_matches_beam_cut() {
+        // I_d = I * I_db for a unit point source ⇒ the dirty image row
+        // through the source equals the beam row (up to fp error).
+        let (a, g, phi) = setup();
+        let r = g.resolution;
+        let src_row = 6;
+        let src_col = 6;
+        let mut x = vec![0.0f32; g.pixels()];
+        x[g.index(src_row, src_col)] = 1.0;
+        let y = visibility::observe_clean(&phi, &x);
+        let img = dirty_image(&phi, &y);
+        let beam = dirty_beam(&a, &g);
+        for col in 0..r {
+            let img_v = img[g.index(src_row, col)];
+            let beam_v = beam.at(r - 1, (col as isize - src_col as isize + r as isize - 1) as usize);
+            assert!((img_v - beam_v).abs() < 1e-3, "col={col}: {img_v} vs {beam_v}");
+        }
+    }
+
+    #[test]
+    fn dirty_beam_symmetric() {
+        let (a, g, _) = setup();
+        let beam = dirty_beam(&a, &g);
+        let size = 2 * g.resolution - 1;
+        for i in 0..size {
+            for j in 0..size {
+                let v1 = beam.at(i, j);
+                let v2 = beam.at(size - 1 - i, size - 1 - j);
+                assert!((v1 - v2).abs() < 1e-5, "beam must be centro-symmetric");
+            }
+        }
+    }
+}

@@ -1,0 +1,201 @@
+//! Antenna array geometry: positions, baselines, layout generators.
+//!
+//! The paper uses one LOFAR station (CS302, 30 low-band antennas in the
+//! 15–80 MHz band). LOFAR LBA stations place dipoles in a dense
+//! pseudo-random cluster with a handful of outliers — we generate layouts
+//! with the same character (`lofar_like`): a core with sunflower-spiral
+//! pseudo-random packing plus ~20% scattered outer antennas. Uniform-grid
+//! and uniform-random layouts are provided for ablations.
+
+use crate::rng::XorShift128Plus;
+
+pub const SPEED_OF_LIGHT: f64 = 299_792_458.0;
+
+/// An antenna station: 2-D positions (meters) and observing frequency.
+#[derive(Debug, Clone)]
+pub struct AntennaArray {
+    /// Antenna positions in meters (x, y), projected station plane.
+    pub positions: Vec<[f64; 2]>,
+    /// Observing frequency in Hz.
+    pub freq_hz: f64,
+}
+
+impl AntennaArray {
+    pub fn len(&self) -> usize {
+        self.positions.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.positions.is_empty()
+    }
+
+    /// Observation wavelength λ = c / f (meters).
+    pub fn wavelength(&self) -> f64 {
+        SPEED_OF_LIGHT / self.freq_hz
+    }
+
+    /// LOFAR-LBA-like station: dense sunflower-spiral core (80%) with
+    /// jitter + scattered outliers (20%), ~87 m aperture like CS302's LBA
+    /// field.
+    pub fn lofar_like(l: usize, freq_hz: f64, rng: &mut XorShift128Plus) -> Self {
+        assert!(l >= 2, "need at least 2 antennas");
+        let golden = std::f64::consts::PI * (3.0 - 5.0f64.sqrt());
+        let core = (l as f64 * 0.8).ceil() as usize;
+        let core_radius = 30.0;
+        let outer_radius = 43.5; // CS302 LBA field is ~87 m across
+        let mut positions = Vec::with_capacity(l);
+        for k in 0..core {
+            // Sunflower packing: r ∝ sqrt(k), θ = k·golden-angle, + jitter.
+            let r = core_radius * ((k as f64 + 0.5) / core as f64).sqrt();
+            let theta = k as f64 * golden;
+            let jx = rng.uniform_in(-1.5, 1.5);
+            let jy = rng.uniform_in(-1.5, 1.5);
+            positions.push([r * theta.cos() + jx, r * theta.sin() + jy]);
+        }
+        for _ in core..l {
+            let r = rng.uniform_in(core_radius, outer_radius);
+            let theta = rng.uniform_in(0.0, 2.0 * std::f64::consts::PI);
+            positions.push([r * theta.cos(), r * theta.sin()]);
+        }
+        Self { positions, freq_hz }
+    }
+
+    /// Regular square grid (side ≈ √L), for ablations.
+    pub fn uniform_grid(l: usize, spacing_m: f64, freq_hz: f64) -> Self {
+        let side = (l as f64).sqrt().ceil() as usize;
+        let mut positions = Vec::with_capacity(l);
+        'outer: for i in 0..side {
+            for j in 0..side {
+                if positions.len() >= l {
+                    break 'outer;
+                }
+                positions.push([i as f64 * spacing_m, j as f64 * spacing_m]);
+            }
+        }
+        Self { positions, freq_hz }
+    }
+
+    /// Uniform random positions in a disc of the given radius.
+    pub fn random_disc(l: usize, radius_m: f64, freq_hz: f64, rng: &mut XorShift128Plus) -> Self {
+        let positions = (0..l)
+            .map(|_| {
+                let r = radius_m * rng.uniform().sqrt();
+                let t = rng.uniform_in(0.0, 2.0 * std::f64::consts::PI);
+                [r * t.cos(), r * t.sin()]
+            })
+            .collect();
+        Self { positions, freq_hz }
+    }
+
+    /// All ordered antenna pairs (i, k) — M = L² visibilities including
+    /// autocorrelations, matching the paper's M = L².
+    pub fn baselines_wavelengths(&self) -> Vec<[f64; 2]> {
+        let lambda = self.wavelength();
+        let l = self.len();
+        let mut out = Vec::with_capacity(l * l);
+        for i in 0..l {
+            for k in 0..l {
+                let u = (self.positions[i][0] - self.positions[k][0]) / lambda;
+                let v = (self.positions[i][1] - self.positions[k][1]) / lambda;
+                out.push([u, v]);
+            }
+        }
+        out
+    }
+
+    /// Unique baselines only: ordered pairs i < k (drops autocorrelations
+    /// and conjugate duplicates). M = L(L−1)/2. The stacked-real embedding
+    /// of the FULL L² set is rank-deficient (autocorrelation rows are
+    /// identical, conjugate pairs are linearly dependent), so RIP
+    /// diagnostics (Figs 3/7/8) use this set — physically, the distinct
+    /// visibilities an interferometer actually measures.
+    pub fn unique_baselines_wavelengths(&self) -> Vec<[f64; 2]> {
+        let lambda = self.wavelength();
+        let l = self.len();
+        let mut out = Vec::with_capacity(l * (l - 1) / 2);
+        for i in 0..l {
+            for k in (i + 1)..l {
+                let u = (self.positions[i][0] - self.positions[k][0]) / lambda;
+                let v = (self.positions[i][1] - self.positions[k][1]) / lambda;
+                out.push([u, v]);
+            }
+        }
+        out
+    }
+
+    /// Maximum baseline length in wavelengths (sets angular resolution).
+    pub fn max_baseline_wl(&self) -> f64 {
+        self.baselines_wavelengths()
+            .iter()
+            .map(|b| (b[0] * b[0] + b[1] * b[1]).sqrt())
+            .fold(0.0, f64::max)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn lofar_like_count_and_extent() {
+        let mut rng = XorShift128Plus::new(1);
+        let a = AntennaArray::lofar_like(30, 50e6, &mut rng);
+        assert_eq!(a.len(), 30);
+        for p in &a.positions {
+            let r = (p[0] * p[0] + p[1] * p[1]).sqrt();
+            assert!(r <= 50.0, "antenna outside field: r={r}");
+        }
+    }
+
+    #[test]
+    fn baselines_count_is_l_squared() {
+        let mut rng = XorShift128Plus::new(2);
+        let a = AntennaArray::lofar_like(7, 50e6, &mut rng);
+        assert_eq!(a.baselines_wavelengths().len(), 49);
+    }
+
+    #[test]
+    fn baselines_antisymmetric_with_zero_diagonal() {
+        let mut rng = XorShift128Plus::new(3);
+        let a = AntennaArray::lofar_like(5, 50e6, &mut rng);
+        let b = a.baselines_wavelengths();
+        let l = 5;
+        for i in 0..l {
+            assert_eq!(b[i * l + i], [0.0, 0.0]);
+            for k in 0..l {
+                assert!((b[i * l + k][0] + b[k * l + i][0]).abs() < 1e-12);
+                assert!((b[i * l + k][1] + b[k * l + i][1]).abs() < 1e-12);
+            }
+        }
+    }
+
+    #[test]
+    fn wavelength_lofar_band() {
+        let a = AntennaArray::uniform_grid(4, 5.0, 50e6);
+        assert!((a.wavelength() - 5.9958).abs() < 0.01);
+    }
+
+    #[test]
+    fn uniform_grid_positions() {
+        let a = AntennaArray::uniform_grid(4, 2.0, 50e6);
+        assert_eq!(a.len(), 4);
+        assert_eq!(a.positions[0], [0.0, 0.0]);
+        assert_eq!(a.positions[3], [2.0, 2.0]);
+    }
+
+    #[test]
+    fn random_disc_within_radius() {
+        let mut rng = XorShift128Plus::new(4);
+        let a = AntennaArray::random_disc(50, 10.0, 50e6, &mut rng);
+        for p in &a.positions {
+            assert!((p[0] * p[0] + p[1] * p[1]).sqrt() <= 10.0 + 1e-9);
+        }
+    }
+
+    #[test]
+    fn max_baseline_positive() {
+        let mut rng = XorShift128Plus::new(5);
+        let a = AntennaArray::lofar_like(10, 50e6, &mut rng);
+        assert!(a.max_baseline_wl() > 1.0);
+    }
+}

@@ -1,0 +1,107 @@
+//! Sky image grid: pixel ↔ direction-cosine mapping.
+//!
+//! The sky patch around the pointing direction is parameterized by
+//! direction cosines `(l, m) ∈ [-d, d]²` (paper §7.3: the half-width `d`
+//! is the instrument-dependent knob that tunes the RIP constants — Fig 7).
+//! Pixels are cell centers of an r×r grid, vectorized row-major
+//! (`w = row * r + col`, matching `vec(I)` of Definition 1).
+
+/// An r×r image grid over `[-d, d]²` in direction cosines.
+#[derive(Debug, Clone, Copy)]
+pub struct ImageGrid {
+    /// Pixels per axis.
+    pub resolution: usize,
+    /// Field-of-view half width in direction cosines (0 < d ≤ 1).
+    pub half_width: f64,
+}
+
+impl ImageGrid {
+    pub fn new(resolution: usize, half_width: f64) -> Self {
+        assert!(resolution >= 1);
+        assert!(
+            half_width > 0.0 && half_width <= 1.0,
+            "direction cosines need 0 < d <= 1, got {half_width}"
+        );
+        Self { resolution, half_width }
+    }
+
+    /// Total number of pixels N = r².
+    pub fn pixels(&self) -> usize {
+        self.resolution * self.resolution
+    }
+
+    /// Direction cosines (l, m) of the center of pixel (row, col).
+    pub fn direction(&self, row: usize, col: usize) -> [f64; 2] {
+        let r = self.resolution as f64;
+        let d = self.half_width;
+        let l = -d + 2.0 * d * (col as f64 + 0.5) / r;
+        let m = -d + 2.0 * d * (row as f64 + 0.5) / r;
+        [l, m]
+    }
+
+    /// Direction cosines of linear pixel index `w` (row-major).
+    pub fn direction_of(&self, w: usize) -> [f64; 2] {
+        self.direction(w / self.resolution, w % self.resolution)
+    }
+
+    /// Linear pixel index from (row, col).
+    pub fn index(&self, row: usize, col: usize) -> usize {
+        row * self.resolution + col
+    }
+
+    /// Pixel size in direction cosines.
+    pub fn cell(&self) -> f64 {
+        2.0 * self.half_width / self.resolution as f64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn pixel_count() {
+        assert_eq!(ImageGrid::new(16, 0.5).pixels(), 256);
+    }
+
+    #[test]
+    fn directions_span_symmetric_range() {
+        let g = ImageGrid::new(8, 0.4);
+        let first = g.direction(0, 0);
+        let last = g.direction(7, 7);
+        assert!((first[0] + last[0]).abs() < 1e-12, "symmetric about 0");
+        assert!((first[1] + last[1]).abs() < 1e-12);
+        assert!(first[0] > -0.4 && last[0] < 0.4);
+    }
+
+    #[test]
+    fn center_pixels_near_origin() {
+        let g = ImageGrid::new(2, 1.0);
+        // centers at ±0.5
+        assert_eq!(g.direction(0, 0), [-0.5, -0.5]);
+        assert_eq!(g.direction(1, 1), [0.5, 0.5]);
+    }
+
+    #[test]
+    fn index_roundtrip() {
+        let g = ImageGrid::new(5, 0.3);
+        for row in 0..5 {
+            for col in 0..5 {
+                let w = g.index(row, col);
+                assert_eq!(g.direction_of(w), g.direction(row, col));
+            }
+        }
+    }
+
+    #[test]
+    fn cell_size() {
+        let g = ImageGrid::new(10, 0.5);
+        assert!((g.cell() - 0.1).abs() < 1e-12);
+    }
+
+    #[test]
+    #[should_panic]
+    fn rejects_bad_half_width() {
+        ImageGrid::new(4, 1.5);
+    }
+}

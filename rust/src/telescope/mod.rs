@@ -1,0 +1,141 @@
+//! Radio-interferometry substrate (S6) — the paper's application domain.
+//!
+//! Implements the pipeline of the paper's §7 (supplementary): antenna
+//! geometry → baselines → measurement matrix Φ (Eqn. 75) → point-source sky
+//! → visibilities `y = Φx + e` at a target SNR → dirty image / dirty beam.
+//!
+//! **Substitution note (DESIGN.md §6):** we do not have the LOFAR CS302
+//! measurement set; given the station geometry and the image grid, Φ is
+//! fully determined by Eqn. 75, so a geometry-faithful simulator exercises
+//! the identical code path. The complex system is embedded into stacked
+//! real form (`[[Re Φ];[Im Φ]]`, exact for a real-valued sky), which keeps
+//! every solver and kernel in f32 real arithmetic.
+
+pub mod dirty;
+pub mod geometry;
+pub mod grid;
+pub mod sky;
+pub mod steering;
+pub mod visibility;
+
+pub use geometry::AntennaArray;
+pub use grid::ImageGrid;
+pub use sky::SkyModel;
+
+use crate::linalg::Mat;
+use crate::rng::XorShift128Plus;
+
+/// A fully materialized interferometric recovery problem.
+#[derive(Debug, Clone)]
+pub struct AstroProblem {
+    /// Stacked-real measurement matrix, (2·L²) × r².
+    pub phi: Mat,
+    /// Stacked-real visibilities (2·L²).
+    pub y: Vec<f32>,
+    /// Ground-truth sky vector (r²) — known because we synthesize it.
+    pub x_true: Vec<f32>,
+    /// Per-antenna noise std σ_n actually applied.
+    pub sigma_n: f32,
+    pub array: AntennaArray,
+    pub grid: ImageGrid,
+    pub sky: SkyModel,
+}
+
+/// Problem-construction parameters (paper §4 defaults).
+#[derive(Debug, Clone)]
+pub struct AstroConfig {
+    /// Number of antennas L (paper: 30 low-band antennas).
+    pub antennas: usize,
+    /// Image resolution r (pixels per axis; paper: 256, scaled default 64).
+    pub resolution: usize,
+    /// Field-of-view half width `d` in direction cosines (Fig 7 knob).
+    pub fov_half_width: f64,
+    /// Number of point sources (paper: 30 strong sources).
+    pub sources: usize,
+    /// SNR at antenna level in dB (paper: 0 dB).
+    pub snr_db: f64,
+    /// Observation frequency in Hz (LOFAR low band: 15–80 MHz).
+    pub freq_hz: f64,
+}
+
+impl Default for AstroConfig {
+    fn default() -> Self {
+        Self {
+            antennas: 30,
+            resolution: 64,
+            fov_half_width: 0.4,
+            sources: 30,
+            snr_db: 0.0,
+            freq_hz: 50e6,
+        }
+    }
+}
+
+impl AstroProblem {
+    /// Synthesize a complete problem from configuration + seed.
+    pub fn build(cfg: &AstroConfig, seed: u64) -> Self {
+        let mut rng = XorShift128Plus::new(seed);
+        let array = AntennaArray::lofar_like(cfg.antennas, cfg.freq_hz, &mut rng);
+        let grid = ImageGrid::new(cfg.resolution, cfg.fov_half_width);
+        let phi = steering::stacked_measurement_matrix(&array, &grid);
+        let sky = SkyModel::random_points(&grid, cfg.sources, &mut rng);
+        let x_true = sky.to_vector(grid.pixels());
+        let (y, sigma_n) = visibility::observe(&phi, &x_true, cfg.snr_db, &mut rng);
+        Self { phi, y, x_true, sigma_n, array, grid, sky }
+    }
+
+    /// Number of stacked-real measurement rows (2·L²).
+    pub fn m(&self) -> usize {
+        self.phi.rows
+    }
+
+    /// Number of pixels (r²).
+    pub fn n(&self) -> usize {
+        self.phi.cols
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn build_dimensions_consistent() {
+        let cfg = AstroConfig { antennas: 6, resolution: 16, sources: 5, ..Default::default() };
+        let p = AstroProblem::build(&cfg, 1);
+        assert_eq!(p.m(), 2 * 6 * 6);
+        assert_eq!(p.n(), 16 * 16);
+        assert_eq!(p.y.len(), p.m());
+        assert_eq!(p.x_true.len(), p.n());
+        assert_eq!(p.x_true.iter().filter(|&&v| v != 0.0).count(), 5);
+    }
+
+    #[test]
+    fn build_deterministic_in_seed() {
+        let cfg = AstroConfig { antennas: 4, resolution: 8, sources: 3, ..Default::default() };
+        let a = AstroProblem::build(&cfg, 7);
+        let b = AstroProblem::build(&cfg, 7);
+        assert_eq!(a.y, b.y);
+        assert_eq!(a.x_true, b.x_true);
+        let c = AstroProblem::build(&cfg, 8);
+        assert_ne!(a.y, c.y);
+    }
+
+    #[test]
+    fn snr_is_calibrated() {
+        let cfg = AstroConfig {
+            antennas: 8,
+            resolution: 16,
+            sources: 6,
+            snr_db: 0.0,
+            ..Default::default()
+        };
+        let p = AstroProblem::build(&cfg, 3);
+        // Reconstruct the clean visibilities and check achieved SNR ≈ 0 dB.
+        let clean = p.phi.matvec(&p.x_true);
+        let noise: Vec<f32> = p.y.iter().zip(&clean).map(|(y, c)| y - c).collect();
+        let snr = 10.0
+            * (crate::linalg::norm2_sq(&clean) / crate::linalg::norm2_sq(&noise)).log10();
+        assert!(snr.abs() < 1.5, "snr={snr}");
+    }
+}

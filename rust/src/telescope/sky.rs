@@ -1,0 +1,92 @@
+//! Point-source sky models (paper §7: "we assume a point source model for
+//! the sky ... the sky is populated with 30 strong sources").
+
+use super::ImageGrid;
+use crate::rng::XorShift128Plus;
+
+/// A sparse sky: point sources at pixel indices with positive fluxes.
+#[derive(Debug, Clone)]
+pub struct SkyModel {
+    /// (pixel index, flux) pairs; indices are distinct.
+    pub sources: Vec<(usize, f32)>,
+}
+
+impl SkyModel {
+    /// `count` sources at distinct random pixels, fluxes uniform in
+    /// [0.5, 1.5] (strong sources of comparable magnitude, the regime in
+    /// which IHT is known to do well — paper §4).
+    pub fn random_points(grid: &ImageGrid, count: usize, rng: &mut XorShift128Plus) -> Self {
+        let n = grid.pixels();
+        assert!(count <= n);
+        let pixels = rng.choose_k(n, count);
+        let sources = pixels
+            .into_iter()
+            .map(|p| (p, rng.uniform_in(0.5, 1.5) as f32))
+            .collect();
+        Self { sources }
+    }
+
+    /// Dense sky vector x ∈ R^n.
+    pub fn to_vector(&self, n: usize) -> Vec<f32> {
+        let mut x = vec![0.0f32; n];
+        for &(p, f) in &self.sources {
+            x[p] = f;
+        }
+        x
+    }
+
+    /// Support set (sorted pixel indices).
+    pub fn support(&self) -> Vec<usize> {
+        let mut s: Vec<usize> = self.sources.iter().map(|&(p, _)| p).collect();
+        s.sort_unstable();
+        s
+    }
+
+    pub fn sparsity(&self) -> usize {
+        self.sources.len()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn source_count_and_distinct() {
+        let g = ImageGrid::new(16, 0.4);
+        let mut rng = XorShift128Plus::new(1);
+        let sky = SkyModel::random_points(&g, 30, &mut rng);
+        assert_eq!(sky.sparsity(), 30);
+        let sup = sky.support();
+        let mut dedup = sup.clone();
+        dedup.dedup();
+        assert_eq!(sup, dedup, "pixels must be distinct");
+    }
+
+    #[test]
+    fn flux_range() {
+        let g = ImageGrid::new(16, 0.4);
+        let mut rng = XorShift128Plus::new(2);
+        let sky = SkyModel::random_points(&g, 50, &mut rng);
+        for &(_, f) in &sky.sources {
+            assert!((0.5..=1.5).contains(&f));
+        }
+    }
+
+    #[test]
+    fn to_vector_places_sources() {
+        let sky = SkyModel { sources: vec![(3, 1.0), (7, 0.5)] };
+        let x = sky.to_vector(10);
+        assert_eq!(x[3], 1.0);
+        assert_eq!(x[7], 0.5);
+        assert_eq!(x.iter().filter(|&&v| v != 0.0).count(), 2);
+    }
+
+    #[test]
+    fn full_sky_allowed() {
+        let g = ImageGrid::new(4, 0.4);
+        let mut rng = XorShift128Plus::new(3);
+        let sky = SkyModel::random_points(&g, 16, &mut rng);
+        assert_eq!(sky.sparsity(), 16);
+    }
+}

@@ -1,0 +1,173 @@
+//! Measurement-matrix formation (paper Eqn. 75).
+//!
+//! `Φ_{z,w} = exp(-j 2π ⟨p_{i,k}, r_{l,m}⟩)` with `z = i + L(k-1)` over
+//! antenna pairs and `w` over pixels; `p_{i,k}` is the baseline in
+//! wavelengths, `r_{l,m}` the pixel direction cosines. The complex system
+//! is embedded into stacked real form
+//!
+//! ```text
+//!   [Re y]   [Re Φ]
+//!   [Im y] = [Im Φ] · x + e_stacked        (exact for real sky x)
+//! ```
+//!
+//! so the entire solver stack stays in real f32 arithmetic. The embedding
+//! preserves inner products: ‖Φ_stacked x‖₂ = ‖Φ_complex x‖₂, so RIP
+//! constants carry over verbatim.
+
+use super::{AntennaArray, ImageGrid};
+use crate::linalg::Mat;
+use crate::par;
+
+/// Complex Φ as a pair (Re, Im), each L²×r².
+pub fn complex_measurement_matrix(array: &AntennaArray, grid: &ImageGrid) -> (Mat, Mat) {
+    let baselines = array.baselines_wavelengths();
+    complex_from_baselines(&baselines, grid)
+}
+
+/// Complex Φ over the UNIQUE baselines (i < k): L(L−1)/2 rows.
+pub fn complex_measurement_matrix_unique(array: &AntennaArray, grid: &ImageGrid) -> (Mat, Mat) {
+    let baselines = array.unique_baselines_wavelengths();
+    complex_from_baselines(&baselines, grid)
+}
+
+fn complex_from_baselines(baselines: &[[f64; 2]], grid: &ImageGrid) -> (Mat, Mat) {
+    let m = baselines.len();
+    let n = grid.pixels();
+    let mut re = Mat::zeros(m, n);
+    let mut im = Mat::zeros(m, n);
+    // Precompute pixel directions once.
+    let dirs: Vec<[f64; 2]> = (0..n).map(|w| grid.direction_of(w)).collect();
+    let two_pi = 2.0 * std::f64::consts::PI;
+    par::par_chunks_mut(&mut re.data, n, |start, chunk| {
+        // chunks are whole rows because we pass min_chunk = n
+        let row0 = start / n;
+        for (kr, row) in chunk.chunks_mut(n).enumerate() {
+            let b = baselines[row0 + kr];
+            for (w, cell) in row.iter_mut().enumerate() {
+                let phase = -two_pi * (b[0] * dirs[w][0] + b[1] * dirs[w][1]);
+                *cell = phase.cos() as f32;
+            }
+        }
+    });
+    par::par_chunks_mut(&mut im.data, n, |start, chunk| {
+        let row0 = start / n;
+        for (kr, row) in chunk.chunks_mut(n).enumerate() {
+            let b = baselines[row0 + kr];
+            for (w, cell) in row.iter_mut().enumerate() {
+                let phase = -two_pi * (b[0] * dirs[w][0] + b[1] * dirs[w][1]);
+                *cell = phase.sin() as f32;
+            }
+        }
+    });
+    (re, im)
+}
+
+/// Stacked-real Φ: (2·L²) × r², rows = [Re Φ; Im Φ].
+pub fn stacked_measurement_matrix(array: &AntennaArray, grid: &ImageGrid) -> Mat {
+    let (re, im) = complex_measurement_matrix(array, grid);
+    stack(re, im)
+}
+
+/// Stacked-real Φ over unique baselines: (L·(L−1)) × r².
+pub fn stacked_measurement_matrix_unique(array: &AntennaArray, grid: &ImageGrid) -> Mat {
+    let (re, im) = complex_measurement_matrix_unique(array, grid);
+    stack(re, im)
+}
+
+fn stack(re: Mat, im: Mat) -> Mat {
+    let m = re.rows;
+    let n = re.cols;
+    let mut data = re.data;
+    data.extend_from_slice(&im.data);
+    Mat { rows: 2 * m, cols: n, data }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rng::XorShift128Plus;
+
+    fn tiny() -> (AntennaArray, ImageGrid) {
+        let mut rng = XorShift128Plus::new(1);
+        let a = AntennaArray::lofar_like(4, 50e6, &mut rng);
+        let g = ImageGrid::new(8, 0.4);
+        (a, g)
+    }
+
+    #[test]
+    fn dimensions() {
+        let (a, g) = tiny();
+        let (re, im) = complex_measurement_matrix(&a, &g);
+        assert_eq!((re.rows, re.cols), (16, 64));
+        assert_eq!((im.rows, im.cols), (16, 64));
+        let s = stacked_measurement_matrix(&a, &g);
+        assert_eq!((s.rows, s.cols), (32, 64));
+    }
+
+    #[test]
+    fn unit_modulus_entries() {
+        let (a, g) = tiny();
+        let (re, im) = complex_measurement_matrix(&a, &g);
+        for (r, i) in re.data.iter().zip(&im.data) {
+            let mag = (r * r + i * i).sqrt();
+            assert!((mag - 1.0).abs() < 1e-5, "entry modulus {mag}");
+        }
+    }
+
+    #[test]
+    fn autocorrelation_rows_are_all_ones() {
+        // Baseline (i, i) has u = v = 0 ⇒ phase 0 ⇒ Re = 1, Im = 0.
+        let (a, g) = tiny();
+        let (re, im) = complex_measurement_matrix(&a, &g);
+        let l = a.len();
+        for i in 0..l {
+            let z = i * l + i;
+            assert!(re.row(z).iter().all(|&v| (v - 1.0).abs() < 1e-6));
+            assert!(im.row(z).iter().all(|&v| v.abs() < 1e-6));
+        }
+    }
+
+    #[test]
+    fn conjugate_symmetry_of_reversed_baselines() {
+        // Φ[(i,k)] = conj(Φ[(k,i)]) since baselines are antisymmetric.
+        let (a, g) = tiny();
+        let (re, im) = complex_measurement_matrix(&a, &g);
+        let l = a.len();
+        for i in 0..l {
+            for k in 0..l {
+                let z1 = i * l + k;
+                let z2 = k * l + i;
+                for w in 0..g.pixels() {
+                    assert!((re.at(z1, w) - re.at(z2, w)).abs() < 1e-5);
+                    assert!((im.at(z1, w) + im.at(z2, w)).abs() < 1e-5);
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn stacking_preserves_norm() {
+        // ‖Φ_stacked x‖₂² = ‖Re Φ x‖² + ‖Im Φ x‖² = ‖Φ_complex x‖².
+        let (a, g) = tiny();
+        let (re, im) = complex_measurement_matrix(&a, &g);
+        let s = stacked_measurement_matrix(&a, &g);
+        let mut rng = XorShift128Plus::new(2);
+        let x = rng.gaussian_vec(g.pixels());
+        let yr = re.matvec(&x);
+        let yi = im.matvec(&x);
+        let ys = s.matvec(&x);
+        let complex_nsq = crate::linalg::norm2_sq(&yr) + crate::linalg::norm2_sq(&yi);
+        let stacked_nsq = crate::linalg::norm2_sq(&ys);
+        assert!((complex_nsq - stacked_nsq).abs() / complex_nsq < 1e-5);
+    }
+
+    #[test]
+    fn wider_fov_changes_matrix() {
+        let (a, _) = tiny();
+        let g1 = ImageGrid::new(8, 0.1);
+        let g2 = ImageGrid::new(8, 0.8);
+        let m1 = stacked_measurement_matrix(&a, &g1);
+        let m2 = stacked_measurement_matrix(&a, &g2);
+        assert_ne!(m1.data, m2.data);
+    }
+}

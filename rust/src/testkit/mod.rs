@@ -1,0 +1,83 @@
+//! In-tree property-testing driver (no proptest offline; DESIGN.md §6).
+//!
+//! `forall` runs a property over `cases` pseudo-random inputs derived from a
+//! base seed; on failure it reports the exact case seed so the case can be
+//! replayed deterministically (`LPCS_PROP_SEED=<seed>` re-runs just that
+//! case). The property-test suites in `rust/tests/` are built on this.
+
+use crate::rng::XorShift128Plus;
+
+/// Run `prop(rng, case_index)` for `cases` independently seeded cases.
+/// Panics with the failing case seed on the first failure.
+pub fn forall(name: &str, base_seed: u64, cases: usize, prop: impl Fn(&mut XorShift128Plus, usize)) {
+    // Replay mode: run only the requested case seed.
+    if let Ok(v) = std::env::var("LPCS_PROP_SEED") {
+        if let Ok(seed) = v.parse::<u64>() {
+            let mut rng = XorShift128Plus::new(seed);
+            prop(&mut rng, 0);
+            return;
+        }
+    }
+    for case in 0..cases {
+        let case_seed = base_seed
+            .wrapping_mul(0x9E3779B97F4A7C15)
+            .wrapping_add(case as u64);
+        let result = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            let mut rng = XorShift128Plus::new(case_seed);
+            prop(&mut rng, case);
+        }));
+        if let Err(e) = result {
+            let msg = e
+                .downcast_ref::<String>()
+                .cloned()
+                .or_else(|| e.downcast_ref::<&str>().map(|s| s.to_string()))
+                .unwrap_or_else(|| "<non-string panic>".into());
+            panic!(
+                "property '{name}' failed at case {case} (replay with \
+                 LPCS_PROP_SEED={case_seed}): {msg}"
+            );
+        }
+    }
+}
+
+/// Random vector helpers for property bodies.
+pub fn vec_f32(rng: &mut XorShift128Plus, max_len: usize) -> Vec<f32> {
+    let n = 1 + rng.below(max_len);
+    rng.gaussian_vec(n)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passes_trivial_property() {
+        forall("abs-nonneg", 1, 50, |rng, _| {
+            let v = rng.gaussian_f32();
+            assert!(v.abs() >= 0.0);
+        });
+    }
+
+    #[test]
+    fn reports_failing_seed() {
+        let r = std::panic::catch_unwind(|| {
+            forall("always-fails", 2, 3, |_, _| panic!("boom"));
+        });
+        let err = r.unwrap_err();
+        let msg = err
+            .downcast_ref::<String>()
+            .cloned()
+            .or_else(|| err.downcast_ref::<&str>().map(|s| s.to_string()))
+            .unwrap_or_default();
+        assert!(msg.contains("LPCS_PROP_SEED="), "{msg}");
+    }
+
+    #[test]
+    fn vec_f32_length_bounds() {
+        let mut rng = XorShift128Plus::new(3);
+        for _ in 0..100 {
+            let v = vec_f32(&mut rng, 17);
+            assert!(!v.is_empty() && v.len() <= 17);
+        }
+    }
+}

@@ -1,0 +1,156 @@
+//! Property tests on the coordinator invariants (testkit-driven; the
+//! offline environment vendors no proptest — see DESIGN.md §6).
+
+use lpcs::config::EngineKind;
+use lpcs::coordinator::batcher::form_batches;
+use lpcs::coordinator::job::{JobSpec, JobState, ProblemHandle};
+use lpcs::coordinator::queue::{BoundedQueue, Priority, PushError};
+use lpcs::linalg::Mat;
+use lpcs::rng::XorShift128Plus;
+use lpcs::testkit::forall;
+use std::sync::Arc;
+use std::time::Duration;
+
+fn random_spec(rng: &mut XorShift128Plus, mats: &[Arc<Mat>]) -> JobSpec {
+    let phi = mats[rng.below(mats.len())].clone();
+    JobSpec {
+        y: vec![0.0; phi.rows],
+        s: 1 + rng.below(4),
+        bits_phi: [2u8, 4, 8][rng.below(3)],
+        bits_y: 8,
+        engine: [EngineKind::NativeQuant, EngineKind::NativeDense][rng.below(2)],
+        seed: rng.next_u64(),
+        problem: ProblemHandle::new(phi),
+    }
+}
+
+#[test]
+fn prop_batches_partition_and_preserve_order() {
+    forall("batch-partition", 11, 60, |rng, _| {
+        let mats: Vec<Arc<Mat>> = (0..3).map(|_| Arc::new(Mat::zeros(4, 8))).collect();
+        let n = rng.below(40);
+        let jobs: Vec<(u64, JobSpec)> =
+            (0..n as u64).map(|id| (id, random_spec(rng, &mats))).collect();
+        let max_batch = 1 + rng.below(6);
+        let batches = form_batches(jobs.clone(), max_batch);
+        // (1) partition: every job appears exactly once, in order.
+        let flat: Vec<u64> =
+            batches.iter().flat_map(|b| b.jobs.iter().map(|(i, _)| *i)).collect();
+        let want: Vec<u64> = (0..n as u64).collect();
+        assert_eq!(flat, want);
+        // (2) homogeneity + size cap.
+        for b in &batches {
+            assert!(b.len() >= 1 && b.len() <= max_batch);
+            for (_, s) in &b.jobs {
+                assert_eq!(s.batch_key(), b.key);
+            }
+        }
+    });
+}
+
+#[test]
+fn prop_batches_are_maximal_runs() {
+    forall("batch-maximal", 13, 40, |rng, _| {
+        let mats: Vec<Arc<Mat>> = (0..2).map(|_| Arc::new(Mat::zeros(2, 4))).collect();
+        let jobs: Vec<(u64, JobSpec)> =
+            (0..20u64).map(|id| (id, random_spec(rng, &mats))).collect();
+        let max_batch = 2 + rng.below(5);
+        let batches = form_batches(jobs, max_batch);
+        // Two consecutive batches with the same key imply the first hit the
+        // size cap (otherwise they would have merged).
+        for w in batches.windows(2) {
+            if w[0].key == w[1].key {
+                assert_eq!(w[0].len(), max_batch);
+            }
+        }
+    });
+}
+
+#[test]
+fn prop_queue_never_exceeds_capacity_and_conserves() {
+    forall("queue-capacity", 17, 30, |rng, _| {
+        let cap = 1 + rng.below(8);
+        let q = BoundedQueue::new(cap);
+        let mut pushed = vec![];
+        let mut popped = vec![];
+        let mut next = 0u64;
+        for _ in 0..rng.below(100) {
+            assert!(q.len() <= cap, "queue exceeded capacity");
+            if rng.uniform() < 0.6 {
+                match q.try_push(next, Priority::Normal) {
+                    Ok(()) => {
+                        pushed.push(next);
+                        next += 1;
+                    }
+                    Err(PushError::Full(_)) => assert_eq!(q.len(), cap),
+                    Err(PushError::Closed(_)) => unreachable!(),
+                }
+            } else if let Some(v) = q.pop_timeout(Duration::from_millis(1)) {
+                popped.push(v);
+            }
+        }
+        while let Some(v) = q.pop_timeout(Duration::from_millis(1)) {
+            popped.push(v);
+        }
+        assert_eq!(pushed, popped, "FIFO conservation");
+    });
+}
+
+#[test]
+fn prop_queue_high_priority_overtakes_normal_only() {
+    forall("queue-priority", 19, 30, |rng, _| {
+        let q = BoundedQueue::new(64);
+        let mut highs = vec![];
+        let mut normals = vec![];
+        for i in 0..rng.below(50) as i64 {
+            if rng.uniform() < 0.3 {
+                q.try_push(i, Priority::High).unwrap();
+                highs.push(i);
+            } else {
+                q.try_push(i, Priority::Normal).unwrap();
+                normals.push(i);
+            }
+        }
+        let mut got = vec![];
+        while let Some(v) = q.pop_timeout(Duration::from_millis(1)) {
+            got.push(v);
+        }
+        let want: Vec<i64> = highs.iter().chain(normals.iter()).cloned().collect();
+        assert_eq!(got, want, "all high first, each class FIFO");
+    });
+}
+
+#[test]
+fn prop_job_state_machine_legality() {
+    forall("job-states", 23, 100, |rng, _| {
+        use JobState::*;
+        let all = [Queued, Running, Done, Failed];
+        let a = all[rng.below(4)];
+        let b = all[rng.below(4)];
+        let legal = matches!((a, b), (Queued, Running) | (Queued, Failed) | (Running, Done) | (Running, Failed));
+        assert_eq!(a.can_transition(b), legal, "{a:?} -> {b:?}");
+    });
+}
+
+#[test]
+fn prop_drain_matching_preserves_fifo_of_rest() {
+    forall("drain-fifo", 29, 40, |rng, _| {
+        let q = BoundedQueue::new(128);
+        let vals: Vec<u32> = (0..rng.below(60) as u32).map(|_| rng.below(10) as u32).collect();
+        for &v in &vals {
+            q.try_push(v, Priority::Normal).unwrap();
+        }
+        let drained = q.drain_matching(rng.below(10) + 1, |v| v % 2 == 0);
+        // Drained items form a prefix of the queue content.
+        assert!(drained.len() <= vals.len());
+        for (d, v) in drained.iter().zip(&vals) {
+            assert_eq!(d, v);
+        }
+        // Remaining items come out in original relative order.
+        let mut rest = vec![];
+        while let Some(v) = q.pop_timeout(Duration::from_millis(1)) {
+            rest.push(v);
+        }
+        assert_eq!(rest, vals[drained.len()..].to_vec());
+    });
+}

@@ -1,0 +1,148 @@
+//! Integration: the PJRT/XLA execution engines must agree with the native
+//! rust engines — the core cross-layer correctness signal (L1/L2 artifacts
+//! vs the L3 reference implementation).
+//!
+//! Requires `make artifacts` (skips gracefully when absent so `cargo test`
+//! works in a fresh checkout).
+
+use lpcs::algorithms::niht::{niht_dense, solve};
+use lpcs::algorithms::qniht::{QuantKernel, RequantMode};
+use lpcs::algorithms::support::support_of;
+use lpcs::algorithms::{NihtKernel, SolveOptions};
+use lpcs::linalg::Mat;
+use lpcs::metrics;
+use lpcs::rng::XorShift128Plus;
+use lpcs::runtime::{Runtime, XlaDenseKernel, XlaQuantKernel};
+use std::path::PathBuf;
+
+fn artifact_dir() -> Option<PathBuf> {
+    let dir = PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    dir.join("manifest.json").exists().then_some(dir)
+}
+
+/// Planted problem at the tiny artifact shape (64×128, s=8).
+fn tiny_problem(seed: u64) -> (Mat, Vec<f32>, Vec<f32>, usize) {
+    let (m, n, s) = (64usize, 128usize, 8usize);
+    let mut rng = XorShift128Plus::new(seed);
+    let phi = Mat::from_fn(m, n, |_, _| rng.gaussian_f32() / (m as f32).sqrt());
+    let mut x = vec![0.0f32; n];
+    for i in rng.choose_k(n, s) {
+        x[i] = rng.gaussian_f32() + 1.5 * rng.gaussian_f32().signum();
+    }
+    let y = phi.matvec(&x);
+    (phi, y, x, s)
+}
+
+#[test]
+fn manifest_lists_all_kinds_for_all_shapes() {
+    let Some(dir) = artifact_dir() else {
+        eprintln!("skipping: run `make artifacts` first");
+        return;
+    };
+    let rt = Runtime::new(&dir).unwrap();
+    for tag in rt.manifest().shape_tags() {
+        for kind in ["qniht_step", "apply_step", "qgrad", "niht_step_f32", "apply_step_f32"] {
+            assert!(
+                rt.manifest().find_kind(kind, &tag).is_some(),
+                "missing {kind} for {tag}"
+            );
+        }
+    }
+}
+
+#[test]
+fn xla_dense_solve_matches_native_dense() {
+    let Some(dir) = artifact_dir() else {
+        eprintln!("skipping: run `make artifacts` first");
+        return;
+    };
+    let (phi, y, x_true, s) = tiny_problem(1);
+    let native = niht_dense(&phi, &y, s, &SolveOptions::default());
+    let mut k = XlaDenseKernel::new(&dir, "tiny_64x128", &phi, &y).unwrap();
+    let xla = solve(&mut k, s, &SolveOptions::default());
+    // Identical control flow over numerically identical steps.
+    assert_eq!(native.iterations, xla.iterations);
+    let d = metrics::recovery_error(&xla.x, &native.x);
+    assert!(d < 1e-4, "engines diverge: {d}");
+    assert!(metrics::recovery_error(&xla.x, &x_true) < 1e-2);
+}
+
+#[test]
+fn xla_quant_solve_matches_native_quant() {
+    let Some(dir) = artifact_dir() else {
+        eprintln!("skipping: run `make artifacts` first");
+        return;
+    };
+    let (phi, y, _, s) = tiny_problem(2);
+    let seed = 99;
+    let mut nk = QuantKernel::new(&phi, &y, 8, 8, RequantMode::Fixed, seed);
+    let native = solve(&mut nk, s, &SolveOptions::default());
+    let mut xk = XlaQuantKernel::new(&dir, "tiny_64x128", &phi, &y, 8, 8, seed).unwrap();
+    let xla = solve(&mut xk, s, &SolveOptions::default());
+    // Same seed ⇒ same codes ⇒ same trajectory.
+    assert_eq!(support_of(&native.x), support_of(&xla.x));
+    let d = metrics::recovery_error(&xla.x, &native.x);
+    assert!(d < 1e-3, "engines diverge: {d}");
+}
+
+#[test]
+fn xla_quant_single_steps_match_native() {
+    let Some(dir) = artifact_dir() else {
+        eprintln!("skipping: run `make artifacts` first");
+        return;
+    };
+    let (phi, y, _, s) = tiny_problem(3);
+    let seed = 7;
+    let mut nk = QuantKernel::new(&phi, &y, 4, 8, RequantMode::Fixed, seed);
+    let mut xk = XlaQuantKernel::new(&dir, "tiny_64x128", &phi, &y, 4, 8, seed).unwrap();
+    let x0 = vec![0.0f32; 128];
+    let a = nk.full_step(&x0, s);
+    let b = xk.full_step(&x0, s);
+    assert!((a.mu - b.mu).abs() / a.mu.max(1e-9) < 1e-3, "mu {} vs {}", a.mu, b.mu);
+    assert!((a.resid_nsq - b.resid_nsq).abs() / a.resid_nsq < 1e-3);
+    for (u, v) in a.g.iter().zip(&b.g) {
+        assert!((u - v).abs() < 1e-2 * a.g.iter().fold(0f32, |m, &z| m.max(z.abs())));
+    }
+    assert_eq!(support_of(&a.x_next), support_of(&b.x_next));
+}
+
+#[test]
+fn xla_apply_step_respects_mu() {
+    let Some(dir) = artifact_dir() else {
+        eprintln!("skipping: run `make artifacts` first");
+        return;
+    };
+    let (phi, y, _, s) = tiny_problem(4);
+    let mut xk = XlaQuantKernel::new(&dir, "tiny_64x128", &phi, &y, 8, 8, 5).unwrap();
+    let x0 = vec![0.0f32; 128];
+    let st = xk.full_step(&x0, s);
+    // Re-applying at the same mu reproduces the proposal.
+    let (x_same, dxn, _) = xk.apply_step(&x0, &st.g, st.mu, s);
+    assert_eq!(support_of(&x_same), support_of(&st.x_next));
+    assert!((dxn - st.dx_nsq).abs() / st.dx_nsq < 1e-3);
+    // A smaller mu gives a smaller move.
+    let (_, dxn_small, _) = xk.apply_step(&x0, &st.g, st.mu * 0.25, s);
+    assert!(dxn_small < dxn);
+}
+
+#[test]
+fn artifact_s_is_baked() {
+    let Some(dir) = artifact_dir() else {
+        eprintln!("skipping: run `make artifacts` first");
+        return;
+    };
+    let (phi, y, _, _) = tiny_problem(5);
+    let k = XlaQuantKernel::new(&dir, "tiny_64x128", &phi, &y, 2, 8, 1).unwrap();
+    assert_eq!(k.artifact_s(), 8);
+}
+
+#[test]
+fn shape_mismatch_is_rejected() {
+    let Some(dir) = artifact_dir() else {
+        eprintln!("skipping: run `make artifacts` first");
+        return;
+    };
+    let (phi, y, _, _) = tiny_problem(6);
+    // Wrong tag for this problem shape.
+    assert!(XlaQuantKernel::new(&dir, "gauss_256x512", &phi, &y, 2, 8, 1).is_err());
+}

@@ -1,0 +1,152 @@
+//! Property tests on solver + quantization invariants (testkit-driven).
+
+use lpcs::algorithms::niht::niht_dense;
+use lpcs::algorithms::qniht::{qniht, RequantMode};
+use lpcs::algorithms::support::{hard_threshold, support_of, top_s_indices};
+use lpcs::algorithms::SolveOptions;
+use lpcs::linalg::{self, Mat};
+use lpcs::quant::packed::PackedMatrix;
+use lpcs::quant::{QuantizedMatrix, Quantizer};
+use lpcs::rng::XorShift128Plus;
+use lpcs::testkit::forall;
+
+#[test]
+fn prop_hard_threshold_invariants() {
+    forall("hs-invariants", 1, 120, |rng, _| {
+        let n = 1 + rng.below(200);
+        let x = rng.gaussian_vec(n);
+        let s = rng.below(n + 1);
+        let h = hard_threshold(&x, s);
+        // (1) at most s nonzeros (exactly s when s <= n and x dense-random).
+        assert!(support_of(&h).len() <= s.max(0));
+        // (2) kept values are unchanged.
+        for i in support_of(&h) {
+            assert_eq!(h[i], x[i]);
+        }
+        // (3) every kept |value| >= every dropped |value|.
+        let kept_min = support_of(&h).iter().map(|&i| x[i].abs()).fold(f32::MAX, f32::min);
+        for (i, &v) in x.iter().enumerate() {
+            if h[i] == 0.0 && s > 0 && support_of(&h).len() == s {
+                assert!(v.abs() <= kept_min + 1e-6);
+            }
+        }
+        // (4) idempotence.
+        assert_eq!(hard_threshold(&h, s), h);
+    });
+}
+
+#[test]
+fn prop_top_s_sorted_and_unique() {
+    forall("top-s-sorted", 3, 120, |rng, _| {
+        let n = 1 + rng.below(128);
+        let x = rng.gaussian_vec(n);
+        let s = rng.below(n + 1);
+        let idx = top_s_indices(&x, s);
+        assert_eq!(idx.len(), s.min(n));
+        assert!(idx.windows(2).all(|w| w[0] < w[1]), "ascending + unique");
+        assert!(idx.iter().all(|&i| i < n));
+    });
+}
+
+#[test]
+fn prop_quantize_pack_roundtrip() {
+    forall("pack-roundtrip", 5, 60, |rng, _| {
+        let m = 1 + rng.below(20);
+        let n = 1 + rng.below(40);
+        let bits = [2u8, 4, 8][rng.below(3)];
+        let a = Mat::from_fn(m, n, |_, _| rng.gaussian_f32());
+        let qm = QuantizedMatrix::from_mat(&a, bits, rng);
+        let back = PackedMatrix::pack(&qm).unpack();
+        assert_eq!(qm.codes, back.codes);
+        assert_eq!(qm.scale, back.scale);
+        assert_eq!(qm.bits, back.bits);
+    });
+}
+
+#[test]
+fn prop_quantization_error_within_lemma4_spacing() {
+    forall("quant-error", 7, 60, |rng, _| {
+        let bits = 2 + rng.below(7) as u8;
+        let q = Quantizer::new(bits);
+        let v = rng.uniform_in(-1.0, 1.0) as f32;
+        let dq = q.dequantize_one(q.quantize_one(v, rng.uniform_f32(), 1.0), 1.0);
+        // per-element error bounded by the level spacing
+        assert!((dq - v).abs() <= 1.0 / q.half() as f32 + 1e-6);
+    });
+}
+
+#[test]
+fn prop_niht_output_always_s_sparse_and_finite() {
+    forall("niht-sparse", 9, 12, |rng, _| {
+        let m = 24 + rng.below(40);
+        let n = 2 * m;
+        let s = 1 + rng.below(6);
+        let phi = Mat::from_fn(m, n, |_, _| rng.gaussian_f32() / (m as f32).sqrt());
+        let y = rng.gaussian_vec(m); // arbitrary observation, not planted
+        let opts = SolveOptions { max_iters: 30, ..Default::default() };
+        let r = niht_dense(&phi, &y, s, &opts);
+        assert!(support_of(&r.x).len() <= s);
+        assert!(r.x.iter().all(|v| v.is_finite()));
+    });
+}
+
+#[test]
+fn prop_qniht_never_worse_than_trivial_zero_by_much() {
+    // The solver's residual must end at or below the zero-solution residual
+    // (it starts at x = 0, and NIHT accepts only non-increasing cost).
+    forall("qniht-cost", 13, 8, |rng, _| {
+        let m = 32 + rng.below(32);
+        let n = 2 * m;
+        let s = 1 + rng.below(4);
+        let phi = Mat::from_fn(m, n, |_, _| rng.gaussian_f32() / (m as f32).sqrt());
+        let mut x = vec![0.0f32; n];
+        for i in rng.choose_k(n, s) {
+            x[i] = 1.0 + rng.uniform_f32();
+        }
+        let y = phi.matvec(&x);
+        let bits = [4u8, 8][rng.below(2)];
+        let r = qniht(&phi, &y, s, bits, 8, RequantMode::Fixed, rng.next_u64(),
+            &SolveOptions { max_iters: 60, ..Default::default() });
+        // residual of the solution vs residual of zero (= ||y||)
+        let resid = linalg::norm2(&linalg::sub(&y, &phi.matvec(&r.x)));
+        assert!(
+            resid <= linalg::norm2(&y) * 1.05,
+            "solver ended worse than doing nothing: {resid} vs {}",
+            linalg::norm2(&y)
+        );
+    });
+}
+
+#[test]
+fn prop_recovery_error_improves_with_snr_on_average() {
+    // Weak-monotonicity statistical property across the testkit cases.
+    let errs_low = std::sync::Mutex::new(Vec::new());
+    let errs_high = std::sync::Mutex::new(Vec::new());
+    forall("snr-monotone", 17, 6, |rng, case| {
+        let (m, n, s) = (64usize, 128usize, 4usize);
+        let phi = Mat::from_fn(m, n, |_, _| rng.gaussian_f32() / (m as f32).sqrt());
+        let mut x = vec![0.0f32; n];
+        for i in rng.choose_k(n, s) {
+            x[i] = 2.0;
+        }
+        let clean = phi.matvec(&x);
+        for (snr_db, errs) in [(0.0f64, &errs_low), (20.0, &errs_high)] {
+            let p = linalg::norm2_sq(&clean) as f64 / 10f64.powf(snr_db / 10.0);
+            let sd = (p / m as f64).sqrt() as f32;
+            let mut r2 = XorShift128Plus::new(case as u64 * 31 + snr_db as u64);
+            let y: Vec<f32> = clean.iter().map(|v| v + sd * r2.gaussian_f32()).collect();
+            let rec = niht_dense(&phi, &y, s, &SolveOptions::default());
+            errs.lock().unwrap().push(lpcs::metrics::recovery_error(&rec.x, &x));
+        }
+    });
+    let mean = |v: &std::sync::Mutex<Vec<f64>>| {
+        let v = v.lock().unwrap();
+        v.iter().sum::<f64>() / v.len() as f64
+    };
+    assert!(
+        mean(&errs_high) < mean(&errs_low),
+        "high-SNR error {} must beat low-SNR {}",
+        mean(&errs_high),
+        mean(&errs_low)
+    );
+}

@@ -1,61 +1,109 @@
-//! Bench E4 (Fig 5): low-precision matvec kernels vs f32 — per-iteration
-//! speedup at the paper's two CPU routines (matvec + sparse scale-and-add).
+//! Bench E4 (Fig 5): low-precision matvec kernels vs f32, and the
+//! dispatched SIMD backend vs the portable scalar reference.
+//!
+//! Emits `BENCH_lowprec.json` (median/p10/p90 seconds per kernel × bits)
+//! so the perf trajectory is machine-readable across PRs. Kernel names:
+//! `packed_matvec/{scalar|dispatched}/{2,4,8}bit`, etc. On machines without
+//! AVX2 the dispatched backend auto-selects the scalar (or NEON-stub) path
+//! and the two rows coincide.
 
-use lpcs::benchkit;
+use lpcs::benchkit::JsonReporter;
 use lpcs::linalg::Mat;
 use lpcs::lowprec;
 use lpcs::perfmodel::cpu::traffic_speedup_bound;
 use lpcs::quant::packed::PackedMatrix;
-use lpcs::quant::QuantizedMatrix;
+use lpcs::quant::{QuantizedMatrix, Quantizer};
 use lpcs::rng::XorShift128Plus;
+use lpcs::simd::{self, Backend};
+
+fn dim(var: &str, default: usize) -> usize {
+    std::env::var(var).ok().and_then(|v| v.parse().ok()).unwrap_or(default)
+}
 
 fn main() {
-    // Paper-scale matrix (LOFAR CS302: M = 900 baselines × N = 65,536
-    // pixels ⇒ 236 MB at f32). This is deliberately larger than LLC so the
-    // f32 path is DRAM-bound — the regime the paper's speedup lives in.
-    let (m, n) = (900usize, 65536usize);
+    // Acceptance-scale matrix (4096×16384 ⇒ 256 MB at f32): larger than LLC
+    // so the f32 path is DRAM-bound — the regime the paper's speedup lives
+    // in. Override with LPCS_BENCH_M / LPCS_BENCH_N for quick runs.
+    let m = dim("LPCS_BENCH_M", 4096);
+    let n = dim("LPCS_BENCH_N", 16384);
     let mut rng = XorShift128Plus::new(1);
     let a = Mat::from_fn(m, n, |_, _| rng.gaussian_f32());
     let x = rng.gaussian_vec(n);
-    let v = rng.gaussian_vec(m);
 
-    println!("== Fig 5: per-iteration kernels, {m}x{n} ==");
-    let f32_stats = benchkit::run("matvec f32 (baseline)", 3, 15, || a.matvec(&x));
+    let scalar = simd::by_backend(Backend::Scalar);
+    let dispatched = simd::active();
+    println!(
+        "== Fig 5: per-iteration kernels, {m}x{n}, dispatched backend: {} ==",
+        dispatched.name()
+    );
+
+    let mut rep = JsonReporter::new("lowprec");
+    let f32_stats = rep.run("matvec/f32", 2, 11, || a.matvec(&x));
 
     for bits in [2u8, 4, 8] {
         let qm = QuantizedMatrix::from_mat(&a, bits, &mut rng);
         let p = PackedMatrix::pack(&qm);
-        let s = benchkit::run(
-            &format!("matvec packed {bits}-bit"),
-            3,
-            15,
-            || lowprec::packed_matvec(&p, &x),
-        );
+
+        let s_scalar = rep.run(&format!("packed_matvec/scalar/{bits}bit"), 2, 11, || {
+            lowprec::packed_matvec_with(scalar, &p, &x)
+        });
+        let s_disp = rep.run(&format!("packed_matvec/dispatched/{bits}bit"), 2, 11, || {
+            lowprec::packed_matvec_with(dispatched, &p, &x)
+        });
         println!(
-            "    -> speedup {:.2}x (traffic bound {:.0}x, bytes {} vs {})",
-            f32_stats.median_s() / s.median_s(),
+            "    -> {bits}-bit: {:.2}x over f32, {:.2}x dispatched-over-scalar \
+             (traffic bound {:.0}x, bytes {} vs {})",
+            f32_stats.median_s() / s_disp.median_s(),
+            s_scalar.median_s() / s_disp.median_s(),
             traffic_speedup_bound(bits as u32),
             p.bytes(),
             a.bytes_f32()
         );
+
+        // Pure integer path (both operands quantized).
+        let q8 = Quantizer::new(8);
+        let (xq, _xscale) = q8.quantize_auto(&x, &mut rng);
+        rep.run(&format!("packed_matvec_q8/scalar/{bits}bit"), 2, 11, || {
+            lowprec::packed_matvec_q8_with(scalar, &p, &xq, 1.0)
+        });
+        rep.run(&format!("packed_matvec_q8/dispatched/{bits}bit"), 2, 11, || {
+            lowprec::packed_matvec_q8_with(dispatched, &p, &xq, 1.0)
+        });
+
+        // Sparse scale-and-add over the packed transposed buffer
+        // (|supp| = 30 — the QNIHT step-path shape).
+        let qt = qm.transposed();
+        let pt = PackedMatrix::pack(&qt);
+        // pt rows are Φ's columns: index over the full 0..n row range.
+        let idx: Vec<usize> = (0..30).map(|k| k * 133 % n).collect();
+        let vals = vec![1.0f32; 30];
+        rep.run(&format!("packed_scale_add/dispatched/{bits}bit"), 2, 11, || {
+            lowprec::packed_scale_add_with(dispatched, &pt, &idx, &vals)
+        });
     }
 
     println!("\n== unpacked int8 codes path ==");
     let qm8 = QuantizedMatrix::from_mat(&a, 8, &mut rng);
-    let s = benchkit::run("matvec int8 codes", 3, 15, || {
+    let v = rng.gaussian_vec(m);
+    let s = rep.run("qmatvec/int8", 2, 11, || {
         lowprec::qmatvec(&qm8.codes, m, n, qm8.multiplier(), &x)
     });
     println!("    -> speedup {:.2}x over f32", f32_stats.median_s() / s.median_s());
-    benchkit::run("matvec_t int8 codes", 3, 15, || {
+    rep.run("qmatvec_t/int8", 2, 11, || {
         lowprec::qmatvec_t(&qm8.codes, m, n, qm8.multiplier(), &v)
     });
 
     println!("\n== sparse scale-and-add (Φ · x_sparse, |supp| = 30) ==");
-    let qt = qm8.transposed();
+    let qt8 = qm8.transposed();
     let idx: Vec<usize> = (0..30).map(|k| k * 133 % n).collect();
     let vals = vec![1.0f32; 30];
-    benchkit::run("qmatvec_sparse (col-contiguous)", 3, 15, || {
-        lowprec::qmatvec_sparse(&qt.codes, n, m, qt.multiplier(), &idx, &vals)
+    rep.run("qmatvec_sparse/int8", 2, 11, || {
+        lowprec::qmatvec_sparse(&qt8.codes, n, m, qt8.multiplier(), &idx, &vals)
     });
-    benchkit::run("matvec_sparse f32", 3, 15, || a.matvec_sparse(&idx, &vals));
+    rep.run("matvec_sparse/f32", 2, 11, || a.matvec_sparse(&idx, &vals));
+
+    match rep.write_file(".") {
+        Ok(path) => println!("\nwrote {}", path.display()),
+        Err(e) => eprintln!("\nfailed to write BENCH_lowprec.json: {e}"),
+    }
 }

@@ -14,6 +14,12 @@
 //! implement the underlying normalized-IHT rule from Blumensath & Davies
 //! (2010), which the text describes (Eqns. 6–7) and which the convergence
 //! theory (Theorem 2/3) actually analyzes.
+//!
+//! The dense f32 kernel here deliberately does NOT dispatch through
+//! [`crate::simd`]: it is the paper's 32-bit *baseline*, and keeping it on
+//! the portable autovectorized loops keeps the Fig 5/6 comparison honest
+//! and its trajectories bit-reproducible across machines. The quantized
+//! kernel ([`super::qniht`]) is where the SIMD backend layer applies.
 
 use super::support::{hard_threshold, support_of, supports_equal, top_s_indices};
 use super::{IterStat, NihtKernel, SolveOptions, SolveResult, StepOut};

@@ -14,6 +14,13 @@
 //!   from the retained full-precision Φ (Algorithm 1's
 //!   `{Φ̂₁ … Φ̂₂ₙ*}`) — the theory-faithful mode used to validate
 //!   Theorem 3's expectation bound.
+//!
+//! Every packed kernel this module drives (`packed_matvec`,
+//! `packed_scale_add`, `packed_matvec_q8`) dispatches through the runtime
+//! SIMD backend layer ([`crate::simd`]) and runs its row loops on the
+//! persistent [`crate::par`] pool, so per-iteration cost is kernel time,
+//! not thread-spawn or dispatch overhead. [`QuantKernel::simd_backend`]
+//! reports which backend this process selected.
 
 use super::niht::solve;
 use super::support::{hard_threshold, support_of, top_s_indices};
@@ -122,6 +129,12 @@ impl QuantKernel {
 
     pub fn bits_phi(&self) -> u8 {
         self.codes2.bits
+    }
+
+    /// Name of the SIMD kernel backend executing this kernel's matvecs
+    /// ("avx2", "neon", or "scalar") — diagnostics / bench labels.
+    pub fn simd_backend(&self) -> &'static str {
+        crate::simd::backend_name()
     }
 
     /// Φ̂₂ x (sparse x → the paper's dense scale-and-add over columns).
@@ -354,5 +367,12 @@ mod tests {
         let (phi, y, _) = planted(48, 96, 4, 7);
         let r = qniht(&phi, &y, 4, 4, 8, RequantMode::Fixed, 47, &SolveOptions::default());
         assert!(support_of(&r.x).len() <= 4);
+    }
+
+    #[test]
+    fn reports_simd_backend() {
+        let (phi, y, _) = planted(16, 32, 2, 9);
+        let k = QuantKernel::new(&phi, &y, 4, 8, RequantMode::Fixed, 1);
+        assert!(["scalar", "avx2", "neon"].contains(&k.simd_backend()));
     }
 }

@@ -3,8 +3,15 @@
 //! Deliberately small: warmup, fixed iteration count, robust statistics
 //! (median / mean / p10 / p90), and a black-box sink to defeat dead-code
 //! elimination. All `cargo bench` targets (harness = false) use this.
+//!
+//! [`JsonReporter`] additionally collects results into a machine-readable
+//! `BENCH_<name>.json` file (median/p10/p90 seconds per kernel) so bench
+//! runs leave a perf trajectory that later PRs can diff against.
 
+use crate::io::json::Json;
+use std::collections::BTreeMap;
 use std::hint::black_box;
+use std::path::Path;
 use std::time::{Duration, Instant};
 
 #[derive(Debug, Clone, Copy)]
@@ -19,6 +26,18 @@ pub struct BenchStats {
 impl BenchStats {
     pub fn median_s(&self) -> f64 {
         self.median.as_secs_f64()
+    }
+
+    pub fn mean_s(&self) -> f64 {
+        self.mean.as_secs_f64()
+    }
+
+    pub fn p10_s(&self) -> f64 {
+        self.p10.as_secs_f64()
+    }
+
+    pub fn p90_s(&self) -> f64 {
+        self.p90.as_secs_f64()
     }
 }
 
@@ -60,6 +79,67 @@ pub fn run<T>(name: &str, warmup: usize, iters: usize, f: impl FnMut() -> T) -> 
     stats
 }
 
+/// Collects bench results and serializes them as JSON via [`crate::io::json`]
+/// (no external crates offline). One reporter per bench target; `write_file`
+/// emits `BENCH_<bench>.json` next to the working directory of `cargo bench`.
+pub struct JsonReporter {
+    bench: String,
+    entries: Vec<(String, BenchStats)>,
+}
+
+impl JsonReporter {
+    pub fn new(bench: &str) -> Self {
+        Self { bench: bench.to_string(), entries: Vec::new() }
+    }
+
+    /// Record an already-measured result under `name`.
+    pub fn record(&mut self, name: &str, stats: &BenchStats) {
+        self.entries.push((name.to_string(), *stats));
+    }
+
+    /// Run + print + record in one step (the usual bench-target call).
+    pub fn run<T>(
+        &mut self,
+        name: &str,
+        warmup: usize,
+        iters: usize,
+        f: impl FnMut() -> T,
+    ) -> BenchStats {
+        let stats = run(name, warmup, iters, f);
+        self.record(name, &stats);
+        stats
+    }
+
+    /// The collected results as a JSON value.
+    pub fn to_json(&self) -> Json {
+        let results: Vec<Json> = self
+            .entries
+            .iter()
+            .map(|(name, s)| {
+                let mut o = BTreeMap::new();
+                o.insert("name".to_string(), Json::Str(name.clone()));
+                o.insert("iters".to_string(), Json::Num(s.iters as f64));
+                o.insert("median_s".to_string(), Json::Num(s.median_s()));
+                o.insert("mean_s".to_string(), Json::Num(s.mean_s()));
+                o.insert("p10_s".to_string(), Json::Num(s.p10_s()));
+                o.insert("p90_s".to_string(), Json::Num(s.p90_s()));
+                Json::Obj(o)
+            })
+            .collect();
+        let mut top = BTreeMap::new();
+        top.insert("bench".to_string(), Json::Str(self.bench.clone()));
+        top.insert("results".to_string(), Json::Arr(results));
+        Json::Obj(top)
+    }
+
+    /// Write `BENCH_<bench>.json` into `dir`; returns the path written.
+    pub fn write_file(&self, dir: impl AsRef<Path>) -> std::io::Result<std::path::PathBuf> {
+        let path = dir.as_ref().join(format!("BENCH_{}.json", self.bench));
+        std::fs::write(&path, self.to_json().dump())?;
+        Ok(path)
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -82,5 +162,34 @@ mod tests {
         let s = bench(0, 3, || std::thread::sleep(Duration::from_millis(2)));
         assert!(s.median >= Duration::from_millis(2));
         assert!(s.median < Duration::from_millis(50));
+    }
+
+    #[test]
+    fn json_reporter_roundtrips() {
+        let mut rep = JsonReporter::new("unit");
+        let s = bench(0, 5, || black_box(3u64.pow(7)));
+        rep.record("pow/scalar/2bit", &s);
+        rep.record("pow/avx2/2bit", &s);
+        let j = Json::parse(&rep.to_json().dump()).unwrap();
+        assert_eq!(j.get("bench").unwrap().as_str(), Some("unit"));
+        let rs = j.get("results").unwrap().as_arr().unwrap();
+        assert_eq!(rs.len(), 2);
+        assert_eq!(rs[0].get("name").unwrap().as_str(), Some("pow/scalar/2bit"));
+        assert_eq!(rs[0].get("iters").unwrap().as_usize(), Some(5));
+        for key in ["median_s", "mean_s", "p10_s", "p90_s"] {
+            assert!(rs[0].get(key).unwrap().as_f64().is_some(), "{key}");
+        }
+    }
+
+    #[test]
+    fn json_reporter_writes_file() {
+        let dir = std::env::temp_dir();
+        let mut rep = JsonReporter::new("filetest");
+        let s = bench(0, 3, || black_box(1 + 1));
+        rep.record("noop", &s);
+        let path = rep.write_file(&dir).unwrap();
+        let text = std::fs::read_to_string(&path).unwrap();
+        assert!(Json::parse(&text).is_ok());
+        let _ = std::fs::remove_file(path);
     }
 }

@@ -32,6 +32,7 @@ pub mod repro;
 pub mod rip;
 pub mod rng;
 pub mod runtime;
+pub mod simd;
 pub mod telescope;
 pub mod testkit;
 

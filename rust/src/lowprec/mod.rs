@@ -13,19 +13,33 @@
 //!     in-register: 4–16× less memory traffic than f32 (the Fig 5 lever).
 //!   * `packed_matvec_q8` — both operands quantized: pure integer dots
 //!     (the paper's "casts its computation in terms of dot-products").
+//!
+//! Since the `simd` layer landed, this module owns the *shape* of each
+//! kernel (parallel decomposition, bias bookkeeping, scratch management)
+//! while the per-element inner loops dispatch through
+//! [`crate::simd::Kernels`] — AVX2 when the CPU has it, the portable scalar
+//! reference otherwise. Every public kernel has a `*_with` variant taking an
+//! explicit backend so benches and parity tests can pin one.
+//!
+//! Row loops run on the persistent [`crate::par`] pool. All kernels compute
+//! each output element independently or accumulate in fixed input order,
+//! so results are identical under any `LPCS_THREADS` setting.
 
 use crate::par;
 use crate::quant::packed::PackedMatrix;
+use crate::quant::Quantizer;
+use crate::simd::{self, Kernels};
 
 /// y = mult · (codes @ x); codes row-major m×n int8.
 pub fn qmatvec(codes: &[i8], m: usize, n: usize, mult: f32, x: &[f32]) -> Vec<f32> {
     assert_eq!(codes.len(), m * n);
     assert_eq!(x.len(), n);
+    let k = simd::active();
     let mut y = vec![0.0f32; m];
     par::par_chunks_mut(&mut y, 32, |start, chunk| {
-        for (k, yi) in chunk.iter_mut().enumerate() {
-            let row = &codes[(start + k) * n..(start + k + 1) * n];
-            *yi = mult * dot_i8_f32(row, x);
+        for (r, yi) in chunk.iter_mut().enumerate() {
+            let row = &codes[(start + r) * n..(start + r + 1) * n];
+            *yi = mult * k.dot_i8_f32(row, x);
         }
     });
     y
@@ -35,16 +49,19 @@ pub fn qmatvec(codes: &[i8], m: usize, n: usize, mult: f32, x: &[f32]) -> Vec<f3
 pub fn qmatvec_t(codes: &[i8], m: usize, n: usize, mult: f32, v: &[f32]) -> Vec<f32> {
     assert_eq!(codes.len(), m * n);
     assert_eq!(v.len(), m);
+    let k = simd::active();
     let mut y = vec![0.0f32; n];
-    par::par_chunks_mut(&mut y, 256, |start, chunk| {
+    // Grain-aligned chunks: the backend's scale-add rounds its per-chunk
+    // tail differently from its vector/FMA body, so boundaries must fall on
+    // the backend's block grid for every thread count (bit-identical
+    // outputs under any LPCS_THREADS).
+    par::par_chunks_mut_aligned(&mut y, 256, k.f32_grain(), |start, chunk| {
         for (i, &vi) in v.iter().enumerate() {
             if vi == 0.0 {
                 continue;
             }
             let row = &codes[i * n + start..i * n + start + chunk.len()];
-            for (c, &r) in chunk.iter_mut().zip(row) {
-                *c += vi * r as f32;
-            }
+            k.scale_add_i8(chunk, row, vi);
         }
     });
     for c in &mut y {
@@ -55,7 +72,9 @@ pub fn qmatvec_t(codes: &[i8], m: usize, n: usize, mult: f32, v: &[f32]) -> Vec<
 
 /// y = mult · Φ x for sparse x, using the TRANSPOSED code buffer
 /// (`codes_t` is n×m row-major, i.e. columns of Φ are contiguous rows):
-/// the paper's dense scale-and-add routine.
+/// the paper's dense scale-and-add routine, parallel over output chunks.
+/// Each chunk accumulates the support entries in `idx` order, so the result
+/// is independent of the thread count.
 pub fn qmatvec_sparse(
     codes_t: &[i8],
     n: usize,
@@ -66,14 +85,17 @@ pub fn qmatvec_sparse(
 ) -> Vec<f32> {
     assert_eq!(codes_t.len(), n * m);
     assert_eq!(idx.len(), vals.len());
+    let k = simd::active();
     let mut y = vec![0.0f32; m];
-    for (&j, &xj) in idx.iter().zip(vals) {
-        debug_assert!(j < n);
-        let col = &codes_t[j * m..(j + 1) * m];
-        for (yi, &c) in y.iter_mut().zip(col) {
-            *yi += xj * c as f32;
+    // Grain-aligned chunks: see qmatvec_t — keeps the backend's FMA/tail
+    // split on a fixed grid so results are identical for any LPCS_THREADS.
+    par::par_chunks_mut_aligned(&mut y, 256, k.f32_grain(), |start, chunk| {
+        for (&j, &xj) in idx.iter().zip(vals) {
+            debug_assert!(j < n);
+            let col = &codes_t[j * m + start..j * m + start + chunk.len()];
+            k.scale_add_i8(chunk, col, xj);
         }
-    }
+    });
     for yi in &mut y {
         *yi *= mult;
     }
@@ -105,234 +127,89 @@ pub fn qmatvec_sparse_cols(
     y
 }
 
-/// Dot of an int8 row with an f32 vector — 16 contiguous accumulator
-/// lanes (see `linalg::dot` for the vectorization rationale; the i8→f32
-/// widening maps onto VPMOVSXBD + VCVTDQ2PS).
+/// Dot of an int8 row with an f32 vector (backend-dispatched).
 #[inline]
 pub fn dot_i8_f32(row: &[i8], x: &[f32]) -> f32 {
-    debug_assert_eq!(row.len(), x.len());
-    const LANES: usize = 16;
-    let mut acc = [0.0f32; LANES];
-    let chunks = row.len() / LANES;
-    for c in 0..chunks {
-        let i = c * LANES;
-        let (rv, xv) = (&row[i..i + LANES], &x[i..i + LANES]);
-        for k in 0..LANES {
-            acc[k] += rv[k] as f32 * xv[k];
-        }
-    }
-    let mut s = 0.0f32;
-    for k in 0..LANES {
-        s += acc[k];
-    }
-    for i in chunks * LANES..row.len() {
-        s += row[i] as f32 * x[i];
-    }
-    s
+    simd::active().dot_i8_f32(row, x)
 }
 
-/// Pure integer dot: packed row (b-bit fields, biased by half) against an
-/// int8 vector. Returns the raw integer accumulator (caller applies scales).
+/// Dot of a u8 row with an f32 vector (backend-dispatched).
 #[inline]
-fn packed_dot_q8(words: &[u64], bits: u8, half: i32, n: usize, xq: &[i8]) -> i64 {
-    let lanes = 64 / bits as usize;
-    let mask = (1u64 << bits) - 1;
-    let mut acc: i64 = 0;
-    let mut j = 0usize;
-    for &w in words {
-        let mut ww = w;
-        let take = lanes.min(n - j);
-        for k in 0..take {
-            let code = (ww & mask) as i32 - half;
-            acc += (code as i64) * (xq[j + k] as i64);
-            ww >>= bits;
-        }
-        j += take;
-        if j >= n {
-            break;
-        }
-    }
-    acc
-}
-
-/// Byte → 4 signed 2-bit codes, packed little-endian into one u32
-/// (field − half, half = 1): one table hit + one unaligned store decodes
-/// 4 elements.
-fn lut2_u32() -> &'static [u32; 256] {
-    static LUT: std::sync::OnceLock<[u32; 256]> = std::sync::OnceLock::new();
-    LUT.get_or_init(|| {
-        let mut t = [0u32; 256];
-        for (b, entry) in t.iter_mut().enumerate() {
-            let mut bytes = [0u8; 4];
-            for k in 0..4 {
-                bytes[k] = ((((b >> (2 * k)) & 0b11) as i8) - 1) as u8;
-            }
-            *entry = u32::from_le_bytes(bytes);
-        }
-        t
-    })
-}
-
-/// Byte → 2 signed 4-bit codes packed into one u16 (field − half, half=4).
-fn lut4_u16() -> &'static [u16; 256] {
-    static LUT: std::sync::OnceLock<[u16; 256]> = std::sync::OnceLock::new();
-    LUT.get_or_init(|| {
-        let mut t = [0u16; 256];
-        for (b, entry) in t.iter_mut().enumerate() {
-            let lo = ((((b >> 0) & 0xF) as i8) - 4) as u8;
-            let hi = ((((b >> 4) & 0xF) as i8) - 4) as u8;
-            *entry = u16::from_le_bytes([lo, hi]);
-        }
-        t
-    })
-}
-
-/// Generic shift/mask decode (tail path + odd widths).
-fn decode_generic(words: &[u64], bits: u8, n: usize, scratch: &mut [i8]) {
-    let lanes = 64 / bits as usize;
-    let mask = (1u64 << bits) - 1;
-    let half = crate::quant::Quantizer::new(bits).half();
-    let mut j = 0;
-    for &w in words {
-        let mut ww = w;
-        let take = lanes.min(n - j);
-        for k in 0..take {
-            scratch[j + k] = ((ww & mask) as i32 - half) as i8;
-            ww >>= bits;
-        }
-        j += take;
-        if j >= n {
-            break;
-        }
-    }
+pub fn dot_u8_f32(row: &[u8], x: &[f32]) -> f32 {
+    simd::active().dot_u8_f32(row, x)
 }
 
 /// Decode one packed row into an i8 scratch buffer (length >= n).
 ///
 /// Perf note (EXPERIMENTS.md §Perf): per-lane shift/mask extraction costs
-/// ~4 ops/element and defeats vectorization. The hot path decodes whole
-/// words through byte LUTs that emit 4 (2-bit) or 2 (4-bit) codes per
-/// single u32/u16 store into an L1-resident scratch row; the vectorized
-/// `dot_i8_f32` then consumes the row. Ragged tails fall back to the
-/// generic shift/mask loop.
+/// ~4 ops/element and defeats vectorization. The scalar backend decodes
+/// whole words through byte LUTs (4 codes per u32 store at 2 bits); the
+/// AVX2 backend unpacks fields fully in-register. Ragged tails fall back
+/// to the generic shift/mask loop inside each backend.
 #[inline]
 pub fn decode_row(words: &[u64], bits: u8, n: usize, scratch: &mut [i8]) {
-    debug_assert!(scratch.len() >= n);
-    let lanes = 64 / bits as usize;
-    let full_words = n / lanes;
-    let out = scratch.as_mut_ptr() as *mut u8;
-    match bits {
-        2 => {
-            let lut = lut2_u32();
-            for (wi, &w) in words[..full_words].iter().enumerate() {
-                let bytes = w.to_le_bytes();
-                let base = wi * 32;
-                for (bi, b) in bytes.into_iter().enumerate() {
-                    // SAFETY: base+4bi+4 <= full_words*32 <= n <= scratch.len()
-                    unsafe {
-                        (out.add(base + 4 * bi) as *mut u32)
-                            .write_unaligned(lut[b as usize]);
-                    }
-                }
-            }
-        }
-        4 => {
-            let lut = lut4_u16();
-            for (wi, &w) in words[..full_words].iter().enumerate() {
-                let bytes = w.to_le_bytes();
-                let base = wi * 16;
-                for (bi, b) in bytes.into_iter().enumerate() {
-                    unsafe {
-                        (out.add(base + 2 * bi) as *mut u16)
-                            .write_unaligned(lut[b as usize]);
-                    }
-                }
-            }
-        }
-        8 => {
-            // field = code + 64: subtract in the byte domain (wrapping sub
-            // vectorizes to one psubb over the whole row).
-            let src = &words[..full_words];
-            for (wi, &w) in src.iter().enumerate() {
-                let bytes = w.to_le_bytes();
-                let base = wi * 8;
-                for (bi, b) in bytes.into_iter().enumerate() {
-                    scratch[base + bi] = b.wrapping_sub(64) as i8;
-                }
-            }
-        }
-        _ => {
-            decode_generic(words, bits, n, scratch);
-            return;
-        }
-    }
-    // Ragged tail (n not a multiple of lanes-per-word).
-    let done = full_words * lanes;
-    if done < n {
-        decode_generic(&words[full_words..], bits, n - done, &mut scratch[done..]);
-    }
+    simd::active().decode_row(words, bits, n, scratch)
 }
 
-/// Dot of a u8 row with an f32 vector (16 accumulator lanes).
+fn gcd(a: usize, b: usize) -> usize {
+    let (mut a, mut b) = (a, b);
+    while b != 0 {
+        (a, b) = (b, a % b);
+    }
+    a
+}
+
+fn lcm(a: usize, b: usize) -> usize {
+    a / gcd(a, b) * b
+}
+
+/// View the first `n` packed bytes of an 8-bit row (fields ARE `code + 64`
+/// bytes; rows are u64-padded so any `n ≤ 8·words` is in bounds).
 #[inline]
-fn dot_u8_f32(row: &[u8], x: &[f32]) -> f32 {
-    debug_assert_eq!(row.len(), x.len());
-    const LANES: usize = 16;
-    let mut acc = [0.0f32; LANES];
-    let chunks = row.len() / LANES;
-    for c in 0..chunks {
-        let i = c * LANES;
-        let (rv, xv) = (&row[i..i + LANES], &x[i..i + LANES]);
-        for k in 0..LANES {
-            acc[k] += rv[k] as f32 * xv[k];
-        }
-    }
-    let mut s = 0.0f32;
-    for k in 0..LANES {
-        s += acc[k];
-    }
-    for i in chunks * LANES..row.len() {
-        s += row[i] as f32 * x[i];
-    }
-    s
+fn row_bytes(row: &[u64], n: usize) -> &[u8] {
+    debug_assert!(n <= row.len() * 8);
+    // SAFETY: u64 words reinterpreted as bytes; length checked above.
+    unsafe { std::slice::from_raw_parts(row.as_ptr() as *const u8, n) }
 }
 
-/// y = A x streaming the packed representation.
+/// y = A x streaming the packed representation (auto-selected backend).
+pub fn packed_matvec(p: &PackedMatrix, x: &[f32]) -> Vec<f32> {
+    packed_matvec_with(simd::active(), p, x)
+}
+
+/// [`packed_matvec`] with an explicit kernel backend.
 ///
 /// * 8-bit: no decode at all — the packed bytes ARE `code + 64`, so
 ///   `dot = Σ byte·x − 64·Σx` with Σx hoisted out of the row loop
-///   (one u8·f32 dot straight over the packed storage).
-/// * 2/4-bit: LUT-decode each row into an L1 scratch, then the
-///   vectorized i8 dot.
-pub fn packed_matvec(p: &PackedMatrix, x: &[f32]) -> Vec<f32> {
+///   (one u8·f32 dot straight over the packed storage; works for ANY `n`
+///   because rows are word-padded, so ragged tails need no fallback).
+/// * 2/4-bit: backend decode of each row into an L1 scratch, then the
+///   backend int8 dot.
+pub fn packed_matvec_with(k: &dyn Kernels, p: &PackedMatrix, x: &[f32]) -> Vec<f32> {
     assert_eq!(x.len(), p.n);
     let mult = p.multiplier();
     let mut y = vec![0.0f32; p.m];
     let wpr = p.words_per_row;
     let words = &p.words;
     let (bits, n) = (p.bits, p.n);
-    if bits == 8 && n % 8 == 0 {
+    if bits == 8 {
         let sum_x: f32 = x.iter().sum();
         par::par_chunks_mut(&mut y, 32, |start, chunk| {
-            for (k, yi) in chunk.iter_mut().enumerate() {
-                let i = start + k;
+            for (r, yi) in chunk.iter_mut().enumerate() {
+                let i = start + r;
                 let row = &words[i * wpr..(i + 1) * wpr];
-                // SAFETY: u64 words reinterpreted as bytes, len = n.
-                let bytes: &[u8] = unsafe {
-                    std::slice::from_raw_parts(row.as_ptr() as *const u8, n)
-                };
-                *yi = mult * (dot_u8_f32(bytes, x) - 64.0 * sum_x);
+                *yi = mult * (k.dot_u8_f32(row_bytes(row, n), x) - 64.0 * sum_x);
             }
         });
         return y;
     }
     par::par_chunks_mut(&mut y, 32, |start, chunk| {
         let mut scratch = vec![0i8; n];
-        for (k, yi) in chunk.iter_mut().enumerate() {
-            let i = start + k;
+        for (r, yi) in chunk.iter_mut().enumerate() {
+            let i = start + r;
             let row = &words[i * wpr..(i + 1) * wpr];
-            decode_row(row, bits, n, &mut scratch);
-            *yi = mult * dot_i8_f32(&scratch[..n], x);
+            k.decode_row(row, bits, n, &mut scratch);
+            *yi = mult * k.dot_i8_f32(&scratch[..n], x);
         }
     });
     y
@@ -341,36 +218,79 @@ pub fn packed_matvec(p: &PackedMatrix, x: &[f32]) -> Vec<f32> {
 /// y += c · (decoded row) for each (row, c) pair — the packed form of the
 /// paper's dense scale-and-add (Φ·x_sparse over a transposed buffer).
 pub fn packed_scale_add(p: &PackedMatrix, idx: &[usize], vals: &[f32]) -> Vec<f32> {
+    packed_scale_add_with(simd::active(), p, idx, vals)
+}
+
+/// [`packed_scale_add`] with an explicit kernel backend.
+///
+/// Parallel over word-aligned output chunks: each chunk decodes only its
+/// segment of every support row (chunk starts are multiples of
+/// lanes-per-word, so a segment is a whole-word sub-row) and accumulates
+/// the support entries in `idx` order — identical results for any thread
+/// count.
+pub fn packed_scale_add_with(
+    k: &dyn Kernels,
+    p: &PackedMatrix,
+    idx: &[usize],
+    vals: &[f32],
+) -> Vec<f32> {
     assert_eq!(idx.len(), vals.len());
     let mult = p.multiplier();
     let mut y = vec![0.0f32; p.n];
-    let mut scratch = vec![0i8; p.n];
-    for (&r, &c) in idx.iter().zip(vals) {
-        debug_assert!(r < p.m);
-        decode_row(p.row_words(r), p.bits, p.n, &mut scratch);
-        let cm = c * mult;
-        for (yi, &s) in y.iter_mut().zip(scratch.iter()) {
-            *yi += cm * s as f32;
+    let lanes = PackedMatrix::lanes(p.bits);
+    let wpr = p.words_per_row;
+    let words = &p.words;
+    let bits = p.bits;
+    // Chunk starts must sit on word boundaries (lanes) AND the backend's
+    // f32 block grid — a true lcm, since lanes is not a power of two for
+    // hand-built odd widths (e.g. bits=5 ⇒ lanes=12).
+    let align = lcm(lanes, k.f32_grain());
+    par::par_chunks_mut_aligned(&mut y, 256, align, |start, chunk| {
+        debug_assert_eq!(start % lanes, 0);
+        let w0 = start / lanes;
+        let mut scratch = vec![0i8; chunk.len()];
+        for (&r, &c) in idx.iter().zip(vals) {
+            debug_assert!(r < p.m);
+            let seg = &words[r * wpr + w0..(r + 1) * wpr];
+            k.decode_row(seg, bits, chunk.len(), &mut scratch);
+            k.scale_add_i8(chunk, &scratch, c * mult);
         }
-    }
+    });
     y
 }
 
 /// y = A x with x quantized to int8 (integer dot path). `x_mult` is x's
 /// dequantization multiplier; the result is in f32 units.
 pub fn packed_matvec_q8(p: &PackedMatrix, xq: &[i8], x_mult: f32) -> Vec<f32> {
+    packed_matvec_q8_with(simd::active(), p, xq, x_mult)
+}
+
+/// [`packed_matvec_q8`] with an explicit kernel backend.
+///
+/// The backend computes the RAW field dot `Σ field·xq` (unsigned fields fit
+/// `maddubs`-class instructions directly); the bias is removed here via
+/// `Σ code·xq = Σ field·xq − half·Σxq`, exactly, in integers — so all
+/// backends are bit-identical on this path.
+pub fn packed_matvec_q8_with(
+    k: &dyn Kernels,
+    p: &PackedMatrix,
+    xq: &[i8],
+    x_mult: f32,
+) -> Vec<f32> {
     assert_eq!(xq.len(), p.n);
-    let half = crate::quant::Quantizer::new(p.bits).half();
+    let half = Quantizer::new(p.bits).half() as i64;
+    let sum_xq: i64 = xq.iter().map(|&v| v as i64).sum();
     let mult = p.multiplier() * x_mult;
     let mut y = vec![0.0f32; p.m];
     let wpr = p.words_per_row;
     let words = &p.words;
     let (bits, n) = (p.bits, p.n);
     par::par_chunks_mut(&mut y, 32, |start, chunk| {
-        for (k, yi) in chunk.iter_mut().enumerate() {
-            let i = start + k;
+        for (r, yi) in chunk.iter_mut().enumerate() {
+            let i = start + r;
             let row = &words[i * wpr..(i + 1) * wpr];
-            *yi = mult * packed_dot_q8(row, bits, half, n, xq) as f32;
+            let fdot = k.packed_field_dot_q8(row, bits, n, xq);
+            *yi = mult * (fdot - half * sum_xq) as f32;
         }
     });
     y
@@ -446,6 +366,21 @@ mod tests {
     }
 
     #[test]
+    fn packed_matvec_8bit_ragged_n() {
+        // Regression: the 8-bit fast path used to be skipped whenever
+        // n % 8 != 0 (full-row decode fallback). It now handles any n.
+        for n in [1usize, 7, 9, 41, 63, 65, 127] {
+            let (qm, x, _) = setup(9, n, 8, 500 + n as u64);
+            let p = PackedMatrix::pack(&qm);
+            let got = packed_matvec(&p, &x);
+            let want = qmatvec(&qm.codes, qm.m, qm.n, qm.multiplier(), &x);
+            for (g, w) in got.iter().zip(&want) {
+                assert!((g - w).abs() < 1e-3 * (1.0 + w.abs()), "n={n}");
+            }
+        }
+    }
+
+    #[test]
     fn packed_matvec_q8_integer_path() {
         let (qm, x, _) = setup(17, 41, 2, 30);
         let p = PackedMatrix::pack(&qm);
@@ -511,6 +446,28 @@ mod tests {
     }
 
     #[test]
+    fn packed_scale_add_wide_output_all_widths() {
+        // Output long enough to split across several aligned chunks.
+        for bits in [2u8, 4, 8] {
+            let (qm, _, _) = setup(6, 700, bits, 80 + bits as u64);
+            let p = PackedMatrix::pack(&qm);
+            let idx = vec![0usize, 3, 5];
+            let vals = vec![1.0f32, -0.5, 0.25];
+            let got = packed_scale_add(&p, &idx, &vals);
+            let mut want = vec![0.0f32; 700];
+            let mult = p.multiplier();
+            for (&r, &c) in idx.iter().zip(&vals) {
+                for j in 0..700 {
+                    want[j] += c * mult * qm.codes[r * 700 + j] as f32;
+                }
+            }
+            for (g, w) in got.iter().zip(&want) {
+                assert!((g - w).abs() < 1e-3 * (1.0 + w.abs()), "bits={bits}");
+            }
+        }
+    }
+
+    #[test]
     fn dot_i8_f32_matches_naive() {
         let mut rng = XorShift128Plus::new(50);
         for n in [0usize, 1, 3, 5, 64, 101] {
@@ -518,6 +475,17 @@ mod tests {
             let x = rng.gaussian_vec(n);
             let naive: f32 = row.iter().zip(&x).map(|(&c, &v)| c as f32 * v).sum();
             assert!((dot_i8_f32(&row, &x) - naive).abs() < 1e-2, "n={n}");
+        }
+    }
+
+    #[test]
+    fn dot_u8_f32_matches_naive() {
+        let mut rng = XorShift128Plus::new(51);
+        for n in [0usize, 1, 3, 5, 64, 101] {
+            let row: Vec<u8> = (0..n).map(|_| rng.below(129) as u8).collect();
+            let x = rng.gaussian_vec(n);
+            let naive: f32 = row.iter().zip(&x).map(|(&c, &v)| c as f32 * v).sum();
+            assert!((dot_u8_f32(&row, &x) - naive).abs() < 1e-2, "n={n}");
         }
     }
 }

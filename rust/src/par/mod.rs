@@ -1,13 +1,54 @@
-//! Minimal data-parallel helpers over `std::thread::scope`.
+//! Minimal data-parallel helpers over a **persistent worker pool**.
 //!
-//! The offline build environment has no rayon, so the few hot loops that
-//! benefit from threads use this module instead. The API is deliberately
-//! tiny: chunked parallel-for over an output slice, and a parallel map over
-//! an index range.
+//! The offline build environment has no rayon, so the hot loops use this
+//! module instead. The API is deliberately tiny: chunked parallel-for over
+//! an output slice (optionally with aligned chunk boundaries) and a
+//! parallel map over an index range.
+//!
+//! Earlier revisions spawned fresh OS threads per call via
+//! `std::thread::scope`; NIHT runs hundreds of iterations per recovery and
+//! each iteration makes several `par` calls, so thread-creation latency was
+//! a fixed tax on every kernel (tens of µs per call — comparable to the
+//! 2-bit matvec itself at small sizes). Now a lazily-initialized pool of
+//! `available_parallelism` workers is spawned once per process and jobs are
+//! pushed onto a shared queue:
+//!
+//! * the calling thread always executes the first chunk itself, then
+//!   **helps** drain the queue while waiting — so progress is guaranteed
+//!   even under nested `par` calls or if worker spawn failed;
+//! * chunk boundaries depend only on the requested parallelism, and every
+//!   kernel built on these helpers computes each output element
+//!   independently or in fixed input order, so results are identical for
+//!   any `LPCS_THREADS` setting;
+//! * worker panics are caught, forwarded, and re-raised on the caller —
+//!   never deadlocking the latch.
+//!
+//! `LPCS_THREADS` is still honored per call (it bounds how many chunks are
+//! created; `LPCS_THREADS=1` bypasses the pool entirely).
+
+use std::collections::VecDeque;
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::{Arc, Condvar, Mutex, OnceLock};
+
+/// Process-wide programmatic thread-count override (0 = none). Preferred
+/// over mutating `LPCS_THREADS` at runtime: `std::env::set_var` racing a
+/// concurrent `getenv` is UB on glibc, and tests/embedders need a safe knob.
+static THREAD_OVERRIDE: AtomicUsize = AtomicUsize::new(0);
+
+/// Override the parallelism decided by [`num_threads`] (`None` clears).
+/// Takes precedence over `LPCS_THREADS`; `Some(0)` is clamped to 1, like
+/// `LPCS_THREADS=0`.
+pub fn set_thread_override(n: Option<usize>) {
+    THREAD_OVERRIDE.store(n.map(|v| v.max(1)).unwrap_or(0), Ordering::Relaxed);
+}
 
 /// Number of worker threads to use (cores, capped; overridable via
-/// `LPCS_THREADS` for benchmarking).
+/// [`set_thread_override`] or the `LPCS_THREADS` env var for benchmarking).
 pub fn num_threads() -> usize {
+    let over = THREAD_OVERRIDE.load(Ordering::Relaxed);
+    if over > 0 {
+        return over;
+    }
     if let Ok(v) = std::env::var("LPCS_THREADS") {
         if let Ok(n) = v.parse::<usize>() {
             return n.max(1);
@@ -16,9 +57,139 @@ pub fn num_threads() -> usize {
     std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1)
 }
 
-/// Split `out` into contiguous chunks and run `f(chunk_start, chunk)` on a
-/// thread per chunk. `f` must be pure per-chunk (no overlap by construction).
+const MAX_WORKERS: usize = 64;
+
+type Job = Box<dyn FnOnce() + Send + 'static>;
+
+struct Queue {
+    jobs: Mutex<VecDeque<Job>>,
+    ready: Condvar,
+}
+
+struct Pool {
+    queue: Arc<Queue>,
+    workers: usize,
+}
+
+fn worker_loop(q: Arc<Queue>) {
+    loop {
+        let job = {
+            let mut jobs = q.jobs.lock().unwrap_or_else(|e| e.into_inner());
+            loop {
+                if let Some(j) = jobs.pop_front() {
+                    break j;
+                }
+                jobs = q.ready.wait(jobs).unwrap_or_else(|e| e.into_inner());
+            }
+        };
+        // Jobs are panic-wrapped at construction; this call cannot unwind.
+        job();
+    }
+}
+
+fn pool() -> &'static Pool {
+    static POOL: OnceLock<Pool> = OnceLock::new();
+    POOL.get_or_init(|| {
+        let queue = Arc::new(Queue { jobs: Mutex::new(VecDeque::new()), ready: Condvar::new() });
+        let want = std::thread::available_parallelism()
+            .map(|n| n.get())
+            .unwrap_or(1)
+            .min(MAX_WORKERS);
+        let mut workers = 0usize;
+        for k in 0..want {
+            let q = Arc::clone(&queue);
+            // Best effort: if a worker fails to spawn, callers still make
+            // progress by helping from the waiting thread.
+            if std::thread::Builder::new()
+                .name(format!("lpcs-par-{k}"))
+                .spawn(move || worker_loop(q))
+                .is_ok()
+            {
+                workers += 1;
+            }
+        }
+        Pool { queue, workers }
+    })
+}
+
+/// Number of persistent pool workers (spawns the pool on first call).
+pub fn pool_size() -> usize {
+    pool().workers
+}
+
+/// Completion latch: counts outstanding jobs, records whether any panicked.
+struct Latch {
+    state: Mutex<(usize, bool)>,
+    done: Condvar,
+}
+
+impl Latch {
+    fn new(jobs: usize) -> Self {
+        Self { state: Mutex::new((jobs, false)), done: Condvar::new() }
+    }
+
+    fn complete(&self, panicked: bool) {
+        let mut st = self.state.lock().unwrap_or_else(|e| e.into_inner());
+        st.0 -= 1;
+        st.1 |= panicked;
+        if st.0 == 0 {
+            self.done.notify_all();
+        }
+    }
+
+    /// Wait for all jobs, executing queued jobs (ours or anyone's) while
+    /// waiting so nested `par` calls cannot deadlock. Returns the panic flag.
+    fn wait_help(&self, q: &Queue) -> bool {
+        loop {
+            {
+                let st = self.state.lock().unwrap_or_else(|e| e.into_inner());
+                if st.0 == 0 {
+                    return st.1;
+                }
+            }
+            let job = {
+                let mut jobs = q.jobs.lock().unwrap_or_else(|e| e.into_inner());
+                jobs.pop_front()
+            };
+            match job {
+                Some(j) => j(),
+                None => {
+                    let st = self.state.lock().unwrap_or_else(|e| e.into_inner());
+                    if st.0 == 0 {
+                        return st.1;
+                    }
+                    let (st, _) = self
+                        .done
+                        .wait_timeout(st, std::time::Duration::from_millis(1))
+                        .unwrap_or_else(|e| e.into_inner());
+                    if st.0 == 0 {
+                        return st.1;
+                    }
+                }
+            }
+        }
+    }
+}
+
+/// Erase the borrow lifetime of a job. Sound only because every caller
+/// blocks on the latch until the job has run before its borrows expire.
+unsafe fn erase_lifetime<'a>(job: Box<dyn FnOnce() + Send + 'a>) -> Job {
+    std::mem::transmute(job)
+}
+
+/// Split `out` into contiguous chunks and run `f(chunk_start, chunk)` on the
+/// pool. `f` must be pure per-chunk (no overlap by construction).
 pub fn par_chunks_mut<T: Send, F>(out: &mut [T], min_chunk: usize, f: F)
+where
+    F: Fn(usize, &mut [T]) + Sync,
+{
+    par_chunks_mut_aligned(out, min_chunk, 1, f)
+}
+
+/// [`par_chunks_mut`] with every chunk boundary (except the final tail end)
+/// a multiple of `align` — kernels over bit-packed storage use this so each
+/// chunk starts on a packed-word boundary.
+pub fn par_chunks_mut_aligned<T: Send, F>(out: &mut [T], min_chunk: usize, align: usize, f: F)
 where
     F: Fn(usize, &mut [T]) + Sync,
 {
@@ -26,24 +197,44 @@ where
     if n == 0 {
         return;
     }
+    let align = align.max(1);
     let threads = num_threads().min(n.div_ceil(min_chunk.max(1))).max(1);
-    if threads <= 1 {
+    let chunk = n.div_ceil(threads).div_ceil(align) * align;
+    if threads <= 1 || chunk >= n {
         f(0, out);
         return;
     }
-    let chunk = n.div_ceil(threads);
-    std::thread::scope(|s| {
-        let mut rest = out;
-        let mut start = 0;
-        while !rest.is_empty() {
-            let take = chunk.min(rest.len());
-            let (head, tail) = rest.split_at_mut(take);
-            let fref = &f;
-            s.spawn(move || fref(start, head));
-            start += take;
-            rest = tail;
+    let nchunks = n.div_ceil(chunk);
+    let q = &pool().queue;
+    let latch = Latch::new(nchunks - 1);
+    let mut chunks = out.chunks_mut(chunk);
+    let first = chunks.next().expect("nonempty slice has a first chunk");
+    {
+        let latch_ref = &latch;
+        let fref = &f;
+        let mut jobs = q.jobs.lock().unwrap_or_else(|e| e.into_inner());
+        for (ci, head) in chunks.enumerate() {
+            let start = (ci + 1) * chunk;
+            let job: Box<dyn FnOnce() + Send + '_> = Box::new(move || {
+                let panicked =
+                    std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| fref(start, head)))
+                        .is_err();
+                latch_ref.complete(panicked);
+            });
+            // SAFETY: we block on the latch below until every job has run,
+            // so the borrows of `f`, `latch`, and `out` outlive the jobs.
+            jobs.push_back(unsafe { erase_lifetime(job) });
         }
-    });
+    }
+    q.ready.notify_all();
+    let own = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| f(0, first)));
+    let worker_panicked = latch.wait_help(q);
+    if let Err(p) = own {
+        std::panic::resume_unwind(p);
+    }
+    if worker_panicked {
+        panic!("par: a parallel chunk panicked");
+    }
 }
 
 /// Parallel map over `0..n`, collecting results in order.
@@ -97,5 +288,73 @@ mod tests {
             c[0] = 7;
         });
         assert_eq!(v[0], 7);
+    }
+
+    #[test]
+    fn pool_is_reused_across_calls() {
+        // Two consecutive calls over the same pool produce correct results
+        // (regression for latch reset / queue reuse bugs).
+        for round in 0..5u64 {
+            let mut v = vec![0u64; 4096];
+            par_chunks_mut(&mut v, 8, |start, chunk| {
+                for (k, x) in chunk.iter_mut().enumerate() {
+                    *x = (start + k) as u64 * round;
+                }
+            });
+            assert!(v.iter().enumerate().all(|(i, &x)| x == i as u64 * round));
+        }
+        assert!(pool_size() <= MAX_WORKERS);
+    }
+
+    #[test]
+    fn aligned_chunks_start_on_boundaries() {
+        let starts = std::sync::Mutex::new(Vec::new());
+        let mut v = vec![0u8; 1000];
+        par_chunks_mut_aligned(&mut v, 8, 32, |start, _chunk| {
+            starts.lock().unwrap().push(start);
+        });
+        for s in starts.into_inner().unwrap() {
+            assert_eq!(s % 32, 0, "chunk start {s} not 32-aligned");
+        }
+    }
+
+    #[test]
+    fn nested_par_does_not_deadlock() {
+        let mut outer = vec![0usize; 64];
+        par_chunks_mut(&mut outer, 1, |start, chunk| {
+            for (k, slot) in chunk.iter_mut().enumerate() {
+                let inner = par_map(50, |i| i + start + k);
+                *slot = inner.iter().sum();
+            }
+        });
+        for (i, &x) in outer.iter().enumerate() {
+            let want: usize = (0..50).map(|j| j + i).sum();
+            assert_eq!(x, want);
+        }
+    }
+
+    #[test]
+    fn caller_chunk_panic_propagates() {
+        let r = std::panic::catch_unwind(|| {
+            let mut v = vec![0u8; 8];
+            par_chunks_mut(&mut v, 1024, |_, _| panic!("boom"));
+        });
+        assert!(r.is_err());
+    }
+
+    #[test]
+    fn worker_chunk_panic_propagates() {
+        if num_threads() < 2 {
+            return; // single-threaded env: nothing runs off-caller
+        }
+        let r = std::panic::catch_unwind(|| {
+            let mut v = vec![0u8; 1024];
+            par_chunks_mut(&mut v, 1, |start, _| {
+                if start > 0 {
+                    panic!("worker boom");
+                }
+            });
+        });
+        assert!(r.is_err());
     }
 }

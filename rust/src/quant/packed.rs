@@ -39,17 +39,24 @@ impl PackedMatrix {
         let half = Quantizer::new(bits).half();
         let lanes = Self::lanes(bits);
         let words_per_row = qm.n.div_ceil(lanes);
-        let mut words = vec![0u64; qm.m * words_per_row];
+        // Assemble each word in a register and store it once — the previous
+        // per-element read-modify-write of `words[w]` forced a load+or+store
+        // round trip through memory for every code.
+        let mut words = Vec::with_capacity(qm.m * words_per_row);
         let mask = (1u64 << bits) - 1;
         for i in 0..qm.m {
-            for j in 0..qm.n {
-                let code = qm.codes[i * qm.n + j] as i32;
-                let field = ((code + half) as u64) & mask;
-                let w = i * words_per_row + j / lanes;
-                let off = (j % lanes) * bits as usize;
-                words[w] |= field << off;
+            let row = &qm.codes[i * qm.n..(i + 1) * qm.n];
+            for chunk in row.chunks(lanes) {
+                let mut w = 0u64;
+                let mut off = 0u32;
+                for &code in chunk {
+                    w |= (((code as i32 + half) as u64) & mask) << off;
+                    off += bits as u32;
+                }
+                words.push(w);
             }
         }
+        debug_assert_eq!(words.len(), qm.m * words_per_row);
         Self { m: qm.m, n: qm.n, bits, scale: qm.scale, words_per_row, words }
     }
 

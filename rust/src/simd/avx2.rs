@@ -1,0 +1,393 @@
+//! AVX2 backend — runtime-detected, the rust analog of the paper's §9
+//! hand-vectorized CPU routines.
+//!
+//! Kernel strategy:
+//! * mixed int·f32 dots: widen 32 codes per iteration with
+//!   `VPMOVSXBD`/`VPMOVZXBD` (`_mm256_cvtepi8_epi32` / `_mm256_cvtepu8_epi32`)
+//!   and accumulate through four independent `_mm256_fmadd_ps` chains;
+//! * 2/4-bit decode: in-register field unpack — shift/mask into per-position
+//!   byte vectors, then a 4-way (2-bit) or 2-way (4-bit) `PUNPCKLBW`
+//!   interleave tree restores element order, `PSUBB` removes the bias, one
+//!   store per 16 codes;
+//! * pure integer dots: `_mm256_maddubs_epi16` on the RAW unsigned fields
+//!   against the signed int8 vector (fields ≤ 128 and |xq| ≤ 127, so the
+//!   pairwise i16 sums cannot saturate), widened via `_mm256_madd_epi16`
+//!   and flushed from i32 lanes to an i64 scalar every block — exact for
+//!   any row length.
+//!
+//! Every function is `#[target_feature(enable = "avx2", enable = "fma")]`;
+//! the [`Avx2`] kernel set is only reachable through [`supported`]
+//! (`is_x86_feature_detected!`), so the safe trait wrappers are sound.
+
+use super::{Backend, Kernels};
+
+#[cfg(target_arch = "x86")]
+use core::arch::x86::*;
+#[cfg(target_arch = "x86_64")]
+use core::arch::x86_64::*;
+
+/// Runtime check for the features this backend requires.
+pub(crate) fn supported() -> bool {
+    is_x86_feature_detected!("avx2") && is_x86_feature_detected!("fma")
+}
+
+/// The AVX2 backend (unit struct; stateless).
+pub struct Avx2;
+
+impl Kernels for Avx2 {
+    fn backend(&self) -> Backend {
+        Backend::Avx2
+    }
+
+    fn name(&self) -> &'static str {
+        "avx2"
+    }
+
+    fn dot_i8_f32(&self, row: &[i8], x: &[f32]) -> f32 {
+        debug_assert_eq!(row.len(), x.len());
+        // SAFETY: Avx2 is only constructed behind `supported()`.
+        unsafe { dot_i8_f32(row, x) }
+    }
+
+    fn dot_u8_f32(&self, row: &[u8], x: &[f32]) -> f32 {
+        debug_assert_eq!(row.len(), x.len());
+        // SAFETY: as above.
+        unsafe { dot_u8_f32(row, x) }
+    }
+
+    fn decode_row(&self, words: &[u64], bits: u8, n: usize, out: &mut [i8]) {
+        debug_assert!(out.len() >= n);
+        // SAFETY: as above.
+        unsafe { decode_row(words, bits, n, out) }
+    }
+
+    fn packed_field_dot_q8(&self, words: &[u64], bits: u8, n: usize, xq: &[i8]) -> i64 {
+        debug_assert!(xq.len() >= n);
+        // SAFETY: as above.
+        unsafe {
+            match bits {
+                2 => field_dot2(words, n, xq),
+                4 => field_dot4(words, n, xq),
+                8 => field_dot8(words, n, xq),
+                _ => super::scalar::packed_field_dot_q8(words, bits, n, xq),
+            }
+        }
+    }
+
+    fn scale_add_i8(&self, y: &mut [f32], row: &[i8], c: f32) {
+        debug_assert_eq!(y.len(), row.len());
+        // SAFETY: as above.
+        unsafe { scale_add_i8(y, row, c) }
+    }
+
+    fn f32_grain(&self) -> usize {
+        8 // _mm256_fmadd_ps over 8 converted codes per block
+    }
+}
+
+/// Horizontal sum of 8 f32 lanes.
+#[inline]
+#[target_feature(enable = "avx2")]
+unsafe fn hsum_ps(v: __m256) -> f32 {
+    let s = _mm_add_ps(_mm256_castps256_ps128(v), _mm256_extractf128_ps::<1>(v));
+    let s = _mm_add_ps(s, _mm_movehl_ps(s, s));
+    let s = _mm_add_ss(s, _mm_shuffle_ps::<1>(s, s));
+    _mm_cvtss_f32(s)
+}
+
+/// Horizontal sum of 8 i32 lanes into an i64 (final add in 64-bit, so the
+/// caller's per-block bound only needs each lane < 2^31/4).
+#[inline]
+#[target_feature(enable = "avx2")]
+unsafe fn hsum_epi32_i64(v: __m256i) -> i64 {
+    let s = _mm_add_epi32(_mm256_castsi256_si128(v), _mm256_extracti128_si256::<1>(v));
+    let s = _mm_add_epi32(s, _mm_srli_si128::<8>(s));
+    _mm_cvtsi128_si32(s) as i64 + _mm_extract_epi32::<1>(s) as i64
+}
+
+#[target_feature(enable = "avx2", enable = "fma")]
+unsafe fn dot_i8_f32(row: &[i8], x: &[f32]) -> f32 {
+    let n = row.len();
+    let rp = row.as_ptr();
+    let xp = x.as_ptr();
+    let mut acc0 = _mm256_setzero_ps();
+    let mut acc1 = _mm256_setzero_ps();
+    let mut acc2 = _mm256_setzero_ps();
+    let mut acc3 = _mm256_setzero_ps();
+    let mut i = 0usize;
+    while i + 32 <= n {
+        let b = _mm256_loadu_si256(rp.add(i) as *const __m256i);
+        let lo = _mm256_castsi256_si128(b);
+        let hi = _mm256_extracti128_si256::<1>(b);
+        let v0 = _mm256_cvtepi32_ps(_mm256_cvtepi8_epi32(lo));
+        let v1 = _mm256_cvtepi32_ps(_mm256_cvtepi8_epi32(_mm_srli_si128::<8>(lo)));
+        let v2 = _mm256_cvtepi32_ps(_mm256_cvtepi8_epi32(hi));
+        let v3 = _mm256_cvtepi32_ps(_mm256_cvtepi8_epi32(_mm_srli_si128::<8>(hi)));
+        acc0 = _mm256_fmadd_ps(v0, _mm256_loadu_ps(xp.add(i)), acc0);
+        acc1 = _mm256_fmadd_ps(v1, _mm256_loadu_ps(xp.add(i + 8)), acc1);
+        acc2 = _mm256_fmadd_ps(v2, _mm256_loadu_ps(xp.add(i + 16)), acc2);
+        acc3 = _mm256_fmadd_ps(v3, _mm256_loadu_ps(xp.add(i + 24)), acc3);
+        i += 32;
+    }
+    let mut s = hsum_ps(_mm256_add_ps(
+        _mm256_add_ps(acc0, acc1),
+        _mm256_add_ps(acc2, acc3),
+    ));
+    while i < n {
+        s += *rp.add(i) as f32 * *xp.add(i);
+        i += 1;
+    }
+    s
+}
+
+#[target_feature(enable = "avx2", enable = "fma")]
+unsafe fn dot_u8_f32(row: &[u8], x: &[f32]) -> f32 {
+    let n = row.len();
+    let rp = row.as_ptr();
+    let xp = x.as_ptr();
+    let mut acc0 = _mm256_setzero_ps();
+    let mut acc1 = _mm256_setzero_ps();
+    let mut acc2 = _mm256_setzero_ps();
+    let mut acc3 = _mm256_setzero_ps();
+    let mut i = 0usize;
+    while i + 32 <= n {
+        let b = _mm256_loadu_si256(rp.add(i) as *const __m256i);
+        let lo = _mm256_castsi256_si128(b);
+        let hi = _mm256_extracti128_si256::<1>(b);
+        let v0 = _mm256_cvtepi32_ps(_mm256_cvtepu8_epi32(lo));
+        let v1 = _mm256_cvtepi32_ps(_mm256_cvtepu8_epi32(_mm_srli_si128::<8>(lo)));
+        let v2 = _mm256_cvtepi32_ps(_mm256_cvtepu8_epi32(hi));
+        let v3 = _mm256_cvtepi32_ps(_mm256_cvtepu8_epi32(_mm_srli_si128::<8>(hi)));
+        acc0 = _mm256_fmadd_ps(v0, _mm256_loadu_ps(xp.add(i)), acc0);
+        acc1 = _mm256_fmadd_ps(v1, _mm256_loadu_ps(xp.add(i + 8)), acc1);
+        acc2 = _mm256_fmadd_ps(v2, _mm256_loadu_ps(xp.add(i + 16)), acc2);
+        acc3 = _mm256_fmadd_ps(v3, _mm256_loadu_ps(xp.add(i + 24)), acc3);
+        i += 32;
+    }
+    let mut s = hsum_ps(_mm256_add_ps(
+        _mm256_add_ps(acc0, acc1),
+        _mm256_add_ps(acc2, acc3),
+    ));
+    while i < n {
+        s += *rp.add(i) as f32 * *xp.add(i);
+        i += 1;
+    }
+    s
+}
+
+#[target_feature(enable = "avx2", enable = "fma")]
+unsafe fn scale_add_i8(y: &mut [f32], row: &[i8], c: f32) {
+    let n = y.len();
+    let rp = row.as_ptr();
+    let yp = y.as_mut_ptr();
+    let vc = _mm256_set1_ps(c);
+    let mut i = 0usize;
+    while i + 8 <= n {
+        let v = _mm256_cvtepi32_ps(_mm256_cvtepi8_epi32(_mm_loadl_epi64(
+            rp.add(i) as *const __m128i
+        )));
+        let yv = _mm256_loadu_ps(yp.add(i));
+        _mm256_storeu_ps(yp.add(i), _mm256_fmadd_ps(v, vc, yv));
+        i += 8;
+    }
+    while i < n {
+        *yp.add(i) += c * *rp.add(i) as f32;
+        i += 1;
+    }
+}
+
+/// 16 packed bytes → 64 raw 2-bit fields, element order restored by a
+/// 4-way byte-interleave tree.
+#[inline]
+#[target_feature(enable = "avx2")]
+unsafe fn unpack2_fields(b: __m128i) -> (__m128i, __m128i, __m128i, __m128i) {
+    let mask = _mm_set1_epi8(0x03);
+    let q0 = _mm_and_si128(b, mask);
+    let q1 = _mm_and_si128(_mm_srli_epi16::<2>(b), mask);
+    let q2 = _mm_and_si128(_mm_srli_epi16::<4>(b), mask);
+    let q3 = _mm_and_si128(_mm_srli_epi16::<6>(b), mask);
+    let t0 = _mm_unpacklo_epi8(q0, q2);
+    let t1 = _mm_unpacklo_epi8(q1, q3);
+    let u0 = _mm_unpackhi_epi8(q0, q2);
+    let u1 = _mm_unpackhi_epi8(q1, q3);
+    (
+        _mm_unpacklo_epi8(t0, t1),
+        _mm_unpackhi_epi8(t0, t1),
+        _mm_unpacklo_epi8(u0, u1),
+        _mm_unpackhi_epi8(u0, u1),
+    )
+}
+
+/// 16 packed bytes → 32 raw 4-bit fields (low nibble first).
+#[inline]
+#[target_feature(enable = "avx2")]
+unsafe fn unpack4_fields(b: __m128i) -> (__m128i, __m128i) {
+    let mask = _mm_set1_epi8(0x0F);
+    let lo = _mm_and_si128(b, mask);
+    let hi = _mm_and_si128(_mm_srli_epi16::<4>(b), mask);
+    (_mm_unpacklo_epi8(lo, hi), _mm_unpackhi_epi8(lo, hi))
+}
+
+#[target_feature(enable = "avx2", enable = "fma")]
+unsafe fn decode_row(words: &[u64], bits: u8, n: usize, out: &mut [i8]) {
+    match bits {
+        2 => decode2(words, n, out),
+        4 => decode4(words, n, out),
+        8 => decode8(words, n, out),
+        _ => super::scalar::decode_row(words, bits, n, out),
+    }
+}
+
+#[target_feature(enable = "avx2")]
+unsafe fn decode2(words: &[u64], n: usize, out: &mut [i8]) {
+    let src = words.as_ptr() as *const u8;
+    let dst = out.as_mut_ptr();
+    let half = _mm_set1_epi8(1);
+    // 16 packed bytes (2 words) → 64 codes per iteration.
+    let groups = n / 64;
+    for g in 0..groups {
+        let b = _mm_loadu_si128(src.add(g * 16) as *const __m128i);
+        let (o0, o1, o2, o3) = unpack2_fields(b);
+        let o = dst.add(g * 64);
+        _mm_storeu_si128(o as *mut __m128i, _mm_sub_epi8(o0, half));
+        _mm_storeu_si128(o.add(16) as *mut __m128i, _mm_sub_epi8(o1, half));
+        _mm_storeu_si128(o.add(32) as *mut __m128i, _mm_sub_epi8(o2, half));
+        _mm_storeu_si128(o.add(48) as *mut __m128i, _mm_sub_epi8(o3, half));
+    }
+    let done = groups * 64;
+    if done < n {
+        super::scalar::decode_row(&words[groups * 2..], 2, n - done, &mut out[done..]);
+    }
+}
+
+#[target_feature(enable = "avx2")]
+unsafe fn decode4(words: &[u64], n: usize, out: &mut [i8]) {
+    let src = words.as_ptr() as *const u8;
+    let dst = out.as_mut_ptr();
+    let half = _mm_set1_epi8(4);
+    // 16 packed bytes (2 words) → 32 codes per iteration.
+    let groups = n / 32;
+    for g in 0..groups {
+        let b = _mm_loadu_si128(src.add(g * 16) as *const __m128i);
+        let (o0, o1) = unpack4_fields(b);
+        let o = dst.add(g * 32);
+        _mm_storeu_si128(o as *mut __m128i, _mm_sub_epi8(o0, half));
+        _mm_storeu_si128(o.add(16) as *mut __m128i, _mm_sub_epi8(o1, half));
+    }
+    let done = groups * 32;
+    if done < n {
+        super::scalar::decode_row(&words[groups * 2..], 4, n - done, &mut out[done..]);
+    }
+}
+
+#[target_feature(enable = "avx2")]
+unsafe fn decode8(words: &[u64], n: usize, out: &mut [i8]) {
+    let src = words.as_ptr() as *const u8;
+    let dst = out.as_mut_ptr() as *mut u8;
+    let half = _mm256_set1_epi8(64);
+    // 32 packed bytes (4 words) → 32 codes per iteration.
+    let groups = n / 32;
+    for g in 0..groups {
+        let v = _mm256_loadu_si256(src.add(g * 32) as *const __m256i);
+        _mm256_storeu_si256(dst.add(g * 32) as *mut __m256i, _mm256_sub_epi8(v, half));
+    }
+    let done = groups * 32;
+    if done < n {
+        super::scalar::decode_row(&words[groups * 4..], 8, n - done, &mut out[done..]);
+    }
+}
+
+/// Number of inner iterations between i32→i64 accumulator flushes. Worst
+/// case growth per iteration is 2·2·128·127 < 2^16 per lane (8-bit fields),
+/// so 2^12 iterations stay below 2^28 per lane — far from i32 overflow.
+const FLUSH: usize = 1 << 12;
+
+#[target_feature(enable = "avx2")]
+unsafe fn field_dot8(words: &[u64], n: usize, xq: &[i8]) -> i64 {
+    let src = words.as_ptr() as *const u8;
+    let xp = xq.as_ptr();
+    let ones = _mm256_set1_epi16(1);
+    let mut total: i64 = 0;
+    let mut i = 0usize;
+    while i + 32 <= n {
+        let mut acc = _mm256_setzero_si256();
+        let mut iters = 0usize;
+        while i + 32 <= n && iters < FLUSH {
+            let f = _mm256_loadu_si256(src.add(i) as *const __m256i);
+            let xv = _mm256_loadu_si256(xp.add(i) as *const __m256i);
+            // fields ≤ 128, |xq| ≤ 127 ⇒ pairwise i16 sums ≤ 32512: no
+            // maddubs saturation.
+            let prod = _mm256_maddubs_epi16(f, xv);
+            acc = _mm256_add_epi32(acc, _mm256_madd_epi16(prod, ones));
+            i += 32;
+            iters += 1;
+        }
+        total += hsum_epi32_i64(acc);
+    }
+    while i < n {
+        total += *src.add(i) as i64 * *xp.add(i) as i64;
+        i += 1;
+    }
+    total
+}
+
+#[target_feature(enable = "avx2")]
+unsafe fn field_dot2(words: &[u64], n: usize, xq: &[i8]) -> i64 {
+    let src = words.as_ptr() as *const u8;
+    let xp = xq.as_ptr();
+    let ones = _mm256_set1_epi16(1);
+    let mut total: i64 = 0;
+    let groups = n / 64;
+    let mut g = 0usize;
+    while g < groups {
+        let mut acc = _mm256_setzero_si256();
+        let stop = groups.min(g + FLUSH);
+        while g < stop {
+            let b = _mm_loadu_si128(src.add(g * 16) as *const __m128i);
+            let (o0, o1, o2, o3) = unpack2_fields(b);
+            let f01 = _mm256_set_m128i(o1, o0);
+            let f23 = _mm256_set_m128i(o3, o2);
+            let x01 = _mm256_loadu_si256(xp.add(g * 64) as *const __m256i);
+            let x23 = _mm256_loadu_si256(xp.add(g * 64 + 32) as *const __m256i);
+            acc = _mm256_add_epi32(acc, _mm256_madd_epi16(_mm256_maddubs_epi16(f01, x01), ones));
+            acc = _mm256_add_epi32(acc, _mm256_madd_epi16(_mm256_maddubs_epi16(f23, x23), ones));
+            g += 1;
+        }
+        total += hsum_epi32_i64(acc);
+    }
+    let done = groups * 64;
+    if done < n {
+        total +=
+            super::scalar::packed_field_dot_q8(&words[groups * 2..], 2, n - done, &xq[done..]);
+    }
+    total
+}
+
+#[target_feature(enable = "avx2")]
+unsafe fn field_dot4(words: &[u64], n: usize, xq: &[i8]) -> i64 {
+    let src = words.as_ptr() as *const u8;
+    let xp = xq.as_ptr();
+    let ones = _mm256_set1_epi16(1);
+    let mut total: i64 = 0;
+    let groups = n / 32;
+    let mut g = 0usize;
+    while g < groups {
+        let mut acc = _mm256_setzero_si256();
+        let stop = groups.min(g + FLUSH);
+        while g < stop {
+            let b = _mm_loadu_si128(src.add(g * 16) as *const __m128i);
+            let (o0, o1) = unpack4_fields(b);
+            let f = _mm256_set_m128i(o1, o0);
+            let xv = _mm256_loadu_si256(xp.add(g * 32) as *const __m256i);
+            acc = _mm256_add_epi32(acc, _mm256_madd_epi16(_mm256_maddubs_epi16(f, xv), ones));
+            g += 1;
+        }
+        total += hsum_epi32_i64(acc);
+    }
+    let done = groups * 32;
+    if done < n {
+        total +=
+            super::scalar::packed_field_dot_q8(&words[groups * 2..], 4, n - done, &xq[done..]);
+    }
+    total
+}

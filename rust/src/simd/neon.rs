@@ -1,0 +1,44 @@
+//! NEON backend stub (aarch64).
+//!
+//! The dispatch seam, trait plumbing, and parity test matrix already cover
+//! this backend; the kernels currently delegate to the scalar reference,
+//! which LLVM autovectorizes reasonably well on aarch64. Real NEON kernels
+//! still need (see ROADMAP "Open items"):
+//! * `vdotq_s32`/`smull`-based integer dots for `packed_field_dot_q8`;
+//! * `vtbl`-free 2/4-bit field unpack via `vand`/`vshr` + `vzip`;
+//! * `vcvtq_f32_s32` + `vfmaq_f32` chains for the mixed int·f32 dots.
+
+use super::{Backend, Kernels};
+
+/// The NEON backend (currently a correct-by-delegation stub).
+pub struct Neon;
+
+impl Kernels for Neon {
+    fn backend(&self) -> Backend {
+        Backend::Neon
+    }
+
+    fn name(&self) -> &'static str {
+        "neon"
+    }
+
+    fn dot_i8_f32(&self, row: &[i8], x: &[f32]) -> f32 {
+        super::scalar::dot_i8_f32(row, x)
+    }
+
+    fn dot_u8_f32(&self, row: &[u8], x: &[f32]) -> f32 {
+        super::scalar::dot_u8_f32(row, x)
+    }
+
+    fn decode_row(&self, words: &[u64], bits: u8, n: usize, out: &mut [i8]) {
+        super::scalar::decode_row(words, bits, n, out)
+    }
+
+    fn packed_field_dot_q8(&self, words: &[u64], bits: u8, n: usize, xq: &[i8]) -> i64 {
+        super::scalar::packed_field_dot_q8(words, bits, n, xq)
+    }
+
+    fn scale_add_i8(&self, y: &mut [f32], row: &[i8], c: f32) {
+        super::scalar::scale_add_i8(y, row, c)
+    }
+}

@@ -1,0 +1,230 @@
+//! Portable scalar backend — the guaranteed-correct reference.
+//!
+//! These are the original `lowprec` loops: 16 contiguous accumulator lanes
+//! for the mixed int·f32 dots (the lane array maps 1:1 onto SIMD registers,
+//! so LLVM's autovectorizer turns them into FMA streams on any target), and
+//! whole-word LUT decode for the 2/4-bit unpack (one table hit emits 4 or 2
+//! codes per single u32/u16 store). Every other backend is tested
+//! bit-for-bit (integer kernels) or to tolerance (f32 reductions) against
+//! this module.
+
+use super::{Backend, Kernels};
+use crate::quant::Quantizer;
+
+/// The portable backend (unit struct; stateless).
+pub struct Scalar;
+
+impl Kernels for Scalar {
+    fn backend(&self) -> Backend {
+        Backend::Scalar
+    }
+
+    fn name(&self) -> &'static str {
+        "scalar"
+    }
+
+    fn dot_i8_f32(&self, row: &[i8], x: &[f32]) -> f32 {
+        dot_i8_f32(row, x)
+    }
+
+    fn dot_u8_f32(&self, row: &[u8], x: &[f32]) -> f32 {
+        dot_u8_f32(row, x)
+    }
+
+    fn decode_row(&self, words: &[u64], bits: u8, n: usize, out: &mut [i8]) {
+        decode_row(words, bits, n, out)
+    }
+
+    fn packed_field_dot_q8(&self, words: &[u64], bits: u8, n: usize, xq: &[i8]) -> i64 {
+        packed_field_dot_q8(words, bits, n, xq)
+    }
+
+    fn scale_add_i8(&self, y: &mut [f32], row: &[i8], c: f32) {
+        scale_add_i8(y, row, c)
+    }
+}
+
+/// Dot of an int8 row with an f32 vector — 16 contiguous accumulator lanes
+/// (the i8→f32 widening maps onto VPMOVSXBD + VCVTDQ2PS).
+pub(crate) fn dot_i8_f32(row: &[i8], x: &[f32]) -> f32 {
+    debug_assert_eq!(row.len(), x.len());
+    const LANES: usize = 16;
+    let mut acc = [0.0f32; LANES];
+    let chunks = row.len() / LANES;
+    for c in 0..chunks {
+        let i = c * LANES;
+        let (rv, xv) = (&row[i..i + LANES], &x[i..i + LANES]);
+        for k in 0..LANES {
+            acc[k] += rv[k] as f32 * xv[k];
+        }
+    }
+    let mut s = 0.0f32;
+    for a in acc {
+        s += a;
+    }
+    for i in chunks * LANES..row.len() {
+        s += row[i] as f32 * x[i];
+    }
+    s
+}
+
+/// Dot of a u8 row with an f32 vector (16 accumulator lanes).
+pub(crate) fn dot_u8_f32(row: &[u8], x: &[f32]) -> f32 {
+    debug_assert_eq!(row.len(), x.len());
+    const LANES: usize = 16;
+    let mut acc = [0.0f32; LANES];
+    let chunks = row.len() / LANES;
+    for c in 0..chunks {
+        let i = c * LANES;
+        let (rv, xv) = (&row[i..i + LANES], &x[i..i + LANES]);
+        for k in 0..LANES {
+            acc[k] += rv[k] as f32 * xv[k];
+        }
+    }
+    let mut s = 0.0f32;
+    for a in acc {
+        s += a;
+    }
+    for i in chunks * LANES..row.len() {
+        s += row[i] as f32 * x[i];
+    }
+    s
+}
+
+/// `y[j] += c · row[j]` — no reduction, so the plain zip loop vectorizes.
+pub(crate) fn scale_add_i8(y: &mut [f32], row: &[i8], c: f32) {
+    debug_assert_eq!(y.len(), row.len());
+    for (yi, &r) in y.iter_mut().zip(row) {
+        *yi += c * r as f32;
+    }
+}
+
+/// Byte → 4 signed 2-bit codes, packed little-endian into one u32
+/// (field − half, half = 1): one table hit + one unaligned store decodes
+/// 4 elements.
+fn lut2_u32() -> &'static [u32; 256] {
+    static LUT: std::sync::OnceLock<[u32; 256]> = std::sync::OnceLock::new();
+    LUT.get_or_init(|| {
+        let mut t = [0u32; 256];
+        for (b, entry) in t.iter_mut().enumerate() {
+            let mut bytes = [0u8; 4];
+            for k in 0..4 {
+                bytes[k] = ((((b >> (2 * k)) & 0b11) as i8) - 1) as u8;
+            }
+            *entry = u32::from_le_bytes(bytes);
+        }
+        t
+    })
+}
+
+/// Byte → 2 signed 4-bit codes packed into one u16 (field − half, half=4).
+fn lut4_u16() -> &'static [u16; 256] {
+    static LUT: std::sync::OnceLock<[u16; 256]> = std::sync::OnceLock::new();
+    LUT.get_or_init(|| {
+        let mut t = [0u16; 256];
+        for (b, entry) in t.iter_mut().enumerate() {
+            let lo = ((((b >> 0) & 0xF) as i8) - 4) as u8;
+            let hi = ((((b >> 4) & 0xF) as i8) - 4) as u8;
+            *entry = u16::from_le_bytes([lo, hi]);
+        }
+        t
+    })
+}
+
+/// Generic shift/mask decode (tail path + odd widths).
+pub(crate) fn decode_generic(words: &[u64], bits: u8, n: usize, out: &mut [i8]) {
+    let lanes = 64 / bits as usize;
+    let mask = (1u64 << bits) - 1;
+    let half = Quantizer::new(bits).half();
+    let mut j = 0;
+    for &w in words {
+        let mut ww = w;
+        let take = lanes.min(n - j);
+        for k in 0..take {
+            out[j + k] = ((ww & mask) as i32 - half) as i8;
+            ww >>= bits;
+        }
+        j += take;
+        if j >= n {
+            break;
+        }
+    }
+}
+
+/// Decode one packed row into signed codes (LUT fast path, shift/mask tail).
+pub(crate) fn decode_row(words: &[u64], bits: u8, n: usize, out: &mut [i8]) {
+    debug_assert!(out.len() >= n);
+    let lanes = 64 / bits as usize;
+    let full_words = n / lanes;
+    let dst = out.as_mut_ptr() as *mut u8;
+    match bits {
+        2 => {
+            let lut = lut2_u32();
+            for (wi, &w) in words[..full_words].iter().enumerate() {
+                let bytes = w.to_le_bytes();
+                let base = wi * 32;
+                for (bi, b) in bytes.into_iter().enumerate() {
+                    // SAFETY: base+4bi+4 <= full_words*32 <= n <= out.len()
+                    unsafe {
+                        (dst.add(base + 4 * bi) as *mut u32).write_unaligned(lut[b as usize]);
+                    }
+                }
+            }
+        }
+        4 => {
+            let lut = lut4_u16();
+            for (wi, &w) in words[..full_words].iter().enumerate() {
+                let bytes = w.to_le_bytes();
+                let base = wi * 16;
+                for (bi, b) in bytes.into_iter().enumerate() {
+                    // SAFETY: base+2bi+2 <= full_words*16 <= n <= out.len()
+                    unsafe {
+                        (dst.add(base + 2 * bi) as *mut u16).write_unaligned(lut[b as usize]);
+                    }
+                }
+            }
+        }
+        8 => {
+            // field = code + 64: subtract in the byte domain (wrapping sub
+            // vectorizes to one psubb over the whole row).
+            for (wi, &w) in words[..full_words].iter().enumerate() {
+                let bytes = w.to_le_bytes();
+                let base = wi * 8;
+                for (bi, b) in bytes.into_iter().enumerate() {
+                    out[base + bi] = b.wrapping_sub(64) as i8;
+                }
+            }
+        }
+        _ => {
+            decode_generic(words, bits, n, out);
+            return;
+        }
+    }
+    // Ragged tail (n not a multiple of lanes-per-word).
+    let done = full_words * lanes;
+    if done < n {
+        decode_generic(&words[full_words..], bits, n - done, &mut out[done..]);
+    }
+}
+
+/// `Σ field_j · xq_j` over the raw (biased, unsigned) packed fields.
+pub(crate) fn packed_field_dot_q8(words: &[u64], bits: u8, n: usize, xq: &[i8]) -> i64 {
+    debug_assert!(xq.len() >= n);
+    let lanes = 64 / bits as usize;
+    let mask = (1u64 << bits) - 1;
+    let mut acc: i64 = 0;
+    let mut j = 0usize;
+    for &w in words {
+        if j >= n {
+            break;
+        }
+        let mut ww = w;
+        let take = lanes.min(n - j);
+        for k in 0..take {
+            acc += ((ww & mask) as i64) * (xq[j + k] as i64);
+            ww >>= bits;
+        }
+        j += take;
+    }
+    acc
+}

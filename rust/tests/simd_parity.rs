@@ -1,0 +1,142 @@
+//! Backend parity matrix: (backend ∈ {scalar, dispatched}) × (bits ∈
+//! {2,4,8}) × ragged n — integer kernels must be bit-identical, f32
+//! reductions within 1e-3 relative. Plus pool determinism: `LPCS_THREADS=1`
+//! must match the default-parallelism output exactly (all kernels compute
+//! each output element independently or in fixed input order, so chunking
+//! cannot change the result).
+
+use lpcs::linalg::Mat;
+use lpcs::lowprec;
+use lpcs::quant::packed::PackedMatrix;
+use lpcs::quant::{QuantizedMatrix, Quantizer};
+use lpcs::rng::XorShift128Plus;
+use lpcs::simd::{self, Backend, Kernels};
+
+const DIMS: [usize; 5] = [64, 65, 127, 256, 300];
+
+fn setup(m: usize, n: usize, bits: u8, seed: u64) -> (QuantizedMatrix, PackedMatrix, Vec<f32>) {
+    let mut rng = XorShift128Plus::new(seed);
+    let a = Mat::from_fn(m, n, |_, _| rng.gaussian_f32());
+    let qm = QuantizedMatrix::from_mat(&a, bits, &mut rng);
+    let p = PackedMatrix::pack(&qm);
+    let x = rng.gaussian_vec(n);
+    (qm, p, x)
+}
+
+fn close(got: &[f32], want: &[f32], ctx: &str) {
+    assert_eq!(got.len(), want.len(), "{ctx}");
+    for (g, w) in got.iter().zip(want) {
+        assert!((g - w).abs() <= 1e-3 * (1.0 + w.abs()), "{ctx}: {g} vs {w}");
+    }
+}
+
+#[test]
+fn packed_matvec_backend_matrix() {
+    let scalar = simd::by_backend(Backend::Scalar);
+    let dispatched = simd::active();
+    for bits in [2u8, 4, 8] {
+        for n in DIMS {
+            let (qm, p, x) = setup(13, n, bits, 1000 + n as u64 + bits as u64);
+            let want = lowprec::packed_matvec_with(scalar, &p, &x);
+            // Scalar backend vs the unpacked int8 reference.
+            let reference = lowprec::qmatvec(&qm.codes, qm.m, qm.n, qm.multiplier(), &x);
+            close(&want, &reference, &format!("scalar-vs-ref bits={bits} n={n}"));
+            let got = lowprec::packed_matvec_with(dispatched, &p, &x);
+            close(&got, &want, &format!("dispatched bits={bits} n={n}"));
+        }
+    }
+}
+
+#[test]
+fn packed_matvec_q8_backend_matrix_bit_identical() {
+    let scalar = simd::by_backend(Backend::Scalar);
+    let dispatched = simd::active();
+    let mut rng = XorShift128Plus::new(7);
+    for bits in [2u8, 4, 8] {
+        for n in DIMS {
+            let (qm, p, x) = setup(11, n, bits, 2000 + n as u64 + bits as u64);
+            let q8 = Quantizer::new(8);
+            let (xq, xscale) = q8.quantize_auto(&x, &mut rng);
+            let x_mult = xscale / q8.half() as f32;
+            let want = lowprec::packed_matvec_q8_with(scalar, &p, &xq, x_mult);
+            let got = lowprec::packed_matvec_q8_with(dispatched, &p, &xq, x_mult);
+            // Integer accumulation → the float product is computed from the
+            // same exact i64, so equality is exact.
+            assert_eq!(got, want, "bits={bits} n={n}");
+            // Sanity anchor: approximates the dequantized dense product.
+            let xdq = q8.dequantize_slice(&xq, xscale);
+            let dense = qm.to_mat().matvec(&xdq);
+            close(&got, &dense, &format!("q8-vs-dense bits={bits} n={n}"));
+        }
+    }
+}
+
+#[test]
+fn packed_scale_add_backend_matrix() {
+    let scalar = simd::by_backend(Backend::Scalar);
+    let dispatched = simd::active();
+    for bits in [2u8, 4, 8] {
+        for n in DIMS {
+            let (_, p, _) = setup(9, n, bits, 3000 + n as u64 + bits as u64);
+            let idx = vec![0usize, 4, 7];
+            let vals = vec![0.75f32, -1.25, 0.5];
+            let want = lowprec::packed_scale_add_with(scalar, &p, &idx, &vals);
+            let got = lowprec::packed_scale_add_with(dispatched, &p, &idx, &vals);
+            close(&got, &want, &format!("scale_add bits={bits} n={n}"));
+        }
+    }
+}
+
+#[test]
+fn decode_row_backend_matrix_bit_identical() {
+    let scalar = simd::by_backend(Backend::Scalar);
+    let dispatched = simd::active();
+    for bits in [2u8, 4, 8] {
+        for n in DIMS {
+            let (qm, p, _) = setup(3, n, bits, 4000 + n as u64 + bits as u64);
+            let mut a = vec![0i8; n];
+            let mut b = vec![0i8; n];
+            for row in 0..3 {
+                scalar.decode_row(p.row_words(row), bits, n, &mut a);
+                dispatched.decode_row(p.row_words(row), bits, n, &mut b);
+                assert_eq!(a, b, "bits={bits} n={n} row={row}");
+                assert_eq!(&a[..], &qm.codes[row * n..(row + 1) * n], "vs codes");
+            }
+        }
+    }
+}
+
+#[test]
+fn pool_single_thread_matches_parallel_exactly() {
+    // Compute with default parallelism first, then pin the pool to one
+    // thread and recompute: outputs must be bit-identical (same backend,
+    // same per-element accumulation order and 8-aligned FMA grid regardless
+    // of chunking). Uses par::set_thread_override — not env mutation, which
+    // would race concurrent getenv calls from sibling tests (UB on glibc).
+    let (qm, p, x) = setup(37, 300, 4, 5000);
+    let qt = qm.transposed();
+    let pt = PackedMatrix::pack(&qt);
+    let idx = vec![2usize, 9, 33];
+    let vals = vec![1.0f32, -0.5, 0.25];
+    let v: Vec<f32> = x[..37.min(x.len())].to_vec();
+
+    let mv_par = lowprec::packed_matvec(&p, &x);
+    let sa_par = lowprec::packed_scale_add(&pt, &idx, &vals);
+    let sp_par = lowprec::qmatvec_sparse(&qt.codes, qm.n, qm.m, qm.multiplier(), &idx, &vals);
+    let q_par = lowprec::qmatvec(&qm.codes, qm.m, qm.n, qm.multiplier(), &x);
+    let t_par = lowprec::qmatvec_t(&qm.codes, qm.m, qm.n, qm.multiplier(), &v);
+
+    lpcs::par::set_thread_override(Some(1));
+    let mv_one = lowprec::packed_matvec(&p, &x);
+    let sa_one = lowprec::packed_scale_add(&pt, &idx, &vals);
+    let sp_one = lowprec::qmatvec_sparse(&qt.codes, qm.n, qm.m, qm.multiplier(), &idx, &vals);
+    let q_one = lowprec::qmatvec(&qm.codes, qm.m, qm.n, qm.multiplier(), &x);
+    let t_one = lowprec::qmatvec_t(&qm.codes, qm.m, qm.n, qm.multiplier(), &v);
+    lpcs::par::set_thread_override(None);
+
+    assert_eq!(mv_par, mv_one, "packed_matvec");
+    assert_eq!(sa_par, sa_one, "packed_scale_add");
+    assert_eq!(sp_par, sp_one, "qmatvec_sparse");
+    assert_eq!(q_par, q_one, "qmatvec");
+    assert_eq!(t_par, t_one, "qmatvec_t");
+}

@@ -1,15 +1,14 @@
 //! Quickstart: recover a sparse signal from 2.7× undersampled measurements
 //! with the measurement data quantized to 2 bits (matrix) and 8 bits
-//! (observations) — the paper's headline configuration.
+//! (observations) — the paper's headline configuration — through the
+//! unified `solver` facade.
 //!
 //! Run: `cargo run --release --example quickstart`
 
-use lpcs::algorithms::niht::niht_dense;
-use lpcs::algorithms::qniht::{qniht, RequantMode};
-use lpcs::algorithms::SolveOptions;
 use lpcs::linalg::Mat;
 use lpcs::metrics;
 use lpcs::rng::XorShift128Plus;
+use lpcs::solver::{Problem, Recovery, SolverKind};
 
 fn main() {
     // 1. A compressive-sensing problem: y = Φx + e with x s-sparse.
@@ -23,22 +22,31 @@ fn main() {
     let y = phi.matvec(&x_true);
     println!("problem: Φ ∈ R^{{{m}×{n}}}, ‖x‖₀ = {s}, noiseless");
 
-    // 2. Full-precision NIHT (the 32-bit baseline).
-    let opts = SolveOptions::default();
-    let dense = niht_dense(&phi, &y, s, &opts);
+    // 2. The whole recovery API is three lines: wrap the problem, pick a
+    //    solver, run. Engine, options, seed and observer are optional —
+    //    each solver defaults to its natural engine.
+    let problem = Problem::from_mat(phi, y, s);
+    let dense = Recovery::problem(problem.clone()).solver(SolverKind::Niht).run().unwrap();
     println!(
-        "32-bit NIHT:     {} iterations, recovery error {:.2e}, support {:.0}%",
+        "32-bit NIHT:     {} iterations on {}, recovery error {:.2e}, support {:.0}%",
         dense.iterations,
+        dense.engine,
         metrics::recovery_error(&dense.x, &x_true),
         100.0 * metrics::exact_recovery(&dense.x, &x_true)
     );
 
-    // 3. Low-precision QNIHT: Φ at 2 bits, y at 8 bits. Fresh stochastic
-    //    quantizations per iteration (Algorithm 1 / Theorem 3).
-    let quant = qniht(&phi, &y, s, 2, 8, RequantMode::Fresh, 7, &opts);
+    // 3. Low-precision QNIHT: Φ at 2 bits, y at 8 bits, fresh stochastic
+    //    quantizations per iteration (Algorithm 1 / Theorem 3). Cloning a
+    //    Problem is cheap — Φ lives behind an Arc.
+    let quant = Recovery::problem(problem)
+        .solver(SolverKind::qniht_fresh(2, 8))
+        .seed(7)
+        .run()
+        .unwrap();
     println!(
-        "2&8-bit QNIHT:   {} iterations, recovery error {:.2e}, support {:.0}%",
+        "2&8-bit QNIHT:   {} iterations on {}, recovery error {:.2e}, support {:.0}%",
         quant.iterations,
+        quant.engine,
         metrics::recovery_error(&quant.x, &x_true),
         100.0 * metrics::exact_recovery(&quant.x, &x_true)
     );

@@ -1,7 +1,9 @@
 //! Serving example: the L3 recovery service under a bursty stream of
 //! visibility snapshots that share one measurement matrix. Reports
-//! throughput, latency percentiles, batching efficiency, and backpressure
-//! behaviour.
+//! throughput, latency percentiles, batching efficiency (the engine
+//! registry quantizes+packs Φ once per batch), backpressure behaviour,
+//! and the per-job progress/cancellation API threaded through the
+//! solver facade's IterObserver.
 //!
 //! Run: `cargo run --release --example recovery_service`
 
@@ -60,6 +62,23 @@ fn main() {
                 skies.insert(id, x);
             }
             Err(_) => rejected += 1,
+        }
+    }
+
+    // The observer plumbing at work: poll one job's live progress, and
+    // cancel the last submitted job (it completes with whatever iterate
+    // it had — counted under `cancelled=` in the metrics below).
+    if let Some(&probe) = submitted.first() {
+        if let Some(stat) = service.progress(probe) {
+            println!(
+                "job {probe} live progress: iteration {} resid²={:.3e} μ={:.3}",
+                stat.iter, stat.resid_nsq, stat.mu
+            );
+        }
+    }
+    if let Some(&victim) = submitted.last() {
+        if service.cancel(victim) {
+            println!("job {victim}: cancellation requested");
         }
     }
 

@@ -5,19 +5,19 @@
 //!   synthetic sky (30 sources) → visibilities at 0 dB SNR → dirty image →
 //!   32-bit NIHT vs 2&8-bit QNIHT (native + PJRT/XLA engines) → metrics.
 //!
-//! Proves all three layers compose: the XLA path executes the JAX/Pallas
-//! AOT artifact for every NIHT step (L1+L2) under the rust Algorithm-1
-//! driver (L3). Run after `make artifacts`:
+//! Every solve goes through the unified `solver` facade; switching from
+//! the native engines to the PJRT/XLA artifact engine is one `.engine()`
+//! call — the registry owns dispatch, runtime creation and executable
+//! caching. Run after `make artifacts`:
 //!
 //!   cargo run --release --example sky_recovery
 
-use lpcs::algorithms::niht::{niht_dense, solve};
-use lpcs::algorithms::qniht::{qniht, RequantMode};
-use lpcs::algorithms::SolveOptions;
+use lpcs::config::EngineKind;
 use lpcs::metrics;
-use lpcs::runtime::XlaQuantKernel;
+use lpcs::solver::{Problem, Recovery, SolveReport, SolverKind};
 use lpcs::telescope::{dirty, AstroConfig, AstroProblem};
 use std::path::Path;
+use std::sync::Arc;
 use std::time::Instant;
 
 fn main() {
@@ -52,32 +52,46 @@ fn main() {
             s
         );
     };
+    let report_solve = |name: &str, rep: &SolveReport| {
+        report(name, &rep.x, rep.wall, rep.iterations);
+    };
 
     // Dirty image (the classical least-squares estimate).
     let t = Instant::now();
     let dimg = dirty::dirty_image(&p.phi, &p.y);
     report("dirty image", &dimg, t.elapsed(), 1);
 
-    let opts = SolveOptions::default();
+    // One shared Problem (Φ behind an Arc, tagged with the artifact shape
+    // so the XLA engine can find its AOT executables).
+    let problem = Problem::new(Arc::new(p.phi.clone()), p.y.clone(), s)
+        .with_shape_tag("astro_200x1024");
 
-    let t = Instant::now();
-    let d = niht_dense(&p.phi, &p.y, s, &opts);
-    report("NIHT 32-bit (native)", &d.x, t.elapsed(), d.iterations);
+    let d = Recovery::problem(problem.clone())
+        .solver(SolverKind::Niht)
+        .run()
+        .expect("dense solve");
+    report_solve("NIHT 32-bit (native)", &d);
 
-    let t = Instant::now();
-    let q = qniht(&p.phi, &p.y, s, 2, 8, RequantMode::Fixed, 3, &opts);
-    report("QNIHT 2&8 (native)", &q.x, t.elapsed(), q.iterations);
+    let q = Recovery::problem(problem.clone())
+        .solver(SolverKind::qniht_fixed(2, 8))
+        .seed(3)
+        .run()
+        .expect("quant solve");
+    report_solve("QNIHT 2&8 (native)", &q);
 
     // The PJRT path: every step executes the AOT-compiled JAX graph with
-    // the Pallas dequantize-matvec kernels.
+    // the Pallas dequantize-matvec kernels — same builder, different
+    // engine.
     let artifacts = Path::new("artifacts");
     if artifacts.join("manifest.json").exists() {
-        let t = Instant::now();
-        match XlaQuantKernel::new(artifacts, "astro_200x1024", &p.phi, &p.y, 2, 8, 3) {
-            Ok(mut k) => {
-                let xq = solve(&mut k, s, &opts);
-                report("QNIHT 2&8 (XLA/PJRT)", &xq.x, t.elapsed(), xq.iterations);
-            }
+        match Recovery::problem(problem)
+            .solver(SolverKind::qniht_fixed(2, 8))
+            .engine(EngineKind::XlaQuant)
+            .artifact_dir(artifacts)
+            .seed(3)
+            .run()
+        {
+            Ok(xq) => report_solve("QNIHT 2&8 (XLA/PJRT)", &xq),
             Err(e) => println!("XLA engine unavailable: {e:#}"),
         }
     } else {

@@ -1,13 +1,13 @@
 //! Bench E11: recovery-service throughput/latency — queue + batcher +
-//! worker-pool overhead on top of the raw solver.
+//! worker-pool overhead on top of the raw (facade) solver.
 
-use lpcs::algorithms::qniht::{qniht, RequantMode};
 use lpcs::algorithms::SolveOptions;
 use lpcs::benchkit;
 use lpcs::config::{EngineKind, ServiceConfig};
 use lpcs::coordinator::{JobSpec, ProblemHandle, RecoveryService};
 use lpcs::linalg::Mat;
 use lpcs::rng::XorShift128Plus;
+use lpcs::solver::{Problem, Recovery, SolverKind};
 use std::sync::Arc;
 use std::time::{Duration, Instant};
 
@@ -27,9 +27,15 @@ fn main() {
     let (phi, y) = planted(m, n, s, 1);
     let opts = SolveOptions { max_iters: 40, ..Default::default() };
 
-    // Baseline: raw solver, no service.
+    // Baseline: one facade solve, no service around it.
+    let problem = Problem::new(phi.clone(), y.clone(), s);
     let raw = benchkit::run("raw qniht solve (no service)", 1, 9, || {
-        qniht(&phi, &y, s, 4, 8, RequantMode::Fixed, 1, &opts)
+        Recovery::problem(problem.clone())
+            .solver(SolverKind::qniht_fixed(4, 8))
+            .options(opts.clone())
+            .seed(1)
+            .run()
+            .expect("facade solve")
     });
 
     for workers in [1usize, 2, 4] {

@@ -1,14 +1,13 @@
 //! Bench E3 (Fig 4 cost side): per-solve wall time of every method on the
 //! same astro problem — the "fair comparison involves speed" discussion.
+//! All solves route through the `solver` facade (same path the service
+//! and the repro figures use), so the numbers include facade dispatch.
 
-use lpcs::algorithms::cosamp::cosamp;
-use lpcs::algorithms::fista::{fista, FistaOptions};
-use lpcs::algorithms::iht::iht;
-use lpcs::algorithms::niht::niht_dense;
-use lpcs::algorithms::qniht::{qniht, RequantMode};
 use lpcs::algorithms::SolveOptions;
 use lpcs::benchkit;
+use lpcs::solver::{Problem, Recovery, SolverKind};
 use lpcs::telescope::{AstroConfig, AstroProblem};
+use std::sync::Arc;
 
 fn main() {
     let cfg = AstroConfig {
@@ -20,22 +19,26 @@ fn main() {
     };
     let p = AstroProblem::build(&cfg, 1);
     let s = cfg.sources;
-    let opts = SolveOptions { max_iters: 50, ..Default::default() };
+    let opts = SolveOptions::default().with_max_iters(50);
     println!("== solver wall time, astro M={} N={} s={s}, 50 iters cap ==", p.m(), p.n());
 
-    benchkit::run("niht 32-bit", 1, 7, || niht_dense(&p.phi, &p.y, s, &opts));
-    benchkit::run("qniht 8&8 fixed", 1, 7, || {
-        qniht(&p.phi, &p.y, s, 8, 8, RequantMode::Fixed, 1, &opts)
-    });
-    benchkit::run("qniht 4&8 fixed", 1, 7, || {
-        qniht(&p.phi, &p.y, s, 4, 8, RequantMode::Fixed, 1, &opts)
-    });
-    benchkit::run("qniht 2&8 fixed", 1, 7, || {
-        qniht(&p.phi, &p.y, s, 2, 8, RequantMode::Fixed, 1, &opts)
-    });
-    benchkit::run("iht (rescaled)", 1, 7, || iht(&p.phi, &p.y, s, &opts));
-    benchkit::run("cosamp", 1, 7, || cosamp(&p.phi, &p.y, s, &opts));
+    let problem = Problem::new(Arc::new(p.phi.clone()), p.y.clone(), s);
+    let solve = |kind: SolverKind| {
+        Recovery::problem(problem.clone())
+            .solver(kind)
+            .options(opts.clone())
+            .seed(1)
+            .run()
+            .expect("facade solve")
+    };
+
+    benchkit::run("niht 32-bit", 1, 7, || solve(SolverKind::Niht));
+    benchkit::run("qniht 8&8 fixed", 1, 7, || solve(SolverKind::qniht_fixed(8, 8)));
+    benchkit::run("qniht 4&8 fixed", 1, 7, || solve(SolverKind::qniht_fixed(4, 8)));
+    benchkit::run("qniht 2&8 fixed", 1, 7, || solve(SolverKind::qniht_fixed(2, 8)));
+    benchkit::run("iht (rescaled)", 1, 7, || solve(SolverKind::Iht));
+    benchkit::run("cosamp", 1, 7, || solve(SolverKind::Cosamp));
     benchkit::run("fista + debias", 1, 7, || {
-        fista(&p.phi, &p.y, &opts, &FistaOptions { prune_to: Some(s), ..Default::default() })
+        solve(SolverKind::Fista { lambda: None, debias: true })
     });
 }

@@ -6,11 +6,25 @@
 //! the residual. The paper notes CoSaMP degrades when Φ has similar-
 //! magnitude entries / fails RIP — Fig 4 and our fig4 bench reproduce that.
 
-use super::support::{support_of, support_union, top_s_indices};
-use super::{SolveOptions, SolveResult};
+use super::support::{support_of, support_union, supports_equal, top_s_indices};
+use super::{IterObserver, IterStat, NoopObserver, ObserverSignal, SolveOptions, SolveResult};
 use crate::linalg::{self, cg, Mat};
 
+/// Deprecated shim: new code should route through the
+/// [`crate::solver::Recovery`] facade (`SolverKind::Cosamp`).
 pub fn cosamp(phi: &Mat, y: &[f32], s: usize, opts: &SolveOptions) -> SolveResult {
+    cosamp_observed(phi, y, s, opts, &mut NoopObserver)
+}
+
+/// [`cosamp`] with a per-iteration [`IterObserver`] (progress streaming /
+/// cancellation). `mu` is reported as 0 — CoSaMP has no step size.
+pub fn cosamp_observed(
+    phi: &Mat,
+    y: &[f32],
+    s: usize,
+    opts: &SolveOptions,
+    observer: &mut dyn IterObserver,
+) -> SolveResult {
     assert_eq!(phi.rows, y.len());
     assert!(s >= 1);
     let n = phi.cols;
@@ -18,6 +32,7 @@ pub fn cosamp(phi: &Mat, y: &[f32], s: usize, opts: &SolveOptions) -> SolveResul
     let mut r = y.to_vec();
     let mut converged = false;
     let mut iters = 0;
+    let mut history = Vec::new();
 
     for it in 0..opts.max_iters {
         let g = phi.matvec_t(&r);
@@ -38,18 +53,32 @@ pub fn cosamp(phi: &Mat, y: &[f32], s: usize, opts: &SolveOptions) -> SolveResul
         }
         let dx_nsq = linalg::norm2_sq(&linalg::sub(&x_next, &x));
         let x_nsq = linalg::norm2_sq(&x);
+        let support_changed = !supports_equal(&support_of(&x), &support_of(&x_next));
         x = x_next;
         // Residual update uses the sparse x.
         let idx = support_of(&x);
         let vals: Vec<f32> = idx.iter().map(|&i| x[i]).collect();
         r = linalg::sub(y, &phi.matvec_sparse(&idx, &vals));
         iters = it + 1;
+        let stat = IterStat {
+            iter: it,
+            resid_nsq: linalg::norm2_sq(&r),
+            mu: 0.0,
+            support_changed,
+            shrink_count: 0,
+        };
+        if opts.track_history {
+            history.push(stat);
+        }
+        if observer.on_iteration(&stat) == ObserverSignal::Stop {
+            break;
+        }
         if it > 0 && dx_nsq <= opts.tol * opts.tol * x_nsq.max(1e-12) {
             converged = true;
             break;
         }
     }
-    SolveResult { x, iterations: iters, converged, shrink_events: 0, history: vec![] }
+    SolveResult { x, iterations: iters, converged, shrink_events: 0, history }
 }
 
 #[cfg(test)]

@@ -7,8 +7,8 @@
 //! independently", and our fig4 harness sweeps λ). An optional debias pass
 //! re-fits the values on the recovered support by least squares.
 
-use super::support::{support_of, top_s_indices};
-use super::{SolveOptions, SolveResult};
+use super::support::{support_of, supports_equal, top_s_indices};
+use super::{IterObserver, IterStat, NoopObserver, ObserverSignal, SolveOptions, SolveResult};
 use crate::linalg::{self, cg, svd, Mat};
 
 /// Soft-thresholding operator.
@@ -40,11 +40,25 @@ impl Default for FistaOptions {
     }
 }
 
+/// Deprecated shim: new code should route through the
+/// [`crate::solver::Recovery`] facade (`SolverKind::Fista`).
 pub fn fista(
     phi: &Mat,
     y: &[f32],
     opts: &SolveOptions,
     fopts: &FistaOptions,
+) -> SolveResult {
+    fista_observed(phi, y, opts, fopts, &mut NoopObserver)
+}
+
+/// [`fista`] with a per-iteration [`IterObserver`] (progress streaming /
+/// cancellation). `mu` in the reported stats is the proximal step 1/L.
+pub fn fista_observed(
+    phi: &Mat,
+    y: &[f32],
+    opts: &SolveOptions,
+    fopts: &FistaOptions,
+    observer: &mut dyn IterObserver,
 ) -> SolveResult {
     assert_eq!(phi.rows, y.len());
     let n = phi.cols;
@@ -64,6 +78,7 @@ pub fn fista(
     let mut t = 1.0f32;
     let mut converged = false;
     let mut iters = 0;
+    let mut history = Vec::new();
 
     for it in 0..opts.max_iters {
         let r = linalg::sub(y, &phi.matvec(&z));
@@ -82,9 +97,22 @@ pub fn fista(
             .collect();
         let dx_nsq = linalg::norm2_sq(&linalg::sub(&x_next, &x));
         let x_nsq = linalg::norm2_sq(&x);
+        let stat = IterStat {
+            iter: it,
+            resid_nsq: linalg::norm2_sq(&r),
+            mu: step,
+            support_changed: !supports_equal(&support_of(&x), &support_of(&x_next)),
+            shrink_count: 0,
+        };
+        if opts.track_history {
+            history.push(stat);
+        }
         x = x_next;
         t = t_next;
         iters = it + 1;
+        if observer.on_iteration(&stat) == ObserverSignal::Stop {
+            break;
+        }
         if it > 0 && dx_nsq <= opts.tol * opts.tol * x_nsq.max(1e-12) {
             converged = true;
             break;
@@ -111,7 +139,7 @@ pub fn fista(
         }
     }
 
-    SolveResult { x, iterations: iters, converged, shrink_events: 0, history: vec![] }
+    SolveResult { x, iterations: iters, converged, shrink_events: 0, history }
 }
 
 #[cfg(test)]

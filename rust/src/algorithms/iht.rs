@@ -4,11 +4,26 @@
 //! of the measurement matrix" the paper's Remark 1 says NIHT makes
 //! unnecessary) and un-scales the result. Kept as the classical baseline.
 
-use super::support::hard_threshold;
-use super::{SolveOptions, SolveResult};
+use super::support::{hard_threshold, support_of, supports_equal};
+use super::{IterObserver, IterStat, NoopObserver, ObserverSignal, SolveOptions, SolveResult};
 use crate::linalg::{self, svd, Mat};
 
+/// Deprecated shim: new code should route through the
+/// [`crate::solver::Recovery`] facade (`SolverKind::Iht`).
 pub fn iht(phi: &Mat, y: &[f32], s: usize, opts: &SolveOptions) -> SolveResult {
+    iht_observed(phi, y, s, opts, &mut NoopObserver)
+}
+
+/// [`iht`] with a per-iteration [`IterObserver`] (progress streaming /
+/// cancellation). `resid_nsq` in the reported stats is measured on the
+/// internally rescaled problem (Φ/η, y/η); `mu` is the unit step.
+pub fn iht_observed(
+    phi: &Mat,
+    y: &[f32],
+    s: usize,
+    opts: &SolveOptions,
+    observer: &mut dyn IterObserver,
+) -> SolveResult {
     assert_eq!(phi.rows, y.len());
     let sigma = svd::spectral_norm(phi, 1e-5, 2000, 0x1417);
     let eta = 1.01 * sigma.max(f32::MIN_POSITIVE);
@@ -20,6 +35,7 @@ pub fn iht(phi: &Mat, y: &[f32], s: usize, opts: &SolveOptions) -> SolveResult {
     let mut x = vec![0.0f32; n];
     let mut converged = false;
     let mut iters = 0;
+    let mut history = Vec::new();
     for it in 0..opts.max_iters {
         let r = linalg::sub(&y_s, &phi_s.matvec(&x));
         let g = phi_s.matvec_t(&r);
@@ -27,14 +43,27 @@ pub fn iht(phi: &Mat, y: &[f32], s: usize, opts: &SolveOptions) -> SolveResult {
         let x_next = hard_threshold(&a, s);
         let dx_nsq = linalg::norm2_sq(&linalg::sub(&x_next, &x));
         let x_nsq = linalg::norm2_sq(&x);
+        let stat = IterStat {
+            iter: it,
+            resid_nsq: linalg::norm2_sq(&r),
+            mu: 1.0,
+            support_changed: !supports_equal(&support_of(&x), &support_of(&x_next)),
+            shrink_count: 0,
+        };
+        if opts.track_history {
+            history.push(stat);
+        }
         x = x_next;
         iters = it + 1;
+        if observer.on_iteration(&stat) == ObserverSignal::Stop {
+            break;
+        }
         if it > 0 && dx_nsq <= opts.tol * opts.tol * x_nsq.max(1e-12) {
             converged = true;
             break;
         }
     }
-    SolveResult { x, iterations: iters, converged, shrink_events: 0, history: vec![] }
+    SolveResult { x, iterations: iters, converged, shrink_events: 0, history }
 }
 
 #[cfg(test)]

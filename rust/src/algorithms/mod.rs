@@ -11,6 +11,11 @@
 //! * [`fista`] — ℓ₁ baseline (FISTA), "the ℓ1-based approach" of Fig 4.
 //! * [`clean`] — the CLEAN deconvolution baseline (Algorithm 2, Fig 9).
 //! * [`support`] — H_s, top-s selection, support-set utilities.
+//!
+//! Every iterative solver also has a `*_observed` entry point that accepts
+//! an [`IterObserver`] — a per-iteration callback that can stream progress
+//! and request early cancellation. Callers normally reach these through
+//! the [`crate::solver`] facade rather than calling them directly.
 
 pub mod clean;
 pub mod cosamp;
@@ -62,15 +67,59 @@ pub struct SolveOptions {
     pub kappa: f32,
     /// Record per-iteration statistics.
     pub track_history: bool,
+    /// Line-search safety valve: give up shrinking μ after this many
+    /// shrink steps in one outer iteration (μ is ~0 by then, so the
+    /// support can no longer move and the iteration is accepted as-is).
+    pub max_shrinks_per_iter: usize,
 }
 
 impl Default for SolveOptions {
     fn default() -> Self {
-        Self { max_iters: 200, tol: 1e-5, c: 0.1, kappa: 1.2, track_history: false }
+        Self {
+            max_iters: 200,
+            tol: 1e-5,
+            c: 0.1,
+            kappa: 1.2,
+            track_history: false,
+            max_shrinks_per_iter: 100,
+        }
     }
 }
 
-/// Per-iteration statistics (history entry).
+impl SolveOptions {
+    /// Builder-style setters (used by the [`crate::solver`] facade).
+    pub fn with_max_iters(mut self, max_iters: usize) -> Self {
+        self.max_iters = max_iters;
+        self
+    }
+
+    pub fn with_tol(mut self, tol: f32) -> Self {
+        self.tol = tol;
+        self
+    }
+
+    pub fn with_c(mut self, c: f32) -> Self {
+        self.c = c;
+        self
+    }
+
+    pub fn with_kappa(mut self, kappa: f32) -> Self {
+        self.kappa = kappa;
+        self
+    }
+
+    pub fn with_track_history(mut self, track: bool) -> Self {
+        self.track_history = track;
+        self
+    }
+
+    pub fn with_max_shrinks_per_iter(mut self, max_shrinks: usize) -> Self {
+        self.max_shrinks_per_iter = max_shrinks;
+        self
+    }
+}
+
+/// Per-iteration statistics (history entry / observer payload).
 #[derive(Debug, Clone, Copy)]
 pub struct IterStat {
     pub iter: usize,
@@ -78,6 +127,45 @@ pub struct IterStat {
     pub mu: f32,
     pub support_changed: bool,
     pub shrink_count: usize,
+}
+
+/// Decision an [`IterObserver`] returns after each outer iteration.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ObserverSignal {
+    /// Keep iterating.
+    Continue,
+    /// Stop now and return the current iterate (early cancellation; the
+    /// result is reported as not converged).
+    Stop,
+}
+
+/// Per-iteration callback threaded through every iterative solver: the
+/// serving layer uses it to stream progress and to cancel running jobs,
+/// and the [`crate::solver`] facade exposes it to callers.
+///
+/// Observers see every outer iteration (independently of
+/// `SolveOptions::track_history`) and are invoked *after* the iterate has
+/// been updated, so returning [`ObserverSignal::Stop`] keeps the work of
+/// the iteration that triggered the stop.
+pub trait IterObserver {
+    fn on_iteration(&mut self, stat: &IterStat) -> ObserverSignal;
+}
+
+/// The do-nothing observer every non-observed entry point uses.
+#[derive(Debug, Default, Clone, Copy)]
+pub struct NoopObserver;
+
+impl IterObserver for NoopObserver {
+    fn on_iteration(&mut self, _stat: &IterStat) -> ObserverSignal {
+        ObserverSignal::Continue
+    }
+}
+
+/// Any `FnMut(&IterStat) -> ObserverSignal` closure is an observer.
+impl<F: FnMut(&IterStat) -> ObserverSignal> IterObserver for F {
+    fn on_iteration(&mut self, stat: &IterStat) -> ObserverSignal {
+        self(stat)
+    }
 }
 
 /// Solver output.
@@ -100,5 +188,43 @@ mod tests {
         // Algorithm 1 requires κ > 1/(1−c).
         let o = SolveOptions::default();
         assert!(o.kappa > 1.0 / (1.0 - o.c));
+    }
+
+    #[test]
+    fn builder_setters_compose() {
+        let o = SolveOptions::default()
+            .with_max_iters(17)
+            .with_tol(1e-3)
+            .with_track_history(true)
+            .with_max_shrinks_per_iter(5);
+        assert_eq!(o.max_iters, 17);
+        assert_eq!(o.tol, 1e-3);
+        assert!(o.track_history);
+        assert_eq!(o.max_shrinks_per_iter, 5);
+        // Untouched fields keep their defaults.
+        assert_eq!(o.c, SolveOptions::default().c);
+    }
+
+    #[test]
+    fn closures_are_observers() {
+        let mut calls = 0usize;
+        let mut obs = |st: &IterStat| {
+            calls += 1;
+            if st.iter >= 1 { ObserverSignal::Stop } else { ObserverSignal::Continue }
+        };
+        let stat = |iter| IterStat {
+            iter,
+            resid_nsq: 0.0,
+            mu: 1.0,
+            support_changed: false,
+            shrink_count: 0,
+        };
+        {
+            let dyn_obs: &mut dyn IterObserver = &mut obs;
+            assert_eq!(dyn_obs.on_iteration(&stat(0)), ObserverSignal::Continue);
+            assert_eq!(dyn_obs.on_iteration(&stat(1)), ObserverSignal::Stop);
+        }
+        assert_eq!(calls, 2);
+        assert_eq!(NoopObserver.on_iteration(&stat(9)), ObserverSignal::Continue);
     }
 }

@@ -22,11 +22,27 @@
 //! kernel ([`super::qniht`]) is where the SIMD backend layer applies.
 
 use super::support::{hard_threshold, support_of, supports_equal, top_s_indices};
-use super::{IterStat, NihtKernel, SolveOptions, SolveResult, StepOut};
+use super::{
+    IterObserver, IterStat, NihtKernel, NoopObserver, ObserverSignal, SolveOptions, SolveResult,
+    StepOut,
+};
 use crate::linalg::{self, Mat};
 
 /// Run Algorithm 1 with any [`NihtKernel`].
 pub fn solve<K: NihtKernel>(kernel: &mut K, s: usize, opts: &SolveOptions) -> SolveResult {
+    solve_observed(kernel, s, opts, &mut NoopObserver)
+}
+
+/// [`solve`] with a per-iteration [`IterObserver`]: the observer sees every
+/// outer iteration's [`IterStat`] after the iterate is updated and may
+/// return [`ObserverSignal::Stop`] to cancel the solve, which returns the
+/// current iterate with `converged = false`.
+pub fn solve_observed<K: NihtKernel>(
+    kernel: &mut K,
+    s: usize,
+    opts: &SolveOptions,
+    observer: &mut dyn IterObserver,
+) -> SolveResult {
     assert!(s >= 1, "sparsity must be >= 1");
     assert!(s <= kernel.n(), "sparsity exceeds dimension");
     let n = kernel.n();
@@ -66,29 +82,37 @@ pub fn solve<K: NihtKernel>(kernel: &mut K, s: usize, opts: &SolveOptions) -> So
                 shrinks_this_iter += 1;
                 shrink_events += 1;
                 supp_next = support_of(&x_next);
-                if !(!supports_equal(&supp, &supp_next)) {
-                    break; // support stabilized — μ is safe
+                if supports_equal(&supp, &supp_next) {
+                    // Support stabilized: Algorithm 1 only requires the
+                    // μ ≤ (1−c)·b guard when the support *moves*, and a
+                    // small-enough μ can no longer move it — shrinking
+                    // further would just drive μ → 0 and stall the solve.
+                    break;
                 }
-                if shrinks_this_iter > 100 {
+                if shrinks_this_iter > opts.max_shrinks_per_iter {
                     break; // safety valve; μ is ~0 by now
                 }
             }
         }
 
+        let stat = IterStat {
+            iter: it,
+            resid_nsq: st.resid_nsq,
+            mu,
+            support_changed: changed,
+            shrink_count: shrinks_this_iter,
+        };
         if opts.track_history {
-            history.push(IterStat {
-                iter: it,
-                resid_nsq: st.resid_nsq,
-                mu,
-                support_changed: changed,
-                shrink_count: shrinks_this_iter,
-            });
+            history.push(stat);
         }
 
         let x_nsq = linalg::norm2_sq(&x);
         iters = it + 1;
         x = x_next;
         supp = supp_next;
+        if observer.on_iteration(&stat) == ObserverSignal::Stop {
+            break;
+        }
         if it > 0 && dx_nsq <= opts.tol * opts.tol * x_nsq.max(1e-12) {
             converged = true;
             break;
@@ -161,6 +185,10 @@ impl NihtKernel for DenseKernel<'_> {
 }
 
 /// Convenience: full-precision NIHT solve.
+///
+/// Deprecated shim: new code should route through the
+/// [`crate::solver::Recovery`] facade (`SolverKind::Niht`); this free
+/// function remains for one release so existing callers keep working.
 pub fn niht_dense(phi: &Mat, y: &[f32], s: usize, opts: &SolveOptions) -> SolveResult {
     let mut k = DenseKernel::new(phi, y);
     solve(&mut k, s, opts)
@@ -252,5 +280,54 @@ mod tests {
     fn rejects_zero_sparsity() {
         let (phi, y, _) = planted(16, 32, 2, 8);
         niht_dense(&phi, &y, 0, &SolveOptions::default());
+    }
+
+    #[test]
+    fn observer_sees_every_iteration_and_noop_matches_plain_solve() {
+        let (phi, y, _) = planted(64, 128, 5, 9);
+        let opts = SolveOptions::default();
+        let plain = niht_dense(&phi, &y, 5, &opts);
+        let mut seen = Vec::new();
+        let mut obs = |st: &super::super::IterStat| {
+            seen.push(st.iter);
+            super::super::ObserverSignal::Continue
+        };
+        let mut k = DenseKernel::new(&phi, &y);
+        let observed = solve_observed(&mut k, 5, &opts, &mut obs);
+        assert_eq!(observed.x, plain.x, "noop observer must not change the trajectory");
+        assert_eq!(observed.iterations, plain.iterations);
+        assert_eq!(seen, (0..plain.iterations).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn observer_stop_cancels_early() {
+        let (phi, y, _) = planted(64, 128, 5, 10);
+        // tol = 0 so the solver cannot converge on its own.
+        let opts = SolveOptions::default().with_tol(0.0).with_max_iters(50);
+        let mut obs = |st: &super::super::IterStat| {
+            if st.iter >= 3 {
+                super::super::ObserverSignal::Stop
+            } else {
+                super::super::ObserverSignal::Continue
+            }
+        };
+        let mut k = DenseKernel::new(&phi, &y);
+        let r = solve_observed(&mut k, 5, &opts, &mut obs);
+        assert_eq!(r.iterations, 4, "stopped at the end of iteration 3");
+        assert!(!r.converged);
+        assert!(support_of(&r.x).len() <= 5, "partial iterate is still s-sparse");
+    }
+
+    #[test]
+    fn max_shrinks_valve_is_configurable() {
+        // A tiny valve must not break recovery on a well-conditioned
+        // problem (it only caps the pathological-μ loop), and the shrink
+        // totals it produces must be no larger than the default's.
+        let (phi, y, x_true) = planted(64, 128, 5, 11);
+        let tight =
+            niht_dense(&phi, &y, 5, &SolveOptions::default().with_max_shrinks_per_iter(1));
+        let loose = niht_dense(&phi, &y, 5, &SolveOptions::default());
+        assert_eq!(support_of(&tight.x), support_of(&x_true));
+        assert!(tight.shrink_events <= loose.shrink_events.max(tight.iterations * 2));
     }
 }

@@ -21,6 +21,11 @@
 //! persistent [`crate::par`] pool, so per-iteration cost is kernel time,
 //! not thread-spawn or dispatch overhead. [`QuantKernel::simd_backend`]
 //! reports which backend this process selected.
+//!
+//! The quantize+pack product itself is factored out as [`PreparedPhi`]:
+//! the engine registry's batched path builds it once per batch of
+//! batch-key-equal jobs and binds per-job kernels to the shared `Arc`
+//! via [`QuantKernel::with_prepared`].
 
 use super::niht::solve;
 use super::support::{hard_threshold, support_of, top_s_indices};
@@ -30,6 +35,7 @@ use crate::lowprec;
 use crate::quant::packed::PackedMatrix;
 use crate::quant::{QuantizedMatrix, Quantizer};
 use crate::rng::XorShift128Plus;
+use std::sync::Arc;
 
 /// How Φ̂ is refreshed across iterations.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -38,6 +44,79 @@ pub enum RequantMode {
     Fixed,
     /// Fresh independent quantizations each iteration (theory mode).
     Fresh,
+}
+
+/// The immutable product of one QNIHT setup pass over Φ: quantized codes
+/// in both orientations plus the bit-packed buffers (when the width has a
+/// packed kernel). This is the expensive part of building a
+/// [`QuantKernel`], so the coordinator shares one `Arc<PreparedPhi>`
+/// across every batch-key-equal job (one quantize+pack amortized over the
+/// batch); `Fresh` mode builds an unpacked one per iteration.
+pub struct PreparedPhi {
+    /// Φ̂₂ codes, m×n row-major.
+    codes2: QuantizedMatrix,
+    /// Φ̂₁ᵀ codes, n×m row-major.
+    codes1_t: QuantizedMatrix,
+    /// Packed Φ̂₂ (Fixed mode only).
+    packed2: Option<PackedMatrix>,
+    /// Packed Φ̂₁ᵀ = Φ̂ᵀ (Fixed mode only: Φ̂₁ = Φ̂₂).
+    packed1_t: Option<PackedMatrix>,
+}
+
+impl PreparedPhi {
+    /// Fixed-mode quantization: ONE stored quantized matrix (Φ̂₁ = Φ̂₂ =
+    /// Φ̂), bit-packed when `bits_phi ∈ {2, 4, 8}`. One stored matrix is
+    /// the systems setting (one packed buffer in memory) and it makes g
+    /// the exact gradient of ‖ŷ − Φ̂x‖², so NIHT's descent guarantees
+    /// apply to the quantized problem. Independent Φ̂₁ ≠ Φ̂₂ only makes
+    /// sense with FRESH draws every iteration (Theorem 3's expectation);
+    /// a *fixed* mismatched pair is a biased cross-gradient and can
+    /// oscillate at 2 bits.
+    pub fn quantize(phi: &Mat, bits_phi: u8, seed: u64) -> Self {
+        Self::fixed_with_rng(phi, bits_phi, &mut XorShift128Plus::new(seed))
+    }
+
+    fn fixed_with_rng(phi: &Mat, bits_phi: u8, rng: &mut XorShift128Plus) -> Self {
+        let codes2 = QuantizedMatrix::from_mat(phi, bits_phi, rng);
+        let codes1_t = codes2.transposed();
+        let (packed2, packed1_t) = if matches!(bits_phi, 2 | 4 | 8) {
+            (Some(PackedMatrix::pack(&codes2)), Some(PackedMatrix::pack(&codes1_t)))
+        } else {
+            (None, None)
+        };
+        Self { codes2, codes1_t, packed2, packed1_t }
+    }
+
+    /// Fresh-mode draw: independent Φ̂₂ / Φ̂₁ᵀ at a shared scale, unpacked
+    /// (the fresh path re-quantizes every iteration, so packing would cost
+    /// more than it saves).
+    fn fresh_with_rng(phi: &Mat, bits_phi: u8, scale: Option<f32>, rng: &mut XorShift128Plus) -> Self {
+        let codes2 = match scale {
+            None => QuantizedMatrix::from_mat(phi, bits_phi, rng),
+            Some(sc) => QuantizedMatrix::from_mat_with_scale(phi, bits_phi, sc, rng),
+        };
+        let phi_t = phi.transpose();
+        let codes1_t =
+            QuantizedMatrix::from_mat_with_scale(&phi_t, bits_phi, codes2.scale, rng);
+        Self { codes2, codes1_t, packed2: None, packed1_t: None }
+    }
+
+    pub fn m(&self) -> usize {
+        self.codes2.m
+    }
+
+    pub fn n(&self) -> usize {
+        self.codes2.n
+    }
+
+    pub fn bits(&self) -> u8 {
+        self.codes2.bits
+    }
+
+    /// Bytes of Φ̂ traffic per full step at the ideal packed width.
+    pub fn bytes_ideal(&self) -> usize {
+        self.codes2.bytes_ideal() + self.codes1_t.bytes_ideal()
+    }
 }
 
 /// Quantized NIHT kernel (native execution engine).
@@ -49,14 +128,9 @@ pub enum RequantMode {
 /// mode re-quantizes each iteration (theory mode) and uses the unpacked
 /// int8 path.
 pub struct QuantKernel {
-    /// Φ̂₂ codes, m×n row-major.
-    codes2: QuantizedMatrix,
-    /// Φ̂₁ᵀ codes, n×m row-major.
-    codes1_t: QuantizedMatrix,
-    /// Packed Φ̂₂ (Fixed mode only).
-    packed2: Option<PackedMatrix>,
-    /// Packed Φ̂₁ᵀ = Φ̂ᵀ (Fixed mode only: Φ̂₁ = Φ̂₂).
-    packed1_t: Option<PackedMatrix>,
+    /// Quantized (and, in Fixed mode, packed) Φ̂ — shareable across
+    /// kernels recovering different observations against the same Φ.
+    phi_hat: Arc<PreparedPhi>,
     /// Dequantized observation ŷ (f32 image of Q(y)).
     y_hat: Vec<f32>,
     mode: RequantMode,
@@ -79,27 +153,10 @@ impl QuantKernel {
     ) -> Self {
         assert_eq!(phi.rows, y.len());
         let mut rng = XorShift128Plus::new(seed);
-        let codes2 = QuantizedMatrix::from_mat(phi, bits_phi, &mut rng);
-        // Fixed mode stores ONE quantized matrix (Φ̂₁ = Φ̂₂ = Φ̂): that is
-        // the systems setting (one packed buffer in memory) and it makes
-        // g the exact gradient of ‖ŷ − Φ̂x‖², so NIHT's descent guarantees
-        // apply to the quantized problem. Independent Φ̂₁ ≠ Φ̂₂ only makes
-        // sense with FRESH draws every iteration (Theorem 3's expectation);
-        // a *fixed* mismatched pair is a biased cross-gradient and can
-        // oscillate at 2 bits.
-        let phi_t = phi.transpose();
-        let codes1_t = match mode {
-            RequantMode::Fixed => codes2.transposed(),
-            RequantMode::Fresh => {
-                QuantizedMatrix::from_mat_with_scale(&phi_t, bits_phi, codes2.scale, &mut rng)
-            }
-        };
-        let (packed2, packed1_t) = if mode == RequantMode::Fixed && matches!(bits_phi, 2 | 4 | 8)
-        {
-            (Some(PackedMatrix::pack(&codes2)), Some(PackedMatrix::pack(&codes1_t)))
-        } else {
-            (None, None)
-        };
+        let phi_hat = Arc::new(match mode {
+            RequantMode::Fixed => PreparedPhi::fixed_with_rng(phi, bits_phi, &mut rng),
+            RequantMode::Fresh => PreparedPhi::fresh_with_rng(phi, bits_phi, None, &mut rng),
+        });
         let qy = Quantizer::new(bits_y);
         let (y_codes, y_scale) = qy.quantize_auto(y, &mut rng);
         let y_hat = qy.dequantize_slice(&y_codes, y_scale);
@@ -107,28 +164,32 @@ impl QuantKernel {
             RequantMode::Fixed => None,
             RequantMode::Fresh => Some(phi.clone()),
         };
-        Self {
-            codes2,
-            codes1_t,
-            packed2,
-            packed1_t,
-            y_hat,
-            mode,
-            full,
-            rng,
-            m: phi.rows,
-            n: phi.cols,
-        }
+        Self { phi_hat, y_hat, mode, full, rng, m: phi.rows, n: phi.cols }
+    }
+
+    /// Bind an already-quantized Φ̂ to a new observation — the batched
+    /// entry point: the coordinator quantizes/packs Φ once per batch and
+    /// builds one kernel per job from the shared `Arc`. Always Fixed mode
+    /// (a shared Φ̂ is by definition not redrawn); `seed` drives the
+    /// stochastic y quantization only.
+    pub fn with_prepared(phi_hat: Arc<PreparedPhi>, y: &[f32], bits_y: u8, seed: u64) -> Self {
+        assert_eq!(phi_hat.m(), y.len());
+        let mut rng = XorShift128Plus::new(seed);
+        let qy = Quantizer::new(bits_y);
+        let (y_codes, y_scale) = qy.quantize_auto(y, &mut rng);
+        let y_hat = qy.dequantize_slice(&y_codes, y_scale);
+        let (m, n) = (phi_hat.m(), phi_hat.n());
+        Self { phi_hat, y_hat, mode: RequantMode::Fixed, full: None, rng, m, n }
     }
 
     /// Bytes of Φ̂ traffic per full step at the ideal packed width
     /// (gradient streams Φ̂₁ᵀ once, the residual matvec streams Φ̂₂ once).
     pub fn bytes_per_iteration(&self) -> usize {
-        self.codes2.bytes_ideal() + self.codes1_t.bytes_ideal()
+        self.phi_hat.bytes_ideal()
     }
 
     pub fn bits_phi(&self) -> u8 {
-        self.codes2.bits
+        self.phi_hat.bits()
     }
 
     /// Name of the SIMD kernel backend executing this kernel's matvecs
@@ -139,46 +200,49 @@ impl QuantKernel {
 
     /// Φ̂₂ x (sparse x → the paper's dense scale-and-add over columns).
     fn phi2_x(&self, x: &[f32]) -> Vec<f32> {
+        let ph = &*self.phi_hat;
         let supp = support_of(x);
         if !supp.is_empty() && supp.len() * 8 < self.n {
             let vals: Vec<f32> = supp.iter().map(|&i| x[i]).collect();
             // Fixed mode: columns of Φ̂₂ are the rows of packed1_t.
-            if let Some(p1t) = &self.packed1_t {
+            if let Some(p1t) = &ph.packed1_t {
                 return lowprec::packed_scale_add(p1t, &supp, &vals);
             }
             return lowprec::qmatvec_sparse_cols(
-                &self.codes2.codes,
+                &ph.codes2.codes,
                 self.m,
                 self.n,
-                self.codes2.multiplier(),
+                ph.codes2.multiplier(),
                 &supp,
                 &vals,
             );
         }
-        if let Some(p2) = &self.packed2 {
+        if let Some(p2) = &ph.packed2 {
             return lowprec::packed_matvec(p2, x);
         }
-        lowprec::qmatvec(&self.codes2.codes, self.m, self.n, self.codes2.multiplier(), x)
+        lowprec::qmatvec(&ph.codes2.codes, self.m, self.n, ph.codes2.multiplier(), x)
     }
 
     /// Φ̂₁ᵀ v — the gradient matvec (streams the packed Φ̂ᵀ in Fixed mode).
     fn phi1t_v(&self, v: &[f32]) -> Vec<f32> {
-        if let Some(p1t) = &self.packed1_t {
+        let ph = &*self.phi_hat;
+        if let Some(p1t) = &ph.packed1_t {
             return lowprec::packed_matvec(p1t, v);
         }
-        lowprec::qmatvec(&self.codes1_t.codes, self.n, self.m, self.codes1_t.multiplier(), v)
+        lowprec::qmatvec(&ph.codes1_t.codes, self.n, self.m, ph.codes1_t.multiplier(), v)
     }
 
     /// Φ̂₁ applied to a sparse vector (line-search norm).
     fn phi1_sparse(&self, idx: &[usize], vals: &[f32]) -> Vec<f32> {
-        if let Some(p1t) = &self.packed1_t {
+        let ph = &*self.phi_hat;
+        if let Some(p1t) = &ph.packed1_t {
             return lowprec::packed_scale_add(p1t, idx, vals);
         }
         lowprec::qmatvec_sparse(
-            &self.codes1_t.codes,
+            &ph.codes1_t.codes,
             self.n,
             self.m,
-            self.codes1_t.multiplier(),
+            ph.codes1_t.multiplier(),
             idx,
             vals,
         )
@@ -201,13 +265,12 @@ impl NihtKernel for QuantKernel {
 
     fn begin_iteration(&mut self, _iter: usize) {
         if self.mode == RequantMode::Fresh {
-            let phi = self.full.as_ref().expect("Fresh mode retains Φ");
-            let bits = self.codes2.bits;
-            let scale = self.codes2.scale;
-            self.codes2 = QuantizedMatrix::from_mat_with_scale(phi, bits, scale, &mut self.rng);
-            let phi_t = phi.transpose();
-            self.codes1_t =
-                QuantizedMatrix::from_mat_with_scale(&phi_t, bits, scale, &mut self.rng);
+            let phi = self.full.take().expect("Fresh mode retains Φ");
+            let bits = self.phi_hat.bits();
+            let scale = self.phi_hat.codes2.scale;
+            self.phi_hat =
+                Arc::new(PreparedPhi::fresh_with_rng(&phi, bits, Some(scale), &mut self.rng));
+            self.full = Some(phi);
         }
     }
 
@@ -225,14 +288,15 @@ impl NihtKernel for QuantKernel {
         let num: f32 = vals.iter().map(|v| v * v).sum();
         // Φ̂₂ g_Γ restricted to the support (packed scale-and-add in
         // Fixed mode, dense column-restricted matvec otherwise).
-        let pg = if let Some(p1t) = &self.packed1_t {
+        let ph = &*self.phi_hat;
+        let pg = if let Some(p1t) = &ph.packed1_t {
             lowprec::packed_scale_add(p1t, &supp, &vals)
         } else {
             lowprec::qmatvec_sparse_cols(
-                &self.codes2.codes,
+                &ph.codes2.codes,
                 self.m,
                 self.n,
-                self.codes2.multiplier(),
+                ph.codes2.multiplier(),
                 &supp,
                 &vals,
             )
@@ -257,6 +321,10 @@ impl NihtKernel for QuantKernel {
 }
 
 /// Convenience: quantized NIHT solve (the paper's `b_Φ & b_y` variants).
+///
+/// Deprecated shim: new code should route through the
+/// [`crate::solver::Recovery`] facade (`SolverKind::Qniht`); this free
+/// function remains for one release so existing callers keep working.
 pub fn qniht(
     phi: &Mat,
     y: &[f32],
@@ -367,6 +435,42 @@ mod tests {
         let (phi, y, _) = planted(48, 96, 4, 7);
         let r = qniht(&phi, &y, 4, 4, 8, RequantMode::Fixed, 47, &SolveOptions::default());
         assert!(support_of(&r.x).len() <= 4);
+    }
+
+    #[test]
+    fn with_prepared_shares_one_quantization_and_recovers() {
+        // Batch amortization building block: one quantize+pack of Φ,
+        // several kernels bound to different observations.
+        let (phi, _, _) = planted(96, 192, 6, 8);
+        let prepared = Arc::new(PreparedPhi::quantize(&phi, 8, 99));
+        assert_eq!((prepared.m(), prepared.n(), prepared.bits()), (96, 192, 8));
+        let mut rng = XorShift128Plus::new(77);
+        for job in 0..3u64 {
+            let mut x_true = vec![0.0f32; 192];
+            for i in rng.choose_k(192, 6) {
+                x_true[i] = 2.0 * rng.gaussian_f32().signum();
+            }
+            let y = phi.matvec(&x_true);
+            let mut k = QuantKernel::with_prepared(prepared.clone(), &y, 8, job);
+            let r = solve(&mut k, 6, &SolveOptions::default());
+            assert_eq!(support_of(&r.x), support_of(&x_true), "job {job}");
+        }
+    }
+
+    #[test]
+    fn with_prepared_is_deterministic_in_its_seeds() {
+        let (phi, y, _) = planted(64, 128, 4, 9);
+        let a = {
+            let p = Arc::new(PreparedPhi::quantize(&phi, 4, 5));
+            let mut k = QuantKernel::with_prepared(p, &y, 8, 11);
+            solve(&mut k, 4, &SolveOptions::default())
+        };
+        let b = {
+            let p = Arc::new(PreparedPhi::quantize(&phi, 4, 5));
+            let mut k = QuantKernel::with_prepared(p, &y, 8, 11);
+            solve(&mut k, 4, &SolveOptions::default())
+        };
+        assert_eq!(a.x, b.x, "same (phi seed, y seed) must reproduce bit-identically");
     }
 
     #[test]

@@ -41,6 +41,12 @@ impl EngineKind {
             Self::XlaDense => "xla-dense",
         }
     }
+
+    /// Whether this engine executes quantized (low-precision) kernels —
+    /// decides whether a job's default solver is QNIHT or dense NIHT.
+    pub fn is_quantized(&self) -> bool {
+        matches!(self, Self::NativeQuant | Self::XlaQuant)
+    }
 }
 
 /// Quantization settings.
@@ -147,6 +153,9 @@ impl LpcsConfig {
             "solver.c" => self.solver.c = vf()? as f32,
             "solver.kappa" => self.solver.kappa = vf()? as f32,
             "solver.track_history" => self.solver.track_history = value == "true",
+            "solver.max_shrinks_per_iter" => {
+                self.solver.max_shrinks_per_iter = vf()? as usize
+            }
             "astro.antennas" => self.astro.antennas = vf()? as usize,
             "astro.resolution" => self.astro.resolution = vf()? as usize,
             "astro.fov_half_width" => self.astro.fov_half_width = vf()?,
@@ -196,10 +205,20 @@ mod tests {
         c.set("engine", "xla-quant").unwrap();
         c.set("astro.resolution", "128").unwrap();
         c.set("quant.mode", "fresh").unwrap();
+        c.set("solver.max_shrinks_per_iter", "7").unwrap();
         assert_eq!(c.quant.bits_phi, 4);
         assert_eq!(c.engine, EngineKind::XlaQuant);
         assert_eq!(c.astro.resolution, 128);
         assert_eq!(c.quant.mode, RequantMode::Fresh);
+        assert_eq!(c.solver.max_shrinks_per_iter, 7);
+    }
+
+    #[test]
+    fn quantized_engine_classification() {
+        assert!(EngineKind::NativeQuant.is_quantized());
+        assert!(EngineKind::XlaQuant.is_quantized());
+        assert!(!EngineKind::NativeDense.is_quantized());
+        assert!(!EngineKind::XlaDense.is_quantized());
     }
 
     #[test]

@@ -5,6 +5,12 @@
 //! share a [`BatchKey`], capped at `max_batch`. Consecutive-run batching
 //! (rather than global grouping) preserves fairness: a job never overtakes
 //! an earlier job with a different key.
+//!
+//! A formed batch is executed in one `EngineRegistry::solve_batch` call
+//! (see [`crate::solver::registry`]): because every job in it shares Φ and
+//! the quantization configuration, the quantized engine performs ONE
+//! quantize+pack of Φ for the whole batch — that amortization is the
+//! reason batches exist.
 
 use super::job::{BatchKey, JobId, JobSpec};
 

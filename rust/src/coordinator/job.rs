@@ -1,8 +1,10 @@
 //! Job model: specs, the state machine, and the store clients wait on.
 
-use crate::algorithms::SolveResult;
+use crate::algorithms::qniht::RequantMode;
+use crate::algorithms::{IterStat, SolveResult};
 use crate::config::EngineKind;
 use crate::linalg::Mat;
+use crate::solver::{Problem, SolveRequest, SolverKind};
 use std::collections::HashMap;
 use std::sync::{Arc, Condvar, Mutex};
 use std::time::{Duration, Instant};
@@ -51,6 +53,32 @@ impl JobSpec {
             bits_y: self.bits_y,
             engine: self.engine,
         }
+    }
+
+    /// The facade [`SolverKind`] this job runs: QNIHT (Fixed — the
+    /// serving setting) on the quantized engines, dense NIHT otherwise.
+    pub fn solver_kind(&self) -> SolverKind {
+        if self.engine.is_quantized() {
+            SolverKind::Qniht {
+                bits_phi: self.bits_phi,
+                bits_y: self.bits_y,
+                mode: RequantMode::Fixed,
+            }
+        } else {
+            SolverKind::Niht
+        }
+    }
+
+    /// Lower this job into the facade's [`SolveRequest`]. Jobs sharing a
+    /// `ProblemHandle` produce requests whose problems share Φ by pointer
+    /// identity, which is what the engine's batched path amortizes over.
+    pub fn into_request(self) -> SolveRequest {
+        let solver = self.solver_kind();
+        let mut problem = Problem::new(self.problem.phi, self.y, self.s);
+        if let Some(tag) = self.problem.shape_tag {
+            problem = problem.with_shape_tag(tag);
+        }
+        SolveRequest { problem, solver, seed: self.seed }
     }
 }
 
@@ -104,6 +132,12 @@ struct Record {
     submitted: Instant,
     started: Option<Instant>,
     finished: Option<Instant>,
+    /// Latest per-iteration stat the worker's observer streamed in.
+    progress: Option<IterStat>,
+    /// Cancellation requested: the worker's observer stops the solve at
+    /// the next iteration boundary; the job completes with its partial
+    /// iterate.
+    cancel: bool,
 }
 
 /// Shared job table with completion signalling.
@@ -129,9 +163,41 @@ impl JobStore {
                 submitted: Instant::now(),
                 started: None,
                 finished: None,
+                progress: None,
+                cancel: false,
             },
         );
         assert!(prev.is_none(), "job id {id} reused");
+    }
+
+    /// Stream the latest iteration stat for a running job (worker-side).
+    pub fn record_progress(&self, id: JobId, stat: IterStat) {
+        if let Some(r) = self.inner.lock().unwrap().get_mut(&id) {
+            r.progress = Some(stat);
+        }
+    }
+
+    /// Latest streamed iteration stat, if the job has run any iterations.
+    pub fn progress(&self, id: JobId) -> Option<IterStat> {
+        self.inner.lock().unwrap().get(&id).and_then(|r| r.progress)
+    }
+
+    /// Ask a job to stop at its next iteration boundary. Returns false if
+    /// the job is unknown or already terminal.
+    pub fn request_cancel(&self, id: JobId) -> bool {
+        let mut g = self.inner.lock().unwrap();
+        match g.get_mut(&id) {
+            Some(r) if !matches!(r.state, JobState::Done | JobState::Failed) => {
+                r.cancel = true;
+                true
+            }
+            _ => false,
+        }
+    }
+
+    /// Whether cancellation was requested (worker-side poll).
+    pub fn cancel_requested(&self, id: JobId) -> bool {
+        self.inner.lock().unwrap().get(&id).map(|r| r.cancel).unwrap_or(false)
     }
 
     /// Transition enforcing state-machine legality.
@@ -283,6 +349,54 @@ mod tests {
         let out = s.wait(2, Duration::from_millis(10)).unwrap();
         assert_eq!(out.state, JobState::Failed);
         assert_eq!(out.error.as_deref(), Some("boom"));
+    }
+
+    #[test]
+    fn progress_and_cancel_roundtrip() {
+        let s = JobStore::new();
+        s.insert_queued(3);
+        assert!(s.progress(3).is_none());
+        assert!(!s.cancel_requested(3));
+        let stat = IterStat {
+            iter: 4,
+            resid_nsq: 0.5,
+            mu: 1.0,
+            support_changed: false,
+            shrink_count: 0,
+        };
+        s.record_progress(3, stat);
+        assert_eq!(s.progress(3).unwrap().iter, 4);
+        assert!(s.request_cancel(3));
+        assert!(s.cancel_requested(3));
+        // Terminal jobs can no longer be cancelled.
+        s.transition(3, JobState::Running);
+        s.complete(3, dummy_result());
+        assert!(!s.request_cancel(3));
+        assert!(!s.request_cancel(99), "unknown job");
+    }
+
+    #[test]
+    fn spec_lowers_to_facade_request() {
+        let phi = Arc::new(Mat::zeros(2, 3));
+        let spec = JobSpec {
+            problem: ProblemHandle::with_shape_tag(phi.clone(), "tiny"),
+            y: vec![0.0; 2],
+            s: 1,
+            bits_phi: 2,
+            bits_y: 8,
+            engine: EngineKind::NativeQuant,
+            seed: 9,
+        };
+        assert_eq!(spec.solver_kind().name(), "qniht");
+        let dense = JobSpec { engine: EngineKind::NativeDense, ..spec.clone() };
+        assert_eq!(dense.solver_kind().name(), "niht");
+        let req = spec.into_request();
+        assert_eq!(req.seed, 9);
+        assert_eq!(req.problem.shape_tag(), Some("tiny"));
+        assert_eq!((req.problem.m(), req.problem.n(), req.problem.s()), (2, 3, 1));
+        // The request's problem shares the handle's Φ by identity.
+        let req2 = dense.into_request();
+        assert!(req.problem.shares_op(&req2.problem));
     }
 
     #[test]

@@ -12,10 +12,13 @@
 //! Components:
 //! * [`queue`] — bounded MPMC queue (Mutex + Condvar) with try/timeout
 //!   semantics and compatible-batch draining.
-//! * [`job`] — job specs, the state machine (Queued → Running → Done|Failed)
-//!   and the store clients wait on.
+//! * [`job`] — job specs, the state machine (Queued → Running → Done|Failed),
+//!   the store clients wait on, and per-job progress/cancellation flags.
 //! * [`batcher`] — pure batching policy (grouping key + batch limits).
-//! * [`service`] — worker pool wiring, engine dispatch, metrics.
+//! * [`service`] — worker pool wiring and metrics. Execution dispatch
+//!   lives in the [`crate::solver`] engine registry (one per worker);
+//!   batches go through `solve_batch`, which amortizes one quantize+pack
+//!   of Φ across the batch.
 
 pub mod batcher;
 pub mod job;

@@ -1,12 +1,18 @@
 //! The recovery service: router + worker pool + metrics.
+//!
+//! Execution dispatch lives in the [`crate::solver`] engine registry —
+//! each worker thread owns an [`EngineRegistry`] (so XLA runtime caches
+//! and batch quantizations persist per worker) and submits whole batches
+//! through [`EngineRegistry::solve_batch`], which amortizes one
+//! quantize+pack of Φ over every batch-key-equal job. A per-batch
+//! [`BatchObserver`] streams iteration progress into the [`JobStore`] and
+//! polls for cancellation, so clients can watch and stop running jobs.
 
 use super::job::{JobId, JobOutcome, JobSpec, JobState, JobStore};
 use super::queue::{BoundedQueue, Priority, PushError};
-use crate::algorithms::niht::{solve, DenseKernel};
-use crate::algorithms::qniht::{QuantKernel, RequantMode};
-use crate::algorithms::SolveOptions;
-use crate::config::{EngineKind, ServiceConfig};
-use crate::runtime::{Runtime, XlaDenseKernel, XlaQuantKernel};
+use crate::algorithms::{IterStat, ObserverSignal, SolveOptions};
+use crate::config::ServiceConfig;
+use crate::solver::{BatchObserver, EngineRegistry, SolveRequest};
 use anyhow::{anyhow, Result};
 use std::path::PathBuf;
 use std::sync::atomic::{AtomicU64, Ordering};
@@ -20,6 +26,9 @@ pub struct ServiceMetrics {
     pub rejected: AtomicU64,
     pub completed: AtomicU64,
     pub failed: AtomicU64,
+    /// Jobs that finished after a cancellation request (their partial
+    /// iterate is still delivered; counted in `completed` too).
+    pub cancelled: AtomicU64,
     pub batches: AtomicU64,
     /// Sum of batch sizes (mean batch size = batched_jobs / batches).
     pub batched_jobs: AtomicU64,
@@ -30,11 +39,12 @@ pub struct ServiceMetrics {
 impl ServiceMetrics {
     pub fn snapshot(&self) -> String {
         format!(
-            "submitted={} rejected={} completed={} failed={} batches={} mean_batch={:.2} solve_ms={}",
+            "submitted={} rejected={} completed={} failed={} cancelled={} batches={} mean_batch={:.2} solve_ms={}",
             self.submitted.load(Ordering::Relaxed),
             self.rejected.load(Ordering::Relaxed),
             self.completed.load(Ordering::Relaxed),
             self.failed.load(Ordering::Relaxed),
+            self.cancelled.load(Ordering::Relaxed),
             self.batches.load(Ordering::Relaxed),
             self.batched_jobs.load(Ordering::Relaxed) as f64
                 / self.batches.load(Ordering::Relaxed).max(1) as f64,
@@ -108,6 +118,19 @@ impl RecoveryService {
         self.store.wait(id, timeout)
     }
 
+    /// Latest per-iteration stat streamed by the job's solve (None until
+    /// the first iteration completes).
+    pub fn progress(&self, id: JobId) -> Option<IterStat> {
+        self.store.progress(id)
+    }
+
+    /// Ask a job to stop at its next iteration boundary. The job still
+    /// completes (with its partial iterate); returns false if it is
+    /// unknown or already terminal.
+    pub fn cancel(&self, id: JobId) -> bool {
+        self.store.request_cancel(id)
+    }
+
     pub fn queue_depth(&self) -> usize {
         self.queue.len()
     }
@@ -125,6 +148,34 @@ impl RecoveryService {
     }
 }
 
+/// Streams per-job progress into the store and relays cancellation
+/// requests back into the running solves. Also owns the Queued → Running
+/// transition: a batch executes its jobs sequentially, so each job is
+/// marked Running when ITS solve first reports an iteration — not when
+/// the batch starts — keeping queued_for/ran_for honest for trailing
+/// batch members.
+struct ServiceObserver<'a> {
+    store: &'a JobStore,
+    ids: &'a [JobId],
+    started: Vec<bool>,
+}
+
+impl BatchObserver for ServiceObserver<'_> {
+    fn on_iteration(&mut self, job_index: usize, stat: &IterStat) -> ObserverSignal {
+        let id = self.ids[job_index];
+        if !self.started[job_index] {
+            self.store.transition(id, JobState::Running);
+            self.started[job_index] = true;
+        }
+        self.store.record_progress(id, *stat);
+        if self.store.cancel_requested(id) {
+            ObserverSignal::Stop
+        } else {
+            ObserverSignal::Continue
+        }
+    }
+}
+
 fn worker_loop(
     cfg: ServiceConfig,
     queue: Arc<BoundedQueue<(JobId, JobSpec)>>,
@@ -133,8 +184,10 @@ fn worker_loop(
     solver: SolveOptions,
     artifact_dir: PathBuf,
 ) {
-    // PJRT handles are not Send: the runtime lives and dies in this thread.
-    let mut xla_rt: Option<Runtime> = None;
+    // All execution dispatch lives behind the engine registry. It is
+    // per-worker because PJRT handles are not Send: each worker's XLA
+    // engines own their runtime + compiled-executable cache.
+    let mut registry = EngineRegistry::with_defaults(artifact_dir);
     loop {
         let Some((lead_id, lead_spec)) = queue.pop_timeout(Duration::from_millis(50)) else {
             if queue.is_closed() {
@@ -144,6 +197,7 @@ fn worker_loop(
         };
         // Form a batch: drain compatible jobs from the queue front.
         let key = lead_spec.batch_key();
+        let engine_name = lead_spec.engine.name();
         let mut batch = vec![(lead_id, lead_spec)];
         if cfg.max_batch > 1 {
             // Small wait lets closely-spaced submissions coalesce.
@@ -156,17 +210,45 @@ fn worker_loop(
         metrics.batched_jobs.fetch_add(batch.len() as u64, Ordering::Relaxed);
 
         let t0 = std::time::Instant::now();
-        for (id, spec) in batch {
-            store.transition(id, JobState::Running);
-            let result = run_job(&spec, &solver, &artifact_dir, &mut xla_rt);
-            // Count before completing: `wait` returns as soon as the store
-            // transitions, so the counter must already be visible then.
-            match result {
-                Ok(res) => {
-                    metrics.completed.fetch_add(1, Ordering::Relaxed);
-                    store.complete(id, res);
+        let ids: Vec<JobId> = batch.iter().map(|(id, _)| *id).collect();
+        let reqs: Vec<SolveRequest> =
+            batch.into_iter().map(|(_, spec)| spec.into_request()).collect();
+        let mut observer =
+            ServiceObserver { store: &*store, ids: &ids, started: vec![false; ids.len()] };
+        match registry.solve_batch(engine_name, &reqs, &solver, &mut observer) {
+            Ok(results) => {
+                for (&id, result) in ids.iter().zip(results) {
+                    // Jobs that terminated before their first observer
+                    // callback (validation errors, engine rejections,
+                    // max_iters = 0) are still Queued; the state machine
+                    // requires passing through Running.
+                    if store.state(id) == Some(JobState::Queued) {
+                        store.transition(id, JobState::Running);
+                    }
+                    // Count before completing: `wait` returns as soon as
+                    // the store transitions, so the counter must already
+                    // be visible then.
+                    match result {
+                        Ok(res) => {
+                            if store.cancel_requested(id) {
+                                metrics.cancelled.fetch_add(1, Ordering::Relaxed);
+                            }
+                            metrics.completed.fetch_add(1, Ordering::Relaxed);
+                            store.complete(id, res);
+                        }
+                        Err(e) => {
+                            metrics.failed.fetch_add(1, Ordering::Relaxed);
+                            store.fail(id, format!("{e:#}"));
+                        }
+                    }
                 }
-                Err(e) => {
+            }
+            Err(e) => {
+                // Unknown engine: fail the whole batch.
+                for &id in &ids {
+                    if store.state(id) == Some(JobState::Queued) {
+                        store.transition(id, JobState::Running);
+                    }
                     metrics.failed.fetch_add(1, Ordering::Relaxed);
                     store.fail(id, format!("{e:#}"));
                 }
@@ -178,71 +260,10 @@ fn worker_loop(
     }
 }
 
-fn run_job(
-    spec: &JobSpec,
-    solver: &SolveOptions,
-    artifact_dir: &std::path::Path,
-    xla_rt: &mut Option<Runtime>,
-) -> Result<crate::algorithms::SolveResult> {
-    let phi = &spec.problem.phi;
-    match spec.engine {
-        EngineKind::NativeDense => {
-            let mut k = DenseKernel::new(phi, &spec.y);
-            Ok(solve(&mut k, spec.s, solver))
-        }
-        EngineKind::NativeQuant => {
-            let mut k = QuantKernel::new(
-                phi,
-                &spec.y,
-                spec.bits_phi,
-                spec.bits_y,
-                RequantMode::Fixed,
-                spec.seed,
-            );
-            Ok(solve(&mut k, spec.s, solver))
-        }
-        EngineKind::XlaQuant => {
-            let tag = spec
-                .problem
-                .shape_tag
-                .as_deref()
-                .ok_or_else(|| anyhow!("XLA engine requires a shape tag"))?;
-            if xla_rt.is_none() {
-                *xla_rt = Some(Runtime::new(artifact_dir)?);
-            }
-            let rt = xla_rt.as_mut().unwrap();
-            let mut k = XlaQuantKernel::with_runtime(
-                rt,
-                tag,
-                phi,
-                &spec.y,
-                spec.bits_phi,
-                spec.bits_y,
-                spec.seed,
-            )?;
-            anyhow::ensure!(k.artifact_s() == spec.s, "artifact s mismatch");
-            Ok(solve(&mut k, spec.s, solver))
-        }
-        EngineKind::XlaDense => {
-            let tag = spec
-                .problem
-                .shape_tag
-                .as_deref()
-                .ok_or_else(|| anyhow!("XLA engine requires a shape tag"))?;
-            if xla_rt.is_none() {
-                *xla_rt = Some(Runtime::new(artifact_dir)?);
-            }
-            let rt = xla_rt.as_mut().unwrap();
-            let mut k = XlaDenseKernel::with_runtime(rt, tag, phi, &spec.y)?;
-            anyhow::ensure!(k.artifact_s() == spec.s, "artifact s mismatch");
-            Ok(solve(&mut k, spec.s, solver))
-        }
-    }
-}
-
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::config::EngineKind;
     use crate::coordinator::job::ProblemHandle;
     use crate::linalg::Mat;
     use crate::rng::XorShift128Plus;
@@ -380,6 +401,48 @@ mod tests {
     #[test]
     fn shutdown_joins_cleanly() {
         let service = svc(3);
+        service.shutdown();
+    }
+
+    #[test]
+    fn cancel_stops_long_jobs_and_delivers_partial_results() {
+        let service = RecoveryService::start(
+            ServiceConfig { workers: 1, queue_capacity: 8, max_batch: 1, max_wait_ms: 0 },
+            // tol = 0 + huge budget: without cancellation these jobs would
+            // grind through 200k iterations each.
+            SolveOptions::default().with_tol(0.0).with_max_iters(200_000),
+            PathBuf::from("artifacts"),
+        );
+        // Big dense problem so one iteration costs two full matvecs —
+        // cancelling right after submit always lands within the first
+        // couple of iterations.
+        let (phi, y, _) = planted(512, 4096, 8, 11);
+        let spec = JobSpec {
+            problem: ProblemHandle::new(phi),
+            y,
+            s: 8,
+            bits_phi: 8,
+            bits_y: 8,
+            engine: EngineKind::NativeDense,
+            seed: 1,
+        };
+        let a = service.submit(spec.clone()).unwrap();
+        let b = service.submit(spec).unwrap();
+        assert!(service.cancel(a), "queued/running job accepts cancellation");
+        assert!(service.cancel(b));
+        for id in [a, b] {
+            let out = service.wait(id, Duration::from_secs(120)).expect("cancelled job completes");
+            assert_eq!(out.state, JobState::Done);
+            let res = out.result.unwrap();
+            assert!(!res.converged, "cancelled solve reports non-convergence");
+            assert!(res.iterations <= 4, "stopped almost immediately, ran {}", res.iterations);
+            assert!(service.progress(id).is_some(), "progress was streamed");
+        }
+        assert_eq!(
+            service.metrics().cancelled.load(Ordering::Relaxed),
+            2,
+            "cancellations are counted"
+        );
         service.shutdown();
     }
 }

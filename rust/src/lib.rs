@@ -12,10 +12,42 @@
 //! bandwidth-model simulator, a PJRT runtime that executes the JAX/Pallas
 //! AOT artifacts, and an async recovery service.
 //!
-//! Layers (see DESIGN.md):
-//! * L3 (this crate): coordination, control flow of Algorithm 1, serving.
-//! * L2/L1 (python/compile): JAX step graphs + Pallas kernels, AOT-lowered
-//!   to `artifacts/*.hlo.txt`, loaded by [`runtime`].
+//! ## Layers
+//!
+//! Every recovery path enters through the **[`solver`] facade** and flows
+//! down:
+//!
+//! * **Facade** ([`solver`]): [`solver::Problem`] (Φ as a
+//!   [`solver::MeasurementOp`] + y + sparsity), [`solver::SolverKind`] /
+//!   [`solver::SparseSolver`] adapters for every algorithm,
+//!   [`solver::Recovery`] builder, and the [`solver::EngineRegistry`]
+//!   (name → engine factory) that owns execution dispatch, XLA runtime
+//!   caching and batched quantize+pack amortization. This is the only API
+//!   the serving layer, examples, repro figures and benches use.
+//! * **Serving** ([`coordinator`]): bounded queue with backpressure,
+//!   batch formation over batch-key-equal jobs, worker pool (one registry
+//!   per worker), per-job progress streaming and cancellation via
+//!   [`algorithms::IterObserver`].
+//! * **Algorithms** ([`algorithms`]): the Algorithm-1 NIHT driver (generic
+//!   over [`algorithms::NihtKernel`]), the quantized kernels, and the
+//!   baselines — all observable per iteration.
+//! * **Substrate**: [`quant`] (stochastic quantization + bit-packing),
+//!   [`lowprec`] (packed kernels over the runtime-dispatched [`simd`]
+//!   backends on the persistent [`par`] pool), [`linalg`], [`rng`].
+//! * **Artifacts** ([`runtime`]): PJRT client + compiled-executable cache
+//!   executing the L2/L1 JAX/Pallas AOT graphs (`artifacts/*.hlo.txt`);
+//!   reached through the registry's `xla-*` engines.
+//! * **Evaluation**: [`telescope`], [`rip`], [`perfmodel`], [`metrics`],
+//!   [`repro`] (figure harness), [`benchkit`].
+//!
+//! ```no_run
+//! use lpcs::solver::{Problem, Recovery, SolverKind};
+//! # let (phi, y) = (std::sync::Arc::new(lpcs::Mat::zeros(4, 8)), vec![0.0f32; 4]);
+//! let report = Recovery::problem(Problem::new(phi, y, 2))
+//!     .solver(SolverKind::qniht_fixed(2, 8))
+//!     .run()
+//!     .unwrap();
+//! ```
 
 pub mod algorithms;
 pub mod benchkit;
@@ -33,8 +65,10 @@ pub mod rip;
 pub mod rng;
 pub mod runtime;
 pub mod simd;
+pub mod solver;
 pub mod telescope;
 pub mod testkit;
 
 pub use linalg::Mat;
 pub use quant::{QuantizedMatrix, Quantizer};
+pub use solver::{Problem, Recovery, SolveReport, SolverKind};

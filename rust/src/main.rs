@@ -12,15 +12,13 @@
 //! DESIGN.md §6.)
 
 use anyhow::{bail, Context, Result};
-use lpcs::algorithms::niht::niht_dense;
-use lpcs::algorithms::qniht::qniht;
-use lpcs::algorithms::niht;
-use lpcs::config::{EngineKind, LpcsConfig};
+use lpcs::config::LpcsConfig;
 use lpcs::coordinator::{JobSpec, ProblemHandle, RecoveryService};
 use lpcs::linalg::Mat;
 use lpcs::metrics;
 use lpcs::rng::XorShift128Plus;
-use lpcs::runtime::{Runtime, XlaDenseKernel, XlaQuantKernel};
+use lpcs::runtime::Runtime;
+use lpcs::solver::{Problem, Recovery, SolverKind};
 use lpcs::telescope::AstroProblem;
 use std::sync::Arc;
 use std::time::{Duration, Instant};
@@ -127,37 +125,34 @@ fn cmd_solve(cfg: &LpcsConfig, kind: &str) -> Result<()> {
         phi.rows, phi.cols, cfg.engine.name(), cfg.quant.bits_phi, cfg.quant.bits_y
     );
 
-    let t0 = Instant::now();
-    let result = match cfg.engine {
-        EngineKind::NativeDense => niht_dense(&phi, &y, s, &cfg.solver),
-        EngineKind::NativeQuant => qniht(
-            &phi, &y, s, cfg.quant.bits_phi, cfg.quant.bits_y, cfg.quant.mode, cfg.seed,
-            &cfg.solver,
-        ),
-        EngineKind::XlaQuant => {
-            let mut k = XlaQuantKernel::new(
-                &cfg.artifact_dir, tag, &phi, &y, cfg.quant.bits_phi, cfg.quant.bits_y, cfg.seed,
-            )?;
-            let s_art = k.artifact_s();
-            niht::solve(&mut k, s_art, &cfg.solver)
+    // One facade call covers all four engines: the registry owns dispatch.
+    let solver = if cfg.engine.is_quantized() {
+        SolverKind::Qniht {
+            bits_phi: cfg.quant.bits_phi,
+            bits_y: cfg.quant.bits_y,
+            mode: cfg.quant.mode,
         }
-        EngineKind::XlaDense => {
-            let mut k = XlaDenseKernel::new(&cfg.artifact_dir, tag, &phi, &y)?;
-            let s_art = k.artifact_s();
-            niht::solve(&mut k, s_art, &cfg.solver)
-        }
+    } else {
+        SolverKind::Niht
     };
-    let solve_time = t0.elapsed();
+    let problem = Problem::from_mat(phi, y, s).with_shape_tag(tag);
+    let report = Recovery::problem(problem)
+        .solver(solver)
+        .engine(cfg.engine)
+        .options(cfg.solver.clone())
+        .seed(cfg.seed)
+        .artifact_dir(cfg.artifact_dir.clone())
+        .run()?;
 
     println!(
-        "iterations={} converged={} shrink_events={} solve_time={:.3?} total={:.3?}",
-        result.iterations, result.converged, result.shrink_events, solve_time,
-        t_total.elapsed()
+        "solver={} engine={} iterations={} converged={} shrink_events={} solve_time={:.3?} total={:.3?}",
+        report.solver, report.engine, report.iterations, report.converged,
+        report.shrink_events, report.wall, t_total.elapsed()
     );
     println!(
         "recovery_error={:.6} support_recovery={:.4}",
-        metrics::recovery_error(&result.x, &x_true),
-        metrics::exact_recovery_top_s(&result.x, &x_true)
+        metrics::recovery_error(&report.x, &x_true),
+        metrics::exact_recovery_top_s(&report.x, &x_true)
     );
     Ok(())
 }

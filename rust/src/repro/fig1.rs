@@ -4,13 +4,13 @@
 //! Emits `fig1.csv` (recovery error / support recovery / sources resolved
 //! per method) and four PGM panels.
 
-use crate::algorithms::niht::niht_dense;
-use crate::algorithms::qniht::qniht;
 use crate::config::LpcsConfig;
 use crate::io::{csv::CsvTable, pgm};
 use crate::metrics;
+use crate::solver::{Problem, Recovery, SolverKind};
 use crate::telescope::{dirty, AstroProblem};
 use anyhow::Result;
+use std::sync::Arc;
 
 pub fn run(cfg: &LpcsConfig) -> Result<()> {
     let p = AstroProblem::build(&cfg.astro, cfg.seed);
@@ -22,12 +22,22 @@ pub fn run(cfg: &LpcsConfig) -> Result<()> {
     );
 
     let dirty_img = dirty::dirty_image(&p.phi, &p.y);
-    let x32 = niht_dense(&p.phi, &p.y, s, &cfg.solver).x;
-    let xq = qniht(
-        &p.phi, &p.y, s, cfg.quant.bits_phi, cfg.quant.bits_y, cfg.quant.mode, cfg.seed,
-        &cfg.solver,
-    )
-    .x;
+    let problem = Problem::new(Arc::new(p.phi.clone()), p.y.clone(), s);
+    let x32 = Recovery::problem(problem.clone())
+        .solver(SolverKind::Niht)
+        .options(cfg.solver.clone())
+        .run()?
+        .x;
+    let xq = Recovery::problem(problem)
+        .solver(SolverKind::Qniht {
+            bits_phi: cfg.quant.bits_phi,
+            bits_y: cfg.quant.bits_y,
+            mode: cfg.quant.mode,
+        })
+        .options(cfg.solver.clone())
+        .seed(cfg.seed)
+        .run()?
+        .x;
 
     let mut t = CsvTable::new(&[
         "method",

@@ -4,13 +4,12 @@
 //! 32-bit NIHT vs 2&8-bit QNIHT. Expected shape: 2&8-bit slightly worse,
 //! equally robust to noise.
 
-use crate::algorithms::niht::niht_dense;
-use crate::algorithms::qniht::{qniht, RequantMode};
 use crate::config::LpcsConfig;
 use crate::io::csv::CsvTable;
 use crate::linalg::Mat;
 use crate::metrics;
 use crate::rng::XorShift128Plus;
+use crate::solver::{Problem, Recovery, SolverKind};
 use anyhow::Result;
 
 pub fn run(cfg: &LpcsConfig) -> Result<()> {
@@ -43,8 +42,18 @@ pub fn run(cfg: &LpcsConfig) -> Result<()> {
             let sd = (noise_p / m as f64).sqrt() as f32;
             let y: Vec<f32> = clean.iter().map(|v| v + sd * rng.gaussian_f32()).collect();
 
-            let x32 = niht_dense(&phi, &y, s, &cfg.solver).x;
-            let xq = qniht(&phi, &y, s, 2, 8, RequantMode::Fresh, rep as u64, &cfg.solver).x;
+            let problem = Problem::from_mat(phi, y, s);
+            let x32 = Recovery::problem(problem.clone())
+                .solver(SolverKind::Niht)
+                .options(cfg.solver.clone())
+                .run()?
+                .x;
+            let xq = Recovery::problem(problem)
+                .solver(SolverKind::qniht_fresh(2, 8))
+                .options(cfg.solver.clone())
+                .seed(rep as u64)
+                .run()?
+                .x;
             acc[0] += metrics::recovery_error(&x32, &x);
             acc[1] += metrics::exact_recovery(&x32, &x);
             acc[2] += metrics::recovery_error(&xq, &x);

@@ -2,16 +2,15 @@
 //! count, for: 32-bit NIHT, 2&8-bit QNIHT, 4&8-bit QNIHT, CoSaMP, and the
 //! ℓ1 approach (FISTA), on the radio-interferometry problem.
 
-use crate::algorithms::cosamp::cosamp;
-use crate::algorithms::fista::{fista, FistaOptions};
-use crate::algorithms::niht::niht_dense;
-use crate::algorithms::qniht::{qniht, RequantMode};
+use crate::algorithms::qniht::RequantMode;
 use crate::algorithms::SolveOptions;
 use crate::config::LpcsConfig;
 use crate::io::csv::CsvTable;
 use crate::metrics;
+use crate::solver::{Problem, Recovery, SolverKind};
 use crate::telescope::{AstroConfig, AstroProblem};
 use anyhow::Result;
+use std::sync::Arc;
 
 pub fn run(cfg: &LpcsConfig) -> Result<()> {
     // Fig 4 scale: keep the harness snappy (r ≤ 32) unless overridden.
@@ -31,30 +30,39 @@ pub fn run(cfg: &LpcsConfig) -> Result<()> {
     let mut t = CsvTable::new(&["method", "iterations", "recovery_error", "exact_recovery"]);
 
     let opts_k = |k: usize| SolveOptions { max_iters: k, tol: 0.0, ..cfg.solver.clone() };
+    // One Problem, every method: each entry re-runs the facade at a fixed
+    // iteration budget (Problem clones share Φ behind the Arc).
+    let problem = Problem::new(Arc::new(p.phi.clone()), p.y.clone(), s);
+    let solve = |kind: SolverKind, k: usize| {
+        Recovery::problem(problem.clone())
+            .solver(kind)
+            .options(opts_k(k))
+            .seed(cfg.seed)
+            .run()
+            .map(|rep| rep.x)
+    };
 
     for &k in &iters {
-        let x = niht_dense(&p.phi, &p.y, s, &opts_k(k)).x;
+        let x = solve(SolverKind::Niht, k)?;
         t.row(&row("niht_32bit", k, &x, &p.x_true));
     }
     for (bits, name) in [(2u8, "qniht_2&8bit"), (4u8, "qniht_4&8bit")] {
         for &k in &iters {
-            let x = qniht(&p.phi, &p.y, s, bits, 8, RequantMode::Fixed, cfg.seed, &opts_k(k)).x;
+            let x = solve(
+                SolverKind::Qniht { bits_phi: bits, bits_y: 8, mode: RequantMode::Fixed },
+                k,
+            )?;
             t.row(&row(name, k, &x, &p.x_true));
         }
     }
     for &k in &iters {
-        let x = cosamp(&p.phi, &p.y, s, &opts_k(k)).x;
+        let x = solve(SolverKind::Cosamp, k)?;
         t.row(&row("cosamp", k, &x, &p.x_true));
     }
     for &k in &iters {
         // FISTA needs more inner iterations per unit progress; scale ×4.
-        let x = fista(
-            &p.phi,
-            &p.y,
-            &opts_k(4 * k),
-            &FistaOptions { prune_to: Some(s), ..Default::default() },
-        )
-        .x;
+        // (The facade prunes the ℓ₁ iterate to s for support metrics.)
+        let x = solve(SolverKind::Fista { lambda: None, debias: true }, 4 * k)?;
         t.row(&row("l1_fista", k, &x, &p.x_true));
     }
 

@@ -7,15 +7,15 @@
 //! the *shape* — monotone speedup as precision drops, near the traffic
 //! ratio when memory-bound — is the reproduction target.
 
-use crate::algorithms::niht::niht_dense;
-use crate::algorithms::qniht::{qniht, RequantMode};
 use crate::algorithms::SolveOptions;
 use crate::config::LpcsConfig;
 use crate::io::csv::CsvTable;
 use crate::perfmodel::cpu;
 use crate::repro::iterations_to_sources_resolved;
+use crate::solver::{Problem, Recovery, SolverKind};
 use crate::telescope::{AstroConfig, AstroProblem};
 use anyhow::Result;
+use std::sync::Arc;
 use std::time::Instant;
 
 pub fn run(cfg: &LpcsConfig) -> Result<()> {
@@ -46,10 +46,21 @@ pub fn run(cfg: &LpcsConfig) -> Result<()> {
     let p = AstroProblem::build(&astro, cfg.seed);
     let s = astro.sources;
 
-    // 32-bit baseline end-to-end.
+    // 32-bit baseline end-to-end. Every solve routes through the facade;
+    // Problem clones share Φ behind the Arc.
     let opts_k = |k: usize| SolveOptions { max_iters: k, tol: 0.0, ..cfg.solver.clone() };
+    let problem = Problem::new(Arc::new(p.phi.clone()), p.y.clone(), s);
+    let solve = |kind: SolverKind, k: usize| {
+        Recovery::problem(problem.clone())
+            .solver(kind)
+            .options(opts_k(k))
+            .seed(cfg.seed)
+            .run()
+            .expect("facade solve")
+            .x
+    };
     let iters32 = iterations_to_sources_resolved(
-        |k| niht_dense(&p.phi, &p.y, s, &opts_k(k)).x,
+        |k| solve(SolverKind::Niht, k),
         &p.sky.sources,
         astro.resolution,
         0.9,
@@ -58,14 +69,14 @@ pub fn run(cfg: &LpcsConfig) -> Result<()> {
     let t32 = {
         let k = iters32.unwrap_or(512);
         let t0 = Instant::now();
-        let _ = niht_dense(&p.phi, &p.y, s, &opts_k(k));
+        let _ = solve(SolverKind::Niht, k);
         t0.elapsed().as_secs_f64()
     };
 
     for bits in [4u8, 8] {
         let mv = cpu::measure_matvec(m, n, bits, 7, cfg.seed);
         let iters_q = iterations_to_sources_resolved(
-            |k| qniht(&p.phi, &p.y, s, bits, 8, RequantMode::Fixed, cfg.seed, &opts_k(k)).x,
+            |k| solve(SolverKind::qniht_fixed(bits, 8), k),
             &p.sky.sources,
             astro.resolution,
             0.9,
@@ -74,7 +85,7 @@ pub fn run(cfg: &LpcsConfig) -> Result<()> {
         let tq = {
             let k = iters_q.unwrap_or(512);
             let t0 = Instant::now();
-            let _ = qniht(&p.phi, &p.y, s, bits, 8, RequantMode::Fixed, cfg.seed, &opts_k(k));
+            let _ = solve(SolverKind::qniht_fixed(bits, 8), k);
             t0.elapsed().as_secs_f64()
         };
         t.row_f64(&[

@@ -4,15 +4,16 @@
 //! iteration time with the iteration counts the quantized solver actually
 //! needs to reach 90% support recovery. Headline: 2&8-bit ⇒ ~9.19×.
 
-use crate::algorithms::niht::niht_dense;
-use crate::algorithms::qniht::{qniht, RequantMode};
+use crate::algorithms::qniht::RequantMode;
 use crate::algorithms::SolveOptions;
 use crate::config::LpcsConfig;
 use crate::io::csv::CsvTable;
 use crate::perfmodel::fpga::FpgaModel;
 use crate::repro::iterations_to_sources_resolved;
+use crate::solver::{Problem, Recovery, SolverKind};
 use crate::telescope::{AstroConfig, AstroProblem};
 use anyhow::Result;
+use std::sync::Arc;
 
 pub fn run(cfg: &LpcsConfig) -> Result<()> {
     let fpga = FpgaModel::default();
@@ -30,8 +31,18 @@ pub fn run(cfg: &LpcsConfig) -> Result<()> {
     );
 
     let opts_k = |k: usize| SolveOptions { max_iters: k, tol: 0.0, ..cfg.solver.clone() };
+    let problem = Problem::new(Arc::new(p.phi.clone()), p.y.clone(), s);
+    let solve = |kind: SolverKind, k: usize| {
+        Recovery::problem(problem.clone())
+            .solver(kind)
+            .options(opts_k(k))
+            .seed(cfg.seed)
+            .run()
+            .expect("facade solve")
+            .x
+    };
     let iters32 = iterations_to_sources_resolved(
-        |k| niht_dense(&p.phi, &p.y, s, &opts_k(k)).x,
+        |k| solve(SolverKind::Niht, k),
         &p.sky.sources,
         astro.resolution,
         0.9,
@@ -73,7 +84,7 @@ pub fn run(cfg: &LpcsConfig) -> Result<()> {
             // rounding is re-drawn on every pass over the matrix.
             let mode = if bits <= 2 { RequantMode::Fresh } else { RequantMode::Fixed };
             iterations_to_sources_resolved(
-                |k| qniht(&p.phi, &p.y, s, bits, by, mode, cfg.seed, &opts_k(k)).x,
+                |k| solve(SolverKind::Qniht { bits_phi: bits, bits_y: by, mode }, k),
                 &p.sky.sources,
                 astro.resolution,
                 0.9,

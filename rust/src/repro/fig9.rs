@@ -4,10 +4,10 @@
 //! refinement suppresses them.
 
 use crate::algorithms::clean::{clean, components_to_sky, CleanOptions};
-use crate::algorithms::qniht::qniht;
 use crate::config::LpcsConfig;
 use crate::io::{csv::CsvTable, pgm};
 use crate::metrics;
+use crate::solver::{Problem, Recovery, SolverKind};
 use crate::telescope::{dirty, AstroConfig, AstroProblem};
 use anyhow::Result;
 
@@ -29,12 +29,17 @@ pub fn run(cfg: &LpcsConfig) -> Result<()> {
     let cl = clean(&img, &beam, r, &CleanOptions::default());
     let x_clean = components_to_sky(&cl.components, p.n());
 
-    // Low-precision IHT.
-    let x_iht = qniht(
-        &p.phi, &p.y, s, cfg.quant.bits_phi, cfg.quant.bits_y, cfg.quant.mode, cfg.seed,
-        &cfg.solver,
-    )
-    .x;
+    // Low-precision IHT, via the facade.
+    let x_iht = Recovery::problem(Problem::from_mat(p.phi.clone(), p.y.clone(), s))
+        .solver(SolverKind::Qniht {
+            bits_phi: cfg.quant.bits_phi,
+            bits_y: cfg.quant.bits_y,
+            mode: cfg.quant.mode,
+        })
+        .options(cfg.solver.clone())
+        .seed(cfg.seed)
+        .run()?
+        .x;
 
     let floor = 0.25 * p.sky.sources.iter().map(|&(_, f)| f).fold(f32::MAX, f32::min);
     let mut t = CsvTable::new(&[

@@ -27,6 +27,17 @@ impl Runtime {
         &self.manifest
     }
 
+    /// Lazily materialize a per-thread runtime. PJRT handles are not
+    /// `Send`, so owners (engine-registry XLA engines, one per worker
+    /// thread) hold `Option<Runtime>` and initialize on first use; the
+    /// compiled-executable cache then lives for the thread's lifetime.
+    pub fn ensure<'a>(slot: &'a mut Option<Runtime>, artifact_dir: &Path) -> Result<&'a mut Runtime> {
+        if slot.is_none() {
+            *slot = Some(Runtime::new(artifact_dir)?);
+        }
+        Ok(slot.as_mut().expect("just initialized"))
+    }
+
     /// Compile (or fetch from cache) the named artifact.
     pub fn load(&mut self, name: &str) -> Result<&xla::PjRtLoadedExecutable> {
         if !self.cache.contains_key(name) {

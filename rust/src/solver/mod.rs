@@ -1,0 +1,290 @@
+//! # The unified recovery facade
+//!
+//! One stable API for every recovery path in the crate: the coordinator,
+//! the repro figures, the examples and the benches all route through it,
+//! so new solvers and engines plug in without touching any caller.
+//!
+//! The pieces:
+//! * [`Problem`] — Φ (behind a [`MeasurementOp`]) + y + sparsity +
+//!   optional AOT shape tag.
+//! * [`SolverKind`] / [`SparseSolver`] — the algorithm: NIHT, IHT, QNIHT
+//!   (Fixed/Fresh), CoSaMP, FISTA, or a caller-supplied implementation.
+//! * [`EngineRegistry`] / [`Engine`] — the execution substrate: dense f32
+//!   native, quantized native (with batched quantize+pack amortization),
+//!   or the PJRT/XLA artifact engines. Name → factory, so custom engines
+//!   register without serving-layer changes.
+//! * [`Recovery`] — the builder tying it together.
+//! * [`SolveReport`] — the unified result (iterate, convergence,
+//!   per-iteration history, solver/engine labels, wall time).
+//!
+//! The 3-line happy path:
+//!
+//! ```no_run
+//! # use lpcs::solver::{Problem, Recovery, SolverKind};
+//! # use std::sync::Arc;
+//! # let (phi, y, s) = (Arc::new(lpcs::Mat::zeros(4, 8)), vec![0.0f32; 4], 2);
+//! let problem = Problem::new(phi, y, s);
+//! let report = Recovery::problem(problem).solver(SolverKind::qniht_fixed(2, 8)).run().unwrap();
+//! println!("recovered in {} iterations on {}", report.iterations, report.engine);
+//! ```
+//!
+//! Per-iteration streaming and cancellation go through
+//! [`crate::algorithms::IterObserver`]:
+//!
+//! ```no_run
+//! # use lpcs::solver::{Problem, Recovery, SolverKind};
+//! # use lpcs::algorithms::{IterStat, ObserverSignal};
+//! # use std::sync::Arc;
+//! # let problem = Problem::new(Arc::new(lpcs::Mat::zeros(4, 8)), vec![0.0f32; 4], 2);
+//! let mut stop_when_flat = |st: &IterStat| {
+//!     if st.resid_nsq < 1e-9 { ObserverSignal::Stop } else { ObserverSignal::Continue }
+//! };
+//! let report = Recovery::problem(problem)
+//!     .solver(SolverKind::Niht)
+//!     .observer(&mut stop_when_flat)
+//!     .run()
+//!     .unwrap();
+//! # let _ = report;
+//! ```
+
+pub mod problem;
+pub mod registry;
+pub mod solvers;
+
+pub use problem::{MeasurementOp, OpKernel, Problem};
+pub use registry::{
+    BatchObserver, Engine, EngineContext, EngineFactory, EngineMetrics, EngineRegistry,
+    NoopBatchObserver, SolveRequest,
+};
+pub use solvers::{
+    CosampSolver, FistaSolver, IhtSolver, NihtSolver, QnihtSolver, SolverKind, SparseSolver,
+};
+
+use crate::algorithms::{IterObserver, IterStat, ObserverSignal, SolveOptions, SolveResult};
+use crate::config::EngineKind;
+use anyhow::Result;
+use std::path::PathBuf;
+use std::time::Duration;
+
+/// The unified result every recovery path returns.
+#[derive(Debug, Clone)]
+pub struct SolveReport {
+    /// The recovered (s-sparse) iterate.
+    pub x: Vec<f32>,
+    pub iterations: usize,
+    pub converged: bool,
+    /// True when an observer cancelled the solve early.
+    pub stopped_early: bool,
+    /// Total μ-shrinkage events (NIHT-family line search; 0 otherwise).
+    pub shrink_events: usize,
+    /// Per-iteration stats (when `SolveOptions::track_history` is set).
+    pub history: Vec<IterStat>,
+    /// Solver name ("niht", "qniht", ...).
+    pub solver: String,
+    /// Engine name the solve executed on ("native-dense", ...).
+    pub engine: String,
+    /// Wall time of the solve (excluding problem construction).
+    pub wall: Duration,
+}
+
+impl SolveReport {
+    pub fn from_result(
+        result: SolveResult,
+        solver: impl Into<String>,
+        engine: impl Into<String>,
+        stopped_early: bool,
+        wall: Duration,
+    ) -> Self {
+        Self {
+            x: result.x,
+            iterations: result.iterations,
+            converged: result.converged,
+            stopped_early,
+            shrink_events: result.shrink_events,
+            history: result.history,
+            solver: solver.into(),
+            engine: engine.into(),
+            wall,
+        }
+    }
+}
+
+/// Wraps the caller's observer so the facade can tell whether the solve
+/// was cancelled (the underlying `SolveResult` only records
+/// `converged = false`).
+struct StopTracker<'a> {
+    inner: Option<&'a mut dyn IterObserver>,
+    stopped: bool,
+}
+
+impl IterObserver for StopTracker<'_> {
+    fn on_iteration(&mut self, stat: &IterStat) -> ObserverSignal {
+        if let Some(inner) = self.inner.as_mut() {
+            if inner.on_iteration(stat) == ObserverSignal::Stop {
+                self.stopped = true;
+                return ObserverSignal::Stop;
+            }
+        }
+        ObserverSignal::Continue
+    }
+}
+
+/// Builder for one recovery: problem → solver → engine → observer → run.
+///
+/// Defaults: solver [`SolverKind::Niht`], the solver's natural engine
+/// ([`SolverKind::default_engine`]), default [`SolveOptions`], seed 0,
+/// artifact dir `"artifacts"`, no observer, a fresh one-shot registry.
+/// Long-lived callers (the coordinator's workers) pass their own registry
+/// via [`Recovery::registry`] to reuse engine state across solves.
+pub struct Recovery<'a> {
+    problem: Problem,
+    solver: SolverKind,
+    engine: Option<String>,
+    opts: SolveOptions,
+    seed: u64,
+    artifact_dir: PathBuf,
+    observer: Option<&'a mut dyn IterObserver>,
+    registry: Option<&'a mut EngineRegistry>,
+}
+
+impl<'a> Recovery<'a> {
+    pub fn problem(problem: Problem) -> Self {
+        Self {
+            problem,
+            solver: SolverKind::Niht,
+            engine: None,
+            opts: SolveOptions::default(),
+            seed: 0,
+            artifact_dir: PathBuf::from("artifacts"),
+            observer: None,
+            registry: None,
+        }
+    }
+
+    pub fn solver(mut self, solver: SolverKind) -> Self {
+        self.solver = solver;
+        self
+    }
+
+    /// Pick one of the built-in engines.
+    pub fn engine(mut self, engine: EngineKind) -> Self {
+        self.engine = Some(engine.name().to_string());
+        self
+    }
+
+    /// Pick an engine by registry name (custom engines).
+    pub fn engine_named(mut self, name: impl Into<String>) -> Self {
+        self.engine = Some(name.into());
+        self
+    }
+
+    pub fn options(mut self, opts: SolveOptions) -> Self {
+        self.opts = opts;
+        self
+    }
+
+    /// Seed for stochastic quantization (ignored by dense solvers).
+    pub fn seed(mut self, seed: u64) -> Self {
+        self.seed = seed;
+        self
+    }
+
+    /// Where the XLA engines find their AOT artifacts.
+    pub fn artifact_dir(mut self, dir: impl Into<PathBuf>) -> Self {
+        self.artifact_dir = dir.into();
+        self
+    }
+
+    /// Per-iteration observer (progress streaming / early cancellation).
+    pub fn observer(mut self, observer: &'a mut dyn IterObserver) -> Self {
+        self.observer = Some(observer);
+        self
+    }
+
+    /// Run against an existing registry (reuses engine caches).
+    pub fn registry(mut self, registry: &'a mut EngineRegistry) -> Self {
+        self.registry = Some(registry);
+        self
+    }
+
+    /// Execute and return the unified report.
+    pub fn run(self) -> Result<SolveReport> {
+        let engine_name = self
+            .engine
+            .unwrap_or_else(|| self.solver.default_engine().name().to_string());
+        let req = SolveRequest { problem: self.problem, solver: self.solver, seed: self.seed };
+        let mut tracker = StopTracker { inner: self.observer, stopped: false };
+        let t0 = std::time::Instant::now();
+        let result = match self.registry {
+            Some(registry) => registry.solve(&engine_name, &req, &self.opts, &mut tracker)?,
+            None => EngineRegistry::with_defaults(self.artifact_dir)
+                .solve(&engine_name, &req, &self.opts, &mut tracker)?,
+        };
+        Ok(SolveReport::from_result(
+            result,
+            self.solver.name(),
+            engine_name,
+            tracker.stopped,
+            t0.elapsed(),
+        ))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::algorithms::support::support_of;
+    use crate::linalg::Mat;
+    use crate::rng::XorShift128Plus;
+    use std::sync::Arc;
+
+    fn planted(m: usize, n: usize, s: usize, seed: u64) -> (Problem, Vec<f32>) {
+        let mut rng = XorShift128Plus::new(seed);
+        let phi = Mat::from_fn(m, n, |_, _| rng.gaussian_f32() / (m as f32).sqrt());
+        let mut x = vec![0.0f32; n];
+        for i in rng.choose_k(n, s) {
+            x[i] = 2.0 * rng.gaussian_f32().signum();
+        }
+        let y = phi.matvec(&x);
+        (Problem::new(Arc::new(phi), y, s), x)
+    }
+
+    #[test]
+    fn builder_happy_path_recovers() {
+        let (problem, x_true) = planted(64, 128, 4, 1);
+        let report = Recovery::problem(problem).run().unwrap();
+        assert_eq!(report.solver, "niht");
+        assert_eq!(report.engine, "native-dense");
+        assert!(report.converged);
+        assert!(!report.stopped_early);
+        assert_eq!(support_of(&report.x), support_of(&x_true));
+    }
+
+    #[test]
+    fn qniht_defaults_to_quant_engine() {
+        let (problem, x_true) = planted(96, 192, 5, 2);
+        let report = Recovery::problem(problem)
+            .solver(SolverKind::qniht_fixed(8, 8))
+            .seed(3)
+            .run()
+            .unwrap();
+        assert_eq!(report.engine, "native-quant");
+        assert_eq!(support_of(&report.x), support_of(&x_true));
+    }
+
+    #[test]
+    fn invalid_problem_is_rejected_before_dispatch() {
+        let problem = Problem::from_mat(Mat::zeros(4, 8), vec![0.0; 3], 2);
+        assert!(Recovery::problem(problem).run().is_err());
+    }
+
+    #[test]
+    fn report_history_tracks_when_asked() {
+        let (problem, _) = planted(64, 128, 4, 4);
+        let report = Recovery::problem(problem)
+            .options(SolveOptions::default().with_track_history(true))
+            .run()
+            .unwrap();
+        assert_eq!(report.history.len(), report.iterations);
+    }
+}

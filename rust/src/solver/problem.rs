@@ -1,0 +1,291 @@
+//! The problem side of the facade: a [`MeasurementOp`] abstraction over
+//! "something that applies Φ", and the [`Problem`] bundle (Φ + y +
+//! sparsity + optional artifact shape tag) every solver and engine
+//! consumes.
+
+use crate::algorithms::support::{hard_threshold, support_of, top_s_indices};
+use crate::algorithms::{NihtKernel, StepOut};
+use crate::linalg::{self, Mat};
+use anyhow::Result;
+use std::sync::Arc;
+
+/// A measurement operator: the three products every recovery algorithm in
+/// this crate needs. Implemented by [`Mat`] (the common, explicit-matrix
+/// case) and implementable by callers for matrix-free operators (e.g. an
+/// FFT-based Φ) — those route through the generic [`OpKernel`] driver.
+pub trait MeasurementOp: Send + Sync {
+    /// Rows of Φ (observation length).
+    fn m(&self) -> usize;
+
+    /// Columns of Φ (signal length).
+    fn n(&self) -> usize;
+
+    /// `Φ x`.
+    fn apply(&self, x: &[f32]) -> Vec<f32>;
+
+    /// `Φᵀ r`.
+    fn apply_t(&self, r: &[f32]) -> Vec<f32>;
+
+    /// `Φ x` for a sparse x given as (indices, values). The default
+    /// scatters into a dense vector and calls [`MeasurementOp::apply`];
+    /// operators with a cheaper column-restricted product should override.
+    fn apply_sparse(&self, idx: &[usize], vals: &[f32]) -> Vec<f32> {
+        let mut x = vec![0.0f32; self.n()];
+        for (&i, &v) in idx.iter().zip(vals) {
+            x[i] = v;
+        }
+        self.apply(&x)
+    }
+
+    /// The explicit matrix behind this operator, when there is one.
+    /// Engines that must see entries (quantization, PJRT upload, the
+    /// SVD-based baselines) require this; matrix-free operators return
+    /// `None` and are served by the dense-f32 NIHT path only.
+    fn as_mat(&self) -> Option<&Mat> {
+        None
+    }
+}
+
+impl MeasurementOp for Mat {
+    fn m(&self) -> usize {
+        self.rows
+    }
+
+    fn n(&self) -> usize {
+        self.cols
+    }
+
+    fn apply(&self, x: &[f32]) -> Vec<f32> {
+        self.matvec(x)
+    }
+
+    fn apply_t(&self, r: &[f32]) -> Vec<f32> {
+        self.matvec_t(r)
+    }
+
+    fn apply_sparse(&self, idx: &[usize], vals: &[f32]) -> Vec<f32> {
+        self.matvec_sparse(idx, vals)
+    }
+
+    fn as_mat(&self) -> Option<&Mat> {
+        Some(self)
+    }
+}
+
+/// One recovery problem: recover an `s`-sparse x from `y ≈ Φx`.
+///
+/// Φ is held behind an `Arc` so cloning a `Problem` (e.g. for an
+/// iteration-budget sweep) never copies the matrix, and so the
+/// coordinator can recognize jobs sharing Φ by pointer identity.
+#[derive(Clone)]
+pub struct Problem {
+    op: Arc<dyn MeasurementOp>,
+    y: Vec<f32>,
+    s: usize,
+    shape_tag: Option<String>,
+}
+
+impl Problem {
+    /// The common case: an explicit measurement matrix.
+    pub fn new(phi: Arc<Mat>, y: Vec<f32>, s: usize) -> Self {
+        Self { op: phi, y, s, shape_tag: None }
+    }
+
+    /// Convenience: wrap an owned matrix.
+    pub fn from_mat(phi: Mat, y: Vec<f32>, s: usize) -> Self {
+        Self::new(Arc::new(phi), y, s)
+    }
+
+    /// A matrix-free (or otherwise custom) measurement operator.
+    pub fn with_op(op: Arc<dyn MeasurementOp>, y: Vec<f32>, s: usize) -> Self {
+        Self { op, y, s, shape_tag: None }
+    }
+
+    /// Tag this problem with an AOT artifact shape (required by the XLA
+    /// engines, ignored by the native ones).
+    pub fn with_shape_tag(mut self, tag: impl Into<String>) -> Self {
+        self.shape_tag = Some(tag.into());
+        self
+    }
+
+    pub fn op(&self) -> &dyn MeasurementOp {
+        &*self.op
+    }
+
+    /// The explicit matrix, when the operator has one.
+    pub fn as_mat(&self) -> Option<&Mat> {
+        self.op.as_mat()
+    }
+
+    pub fn y(&self) -> &[f32] {
+        &self.y
+    }
+
+    pub fn s(&self) -> usize {
+        self.s
+    }
+
+    pub fn m(&self) -> usize {
+        self.op.m()
+    }
+
+    pub fn n(&self) -> usize {
+        self.op.n()
+    }
+
+    pub fn shape_tag(&self) -> Option<&str> {
+        self.shape_tag.as_deref()
+    }
+
+    /// Whether two problems share the same operator instance (the
+    /// coordinator's batch-amortization criterion).
+    pub fn shares_op(&self, other: &Problem) -> bool {
+        Arc::ptr_eq(&self.op, &other.op)
+    }
+
+    /// Cross-field invariants, checked once at the facade boundary.
+    pub fn validate(&self) -> Result<()> {
+        anyhow::ensure!(
+            self.y.len() == self.op.m(),
+            "y length {} does not match operator rows {}",
+            self.y.len(),
+            self.op.m()
+        );
+        anyhow::ensure!(self.s >= 1, "sparsity must be >= 1");
+        anyhow::ensure!(
+            self.s <= self.op.n(),
+            "sparsity {} exceeds signal dimension {}",
+            self.s,
+            self.op.n()
+        );
+        Ok(())
+    }
+}
+
+/// Dense-f32 NIHT step engine over any [`MeasurementOp`] — the same math
+/// as `niht::DenseKernel`, reached through the operator trait so
+/// matrix-free problems run under the unchanged Algorithm-1 driver.
+pub struct OpKernel<'a> {
+    op: &'a dyn MeasurementOp,
+    y: &'a [f32],
+}
+
+impl<'a> OpKernel<'a> {
+    pub fn new(op: &'a dyn MeasurementOp, y: &'a [f32]) -> Self {
+        assert_eq!(op.m(), y.len());
+        Self { op, y }
+    }
+
+    fn gradient(&self, x: &[f32]) -> (Vec<f32>, f32) {
+        let yx = self.op.apply(x);
+        let r: Vec<f32> = self.y.iter().zip(&yx).map(|(a, b)| a - b).collect();
+        let g = self.op.apply_t(&r);
+        let rn = linalg::norm2_sq(&r);
+        (g, rn)
+    }
+}
+
+impl NihtKernel for OpKernel<'_> {
+    fn m(&self) -> usize {
+        self.op.m()
+    }
+
+    fn n(&self) -> usize {
+        self.op.n()
+    }
+
+    fn full_step(&mut self, x: &[f32], s: usize) -> StepOut {
+        let (g, resid_nsq) = self.gradient(x);
+        let supp = if x.iter().any(|&v| v != 0.0) {
+            support_of(x)
+        } else {
+            top_s_indices(&g, s)
+        };
+        // Masked-vector norm, exactly as `DenseKernel` computes it, so an
+        // op backed by a Mat reproduces the dense trajectory bit-for-bit.
+        let mut g_m = vec![0.0f32; g.len()];
+        for &i in &supp {
+            g_m[i] = g[i];
+        }
+        let num = linalg::norm2_sq(&g_m);
+        let vals: Vec<f32> = supp.iter().map(|&i| g[i]).collect();
+        let pg = self.op.apply_sparse(&supp, &vals);
+        let den = linalg::norm2_sq(&pg);
+        let mu = num / den.max(f32::MIN_POSITIVE);
+        let (x_next, dx_nsq, phi1_dx_nsq) = self.apply_step(x, &g, mu, s);
+        StepOut { x_next, g, mu, dx_nsq, phi1_dx_nsq, resid_nsq }
+    }
+
+    fn apply_step(&mut self, x: &[f32], g: &[f32], mu: f32, s: usize) -> (Vec<f32>, f32, f32) {
+        let a: Vec<f32> = x.iter().zip(g).map(|(xi, gi)| xi + mu * gi).collect();
+        let x_next = hard_threshold(&a, s);
+        let dx: Vec<f32> = x_next.iter().zip(x).map(|(a, b)| a - b).collect();
+        let dx_nsq = linalg::norm2_sq(&dx);
+        let idx = support_of(&dx);
+        let vals: Vec<f32> = idx.iter().map(|&i| dx[i]).collect();
+        let phi_dx = self.op.apply_sparse(&idx, &vals);
+        (x_next, dx_nsq, linalg::norm2_sq(&phi_dx))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn mat_is_a_measurement_op() {
+        let phi = Mat::from_fn(3, 4, |i, j| (i * 4 + j) as f32);
+        let x = vec![1.0, 0.0, -1.0, 2.0];
+        assert_eq!(phi.apply(&x), phi.matvec(&x));
+        assert_eq!(phi.apply_t(&[1.0, 2.0, 3.0]), phi.matvec_t(&[1.0, 2.0, 3.0]));
+        assert!(phi.as_mat().is_some());
+        assert_eq!((MeasurementOp::m(&phi), MeasurementOp::n(&phi)), (3, 4));
+    }
+
+    #[test]
+    fn default_apply_sparse_matches_dense_apply() {
+        struct Blind(Mat);
+        impl MeasurementOp for Blind {
+            fn m(&self) -> usize {
+                self.0.rows
+            }
+            fn n(&self) -> usize {
+                self.0.cols
+            }
+            fn apply(&self, x: &[f32]) -> Vec<f32> {
+                self.0.matvec(x)
+            }
+            fn apply_t(&self, r: &[f32]) -> Vec<f32> {
+                self.0.matvec_t(r)
+            }
+        }
+        let phi = Mat::from_fn(5, 8, |i, j| ((i + 2 * j) % 5) as f32 - 2.0);
+        let op = Blind(phi.clone());
+        let got = op.apply_sparse(&[1, 6], &[2.0, -1.0]);
+        let mut x = vec![0.0f32; 8];
+        x[1] = 2.0;
+        x[6] = -1.0;
+        assert_eq!(got, phi.matvec(&x));
+        assert!(op.as_mat().is_none());
+    }
+
+    #[test]
+    fn problem_validates() {
+        let phi = Arc::new(Mat::zeros(4, 8));
+        assert!(Problem::new(phi.clone(), vec![0.0; 4], 2).validate().is_ok());
+        assert!(Problem::new(phi.clone(), vec![0.0; 3], 2).validate().is_err());
+        assert!(Problem::new(phi.clone(), vec![0.0; 4], 0).validate().is_err());
+        assert!(Problem::new(phi, vec![0.0; 4], 9).validate().is_err());
+    }
+
+    #[test]
+    fn shares_op_is_pointer_identity() {
+        let phi = Arc::new(Mat::zeros(4, 8));
+        let a = Problem::new(phi.clone(), vec![0.0; 4], 2);
+        let b = Problem::new(phi, vec![1.0; 4], 2);
+        let c = Problem::new(Arc::new(Mat::zeros(4, 8)), vec![0.0; 4], 2);
+        assert!(a.shares_op(&b));
+        assert!(a.shares_op(&a.clone()), "clones share the operator");
+        assert!(!a.shares_op(&c));
+    }
+}

@@ -1,0 +1,541 @@
+//! The engine registry: name → factory for execution engines, replacing
+//! the hardcoded `EngineKind` match that used to live in the coordinator's
+//! `run_job`. Each worker thread owns one [`EngineRegistry`]; engines are
+//! created lazily on first use and keep their expensive state (the PJRT
+//! runtime and its compiled-executable cache, batch quantizations) alive
+//! for the thread's lifetime. New engines plug in via
+//! [`EngineRegistry::register`] without touching the serving layer.
+
+use crate::algorithms::niht::solve_observed;
+use crate::algorithms::qniht::{PreparedPhi, QuantKernel, RequantMode};
+use crate::algorithms::{IterObserver, IterStat, ObserverSignal, SolveOptions, SolveResult};
+use crate::config::EngineKind;
+use crate::runtime::{Runtime, XlaDenseKernel, XlaQuantKernel};
+use anyhow::{anyhow, Result};
+use std::path::PathBuf;
+use std::sync::Arc;
+
+use super::problem::Problem;
+use super::solvers::SolverKind;
+
+/// One solve, fully described: the problem, the algorithm, and the seed
+/// for any stochastic quantization. Which engine executes it is chosen by
+/// the caller at dispatch time (by registry name).
+#[derive(Clone)]
+pub struct SolveRequest {
+    pub problem: Problem,
+    pub solver: SolverKind,
+    pub seed: u64,
+}
+
+/// Per-engine counters, exposed so tests (and the service's metrics
+/// endpoint) can verify amortization behaviour.
+#[derive(Debug, Default, Clone, Copy)]
+pub struct EngineMetrics {
+    /// Individual solves executed (batched or not).
+    pub solves: u64,
+    /// `solve_batch` invocations that took the amortized path.
+    pub amortized_batches: u64,
+    /// Quantization passes over Φ (the quantity batching amortizes).
+    pub phi_quantizations: u64,
+}
+
+/// Observer for a batched solve: `job_index` identifies the request
+/// within the batch. The coordinator uses this to stream per-job progress
+/// and to cancel individual jobs mid-batch.
+pub trait BatchObserver {
+    fn on_iteration(&mut self, job_index: usize, stat: &IterStat) -> ObserverSignal;
+}
+
+/// Batch observer that never stops anything.
+#[derive(Debug, Default, Clone, Copy)]
+pub struct NoopBatchObserver;
+
+impl BatchObserver for NoopBatchObserver {
+    fn on_iteration(&mut self, _job_index: usize, _stat: &IterStat) -> ObserverSignal {
+        ObserverSignal::Continue
+    }
+}
+
+/// Adapts one slot of a [`BatchObserver`] to the scalar [`IterObserver`]
+/// the solver drivers take.
+struct IndexedObserver<'a> {
+    index: usize,
+    inner: &'a mut dyn BatchObserver,
+}
+
+impl IterObserver for IndexedObserver<'_> {
+    fn on_iteration(&mut self, stat: &IterStat) -> ObserverSignal {
+        self.inner.on_iteration(self.index, stat)
+    }
+}
+
+/// An execution engine: runs [`SolveRequest`]s it supports, owns whatever
+/// caches make repeated solves cheap (PJRT executables, shared packed Φ̂).
+pub trait Engine {
+    /// Registry name (what [`EngineRegistry`] dispatches on).
+    fn name(&self) -> &'static str;
+
+    fn solve(
+        &mut self,
+        req: &SolveRequest,
+        opts: &SolveOptions,
+        observer: &mut dyn IterObserver,
+    ) -> Result<SolveResult>;
+
+    /// Solve a batch of requests that the caller believes are compatible
+    /// (same Φ and configuration). Engines with an amortizable setup
+    /// override this; the default just loops. One inner `Err` fails that
+    /// job only.
+    fn solve_batch(
+        &mut self,
+        reqs: &[SolveRequest],
+        opts: &SolveOptions,
+        observer: &mut dyn BatchObserver,
+    ) -> Vec<Result<SolveResult>> {
+        reqs.iter()
+            .enumerate()
+            .map(|(i, r)| {
+                self.solve(r, opts, &mut IndexedObserver { index: i, inner: &mut *observer })
+            })
+            .collect()
+    }
+
+    fn metrics(&self) -> EngineMetrics {
+        EngineMetrics::default()
+    }
+}
+
+/// Context handed to engine factories.
+pub struct EngineContext {
+    /// Where the AOT artifacts live (XLA engines).
+    pub artifact_dir: PathBuf,
+}
+
+pub type EngineFactory = Box<dyn Fn(&EngineContext) -> Box<dyn Engine>>;
+
+/// Name → factory table with lazily instantiated engines.
+pub struct EngineRegistry {
+    ctx: EngineContext,
+    factories: Vec<(String, EngineFactory)>,
+    live: Vec<(String, Box<dyn Engine>)>,
+}
+
+impl EngineRegistry {
+    /// An empty registry (register engines yourself).
+    pub fn new(artifact_dir: PathBuf) -> Self {
+        Self { ctx: EngineContext { artifact_dir }, factories: Vec::new(), live: Vec::new() }
+    }
+
+    /// The standard table: the four built-in engines under their
+    /// [`EngineKind::name`] names.
+    pub fn with_defaults(artifact_dir: PathBuf) -> Self {
+        let mut reg = Self::new(artifact_dir);
+        reg.register(
+            EngineKind::NativeDense.name(),
+            Box::new(|_: &EngineContext| Box::new(NativeDenseEngine::default()) as Box<dyn Engine>),
+        );
+        reg.register(
+            EngineKind::NativeQuant.name(),
+            Box::new(|_: &EngineContext| Box::new(NativeQuantEngine::default()) as Box<dyn Engine>),
+        );
+        reg.register(
+            EngineKind::XlaQuant.name(),
+            Box::new(|ctx: &EngineContext| {
+                Box::new(XlaQuantEngine { artifact_dir: ctx.artifact_dir.clone(), rt: None, metrics: EngineMetrics::default() }) as Box<dyn Engine>
+            }),
+        );
+        reg.register(
+            EngineKind::XlaDense.name(),
+            Box::new(|ctx: &EngineContext| {
+                Box::new(XlaDenseEngine { artifact_dir: ctx.artifact_dir.clone(), rt: None, metrics: EngineMetrics::default() }) as Box<dyn Engine>
+            }),
+        );
+        reg
+    }
+
+    /// Register (or replace) an engine factory under `name`.
+    pub fn register(&mut self, name: &str, factory: EngineFactory) {
+        self.factories.retain(|(n, _)| n != name);
+        self.live.retain(|(n, _)| n != name);
+        self.factories.push((name.to_string(), factory));
+    }
+
+    /// Registered engine names, registration order.
+    pub fn names(&self) -> Vec<String> {
+        self.factories.iter().map(|(n, _)| n.clone()).collect()
+    }
+
+    /// The engine registered under `name`, instantiating it on first use.
+    pub fn engine_mut(&mut self, name: &str) -> Result<&mut dyn Engine> {
+        if let Some(pos) = self.live.iter().position(|(n, _)| n == name) {
+            return Ok(self.live[pos].1.as_mut());
+        }
+        let known = self.names().join(", ");
+        let factory = self
+            .factories
+            .iter()
+            .find(|(n, _)| n == name)
+            .ok_or_else(|| anyhow!("unknown engine '{name}' (known engines: {known})"))?;
+        let engine = (factory.1)(&self.ctx);
+        self.live.push((name.to_string(), engine));
+        Ok(self.live.last_mut().unwrap().1.as_mut())
+    }
+
+    /// Dispatch one solve to the named engine.
+    pub fn solve(
+        &mut self,
+        engine: &str,
+        req: &SolveRequest,
+        opts: &SolveOptions,
+        observer: &mut dyn IterObserver,
+    ) -> Result<SolveResult> {
+        req.problem.validate()?;
+        self.engine_mut(engine)?.solve(req, opts, observer)
+    }
+
+    /// Dispatch a compatible batch to the named engine. The outer `Err`
+    /// is an unknown engine; inner `Err`s fail individual jobs (including
+    /// jobs whose problem fails validation — a malformed job never takes
+    /// its batch siblings down with it).
+    pub fn solve_batch(
+        &mut self,
+        engine: &str,
+        reqs: &[SolveRequest],
+        opts: &SolveOptions,
+        observer: &mut dyn BatchObserver,
+    ) -> Result<Vec<Result<SolveResult>>> {
+        let engine = self.engine_mut(engine)?;
+        if reqs.iter().all(|r| r.problem.validate().is_ok()) {
+            return Ok(engine.solve_batch(reqs, opts, observer));
+        }
+        // Mixed validity: fail the malformed jobs individually and solve
+        // the rest one by one (the amortized fast path only applies to
+        // fully-valid batches).
+        Ok(reqs
+            .iter()
+            .enumerate()
+            .map(|(i, r)| {
+                r.problem.validate()?;
+                engine.solve(r, opts, &mut IndexedObserver { index: i, inner: &mut *observer })
+            })
+            .collect())
+    }
+
+    /// Metrics of the named engine (`None` until its first use).
+    pub fn metrics(&self, engine: &str) -> Option<EngineMetrics> {
+        self.live.iter().find(|(n, _)| n == engine).map(|(_, e)| e.metrics())
+    }
+}
+
+/// Dense f32 native engine: runs every [`SolverKind`] except QNIHT.
+#[derive(Default)]
+pub struct NativeDenseEngine {
+    metrics: EngineMetrics,
+}
+
+impl Engine for NativeDenseEngine {
+    fn name(&self) -> &'static str {
+        "native-dense"
+    }
+
+    fn solve(
+        &mut self,
+        req: &SolveRequest,
+        opts: &SolveOptions,
+        observer: &mut dyn IterObserver,
+    ) -> Result<SolveResult> {
+        if matches!(req.solver, SolverKind::Qniht { .. }) {
+            return Err(anyhow!(
+                "solver 'qniht' needs a quantized engine (native-quant or xla-quant), not native-dense"
+            ));
+        }
+        self.metrics.solves += 1;
+        req.solver.native_solver(req.seed).solve(&req.problem, opts, observer)
+    }
+
+    fn metrics(&self) -> EngineMetrics {
+        self.metrics
+    }
+}
+
+/// Seed for the shared Φ quantization on the batched path. Deliberately
+/// NOT taken from any job: per-job results must not depend on which jobs
+/// happened to land in the same batch, so the shared Φ̂ is a pure function
+/// of (Φ, bits).
+fn batch_phi_seed(bits_phi: u8) -> u64 {
+    0x9E37_79B9_7F4A_7C15 ^ bits_phi as u64
+}
+
+/// Quantized native engine (the paper's low-precision path). Runs QNIHT
+/// only; its batched path quantizes+packs Φ once per batch.
+#[derive(Default)]
+pub struct NativeQuantEngine {
+    metrics: EngineMetrics,
+}
+
+impl NativeQuantEngine {
+    fn quant_config(req: &SolveRequest) -> Result<(u8, u8, RequantMode)> {
+        match req.solver {
+            SolverKind::Qniht { bits_phi, bits_y, mode } => Ok((bits_phi, bits_y, mode)),
+            other => Err(anyhow!(
+                "engine 'native-quant' runs solver 'qniht' only, got '{}'",
+                other.name()
+            )),
+        }
+    }
+}
+
+impl Engine for NativeQuantEngine {
+    fn name(&self) -> &'static str {
+        "native-quant"
+    }
+
+    fn solve(
+        &mut self,
+        req: &SolveRequest,
+        opts: &SolveOptions,
+        observer: &mut dyn IterObserver,
+    ) -> Result<SolveResult> {
+        Self::quant_config(req)?;
+        self.metrics.solves += 1;
+        self.metrics.phi_quantizations += 1;
+        req.solver.native_solver(req.seed).solve(&req.problem, opts, observer)
+    }
+
+    /// The amortized path: one quantize+pack of Φ shared by every job in
+    /// the batch (jobs differ only in y and seed). Singleton batches take
+    /// it too, so a job's result NEVER depends on which jobs happened to
+    /// coalesce with it. Falls back to the per-job path when the batch is
+    /// not actually compatible or uses Fresh mode (which re-quantizes per
+    /// iteration anyway, so each job's Φ̂ stream is its own seed's).
+    fn solve_batch(
+        &mut self,
+        reqs: &[SolveRequest],
+        opts: &SolveOptions,
+        observer: &mut dyn BatchObserver,
+    ) -> Vec<Result<SolveResult>> {
+        let amortizable = !reqs.is_empty()
+            && Self::quant_config(&reqs[0])
+                .map(|(_, _, mode)| mode == RequantMode::Fixed)
+                .unwrap_or(false)
+            && reqs.windows(2).all(|w| {
+                w[0].problem.shares_op(&w[1].problem)
+                    && w[0].solver == w[1].solver
+                    && w[0].problem.s() == w[1].problem.s()
+            })
+            && reqs[0].problem.as_mat().is_some();
+        if !amortizable {
+            return reqs
+                .iter()
+                .enumerate()
+                .map(|(i, r)| {
+                    self.solve(r, opts, &mut IndexedObserver { index: i, inner: &mut *observer })
+                })
+                .collect();
+        }
+
+        let (bits_phi, bits_y, _) = Self::quant_config(&reqs[0]).expect("checked above");
+        let phi = reqs[0].problem.as_mat().expect("checked above");
+        let prepared = Arc::new(PreparedPhi::quantize(phi, bits_phi, batch_phi_seed(bits_phi)));
+        self.metrics.phi_quantizations += 1;
+        self.metrics.amortized_batches += 1;
+        reqs.iter()
+            .enumerate()
+            .map(|(i, r)| {
+                self.metrics.solves += 1;
+                let mut k =
+                    QuantKernel::with_prepared(prepared.clone(), r.problem.y(), bits_y, r.seed);
+                let mut obs = IndexedObserver { index: i, inner: &mut *observer };
+                Ok(solve_observed(&mut k, r.problem.s(), opts, &mut obs))
+            })
+            .collect()
+    }
+
+    fn metrics(&self) -> EngineMetrics {
+        self.metrics
+    }
+}
+
+/// PJRT quantized engine: executes the `qniht_step`/`apply_step` AOT
+/// artifacts. The runtime (and its compiled-executable cache) is created
+/// on first use and lives as long as the engine — i.e. as long as the
+/// owning worker thread's registry.
+pub struct XlaQuantEngine {
+    artifact_dir: PathBuf,
+    rt: Option<Runtime>,
+    metrics: EngineMetrics,
+}
+
+impl Engine for XlaQuantEngine {
+    fn name(&self) -> &'static str {
+        "xla-quant"
+    }
+
+    fn solve(
+        &mut self,
+        req: &SolveRequest,
+        opts: &SolveOptions,
+        observer: &mut dyn IterObserver,
+    ) -> Result<SolveResult> {
+        let SolverKind::Qniht { bits_phi, bits_y, mode } = req.solver else {
+            return Err(anyhow!(
+                "engine 'xla-quant' runs solver 'qniht' only, got '{}'",
+                req.solver.name()
+            ));
+        };
+        anyhow::ensure!(
+            mode == RequantMode::Fixed,
+            "the XLA engine quantizes once (Fixed mode); Fresh re-quantization is native-only"
+        );
+        let tag = req
+            .problem
+            .shape_tag()
+            .ok_or_else(|| anyhow!("XLA engine requires a shape tag"))?;
+        let phi = req
+            .problem
+            .as_mat()
+            .ok_or_else(|| anyhow!("XLA engine requires an explicit measurement matrix"))?;
+        let rt = Runtime::ensure(&mut self.rt, &self.artifact_dir)?;
+        let mut k =
+            XlaQuantKernel::with_runtime(rt, tag, phi, req.problem.y(), bits_phi, bits_y, req.seed)?;
+        anyhow::ensure!(
+            k.artifact_s() == req.problem.s(),
+            "artifact '{tag}' is specialized to s={}, problem has s={}",
+            k.artifact_s(),
+            req.problem.s()
+        );
+        self.metrics.solves += 1;
+        self.metrics.phi_quantizations += 1;
+        Ok(solve_observed(&mut k, req.problem.s(), opts, observer))
+    }
+
+    fn metrics(&self) -> EngineMetrics {
+        self.metrics
+    }
+}
+
+/// PJRT dense engine: the 32-bit baseline through the `niht_step_f32`
+/// artifacts.
+pub struct XlaDenseEngine {
+    artifact_dir: PathBuf,
+    rt: Option<Runtime>,
+    metrics: EngineMetrics,
+}
+
+impl Engine for XlaDenseEngine {
+    fn name(&self) -> &'static str {
+        "xla-dense"
+    }
+
+    fn solve(
+        &mut self,
+        req: &SolveRequest,
+        opts: &SolveOptions,
+        observer: &mut dyn IterObserver,
+    ) -> Result<SolveResult> {
+        anyhow::ensure!(
+            matches!(req.solver, SolverKind::Niht),
+            "engine 'xla-dense' runs solver 'niht' only, got '{}'",
+            req.solver.name()
+        );
+        let tag = req
+            .problem
+            .shape_tag()
+            .ok_or_else(|| anyhow!("XLA engine requires a shape tag"))?;
+        let phi = req
+            .problem
+            .as_mat()
+            .ok_or_else(|| anyhow!("XLA engine requires an explicit measurement matrix"))?;
+        let rt = Runtime::ensure(&mut self.rt, &self.artifact_dir)?;
+        let mut k = XlaDenseKernel::with_runtime(rt, tag, phi, req.problem.y())?;
+        anyhow::ensure!(
+            k.artifact_s() == req.problem.s(),
+            "artifact '{tag}' is specialized to s={}, problem has s={}",
+            k.artifact_s(),
+            req.problem.s()
+        );
+        self.metrics.solves += 1;
+        Ok(solve_observed(&mut k, req.problem.s(), opts, observer))
+    }
+
+    fn metrics(&self) -> EngineMetrics {
+        self.metrics
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::algorithms::NoopObserver;
+    use crate::linalg::Mat;
+
+    #[test]
+    fn default_registry_knows_all_engine_kinds() {
+        let reg = EngineRegistry::with_defaults(PathBuf::from("artifacts"));
+        let names = reg.names();
+        for kind in
+            [EngineKind::NativeDense, EngineKind::NativeQuant, EngineKind::XlaQuant, EngineKind::XlaDense]
+        {
+            assert!(names.iter().any(|n| n == kind.name()), "missing {}", kind.name());
+        }
+    }
+
+    #[test]
+    fn unknown_engine_is_a_clean_error() {
+        let mut reg = EngineRegistry::with_defaults(PathBuf::from("artifacts"));
+        let err = reg.engine_mut("warp-drive").unwrap_err().to_string();
+        assert!(err.contains("unknown engine 'warp-drive'"), "{err}");
+        assert!(err.contains("native-dense"), "error lists known engines: {err}");
+    }
+
+    #[test]
+    fn register_replaces_and_extends() {
+        struct Stub;
+        impl Engine for Stub {
+            fn name(&self) -> &'static str {
+                "stub"
+            }
+            fn solve(
+                &mut self,
+                _req: &SolveRequest,
+                _opts: &SolveOptions,
+                _obs: &mut dyn IterObserver,
+            ) -> Result<SolveResult> {
+                Ok(SolveResult {
+                    x: vec![42.0],
+                    iterations: 0,
+                    converged: true,
+                    shrink_events: 0,
+                    history: vec![],
+                })
+            }
+        }
+        let mut reg = EngineRegistry::new(PathBuf::from("artifacts"));
+        reg.register("stub", Box::new(|_: &EngineContext| Box::new(Stub) as Box<dyn Engine>));
+        let req = SolveRequest {
+            problem: Problem::from_mat(Mat::zeros(1, 1), vec![0.0], 1),
+            solver: SolverKind::Niht,
+            seed: 0,
+        };
+        let r = reg
+            .solve("stub", &req, &SolveOptions::default(), &mut NoopObserver)
+            .unwrap();
+        assert_eq!(r.x, vec![42.0]);
+    }
+
+    #[test]
+    fn engine_rejects_mismatched_solver() {
+        let mut reg = EngineRegistry::with_defaults(PathBuf::from("artifacts"));
+        let req = SolveRequest {
+            problem: Problem::from_mat(Mat::zeros(2, 4), vec![0.0; 2], 1),
+            solver: SolverKind::qniht_fixed(8, 8),
+            seed: 0,
+        };
+        let err = reg
+            .solve("native-dense", &req, &SolveOptions::default(), &mut NoopObserver)
+            .unwrap_err()
+            .to_string();
+        assert!(err.contains("quantized engine"), "{err}");
+    }
+}

@@ -1,0 +1,266 @@
+//! The algorithm side of the facade: [`SolverKind`] (the serializable
+//! selector the builder and the coordinator use) and the [`SparseSolver`]
+//! adapters wrapping the native implementations of NIHT, IHT, QNIHT
+//! (Fixed/Fresh), CoSaMP and FISTA behind one interface.
+
+use crate::algorithms::fista::{fista_observed, FistaOptions};
+use crate::algorithms::niht::solve_observed;
+use crate::algorithms::qniht::{QuantKernel, RequantMode};
+use crate::algorithms::{cosamp, iht, IterObserver, SolveOptions, SolveResult};
+use crate::config::EngineKind;
+use anyhow::{anyhow, Result};
+
+use super::problem::{OpKernel, Problem};
+
+/// Which recovery algorithm to run. `Qniht` carries the full quantization
+/// configuration, so a `SolverKind` plus a [`Problem`] is a complete,
+/// copyable description of a solve.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum SolverKind {
+    /// Normalized IHT on dense f32 operands (the 32-bit baseline).
+    Niht,
+    /// Plain IHT with internal rescaling (classical baseline).
+    Iht,
+    /// The paper's quantized NIHT: Φ at `bits_phi`, y at `bits_y`,
+    /// Fixed (systems) or Fresh (theory) re-quantization.
+    Qniht { bits_phi: u8, bits_y: u8, mode: RequantMode },
+    /// Compressive Sampling Matching Pursuit (greedy baseline).
+    Cosamp,
+    /// FISTA ℓ₁ baseline. The facade prunes the iterate to the problem's
+    /// sparsity and debiases per `debias`, so its report is support-
+    /// comparable with the greedy methods.
+    Fista { lambda: Option<f32>, debias: bool },
+}
+
+impl SolverKind {
+    /// Paper-headline QNIHT configuration (Fixed 2&8-bit).
+    pub fn qniht_fixed(bits_phi: u8, bits_y: u8) -> Self {
+        Self::Qniht { bits_phi, bits_y, mode: RequantMode::Fixed }
+    }
+
+    /// Theory-mode QNIHT (fresh stochastic quantizations per iteration).
+    pub fn qniht_fresh(bits_phi: u8, bits_y: u8) -> Self {
+        Self::Qniht { bits_phi, bits_y, mode: RequantMode::Fresh }
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            Self::Niht => "niht",
+            Self::Iht => "iht",
+            Self::Qniht { .. } => "qniht",
+            Self::Cosamp => "cosamp",
+            Self::Fista { .. } => "fista",
+        }
+    }
+
+    /// The engine a [`super::Recovery`] uses when the caller names none:
+    /// quantized solvers run on the quantized-native engine, everything
+    /// else on the dense-native one.
+    pub fn default_engine(&self) -> EngineKind {
+        match self {
+            Self::Qniht { .. } => EngineKind::NativeQuant,
+            _ => EngineKind::NativeDense,
+        }
+    }
+
+    /// The native [`SparseSolver`] adapter for this kind (`seed` feeds the
+    /// stochastic quantization; ignored by the deterministic baselines).
+    pub fn native_solver(&self, seed: u64) -> Box<dyn SparseSolver> {
+        match *self {
+            Self::Niht => Box::new(NihtSolver),
+            Self::Iht => Box::new(IhtSolver),
+            Self::Qniht { bits_phi, bits_y, mode } =>
+                Box::new(QnihtSolver { bits_phi, bits_y, mode, seed }),
+            Self::Cosamp => Box::new(CosampSolver),
+            Self::Fista { lambda, debias } => Box::new(FistaSolver { lambda, debias }),
+        }
+    }
+}
+
+/// A sparse-recovery algorithm behind the facade: consumes a [`Problem`],
+/// produces a [`crate::algorithms::SolveResult`], and reports every outer
+/// iteration to the observer. Implement this (or register an engine) to
+/// plug a new method into the facade without touching the serving layer.
+pub trait SparseSolver {
+    fn name(&self) -> &'static str;
+
+    fn solve(
+        &mut self,
+        problem: &Problem,
+        opts: &SolveOptions,
+        observer: &mut dyn IterObserver,
+    ) -> Result<SolveResult>;
+}
+
+fn require_mat<'a>(problem: &'a Problem, who: &str) -> Result<&'a crate::linalg::Mat> {
+    problem.as_mat().ok_or_else(|| {
+        anyhow!("{who} requires an explicit measurement matrix (matrix-free operators run via SolverKind::Niht)")
+    })
+}
+
+/// Normalized IHT, dense f32 (the 32-bit baseline), over the generic
+/// [`OpKernel`]. For an explicit matrix this computes exactly what
+/// `niht::DenseKernel` computes (same products, same reduction order), so
+/// facade results stay bit-identical with `niht::niht_dense` — the
+/// dispatch-parity test in `tests/solver_facade.rs` pins the two
+/// implementations together.
+pub struct NihtSolver;
+
+impl SparseSolver for NihtSolver {
+    fn name(&self) -> &'static str {
+        "niht"
+    }
+
+    fn solve(
+        &mut self,
+        problem: &Problem,
+        opts: &SolveOptions,
+        observer: &mut dyn IterObserver,
+    ) -> Result<SolveResult> {
+        let mut k = OpKernel::new(problem.op(), problem.y());
+        Ok(solve_observed(&mut k, problem.s(), opts, observer))
+    }
+}
+
+/// Plain IHT (unit step, internal spectral rescaling).
+pub struct IhtSolver;
+
+impl SparseSolver for IhtSolver {
+    fn name(&self) -> &'static str {
+        "iht"
+    }
+
+    fn solve(
+        &mut self,
+        problem: &Problem,
+        opts: &SolveOptions,
+        observer: &mut dyn IterObserver,
+    ) -> Result<SolveResult> {
+        let phi = require_mat(problem, "iht")?;
+        Ok(iht::iht_observed(phi, problem.y(), problem.s(), opts, observer))
+    }
+}
+
+/// The paper's QNIHT on the native quantized kernels.
+pub struct QnihtSolver {
+    pub bits_phi: u8,
+    pub bits_y: u8,
+    pub mode: RequantMode,
+    pub seed: u64,
+}
+
+impl SparseSolver for QnihtSolver {
+    fn name(&self) -> &'static str {
+        "qniht"
+    }
+
+    fn solve(
+        &mut self,
+        problem: &Problem,
+        opts: &SolveOptions,
+        observer: &mut dyn IterObserver,
+    ) -> Result<SolveResult> {
+        let phi = require_mat(problem, "qniht")?;
+        let mut k =
+            QuantKernel::new(phi, problem.y(), self.bits_phi, self.bits_y, self.mode, self.seed);
+        Ok(solve_observed(&mut k, problem.s(), opts, observer))
+    }
+}
+
+/// CoSaMP greedy baseline.
+pub struct CosampSolver;
+
+impl SparseSolver for CosampSolver {
+    fn name(&self) -> &'static str {
+        "cosamp"
+    }
+
+    fn solve(
+        &mut self,
+        problem: &Problem,
+        opts: &SolveOptions,
+        observer: &mut dyn IterObserver,
+    ) -> Result<SolveResult> {
+        let phi = require_mat(problem, "cosamp")?;
+        Ok(cosamp::cosamp_observed(phi, problem.y(), problem.s(), opts, observer))
+    }
+}
+
+/// FISTA ℓ₁ baseline, pruned to the problem sparsity for support metrics.
+pub struct FistaSolver {
+    pub lambda: Option<f32>,
+    pub debias: bool,
+}
+
+impl SparseSolver for FistaSolver {
+    fn name(&self) -> &'static str {
+        "fista"
+    }
+
+    fn solve(
+        &mut self,
+        problem: &Problem,
+        opts: &SolveOptions,
+        observer: &mut dyn IterObserver,
+    ) -> Result<SolveResult> {
+        let phi = require_mat(problem, "fista")?;
+        let fopts = FistaOptions {
+            lambda: self.lambda,
+            debias: self.debias,
+            prune_to: Some(problem.s()),
+        };
+        Ok(fista_observed(phi, problem.y(), opts, &fopts, observer))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::algorithms::support::support_of;
+    use crate::algorithms::NoopObserver;
+    use crate::linalg::Mat;
+    use crate::rng::XorShift128Plus;
+    use std::sync::Arc;
+
+    fn planted(m: usize, n: usize, s: usize, seed: u64) -> (Problem, Vec<f32>) {
+        let mut rng = XorShift128Plus::new(seed);
+        let phi = Mat::from_fn(m, n, |_, _| rng.gaussian_f32() / (m as f32).sqrt());
+        let mut x = vec![0.0f32; n];
+        for i in rng.choose_k(n, s) {
+            x[i] = 2.0 * rng.gaussian_f32().signum() + 0.3 * rng.gaussian_f32();
+        }
+        let y = phi.matvec(&x);
+        (Problem::new(Arc::new(phi), y, s), x)
+    }
+
+    #[test]
+    fn every_adapter_recovers_the_planted_support() {
+        let kinds = [
+            SolverKind::Niht,
+            SolverKind::Iht,
+            SolverKind::qniht_fixed(8, 8),
+            SolverKind::Cosamp,
+            SolverKind::Fista { lambda: None, debias: true },
+        ];
+        for (i, kind) in kinds.iter().enumerate() {
+            let (problem, x_true) = planted(96, 192, 5, 20 + i as u64);
+            let opts = SolveOptions::default().with_max_iters(500);
+            let mut solver = kind.native_solver(7);
+            assert_eq!(solver.name(), kind.name());
+            let r = solver.solve(&problem, &opts, &mut NoopObserver).unwrap();
+            assert_eq!(
+                support_of(&r.x),
+                support_of(&x_true),
+                "{} must recover the planted support",
+                kind.name()
+            );
+        }
+    }
+
+    #[test]
+    fn default_engines_match_solver_class() {
+        assert_eq!(SolverKind::Niht.default_engine(), EngineKind::NativeDense);
+        assert_eq!(SolverKind::qniht_fixed(2, 8).default_engine(), EngineKind::NativeQuant);
+        assert_eq!(SolverKind::Cosamp.default_engine(), EngineKind::NativeDense);
+    }
+}

@@ -1,0 +1,359 @@
+//! Integration tests for the unified `solver` facade: registry dispatch
+//! parity (facade results must be BIT-IDENTICAL to the direct kernel
+//! paths), the unknown-engine error path, batched quantize+pack
+//! amortization, observer-driven early stopping, and pluggability of
+//! custom measurement operators and custom engines.
+
+use lpcs::algorithms::niht::niht_dense;
+use lpcs::algorithms::qniht::{qniht, RequantMode};
+use lpcs::algorithms::support::support_of;
+use lpcs::algorithms::{
+    IterObserver, IterStat, NoopObserver, ObserverSignal, SolveOptions, SolveResult,
+};
+use lpcs::config::EngineKind;
+use lpcs::linalg::Mat;
+use lpcs::metrics;
+use lpcs::rng::XorShift128Plus;
+use lpcs::solver::{
+    Engine, EngineContext, EngineRegistry, MeasurementOp, NoopBatchObserver, Problem, Recovery,
+    SolveRequest, SolverKind,
+};
+use std::path::PathBuf;
+use std::sync::Arc;
+
+fn planted(m: usize, n: usize, s: usize, seed: u64) -> (Arc<Mat>, Vec<f32>, Vec<f32>) {
+    let mut rng = XorShift128Plus::new(seed);
+    let phi = Mat::from_fn(m, n, |_, _| rng.gaussian_f32() / (m as f32).sqrt());
+    let mut x = vec![0.0f32; n];
+    for i in rng.choose_k(n, s) {
+        x[i] = 2.0 * rng.gaussian_f32().signum() + 0.3 * rng.gaussian_f32();
+    }
+    let y = phi.matvec(&x);
+    (Arc::new(phi), y, x)
+}
+
+// ---------------------------------------------------------------- parity
+
+#[test]
+fn registry_dense_dispatch_is_bit_identical_to_direct_kernel() {
+    let (phi, y, _) = planted(96, 192, 6, 1);
+    let opts = SolveOptions::default();
+    let direct = niht_dense(&phi, &y, 6, &opts);
+    let report = Recovery::problem(Problem::new(phi.clone(), y.clone(), 6))
+        .solver(SolverKind::Niht)
+        .engine(EngineKind::NativeDense)
+        .options(opts)
+        .run()
+        .unwrap();
+    assert_eq!(report.x, direct.x, "facade NativeDense must be bit-identical");
+    assert_eq!(report.iterations, direct.iterations);
+    assert_eq!(report.converged, direct.converged);
+    assert_eq!(report.shrink_events, direct.shrink_events);
+}
+
+#[test]
+fn registry_quant_dispatch_is_bit_identical_to_direct_kernel() {
+    for (bits, mode) in [(8u8, RequantMode::Fixed), (4, RequantMode::Fixed), (2, RequantMode::Fresh)]
+    {
+        let (phi, y, _) = planted(96, 192, 5, 2 + bits as u64);
+        let opts = SolveOptions::default();
+        let direct = qniht(&phi, &y, 5, bits, 8, mode, 42, &opts);
+        let report = Recovery::problem(Problem::new(phi.clone(), y.clone(), 5))
+            .solver(SolverKind::Qniht { bits_phi: bits, bits_y: 8, mode })
+            .engine(EngineKind::NativeQuant)
+            .options(opts)
+            .seed(42)
+            .run()
+            .unwrap();
+        assert_eq!(
+            report.x, direct.x,
+            "facade NativeQuant ({bits}-bit, {mode:?}) must be bit-identical"
+        );
+        assert_eq!(report.iterations, direct.iterations);
+    }
+}
+
+// ----------------------------------------------------------- error paths
+
+#[test]
+fn unknown_engine_name_is_a_clean_error() {
+    let (phi, y, _) = planted(32, 64, 3, 5);
+    let err = Recovery::problem(Problem::new(phi, y, 3))
+        .engine_named("antimatter")
+        .run()
+        .unwrap_err()
+        .to_string();
+    assert!(err.contains("unknown engine 'antimatter'"), "{err}");
+    assert!(err.contains("native-quant"), "lists known engines: {err}");
+}
+
+#[test]
+fn xla_engine_without_shape_tag_is_rejected() {
+    let (phi, y, _) = planted(32, 64, 3, 6);
+    let err = Recovery::problem(Problem::new(phi, y, 3))
+        .solver(SolverKind::qniht_fixed(2, 8))
+        .engine(EngineKind::XlaQuant)
+        .run()
+        .unwrap_err()
+        .to_string();
+    // Fails before any PJRT work: either the missing tag or (if a
+    // manifest were present) the offline stub. The tag check comes first.
+    assert!(err.contains("shape tag") || err.contains("manifest"), "{err}");
+}
+
+// ----------------------------------------------- batching & amortization
+
+#[test]
+fn batched_solve_quantizes_phi_once_and_recovers_every_job() {
+    let (phi, _, _) = planted(96, 192, 4, 7);
+    let opts = SolveOptions::default();
+    let mut rng = XorShift128Plus::new(70);
+    let mut truths = Vec::new();
+    let reqs: Vec<SolveRequest> = (0..4)
+        .map(|j| {
+            let mut x = vec![0.0f32; 192];
+            for i in rng.choose_k(192, 4) {
+                x[i] = 1.5 + rng.uniform_f32();
+            }
+            let y = phi.matvec(&x);
+            truths.push(x);
+            SolveRequest {
+                problem: Problem::new(phi.clone(), y, 4),
+                solver: SolverKind::qniht_fixed(8, 8),
+                seed: j,
+            }
+        })
+        .collect();
+
+    let mut reg = EngineRegistry::with_defaults(PathBuf::from("artifacts"));
+    let results = reg
+        .solve_batch("native-quant", &reqs, &opts, &mut NoopBatchObserver)
+        .unwrap();
+    assert_eq!(results.len(), 4);
+    for (result, x_true) in results.iter().zip(&truths) {
+        let r = result.as_ref().expect("batched job solves");
+        assert_eq!(support_of(&r.x), support_of(x_true));
+    }
+
+    let m = reg.metrics("native-quant").expect("engine was used");
+    assert_eq!(m.phi_quantizations, 1, "ONE quantize+pack for the whole batch");
+    assert_eq!(m.solves, 4);
+    assert_eq!(m.amortized_batches, 1);
+
+    // The same four jobs solved individually quantize Φ four times.
+    for req in &reqs {
+        reg.solve("native-quant", req, &opts, &mut NoopObserver).unwrap();
+    }
+    let m = reg.metrics("native-quant").unwrap();
+    assert_eq!(m.phi_quantizations, 5, "per-job path pays one quantization each");
+    assert_eq!(m.solves, 8);
+}
+
+#[test]
+fn batched_results_do_not_depend_on_batch_composition() {
+    // The shared Φ̂ is a pure function of (Φ, bits): a job solved in a
+    // batch of 4 must produce the same iterate as in a batch of 2.
+    let (phi, y, _) = planted(64, 128, 4, 8);
+    let opts = SolveOptions::default();
+    let req = |seed: u64, y: &[f32]| SolveRequest {
+        problem: Problem::new(phi.clone(), y.to_vec(), 4),
+        solver: SolverKind::qniht_fixed(4, 8),
+        seed,
+    };
+    // Second observation against the SAME Φ.
+    let y2 = {
+        let mut rng = XorShift128Plus::new(90);
+        let mut x = vec![0.0f32; 128];
+        for i in rng.choose_k(128, 4) {
+            x[i] = 1.0;
+        }
+        phi.matvec(&x)
+    };
+
+    let mut reg = EngineRegistry::with_defaults(PathBuf::from("artifacts"));
+    let big = reg
+        .solve_batch(
+            "native-quant",
+            &[req(1, &y), req(2, &y2), req(3, &y), req(4, &y2)],
+            &opts,
+            &mut NoopBatchObserver,
+        )
+        .unwrap();
+    let small = reg
+        .solve_batch("native-quant", &[req(1, &y), req(2, &y2)], &opts, &mut NoopBatchObserver)
+        .unwrap();
+    // A job that arrives alone (batch of ONE) must match too — the shared
+    // Φ̂ seed is canonical, not taken from any batch member.
+    let solo = reg
+        .solve_batch("native-quant", &[req(1, &y)], &opts, &mut NoopBatchObserver)
+        .unwrap();
+    assert_eq!(
+        big[0].as_ref().unwrap().x,
+        small[0].as_ref().unwrap().x,
+        "job (seed 1) is bit-identical in either batch"
+    );
+    assert_eq!(big[1].as_ref().unwrap().x, small[1].as_ref().unwrap().x);
+    assert_eq!(
+        big[0].as_ref().unwrap().x,
+        solo[0].as_ref().unwrap().x,
+        "singleton batches take the amortized path too"
+    );
+}
+
+#[test]
+fn invalid_job_fails_alone_not_its_batch_siblings() {
+    let (phi, y, x_true) = planted(64, 128, 4, 15);
+    let opts = SolveOptions::default();
+    let good = |seed: u64| SolveRequest {
+        problem: Problem::new(phi.clone(), y.clone(), 4),
+        solver: SolverKind::qniht_fixed(8, 8),
+        seed,
+    };
+    let bad = SolveRequest {
+        problem: Problem::new(phi.clone(), vec![0.0; 3], 4), // wrong y length
+        solver: SolverKind::qniht_fixed(8, 8),
+        seed: 9,
+    };
+    let mut reg = EngineRegistry::with_defaults(PathBuf::from("artifacts"));
+    let results = reg
+        .solve_batch("native-quant", &[good(1), bad, good(2)], &opts, &mut NoopBatchObserver)
+        .unwrap();
+    assert_eq!(results.len(), 3);
+    assert_eq!(
+        support_of(&results[0].as_ref().expect("valid job solves").x),
+        support_of(&x_true)
+    );
+    assert!(results[1].is_err(), "malformed job fails individually");
+    assert_eq!(
+        support_of(&results[2].as_ref().expect("valid job solves").x),
+        support_of(&x_true)
+    );
+}
+
+// ------------------------------------------------------------- observers
+
+#[test]
+fn observer_cancels_facade_solve_and_report_notes_it() {
+    let (phi, y, _) = planted(64, 128, 5, 10);
+    let mut stop_at_3 = |st: &IterStat| {
+        if st.iter >= 3 {
+            ObserverSignal::Stop
+        } else {
+            ObserverSignal::Continue
+        }
+    };
+    let report = Recovery::problem(Problem::new(phi, y, 5))
+        .solver(SolverKind::Niht)
+        .options(SolveOptions::default().with_tol(0.0).with_max_iters(100))
+        .observer(&mut stop_at_3)
+        .run()
+        .unwrap();
+    assert!(report.stopped_early);
+    assert!(!report.converged);
+    assert_eq!(report.iterations, 4);
+}
+
+#[test]
+fn observer_streams_history_equivalent_stats() {
+    let (phi, y, _) = planted(64, 128, 4, 11);
+    let mut seen: Vec<IterStat> = Vec::new();
+    let mut collect = |st: &IterStat| {
+        seen.push(*st);
+        ObserverSignal::Continue
+    };
+    let report = Recovery::problem(Problem::new(phi, y, 4))
+        .options(SolveOptions::default().with_track_history(true))
+        .observer(&mut collect)
+        .run()
+        .unwrap();
+    assert_eq!(seen.len(), report.history.len());
+    for (a, b) in seen.iter().zip(&report.history) {
+        assert_eq!(a.iter, b.iter);
+        assert_eq!(a.resid_nsq, b.resid_nsq);
+        assert_eq!(a.mu, b.mu);
+    }
+}
+
+// --------------------------------------------------------- pluggability
+
+/// A matrix-free operator: Φ is represented only through its products
+/// (here backed by a hidden Mat, but the facade cannot see it).
+struct MatrixFree(Mat);
+
+impl MeasurementOp for MatrixFree {
+    fn m(&self) -> usize {
+        self.0.rows
+    }
+    fn n(&self) -> usize {
+        self.0.cols
+    }
+    fn apply(&self, x: &[f32]) -> Vec<f32> {
+        self.0.matvec(x)
+    }
+    fn apply_t(&self, r: &[f32]) -> Vec<f32> {
+        self.0.matvec_t(r)
+    }
+}
+
+#[test]
+fn matrix_free_operator_solves_via_op_kernel() {
+    let (phi, y, x_true) = planted(96, 192, 5, 12);
+    let op = Arc::new(MatrixFree(phi.as_ref().clone()));
+    let report = Recovery::problem(Problem::with_op(op, y, 5))
+        .solver(SolverKind::Niht)
+        .run()
+        .unwrap();
+    assert_eq!(support_of(&report.x), support_of(&x_true));
+    assert!(metrics::recovery_error(&report.x, &x_true) < 1e-3);
+}
+
+#[test]
+fn matrix_free_operator_rejected_by_matrix_bound_solvers() {
+    let (phi, y, _) = planted(32, 64, 3, 13);
+    let op = Arc::new(MatrixFree(phi.as_ref().clone()));
+    let err = Recovery::problem(Problem::with_op(op, y, 3))
+        .solver(SolverKind::Cosamp)
+        .run()
+        .unwrap_err()
+        .to_string();
+    assert!(err.contains("explicit measurement matrix"), "{err}");
+}
+
+/// A custom engine registered at runtime: proves new engines plug in
+/// without serving-layer changes.
+struct EchoEngine;
+
+impl Engine for EchoEngine {
+    fn name(&self) -> &'static str {
+        "echo"
+    }
+
+    fn solve(
+        &mut self,
+        req: &SolveRequest,
+        _opts: &SolveOptions,
+        _observer: &mut dyn IterObserver,
+    ) -> anyhow::Result<SolveResult> {
+        Ok(SolveResult {
+            x: req.problem.y().to_vec(),
+            iterations: 1,
+            converged: true,
+            shrink_events: 0,
+            history: vec![],
+        })
+    }
+}
+
+#[test]
+fn custom_engine_registers_and_dispatches_by_name() {
+    let (phi, y, _) = planted(16, 32, 2, 14);
+    let mut reg = EngineRegistry::with_defaults(PathBuf::from("artifacts"));
+    reg.register("echo", Box::new(|_: &EngineContext| Box::new(EchoEngine) as Box<dyn Engine>));
+    let report = Recovery::problem(Problem::new(phi, y.clone(), 2))
+        .engine_named("echo")
+        .registry(&mut reg)
+        .run()
+        .unwrap();
+    assert_eq!(report.x, y, "custom engine handled the request");
+    assert_eq!(report.engine, "echo");
+}

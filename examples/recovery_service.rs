@@ -1,9 +1,11 @@
 //! Serving example: the L3 recovery service under a bursty stream of
 //! visibility snapshots that share one measurement matrix. Reports
 //! throughput, latency percentiles, batching efficiency (the engine
-//! registry quantizes+packs Φ once per batch), backpressure behaviour,
-//! and the per-job progress/cancellation API threaded through the
-//! solver facade's IterObserver.
+//! registry quantizes+packs Φ once per batch; the cost-aware scheduler
+//! regroups interleaved precisions into amortizable batches),
+//! backpressure behaviour, the per-job progress/cancellation API, and
+//! the fpga-model engine answering "what would this snapshot cost on the
+//! FPGA at 2/4/8 bits?".
 //!
 //! Run: `cargo run --release --example recovery_service`
 
@@ -12,6 +14,7 @@ use lpcs::config::{EngineKind, ServiceConfig};
 use lpcs::coordinator::{JobSpec, ProblemHandle, RecoveryService};
 use lpcs::metrics;
 use lpcs::rng::XorShift128Plus;
+use lpcs::solver::{Problem, Recovery, SolverKind};
 use lpcs::telescope::{AstroConfig, AstroProblem};
 use std::sync::Arc;
 use std::time::{Duration, Instant};
@@ -29,13 +32,23 @@ fn main() {
     let s = cfg.sources;
 
     let service = RecoveryService::start(
-        ServiceConfig { workers: 4, queue_capacity: 64, max_batch: 8, max_wait_ms: 1 },
+        ServiceConfig {
+            workers: 4,
+            queue_capacity: 64,
+            max_batch: 8,
+            max_wait_ms: 1,
+            ..Default::default()
+        },
         SolveOptions::default(),
         "artifacts".into(),
     );
-    println!("service up: 4 workers, queue 64, max_batch 8");
+    println!("service up: 4 workers, queue 64, max_batch 8, cost-aware scheduling");
 
-    // A stream of snapshots: same Φ, fresh skies.
+    // A stream of snapshots: same Φ, fresh skies. Most run the paper's
+    // 2&8-bit QNIHT on the native quantized engine; every sixth job asks
+    // the fpga-model engine instead (same math, modeled clock) — the
+    // scheduler regroups the interleaved engines into amortizable
+    // batches, and the modeled device time lands in `modeled_ms=` below.
     let jobs = 48;
     let mut rng = XorShift128Plus::new(77);
     let t0 = Instant::now();
@@ -48,15 +61,14 @@ fn main() {
             x[i] = 0.5 + rng.uniform_f32();
         }
         let y = base.phi.matvec(&x);
-        match service.submit(JobSpec {
-            problem: ProblemHandle::new(phi.clone()),
-            y,
-            s,
-            bits_phi: 2,
-            bits_y: 8,
-            engine: EngineKind::NativeQuant,
-            seed: j as u64,
-        }) {
+        let engine =
+            if j % 6 == 5 { EngineKind::FpgaModel } else { EngineKind::NativeQuant };
+        let spec = JobSpec::builder(ProblemHandle::new(phi.clone()), y, s)
+            .bits(2, 8)
+            .engine(engine)
+            .seed(j as u64)
+            .build();
+        match service.submit(spec) {
             Ok(id) => {
                 submitted.push(id);
                 skies.insert(id, x);
@@ -115,6 +127,30 @@ fn main() {
     );
     println!("service metrics: {}", service.metrics().snapshot());
     service.shutdown();
+
+    // The FPGA bit-budget query, as a facade one-liner per precision:
+    // the fpga-model engine runs the real quantized solve and bills
+    // iterations × the §8 bandwidth model's iteration time.
+    println!("\nFPGA cost query (one snapshot, modeled device time):");
+    let mut x = vec![0.0f32; base.phi.cols];
+    for i in XorShift128Plus::new(5).choose_k(base.phi.cols, s) {
+        x[i] = 1.0;
+    }
+    let y = base.phi.matvec(&x);
+    for bits in [2u8, 4, 8] {
+        let report = Recovery::problem(Problem::new(phi.clone(), y.clone(), s))
+            .solver(SolverKind::qniht_fixed(bits, 8))
+            .engine(EngineKind::FpgaModel)
+            .seed(5)
+            .run()
+            .expect("fpga-model solve");
+        println!(
+            "  {bits}&8-bit: {:>4} iterations -> modeled {:>9.3?}  (host wall {:.3?})",
+            report.iterations,
+            report.modeled.unwrap_or_default(),
+            report.wall
+        );
+    }
 }
 
 fn to_sources(x: &[f32]) -> Vec<(usize, f32)> {

@@ -40,7 +40,13 @@ fn main() {
 
     for workers in [1usize, 2, 4] {
         let service = RecoveryService::start(
-            ServiceConfig { workers, queue_capacity: 256, max_batch: 8, max_wait_ms: 0 },
+            ServiceConfig {
+                workers,
+                queue_capacity: 256,
+                max_batch: 8,
+                max_wait_ms: 0,
+                ..Default::default()
+            },
             opts.clone(),
             "artifacts".into(),
         );
@@ -49,15 +55,13 @@ fn main() {
         let ids: Vec<_> = (0..jobs)
             .map(|k| {
                 service
-                    .submit(JobSpec {
-                        problem: ProblemHandle::new(phi.clone()),
-                        y: y.clone(),
-                        s,
-                        bits_phi: 4,
-                        bits_y: 8,
-                        engine: EngineKind::NativeQuant,
-                        seed: k,
-                    })
+                    .submit(
+                        JobSpec::builder(ProblemHandle::new(phi.clone()), y.clone(), s)
+                            .bits(4, 8)
+                            .engine(EngineKind::NativeQuant)
+                            .seed(k)
+                            .build(),
+                    )
                     .unwrap()
             })
             .collect();

@@ -38,7 +38,7 @@ use crate::rng::XorShift128Plus;
 use std::sync::Arc;
 
 /// How Φ̂ is refreshed across iterations.
-#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
 pub enum RequantMode {
     /// One quantization, reused (systems mode — default).
     Fixed,

@@ -5,6 +5,7 @@
 use crate::algorithms::qniht::RequantMode;
 use crate::algorithms::SolveOptions;
 use crate::io::json::Json;
+use crate::solver::SolverKind;
 use crate::telescope::AstroConfig;
 use anyhow::{anyhow, bail, Result};
 use std::path::{Path, PathBuf};
@@ -20,6 +21,10 @@ pub enum EngineKind {
     XlaQuant,
     /// PJRT dense f32 artifact.
     XlaDense,
+    /// The quantized native kernels with wall time charged from the §8
+    /// FPGA bandwidth model ([`crate::perfmodel::fpga::FpgaModel`]):
+    /// answers "what would this job cost on the FPGA at 2/4/8 bits?".
+    FpgaModel,
 }
 
 impl EngineKind {
@@ -29,7 +34,10 @@ impl EngineKind {
             "native-quant" | "quant" | "native" => Self::NativeQuant,
             "xla-quant" | "xla" => Self::XlaQuant,
             "xla-dense" => Self::XlaDense,
-            other => bail!("unknown engine '{other}' (native-dense|native-quant|xla-quant|xla-dense)"),
+            "fpga-model" | "fpga" => Self::FpgaModel,
+            other => bail!(
+                "unknown engine '{other}' (native-dense|native-quant|xla-quant|xla-dense|fpga-model)"
+            ),
         })
     }
 
@@ -39,13 +47,52 @@ impl EngineKind {
             Self::NativeQuant => "native-quant",
             Self::XlaQuant => "xla-quant",
             Self::XlaDense => "xla-dense",
+            Self::FpgaModel => "fpga-model",
         }
     }
 
     /// Whether this engine executes quantized (low-precision) kernels —
     /// decides whether a job's default solver is QNIHT or dense NIHT.
     pub fn is_quantized(&self) -> bool {
-        matches!(self, Self::NativeQuant | Self::XlaQuant)
+        matches!(self, Self::NativeQuant | Self::XlaQuant | Self::FpgaModel)
+    }
+}
+
+/// Algorithm selector for the CLI/config (`algorithm` key): picks the
+/// facade [`SolverKind`] the `solve`/`serve` commands run. The
+/// quantization parameters of QNIHT come from [`QuantConfig`], so this
+/// stays a flat name on the command line.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum AlgoKind {
+    Niht,
+    Iht,
+    Qniht,
+    Cosamp,
+    Fista,
+}
+
+impl AlgoKind {
+    pub fn parse(s: &str) -> Result<Self> {
+        Ok(match s {
+            "niht" => Self::Niht,
+            "iht" => Self::Iht,
+            "qniht" => Self::Qniht,
+            "cosamp" => Self::Cosamp,
+            "fista" => Self::Fista,
+            // ("auto" is not an AlgoKind: the config layer maps it to
+            // `algorithm = None` before calling parse.)
+            other => bail!("unknown algorithm '{other}' (niht|iht|qniht|cosamp|fista)"),
+        })
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            Self::Niht => "niht",
+            Self::Iht => "iht",
+            Self::Qniht => "qniht",
+            Self::Cosamp => "cosamp",
+            Self::Fista => "fista",
+        }
     }
 }
 
@@ -70,11 +117,25 @@ pub struct ServiceConfig {
     pub queue_capacity: usize,
     pub max_batch: usize,
     pub max_wait_ms: u64,
+    /// How many queued jobs a worker snapshots per scheduling decision
+    /// (the cost-aware scheduler reorders batches inside this window; the
+    /// effective window is never smaller than `max_batch`).
+    pub sched_window: usize,
+    /// Starvation bound for the scheduler: a batch whose oldest job has
+    /// waited at least this long dispatches ahead of every cheaper batch.
+    pub starvation_ms: u64,
 }
 
 impl Default for ServiceConfig {
     fn default() -> Self {
-        Self { workers: 2, queue_capacity: 256, max_batch: 8, max_wait_ms: 5 }
+        Self {
+            workers: 2,
+            queue_capacity: 256,
+            max_batch: 8,
+            max_wait_ms: 5,
+            sched_window: 16,
+            starvation_ms: 250,
+        }
     }
 }
 
@@ -86,6 +147,10 @@ pub struct LpcsConfig {
     pub seed: u64,
     pub sparsity: usize,
     pub engine: EngineKind,
+    /// Explicit algorithm selection; `None` infers from the engine
+    /// (quantized engines → QNIHT, dense → NIHT) exactly as the
+    /// coordinator's pre-PR-3 default did.
+    pub algorithm: Option<AlgoKind>,
     pub quant: QuantConfig,
     pub solver: SolveOptions,
     pub astro: AstroConfig,
@@ -100,6 +165,7 @@ impl Default for LpcsConfig {
             seed: 7,
             sparsity: 30,
             engine: EngineKind::NativeQuant,
+            algorithm: None,
             quant: QuantConfig::default(),
             solver: SolveOptions::default(),
             astro: AstroConfig::default(),
@@ -139,6 +205,10 @@ impl LpcsConfig {
             "seed" => self.seed = vf()? as u64,
             "sparsity" | "s" => self.sparsity = vf()? as usize,
             "engine" => self.engine = EngineKind::parse(value)?,
+            "algorithm" | "solver.algorithm" => {
+                self.algorithm =
+                    if value == "auto" { None } else { Some(AlgoKind::parse(value)?) }
+            }
             "quant.bits_phi" | "bits_phi" => self.quant.bits_phi = vf()? as u8,
             "quant.bits_y" | "bits_y" => self.quant.bits_y = vf()? as u8,
             "quant.mode" => {
@@ -166,9 +236,33 @@ impl LpcsConfig {
             "service.queue_capacity" => self.service.queue_capacity = vf()? as usize,
             "service.max_batch" => self.service.max_batch = vf()? as usize,
             "service.max_wait_ms" => self.service.max_wait_ms = vf()? as u64,
+            "service.sched_window" => self.service.sched_window = vf()? as usize,
+            "service.starvation_ms" => self.service.starvation_ms = vf()? as u64,
             other => bail!("unknown config key '{other}'"),
         }
         Ok(())
+    }
+
+    /// The facade [`SolverKind`] this config selects: the explicit
+    /// `algorithm` key when present, otherwise inferred from the engine
+    /// (quantized → QNIHT at the configured bits/mode, dense → NIHT).
+    pub fn solver_kind(&self) -> SolverKind {
+        let algo = self.algorithm.unwrap_or(if self.engine.is_quantized() {
+            AlgoKind::Qniht
+        } else {
+            AlgoKind::Niht
+        });
+        match algo {
+            AlgoKind::Niht => SolverKind::Niht,
+            AlgoKind::Iht => SolverKind::Iht,
+            AlgoKind::Qniht => SolverKind::Qniht {
+                bits_phi: self.quant.bits_phi,
+                bits_y: self.quant.bits_y,
+                mode: self.quant.mode,
+            },
+            AlgoKind::Cosamp => SolverKind::Cosamp,
+            AlgoKind::Fista => SolverKind::Fista { lambda: None, debias: true },
+        }
     }
 
     /// Validate cross-field invariants.
@@ -184,6 +278,18 @@ impl LpcsConfig {
         }
         if self.service.workers == 0 || self.service.max_batch == 0 {
             bail!("service.workers and service.max_batch must be >= 1");
+        }
+        if self.service.sched_window == 0 {
+            bail!("service.sched_window must be >= 1");
+        }
+        let solver = self.solver_kind();
+        if !solver.runs_on(self.engine) {
+            bail!(
+                "algorithm '{}' cannot run on engine '{}' (quantized engines run qniht; \
+                 native-dense runs the full-precision algorithms; xla-dense runs niht)",
+                solver.name(),
+                self.engine.name()
+            );
         }
         Ok(())
     }
@@ -217,8 +323,56 @@ mod tests {
     fn quantized_engine_classification() {
         assert!(EngineKind::NativeQuant.is_quantized());
         assert!(EngineKind::XlaQuant.is_quantized());
+        assert!(EngineKind::FpgaModel.is_quantized());
         assert!(!EngineKind::NativeDense.is_quantized());
         assert!(!EngineKind::XlaDense.is_quantized());
+    }
+
+    #[test]
+    fn algorithm_key_selects_solver_kind() {
+        let mut c = LpcsConfig::default();
+        // Inference preserved: quantized engine → qniht, dense → niht.
+        assert_eq!(c.solver_kind().name(), "qniht");
+        c.set("engine", "native-dense").unwrap();
+        assert_eq!(c.solver_kind().name(), "niht");
+        // Explicit selection wins, and carries the quant config for qniht.
+        c.set("algorithm", "cosamp").unwrap();
+        assert_eq!(c.solver_kind().name(), "cosamp");
+        c.validate().unwrap();
+        c.set("engine", "fpga-model").unwrap();
+        c.set("algorithm", "qniht").unwrap();
+        c.set("bits_phi", "4").unwrap();
+        assert_eq!(
+            c.solver_kind(),
+            SolverKind::Qniht { bits_phi: 4, bits_y: 8, mode: RequantMode::Fixed }
+        );
+        c.validate().unwrap();
+        // auto resets to inference.
+        c.set("algorithm", "auto").unwrap();
+        assert!(c.algorithm.is_none());
+        assert!(AlgoKind::parse("warp").is_err());
+    }
+
+    #[test]
+    fn algorithm_engine_mismatch_rejected() {
+        let mut c = LpcsConfig::default();
+        c.set("algorithm", "cosamp").unwrap();
+        // cosamp on the (default) quantized engine is a config error.
+        let err = c.validate().unwrap_err().to_string();
+        assert!(err.contains("cannot run on engine"), "{err}");
+        c.set("engine", "native-dense").unwrap();
+        c.validate().unwrap();
+    }
+
+    #[test]
+    fn scheduler_keys_roundtrip() {
+        let mut c = LpcsConfig::default();
+        c.set("service.sched_window", "32").unwrap();
+        c.set("service.starvation_ms", "100").unwrap();
+        assert_eq!(c.service.sched_window, 32);
+        assert_eq!(c.service.starvation_ms, 100);
+        c.set("service.sched_window", "0").unwrap();
+        assert!(c.validate().is_err());
     }
 
     #[test]
@@ -249,7 +403,7 @@ mod tests {
 
     #[test]
     fn engine_parse_names() {
-        for k in ["native-dense", "native-quant", "xla-quant", "xla-dense"] {
+        for k in ["native-dense", "native-quant", "xla-quant", "xla-dense", "fpga-model"] {
             assert_eq!(EngineKind::parse(k).unwrap().name(), k);
         }
         assert!(EngineKind::parse("gpu").is_err());

@@ -6,6 +6,11 @@
 //! (rather than global grouping) preserves fairness: a job never overtakes
 //! an earlier job with a different key.
 //!
+//! Since PR 3 the worker loop dispatches through the cost-aware scheduler
+//! in [`super::sched`] instead; `form_batches` remains the strict-FIFO
+//! reference policy (and the definition of the [`Batch`] unit both
+//! policies emit).
+//!
 //! A formed batch is executed in one `EngineRegistry::solve_batch` call
 //! (see [`crate::solver::registry`]): because every job in it shares Φ and
 //! the quantization configuration, the quantized engine performs ONE
@@ -55,15 +60,10 @@ mod tests {
     use std::sync::Arc;
 
     fn spec(phi: &Arc<Mat>, bits: u8) -> JobSpec {
-        JobSpec {
-            problem: ProblemHandle::new(phi.clone()),
-            y: vec![0.0; phi.rows],
-            s: 2,
-            bits_phi: bits,
-            bits_y: 8,
-            engine: EngineKind::NativeQuant,
-            seed: 0,
-        }
+        JobSpec::builder(ProblemHandle::new(phi.clone()), vec![0.0; phi.rows], 2)
+            .bits(bits, 8)
+            .engine(EngineKind::NativeQuant)
+            .build()
     }
 
     #[test]

@@ -2,9 +2,10 @@
 
 use crate::algorithms::qniht::RequantMode;
 use crate::algorithms::{IterStat, SolveResult};
-use crate::config::EngineKind;
+use crate::config::{EngineKind, QuantConfig};
 use crate::linalg::Mat;
-use crate::solver::{Problem, SolveRequest, SolverKind};
+use crate::solver::{Problem, SolveRequest, SolverKey, SolverKind};
+use anyhow::Result;
 use std::collections::HashMap;
 use std::sync::{Arc, Condvar, Mutex};
 use std::time::{Duration, Instant};
@@ -30,50 +31,86 @@ impl ProblemHandle {
     }
 }
 
-/// A recovery request.
+/// A recovery request: problem + an explicit algorithm ([`SolverKind`],
+/// which carries the full quantization configuration for QNIHT) + the
+/// engine that executes it. Construct via [`JobSpec::builder`] — the
+/// builder infers the solver from the engine exactly as the pre-PR-3
+/// service did, so existing callers keep their behavior.
 #[derive(Debug, Clone)]
 pub struct JobSpec {
     pub problem: ProblemHandle,
     pub y: Vec<f32>,
     pub s: usize,
-    pub bits_phi: u8,
-    pub bits_y: u8,
+    pub solver: SolverKind,
     pub engine: EngineKind,
     pub seed: u64,
 }
 
 impl JobSpec {
+    /// Start building a spec. Defaults: engine `native-quant` with the
+    /// default bit widths ([`QuantConfig::default`]), solver inferred
+    /// from the engine, seed 0.
+    pub fn builder(problem: ProblemHandle, y: Vec<f32>, s: usize) -> JobSpecBuilder {
+        let q = QuantConfig::default();
+        JobSpecBuilder {
+            problem,
+            y,
+            s,
+            engine: EngineKind::NativeQuant,
+            bits_phi: q.bits_phi,
+            bits_y: q.bits_y,
+            solver: None,
+            seed: 0,
+        }
+    }
+
     /// Batching key: jobs are batchable iff they share Φ (by identity) and
-    /// the full execution configuration.
+    /// the full execution configuration — including the solver, so e.g.
+    /// a CoSaMP job never coalesces with an NIHT job.
     pub fn batch_key(&self) -> BatchKey {
         BatchKey {
             phi_ptr: Arc::as_ptr(&self.problem.phi) as usize,
             s: self.s,
-            bits_phi: self.bits_phi,
-            bits_y: self.bits_y,
+            solver: self.solver.key(),
             engine: self.engine,
         }
     }
 
-    /// The facade [`SolverKind`] this job runs: QNIHT (Fixed — the
-    /// serving setting) on the quantized engines, dense NIHT otherwise.
-    pub fn solver_kind(&self) -> SolverKind {
+    /// Submit-time validation: shape/sparsity sanity, solver ↔ engine
+    /// compatibility, and packed bit widths for the quantized engines.
+    /// Without this a malformed spec only fails deep inside the batch
+    /// solve, after it has been queued, scheduled and batched.
+    pub fn validate(&self) -> Result<()> {
+        anyhow::ensure!(
+            self.y.len() == self.problem.phi.rows,
+            "y length {} does not match Φ rows {}",
+            self.y.len(),
+            self.problem.phi.rows
+        );
+        anyhow::ensure!(self.s >= 1, "sparsity must be >= 1");
+        anyhow::ensure!(
+            self.s <= self.problem.phi.cols,
+            "sparsity {} exceeds signal dimension {}",
+            self.s,
+            self.problem.phi.cols
+        );
+        anyhow::ensure!(
+            self.solver.runs_on(self.engine),
+            "solver '{}' cannot run on engine '{}'",
+            self.solver.name(),
+            self.engine.name()
+        );
         if self.engine.is_quantized() {
-            SolverKind::Qniht {
-                bits_phi: self.bits_phi,
-                bits_y: self.bits_y,
-                mode: RequantMode::Fixed,
-            }
-        } else {
-            SolverKind::Niht
+            self.solver.check_packed_bits()?;
         }
+        Ok(())
     }
 
     /// Lower this job into the facade's [`SolveRequest`]. Jobs sharing a
     /// `ProblemHandle` produce requests whose problems share Φ by pointer
     /// identity, which is what the engine's batched path amortizes over.
     pub fn into_request(self) -> SolveRequest {
-        let solver = self.solver_kind();
+        let solver = self.solver;
         let mut problem = Problem::new(self.problem.phi, self.y, self.s);
         if let Some(tag) = self.problem.shape_tag {
             problem = problem.with_shape_tag(tag);
@@ -82,12 +119,74 @@ impl JobSpec {
     }
 }
 
+/// Builder for [`JobSpec`]. Unless [`JobSpecBuilder::solver`] is called,
+/// the solver is inferred from the engine exactly as the old
+/// `solver_kind()` did: QNIHT (Fixed, at the builder's bit widths) on
+/// quantized engines, dense NIHT otherwise.
+#[derive(Debug, Clone)]
+pub struct JobSpecBuilder {
+    problem: ProblemHandle,
+    y: Vec<f32>,
+    s: usize,
+    engine: EngineKind,
+    bits_phi: u8,
+    bits_y: u8,
+    solver: Option<SolverKind>,
+    seed: u64,
+}
+
+impl JobSpecBuilder {
+    pub fn engine(mut self, engine: EngineKind) -> Self {
+        self.engine = engine;
+        self
+    }
+
+    /// Bit widths the inferred QNIHT solver uses (ignored when an
+    /// explicit solver is set).
+    pub fn bits(mut self, bits_phi: u8, bits_y: u8) -> Self {
+        self.bits_phi = bits_phi;
+        self.bits_y = bits_y;
+        self
+    }
+
+    /// Explicit algorithm selection (any [`SolverKind`], including the
+    /// CoSaMP/FISTA/IHT baselines and Fresh-mode QNIHT).
+    pub fn solver(mut self, solver: SolverKind) -> Self {
+        self.solver = Some(solver);
+        self
+    }
+
+    pub fn seed(mut self, seed: u64) -> Self {
+        self.seed = seed;
+        self
+    }
+
+    pub fn build(self) -> JobSpec {
+        let solver = self.solver.unwrap_or(if self.engine.is_quantized() {
+            SolverKind::Qniht {
+                bits_phi: self.bits_phi,
+                bits_y: self.bits_y,
+                mode: RequantMode::Fixed,
+            }
+        } else {
+            SolverKind::Niht
+        });
+        JobSpec {
+            problem: self.problem,
+            y: self.y,
+            s: self.s,
+            solver,
+            engine: self.engine,
+            seed: self.seed,
+        }
+    }
+}
+
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
 pub struct BatchKey {
     pub phi_ptr: usize,
     pub s: usize,
-    pub bits_phi: u8,
-    pub bits_y: u8,
+    pub solver: SolverKey,
     pub engine: EngineKind,
 }
 
@@ -180,6 +279,17 @@ impl JobStore {
     /// Latest streamed iteration stat, if the job has run any iterations.
     pub fn progress(&self, id: JobId) -> Option<IterStat> {
         self.inner.lock().unwrap().get(&id).and_then(|r| r.progress)
+    }
+
+    /// Microseconds since the job was submitted (0 for unknown ids) —
+    /// the age the cost-aware scheduler feeds its starvation bound.
+    pub fn queued_age_us(&self, id: JobId) -> u64 {
+        self.inner
+            .lock()
+            .unwrap()
+            .get(&id)
+            .map(|r| r.submitted.elapsed().as_micros() as u64)
+            .unwrap_or(0)
     }
 
     /// Ask a job to stop at its next iteration boundary. Returns false if
@@ -378,18 +488,14 @@ mod tests {
     #[test]
     fn spec_lowers_to_facade_request() {
         let phi = Arc::new(Mat::zeros(2, 3));
-        let spec = JobSpec {
-            problem: ProblemHandle::with_shape_tag(phi.clone(), "tiny"),
-            y: vec![0.0; 2],
-            s: 1,
-            bits_phi: 2,
-            bits_y: 8,
-            engine: EngineKind::NativeQuant,
-            seed: 9,
-        };
-        assert_eq!(spec.solver_kind().name(), "qniht");
-        let dense = JobSpec { engine: EngineKind::NativeDense, ..spec.clone() };
-        assert_eq!(dense.solver_kind().name(), "niht");
+        let spec = JobSpec::builder(ProblemHandle::with_shape_tag(phi.clone(), "tiny"), vec![0.0; 2], 1)
+            .bits(2, 8)
+            .seed(9)
+            .build();
+        assert_eq!(spec.solver.name(), "qniht");
+        let dense =
+            JobSpec { engine: EngineKind::NativeDense, solver: SolverKind::Niht, ..spec.clone() };
+        assert_eq!(dense.solver.name(), "niht");
         let req = spec.into_request();
         assert_eq!(req.seed, 9);
         assert_eq!(req.problem.shape_tag(), Some("tiny"));
@@ -400,16 +506,29 @@ mod tests {
     }
 
     #[test]
+    fn builder_infers_solver_from_engine_and_explicit_wins() {
+        let phi = Arc::new(Mat::zeros(4, 8));
+        let b = || JobSpec::builder(ProblemHandle::new(phi.clone()), vec![0.0; 4], 2);
+        // Quantized engines → QNIHT Fixed at the builder's bit widths.
+        let quant = b().engine(EngineKind::NativeQuant).bits(4, 8).build();
+        assert_eq!(
+            quant.solver,
+            SolverKind::Qniht { bits_phi: 4, bits_y: 8, mode: RequantMode::Fixed }
+        );
+        let fpga = b().engine(EngineKind::FpgaModel).bits(2, 8).build();
+        assert_eq!(fpga.solver.name(), "qniht");
+        // Dense engines → NIHT.
+        assert_eq!(b().engine(EngineKind::NativeDense).build().solver, SolverKind::Niht);
+        // Explicit selection wins over inference.
+        let explicit = b().engine(EngineKind::NativeDense).solver(SolverKind::Cosamp).build();
+        assert_eq!(explicit.solver, SolverKind::Cosamp);
+    }
+
+    #[test]
     fn batch_key_identity() {
         let phi = Arc::new(Mat::zeros(2, 3));
-        let spec = |phi: &Arc<Mat>| JobSpec {
-            problem: ProblemHandle::new(phi.clone()),
-            y: vec![0.0; 2],
-            s: 1,
-            bits_phi: 2,
-            bits_y: 8,
-            engine: EngineKind::NativeQuant,
-            seed: 0,
+        let spec = |phi: &Arc<Mat>| {
+            JobSpec::builder(ProblemHandle::new(phi.clone()), vec![0.0; 2], 1).bits(2, 8).build()
         };
         let a = spec(&phi);
         let b = spec(&phi);
@@ -417,8 +536,65 @@ mod tests {
         let other = Arc::new(Mat::zeros(2, 3));
         let c = spec(&other);
         assert_ne!(a.batch_key(), c.batch_key());
+        // Bit widths live in the solver key now.
         let mut d = spec(&phi);
-        d.bits_phi = 4;
+        d.solver = SolverKind::qniht_fixed(4, 8);
         assert_ne!(a.batch_key(), d.batch_key());
+        // Same everything but a different algorithm never batches.
+        let e = JobSpec::builder(ProblemHandle::new(phi.clone()), vec![0.0; 2], 1)
+            .engine(EngineKind::NativeDense)
+            .build();
+        let mut f = e.clone();
+        f.solver = SolverKind::Cosamp;
+        assert_ne!(e.batch_key(), f.batch_key());
+        // Engine is still part of the key.
+        let mut g = spec(&phi);
+        g.engine = EngineKind::FpgaModel;
+        assert_ne!(a.batch_key(), g.batch_key());
+    }
+
+    #[test]
+    fn validate_rejects_malformed_specs() {
+        let phi = Arc::new(Mat::zeros(4, 8));
+        let ok = JobSpec::builder(ProblemHandle::new(phi.clone()), vec![0.0; 4], 2)
+            .bits(2, 8)
+            .build();
+        ok.validate().unwrap();
+
+        let mut wrong_y = ok.clone();
+        wrong_y.y = vec![0.0; 3];
+        assert!(wrong_y.validate().unwrap_err().to_string().contains("y length"));
+
+        let mut zero_s = ok.clone();
+        zero_s.s = 0;
+        assert!(zero_s.validate().is_err());
+        let mut fat_s = ok.clone();
+        fat_s.s = 9;
+        assert!(fat_s.validate().is_err());
+
+        // Non-packed widths are rejected for quantized engines.
+        for bad_bits in [0u8, 1, 3, 5, 6, 7, 16] {
+            let spec = JobSpec::builder(ProblemHandle::new(phi.clone()), vec![0.0; 4], 2)
+                .bits(bad_bits, 8)
+                .build();
+            let err = spec.validate().unwrap_err().to_string();
+            assert!(err.contains("bits_phi"), "{bad_bits}: {err}");
+        }
+        let bad_y_bits = JobSpec::builder(ProblemHandle::new(phi.clone()), vec![0.0; 4], 2)
+            .bits(2, 5)
+            .build();
+        assert!(bad_y_bits.validate().unwrap_err().to_string().contains("bits_y"));
+
+        // Solver ↔ engine mismatches fail at submit, not inside the solve.
+        let mismatch = JobSpec::builder(ProblemHandle::new(phi.clone()), vec![0.0; 4], 2)
+            .engine(EngineKind::NativeQuant)
+            .solver(SolverKind::Cosamp)
+            .build();
+        assert!(mismatch.validate().unwrap_err().to_string().contains("cannot run"));
+        let fresh_on_xla = JobSpec::builder(ProblemHandle::new(phi.clone()), vec![0.0; 4], 2)
+            .engine(EngineKind::XlaQuant)
+            .solver(SolverKind::qniht_fresh(2, 8))
+            .build();
+        assert!(fresh_on_xla.validate().is_err());
     }
 }

@@ -11,10 +11,18 @@
 //!
 //! Components:
 //! * [`queue`] — bounded MPMC queue (Mutex + Condvar) with try/timeout
-//!   semantics and compatible-batch draining.
-//! * [`job`] — job specs, the state machine (Queued → Running → Done|Failed),
-//!   the store clients wait on, and per-job progress/cancellation flags.
-//! * [`batcher`] — pure batching policy (grouping key + batch limits).
+//!   semantics and snapshot-window draining.
+//! * [`job`] — job specs (with an explicit [`crate::solver::SolverKind`]
+//!   selector, so every algorithm the facade wraps is servable), the
+//!   state machine (Queued → Running → Done|Failed), submit-time
+//!   validation, the store clients wait on, and per-job
+//!   progress/cancellation flags.
+//! * [`batcher`] — the strict-FIFO reference batching policy (and the
+//!   [`batcher::Batch`] unit).
+//! * [`sched`] — the cost-aware scheduler the workers dispatch through:
+//!   a pure queue-snapshot → dispatch-order policy scoring batches by
+//!   amortized setup + stream cost − age credit, under a starvation
+//!   bound and a within-key fairness guarantee.
 //! * [`service`] — worker pool wiring and metrics. Execution dispatch
 //!   lives in the [`crate::solver`] engine registry (one per worker);
 //!   batches go through `solve_batch`, which amortizes one quantize+pack
@@ -23,7 +31,8 @@
 pub mod batcher;
 pub mod job;
 pub mod queue;
+pub mod sched;
 pub mod service;
 
-pub use job::{JobId, JobOutcome, JobSpec, JobState, ProblemHandle};
+pub use job::{JobId, JobOutcome, JobSpec, JobSpecBuilder, JobState, ProblemHandle};
 pub use service::{RecoveryService, ServiceMetrics};

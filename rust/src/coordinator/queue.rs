@@ -132,8 +132,12 @@ impl<T> BoundedQueue<T> {
         }
     }
 
-    /// Drain up to `limit` additional items matching `pred` (batch
-    /// formation: caller already holds the batch leader).
+    /// Drain up to `limit` additional items matching `pred` (the
+    /// pre-PR-3 compatible-batch drain: caller already holds the batch
+    /// leader). The service now snapshots windows via
+    /// [`BoundedQueue::drain_upto`] and lets the scheduler group them;
+    /// this remains the strict-FIFO reference drain, pinned by the queue
+    /// unit and property tests.
     pub fn drain_matching(&self, limit: usize, pred: impl Fn(&T) -> bool) -> Vec<T> {
         let mut g = self.inner.lock().unwrap();
         let mut out = Vec::new();
@@ -150,6 +154,48 @@ impl<T> BoundedQueue<T> {
             self.not_full.notify_all();
         }
         out
+    }
+
+    /// Pop up to `limit` items from the front regardless of contents
+    /// (High before Normal, FIFO within each class) — the cost-aware
+    /// scheduler's snapshot window.
+    pub fn drain_upto(&self, limit: usize) -> Vec<T> {
+        let mut g = self.inner.lock().unwrap();
+        let mut out = Vec::new();
+        while out.len() < limit {
+            match g.pop() {
+                Some(v) => out.push(v),
+                None => break,
+            }
+        }
+        if !out.is_empty() {
+            drop(g);
+            self.not_full.notify_all();
+        }
+        out
+    }
+
+    /// Return items to the FRONT of their priority class, preserving the
+    /// given order (the scheduler's window give-back: a worker snapshots
+    /// several jobs, executes one batch, and returns the rest so other
+    /// workers can take them). Deliberately ignores capacity — the items
+    /// came out of this queue moments ago, so the transient overshoot is
+    /// bounded by the scheduling window, and refusing them would lose
+    /// accepted jobs. Works after `close()` too: closed queues still
+    /// drain.
+    pub fn unpop(&self, items: Vec<T>, class: impl Fn(&T) -> Priority) {
+        if items.is_empty() {
+            return;
+        }
+        let mut g = self.inner.lock().unwrap();
+        for item in items.into_iter().rev() {
+            match class(&item) {
+                Priority::High => g.high.push_front(item),
+                Priority::Normal => g.normal.push_front(item),
+            }
+        }
+        drop(g);
+        self.not_empty.notify_all();
     }
 
     /// Close: pushes fail, pops drain the remainder then return None.
@@ -218,6 +264,37 @@ mod tests {
         let got = q.drain_matching(10, |v| v % 2 == 0);
         assert_eq!(got, vec![2, 4]);
         assert_eq!(q.len(), 2);
+    }
+
+    #[test]
+    fn drain_upto_pops_front_in_priority_order() {
+        let q = BoundedQueue::new(10);
+        q.try_push(1, Priority::Normal).unwrap();
+        q.try_push(2, Priority::Normal).unwrap();
+        q.try_push(99, Priority::High).unwrap();
+        assert_eq!(q.drain_upto(2), vec![99, 1]);
+        assert_eq!(q.drain_upto(5), vec![2]);
+        assert!(q.drain_upto(5).is_empty());
+    }
+
+    #[test]
+    fn unpop_returns_items_to_the_front_in_order() {
+        let q = BoundedQueue::new(4);
+        q.try_push(3, Priority::Normal).unwrap();
+        q.try_push(90, Priority::High).unwrap();
+        // Give back [91 (high), 1, 2 (normal)]: highs land ahead of 90?
+        // No — unpop pushes to the FRONT of each class, so returned items
+        // precede what is still queued, in their given order.
+        q.unpop(vec![91, 1, 2], |v| if *v >= 90 { Priority::High } else { Priority::Normal });
+        let mut got = vec![];
+        while let Some(v) = q.pop_timeout(Duration::from_millis(1)) {
+            got.push(v);
+        }
+        assert_eq!(got, vec![91, 90, 1, 2, 3]);
+        // Unpop works on a closed queue (jobs must not be lost).
+        q.close();
+        q.unpop(vec![7], |_| Priority::Normal);
+        assert_eq!(q.pop_timeout(Duration::from_millis(1)), Some(7));
     }
 
     #[test]

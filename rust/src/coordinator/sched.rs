@@ -1,0 +1,311 @@
+//! Cost-aware batch scheduling (PR 3) — a PURE function from a queue
+//! snapshot to a dispatch order, replacing the worker's FIFO-run drain.
+//! Like [`super::batcher`], the policy touches no clocks, threads or
+//! queues, so every invariant is property-testable
+//! (`tests/coordinator_props.rs` drives it through `testkit::forall`).
+//!
+//! Policy, in order:
+//! 1. **Group** the snapshot by [`BatchKey`], preserving snapshot order
+//!    within each key, and chunk each group into batches of at most
+//!    `max_batch`. Unlike the consecutive-run reference policy, grouping
+//!    is global over the window: interleaved key streams still amortize
+//!    one quantize+pack per batch.
+//! 2. **Score** each batch with the [`CostModel`]: one-time setup
+//!    (quantize+pack of Φ) amortized over the batch size, plus the
+//!    per-job iteration streaming cost, minus an age credit. Cheapest
+//!    per-job score dispatches first.
+//! 3. **Urgency**: a batch is urgent when it contains a High-priority
+//!    job (the submit-level priority must never lose to a cheaper
+//!    Normal batch) or a job that has waited at least `starvation_us`.
+//!    Urgent batches — and, for fairness, every earlier batch of the
+//!    same key — dispatch before all others, in snapshot order.
+//! 4. **Fairness**: within a `BatchKey`, batches always dispatch in
+//!    snapshot order, whatever the scores say — a job is never overtaken
+//!    by a later job with its key.
+
+use std::collections::VecDeque;
+
+use super::batcher::Batch;
+use super::job::{BatchKey, JobId, JobSpec};
+use crate::solver::SolverKind;
+
+/// One queued job as the scheduler sees it. `age_us` is the time since
+/// submission; the caller snapshots the clock once for the whole window,
+/// keeping `schedule` itself clock-free. `high` carries the submit-level
+/// [`super::queue::Priority`] so the cost order cannot invert it.
+#[derive(Debug, Clone)]
+pub struct QueuedJob {
+    pub id: JobId,
+    pub spec: JobSpec,
+    pub age_us: u64,
+    pub high: bool,
+}
+
+/// Pure cost model in abstract work units (bytes of operand traffic).
+/// Only relative magnitudes matter: the scheduler compares scores, it
+/// never converts them to seconds.
+#[derive(Debug, Clone, Copy)]
+pub struct CostModel {
+    /// Work to quantize+pack one entry of Φ (batch setup; dense engines
+    /// pay none). Charged once per batch, amortized over its size.
+    pub setup_per_entry: f64,
+    /// Iterations a typical job runs — scales the per-iteration stream
+    /// cost into a per-job cost.
+    pub nominal_iters: f64,
+    /// Work-unit credit per microsecond of age: aging jobs pull their
+    /// batch forward even before the starvation bound trips.
+    pub age_credit_per_us: f64,
+}
+
+impl Default for CostModel {
+    fn default() -> Self {
+        Self { setup_per_entry: 2.0, nominal_iters: 64.0, age_credit_per_us: 1.0 }
+    }
+}
+
+impl CostModel {
+    /// Bits of Φ streamed per entry per iteration: the quantized width
+    /// for QNIHT jobs, f32 for the dense algorithms.
+    fn stream_bits(spec: &JobSpec) -> f64 {
+        match spec.solver {
+            SolverKind::Qniht { bits_phi, .. } => bits_phi as f64,
+            _ => 32.0,
+        }
+    }
+
+    /// One-time batch setup: the quantize+pack pass over Φ that the
+    /// batched engine path amortizes (see `NativeQuantEngine::solve_batch`).
+    pub fn setup_cost(&self, spec: &JobSpec) -> f64 {
+        if spec.engine.is_quantized() {
+            self.setup_per_entry * (spec.problem.phi.rows * spec.problem.phi.cols) as f64
+        } else {
+            0.0
+        }
+    }
+
+    /// Per-job cost: operand bytes streamed per iteration × nominal
+    /// iteration count.
+    pub fn job_cost(&self, spec: &JobSpec) -> f64 {
+        let (m, n) = (spec.problem.phi.rows as f64, spec.problem.phi.cols as f64);
+        m * n * Self::stream_bits(spec) / 8.0 * self.nominal_iters
+    }
+
+    /// Amortized per-job score of a (key-homogeneous) batch; lower
+    /// dispatches first. Bigger batches amortize setup better, lower
+    /// precision streams fewer bytes, older jobs earn credit.
+    pub fn batch_score(&self, jobs: &[&QueuedJob]) -> f64 {
+        let lead = &jobs[0].spec;
+        let max_age = jobs.iter().map(|j| j.age_us).max().unwrap_or(0);
+        self.setup_cost(lead) / jobs.len() as f64 + self.job_cost(lead)
+            - self.age_credit_per_us * max_age as f64
+    }
+}
+
+/// Scheduler knobs (the service derives them from
+/// [`crate::config::ServiceConfig`]).
+#[derive(Debug, Clone, Copy)]
+pub struct SchedConfig {
+    pub max_batch: usize,
+    /// Age (µs) at which a job's batch becomes overdue and jumps the
+    /// cost order.
+    pub starvation_us: u64,
+}
+
+impl Default for SchedConfig {
+    fn default() -> Self {
+        Self { max_batch: 8, starvation_us: 250_000 }
+    }
+}
+
+/// A scored batch candidate during scheduling.
+struct Chunk {
+    key: BatchKey,
+    /// Snapshot index of the chunk's first (oldest-position) job.
+    min_index: usize,
+    jobs: Vec<(usize, QueuedJob)>,
+    score: f64,
+    /// High-priority member or starvation bound tripped: jumps the cost
+    /// order.
+    urgent: bool,
+}
+
+/// The policy: snapshot → batches in dispatch order. Every job appears
+/// in exactly one batch; batches are key-homogeneous and at most
+/// `max_batch` long; the ordering invariants are documented above and
+/// pinned by `tests/coordinator_props.rs`.
+pub fn schedule(snapshot: Vec<QueuedJob>, cfg: &SchedConfig, cost: &CostModel) -> Vec<Batch> {
+    assert!(cfg.max_batch >= 1);
+
+    // 1. Group by key (first-seen order), preserving snapshot order
+    //    within each group.
+    let mut groups: Vec<(BatchKey, Vec<(usize, QueuedJob)>)> = Vec::new();
+    for (idx, job) in snapshot.into_iter().enumerate() {
+        let key = job.spec.batch_key();
+        match groups.iter_mut().find(|(k, _)| *k == key) {
+            Some((_, g)) => g.push((idx, job)),
+            None => groups.push((key, vec![(idx, job)])),
+        }
+    }
+
+    // 2. Chunk + score. Urgency is promoted backwards within a key: if
+    //    chunk k is urgent, every earlier chunk of that key must
+    //    dispatch before it anyway (fairness), so they are urgent too —
+    //    keeping each key's urgent set a prefix of its chunks.
+    let mut urgent: Vec<Chunk> = Vec::new();
+    let mut rest: Vec<Chunk> = Vec::new();
+    for (key, mut jobs) in groups {
+        let mut key_chunks: Vec<Chunk> = Vec::new();
+        while !jobs.is_empty() {
+            let tail = jobs.split_off(jobs.len().min(cfg.max_batch));
+            let chunk_jobs = std::mem::replace(&mut jobs, tail);
+            let refs: Vec<&QueuedJob> = chunk_jobs.iter().map(|(_, j)| j).collect();
+            key_chunks.push(Chunk {
+                key,
+                min_index: chunk_jobs[0].0,
+                score: cost.batch_score(&refs),
+                urgent: chunk_jobs
+                    .iter()
+                    .any(|(_, j)| j.high || j.age_us >= cfg.starvation_us),
+                jobs: chunk_jobs,
+            });
+        }
+        if let Some(last) = key_chunks.iter().rposition(|c| c.urgent) {
+            for c in &mut key_chunks[..last] {
+                c.urgent = true;
+            }
+        }
+        for c in key_chunks {
+            if c.urgent {
+                urgent.push(c);
+            } else {
+                rest.push(c);
+            }
+        }
+    }
+
+    // 3. Urgent batches first, in snapshot order (within a key this IS
+    //    chunk order, so no fairness fix-up is needed here; High jobs
+    //    occupy the snapshot prefix because the queue pops them first,
+    //    so this order also respects submit priority).
+    urgent.sort_by_key(|c| c.min_index);
+
+    // 4. The remainder dispatches cheapest-first (ties broken by snapshot
+    //    position — fully deterministic)...
+    rest.sort_by(|a, b| a.score.total_cmp(&b.score).then(a.min_index.cmp(&b.min_index)));
+    // ...with a fairness fix-up: same-key chunks keep snapshot order by
+    // reassigning each key's chunks, oldest-first, to the positions the
+    // cost order gave that key.
+    let key_seq: Vec<BatchKey> = rest.iter().map(|c| c.key).collect();
+    let mut queues: Vec<(BatchKey, VecDeque<Chunk>)> = Vec::new();
+    for c in rest {
+        match queues.iter_mut().find(|(k, _)| *k == c.key) {
+            Some((_, q)) => q.push_back(c),
+            None => queues.push((c.key, VecDeque::from([c]))),
+        }
+    }
+    for (_, q) in &mut queues {
+        q.make_contiguous().sort_by_key(|c| c.min_index);
+    }
+
+    let ordered = urgent.into_iter().chain(key_seq.into_iter().map(|key| {
+        let (_, q) = queues.iter_mut().find(|(k, _)| *k == key).expect("key was enqueued");
+        q.pop_front().expect("one chunk per key occurrence")
+    }));
+    ordered
+        .map(|c| Batch {
+            key: c.key,
+            jobs: c.jobs.into_iter().map(|(_, j)| (j.id, j.spec)).collect(),
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::EngineKind;
+    use crate::coordinator::job::ProblemHandle;
+    use crate::linalg::Mat;
+    use std::sync::Arc;
+
+    fn job(id: JobId, phi: &Arc<Mat>, bits: u8, age_us: u64) -> QueuedJob {
+        let spec = JobSpec::builder(ProblemHandle::new(phi.clone()), vec![0.0; phi.rows], 2)
+            .bits(bits, 8)
+            .engine(EngineKind::NativeQuant)
+            .seed(id)
+            .build();
+        QueuedJob { id, spec, age_us, high: false }
+    }
+
+    fn ids(batches: &[Batch]) -> Vec<Vec<JobId>> {
+        batches.iter().map(|b| b.jobs.iter().map(|(i, _)| *i).collect()).collect()
+    }
+
+    #[test]
+    fn groups_interleaved_keys_globally() {
+        let phi = Arc::new(Mat::zeros(4, 8));
+        // 2-bit and 8-bit jobs interleaved: the FIFO-run policy would form
+        // four singleton batches; global grouping forms two pairs.
+        let snapshot =
+            vec![job(0, &phi, 2, 0), job(1, &phi, 8, 0), job(2, &phi, 2, 0), job(3, &phi, 8, 0)];
+        let batches = schedule(snapshot, &SchedConfig::default(), &CostModel::default());
+        assert_eq!(batches.len(), 2);
+        // 2-bit streams fewer bytes per iteration → cheaper → first.
+        assert_eq!(ids(&batches), vec![vec![0, 2], vec![1, 3]]);
+    }
+
+    #[test]
+    fn bigger_batches_amortize_and_dispatch_first() {
+        let phi_a = Arc::new(Mat::zeros(4, 8));
+        let phi_b = Arc::new(Mat::zeros(4, 8));
+        let cm = CostModel { age_credit_per_us: 0.0, ..CostModel::default() };
+        // Same precision and ages; the keys differ only by Φ identity.
+        // The pair amortizes its quantize+pack over two jobs, so it
+        // scores cheaper than the singleton that arrived first.
+        let snapshot = vec![job(0, &phi_b, 4, 0), job(1, &phi_a, 4, 0), job(2, &phi_a, 4, 0)];
+        let batches = schedule(snapshot, &SchedConfig::default(), &cm);
+        assert_eq!(ids(&batches), vec![vec![1, 2], vec![0]]);
+    }
+
+    #[test]
+    fn starvation_bound_jumps_the_cost_order() {
+        let phi = Arc::new(Mat::zeros(4, 8));
+        let cfg = SchedConfig { max_batch: 8, starvation_us: 1_000_000 };
+        // The 8-bit job is ancient; the cheap young 2-bit jobs must wait.
+        let snapshot =
+            vec![job(0, &phi, 8, 2_000_000), job(1, &phi, 2, 0), job(2, &phi, 2, 0)];
+        let batches = schedule(snapshot, &cfg, &CostModel::default());
+        assert_eq!(ids(&batches), vec![vec![0], vec![1, 2]]);
+    }
+
+    #[test]
+    fn high_priority_jumps_the_cost_order() {
+        let phi = Arc::new(Mat::zeros(4, 8));
+        // An expensive young 8-bit HIGH job must not lose to the cheaper
+        // Normal 2-bit job behind it in the snapshot.
+        let mut snapshot = vec![job(0, &phi, 8, 0), job(1, &phi, 2, 0)];
+        snapshot[0].high = true;
+        let batches = schedule(snapshot, &SchedConfig::default(), &CostModel::default());
+        assert_eq!(ids(&batches), vec![vec![0], vec![1]]);
+    }
+
+    #[test]
+    fn within_key_snapshot_order_is_never_inverted() {
+        let phi = Arc::new(Mat::zeros(4, 8));
+        let cfg = SchedConfig { max_batch: 2, starvation_us: u64::MAX };
+        // Adversarial ages: the LATER chunk of the key holds the oldest
+        // job, so raw scores would dispatch it first. Fairness wins.
+        let snapshot = vec![
+            job(0, &phi, 2, 0),
+            job(1, &phi, 2, 0),
+            job(2, &phi, 2, 900_000),
+            job(3, &phi, 2, 900_000),
+        ];
+        let batches = schedule(snapshot, &cfg, &CostModel::default());
+        assert_eq!(ids(&batches), vec![vec![0, 1], vec![2, 3]]);
+    }
+
+    #[test]
+    fn empty_snapshot_schedules_nothing() {
+        assert!(schedule(vec![], &SchedConfig::default(), &CostModel::default()).is_empty());
+    }
+}

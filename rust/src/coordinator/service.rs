@@ -1,5 +1,15 @@
 //! The recovery service: router + worker pool + metrics.
 //!
+//! Specs are validated at submit time ([`JobSpec::validate`]); accepted
+//! jobs flow through the bounded queue to the workers. Each worker
+//! snapshots a window of queued jobs and hands it to the pure cost-aware
+//! scheduler ([`super::sched::schedule`]), which partitions it into
+//! key-homogeneous batches and orders them cheapest-first under an
+//! urgency bound (submit priority and the starvation limit). The worker
+//! executes only the head batch and returns the rest to the queue front,
+//! so heterogeneous windows spread across the pool instead of
+//! serializing behind one worker.
+//!
 //! Execution dispatch lives in the [`crate::solver`] engine registry —
 //! each worker thread owns an [`EngineRegistry`] (so XLA runtime caches
 //! and batch quantizations persist per worker) and submits whole batches
@@ -10,10 +20,11 @@
 
 use super::job::{JobId, JobOutcome, JobSpec, JobState, JobStore};
 use super::queue::{BoundedQueue, Priority, PushError};
+use super::sched::{self, CostModel, QueuedJob, SchedConfig};
 use crate::algorithms::{IterStat, ObserverSignal, SolveOptions};
 use crate::config::ServiceConfig;
 use crate::solver::{BatchObserver, EngineRegistry, SolveRequest};
-use anyhow::{anyhow, Result};
+use anyhow::{anyhow, Context, Result};
 use std::path::PathBuf;
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::Arc;
@@ -24,6 +35,9 @@ use std::time::Duration;
 pub struct ServiceMetrics {
     pub submitted: AtomicU64,
     pub rejected: AtomicU64,
+    /// Specs that failed [`JobSpec::validate`] at submit time (no job id
+    /// is allocated; not counted in `submitted`/`rejected`).
+    pub invalid: AtomicU64,
     pub completed: AtomicU64,
     pub failed: AtomicU64,
     /// Jobs that finished after a cancellation request (their partial
@@ -34,14 +48,18 @@ pub struct ServiceMetrics {
     pub batched_jobs: AtomicU64,
     /// Total solve wall time, microseconds.
     pub solve_us: AtomicU64,
+    /// Modeled device time accrued by performance-model engines
+    /// (`fpga-model`), microseconds.
+    pub modeled_us: AtomicU64,
 }
 
 impl ServiceMetrics {
     pub fn snapshot(&self) -> String {
         format!(
-            "submitted={} rejected={} completed={} failed={} cancelled={} batches={} mean_batch={:.2} solve_ms={}",
+            "submitted={} rejected={} invalid={} completed={} failed={} cancelled={} batches={} mean_batch={:.2} solve_ms={} modeled_ms={}",
             self.submitted.load(Ordering::Relaxed),
             self.rejected.load(Ordering::Relaxed),
+            self.invalid.load(Ordering::Relaxed),
             self.completed.load(Ordering::Relaxed),
             self.failed.load(Ordering::Relaxed),
             self.cancelled.load(Ordering::Relaxed),
@@ -49,13 +67,18 @@ impl ServiceMetrics {
             self.batched_jobs.load(Ordering::Relaxed) as f64
                 / self.batches.load(Ordering::Relaxed).max(1) as f64,
             self.solve_us.load(Ordering::Relaxed) / 1000,
+            self.modeled_us.load(Ordering::Relaxed) / 1000,
         )
     }
 }
 
+/// What flows through the queue: the job plus its submit priority (the
+/// scheduler must see the priority so the cost order cannot invert it).
+type QueueItem = (JobId, JobSpec, Priority);
+
 /// Handle to a running service.
 pub struct RecoveryService {
-    queue: Arc<BoundedQueue<(JobId, JobSpec)>>,
+    queue: Arc<BoundedQueue<QueueItem>>,
     store: Arc<JobStore>,
     metrics: Arc<ServiceMetrics>,
     workers: Vec<std::thread::JoinHandle<()>>,
@@ -89,17 +112,21 @@ impl RecoveryService {
         &self.solver
     }
 
-    /// Submit a job; `Err` is the backpressure signal (queue full).
+    /// Submit a job; `Err` is either an invalid spec (rejected before a
+    /// job id is allocated) or the backpressure signal (queue full).
     pub fn submit(&self, spec: JobSpec) -> Result<JobId> {
         self.submit_prio(spec, Priority::Normal)
     }
 
     pub fn submit_prio(&self, spec: JobSpec, prio: Priority) -> Result<JobId> {
-        anyhow::ensure!(spec.y.len() == spec.problem.phi.rows, "y length mismatch");
+        if let Err(e) = spec.validate() {
+            self.metrics.invalid.fetch_add(1, Ordering::Relaxed);
+            return Err(e).context("invalid job spec");
+        }
         let id = self.next_id.fetch_add(1, Ordering::Relaxed);
         self.store.insert_queued(id);
         self.metrics.submitted.fetch_add(1, Ordering::Relaxed);
-        match self.queue.try_push((id, spec), prio) {
+        match self.queue.try_push((id, spec, prio), prio) {
             Ok(()) => Ok(id),
             Err(PushError::Full(_)) => {
                 self.metrics.rejected.fetch_add(1, Ordering::Relaxed);
@@ -178,7 +205,7 @@ impl BatchObserver for ServiceObserver<'_> {
 
 fn worker_loop(
     cfg: ServiceConfig,
-    queue: Arc<BoundedQueue<(JobId, JobSpec)>>,
+    queue: Arc<BoundedQueue<QueueItem>>,
     store: Arc<JobStore>,
     metrics: Arc<ServiceMetrics>,
     solver: SolveOptions,
@@ -188,76 +215,125 @@ fn worker_loop(
     // per-worker because PJRT handles are not Send: each worker's XLA
     // engines own their runtime + compiled-executable cache.
     let mut registry = EngineRegistry::with_defaults(artifact_dir);
+    let cost = CostModel::default();
+    let sched_cfg = SchedConfig {
+        // Clamp: callers constructing ServiceConfig literally (benches,
+        // tests) may pass 0; the old loop tolerated it as "singletons".
+        max_batch: cfg.max_batch.max(1),
+        starvation_us: cfg.starvation_ms.saturating_mul(1000),
+    };
     loop {
-        let Some((lead_id, lead_spec)) = queue.pop_timeout(Duration::from_millis(50)) else {
+        let Some(lead) = queue.pop_timeout(Duration::from_millis(50)) else {
             if queue.is_closed() {
                 return;
             }
             continue;
         };
-        // Form a batch: drain compatible jobs from the queue front.
-        let key = lead_spec.batch_key();
-        let engine_name = lead_spec.engine.name();
-        let mut batch = vec![(lead_id, lead_spec)];
-        if cfg.max_batch > 1 {
-            // Small wait lets closely-spaced submissions coalesce.
-            if queue.is_empty() && cfg.max_wait_ms > 0 {
-                std::thread::sleep(Duration::from_millis(cfg.max_wait_ms));
-            }
-            batch.extend(queue.drain_matching(cfg.max_batch - 1, |(_, s)| s.batch_key() == key));
+        // Small wait lets closely-spaced submissions coalesce.
+        if cfg.max_batch > 1 && queue.is_empty() && cfg.max_wait_ms > 0 {
+            std::thread::sleep(Duration::from_millis(cfg.max_wait_ms));
         }
-        metrics.batches.fetch_add(1, Ordering::Relaxed);
-        metrics.batched_jobs.fetch_add(batch.len() as u64, Ordering::Relaxed);
-
-        let t0 = std::time::Instant::now();
-        let ids: Vec<JobId> = batch.iter().map(|(id, _)| *id).collect();
-        let reqs: Vec<SolveRequest> =
-            batch.into_iter().map(|(_, spec)| spec.into_request()).collect();
-        let mut observer =
-            ServiceObserver { store: &*store, ids: &ids, started: vec![false; ids.len()] };
-        match registry.solve_batch(engine_name, &reqs, &solver, &mut observer) {
-            Ok(results) => {
-                for (&id, result) in ids.iter().zip(results) {
-                    // Jobs that terminated before their first observer
-                    // callback (validation errors, engine rejections,
-                    // max_iters = 0) are still Queued; the state machine
-                    // requires passing through Running.
-                    if store.state(id) == Some(JobState::Queued) {
-                        store.transition(id, JobState::Running);
-                    }
-                    // Count before completing: `wait` returns as soon as
-                    // the store transitions, so the counter must already
-                    // be visible then.
-                    match result {
-                        Ok(res) => {
-                            if store.cancel_requested(id) {
-                                metrics.cancelled.fetch_add(1, Ordering::Relaxed);
-                            }
-                            metrics.completed.fetch_add(1, Ordering::Relaxed);
-                            store.complete(id, res);
-                        }
-                        Err(e) => {
-                            metrics.failed.fetch_add(1, Ordering::Relaxed);
-                            store.fail(id, format!("{e:#}"));
-                        }
-                    }
-                }
-            }
-            Err(e) => {
-                // Unknown engine: fail the whole batch.
-                for &id in &ids {
-                    if store.state(id) == Some(JobState::Queued) {
-                        store.transition(id, JobState::Running);
-                    }
-                    metrics.failed.fetch_add(1, Ordering::Relaxed);
-                    store.fail(id, format!("{e:#}"));
-                }
-            }
+        // Snapshot a scheduling window and hand it to the pure policy:
+        // batches come back key-homogeneous, cheapest-first under the
+        // urgency (priority/starvation) bound, FIFO within each key.
+        let window = cfg.sched_window.max(sched_cfg.max_batch);
+        let mut items = vec![lead];
+        items.extend(queue.drain_upto(window - 1));
+        let index_of: std::collections::HashMap<JobId, usize> =
+            items.iter().enumerate().map(|(i, (id, _, _))| (*id, i)).collect();
+        let prio_of: std::collections::HashMap<JobId, Priority> =
+            items.iter().map(|(id, _, p)| (*id, *p)).collect();
+        let snapshot: Vec<QueuedJob> = items
+            .into_iter()
+            .map(|(id, spec, prio)| QueuedJob {
+                id,
+                spec,
+                age_us: store.queued_age_us(id),
+                high: prio == Priority::High,
+            })
+            .collect();
+        let mut batches = sched::schedule(snapshot, &sched_cfg, &cost);
+        if batches.is_empty() {
+            continue;
         }
-        metrics
-            .solve_us
-            .fetch_add(t0.elapsed().as_micros() as u64, Ordering::Relaxed);
+        // Execute only the HEAD of the dispatch order and give the rest
+        // back to the queue front (original order, original classes):
+        // other workers pick them up instead of idling behind this one,
+        // and the next snapshot re-scores them with their grown ages.
+        let head = batches.remove(0);
+        let mut rest: Vec<(JobId, JobSpec)> =
+            batches.into_iter().flat_map(|b| b.jobs).collect();
+        rest.sort_by_key(|(id, _)| index_of[id]);
+        let give_back: Vec<QueueItem> =
+            rest.into_iter().map(|(id, spec)| (id, spec, prio_of[&id])).collect();
+        queue.unpop(give_back, |(_, _, p)| *p);
+        run_batch(head, &mut registry, &store, &metrics, &solver);
     }
+}
+
+/// Execute one scheduled batch on this worker's registry, stream results
+/// into the store and keep the counters honest.
+fn run_batch(
+    batch: super::batcher::Batch,
+    registry: &mut EngineRegistry,
+    store: &JobStore,
+    metrics: &ServiceMetrics,
+    solver: &SolveOptions,
+) {
+    let engine_name = batch.key.engine.name();
+    metrics.batches.fetch_add(1, Ordering::Relaxed);
+    metrics.batched_jobs.fetch_add(batch.len() as u64, Ordering::Relaxed);
+
+    let t0 = std::time::Instant::now();
+    let modeled_before = registry.metrics(engine_name).map(|m| m.modeled_time_us).unwrap_or(0);
+    let ids: Vec<JobId> = batch.jobs.iter().map(|(id, _)| *id).collect();
+    let reqs: Vec<SolveRequest> =
+        batch.jobs.into_iter().map(|(_, spec)| spec.into_request()).collect();
+    let mut observer = ServiceObserver { store, ids: &ids, started: vec![false; ids.len()] };
+    match registry.solve_batch(engine_name, &reqs, solver, &mut observer) {
+        Ok(results) => {
+            for (&id, result) in ids.iter().zip(results) {
+                // Jobs that terminated before their first observer
+                // callback (validation errors, engine rejections,
+                // max_iters = 0) are still Queued; the state machine
+                // requires passing through Running.
+                if store.state(id) == Some(JobState::Queued) {
+                    store.transition(id, JobState::Running);
+                }
+                // Count before completing: `wait` returns as soon as
+                // the store transitions, so the counter must already
+                // be visible then.
+                match result {
+                    Ok(res) => {
+                        if store.cancel_requested(id) {
+                            metrics.cancelled.fetch_add(1, Ordering::Relaxed);
+                        }
+                        metrics.completed.fetch_add(1, Ordering::Relaxed);
+                        store.complete(id, res);
+                    }
+                    Err(e) => {
+                        metrics.failed.fetch_add(1, Ordering::Relaxed);
+                        store.fail(id, format!("{e:#}"));
+                    }
+                }
+            }
+        }
+        Err(e) => {
+            // Unknown engine: fail the whole batch.
+            for &id in &ids {
+                if store.state(id) == Some(JobState::Queued) {
+                    store.transition(id, JobState::Running);
+                }
+                metrics.failed.fetch_add(1, Ordering::Relaxed);
+                store.fail(id, format!("{e:#}"));
+            }
+        }
+    }
+    let modeled_after = registry.metrics(engine_name).map(|m| m.modeled_time_us).unwrap_or(0);
+    metrics
+        .modeled_us
+        .fetch_add(modeled_after.saturating_sub(modeled_before), Ordering::Relaxed);
+    metrics.solve_us.fetch_add(t0.elapsed().as_micros() as u64, Ordering::Relaxed);
 }
 
 #[cfg(test)]
@@ -267,6 +343,7 @@ mod tests {
     use crate::coordinator::job::ProblemHandle;
     use crate::linalg::Mat;
     use crate::rng::XorShift128Plus;
+    use crate::solver::SolverKind;
 
     fn planted(m: usize, n: usize, s: usize, seed: u64) -> (Arc<Mat>, Vec<f32>, Vec<f32>) {
         let mut rng = XorShift128Plus::new(seed);
@@ -281,7 +358,13 @@ mod tests {
 
     fn svc(workers: usize) -> RecoveryService {
         RecoveryService::start(
-            ServiceConfig { workers, queue_capacity: 64, max_batch: 4, max_wait_ms: 0 },
+            ServiceConfig {
+                workers,
+                queue_capacity: 64,
+                max_batch: 4,
+                max_wait_ms: 0,
+                ..Default::default()
+            },
             SolveOptions::default(),
             PathBuf::from("artifacts"),
         )
@@ -292,15 +375,7 @@ mod tests {
         let service = svc(1);
         let (phi, y, x_true) = planted(64, 128, 4, 1);
         let id = service
-            .submit(JobSpec {
-                problem: ProblemHandle::new(phi),
-                y,
-                s: 4,
-                bits_phi: 8,
-                bits_y: 8,
-                engine: EngineKind::NativeQuant,
-                seed: 1,
-            })
+            .submit(JobSpec::builder(ProblemHandle::new(phi), y, 4).bits(8, 8).seed(1).build())
             .unwrap();
         let out = service.wait(id, Duration::from_secs(30)).expect("finishes");
         assert_eq!(out.state, JobState::Done);
@@ -323,15 +398,12 @@ mod tests {
                 }
                 let y = phi.matvec(&x);
                 service
-                    .submit(JobSpec {
-                        problem: ProblemHandle::new(phi.clone()),
-                        y,
-                        s: 3,
-                        bits_phi: 8,
-                        bits_y: 8,
-                        engine: EngineKind::NativeQuant,
-                        seed: k,
-                    })
+                    .submit(
+                        JobSpec::builder(ProblemHandle::new(phi.clone()), y, 3)
+                            .bits(8, 8)
+                            .seed(k)
+                            .build(),
+                    )
                     .unwrap()
             })
             .collect();
@@ -345,23 +417,84 @@ mod tests {
     }
 
     #[test]
+    fn mixed_solver_and_engine_stream_completes() {
+        // A heterogeneous window: the scheduler must partition by key
+        // (solver × engine × bits), dispatch every batch, and every job
+        // must finish — including baselines and the fpga-model engine.
+        let service = svc(2);
+        let (phi, y, _) = planted(64, 128, 4, 8);
+        let specs = [
+            JobSpec::builder(ProblemHandle::new(phi.clone()), y.clone(), 4).bits(2, 8).build(),
+            JobSpec::builder(ProblemHandle::new(phi.clone()), y.clone(), 4)
+                .engine(EngineKind::NativeDense)
+                .solver(SolverKind::Cosamp)
+                .build(),
+            JobSpec::builder(ProblemHandle::new(phi.clone()), y.clone(), 4)
+                .engine(EngineKind::FpgaModel)
+                .bits(4, 8)
+                .build(),
+            JobSpec::builder(ProblemHandle::new(phi.clone()), y.clone(), 4)
+                .engine(EngineKind::NativeDense)
+                .solver(SolverKind::Iht)
+                .build(),
+            JobSpec::builder(ProblemHandle::new(phi.clone()), y.clone(), 4).bits(2, 8).build(),
+        ];
+        let ids: Vec<_> = specs.into_iter().map(|s| service.submit(s).unwrap()).collect();
+        for id in ids {
+            let out = service.wait(id, Duration::from_secs(60)).expect("finishes");
+            assert_eq!(out.state, JobState::Done, "{:?}", out.error);
+        }
+        assert!(
+            service.metrics().modeled_us.load(Ordering::Relaxed) > 0,
+            "the fpga-model job accrued modeled time into the service metrics"
+        );
+        service.shutdown();
+    }
+
+    #[test]
+    fn invalid_specs_rejected_at_submit() {
+        let service = svc(1);
+        let (phi, y, _) = planted(16, 32, 2, 9);
+        let ok = |phi: &Arc<crate::linalg::Mat>, y: &[f32]| {
+            JobSpec::builder(ProblemHandle::new(phi.clone()), y.to_vec(), 2).bits(2, 8)
+        };
+        // Non-packed bit width on a quantized engine.
+        let err = service.submit(ok(&phi, &y).bits(3, 8).build()).unwrap_err().to_string();
+        assert!(err.contains("invalid job spec"), "{err}");
+        // Zero sparsity.
+        assert!(service
+            .submit(JobSpec::builder(ProblemHandle::new(phi.clone()), y.clone(), 0).build())
+            .is_err());
+        // Observation length mismatch.
+        assert!(service.submit(ok(&phi, &y[..15]).build()).is_err());
+        // Solver incompatible with the engine.
+        assert!(service
+            .submit(ok(&phi, &y).solver(SolverKind::Cosamp).build())
+            .is_err());
+        let m = service.metrics();
+        assert_eq!(m.invalid.load(Ordering::Relaxed), 4);
+        assert_eq!(m.submitted.load(Ordering::Relaxed), 0, "no id was allocated");
+        service.shutdown();
+    }
+
+    #[test]
     fn backpressure_rejects_when_full() {
         // Tiny queue + zero workers processing slowly: fill it up.
         let service = RecoveryService::start(
-            ServiceConfig { workers: 1, queue_capacity: 2, max_batch: 1, max_wait_ms: 0 },
+            ServiceConfig {
+                workers: 1,
+                queue_capacity: 2,
+                max_batch: 1,
+                max_wait_ms: 0,
+                ..Default::default()
+            },
             SolveOptions { max_iters: 2000, ..Default::default() },
             PathBuf::from("artifacts"),
         );
         let (phi, y, _) = planted(128, 512, 8, 3);
-        let spec = JobSpec {
-            problem: ProblemHandle::new(phi),
-            y,
-            s: 8,
-            bits_phi: 8,
-            bits_y: 8,
-            engine: EngineKind::NativeDense,
-            seed: 0,
-        };
+        let spec = JobSpec::builder(ProblemHandle::new(phi), y, 8)
+            .engine(EngineKind::NativeDense)
+            .build();
         let mut rejected = 0;
         let mut ids = vec![];
         for _ in 0..40 {
@@ -382,15 +515,11 @@ mod tests {
         let service = svc(1);
         let (phi, y, x_true) = planted(64, 128, 4, 4);
         let id = service
-            .submit(JobSpec {
-                problem: ProblemHandle::new(phi),
-                y,
-                s: 4,
-                bits_phi: 8,
-                bits_y: 8,
-                engine: EngineKind::NativeDense,
-                seed: 0,
-            })
+            .submit(
+                JobSpec::builder(ProblemHandle::new(phi), y, 4)
+                    .engine(EngineKind::NativeDense)
+                    .build(),
+            )
             .unwrap();
         let out = service.wait(id, Duration::from_secs(30)).unwrap();
         let err = crate::metrics::recovery_error(&out.result.unwrap().x, &x_true);
@@ -407,7 +536,13 @@ mod tests {
     #[test]
     fn cancel_stops_long_jobs_and_delivers_partial_results() {
         let service = RecoveryService::start(
-            ServiceConfig { workers: 1, queue_capacity: 8, max_batch: 1, max_wait_ms: 0 },
+            ServiceConfig {
+                workers: 1,
+                queue_capacity: 8,
+                max_batch: 1,
+                max_wait_ms: 0,
+                ..Default::default()
+            },
             // tol = 0 + huge budget: without cancellation these jobs would
             // grind through 200k iterations each.
             SolveOptions::default().with_tol(0.0).with_max_iters(200_000),
@@ -417,15 +552,10 @@ mod tests {
         // cancelling right after submit always lands within the first
         // couple of iterations.
         let (phi, y, _) = planted(512, 4096, 8, 11);
-        let spec = JobSpec {
-            problem: ProblemHandle::new(phi),
-            y,
-            s: 8,
-            bits_phi: 8,
-            bits_y: 8,
-            engine: EngineKind::NativeDense,
-            seed: 1,
-        };
+        let spec = JobSpec::builder(ProblemHandle::new(phi), y, 8)
+            .engine(EngineKind::NativeDense)
+            .seed(1)
+            .build();
         let a = service.submit(spec.clone()).unwrap();
         let b = service.submit(spec).unwrap();
         assert!(service.cancel(a), "queued/running job accepts cancellation");

@@ -24,10 +24,22 @@
 //!   (name → engine factory) that owns execution dispatch, XLA runtime
 //!   caching and batched quantize+pack amortization. This is the only API
 //!   the serving layer, examples, repro figures and benches use.
-//! * **Serving** ([`coordinator`]): bounded queue with backpressure,
-//!   batch formation over batch-key-equal jobs, worker pool (one registry
-//!   per worker), per-job progress streaming and cancellation via
-//!   [`algorithms::IterObserver`].
+//! * **Serving** ([`coordinator`]): every [`solver::SolverKind`] is
+//!   servable — `JobSpec` carries an explicit solver selector (validated
+//!   at submit time) that is part of the batching key. Jobs flow through
+//!   a bounded queue with backpressure into worker-local snapshot
+//!   windows that the **cost-aware scheduler** ([`coordinator::sched`])
+//!   partitions into key-homogeneous batches and orders cheapest-first
+//!   (amortized quantize+pack setup + per-iteration stream cost − age
+//!   credit) under an urgency bound (submit priority + starvation
+//!   limit), with within-key FIFO fairness — a pure, property-tested
+//!   policy. Workers (one registry each) execute the head batch via
+//!   `solve_batch` and return the rest of the window to the queue;
+//!   per-job progress streaming and
+//!   cancellation ride on [`algorithms::IterObserver`]. The
+//!   [`solver::FpgaModelEngine`] (`"fpga-model"`) serves "what would
+//!   this job cost on the FPGA at 2/4/8 bits?" by billing modeled time
+//!   from [`perfmodel::fpga::FpgaModel`].
 //! * **Algorithms** ([`algorithms`]): the Algorithm-1 NIHT driver (generic
 //!   over [`algorithms::NihtKernel`]), the quantized kernels, and the
 //!   baselines — all observable per iteration.

@@ -18,7 +18,7 @@ use lpcs::linalg::Mat;
 use lpcs::metrics;
 use lpcs::rng::XorShift128Plus;
 use lpcs::runtime::Runtime;
-use lpcs::solver::{Problem, Recovery, SolverKind};
+use lpcs::solver::{Problem, Recovery};
 use lpcs::telescope::AstroProblem;
 use std::sync::Arc;
 use std::time::{Duration, Instant};
@@ -34,8 +34,9 @@ fn usage() -> ! {
     eprintln!(
         "usage: lpcs <solve|serve|repro|info> [args] [--key value ...]\n\
          \n\
-         lpcs solve [gaussian|astro] [--engine native-quant|native-dense|xla-quant|xla-dense]\n\
-         lpcs serve [--service.workers N]\n\
+         lpcs solve [gaussian|astro] [--engine native-quant|native-dense|xla-quant|xla-dense|fpga-model]\n\
+         \x20          [--algorithm niht|iht|qniht|cosamp|fista|auto]\n\
+         lpcs serve [--service.workers N] [--engine ...] [--algorithm ...]\n\
          lpcs repro <fig1|fig3|fig4|fig5|fig6|fig7|fig8|fig9|fig11|all> [--out_dir DIR]\n\
          lpcs info"
     );
@@ -125,16 +126,10 @@ fn cmd_solve(cfg: &LpcsConfig, kind: &str) -> Result<()> {
         phi.rows, phi.cols, cfg.engine.name(), cfg.quant.bits_phi, cfg.quant.bits_y
     );
 
-    // One facade call covers all four engines: the registry owns dispatch.
-    let solver = if cfg.engine.is_quantized() {
-        SolverKind::Qniht {
-            bits_phi: cfg.quant.bits_phi,
-            bits_y: cfg.quant.bits_y,
-            mode: cfg.quant.mode,
-        }
-    } else {
-        SolverKind::Niht
-    };
+    // One facade call covers every engine: the registry owns dispatch,
+    // and the config resolves the algorithm (`--algorithm`, or inferred
+    // from the engine).
+    let solver = cfg.solver_kind();
     let problem = Problem::from_mat(phi, y, s).with_shape_tag(tag);
     let report = Recovery::problem(problem)
         .solver(solver)
@@ -149,6 +144,12 @@ fn cmd_solve(cfg: &LpcsConfig, kind: &str) -> Result<()> {
         report.solver, report.engine, report.iterations, report.converged,
         report.shrink_events, report.wall, t_total.elapsed()
     );
+    if let Some(modeled) = report.modeled {
+        println!(
+            "fpga_modeled_time={modeled:.3?} ({} iterations at the §8 bandwidth-model rate)",
+            report.iterations
+        );
+    }
     println!(
         "recovery_error={:.6} support_recovery={:.4}",
         metrics::recovery_error(&report.x, &x_true),
@@ -158,6 +159,10 @@ fn cmd_solve(cfg: &LpcsConfig, kind: &str) -> Result<()> {
 }
 
 fn cmd_serve(cfg: &LpcsConfig) -> Result<()> {
+    // Fail fast with a config-level error: without this check every
+    // submission below would be rejected individually by
+    // `JobSpec::validate` (same shared bit-width gate).
+    cfg.solver_kind().check_packed_bits().context("serve")?;
     let jobs: usize =
         std::env::var("LPCS_SERVE_JOBS").ok().and_then(|v| v.parse().ok()).unwrap_or(32);
     println!(
@@ -180,15 +185,12 @@ fn cmd_serve(cfg: &LpcsConfig) -> Result<()> {
             x[i] = 1.0 + rng.uniform_f32();
         }
         let y = phi.matvec(&x);
-        match service.submit(JobSpec {
-            problem: ProblemHandle::new(phi.clone()),
-            y,
-            s,
-            bits_phi: cfg.quant.bits_phi,
-            bits_y: cfg.quant.bits_y,
-            engine: cfg.engine,
-            seed: j as u64,
-        }) {
+        let spec = JobSpec::builder(ProblemHandle::new(phi.clone()), y, s)
+            .engine(cfg.engine)
+            .solver(cfg.solver_kind())
+            .seed(j as u64)
+            .build();
+        match service.submit(spec) {
             Ok(id) => {
                 ids.push(id);
                 x_true_by_id.insert(id, x);

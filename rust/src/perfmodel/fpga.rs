@@ -8,6 +8,11 @@
 //! yields near-linear speedup in 32/b. This module implements exactly that
 //! model (plus the resource-cap refinement of §8.2) — the substitution for
 //! real FPGA hardware documented in DESIGN.md §6.
+//!
+//! The model is servable: the registry's `"fpga-model"` engine
+//! ([`crate::solver::FpgaModelEngine`]) runs the real quantized solve and
+//! bills `iterations × iteration_time` into its metrics, so FPGA cost
+//! queries go through the same facade/service paths as every other solve.
 
 /// Device parameters (defaults = the paper's platform).
 #[derive(Debug, Clone, Copy)]

@@ -1,0 +1,224 @@
+//! The `"fpga-model"` execution engine: the paper's quantized solve on
+//! the native kernels, with wall time charged from the §8 FPGA bandwidth
+//! model instead of the host clock.
+//!
+//! The engine wraps [`NativeQuantEngine`], so the *iterates* are
+//! bit-identical to `"native-quant"` for the same request (including the
+//! batched quantize+pack amortization); what changes is the cost
+//! accounting: every solve accrues `iterations ×`
+//! [`FpgaModel::iteration_time`] into the engine's
+//! [`EngineMetrics::modeled_time_us`], which [`super::Recovery`] surfaces
+//! as [`super::SolveReport::modeled`] and the coordinator aggregates into
+//! its service metrics. That makes "what would this job cost on the FPGA
+//! at 2/4/8 bits?" a servable query: submit the same job at several
+//! precisions and read the modeled times off the reports.
+
+use crate::algorithms::{IterObserver, SolveOptions, SolveResult};
+use crate::perfmodel::fpga::FpgaModel;
+use anyhow::{anyhow, Result};
+
+use super::registry::{
+    BatchObserver, Engine, EngineMetrics, IndexedObserver, NativeQuantEngine, SolveRequest,
+};
+use super::solvers::SolverKind;
+
+/// Quantized native execution billed at FPGA-model rates.
+#[derive(Default)]
+pub struct FpgaModelEngine {
+    model: FpgaModel,
+    inner: NativeQuantEngine,
+    /// Modeled device-seconds accrued across every solve (f64 so sub-µs
+    /// iterations of small problems are not rounded away per solve).
+    modeled_s: f64,
+}
+
+impl FpgaModelEngine {
+    /// An engine for a specific device (defaults = the paper's platform).
+    pub fn with_model(model: FpgaModel) -> Self {
+        Self { model, ..Self::default() }
+    }
+
+    pub fn model(&self) -> &FpgaModel {
+        &self.model
+    }
+
+    fn require_qniht(req: &SolveRequest) -> Result<()> {
+        match req.solver {
+            SolverKind::Qniht { .. } => Ok(()),
+            other => Err(anyhow!(
+                "engine 'fpga-model' runs solver 'qniht' only, got '{}'",
+                other.name()
+            )),
+        }
+    }
+
+    /// Accrue the modeled time of one completed solve: iterations × the
+    /// per-iteration streaming time T = size(Φ̂)/P, stretched by the §8.2
+    /// resource cap when the device cannot sustain P at this precision.
+    fn charge(&mut self, req: &SolveRequest, result: &Result<SolveResult>) {
+        let SolverKind::Qniht { bits_phi, bits_y, .. } = req.solver else { return };
+        let Ok(res) = result else { return };
+        let (m, n) = (req.problem.m(), req.problem.n());
+        let mut t = self.model.iteration_time(m, n, bits_phi as u32, bits_y as u32);
+        if !self.model.sustains_bandwidth(bits_phi as u32) {
+            // Multiplier-bound: the gradient unit needs `values_per_line`
+            // parallel MACs to keep up with memory; with fewer, the
+            // iteration stretches proportionally.
+            t *= self.model.values_per_line(bits_phi as u32) as f64
+                / (self.model.multipliers as f64).max(1.0);
+        }
+        self.modeled_s += t * res.iterations as f64;
+    }
+}
+
+impl Engine for FpgaModelEngine {
+    fn name(&self) -> &'static str {
+        "fpga-model"
+    }
+
+    fn solve(
+        &mut self,
+        req: &SolveRequest,
+        opts: &SolveOptions,
+        observer: &mut dyn IterObserver,
+    ) -> Result<SolveResult> {
+        Self::require_qniht(req)?;
+        let result = self.inner.solve(req, opts, observer);
+        self.charge(req, &result);
+        result
+    }
+
+    /// Batched path: identical to `"native-quant"` (one quantize+pack of
+    /// Φ per compatible batch), with each job's modeled time accrued
+    /// individually. A batch containing a non-QNIHT request falls back to
+    /// the per-job path so the mismatch error names this engine.
+    fn solve_batch(
+        &mut self,
+        reqs: &[SolveRequest],
+        opts: &SolveOptions,
+        observer: &mut dyn BatchObserver,
+    ) -> Vec<Result<SolveResult>> {
+        if reqs.iter().any(|r| Self::require_qniht(r).is_err()) {
+            return reqs
+                .iter()
+                .enumerate()
+                .map(|(i, r)| {
+                    Self::require_qniht(r)?;
+                    let mut obs = IndexedObserver { index: i, inner: &mut *observer };
+                    let result = self.inner.solve(r, opts, &mut obs);
+                    self.charge(r, &result);
+                    result
+                })
+                .collect();
+        }
+        let results = self.inner.solve_batch(reqs, opts, observer);
+        for (req, result) in reqs.iter().zip(&results) {
+            self.charge(req, result);
+        }
+        results
+    }
+
+    fn metrics(&self) -> EngineMetrics {
+        EngineMetrics {
+            modeled_time_us: (self.modeled_s * 1e6).round() as u64,
+            ..self.inner.metrics()
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::registry::NoopBatchObserver;
+    use super::super::Problem;
+    use super::*;
+    use crate::algorithms::NoopObserver;
+    use crate::linalg::Mat;
+    use crate::rng::XorShift128Plus;
+    use std::sync::Arc;
+
+    fn planted(m: usize, n: usize, s: usize, seed: u64) -> (Arc<Mat>, Vec<f32>) {
+        let mut rng = XorShift128Plus::new(seed);
+        let phi = Mat::from_fn(m, n, |_, _| rng.gaussian_f32() / (m as f32).sqrt());
+        let mut x = vec![0.0f32; n];
+        for i in rng.choose_k(n, s) {
+            x[i] = 2.0 * rng.gaussian_f32().signum();
+        }
+        let y = phi.matvec(&x);
+        (Arc::new(phi), y)
+    }
+
+    fn req(phi: &Arc<Mat>, y: &[f32], bits: u8, seed: u64) -> SolveRequest {
+        SolveRequest {
+            problem: Problem::new(phi.clone(), y.to_vec(), 4),
+            solver: SolverKind::qniht_fixed(bits, 8),
+            seed,
+        }
+    }
+
+    #[test]
+    fn iterates_match_native_quant_bit_for_bit() {
+        let (phi, y) = planted(64, 128, 4, 3);
+        let opts = SolveOptions::default();
+        let mut fpga = FpgaModelEngine::default();
+        let mut native = NativeQuantEngine::default();
+        let a = fpga.solve(&req(&phi, &y, 4, 7), &opts, &mut NoopObserver).unwrap();
+        let b = native.solve(&req(&phi, &y, 4, 7), &opts, &mut NoopObserver).unwrap();
+        assert_eq!(a.x, b.x, "same math, different clock");
+        assert_eq!(a.iterations, b.iterations);
+    }
+
+    #[test]
+    fn charges_iteration_time_per_iteration() {
+        let (phi, y) = planted(64, 128, 4, 4);
+        let mut e = FpgaModelEngine::default();
+        let r = e
+            .solve(&req(&phi, &y, 2, 1), &SolveOptions::default(), &mut NoopObserver)
+            .unwrap();
+        let expect_s =
+            FpgaModel::default().iteration_time(64, 128, 2, 8) * r.iterations as f64;
+        assert_eq!(e.metrics().modeled_time_us, (expect_s * 1e6).round() as u64);
+        assert!(e.metrics().modeled_time_us > 0, "modeled time accrued");
+    }
+
+    #[test]
+    fn lower_precision_costs_less_modeled_time_per_iteration() {
+        let (phi, y) = planted(64, 128, 4, 5);
+        let opts = SolveOptions::default();
+        let per_iter = |bits: u8| {
+            let mut e = FpgaModelEngine::default();
+            let r = e.solve(&req(&phi, &y, bits, 1), &opts, &mut NoopObserver).unwrap();
+            e.metrics().modeled_time_us as f64 / r.iterations as f64
+        };
+        let (t2, t8) = (per_iter(2), per_iter(8));
+        assert!(t2 < t8, "2-bit per-iteration must be cheaper: {t2} vs {t8}");
+    }
+
+    #[test]
+    fn batched_path_amortizes_and_charges_every_job() {
+        let (phi, y) = planted(64, 128, 4, 6);
+        let mut e = FpgaModelEngine::default();
+        let reqs = [req(&phi, &y, 8, 1), req(&phi, &y, 8, 2), req(&phi, &y, 8, 3)];
+        let results = e.solve_batch(&reqs, &SolveOptions::default(), &mut NoopBatchObserver);
+        assert!(results.iter().all(|r| r.is_ok()));
+        let m = e.metrics();
+        assert_eq!(m.phi_quantizations, 1, "one quantize+pack for the batch");
+        assert_eq!(m.solves, 3);
+        assert!(m.modeled_time_us > 0);
+    }
+
+    #[test]
+    fn rejects_dense_solvers() {
+        let (phi, y) = planted(16, 32, 2, 7);
+        let mut e = FpgaModelEngine::default();
+        let bad = SolveRequest {
+            problem: Problem::new(phi, y, 2),
+            solver: SolverKind::Niht,
+            seed: 0,
+        };
+        let err = e
+            .solve(&bad, &SolveOptions::default(), &mut NoopObserver)
+            .unwrap_err()
+            .to_string();
+        assert!(err.contains("fpga-model"), "{err}");
+    }
+}

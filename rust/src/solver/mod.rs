@@ -11,7 +11,9 @@
 //!   (Fixed/Fresh), CoSaMP, FISTA, or a caller-supplied implementation.
 //! * [`EngineRegistry`] / [`Engine`] — the execution substrate: dense f32
 //!   native, quantized native (with batched quantize+pack amortization),
-//!   or the PJRT/XLA artifact engines. Name → factory, so custom engines
+//!   the PJRT/XLA artifact engines, or [`FpgaModelEngine`]
+//!   (`"fpga-model"`: the same quantized solve billed at the paper's §8
+//!   FPGA bandwidth-model rates). Name → factory, so custom engines
 //!   register without serving-layer changes.
 //! * [`Recovery`] — the builder tying it together.
 //! * [`SolveReport`] — the unified result (iterate, convergence,
@@ -47,17 +49,20 @@
 //! # let _ = report;
 //! ```
 
+pub mod fpga;
 pub mod problem;
 pub mod registry;
 pub mod solvers;
 
+pub use fpga::FpgaModelEngine;
 pub use problem::{MeasurementOp, OpKernel, Problem};
 pub use registry::{
     BatchObserver, Engine, EngineContext, EngineFactory, EngineMetrics, EngineRegistry,
     NoopBatchObserver, SolveRequest,
 };
 pub use solvers::{
-    CosampSolver, FistaSolver, IhtSolver, NihtSolver, QnihtSolver, SolverKind, SparseSolver,
+    CosampSolver, FistaSolver, IhtSolver, NihtSolver, QnihtSolver, SolverKey, SolverKind,
+    SparseSolver,
 };
 
 use crate::algorithms::{IterObserver, IterStat, ObserverSignal, SolveOptions, SolveResult};
@@ -85,6 +90,10 @@ pub struct SolveReport {
     pub engine: String,
     /// Wall time of the solve (excluding problem construction).
     pub wall: Duration,
+    /// Modeled device time, when the engine bills one (the
+    /// `"fpga-model"` engine charges `iterations ×`
+    /// [`crate::perfmodel::fpga::FpgaModel::iteration_time`]).
+    pub modeled: Option<Duration>,
 }
 
 impl SolveReport {
@@ -105,6 +114,7 @@ impl SolveReport {
             solver: solver.into(),
             engine: engine.into(),
             wall,
+            modeled: None,
         }
     }
 }
@@ -129,6 +139,16 @@ impl IterObserver for StopTracker<'_> {
     }
 }
 
+/// Adapts a scalar [`IterObserver`] to the [`BatchObserver`] interface a
+/// singleton `solve_batch` dispatch takes (the batch index is always 0).
+struct ScalarBatchObserver<'a>(&'a mut dyn IterObserver);
+
+impl BatchObserver for ScalarBatchObserver<'_> {
+    fn on_iteration(&mut self, _job_index: usize, stat: &IterStat) -> ObserverSignal {
+        self.0.on_iteration(stat)
+    }
+}
+
 /// Builder for one recovery: problem → solver → engine → observer → run.
 ///
 /// Defaults: solver [`SolverKind::Niht`], the solver's natural engine
@@ -145,6 +165,7 @@ pub struct Recovery<'a> {
     artifact_dir: PathBuf,
     observer: Option<&'a mut dyn IterObserver>,
     registry: Option<&'a mut EngineRegistry>,
+    batched: bool,
 }
 
 impl<'a> Recovery<'a> {
@@ -158,6 +179,7 @@ impl<'a> Recovery<'a> {
             artifact_dir: PathBuf::from("artifacts"),
             observer: None,
             registry: None,
+            batched: false,
         }
     }
 
@@ -207,6 +229,19 @@ impl<'a> Recovery<'a> {
         self
     }
 
+    /// Dispatch through the engine's *batched* path (a singleton batch),
+    /// exactly as [`crate::coordinator::RecoveryService`] does. For the
+    /// quantized engines this takes the amortized quantize+pack path with
+    /// its canonical per-(Φ, bits) quantization seed, so the result is
+    /// bit-identical to what the service returns for the same spec — and
+    /// (deliberately) NOT to the direct `qniht()` kernel call, which
+    /// seeds the Φ quantization from the job seed. The conformance matrix
+    /// in `tests/service_matrix.rs` pins the two paths together.
+    pub fn service_dispatch(mut self) -> Self {
+        self.batched = true;
+        self
+    }
+
     /// Execute and return the unified report.
     pub fn run(self) -> Result<SolveReport> {
         let engine_name = self
@@ -214,19 +249,42 @@ impl<'a> Recovery<'a> {
             .unwrap_or_else(|| self.solver.default_engine().name().to_string());
         let req = SolveRequest { problem: self.problem, solver: self.solver, seed: self.seed };
         let mut tracker = StopTracker { inner: self.observer, stopped: false };
-        let t0 = std::time::Instant::now();
-        let result = match self.registry {
-            Some(registry) => registry.solve(&engine_name, &req, &self.opts, &mut tracker)?,
-            None => EngineRegistry::with_defaults(self.artifact_dir)
-                .solve(&engine_name, &req, &self.opts, &mut tracker)?,
+        let mut owned;
+        let registry = match self.registry {
+            Some(registry) => registry,
+            None => {
+                owned = EngineRegistry::with_defaults(self.artifact_dir);
+                &mut owned
+            }
         };
-        Ok(SolveReport::from_result(
+        let modeled_before =
+            registry.metrics(&engine_name).map(|m| m.modeled_time_us).unwrap_or(0);
+        let t0 = std::time::Instant::now();
+        let result = if self.batched {
+            let mut results = registry.solve_batch(
+                &engine_name,
+                std::slice::from_ref(&req),
+                &self.opts,
+                &mut ScalarBatchObserver(&mut tracker),
+            )?;
+            results.pop().expect("one request yields one result")?
+        } else {
+            registry.solve(&engine_name, &req, &self.opts, &mut tracker)?
+        };
+        let wall = t0.elapsed();
+        let modeled_after =
+            registry.metrics(&engine_name).map(|m| m.modeled_time_us).unwrap_or(0);
+        let mut report = SolveReport::from_result(
             result,
             self.solver.name(),
             engine_name,
             tracker.stopped,
-            t0.elapsed(),
-        ))
+            wall,
+        );
+        if modeled_after > modeled_before {
+            report.modeled = Some(Duration::from_micros(modeled_after - modeled_before));
+        }
+        Ok(report)
     }
 }
 
@@ -276,6 +334,21 @@ mod tests {
     fn invalid_problem_is_rejected_before_dispatch() {
         let problem = Problem::from_mat(Mat::zeros(4, 8), vec![0.0; 3], 2);
         assert!(Recovery::problem(problem).run().is_err());
+    }
+
+    #[test]
+    fn fpga_model_engine_reports_modeled_time() {
+        let (problem, x_true) = planted(96, 192, 5, 6);
+        let report = Recovery::problem(problem)
+            .solver(SolverKind::qniht_fixed(8, 8))
+            .engine(EngineKind::FpgaModel)
+            .seed(1)
+            .run()
+            .unwrap();
+        assert_eq!(report.engine, "fpga-model");
+        let modeled = report.modeled.expect("fpga-model bills modeled time");
+        assert!(modeled.as_micros() > 0);
+        assert_eq!(support_of(&report.x), support_of(&x_true));
     }
 
     #[test]

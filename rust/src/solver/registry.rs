@@ -38,6 +38,9 @@ pub struct EngineMetrics {
     pub amortized_batches: u64,
     /// Quantization passes over Φ (the quantity batching amortizes).
     pub phi_quantizations: u64,
+    /// Modeled device time accrued, µs (performance-model engines such as
+    /// `"fpga-model"`; 0 for engines billed on the host clock).
+    pub modeled_time_us: u64,
 }
 
 /// Observer for a batched solve: `job_index` identifies the request
@@ -59,9 +62,9 @@ impl BatchObserver for NoopBatchObserver {
 
 /// Adapts one slot of a [`BatchObserver`] to the scalar [`IterObserver`]
 /// the solver drivers take.
-struct IndexedObserver<'a> {
-    index: usize,
-    inner: &'a mut dyn BatchObserver,
+pub(super) struct IndexedObserver<'a> {
+    pub(super) index: usize,
+    pub(super) inner: &'a mut dyn BatchObserver,
 }
 
 impl IterObserver for IndexedObserver<'_> {
@@ -149,6 +152,12 @@ impl EngineRegistry {
             EngineKind::XlaDense.name(),
             Box::new(|ctx: &EngineContext| {
                 Box::new(XlaDenseEngine { artifact_dir: ctx.artifact_dir.clone(), rt: None, metrics: EngineMetrics::default() }) as Box<dyn Engine>
+            }),
+        );
+        reg.register(
+            EngineKind::FpgaModel.name(),
+            Box::new(|_: &EngineContext| {
+                Box::new(super::fpga::FpgaModelEngine::default()) as Box<dyn Engine>
             }),
         );
         reg
@@ -474,9 +483,13 @@ mod tests {
     fn default_registry_knows_all_engine_kinds() {
         let reg = EngineRegistry::with_defaults(PathBuf::from("artifacts"));
         let names = reg.names();
-        for kind in
-            [EngineKind::NativeDense, EngineKind::NativeQuant, EngineKind::XlaQuant, EngineKind::XlaDense]
-        {
+        for kind in [
+            EngineKind::NativeDense,
+            EngineKind::NativeQuant,
+            EngineKind::XlaQuant,
+            EngineKind::XlaDense,
+            EngineKind::FpgaModel,
+        ] {
             assert!(names.iter().any(|n| n == kind.name()), "missing {}", kind.name());
         }
     }

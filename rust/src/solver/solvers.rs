@@ -75,6 +75,63 @@ impl SolverKind {
             Self::Fista { lambda, debias } => Box::new(FistaSolver { lambda, debias }),
         }
     }
+
+    /// Hashable fingerprint of this kind (f32 parameters bit-cast) — what
+    /// the coordinator folds into its `BatchKey`.
+    pub fn key(&self) -> SolverKey {
+        match *self {
+            Self::Niht => SolverKey::Niht,
+            Self::Iht => SolverKey::Iht,
+            Self::Qniht { bits_phi, bits_y, mode } => SolverKey::Qniht { bits_phi, bits_y, mode },
+            Self::Cosamp => SolverKey::Cosamp,
+            Self::Fista { lambda, debias } => {
+                SolverKey::Fista { lambda_bits: lambda.map(f32::to_bits), debias }
+            }
+        }
+    }
+
+    /// Serving-layer bit-width gate: the service packs Φ̂/ŷ, so QNIHT is
+    /// servable at the packed widths {2, 4, 8} only (the unpacked
+    /// kernels accept any width in 2..=8 for direct solves). One shared
+    /// check so `JobSpec::validate` and the serve CLI can never drift.
+    pub fn check_packed_bits(&self) -> Result<()> {
+        if let Self::Qniht { bits_phi, bits_y, .. } = *self {
+            for (what, bits) in [("bits_phi", bits_phi), ("bits_y", bits_y)] {
+                anyhow::ensure!(
+                    matches!(bits, 2 | 4 | 8),
+                    "{what} = {bits} is not servable (packed widths: 2, 4, 8)"
+                );
+            }
+        }
+        Ok(())
+    }
+
+    /// Whether `engine` can execute this solver. Mirrors the engines' own
+    /// dispatch-time checks, so a mismatched job fails at submit time
+    /// instead of deep inside a batch solve.
+    pub fn runs_on(&self, engine: EngineKind) -> bool {
+        match engine {
+            EngineKind::NativeDense => !matches!(self, Self::Qniht { .. }),
+            EngineKind::NativeQuant | EngineKind::FpgaModel => matches!(self, Self::Qniht { .. }),
+            // The XLA quant artifacts quantize once: Fixed mode only.
+            EngineKind::XlaQuant => {
+                matches!(self, Self::Qniht { mode: RequantMode::Fixed, .. })
+            }
+            EngineKind::XlaDense => matches!(self, Self::Niht),
+        }
+    }
+}
+
+/// Hashable, `Eq` fingerprint of a [`SolverKind`] (`Fista`'s `f32`
+/// parameter is bit-cast). Two kinds with equal keys run identical
+/// configurations, so the coordinator batches on it.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum SolverKey {
+    Niht,
+    Iht,
+    Qniht { bits_phi: u8, bits_y: u8, mode: RequantMode },
+    Cosamp,
+    Fista { lambda_bits: Option<u32>, debias: bool },
 }
 
 /// A sparse-recovery algorithm behind the facade: consumes a [`Problem`],
@@ -262,5 +319,35 @@ mod tests {
         assert_eq!(SolverKind::Niht.default_engine(), EngineKind::NativeDense);
         assert_eq!(SolverKind::qniht_fixed(2, 8).default_engine(), EngineKind::NativeQuant);
         assert_eq!(SolverKind::Cosamp.default_engine(), EngineKind::NativeDense);
+    }
+
+    #[test]
+    fn solver_keys_fingerprint_configuration() {
+        assert_eq!(SolverKind::Niht.key(), SolverKind::Niht.key());
+        assert_ne!(SolverKind::qniht_fixed(2, 8).key(), SolverKind::qniht_fixed(4, 8).key());
+        assert_ne!(SolverKind::qniht_fixed(2, 8).key(), SolverKind::qniht_fresh(2, 8).key());
+        let f = |lambda| SolverKind::Fista { lambda, debias: true };
+        assert_eq!(f(Some(0.5)).key(), f(Some(0.5)).key());
+        assert_ne!(f(Some(0.5)).key(), f(Some(0.25)).key());
+        assert_ne!(f(Some(0.5)).key(), f(None).key());
+    }
+
+    #[test]
+    fn engine_compatibility_matrix() {
+        use EngineKind::*;
+        let qniht = SolverKind::qniht_fixed(2, 8);
+        assert!(qniht.runs_on(NativeQuant));
+        assert!(qniht.runs_on(XlaQuant));
+        assert!(qniht.runs_on(FpgaModel));
+        assert!(!qniht.runs_on(NativeDense));
+        assert!(!SolverKind::qniht_fresh(2, 8).runs_on(XlaQuant), "XLA quantizes once");
+        assert!(SolverKind::qniht_fresh(2, 8).runs_on(NativeQuant));
+        for dense in [SolverKind::Niht, SolverKind::Iht, SolverKind::Cosamp] {
+            assert!(dense.runs_on(NativeDense));
+            assert!(!dense.runs_on(NativeQuant));
+            assert!(!dense.runs_on(FpgaModel));
+        }
+        assert!(SolverKind::Niht.runs_on(XlaDense));
+        assert!(!SolverKind::Iht.runs_on(XlaDense));
     }
 }

@@ -2,9 +2,10 @@
 //! offline environment vendors no proptest — see DESIGN.md §6).
 
 use lpcs::config::EngineKind;
-use lpcs::coordinator::batcher::form_batches;
-use lpcs::coordinator::job::{JobSpec, JobState, ProblemHandle};
+use lpcs::coordinator::batcher::{form_batches, Batch};
+use lpcs::coordinator::job::{BatchKey, JobSpec, JobState, ProblemHandle};
 use lpcs::coordinator::queue::{BoundedQueue, Priority, PushError};
+use lpcs::coordinator::sched::{schedule, CostModel, QueuedJob, SchedConfig};
 use lpcs::linalg::Mat;
 use lpcs::rng::XorShift128Plus;
 use lpcs::testkit::forall;
@@ -13,15 +14,15 @@ use std::time::Duration;
 
 fn random_spec(rng: &mut XorShift128Plus, mats: &[Arc<Mat>]) -> JobSpec {
     let phi = mats[rng.below(mats.len())].clone();
-    JobSpec {
-        y: vec![0.0; phi.rows],
-        s: 1 + rng.below(4),
-        bits_phi: [2u8, 4, 8][rng.below(3)],
-        bits_y: 8,
-        engine: [EngineKind::NativeQuant, EngineKind::NativeDense][rng.below(2)],
-        seed: rng.next_u64(),
-        problem: ProblemHandle::new(phi),
-    }
+    let bits = [2u8, 4, 8][rng.below(3)];
+    let engine =
+        [EngineKind::NativeQuant, EngineKind::NativeDense, EngineKind::FpgaModel][rng.below(3)];
+    let seed = rng.next_u64();
+    JobSpec::builder(ProblemHandle::new(phi.clone()), vec![0.0; phi.rows], 1 + rng.below(4))
+        .bits(bits, 8)
+        .engine(engine)
+        .seed(seed)
+        .build()
 }
 
 #[test]
@@ -117,6 +118,139 @@ fn prop_queue_high_priority_overtakes_normal_only() {
         }
         let want: Vec<i64> = highs.iter().chain(normals.iter()).cloned().collect();
         assert_eq!(got, want, "all high first, each class FIFO");
+    });
+}
+
+// ------------------------------------------- cost-aware scheduler (PR 3)
+
+/// An adversarial queue snapshot: random keys (Φ identity × bits ×
+/// engine × s), random sizes, random High flags, and ages drawn so that
+/// overdue jobs can land anywhere in the window — including AFTER
+/// younger jobs of the same key, which is the case that breaks naive
+/// priority sorts.
+fn random_snapshot(rng: &mut XorShift128Plus, starvation_us: u64) -> Vec<QueuedJob> {
+    let mats: Vec<Arc<Mat>> = (0..3).map(|_| Arc::new(Mat::zeros(4, 8))).collect();
+    let n = rng.below(40);
+    (0..n as u64)
+        .map(|id| {
+            let age_us = if rng.uniform() < 0.2 {
+                starvation_us + rng.below(1_000_000) as u64
+            } else {
+                rng.below(starvation_us.max(1) as usize) as u64
+            };
+            let high = rng.uniform() < 0.1;
+            QueuedJob { id, spec: random_spec(rng, &mats), age_us, high }
+        })
+        .collect()
+}
+
+fn dispatch_ids(batches: &[Batch]) -> Vec<u64> {
+    batches.iter().flat_map(|b| b.jobs.iter().map(|(i, _)| *i)).collect()
+}
+
+#[test]
+fn prop_sched_dispatches_every_job_exactly_once() {
+    forall("sched-exactly-once", 31, 100, |rng, _| {
+        let snapshot = random_snapshot(rng, 500_000);
+        let n = snapshot.len() as u64;
+        let cfg = SchedConfig { max_batch: 1 + rng.below(6), starvation_us: 500_000 };
+        let batches = schedule(snapshot, &cfg, &CostModel::default());
+        // Exactly once: the dispatched ids are a permutation of the input.
+        let mut flat = dispatch_ids(&batches);
+        flat.sort_unstable();
+        assert_eq!(flat, (0..n).collect::<Vec<_>>());
+        // Batches are key-homogeneous and within the size cap.
+        for b in &batches {
+            assert!(b.len() >= 1 && b.len() <= cfg.max_batch);
+            for (_, s) in &b.jobs {
+                assert_eq!(s.batch_key(), b.key);
+            }
+        }
+    });
+}
+
+#[test]
+fn prop_sched_fairness_no_overtaking_within_key() {
+    forall("sched-fairness", 37, 100, |rng, _| {
+        let snapshot = random_snapshot(rng, 500_000);
+        // Snapshot position by id (ids are assigned in snapshot order).
+        let cfg = SchedConfig { max_batch: 1 + rng.below(6), starvation_us: 500_000 };
+        let keys: Vec<(u64, BatchKey)> =
+            snapshot.iter().map(|j| (j.id, j.spec.batch_key())).collect();
+        let batches = schedule(snapshot, &cfg, &CostModel::default());
+        let order = dispatch_ids(&batches);
+        // For every key: the ids dispatched under that key must appear in
+        // ascending snapshot order — no job is overtaken by a later job
+        // with the same BatchKey.
+        let mut distinct: Vec<BatchKey> = Vec::new();
+        for (_, k) in &keys {
+            if !distinct.contains(k) {
+                distinct.push(*k);
+            }
+        }
+        for key in distinct {
+            let seq: Vec<u64> = order
+                .iter()
+                .copied()
+                .filter(|id| keys.iter().any(|(i, k)| i == id && *k == key))
+                .collect();
+            assert!(seq.windows(2).all(|w| w[0] < w[1]), "key {key:?} inverted: {seq:?}");
+        }
+    });
+}
+
+#[test]
+fn prop_sched_starvation_and_priority_bound_holds() {
+    const BOUND: u64 = 500_000;
+    forall("sched-starvation", 41, 100, |rng, _| {
+        let snapshot = random_snapshot(rng, BOUND);
+        let urgent_by_id: Vec<(u64, bool)> =
+            snapshot.iter().map(|j| (j.id, j.high || j.age_us >= BOUND)).collect();
+        let cfg = SchedConfig { max_batch: 1 + rng.below(6), starvation_us: BOUND };
+        let batches = schedule(snapshot, &cfg, &CostModel::default());
+        let is_urgent = |id: u64| urgent_by_id.iter().any(|(i, u)| *i == id && *u);
+        // A batch is urgent-marked iff it contains an urgent job (High
+        // priority or overdue) or a later batch of its key does (the
+        // fairness promotion). Every urgent-marked batch must precede
+        // every unmarked batch: neither a starving job nor a High job
+        // ever loses to a merely cheaper batch.
+        let marked: Vec<bool> = batches
+            .iter()
+            .enumerate()
+            .map(|(i, b)| {
+                batches[i..]
+                    .iter()
+                    .filter(|later| later.key == b.key)
+                    .any(|later| later.jobs.iter().any(|(id, _)| is_urgent(*id)))
+            })
+            .collect();
+        if let Some(first_unmarked) = marked.iter().position(|m| !m) {
+            assert!(
+                marked[first_unmarked..].iter().all(|m| !m),
+                "an urgent batch was dispatched after a non-urgent one: {marked:?}"
+            );
+        }
+    });
+}
+
+#[test]
+fn prop_sched_deterministic_for_fixed_seed() {
+    forall("sched-determinism", 43, 100, |rng, _| {
+        // The snapshot from a fixed case seed is deterministic, and
+        // `schedule` is a pure function: two runs over the same snapshot
+        // must agree batch-for-batch, job-for-job.
+        let snapshot = random_snapshot(rng, 500_000);
+        let cfg = SchedConfig { max_batch: 1 + rng.below(6), starvation_us: 500_000 };
+        let a = schedule(snapshot.clone(), &cfg, &CostModel::default());
+        let b = schedule(snapshot, &cfg, &CostModel::default());
+        assert_eq!(a.len(), b.len());
+        for (ba, bb) in a.iter().zip(&b) {
+            assert_eq!(ba.key, bb.key);
+            assert_eq!(
+                ba.jobs.iter().map(|(i, _)| *i).collect::<Vec<_>>(),
+                bb.jobs.iter().map(|(i, _)| *i).collect::<Vec<_>>()
+            );
+        }
     });
 }
 

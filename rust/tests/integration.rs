@@ -100,7 +100,13 @@ fn service_runs_astro_jobs_end_to_end() {
     let p = small_astro(5);
     let phi = Arc::new(p.phi.clone());
     let service = RecoveryService::start(
-        ServiceConfig { workers: 2, queue_capacity: 16, max_batch: 4, max_wait_ms: 0 },
+        ServiceConfig {
+            workers: 2,
+            queue_capacity: 16,
+            max_batch: 4,
+            max_wait_ms: 0,
+            ..Default::default()
+        },
         SolveOptions::default(),
         std::path::PathBuf::from("artifacts"),
     );
@@ -108,15 +114,13 @@ fn service_runs_astro_jobs_end_to_end() {
     for k in 0..6u64 {
         ids.push(
             service
-                .submit(JobSpec {
-                    problem: ProblemHandle::new(phi.clone()),
-                    y: p.y.clone(),
-                    s: 8,
-                    bits_phi: 4,
-                    bits_y: 8,
-                    engine: EngineKind::NativeQuant,
-                    seed: k,
-                })
+                .submit(
+                    JobSpec::builder(ProblemHandle::new(phi.clone()), p.y.clone(), 8)
+                        .bits(4, 8)
+                        .engine(EngineKind::NativeQuant)
+                        .seed(k)
+                        .build(),
+                )
                 .unwrap(),
         );
     }

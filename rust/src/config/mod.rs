@@ -5,6 +5,7 @@
 use crate::algorithms::qniht::RequantMode;
 use crate::algorithms::SolveOptions;
 use crate::io::json::Json;
+use crate::mri::{MaskKind, MriConfig};
 use crate::solver::SolverKind;
 use crate::telescope::AstroConfig;
 use anyhow::{anyhow, bail, Result};
@@ -154,6 +155,7 @@ pub struct LpcsConfig {
     pub quant: QuantConfig,
     pub solver: SolveOptions,
     pub astro: AstroConfig,
+    pub mri: MriConfig,
     pub service: ServiceConfig,
 }
 
@@ -169,6 +171,7 @@ impl Default for LpcsConfig {
             quant: QuantConfig::default(),
             solver: SolveOptions::default(),
             astro: AstroConfig::default(),
+            mri: MriConfig::default(),
             service: ServiceConfig::default(),
         }
     }
@@ -226,6 +229,12 @@ impl LpcsConfig {
             "solver.max_shrinks_per_iter" => {
                 self.solver.max_shrinks_per_iter = vf()? as usize
             }
+            "mri.resolution" => self.mri.resolution = vf()? as usize,
+            "mri.mask" => self.mri.mask.kind = MaskKind::parse(value)?,
+            "mri.fraction" => self.mri.mask.fraction = vf()? as f32,
+            "mri.center_band" => self.mri.mask.center_band = vf()? as usize,
+            "mri.bits" => self.mri.bits = vf()? as u8,
+            "mri.sparsity" => self.mri.sparsity = vf()? as usize,
             "astro.antennas" => self.astro.antennas = vf()? as usize,
             "astro.resolution" => self.astro.resolution = vf()? as usize,
             "astro.fov_half_width" => self.astro.fov_half_width = vf()?,
@@ -282,6 +291,9 @@ impl LpcsConfig {
         if self.service.sched_window == 0 {
             bail!("service.sched_window must be >= 1");
         }
+        // The MRI mask gate (fraction ∈ (0,1], centre band ≥ 1, packed
+        // bit widths) — same check the coordinator re-runs at submit.
+        self.mri.validate()?;
         let solver = self.solver_kind();
         if !solver.runs_on(self.engine) {
             bail!(
@@ -372,6 +384,43 @@ mod tests {
         assert_eq!(c.service.sched_window, 32);
         assert_eq!(c.service.starvation_ms, 100);
         c.set("service.sched_window", "0").unwrap();
+        assert!(c.validate().is_err());
+    }
+
+    #[test]
+    fn mri_keys_roundtrip_and_validate() {
+        let mut c = LpcsConfig::default();
+        c.set("mri.resolution", "32").unwrap();
+        c.set("mri.mask", "radial").unwrap();
+        c.set("mri.fraction", "0.3").unwrap();
+        c.set("mri.center_band", "2").unwrap();
+        c.set("mri.bits", "4").unwrap();
+        c.set("mri.sparsity", "64").unwrap();
+        assert_eq!(c.mri.resolution, 32);
+        assert_eq!(c.mri.mask.kind, MaskKind::Radial);
+        assert!((c.mri.mask.fraction - 0.3).abs() < 1e-6);
+        assert_eq!(c.mri.mask.center_band, 2);
+        assert_eq!(c.mri.bits, 4);
+        assert_eq!(c.mri.sparsity, 64);
+        c.validate().unwrap();
+        assert!(MaskKind::parse("spiral").is_err());
+
+        // Invalid mask parameters are rejected at config validation with
+        // a clear message (the same gate the service applies at submit).
+        c.set("mri.fraction", "1.5").unwrap();
+        let err = c.validate().unwrap_err().to_string();
+        assert!(err.contains("fraction"), "{err}");
+        c.set("mri.fraction", "0.4").unwrap();
+        c.set("mri.center_band", "0").unwrap();
+        let err = c.validate().unwrap_err().to_string();
+        assert!(err.contains("center_band"), "{err}");
+        c.set("mri.center_band", "4").unwrap();
+        c.set("mri.bits", "3").unwrap();
+        assert!(c.validate().is_err());
+        c.set("mri.bits", "0").unwrap();
+        c.validate().unwrap();
+        // Non-power-of-two grids cannot feed the radix-2 FFT.
+        c.set("mri.resolution", "48").unwrap();
         assert!(c.validate().is_err());
     }
 

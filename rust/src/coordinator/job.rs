@@ -4,7 +4,8 @@ use crate::algorithms::qniht::RequantMode;
 use crate::algorithms::{IterStat, SolveResult};
 use crate::config::{EngineKind, QuantConfig};
 use crate::linalg::Mat;
-use crate::solver::{Problem, SolveRequest, SolverKey, SolverKind};
+use crate::mri::{self, PartialFourierOp};
+use crate::solver::{MeasurementOp, Problem, SolveRequest, SolverKey, SolverKind};
 use anyhow::Result;
 use std::collections::HashMap;
 use std::sync::{Arc, Condvar, Mutex};
@@ -12,22 +13,107 @@ use std::time::{Duration, Instant};
 
 pub type JobId = u64;
 
-/// The measurement matrix a job recovers against. Jobs sharing the same
-/// `Arc` are batchable (one quantization pass amortized over the batch).
+/// The measurement operator a job recovers against — either an explicit
+/// dense Φ or a matrix-free structured operator. Jobs sharing the same
+/// `Arc` (and configuration) are batchable: for dense quantized jobs the
+/// engine amortizes one quantize+pack pass over the batch; for
+/// matrix-free jobs the shared operator is the batch identity.
+#[derive(Debug, Clone)]
+pub enum OperatorSpec {
+    /// Explicit dense measurement matrix (every engine; all solvers).
+    Dense(Arc<Mat>),
+    /// Matrix-free partial-Fourier MRI operator. `bits = None` runs the
+    /// f32 path; `Some(b)` the low-precision sampling path (observation
+    /// and per-iteration k-space traffic quantized to b ∈ {2, 4, 8} —
+    /// see [`crate::mri::op`]). Servable under `SolverKind::Niht` on the
+    /// dense native engine (the facade's generic `OpKernel` driver).
+    PartialFourier { op: Arc<PartialFourierOp>, bits: Option<u8> },
+}
+
+impl OperatorSpec {
+    /// Observation length (operator rows).
+    pub fn m(&self) -> usize {
+        match self {
+            Self::Dense(phi) => phi.rows,
+            Self::PartialFourier { op, .. } => MeasurementOp::m(&**op),
+        }
+    }
+
+    /// Signal length (operator columns).
+    pub fn n(&self) -> usize {
+        match self {
+            Self::Dense(phi) => phi.cols,
+            Self::PartialFourier { op, .. } => MeasurementOp::n(&**op),
+        }
+    }
+
+    /// The explicit matrix, when this spec holds one.
+    pub fn as_dense(&self) -> Option<&Arc<Mat>> {
+        match self {
+            Self::Dense(phi) => Some(phi),
+            Self::PartialFourier { .. } => None,
+        }
+    }
+
+    /// Hashable identity for batching: operator `Arc` pointer plus the
+    /// configuration that changes the executed math.
+    pub fn key(&self) -> OpKey {
+        match self {
+            Self::Dense(phi) => OpKey::Dense { phi: Arc::as_ptr(phi) as usize },
+            Self::PartialFourier { op, bits } => {
+                OpKey::PartialFourier { op: Arc::as_ptr(op) as usize, bits: *bits }
+            }
+        }
+    }
+}
+
+/// Hashable fingerprint of an [`OperatorSpec`] (part of [`BatchKey`]).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum OpKey {
+    Dense { phi: usize },
+    PartialFourier { op: usize, bits: Option<u8> },
+}
+
+/// The operator a job recovers against plus its artifact shape tag. Jobs
+/// sharing the operator `Arc` are batchable.
 #[derive(Debug, Clone)]
 pub struct ProblemHandle {
-    pub phi: Arc<Mat>,
+    pub op: OperatorSpec,
     /// Artifact shape tag if this Φ matches an AOT shape (XLA engines).
     pub shape_tag: Option<String>,
 }
 
 impl ProblemHandle {
+    /// Explicit dense Φ (the common case).
     pub fn new(phi: Arc<Mat>) -> Self {
-        Self { phi, shape_tag: None }
+        Self { op: OperatorSpec::Dense(phi), shape_tag: None }
     }
 
     pub fn with_shape_tag(phi: Arc<Mat>, tag: &str) -> Self {
-        Self { phi, shape_tag: Some(tag.to_string()) }
+        Self { op: OperatorSpec::Dense(phi), shape_tag: Some(tag.to_string()) }
+    }
+
+    /// Matrix-free partial-Fourier operator, f32 path.
+    pub fn partial_fourier(op: Arc<PartialFourierOp>) -> Self {
+        Self { op: OperatorSpec::PartialFourier { op, bits: None }, shape_tag: None }
+    }
+
+    /// Matrix-free partial-Fourier operator on the low-precision sampling
+    /// path at `bits` ∈ {2, 4, 8}.
+    pub fn low_prec_fourier(op: Arc<PartialFourierOp>, bits: u8) -> Self {
+        Self { op: OperatorSpec::PartialFourier { op, bits: Some(bits) }, shape_tag: None }
+    }
+
+    pub fn m(&self) -> usize {
+        self.op.m()
+    }
+
+    pub fn n(&self) -> usize {
+        self.op.n()
+    }
+
+    pub fn as_dense(&self) -> Option<&Arc<Mat>> {
+        self.op.as_dense()
     }
 }
 
@@ -64,12 +150,13 @@ impl JobSpec {
         }
     }
 
-    /// Batching key: jobs are batchable iff they share Φ (by identity) and
-    /// the full execution configuration — including the solver, so e.g.
-    /// a CoSaMP job never coalesces with an NIHT job.
+    /// Batching key: jobs are batchable iff they share the operator (by
+    /// identity, plus its math-changing configuration — the MRI bit
+    /// width) and the full execution configuration — including the
+    /// solver, so e.g. a CoSaMP job never coalesces with an NIHT job.
     pub fn batch_key(&self) -> BatchKey {
         BatchKey {
-            phi_ptr: Arc::as_ptr(&self.problem.phi) as usize,
+            op: self.problem.op.key(),
             s: self.s,
             solver: self.solver.key(),
             engine: self.engine,
@@ -77,23 +164,47 @@ impl JobSpec {
     }
 
     /// Submit-time validation: shape/sparsity sanity, solver ↔ engine
-    /// compatibility, and packed bit widths for the quantized engines.
-    /// Without this a malformed spec only fails deep inside the batch
-    /// solve, after it has been queued, scheduled and batched.
+    /// compatibility, packed bit widths for the quantized engines, and —
+    /// for matrix-free operators — the operator's own parameter gate
+    /// (mask fraction/centre band) plus the matrix-free serving surface
+    /// (`SolverKind::Niht` on the dense native engine). Without this a
+    /// malformed spec only fails deep inside the batch solve, after it
+    /// has been queued, scheduled and batched.
     pub fn validate(&self) -> Result<()> {
         anyhow::ensure!(
-            self.y.len() == self.problem.phi.rows,
+            self.y.len() == self.problem.m(),
             "y length {} does not match Φ rows {}",
             self.y.len(),
-            self.problem.phi.rows
+            self.problem.m()
         );
         anyhow::ensure!(self.s >= 1, "sparsity must be >= 1");
         anyhow::ensure!(
-            self.s <= self.problem.phi.cols,
+            self.s <= self.problem.n(),
             "sparsity {} exceeds signal dimension {}",
             self.s,
-            self.problem.phi.cols
+            self.problem.n()
         );
+        if let OperatorSpec::PartialFourier { op, bits } = &self.problem.op {
+            op.validate()?;
+            anyhow::ensure!(
+                self.solver == SolverKind::Niht,
+                "matrix-free partial-Fourier jobs run solver 'niht' (the generic \
+                 OpKernel driver); solver '{}' needs an explicit measurement matrix",
+                self.solver.name()
+            );
+            anyhow::ensure!(
+                self.engine == EngineKind::NativeDense,
+                "matrix-free partial-Fourier jobs are servable on engine \
+                 'native-dense' only (engine '{}' needs an explicit matrix)",
+                self.engine.name()
+            );
+            if let Some(b) = bits {
+                anyhow::ensure!(
+                    matches!(b, 2 | 4 | 8),
+                    "mri bits = {b} is not servable (packed widths: 2, 4, 8)"
+                );
+            }
+        }
         anyhow::ensure!(
             self.solver.runs_on(self.engine),
             "solver '{}' cannot run on engine '{}'",
@@ -109,9 +220,21 @@ impl JobSpec {
     /// Lower this job into the facade's [`SolveRequest`]. Jobs sharing a
     /// `ProblemHandle` produce requests whose problems share Φ by pointer
     /// identity, which is what the engine's batched path amortizes over.
+    /// Low-precision MRI jobs lower through [`mri::lowprec_problem`] —
+    /// the same lowering direct facade callers use, so served results are
+    /// bit-identical to local ones (the `seed` drives the stochastic
+    /// quantization of ŷ and the per-iteration traffic).
     pub fn into_request(self) -> SolveRequest {
         let solver = self.solver;
-        let mut problem = Problem::new(self.problem.phi, self.y, self.s);
+        let mut problem = match self.problem.op {
+            OperatorSpec::Dense(phi) => Problem::new(phi, self.y, self.s),
+            OperatorSpec::PartialFourier { op, bits: None } => {
+                Problem::with_op(op, self.y, self.s)
+            }
+            OperatorSpec::PartialFourier { op, bits: Some(b) } => {
+                mri::lowprec_problem(op, &self.y, self.s, b, self.seed)
+            }
+        };
         if let Some(tag) = self.problem.shape_tag {
             problem = problem.with_shape_tag(tag);
         }
@@ -184,7 +307,7 @@ impl JobSpecBuilder {
 
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
 pub struct BatchKey {
-    pub phi_ptr: usize,
+    pub op: OpKey,
     pub s: usize,
     pub solver: SolverKey,
     pub engine: EngineKind,
@@ -551,6 +674,133 @@ mod tests {
         let mut g = spec(&phi);
         g.engine = EngineKind::FpgaModel;
         assert_ne!(a.batch_key(), g.batch_key());
+    }
+
+    fn mri_op(r: usize) -> Arc<PartialFourierOp> {
+        let mask = crate::mri::SamplingMask::generate(
+            &crate::mri::MaskConfig::default(),
+            r,
+            1,
+        )
+        .unwrap();
+        Arc::new(PartialFourierOp::new(mask))
+    }
+
+    #[test]
+    fn partial_fourier_specs_validate_and_batch_by_op_and_bits() {
+        let op = mri_op(16);
+        let m = ProblemHandle::partial_fourier(op.clone()).m();
+        let spec = |h: ProblemHandle| {
+            JobSpec::builder(h, vec![0.0; m], 4)
+                .engine(EngineKind::NativeDense)
+                .solver(SolverKind::Niht)
+                .build()
+        };
+        let f32_a = spec(ProblemHandle::partial_fourier(op.clone()));
+        f32_a.validate().unwrap();
+        let f32_b = spec(ProblemHandle::partial_fourier(op.clone()));
+        assert_eq!(f32_a.batch_key(), f32_b.batch_key(), "shared op Arc batches");
+        let q8 = spec(ProblemHandle::low_prec_fourier(op.clone(), 8));
+        q8.validate().unwrap();
+        assert_ne!(f32_a.batch_key(), q8.batch_key(), "bit width splits the key");
+        let q2 = spec(ProblemHandle::low_prec_fourier(op.clone(), 2));
+        assert_ne!(q8.batch_key(), q2.batch_key());
+        // A different op instance (same parameters) never batches.
+        let other = spec(ProblemHandle::partial_fourier(mri_op(16)));
+        assert_ne!(f32_a.batch_key(), other.batch_key());
+        // And a dense job never shares a key with a matrix-free one.
+        let dense = JobSpec::builder(
+            ProblemHandle::new(Arc::new(Mat::zeros(m, 256))),
+            vec![0.0; m],
+            4,
+        )
+        .engine(EngineKind::NativeDense)
+        .build();
+        assert_ne!(dense.batch_key(), f32_a.batch_key());
+    }
+
+    #[test]
+    fn partial_fourier_validation_rejects_wrong_surface() {
+        let op = mri_op(16);
+        let m = ProblemHandle::partial_fourier(op.clone()).m();
+        let base = |h: ProblemHandle| JobSpec::builder(h, vec![0.0; m], 4);
+        // Wrong solver: matrix-free runs NIHT only.
+        let err = base(ProblemHandle::partial_fourier(op.clone()))
+            .engine(EngineKind::NativeDense)
+            .solver(SolverKind::Cosamp)
+            .build()
+            .validate()
+            .unwrap_err()
+            .to_string();
+        assert!(err.contains("matrix-free"), "{err}");
+        // Wrong engine: quantized/XLA engines need an explicit matrix.
+        let err = base(ProblemHandle::partial_fourier(op.clone()))
+            .engine(EngineKind::NativeQuant)
+            .solver(SolverKind::Niht)
+            .build()
+            .validate()
+            .unwrap_err()
+            .to_string();
+        assert!(err.contains("native-dense"), "{err}");
+        // Non-packed MRI bit width.
+        let mut bad_bits = base(ProblemHandle::low_prec_fourier(op.clone(), 8))
+            .engine(EngineKind::NativeDense)
+            .solver(SolverKind::Niht)
+            .build();
+        if let OperatorSpec::PartialFourier { bits, .. } = &mut bad_bits.problem.op {
+            *bits = Some(3);
+        }
+        assert!(bad_bits.validate().unwrap_err().to_string().contains("packed widths"));
+        // Observation length mismatch against the operator's m.
+        let short = JobSpec::builder(
+            ProblemHandle::partial_fourier(op.clone()),
+            vec![0.0; m - 1],
+            4,
+        )
+        .engine(EngineKind::NativeDense)
+        .solver(SolverKind::Niht)
+        .build();
+        assert!(short.validate().unwrap_err().to_string().contains("y length"));
+        // Invalid mask parameters surface at submit with a clear error.
+        let bad_mask = crate::mri::SamplingMask::generate(
+            &crate::mri::MaskConfig { fraction: 0.0, ..Default::default() },
+            16,
+            0,
+        )
+        .unwrap();
+        let bad_op = Arc::new(PartialFourierOp::new(bad_mask));
+        let bad_m = ProblemHandle::partial_fourier(bad_op.clone()).m();
+        let err = JobSpec::builder(ProblemHandle::partial_fourier(bad_op), vec![0.0; bad_m], 4)
+            .engine(EngineKind::NativeDense)
+            .solver(SolverKind::Niht)
+            .build()
+            .validate()
+            .unwrap_err()
+            .to_string();
+        assert!(err.contains("fraction"), "{err}");
+    }
+
+    #[test]
+    fn partial_fourier_spec_lowers_to_matrix_free_request() {
+        let op = mri_op(16);
+        let m = ProblemHandle::partial_fourier(op.clone()).m();
+        let f32_spec = JobSpec::builder(ProblemHandle::partial_fourier(op.clone()), vec![0.5; m], 4)
+            .engine(EngineKind::NativeDense)
+            .solver(SolverKind::Niht)
+            .seed(9)
+            .build();
+        let req = f32_spec.into_request();
+        assert!(req.problem.as_mat().is_none(), "matrix-free problems expose no Mat");
+        assert_eq!((req.problem.m(), req.problem.n()), (m, 256));
+        // The quantized lowering perturbs y (stochastic Q_b) but keeps shape.
+        let q_spec = JobSpec::builder(ProblemHandle::low_prec_fourier(op, 8), vec![0.5; m], 4)
+            .engine(EngineKind::NativeDense)
+            .solver(SolverKind::Niht)
+            .seed(9)
+            .build();
+        let q_req = q_spec.into_request();
+        assert_eq!(q_req.problem.m(), m);
+        assert!(q_req.problem.as_mat().is_none());
     }
 
     #[test]

@@ -34,5 +34,7 @@ pub mod queue;
 pub mod sched;
 pub mod service;
 
-pub use job::{JobId, JobOutcome, JobSpec, JobSpecBuilder, JobState, ProblemHandle};
+pub use job::{
+    JobId, JobOutcome, JobSpec, JobSpecBuilder, JobState, OpKey, OperatorSpec, ProblemHandle,
+};
 pub use service::{RecoveryService, ServiceMetrics};

@@ -75,19 +75,30 @@ impl CostModel {
 
     /// One-time batch setup: the quantize+pack pass over Φ that the
     /// batched engine path amortizes (see `NativeQuantEngine::solve_batch`).
+    /// Matrix-free operators have no entries to quantize — zero setup
+    /// (they are also only servable on the dense engine).
     pub fn setup_cost(&self, spec: &JobSpec) -> f64 {
-        if spec.engine.is_quantized() {
-            self.setup_per_entry * (spec.problem.phi.rows * spec.problem.phi.cols) as f64
-        } else {
-            0.0
+        match spec.problem.as_dense() {
+            Some(phi) if spec.engine.is_quantized() => {
+                self.setup_per_entry * (phi.rows * phi.cols) as f64
+            }
+            _ => 0.0,
         }
     }
 
     /// Per-job cost: operand bytes streamed per iteration × nominal
-    /// iteration count.
+    /// iteration count. Dense operators stream the full `m × n` matrix at
+    /// the solver's bit width; matrix-free partial-Fourier jobs stream
+    /// `O(n log n)` butterfly traffic plus the `m` measurements in f32 —
+    /// that asymptotic gap is exactly why the scheduler must not price
+    /// them like dense jobs of the same shape.
     pub fn job_cost(&self, spec: &JobSpec) -> f64 {
-        let (m, n) = (spec.problem.phi.rows as f64, spec.problem.phi.cols as f64);
-        m * n * Self::stream_bits(spec) / 8.0 * self.nominal_iters
+        let (m, n) = (spec.problem.m() as f64, spec.problem.n() as f64);
+        match spec.problem.as_dense() {
+            Some(_) => m * n * Self::stream_bits(spec) / 8.0 * self.nominal_iters,
+            // ~2 transforms per iteration, 4-byte complex-split lanes.
+            None => (2.0 * n * n.log2().max(1.0) + m) * 4.0 * self.nominal_iters,
+        }
     }
 
     /// Amortized per-job score of a (key-homogeneous) batch; lower
@@ -302,6 +313,35 @@ mod tests {
         ];
         let batches = schedule(snapshot, &cfg, &CostModel::default());
         assert_eq!(ids(&batches), vec![vec![0, 1], vec![2, 3]]);
+    }
+
+    #[test]
+    fn matrix_free_jobs_price_fft_traffic_not_dense_shape() {
+        use crate::mri::{MaskConfig, PartialFourierOp, SamplingMask};
+        use crate::solver::SolverKind;
+        let cm = CostModel::default();
+        let mask = SamplingMask::generate(&MaskConfig::default(), 32, 1).unwrap();
+        let op = Arc::new(PartialFourierOp::new(mask));
+        let h = ProblemHandle::partial_fourier(op);
+        let m = h.m();
+        let pf = JobSpec::builder(h, vec![0.0; m], 2)
+            .engine(EngineKind::NativeDense)
+            .solver(SolverKind::Niht)
+            .build();
+        let dense = JobSpec::builder(
+            ProblemHandle::new(Arc::new(Mat::zeros(m, 1024))),
+            vec![0.0; m],
+            2,
+        )
+        .engine(EngineKind::NativeDense)
+        .build();
+        assert_eq!(cm.setup_cost(&pf), 0.0, "nothing to quantize+pack");
+        assert!(
+            cm.job_cost(&pf) < cm.job_cost(&dense) / 10.0,
+            "FFT traffic must undercut the same-shape dense matvec: {} vs {}",
+            cm.job_cost(&pf),
+            cm.job_cost(&dense)
+        );
     }
 
     #[test]

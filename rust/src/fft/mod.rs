@@ -1,0 +1,351 @@
+//! Fast Fourier transforms — the substrate of the MRI (partial-Fourier)
+//! measurement operator.
+//!
+//! Scope-matched to what [`crate::mri`] needs: an iterative radix-2
+//! Cooley–Tukey complex FFT over split re/im `f32` slices (power-of-two
+//! lengths), the 2-D row–column transform, and an O(n²) naive DFT kept as
+//! the parity reference the unit tests (and `tests/mri_parity.rs`) check
+//! every size against. Twiddle factors are evaluated in `f64` once per
+//! [`FftPlan`] (a single `n/2`-entry table serves every stage by stride
+//! indexing, conjugated for the inverse), so the `f32` butterflies lose
+//! nothing to twiddle error accumulation and the per-iteration hot path
+//! ([`crate::mri::PartialFourierOp`]) performs no trigonometry at all.
+//!
+//! Conventions (match `numpy.fft` / the textbook DFT):
+//! * forward: `X_k = Σ_j x_j e^{-2πi jk/n}`, unnormalized;
+//! * inverse: `x_j = (1/n) Σ_k X_k e^{+2πi jk/n}`.
+//!
+//! The unitary scaling the measurement operator wants (`1/√n` both ways)
+//! is applied by the caller ([`crate::mri::PartialFourierOp`]), keeping
+//! these kernels free of hidden normalization.
+
+/// A prepared transform of one power-of-two length: the bit-reversal
+/// size plus a single forward twiddle table `w_n^j = e^{-2πi j/n}`
+/// (`j < n/2`) that serves every stage by stride indexing
+/// (`w_len^k = w_n^{k·n/len}`) and the inverse by conjugation.
+///
+/// NIHT calls the transform several times per iteration, so the trig is
+/// hoisted here once — [`crate::mri::PartialFourierOp`] holds one plan
+/// for its grid; the free functions below build a throwaway plan per
+/// call for one-shot use.
+#[derive(Debug, Clone)]
+pub struct FftPlan {
+    n: usize,
+    tw_re: Vec<f32>,
+    tw_im: Vec<f32>,
+}
+
+impl FftPlan {
+    /// Panics if `n` is not a power of two.
+    pub fn new(n: usize) -> Self {
+        assert!(n.is_power_of_two(), "fft length {n} is not a power of two");
+        let mut tw_re = Vec::with_capacity(n / 2);
+        let mut tw_im = Vec::with_capacity(n / 2);
+        for j in 0..n / 2 {
+            let ang = -2.0 * std::f64::consts::PI * j as f64 / n as f64;
+            tw_re.push(ang.cos() as f32);
+            tw_im.push(ang.sin() as f32);
+        }
+        Self { n, tw_re, tw_im }
+    }
+
+    pub fn n(&self) -> usize {
+        self.n
+    }
+
+    /// In-place radix-2 FFT over split re/im buffers of length `n`.
+    /// `inverse` conjugates the twiddles and applies the `1/n` scaling.
+    pub fn run(&self, re: &mut [f32], im: &mut [f32], inverse: bool) {
+        let n = self.n;
+        assert_eq!(n, re.len(), "buffer length does not match plan size");
+        assert_eq!(n, im.len(), "re/im length mismatch");
+        if n <= 1 {
+            return;
+        }
+
+        // Bit-reversal permutation.
+        let bits = n.trailing_zeros();
+        for i in 0..n {
+            let j = i.reverse_bits() >> (usize::BITS - bits);
+            if j > i {
+                re.swap(i, j);
+                im.swap(i, j);
+            }
+        }
+
+        let conj = if inverse { -1.0f32 } else { 1.0f32 };
+        let mut len = 2usize;
+        while len <= n {
+            let half = len / 2;
+            let stride = n / len;
+            let mut base = 0usize;
+            while base < n {
+                for k in 0..half {
+                    let wr = self.tw_re[k * stride];
+                    let wi = conj * self.tw_im[k * stride];
+                    let (ar, ai) = (re[base + k], im[base + k]);
+                    let (br, bi) = (re[base + k + half], im[base + k + half]);
+                    let tr = wr * br - wi * bi;
+                    let ti = wr * bi + wi * br;
+                    re[base + k] = ar + tr;
+                    im[base + k] = ai + ti;
+                    re[base + k + half] = ar - tr;
+                    im[base + k + half] = ai - ti;
+                }
+                base += len;
+            }
+            len <<= 1;
+        }
+
+        if inverse {
+            let scale = 1.0 / n as f32;
+            for v in re.iter_mut() {
+                *v *= scale;
+            }
+            for v in im.iter_mut() {
+                *v *= scale;
+            }
+        }
+    }
+
+    /// In-place 2-D FFT over a square `n × n` row-major split-complex
+    /// image (both axes use this plan).
+    pub fn run_2d_square(&self, re: &mut [f32], im: &mut [f32], inverse: bool) {
+        fft2_with(self, self, re, im, inverse)
+    }
+}
+
+/// In-place radix-2 FFT over split re/im buffers (one-shot: builds a
+/// throwaway [`FftPlan`]; hot paths hold a plan instead). `inverse`
+/// selects the exponent sign and applies the `1/n` scaling.
+///
+/// Panics if the length is not a power of two or the buffers disagree.
+pub fn fft_inplace(re: &mut [f32], im: &mut [f32], inverse: bool) {
+    assert_eq!(re.len(), im.len(), "re/im length mismatch");
+    FftPlan::new(re.len()).run(re, im, inverse)
+}
+
+fn fft2_with(
+    row_plan: &FftPlan,
+    col_plan: &FftPlan,
+    re: &mut [f32],
+    im: &mut [f32],
+    inverse: bool,
+) {
+    let (rows, cols) = (col_plan.n(), row_plan.n());
+    assert_eq!(re.len(), rows * cols, "image shape mismatch");
+    assert_eq!(im.len(), rows * cols, "image shape mismatch");
+    // Rows are contiguous: transform in place.
+    for r in 0..rows {
+        let lo = r * cols;
+        row_plan.run(&mut re[lo..lo + cols], &mut im[lo..lo + cols], inverse);
+    }
+    // Columns: gather → transform → scatter through a scratch pair.
+    let mut col_re = vec![0.0f32; rows];
+    let mut col_im = vec![0.0f32; rows];
+    for c in 0..cols {
+        for r in 0..rows {
+            col_re[r] = re[r * cols + c];
+            col_im[r] = im[r * cols + c];
+        }
+        col_plan.run(&mut col_re, &mut col_im, inverse);
+        for r in 0..rows {
+            re[r * cols + c] = col_re[r];
+            im[r * cols + c] = col_im[r];
+        }
+    }
+}
+
+/// In-place 2-D FFT (row–column decomposition) over a `rows × cols`
+/// row-major split-complex image. Both dimensions must be powers of two.
+/// One-shot wrapper; hot paths hold an [`FftPlan`] and use
+/// [`FftPlan::run_2d_square`].
+pub fn fft2_inplace(re: &mut [f32], im: &mut [f32], rows: usize, cols: usize, inverse: bool) {
+    let col_plan = FftPlan::new(rows);
+    if rows == cols {
+        fft2_with(&col_plan, &col_plan, re, im, inverse)
+    } else {
+        fft2_with(&FftPlan::new(cols), &col_plan, re, im, inverse)
+    }
+}
+
+/// O(n²) reference DFT with `f64` accumulation (any length). Same
+/// conventions as [`fft_inplace`]; returns fresh buffers.
+pub fn dft_naive(re: &[f32], im: &[f32], inverse: bool) -> (Vec<f32>, Vec<f32>) {
+    let n = re.len();
+    assert_eq!(n, im.len());
+    let sign = if inverse { 1.0f64 } else { -1.0f64 };
+    let mut out_re = vec![0.0f32; n];
+    let mut out_im = vec![0.0f32; n];
+    let scale = if inverse { 1.0 / n as f64 } else { 1.0 };
+    for k in 0..n {
+        let mut acc_re = 0.0f64;
+        let mut acc_im = 0.0f64;
+        for j in 0..n {
+            let ang = sign * 2.0 * std::f64::consts::PI * (j * k % n.max(1)) as f64 / n as f64;
+            let (c, s) = (ang.cos(), ang.sin());
+            let (xr, xi) = (re[j] as f64, im[j] as f64);
+            acc_re += xr * c - xi * s;
+            acc_im += xr * s + xi * c;
+        }
+        out_re[k] = (acc_re * scale) as f32;
+        out_im[k] = (acc_im * scale) as f32;
+    }
+    (out_re, out_im)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rng::XorShift128Plus;
+
+    fn rel_l2(got_re: &[f32], got_im: &[f32], want_re: &[f32], want_im: &[f32]) -> f64 {
+        let mut num = 0.0f64;
+        let mut den = 0.0f64;
+        for i in 0..got_re.len() {
+            num += ((got_re[i] - want_re[i]) as f64).powi(2)
+                + ((got_im[i] - want_im[i]) as f64).powi(2);
+            den += (want_re[i] as f64).powi(2) + (want_im[i] as f64).powi(2);
+        }
+        (num / den.max(1e-30)).sqrt()
+    }
+
+    #[test]
+    fn fft_matches_naive_dft_across_sizes_2_to_1024() {
+        let mut rng = XorShift128Plus::new(1);
+        let mut n = 2usize;
+        while n <= 1024 {
+            for inverse in [false, true] {
+                let re0 = rng.gaussian_vec(n);
+                let im0 = rng.gaussian_vec(n);
+                let (want_re, want_im) = dft_naive(&re0, &im0, inverse);
+                let mut re = re0.clone();
+                let mut im = im0.clone();
+                fft_inplace(&mut re, &mut im, inverse);
+                let err = rel_l2(&re, &im, &want_re, &want_im);
+                assert!(err <= 1e-5, "n={n} inverse={inverse}: rel err {err}");
+            }
+            n *= 2;
+        }
+    }
+
+    #[test]
+    fn roundtrip_recovers_input() {
+        let mut rng = XorShift128Plus::new(2);
+        for n in [1usize, 4, 64, 512] {
+            let re0 = rng.gaussian_vec(n);
+            let im0 = rng.gaussian_vec(n);
+            let mut re = re0.clone();
+            let mut im = im0.clone();
+            fft_inplace(&mut re, &mut im, false);
+            fft_inplace(&mut re, &mut im, true);
+            for i in 0..n {
+                assert!((re[i] - re0[i]).abs() <= 1e-4 * (1.0 + re0[i].abs()), "n={n}");
+                assert!((im[i] - im0[i]).abs() <= 1e-4 * (1.0 + im0[i].abs()), "n={n}");
+            }
+        }
+    }
+
+    #[test]
+    fn impulse_transforms_to_all_ones() {
+        let mut re = vec![0.0f32; 8];
+        let mut im = vec![0.0f32; 8];
+        re[0] = 1.0;
+        fft_inplace(&mut re, &mut im, false);
+        for k in 0..8 {
+            assert!((re[k] - 1.0).abs() < 1e-6 && im[k].abs() < 1e-6, "k={k}");
+        }
+    }
+
+    #[test]
+    fn real_input_spectrum_is_conjugate_symmetric() {
+        let mut rng = XorShift128Plus::new(3);
+        let n = 64;
+        let mut re = rng.gaussian_vec(n);
+        let mut im = vec![0.0f32; n];
+        fft_inplace(&mut re, &mut im, false);
+        for k in 1..n {
+            assert!((re[k] - re[n - k]).abs() <= 1e-4, "k={k}");
+            assert!((im[k] + im[n - k]).abs() <= 1e-4, "k={k}");
+        }
+    }
+
+    #[test]
+    fn fft2_matches_row_column_naive() {
+        let (rows, cols) = (8usize, 16usize);
+        let mut rng = XorShift128Plus::new(4);
+        let re0 = rng.gaussian_vec(rows * cols);
+        let im0 = rng.gaussian_vec(rows * cols);
+
+        // Naive row–column reference.
+        let mut want_re = re0.clone();
+        let mut want_im = im0.clone();
+        for r in 0..rows {
+            let lo = r * cols;
+            let (wr, wi) =
+                dft_naive(&want_re[lo..lo + cols], &want_im[lo..lo + cols], false);
+            want_re[lo..lo + cols].copy_from_slice(&wr);
+            want_im[lo..lo + cols].copy_from_slice(&wi);
+        }
+        for c in 0..cols {
+            let col_re: Vec<f32> = (0..rows).map(|r| want_re[r * cols + c]).collect();
+            let col_im: Vec<f32> = (0..rows).map(|r| want_im[r * cols + c]).collect();
+            let (wr, wi) = dft_naive(&col_re, &col_im, false);
+            for r in 0..rows {
+                want_re[r * cols + c] = wr[r];
+                want_im[r * cols + c] = wi[r];
+            }
+        }
+
+        let mut re = re0;
+        let mut im = im0;
+        fft2_inplace(&mut re, &mut im, rows, cols, false);
+        let err = rel_l2(&re, &im, &want_re, &want_im);
+        assert!(err <= 1e-5, "rel err {err}");
+    }
+
+    #[test]
+    fn fft2_roundtrip() {
+        let (rows, cols) = (16usize, 16usize);
+        let mut rng = XorShift128Plus::new(5);
+        let re0 = rng.gaussian_vec(rows * cols);
+        let mut re = re0.clone();
+        let mut im = vec![0.0f32; rows * cols];
+        fft2_inplace(&mut re, &mut im, rows, cols, false);
+        fft2_inplace(&mut re, &mut im, rows, cols, true);
+        for i in 0..re.len() {
+            assert!((re[i] - re0[i]).abs() <= 1e-4, "i={i}");
+            assert!(im[i].abs() <= 1e-4, "i={i}");
+        }
+    }
+
+    #[test]
+    fn plan_reuse_is_bit_identical_to_one_shot() {
+        let mut rng = XorShift128Plus::new(6);
+        let plan = FftPlan::new(128);
+        assert_eq!(plan.n(), 128);
+        for inverse in [false, true] {
+            let re0 = rng.gaussian_vec(128);
+            let im0 = rng.gaussian_vec(128);
+            let (mut re_a, mut im_a) = (re0.clone(), im0.clone());
+            fft_inplace(&mut re_a, &mut im_a, inverse);
+            let (mut re_b, mut im_b) = (re0.clone(), im0.clone());
+            plan.run(&mut re_b, &mut im_b, inverse);
+            // Second use of the same plan must also agree (no state).
+            let (mut re_c, mut im_c) = (re0, im0);
+            plan.run(&mut re_c, &mut im_c, inverse);
+            assert_eq!(re_a, re_b);
+            assert_eq!(im_a, im_b);
+            assert_eq!(re_b, re_c);
+            assert_eq!(im_b, im_c);
+        }
+    }
+
+    #[test]
+    #[should_panic(expected = "power of two")]
+    fn non_power_of_two_rejected() {
+        let mut re = vec![0.0f32; 6];
+        let mut im = vec![0.0f32; 6];
+        fft_inplace(&mut re, &mut im, false);
+    }
+}

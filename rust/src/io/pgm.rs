@@ -1,9 +1,17 @@
-//! PGM (portable graymap) image dumps — the Fig 1 / Fig 9 sky maps.
+//! PGM (portable graymap) image I/O — the Fig 1 / Fig 9 sky maps and the
+//! MRI phantom panels.
 //!
-//! Binary P5, 8-bit, with linear scaling from [min, max] of the data (or a
-//! caller-fixed range so panels of a figure share a colour scale).
+//! Writing: binary P5, 8-bit, with linear scaling from [min, max] of the
+//! data (or a caller-fixed range so panels of a figure share a colour
+//! scale). Reading ([`read_pgm`]): both ASCII `P2` and binary `P5`, any
+//! maxval ≤ 65535 (two-byte big-endian samples above 255, per the Netpbm
+//! spec), `#` comments between header tokens (and inside `P2` rasters) —
+//! matching the reference implementation, which delimits a binary raster
+//! with exactly one whitespace byte after maxval, so a leading raster
+//! byte of 0x23 is data, never a comment. Enough to feed recovered
+//! images (or external ground truths) back into the pipeline.
 
-use std::io::Write as _;
+use std::io::{Error, ErrorKind, Write as _};
 use std::path::Path;
 
 /// Write an r×r (row-major) image to `path` as binary PGM.
@@ -34,6 +42,132 @@ pub fn write_pgm(
     f.write_all(&bytes)
 }
 
+/// A decoded PGM image: raw sample values as `f32` (0..=maxval).
+#[derive(Debug, Clone, PartialEq)]
+pub struct PgmImage {
+    pub width: usize,
+    pub height: usize,
+    pub maxval: u32,
+    /// Row-major samples, `width * height` of them, in `0..=maxval`.
+    pub data: Vec<f32>,
+}
+
+impl PgmImage {
+    /// Samples rescaled to `[0, 1]` (what the recovery pipeline consumes).
+    pub fn normalized(&self) -> Vec<f32> {
+        let inv = 1.0 / self.maxval as f32;
+        self.data.iter().map(|&v| v * inv).collect()
+    }
+}
+
+fn bad(msg: impl Into<String>) -> Error {
+    Error::new(ErrorKind::InvalidData, msg.into())
+}
+
+/// Header tokenizer: skips whitespace and `#`-to-end-of-line comments,
+/// returns the next token and the index just past it.
+fn next_token(bytes: &[u8], mut i: usize) -> std::io::Result<(&[u8], usize)> {
+    loop {
+        while i < bytes.len() && bytes[i].is_ascii_whitespace() {
+            i += 1;
+        }
+        if i < bytes.len() && bytes[i] == b'#' {
+            while i < bytes.len() && bytes[i] != b'\n' {
+                i += 1;
+            }
+            continue;
+        }
+        break;
+    }
+    let start = i;
+    while i < bytes.len() && !bytes[i].is_ascii_whitespace() && bytes[i] != b'#' {
+        i += 1;
+    }
+    if start == i {
+        return Err(bad("pgm: truncated header"));
+    }
+    Ok((&bytes[start..i], i))
+}
+
+fn parse_usize(tok: &[u8], what: &str) -> std::io::Result<usize> {
+    std::str::from_utf8(tok)
+        .ok()
+        .and_then(|s| s.parse::<usize>().ok())
+        .ok_or_else(|| bad(format!("pgm: invalid {what} '{}'", String::from_utf8_lossy(tok))))
+}
+
+/// Read a PGM file (ASCII `P2` or binary `P5`, maxval ≤ 65535). The
+/// round-trip partner of [`write_pgm`].
+pub fn read_pgm(path: &Path) -> std::io::Result<PgmImage> {
+    let bytes = std::fs::read(path)?;
+    let (magic, mut i) = next_token(&bytes, 0)?;
+    let binary = match magic {
+        b"P5" => true,
+        b"P2" => false,
+        other => {
+            return Err(bad(format!(
+                "pgm: unsupported magic '{}' (P2|P5)",
+                String::from_utf8_lossy(other)
+            )))
+        }
+    };
+    let (tok, j) = next_token(&bytes, i)?;
+    let width = parse_usize(tok, "width")?;
+    let (tok, j) = next_token(&bytes, j)?;
+    let height = parse_usize(tok, "height")?;
+    let (tok, j) = next_token(&bytes, j)?;
+    let maxval = parse_usize(tok, "maxval")?;
+    i = j;
+    if maxval == 0 || maxval > 65535 {
+        return Err(bad(format!("pgm: maxval {maxval} out of range 1..=65535")));
+    }
+    let count = width
+        .checked_mul(height)
+        .ok_or_else(|| bad("pgm: image dimensions overflow"))?;
+
+    let mut data = Vec::with_capacity(count);
+    if binary {
+        // Exactly one whitespace byte separates the maxval token from
+        // the raster — the reference implementation's rule. No comment
+        // handling here: a '#' after the delimiter is raster DATA (byte
+        // 0x23), and treating it as a comment would corrupt round-trips
+        // of our own writer. Comments belong between header tokens
+        // (where `next_token` strips them).
+        if i >= bytes.len() || !bytes[i].is_ascii_whitespace() {
+            return Err(bad("pgm: missing raster separator"));
+        }
+        i += 1;
+        let wide = maxval > 255;
+        let sample_bytes = if wide { 2 } else { 1 };
+        let need = count * sample_bytes;
+        let raster = &bytes[i.min(bytes.len())..];
+        if raster.len() < need {
+            return Err(bad(format!(
+                "pgm: raster truncated ({} of {need} bytes)",
+                raster.len()
+            )));
+        }
+        for k in 0..count {
+            let v = if wide {
+                u16::from_be_bytes([raster[2 * k], raster[2 * k + 1]]) as u32
+            } else {
+                raster[k] as u32
+            };
+            data.push(v as f32);
+        }
+    } else {
+        for _ in 0..count {
+            let (tok, j) = next_token(&bytes, i).map_err(|_| bad("pgm: raster truncated"))?;
+            data.push(parse_usize(tok, "sample")? as f32);
+            i = j;
+        }
+    }
+    if data.iter().any(|&v| v > maxval as f32) {
+        return Err(bad("pgm: sample exceeds maxval"));
+    }
+    Ok(PgmImage { width, height, maxval: maxval as u32, data })
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -50,6 +184,97 @@ mod tests {
         // Max value maps to 255, min to 0.
         assert_eq!(bytes[11], 0);
         assert_eq!(bytes[13], 255);
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn write_read_roundtrip() {
+        let dir = std::env::temp_dir().join("lpcs_pgm_rt");
+        let path = dir.join("rt.pgm");
+        // Values spanning the scale; write normalizes [lo, hi] → 0..=255.
+        let data = vec![0.0f32, 0.25, 0.5, 0.75, 1.0, 0.1];
+        write_pgm(&path, &data, 3, 2, Some((0.0, 1.0))).unwrap();
+        let img = read_pgm(&path).unwrap();
+        assert_eq!((img.width, img.height, img.maxval), (3, 2, 255));
+        assert_eq!(img.data.len(), 6);
+        let norm = img.normalized();
+        for (got, want) in norm.iter().zip(&data) {
+            // One 8-bit quantization step of tolerance.
+            assert!((got - want).abs() <= 1.0 / 255.0 + 1e-6, "{got} vs {want}");
+        }
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn reads_ascii_p2_with_comments() {
+        let dir = std::env::temp_dir().join("lpcs_pgm_p2");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("a.pgm");
+        std::fs::write(
+            &path,
+            "P2 # ascii graymap\n# a comment line\n3 2\n15\n0 1 2\n13 14 15\n",
+        )
+        .unwrap();
+        let img = read_pgm(&path).unwrap();
+        assert_eq!((img.width, img.height, img.maxval), (3, 2, 15));
+        assert_eq!(img.data, vec![0.0, 1.0, 2.0, 13.0, 14.0, 15.0]);
+        assert!((img.normalized()[5] - 1.0).abs() < 1e-6);
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn reads_p5_with_header_comments_and_hash_valued_raster() {
+        let dir = std::env::temp_dir().join("lpcs_pgm_p5c");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("c.pgm");
+        // Comments between header tokens; the raster's FIRST byte is
+        // 0x23 ('#') and whitespace-valued bytes follow — all must be
+        // read as data (one-whitespace delimiter rule).
+        let mut bytes = b"P5 # binary graymap\n# scanner gain 1.0\n2 2\n255\n".to_vec();
+        bytes.extend_from_slice(&[b'#', b'\n', 30, 40]);
+        std::fs::write(&path, bytes).unwrap();
+        let img = read_pgm(&path).unwrap();
+        assert_eq!((img.width, img.height, img.maxval), (2, 2, 255));
+        assert_eq!(img.data, vec![35.0, 10.0, 30.0, 40.0]);
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn reads_16bit_p5_big_endian() {
+        let dir = std::env::temp_dir().join("lpcs_pgm_p5w");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("w.pgm");
+        let mut bytes = b"P5\n2 1\n65535\n".to_vec();
+        bytes.extend_from_slice(&300u16.to_be_bytes());
+        bytes.extend_from_slice(&65535u16.to_be_bytes());
+        std::fs::write(&path, bytes).unwrap();
+        let img = read_pgm(&path).unwrap();
+        assert_eq!(img.maxval, 65535);
+        assert_eq!(img.data, vec![300.0, 65535.0]);
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn read_rejects_malformed_files() {
+        let dir = std::env::temp_dir().join("lpcs_pgm_bad");
+        std::fs::create_dir_all(&dir).unwrap();
+        let write = |name: &str, content: &[u8]| {
+            let p = dir.join(name);
+            std::fs::write(&p, content).unwrap();
+            p
+        };
+        // Wrong magic (PBM bitmap).
+        let p = write("m.pgm", b"P1\n2 2\n0 1 1 0\n");
+        assert!(read_pgm(&p).unwrap_err().to_string().contains("magic"));
+        // Truncated binary raster.
+        let p = write("t.pgm", b"P5\n4 4\n255\nab");
+        assert!(read_pgm(&p).unwrap_err().to_string().contains("truncated"));
+        // Maxval out of range.
+        let p = write("x.pgm", b"P2\n1 1\n70000\n5\n");
+        assert!(read_pgm(&p).unwrap_err().to_string().contains("maxval"));
+        // ASCII sample above maxval.
+        let p = write("s.pgm", b"P2\n1 1\n10\n11\n");
+        assert!(read_pgm(&p).unwrap_err().to_string().contains("exceeds"));
         std::fs::remove_dir_all(&dir).ok();
     }
 

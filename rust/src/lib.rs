@@ -7,10 +7,13 @@
 //! Thresholding (QNIHT) solver together with every substrate the paper's
 //! evaluation depends on: stochastic quantization with bit-packed storage,
 //! low-precision matvec kernels, a radio-interferometry simulator (LOFAR-like
-//! station, measurement-matrix formation, visibility synthesis), the full
-//! baseline suite (NIHT, IHT, CoSaMP, FISTA, CLEAN), an RIP toolkit, an FPGA
-//! bandwidth-model simulator, a PJRT runtime that executes the JAX/Pallas
-//! AOT artifacts, and an async recovery service.
+//! station, measurement-matrix formation, visibility synthesis), an MRI
+//! workload (radix-2 FFT substrate, Shepp–Logan phantom, Cartesian/radial
+//! undersampling masks, a matrix-free partial-Fourier operator with a
+//! low-precision sampling path), the full baseline suite (NIHT, IHT, CoSaMP,
+//! FISTA, CLEAN), an RIP toolkit, an FPGA bandwidth-model simulator, a PJRT
+//! runtime that executes the JAX/Pallas AOT artifacts, and an async recovery
+//! service.
 //!
 //! ## Layers
 //!
@@ -26,7 +29,13 @@
 //!   the serving layer, examples, repro figures and benches use.
 //! * **Serving** ([`coordinator`]): every [`solver::SolverKind`] is
 //!   servable — `JobSpec` carries an explicit solver selector (validated
-//!   at submit time) that is part of the batching key. Jobs flow through
+//!   at submit time) that is part of the batching key — and so are
+//!   **matrix-free operators**: `coordinator::OperatorSpec` describes
+//!   either an explicit dense Φ or a shared
+//!   [`mri::PartialFourierOp`] (with an optional low-precision bit
+//!   width), folded into `BatchKey` by operator identity and gated at
+//!   submit (mask parameters, the NIHT/native-dense matrix-free
+//!   surface). Jobs flow through
 //!   a bounded queue with backpressure into worker-local snapshot
 //!   windows that the **cost-aware scheduler** ([`coordinator::sched`])
 //!   partitions into key-homogeneous batches and orders cheapest-first
@@ -45,12 +54,16 @@
 //!   baselines — all observable per iteration.
 //! * **Substrate**: [`quant`] (stochastic quantization + bit-packing),
 //!   [`lowprec`] (packed kernels over the runtime-dispatched [`simd`]
-//!   backends on the persistent [`par`] pool), [`linalg`], [`rng`].
+//!   backends on the persistent [`par`] pool), [`linalg`], [`fft`]
+//!   (radix-2 transforms behind the matrix-free Fourier operator),
+//!   [`rng`].
 //! * **Artifacts** ([`runtime`]): PJRT client + compiled-executable cache
 //!   executing the L2/L1 JAX/Pallas AOT graphs (`artifacts/*.hlo.txt`);
 //!   reached through the registry's `xla-*` engines.
-//! * **Evaluation**: [`telescope`], [`rip`], [`perfmodel`], [`metrics`],
-//!   [`repro`] (figure harness), [`benchkit`].
+//! * **Evaluation**: [`telescope`] and [`mri`] (the paper's two
+//!   application workloads), [`rip`], [`perfmodel`], [`metrics`],
+//!   [`repro`] (figure harness, incl. the MRI PSNR-vs-bits fig10),
+//!   [`benchkit`].
 //!
 //! ```no_run
 //! use lpcs::solver::{Problem, Recovery, SolverKind};
@@ -65,10 +78,12 @@ pub mod algorithms;
 pub mod benchkit;
 pub mod config;
 pub mod coordinator;
+pub mod fft;
 pub mod io;
 pub mod linalg;
 pub mod lowprec;
 pub mod metrics;
+pub mod mri;
 pub mod par;
 pub mod perfmodel;
 pub mod quant;

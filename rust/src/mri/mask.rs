@@ -1,0 +1,315 @@
+//! k-space undersampling masks — which Fourier coefficients the scanner
+//! acquires.
+//!
+//! Two families, both on the unshifted `r × r` DFT grid (DC at index
+//! `(0, 0)`; distances are computed on *wrapped* frequencies, so "low
+//! frequency" means close to DC modulo `r`):
+//!
+//! * [`MaskKind::Cartesian`] — variable-density phase-encode sampling:
+//!   whole `kx` readout lines, every line within `center_band` of DC plus
+//!   randomly drawn outer lines with density `∝ 1/(1+|ky|)²` until
+//!   `fraction · r` lines are acquired. This is the standard Cartesian
+//!   CS-MRI protocol (dense centre, sparse periphery).
+//! * [`MaskKind::Radial`] — `round(fraction · r)` equally-spaced spokes
+//!   through DC (rasterized lines), plus a fully-sampled
+//!   `center_band`-wide block around DC.
+//!
+//! Mask *generation* is total: degenerate parameters produce degenerate
+//! masks rather than panicking, and [`MaskConfig::validate`] is the single
+//! gate both the config/CLI layer and [`crate::coordinator::JobSpec`]
+//! submission call — an out-of-range fraction or a zero centre band is
+//! rejected with a clear error before any job is queued (counted in
+//! `ServiceMetrics.invalid`).
+
+use crate::rng::XorShift128Plus;
+use anyhow::{bail, Result};
+use std::collections::BTreeSet;
+
+/// Mask family selector.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum MaskKind {
+    /// Variable-density Cartesian phase-encode lines.
+    Cartesian,
+    /// Equally-spaced radial spokes through DC.
+    Radial,
+}
+
+impl MaskKind {
+    pub fn parse(s: &str) -> Result<Self> {
+        Ok(match s {
+            "cartesian" => Self::Cartesian,
+            "radial" => Self::Radial,
+            other => bail!("unknown mask kind '{other}' (cartesian|radial)"),
+        })
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            Self::Cartesian => "cartesian",
+            Self::Radial => "radial",
+        }
+    }
+}
+
+/// Undersampling-mask parameters. `fraction` is the target fraction of
+/// acquired lines/spokes relative to a full acquisition (`r` of either);
+/// `center_band` is the half-width of the always-acquired low-frequency
+/// region around DC.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct MaskConfig {
+    pub kind: MaskKind,
+    pub fraction: f32,
+    pub center_band: usize,
+}
+
+impl Default for MaskConfig {
+    fn default() -> Self {
+        Self { kind: MaskKind::Cartesian, fraction: 0.4, center_band: 4 }
+    }
+}
+
+impl MaskConfig {
+    /// The one shared parameter gate (config/CLI parse AND job submit):
+    /// the undersampling fraction must lie in `(0, 1]` and the centre
+    /// band must keep at least the DC line.
+    pub fn validate(&self) -> Result<()> {
+        if !(self.fraction > 0.0 && self.fraction <= 1.0) {
+            bail!(
+                "mri mask: undersampling fraction {} is not in (0, 1]",
+                self.fraction
+            );
+        }
+        if self.center_band == 0 {
+            bail!("mri mask: center_band must be >= 1 (the DC region is always acquired)");
+        }
+        Ok(())
+    }
+
+    /// Hashable fingerprint (`f32` bit-cast) — folded into the
+    /// coordinator's batch key via the operator pointer; kept for tests
+    /// and diagnostics.
+    pub fn key(&self) -> (MaskKind, u32, usize) {
+        (self.kind, self.fraction.to_bits(), self.center_band)
+    }
+}
+
+/// Wrapped frequency distance from DC: `min(k, r − k)`.
+fn wrapped(k: usize, r: usize) -> usize {
+    k.min(r - k)
+}
+
+/// A generated sampling pattern: the acquired k-space indices (flattened
+/// `ky · r + kx`, ascending) plus the parameters that produced it.
+#[derive(Clone)]
+pub struct SamplingMask {
+    r: usize,
+    cfg: MaskConfig,
+    points: Vec<usize>,
+}
+
+impl std::fmt::Debug for SamplingMask {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("SamplingMask")
+            .field("r", &self.r)
+            .field("kind", &self.cfg.kind.name())
+            .field("samples", &self.points.len())
+            .field("undersampling", &self.undersampling())
+            .finish()
+    }
+}
+
+impl SamplingMask {
+    /// Generate a mask. Deterministic in `(cfg, r, seed)`; `r` must be a
+    /// power of two ≥ 4 (the FFT grid). Does NOT validate `cfg` — see the
+    /// module docs; callers gate parameters through
+    /// [`MaskConfig::validate`].
+    pub fn generate(cfg: &MaskConfig, r: usize, seed: u64) -> Result<Self> {
+        anyhow::ensure!(
+            r.is_power_of_two() && r >= 4,
+            "mask grid size {r} must be a power of two >= 4"
+        );
+        let points = match cfg.kind {
+            MaskKind::Cartesian => cartesian_points(cfg, r, seed),
+            MaskKind::Radial => radial_points(cfg, r),
+        };
+        Ok(Self { r, cfg: *cfg, points })
+    }
+
+    pub fn r(&self) -> usize {
+        self.r
+    }
+
+    pub fn config(&self) -> &MaskConfig {
+        &self.cfg
+    }
+
+    /// Acquired k-space indices, flattened `ky · r + kx`, ascending.
+    pub fn points(&self) -> &[usize] {
+        &self.points
+    }
+
+    pub fn len(&self) -> usize {
+        self.points.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.points.is_empty()
+    }
+
+    /// Fraction of the full grid actually acquired.
+    pub fn undersampling(&self) -> f64 {
+        self.points.len() as f64 / (self.r * self.r) as f64
+    }
+
+    /// 0/1 occupancy image (row-major r×r) — mask figures.
+    pub fn to_image(&self) -> Vec<f32> {
+        let mut img = vec![0.0f32; self.r * self.r];
+        for &p in &self.points {
+            img[p] = 1.0;
+        }
+        img
+    }
+}
+
+fn cartesian_points(cfg: &MaskConfig, r: usize, seed: u64) -> Vec<usize> {
+    let mut lines: BTreeSet<usize> = (0..r).filter(|&k| wrapped(k, r) < cfg.center_band).collect();
+    let target = ((cfg.fraction as f64 * r as f64).round() as usize).max(1);
+
+    // Variable-density draws over the remaining lines: weight ∝ 1/(1+d)²
+    // where d is the wrapped distance from DC. CDF inversion per draw,
+    // sampling WITHOUT replacement (the picked line leaves the candidate
+    // set), so exactly min(target, r) lines come out after at most r
+    // draws — no collision retries, no attempt bound.
+    let mut rest: Vec<usize> = (0..r).filter(|k| !lines.contains(k)).collect();
+    let mut weights: Vec<f64> =
+        rest.iter().map(|&k| 1.0 / ((1 + wrapped(k, r)) as f64).powi(2)).collect();
+    let mut total: f64 = weights.iter().sum();
+    let mut rng = XorShift128Plus::new(seed ^ 0x4D52_4931); // "MRI1"
+    while lines.len() < target && !rest.is_empty() {
+        let mut u = rng.uniform() * total;
+        let mut pick = rest.len() - 1;
+        for (idx, &w) in weights.iter().enumerate() {
+            if u < w {
+                pick = idx;
+                break;
+            }
+            u -= w;
+        }
+        lines.insert(rest.swap_remove(pick));
+        total -= weights.swap_remove(pick);
+    }
+    lines.iter().flat_map(|&ky| (0..r).map(move |kx| ky * r + kx)).collect()
+}
+
+fn radial_points(cfg: &MaskConfig, r: usize) -> Vec<usize> {
+    let spokes = ((cfg.fraction as f64 * r as f64).round() as usize).max(1);
+    let mut pts: BTreeSet<usize> = BTreeSet::new();
+    for si in 0..spokes {
+        let theta = std::f64::consts::PI * si as f64 / spokes as f64;
+        let (sin_t, cos_t) = theta.sin_cos();
+        for t in -(r as i64) / 2..(r as i64) / 2 {
+            let ky = (t as f64 * sin_t).round() as i64;
+            let kx = (t as f64 * cos_t).round() as i64;
+            let ky = ky.rem_euclid(r as i64) as usize;
+            let kx = kx.rem_euclid(r as i64) as usize;
+            pts.insert(ky * r + kx);
+        }
+    }
+    // Fully-sampled centre block (wrapped in both axes).
+    for ky in 0..r {
+        if wrapped(ky, r) >= cfg.center_band {
+            continue;
+        }
+        for kx in 0..r {
+            if wrapped(kx, r) < cfg.center_band {
+                pts.insert(ky * r + kx);
+            }
+        }
+    }
+    pts.into_iter().collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn validate_gates_parameters() {
+        let ok = MaskConfig::default();
+        ok.validate().unwrap();
+        for bad_fraction in [0.0f32, -0.1, 1.5, f32::NAN] {
+            let cfg = MaskConfig { fraction: bad_fraction, ..ok };
+            let err = cfg.validate().unwrap_err().to_string();
+            assert!(err.contains("fraction"), "{bad_fraction}: {err}");
+        }
+        let cfg = MaskConfig { center_band: 0, ..ok };
+        assert!(cfg.validate().unwrap_err().to_string().contains("center_band"));
+        // Full sampling is legal (fraction = 1).
+        MaskConfig { fraction: 1.0, ..ok }.validate().unwrap();
+    }
+
+    #[test]
+    fn generation_is_deterministic_and_sorted() {
+        let cfg = MaskConfig { fraction: 0.5, ..Default::default() };
+        let a = SamplingMask::generate(&cfg, 64, 7).unwrap();
+        let b = SamplingMask::generate(&cfg, 64, 7).unwrap();
+        assert_eq!(a.points(), b.points());
+        assert!(a.points().windows(2).all(|w| w[0] < w[1]), "ascending, deduped");
+        let c = SamplingMask::generate(&cfg, 64, 8).unwrap();
+        assert_ne!(a.points(), c.points(), "seed changes the drawn lines");
+    }
+
+    #[test]
+    fn cartesian_keeps_dc_and_hits_the_target_fraction() {
+        for (r, fraction) in [(32usize, 0.4f32), (64, 0.3), (64, 1.0)] {
+            let cfg = MaskConfig { fraction, ..Default::default() };
+            let m = SamplingMask::generate(&cfg, r, 3).unwrap();
+            assert!(m.points().contains(&0), "DC acquired (r={r})");
+            let lines = m.len() / r;
+            assert_eq!(m.len() % r, 0, "whole lines only");
+            let target = ((fraction as f64 * r as f64).round() as usize)
+                .max((2 * cfg.center_band).saturating_sub(1));
+            assert_eq!(lines, target.min(r), "r={r} fraction={fraction}");
+        }
+    }
+
+    #[test]
+    fn radial_covers_center_and_undersamples() {
+        let cfg =
+            MaskConfig { kind: MaskKind::Radial, fraction: 0.4, center_band: 3 };
+        let m = SamplingMask::generate(&cfg, 64, 0).unwrap();
+        assert!(m.points().contains(&0), "DC acquired");
+        // Centre block fully present (wrapped coordinates).
+        for ky in [0usize, 1, 2, 62, 63] {
+            for kx in [0usize, 1, 2, 62, 63] {
+                assert!(m.points().contains(&(ky * 64 + kx)), "({ky},{kx})");
+            }
+        }
+        assert!(m.undersampling() < 0.6, "radial at 0.4 undersamples: {}", m.undersampling());
+        assert!(m.undersampling() > 0.05);
+    }
+
+    #[test]
+    fn degenerate_configs_generate_without_panicking() {
+        // Generation is total; validation is the gate.
+        let zero = MaskConfig { fraction: 0.0, ..Default::default() };
+        let m = SamplingMask::generate(&zero, 16, 1).unwrap();
+        assert!(!m.is_empty(), "centre band still acquired");
+        let no_band =
+            MaskConfig { center_band: 0, fraction: 0.25, ..Default::default() };
+        SamplingMask::generate(&no_band, 16, 1).unwrap();
+    }
+
+    #[test]
+    fn non_power_of_two_grid_rejected() {
+        let err = SamplingMask::generate(&MaskConfig::default(), 48, 0).unwrap_err();
+        assert!(err.to_string().contains("power of two"));
+    }
+
+    #[test]
+    fn mask_image_marks_points() {
+        let m = SamplingMask::generate(&MaskConfig::default(), 16, 2).unwrap();
+        let img = m.to_image();
+        assert_eq!(img.iter().filter(|&&v| v == 1.0).count(), m.len());
+    }
+}

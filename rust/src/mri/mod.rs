@@ -1,0 +1,181 @@
+//! MRI workload — recovery of brain images from undersampled Fourier
+//! measurements (the paper's second application, §10).
+//!
+//! This is the crate's first **structured-operator** workload: the
+//! measurement matrix is never materialized. An MRI scanner acquires a
+//! subset of the image's 2-D Fourier coefficients (k-space); recovery
+//! solves `y ≈ S F_u x` for an s-sparse image `x`, with `S` the
+//! undersampling mask and `F_u` the unitary 2-D DFT. The pieces:
+//!
+//! * [`phantom`] — the Shepp–Logan ground-truth image and its s-sparse
+//!   recovery target ([`phantom::sparse_phantom`]).
+//! * [`mask`] — Cartesian variable-density and radial undersampling
+//!   patterns ([`SamplingMask`]), parameter-gated by
+//!   [`MaskConfig::validate`] at config parse *and* job submission.
+//! * [`op`] — [`PartialFourierOp`], the matrix-free
+//!   [`crate::solver::MeasurementOp`] (FFT forward, exact-adjoint
+//!   inverse FFT backward), its dense materialization
+//!   ([`PartialFourierOp::to_mat`]) for parity and baselines, and the
+//!   low-precision sampling path ([`LowPrecFourierOp`] +
+//!   [`lowprec_problem`]): observation and per-iteration k-space traffic
+//!   stochastically quantized to b ∈ {2, 4, 8} bits with per-readout
+//!   block scales. The [`op`] module docs spell out exactly what is
+//!   quantized when Φ is implicit.
+//!
+//! Matrix-free problems run under `SolverKind::Niht` on the dense-f32
+//! native engine via the facade's generic `OpKernel` driver — and they
+//! are servable: `coordinator::OperatorSpec::PartialFourier` carries the
+//! shared operator (and optional bit width) through `JobSpec`,
+//! `BatchKey` and submit-time validation, pinned bit-for-bit against the
+//! facade by `tests/mri_serving.rs`.
+
+pub mod mask;
+pub mod op;
+pub mod phantom;
+
+pub use mask::{MaskConfig, MaskKind, SamplingMask};
+pub use op::{lowprec_problem, LowPrecFourierOp, PartialFourierOp, QUANT_BLOCK};
+
+use crate::solver::MeasurementOp;
+use anyhow::Result;
+use std::sync::Arc;
+
+/// MRI experiment parameters (the `mri.*` config keys).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct MriConfig {
+    /// Image resolution r (pixels per axis, power of two ≥ 8).
+    pub resolution: usize,
+    /// Undersampling pattern parameters.
+    pub mask: MaskConfig,
+    /// Bit width of the low-precision sampling path (2 | 4 | 8), or 0 to
+    /// run the f32 path only.
+    pub bits: u8,
+    /// Recovery sparsity s, or 0 for the auto default `max(8, n/12)`.
+    pub sparsity: usize,
+}
+
+impl Default for MriConfig {
+    fn default() -> Self {
+        Self { resolution: 64, mask: MaskConfig::default(), bits: 8, sparsity: 0 }
+    }
+}
+
+impl MriConfig {
+    /// The resolved sparsity target.
+    pub fn effective_sparsity(&self) -> usize {
+        if self.sparsity == 0 {
+            (self.resolution * self.resolution / 12).max(8)
+        } else {
+            self.sparsity
+        }
+    }
+
+    /// Cross-field gate (config file / CLI parse): mask parameters via
+    /// the shared [`MaskConfig::validate`], grid and bit-width sanity.
+    pub fn validate(&self) -> Result<()> {
+        anyhow::ensure!(
+            self.resolution.is_power_of_two() && self.resolution >= 8,
+            "mri.resolution {} must be a power of two >= 8 (radix-2 FFT grid)",
+            self.resolution
+        );
+        self.mask.validate()?;
+        anyhow::ensure!(
+            matches!(self.bits, 0 | 2 | 4 | 8),
+            "mri.bits {} must be 0 (f32) or a packed width (2|4|8)",
+            self.bits
+        );
+        anyhow::ensure!(
+            self.effective_sparsity() <= self.resolution * self.resolution,
+            "mri.sparsity {} exceeds the image dimension",
+            self.sparsity
+        );
+        Ok(())
+    }
+}
+
+/// A fully synthesized MRI recovery problem: the shared operator, the
+/// (noiseless, f32) observations, and the ground truth.
+#[derive(Debug, Clone)]
+pub struct MriProblem {
+    /// The matrix-free operator, shareable across jobs (batch identity).
+    pub op: Arc<PartialFourierOp>,
+    /// f32 observations `Φ x_true` (quantize via [`lowprec_problem`]).
+    pub y: Vec<f32>,
+    /// The s-sparse phantom the recovery targets.
+    pub x_true: Vec<f32>,
+    pub s: usize,
+    pub r: usize,
+}
+
+impl MriProblem {
+    /// Build from validated configuration; `seed` drives the mask draw.
+    pub fn build(cfg: &MriConfig, seed: u64) -> Result<Self> {
+        cfg.validate()?;
+        let r = cfg.resolution;
+        let s = cfg.effective_sparsity();
+        let x_true = phantom::sparse_phantom(r, s);
+        let mask = SamplingMask::generate(&cfg.mask, r, seed)?;
+        let op = Arc::new(PartialFourierOp::new(mask));
+        let y = op.apply(&x_true);
+        Ok(Self { op, y, x_true, s, r })
+    }
+
+    pub fn n(&self) -> usize {
+        self.r * self.r
+    }
+
+    pub fn m(&self) -> usize {
+        self.y.len()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn config_defaults_validate_and_resolve_sparsity() {
+        let cfg = MriConfig::default();
+        cfg.validate().unwrap();
+        assert_eq!(cfg.effective_sparsity(), 64 * 64 / 12);
+        let explicit = MriConfig { sparsity: 100, ..cfg };
+        assert_eq!(explicit.effective_sparsity(), 100);
+    }
+
+    #[test]
+    fn config_rejects_bad_parameters() {
+        let ok = MriConfig::default();
+        assert!(MriConfig { resolution: 48, ..ok }.validate().is_err());
+        assert!(MriConfig { resolution: 4, ..ok }.validate().is_err());
+        assert!(MriConfig { bits: 3, ..ok }.validate().is_err());
+        assert!(MriConfig { bits: 16, ..ok }.validate().is_err());
+        MriConfig { bits: 0, ..ok }.validate().unwrap();
+        let bad_mask =
+            MriConfig { mask: MaskConfig { fraction: 0.0, ..ok.mask }, ..ok };
+        assert!(bad_mask.validate().is_err());
+        assert!(MriConfig { sparsity: 5000, resolution: 8, ..ok }.validate().is_err());
+    }
+
+    #[test]
+    fn problem_build_is_consistent() {
+        let cfg = MriConfig { resolution: 16, sparsity: 20, ..Default::default() };
+        let p = MriProblem::build(&cfg, 3).unwrap();
+        assert_eq!(p.n(), 256);
+        assert_eq!(p.m(), 2 * p.op.mask().len());
+        assert_eq!(p.y.len(), p.m());
+        assert_eq!(p.s, 20);
+        assert!(p.x_true.iter().filter(|&&v| v != 0.0).count() <= 20);
+        // Same seed, same problem.
+        let q = MriProblem::build(&cfg, 3).unwrap();
+        assert_eq!(p.y, q.y);
+    }
+
+    #[test]
+    fn build_rejects_invalid_config() {
+        let cfg = MriConfig {
+            mask: MaskConfig { fraction: 1.5, ..Default::default() },
+            ..Default::default()
+        };
+        assert!(MriProblem::build(&cfg, 0).is_err());
+    }
+}

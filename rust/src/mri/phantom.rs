@@ -1,0 +1,112 @@
+//! Shepp–Logan-style head phantom — the ground-truth image of the MRI
+//! workload (the paper evaluates MRI recovery on brain images; the
+//! standard synthetic stand-in is the Shepp–Logan phantom, fully
+//! determined by ten ellipses, so every experiment is reproducible from
+//! the grid size alone).
+//!
+//! The intensities are the "modified" (Toft) contrast variant — the
+//! classical values differ by ~1e-2 between tissues, which vanishes under
+//! 8-bit quantization and PGM dumps.
+
+use crate::algorithms::support::hard_threshold;
+
+/// One ellipse: (additive intensity, semi-axis a, semi-axis b, centre x₀,
+/// centre y₀, rotation φ in degrees). Coordinates live in `[-1, 1]²`.
+const ELLIPSES: [(f32, f32, f32, f32, f32, f32); 10] = [
+    (1.0, 0.69, 0.92, 0.0, 0.0, 0.0),
+    (-0.8, 0.6624, 0.874, 0.0, -0.0184, 0.0),
+    (-0.2, 0.11, 0.31, 0.22, 0.0, -18.0),
+    (-0.2, 0.16, 0.41, -0.22, 0.0, 18.0),
+    (0.1, 0.21, 0.25, 0.0, 0.35, 0.0),
+    (0.1, 0.046, 0.046, 0.0, 0.1, 0.0),
+    (0.1, 0.046, 0.046, 0.0, -0.1, 0.0),
+    (0.1, 0.046, 0.023, -0.08, -0.605, 0.0),
+    (0.1, 0.023, 0.023, 0.0, -0.606, 0.0),
+    (0.1, 0.023, 0.046, 0.06, -0.605, 0.0),
+];
+
+/// Rasterize the phantom onto an `r × r` row-major grid (row 0 is the top
+/// of the head). Values are sums of ellipse intensities, in `[0, 1]`-ish
+/// range (the skull ring is 1.0, tissue ~0.1–0.4, background 0).
+pub fn shepp_logan(r: usize) -> Vec<f32> {
+    assert!(r >= 2, "phantom needs at least a 2x2 grid");
+    let mut img = vec![0.0f32; r * r];
+    for i in 0..r {
+        // Pixel centres; image row 0 maps to y = +1 (top).
+        let y = -(2.0 * (i as f32 + 0.5) / r as f32 - 1.0);
+        for j in 0..r {
+            let x = 2.0 * (j as f32 + 0.5) / r as f32 - 1.0;
+            let mut v = 0.0f32;
+            for &(a, ax, ay, x0, y0, phi_deg) in ELLIPSES.iter() {
+                let th = phi_deg.to_radians();
+                let (st, ct) = th.sin_cos();
+                let xr = (x - x0) * ct + (y - y0) * st;
+                let yr = -(x - x0) * st + (y - y0) * ct;
+                if (xr / ax) * (xr / ax) + (yr / ay) * (yr / ay) <= 1.0 {
+                    v += a;
+                }
+            }
+            img[i * r + j] = v;
+        }
+    }
+    img
+}
+
+/// The `s`-sparse recovery target: keep the `s` largest-magnitude pixels
+/// (IHT recovers s-sparse signals; the phantom's bright structure — skull
+/// ring and interior features — survives, the flat tissue floor does
+/// not). This is [`hard_threshold`], i.e. exactly the H_s the solvers
+/// apply.
+pub fn sparse_phantom(r: usize, s: usize) -> Vec<f32> {
+    hard_threshold(&shepp_logan(r), s)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::algorithms::support::support_of;
+
+    #[test]
+    fn phantom_shape_and_range() {
+        let img = shepp_logan(32);
+        assert_eq!(img.len(), 32 * 32);
+        let max = img.iter().cloned().fold(f32::MIN, f32::max);
+        let min = img.iter().cloned().fold(f32::MAX, f32::min);
+        assert!(max <= 1.0 + 1e-6 && max > 0.5, "skull ring present: max={max}");
+        assert!(min >= -1e-6, "intensities are non-negative: min={min}");
+        // Corners are background.
+        assert_eq!(img[0], 0.0);
+        assert_eq!(img[32 * 32 - 1], 0.0);
+        // Centre is inside the head (brain tissue, not background).
+        assert!(img[16 * 32 + 16] > 0.0);
+    }
+
+    #[test]
+    fn phantom_is_deterministic() {
+        assert_eq!(shepp_logan(16), shepp_logan(16));
+    }
+
+    #[test]
+    fn sparse_phantom_is_s_sparse_and_keeps_the_bright_ring() {
+        let r = 32;
+        let s = 80;
+        let sp = sparse_phantom(r, s);
+        let supp = support_of(&sp);
+        assert!(supp.len() <= s);
+        assert!(!supp.is_empty());
+        // Every kept pixel matches the full phantom.
+        let full = shepp_logan(r);
+        for &i in &supp {
+            assert_eq!(sp[i], full[i]);
+        }
+        // The kept set is the brightest: min kept >= max dropped.
+        let min_kept = supp.iter().map(|&i| sp[i].abs()).fold(f32::MAX, f32::min);
+        let max_dropped = full
+            .iter()
+            .enumerate()
+            .filter(|&(i, _)| !supp.contains(&i))
+            .map(|(_, v)| v.abs())
+            .fold(0.0f32, f32::max);
+        assert!(min_kept >= max_dropped - 1e-6);
+    }
+}

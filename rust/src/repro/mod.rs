@@ -10,6 +10,7 @@
 //! *shapes* are grid-size independent (verified by the r-sweep in fig1).
 
 pub mod fig1;
+pub mod fig10;
 pub mod fig11;
 pub mod fig3;
 pub mod fig4;
@@ -23,7 +24,7 @@ use crate::config::LpcsConfig;
 use anyhow::{bail, Result};
 
 pub const ALL: &[&str] =
-    &["fig1", "fig3", "fig4", "fig5", "fig6", "fig7", "fig8", "fig9", "fig11"];
+    &["fig1", "fig3", "fig4", "fig5", "fig6", "fig7", "fig8", "fig9", "fig10", "fig11"];
 
 /// Run one figure driver (or `all`).
 pub fn run(which: &str, cfg: &LpcsConfig) -> Result<()> {
@@ -36,6 +37,7 @@ pub fn run(which: &str, cfg: &LpcsConfig) -> Result<()> {
         "fig7" => fig7::run(cfg),
         "fig8" => fig8::run(cfg),
         "fig9" => fig9::run(cfg),
+        "fig10" => fig10::run(cfg),
         "fig11" => fig11::run(cfg),
         "all" => {
             for f in ALL {

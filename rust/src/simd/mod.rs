@@ -12,10 +12,11 @@
 //! * [`avx2::Avx2`] (x86/x86_64 only) — `_mm256_maddubs_epi16`-class integer
 //!   dots, in-register 2/4-bit field unpack, and `_mm256_fmadd_ps` mixed
 //!   int→f32 dots, selected at runtime via `is_x86_feature_detected!`.
-//! * [`neon::Neon`] (aarch64 only) — a stub that currently delegates to the
-//!   scalar loops; the module exists so the dispatch seam and the test
-//!   matrix are already in place when real NEON kernels land (see ROADMAP
-//!   "Open items").
+//! * [`neon::Neon`] (aarch64 only) — real NEON for the mixed int·f32
+//!   kernels (`vmovl` widening + `vcvtq_f32_s32` + four `vfmaq_f32`
+//!   chains: `dot_i8_f32`, `dot_u8_f32`, `scale_add_i8`); the pure
+//!   integer packed kernels still delegate to the scalar loops (see
+//!   ROADMAP "Open items").
 //!
 //! Dispatch is **per call-site, not per element**: `active()` resolves once
 //! (cached) to a `&'static dyn Kernels`, callers hoist it out of their row

@@ -1,16 +1,25 @@
-//! NEON backend stub (aarch64).
+//! NEON backend (aarch64).
 //!
-//! The dispatch seam, trait plumbing, and parity test matrix already cover
-//! this backend; the kernels currently delegate to the scalar reference,
-//! which LLVM autovectorizes reasonably well on aarch64. Real NEON kernels
-//! still need (see ROADMAP "Open items"):
+//! The mixed int·f32 kernels are real NEON now: `vmovl`-chain widening
+//! (i8 → i16 → i32), `vcvtq_f32_s32`/`vcvtq_f32_u32` conversion and four
+//! independent `vfmaq_f32` accumulator chains — the aarch64 twin of the
+//! AVX2 `VPMOVSXBD` + `VFMADD` path, covering [`Kernels::dot_i8_f32`],
+//! [`Kernels::dot_u8_f32`] and [`Kernels::scale_add_i8`]. NEON is a
+//! baseline feature of every aarch64 target rustc supports, so there is
+//! no runtime feature check to fail.
+//!
+//! Still delegating to the scalar reference (see ROADMAP "Open items"):
 //! * `vdotq_s32`/`smull`-based integer dots for `packed_field_dot_q8`;
-//! * `vtbl`-free 2/4-bit field unpack via `vand`/`vshr` + `vzip`;
-//! * `vcvtq_f32_s32` + `vfmaq_f32` chains for the mixed int·f32 dots.
+//! * `vtbl`-free 2/4-bit field unpack via `vand`/`vshr` + `vzip`.
+//!
+//! The parity matrix (`tests/simd_parity.rs` + the unit tests in
+//! [`super`]) exercises every kernel here against the scalar reference on
+//! any aarch64 host.
 
 use super::{Backend, Kernels};
+use core::arch::aarch64::*;
 
-/// The NEON backend (currently a correct-by-delegation stub).
+/// The NEON backend (unit struct; stateless).
 pub struct Neon;
 
 impl Kernels for Neon {
@@ -23,11 +32,15 @@ impl Kernels for Neon {
     }
 
     fn dot_i8_f32(&self, row: &[i8], x: &[f32]) -> f32 {
-        super::scalar::dot_i8_f32(row, x)
+        debug_assert_eq!(row.len(), x.len());
+        // SAFETY: NEON is unconditionally available on aarch64.
+        unsafe { dot_i8_f32(row, x) }
     }
 
     fn dot_u8_f32(&self, row: &[u8], x: &[f32]) -> f32 {
-        super::scalar::dot_u8_f32(row, x)
+        debug_assert_eq!(row.len(), x.len());
+        // SAFETY: as above.
+        unsafe { dot_u8_f32(row, x) }
     }
 
     fn decode_row(&self, words: &[u64], bits: u8, n: usize, out: &mut [i8]) {
@@ -39,6 +52,105 @@ impl Kernels for Neon {
     }
 
     fn scale_add_i8(&self, y: &mut [f32], row: &[i8], c: f32) {
-        super::scalar::scale_add_i8(y, row, c)
+        debug_assert_eq!(y.len(), row.len());
+        // SAFETY: as above.
+        unsafe { scale_add_i8(y, row, c) }
+    }
+
+    fn f32_grain(&self) -> usize {
+        8 // the inner loops step 8/16 codes; 4-lane FMAs start at multiples of 8
+    }
+}
+
+/// Widen 16 i8 codes to four f32x4 vectors (sign-extended).
+#[inline]
+#[target_feature(enable = "neon")]
+unsafe fn widen_i8x16(b: int8x16_t) -> (float32x4_t, float32x4_t, float32x4_t, float32x4_t) {
+    let lo = vmovl_s8(vget_low_s8(b));
+    let hi = vmovl_s8(vget_high_s8(b));
+    (
+        vcvtq_f32_s32(vmovl_s16(vget_low_s16(lo))),
+        vcvtq_f32_s32(vmovl_s16(vget_high_s16(lo))),
+        vcvtq_f32_s32(vmovl_s16(vget_low_s16(hi))),
+        vcvtq_f32_s32(vmovl_s16(vget_high_s16(hi))),
+    )
+}
+
+#[target_feature(enable = "neon")]
+unsafe fn dot_i8_f32(row: &[i8], x: &[f32]) -> f32 {
+    let n = row.len();
+    let rp = row.as_ptr();
+    let xp = x.as_ptr();
+    let mut acc0 = vdupq_n_f32(0.0);
+    let mut acc1 = vdupq_n_f32(0.0);
+    let mut acc2 = vdupq_n_f32(0.0);
+    let mut acc3 = vdupq_n_f32(0.0);
+    let mut i = 0usize;
+    while i + 16 <= n {
+        let (v0, v1, v2, v3) = widen_i8x16(vld1q_s8(rp.add(i)));
+        acc0 = vfmaq_f32(acc0, v0, vld1q_f32(xp.add(i)));
+        acc1 = vfmaq_f32(acc1, v1, vld1q_f32(xp.add(i + 4)));
+        acc2 = vfmaq_f32(acc2, v2, vld1q_f32(xp.add(i + 8)));
+        acc3 = vfmaq_f32(acc3, v3, vld1q_f32(xp.add(i + 12)));
+        i += 16;
+    }
+    let mut s = vaddvq_f32(vaddq_f32(vaddq_f32(acc0, acc1), vaddq_f32(acc2, acc3)));
+    while i < n {
+        s += *rp.add(i) as f32 * *xp.add(i);
+        i += 1;
+    }
+    s
+}
+
+#[target_feature(enable = "neon")]
+unsafe fn dot_u8_f32(row: &[u8], x: &[f32]) -> f32 {
+    let n = row.len();
+    let rp = row.as_ptr();
+    let xp = x.as_ptr();
+    let mut acc0 = vdupq_n_f32(0.0);
+    let mut acc1 = vdupq_n_f32(0.0);
+    let mut acc2 = vdupq_n_f32(0.0);
+    let mut acc3 = vdupq_n_f32(0.0);
+    let mut i = 0usize;
+    while i + 16 <= n {
+        let b = vld1q_u8(rp.add(i));
+        let lo = vmovl_u8(vget_low_u8(b));
+        let hi = vmovl_u8(vget_high_u8(b));
+        let v0 = vcvtq_f32_u32(vmovl_u16(vget_low_u16(lo)));
+        let v1 = vcvtq_f32_u32(vmovl_u16(vget_high_u16(lo)));
+        let v2 = vcvtq_f32_u32(vmovl_u16(vget_low_u16(hi)));
+        let v3 = vcvtq_f32_u32(vmovl_u16(vget_high_u16(hi)));
+        acc0 = vfmaq_f32(acc0, v0, vld1q_f32(xp.add(i)));
+        acc1 = vfmaq_f32(acc1, v1, vld1q_f32(xp.add(i + 4)));
+        acc2 = vfmaq_f32(acc2, v2, vld1q_f32(xp.add(i + 8)));
+        acc3 = vfmaq_f32(acc3, v3, vld1q_f32(xp.add(i + 12)));
+        i += 16;
+    }
+    let mut s = vaddvq_f32(vaddq_f32(vaddq_f32(acc0, acc1), vaddq_f32(acc2, acc3)));
+    while i < n {
+        s += *rp.add(i) as f32 * *xp.add(i);
+        i += 1;
+    }
+    s
+}
+
+#[target_feature(enable = "neon")]
+unsafe fn scale_add_i8(y: &mut [f32], row: &[i8], c: f32) {
+    let n = y.len();
+    let rp = row.as_ptr();
+    let yp = y.as_mut_ptr();
+    let vc = vdupq_n_f32(c);
+    let mut i = 0usize;
+    while i + 8 <= n {
+        let w = vmovl_s8(vld1_s8(rp.add(i)));
+        let v0 = vcvtq_f32_s32(vmovl_s16(vget_low_s16(w)));
+        let v1 = vcvtq_f32_s32(vmovl_s16(vget_high_s16(w)));
+        vst1q_f32(yp.add(i), vfmaq_f32(vld1q_f32(yp.add(i)), v0, vc));
+        vst1q_f32(yp.add(i + 4), vfmaq_f32(vld1q_f32(yp.add(i + 4)), v1, vc));
+        i += 8;
+    }
+    while i < n {
+        *yp.add(i) += c * *rp.add(i) as f32;
+        i += 1;
     }
 }

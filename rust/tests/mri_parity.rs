@@ -1,0 +1,149 @@
+//! MRI operator parity: the matrix-free FFT path against a densely
+//! materialized DFT matrix — raw products and through the facade's
+//! generic `OpKernel` NIHT driver — plus the FFT-vs-naive-DFT property
+//! sweep at the integration level.
+
+use lpcs::algorithms::NihtKernel;
+use lpcs::fft;
+use lpcs::linalg;
+use lpcs::mri::{MaskConfig, MaskKind, PartialFourierOp, SamplingMask};
+use lpcs::rng::XorShift128Plus;
+use lpcs::solver::{MeasurementOp, OpKernel};
+
+fn close(got: &[f32], want: &[f32], tol: f32, ctx: &str) {
+    assert_eq!(got.len(), want.len(), "{ctx}: length");
+    for (i, (g, w)) in got.iter().zip(want).enumerate() {
+        assert!((g - w).abs() <= tol, "{ctx}[{i}]: {g} vs {w}");
+    }
+}
+
+fn ops() -> Vec<(String, PartialFourierOp)> {
+    let mut out = Vec::new();
+    for r in [8usize, 16, 32] {
+        for kind in [MaskKind::Cartesian, MaskKind::Radial] {
+            let cfg = MaskConfig { kind, ..Default::default() };
+            let mask = SamplingMask::generate(&cfg, r, 11).unwrap();
+            out.push((format!("{} r={r}", kind.name()), PartialFourierOp::new(mask)));
+        }
+    }
+    out
+}
+
+#[test]
+fn apply_and_adjoint_match_the_materialized_dft_matrix() {
+    let mut rng = XorShift128Plus::new(1);
+    for (ctx, op) in ops() {
+        let mat = op.to_mat();
+        assert_eq!((mat.rows, mat.cols), (op.m(), op.n()), "{ctx}");
+        // Unit-scale data (the phantom's range): tolerance 1e-5 absolute.
+        let x: Vec<f32> = (0..op.n()).map(|_| rng.uniform_f32()).collect();
+        close(&op.apply(&x), &mat.matvec(&x), 1e-5, &format!("{ctx} apply"));
+        let v: Vec<f32> = (0..op.m()).map(|_| rng.uniform_f32() - 0.5).collect();
+        close(&op.apply_t(&v), &mat.matvec_t(&v), 1e-5, &format!("{ctx} adjoint"));
+        // Sparse apply (the line-search product) against the dense one.
+        let idx: Vec<usize> = (0..op.n()).step_by(op.n() / 7).collect();
+        let vals: Vec<f32> = idx.iter().map(|_| rng.uniform_f32()).collect();
+        close(
+            &op.apply_sparse(&idx, &vals),
+            &mat.matvec_sparse(&idx, &vals),
+            1e-5,
+            &format!("{ctx} apply_sparse"),
+        );
+    }
+}
+
+#[test]
+fn op_kernel_steps_match_through_the_facade_driver() {
+    // One full NIHT step (gradient, adaptive μ, thresholded iterate)
+    // computed by the SAME generic OpKernel over (a) the matrix-free
+    // operator and (b) its materialization: ≤ 1e-5 throughout.
+    let mut rng = XorShift128Plus::new(2);
+    for (ctx, op) in ops() {
+        let mat = op.to_mat();
+        let mut x_true = vec![0.0f32; op.n()];
+        for i in rng.choose_k(op.n(), 6) {
+            x_true[i] = 0.5 + rng.uniform_f32();
+        }
+        let y = op.apply(&x_true);
+        let y_mat = mat.matvec(&x_true);
+        close(&y, &y_mat, 1e-5, &format!("{ctx} y"));
+
+        let mut k_free = OpKernel::new(&op, &y);
+        let mut k_dense = OpKernel::new(&mat, &y);
+        let x0 = vec![0.0f32; op.n()];
+        let st_free = k_free.full_step(&x0, 6);
+        let st_dense = k_dense.full_step(&x0, 6);
+        close(&st_free.g, &st_dense.g, 1e-5, &format!("{ctx} gradient"));
+        assert!(
+            (st_free.mu - st_dense.mu).abs() <= 1e-4 * (1.0 + st_dense.mu.abs()),
+            "{ctx} mu: {} vs {}",
+            st_free.mu,
+            st_dense.mu
+        );
+        close(&st_free.x_next, &st_dense.x_next, 1e-4, &format!("{ctx} x_next"));
+    }
+}
+
+#[test]
+fn short_trajectories_track_between_matrix_free_and_dense() {
+    // A few full driver iterations end-to-end: supports match and the
+    // iterates stay within loose f32-drift tolerance (discrete support
+    // selection amplifies ulp differences, so this is deliberately not a
+    // bit-equality test).
+    use lpcs::algorithms::SolveOptions;
+    use lpcs::solver::{Problem, Recovery, SolverKind};
+    use std::sync::Arc;
+
+    let mask = SamplingMask::generate(&MaskConfig::default(), 16, 5).unwrap();
+    let op = Arc::new(PartialFourierOp::new(mask));
+    let mat = Arc::new(op.to_mat());
+    let mut x_true = vec![0.0f32; 256];
+    let mut rng = XorShift128Plus::new(3);
+    for i in rng.choose_k(256, 8) {
+        x_true[i] = 1.0 + rng.uniform_f32();
+    }
+    let y = op.apply(&x_true);
+    let opts = SolveOptions::default().with_max_iters(6).with_tol(0.0);
+    let free = Recovery::problem(Problem::with_op(op, y.clone(), 8))
+        .solver(SolverKind::Niht)
+        .options(opts.clone())
+        .run()
+        .unwrap();
+    let dense = Recovery::problem(Problem::new(mat, y, 8))
+        .solver(SolverKind::Niht)
+        .options(opts)
+        .run()
+        .unwrap();
+    assert_eq!(free.iterations, dense.iterations);
+    let diff = linalg::norm2(&linalg::sub(&free.x, &dense.x));
+    let norm = linalg::norm2(&dense.x);
+    assert!(diff <= 1e-3 * norm.max(1.0), "trajectory drift {diff} vs norm {norm}");
+}
+
+#[test]
+fn fft_property_sweep_against_naive_dft() {
+    // Integration-level restatement of the unit sweep: every power of two
+    // in 2..=1024, forward and inverse, relative L2 ≤ 1e-5.
+    let mut rng = XorShift128Plus::new(4);
+    let mut n = 2usize;
+    while n <= 1024 {
+        let re0 = rng.gaussian_vec(n);
+        let im0 = rng.gaussian_vec(n);
+        for inverse in [false, true] {
+            let (want_re, want_im) = fft::dft_naive(&re0, &im0, inverse);
+            let mut re = re0.clone();
+            let mut im = im0.clone();
+            fft::fft_inplace(&mut re, &mut im, inverse);
+            let mut num = 0.0f64;
+            let mut den = 0.0f64;
+            for i in 0..n {
+                num += ((re[i] - want_re[i]) as f64).powi(2)
+                    + ((im[i] - want_im[i]) as f64).powi(2);
+                den += (want_re[i] as f64).powi(2) + (want_im[i] as f64).powi(2);
+            }
+            let rel = (num / den.max(1e-30)).sqrt();
+            assert!(rel <= 1e-5, "n={n} inverse={inverse}: rel {rel}");
+        }
+        n *= 2;
+    }
+}

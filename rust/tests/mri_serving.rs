@@ -1,0 +1,222 @@
+//! MRI serving conformance: matrix-free partial-Fourier jobs round-trip
+//! the coordinator bit-for-bit against the facade, invalid mask
+//! parameters die at submit (counted in `ServiceMetrics.invalid`), and
+//! the acceptance pin: 8-bit quantized MRI recovery lands within 1 dB of
+//! the f32 matrix-free baseline on the 64×64 phantom.
+
+use lpcs::algorithms::SolveOptions;
+use lpcs::config::{EngineKind, ServiceConfig};
+use lpcs::coordinator::{JobSpec, JobState, ProblemHandle, RecoveryService};
+use lpcs::metrics;
+use lpcs::mri::{self, MaskConfig, MriConfig, MriProblem, PartialFourierOp, SamplingMask};
+use lpcs::solver::{Problem, Recovery, SolverKind};
+use std::path::PathBuf;
+use std::sync::atomic::Ordering;
+use std::sync::Arc;
+use std::time::Duration;
+
+fn service(workers: usize) -> RecoveryService {
+    RecoveryService::start(
+        ServiceConfig { workers, queue_capacity: 64, max_batch: 4, ..Default::default() },
+        SolveOptions::default(),
+        PathBuf::from("artifacts"),
+    )
+}
+
+fn problem(r: usize, seed: u64) -> MriProblem {
+    let cfg = MriConfig { resolution: r, ..Default::default() };
+    MriProblem::build(&cfg, seed).unwrap()
+}
+
+#[test]
+fn matrix_free_mri_jobs_round_trip_the_serving_path_bit_identically() {
+    let service = service(2);
+    let p = problem(32, 3);
+    // (bits, seed) cases: the f32 path and the quantized path at every
+    // packed width — each served result must equal the facade's
+    // `service_dispatch` run of the same spec bit-for-bit.
+    for (case, bits) in [None, Some(8u8), Some(4), Some(2)].into_iter().enumerate() {
+        let seed = 50 + case as u64;
+        let direct_problem = match bits {
+            None => Problem::with_op(p.op.clone(), p.y.clone(), p.s),
+            Some(b) => mri::lowprec_problem(p.op.clone(), &p.y, p.s, b, seed),
+        };
+        let direct = Recovery::problem(direct_problem)
+            .solver(SolverKind::Niht)
+            .engine(EngineKind::NativeDense)
+            .seed(seed)
+            .service_dispatch()
+            .run()
+            .unwrap_or_else(|e| panic!("bits={bits:?}: direct run failed: {e:#}"));
+
+        let handle = match bits {
+            None => ProblemHandle::partial_fourier(p.op.clone()),
+            Some(b) => ProblemHandle::low_prec_fourier(p.op.clone(), b),
+        };
+        let id = service
+            .submit(
+                JobSpec::builder(handle, p.y.clone(), p.s)
+                    .engine(EngineKind::NativeDense)
+                    .solver(SolverKind::Niht)
+                    .seed(seed)
+                    .build(),
+            )
+            .unwrap_or_else(|e| panic!("bits={bits:?}: submit failed: {e:#}"));
+        let out = service.wait(id, Duration::from_secs(120)).expect("job finishes");
+        assert_eq!(out.state, JobState::Done, "bits={bits:?}: {:?}", out.error);
+        let served = out.result.unwrap();
+        assert_eq!(served.x, direct.x, "bits={bits:?}: served x̂ ≠ facade x̂");
+        assert_eq!(served.iterations, direct.iterations, "bits={bits:?}");
+        assert_eq!(served.converged, direct.converged, "bits={bits:?}");
+    }
+    service.shutdown();
+}
+
+#[test]
+fn shared_op_jobs_batch_and_all_recover() {
+    // Several observations against ONE shared operator Arc — the MRI
+    // stream analog of the telescope's shared-Φ snapshot stream. All
+    // must complete through the scheduler/batcher with the operator as
+    // the batch identity.
+    let service = service(2);
+    let p = problem(16, 4);
+    let mut ids = Vec::new();
+    for k in 0..6u64 {
+        let handle = if k % 2 == 0 {
+            ProblemHandle::partial_fourier(p.op.clone())
+        } else {
+            ProblemHandle::low_prec_fourier(p.op.clone(), 8)
+        };
+        let id = service
+            .submit(
+                JobSpec::builder(handle, p.y.clone(), p.s)
+                    .engine(EngineKind::NativeDense)
+                    .solver(SolverKind::Niht)
+                    .seed(k)
+                    .build(),
+            )
+            .unwrap();
+        ids.push(id);
+    }
+    for id in ids {
+        let out = service.wait(id, Duration::from_secs(120)).expect("finishes");
+        assert_eq!(out.state, JobState::Done, "{:?}", out.error);
+        let x = out.result.unwrap().x;
+        // All jobs share y here, so every recovery resembles the truth
+        // (reference sim puts this scale at ~16.5 dB; the bound is a
+        // loose regression floor, not a quality claim).
+        assert!(
+            metrics::psnr(&x, &p.x_true) > 12.0,
+            "served reconstruction quality: {:.2} dB",
+            metrics::psnr(&x, &p.x_true)
+        );
+    }
+    assert_eq!(service.metrics().completed.load(Ordering::Relaxed), 6);
+    service.shutdown();
+}
+
+#[test]
+fn invalid_mask_parameters_rejected_at_submit_and_counted() {
+    let service = service(1);
+    // Build operators around degenerate masks (generation is total; the
+    // parameter gate lives in validation) and around a bad bit width.
+    let bad_fraction = SamplingMask::generate(
+        &MaskConfig { fraction: 0.0, ..Default::default() },
+        16,
+        0,
+    )
+    .unwrap();
+    let op_bad = Arc::new(PartialFourierOp::new(bad_fraction));
+    let m = ProblemHandle::partial_fourier(op_bad.clone()).m();
+    let err = service
+        .submit(
+            JobSpec::builder(ProblemHandle::partial_fourier(op_bad), vec![0.0; m], 4)
+                .engine(EngineKind::NativeDense)
+                .solver(SolverKind::Niht)
+                .build(),
+        )
+        .unwrap_err()
+        .to_string();
+    assert!(err.contains("invalid job spec"), "{err}");
+
+    let zero_band = SamplingMask::generate(
+        &MaskConfig { center_band: 0, fraction: 0.25, ..Default::default() },
+        16,
+        0,
+    )
+    .unwrap();
+    let op_band = Arc::new(PartialFourierOp::new(zero_band));
+    let m = ProblemHandle::partial_fourier(op_band.clone()).m();
+    assert!(service
+        .submit(
+            JobSpec::builder(ProblemHandle::partial_fourier(op_band), vec![0.0; m], 4)
+                .engine(EngineKind::NativeDense)
+                .solver(SolverKind::Niht)
+                .build(),
+        )
+        .is_err());
+
+    // Solver/engine surface violations for matrix-free jobs.
+    let good = SamplingMask::generate(&MaskConfig::default(), 16, 1).unwrap();
+    let op = Arc::new(PartialFourierOp::new(good));
+    let m = ProblemHandle::partial_fourier(op.clone()).m();
+    assert!(service
+        .submit(
+            JobSpec::builder(ProblemHandle::partial_fourier(op.clone()), vec![0.0; m], 4)
+                .engine(EngineKind::NativeDense)
+                .solver(SolverKind::Cosamp)
+                .build(),
+        )
+        .is_err());
+    assert!(service
+        .submit(
+            JobSpec::builder(ProblemHandle::low_prec_fourier(op, 8), vec![0.0; m], 4)
+                .engine(EngineKind::NativeQuant)
+                .solver(SolverKind::Niht)
+                .build(),
+        )
+        .is_err());
+
+    let metrics = service.metrics();
+    assert_eq!(metrics.invalid.load(Ordering::Relaxed), 4, "all four counted invalid");
+    assert_eq!(metrics.submitted.load(Ordering::Relaxed), 0, "no job id allocated");
+    service.shutdown();
+}
+
+#[test]
+fn eight_bit_recovery_within_one_db_of_f32_on_the_64x64_phantom() {
+    // The acceptance pin. Configuration chosen (and validated against a
+    // reference simulation) so the f32 baseline sits in the regime where
+    // quantization noise stays below reconstruction error: 64×64,
+    // variable-density Cartesian at fraction 0.35, centre band 4,
+    // s = n/10.
+    let cfg = MriConfig {
+        resolution: 64,
+        mask: MaskConfig { fraction: 0.35, center_band: 4, ..Default::default() },
+        sparsity: 64 * 64 / 10,
+        ..Default::default()
+    };
+    let p = MriProblem::build(&cfg, 1).unwrap();
+
+    let f32_rep = Recovery::problem(Problem::with_op(p.op.clone(), p.y.clone(), p.s))
+        .solver(SolverKind::Niht)
+        .run()
+        .unwrap();
+    let psnr_f32 = metrics::psnr(&f32_rep.x, &p.x_true);
+
+    let q8_rep = Recovery::problem(mri::lowprec_problem(p.op.clone(), &p.y, p.s, 8, 1))
+        .solver(SolverKind::Niht)
+        .seed(1)
+        .run()
+        .unwrap();
+    let psnr_q8 = metrics::psnr(&q8_rep.x, &p.x_true);
+
+    assert!(
+        psnr_f32 > 18.0,
+        "f32 baseline must reconstruct the phantom at all: {psnr_f32:.2} dB"
+    );
+    assert!(
+        psnr_q8 >= psnr_f32 - 1.0,
+        "8-bit sampling path within 1 dB of f32: {psnr_q8:.2} vs {psnr_f32:.2} dB"
+    );
+}

@@ -107,6 +107,48 @@ fn decode_row_backend_matrix_bit_identical() {
 }
 
 #[test]
+fn mixed_dot_kernels_backend_matrix() {
+    // The mixed int·f32 kernels (i8/u8 dots, scale-and-add) across every
+    // named backend and ragged lengths — this is the row that covers the
+    // NEON `vcvtq_f32_s32` + `vfmaq_f32` implementation on aarch64
+    // (backends unavailable on the host resolve to the scalar reference,
+    // so the matrix is runnable everywhere).
+    let scalar = simd::by_backend(Backend::Scalar);
+    let mut rng = XorShift128Plus::new(21);
+    for n in [0usize, 1, 15, 16, 17, 64, 127, 300] {
+        let irow: Vec<i8> = (0..n).map(|_| (rng.below(255) as i32 - 127) as i8).collect();
+        let urow: Vec<u8> = (0..n).map(|_| rng.below(129) as u8).collect();
+        let x = rng.gaussian_vec(n);
+        let base = rng.gaussian_vec(n);
+        let want_i = scalar.dot_i8_f32(&irow, &x);
+        let want_u = scalar.dot_u8_f32(&urow, &x);
+        let mut want_sa = base.clone();
+        scalar.scale_add_i8(&mut want_sa, &irow, -0.61);
+        for b in [Backend::Avx2, Backend::Neon, Backend::Scalar] {
+            let k = simd::by_backend(b);
+            let gi = k.dot_i8_f32(&irow, &x);
+            assert!(
+                (gi - want_i).abs() <= 1e-3 * (1.0 + want_i.abs()),
+                "{b:?} dot_i8 n={n}: {gi} vs {want_i}"
+            );
+            let gu = k.dot_u8_f32(&urow, &x);
+            assert!(
+                (gu - want_u).abs() <= 1e-3 * (1.0 + want_u.abs()),
+                "{b:?} dot_u8 n={n}: {gu} vs {want_u}"
+            );
+            let mut got_sa = base.clone();
+            k.scale_add_i8(&mut got_sa, &irow, -0.61);
+            for (g, w) in got_sa.iter().zip(&want_sa) {
+                assert!(
+                    (g - w).abs() <= 1e-4 * (1.0 + w.abs()),
+                    "{b:?} scale_add n={n}"
+                );
+            }
+        }
+    }
+}
+
+#[test]
 fn pool_single_thread_matches_parallel_exactly() {
     // Compute with default parallelism first, then pin the pool to one
     // thread and recompute: outputs must be bit-identical (same backend,

@@ -120,7 +120,10 @@ impl SolveOptions {
 }
 
 /// Per-iteration statistics (history entry / observer payload).
-#[derive(Debug, Clone, Copy)]
+/// `PartialEq` is the derived field-wise comparison with IEEE `f32`
+/// semantics (NaN ≠ NaN) — it exists for the wire codec's round-trip
+/// tests, which never carry NaN stats.
+#[derive(Debug, Clone, Copy, PartialEq)]
 pub struct IterStat {
     pub iter: usize,
     pub resid_nsq: f32,

@@ -140,6 +140,24 @@ impl Default for ServiceConfig {
     }
 }
 
+/// Wire-protocol settings (the network face of the recovery service).
+#[derive(Debug, Clone)]
+pub struct WireConfig {
+    /// Listen address for `lpcs serve` (e.g. `127.0.0.1:7070`; port 0
+    /// binds an ephemeral port). Empty = stay in-process (the classic
+    /// synthetic-stream demo).
+    pub listen: String,
+    /// Per-subscriber progress-queue depth: stats beyond this are shed
+    /// oldest-first rather than ever blocking a worker on a slow client.
+    pub sub_depth: usize,
+}
+
+impl Default for WireConfig {
+    fn default() -> Self {
+        Self { listen: String::new(), sub_depth: 64 }
+    }
+}
+
 /// Top-level configuration.
 #[derive(Debug, Clone)]
 pub struct LpcsConfig {
@@ -157,6 +175,7 @@ pub struct LpcsConfig {
     pub astro: AstroConfig,
     pub mri: MriConfig,
     pub service: ServiceConfig,
+    pub wire: WireConfig,
 }
 
 impl Default for LpcsConfig {
@@ -173,6 +192,7 @@ impl Default for LpcsConfig {
             astro: AstroConfig::default(),
             mri: MriConfig::default(),
             service: ServiceConfig::default(),
+            wire: WireConfig::default(),
         }
     }
 }
@@ -247,6 +267,8 @@ impl LpcsConfig {
             "service.max_wait_ms" => self.service.max_wait_ms = vf()? as u64,
             "service.sched_window" => self.service.sched_window = vf()? as usize,
             "service.starvation_ms" => self.service.starvation_ms = vf()? as u64,
+            "wire.listen" | "listen" => self.wire.listen = value.to_string(),
+            "wire.sub_depth" => self.wire.sub_depth = vf()? as usize,
             other => bail!("unknown config key '{other}'"),
         }
         Ok(())
@@ -290,6 +312,9 @@ impl LpcsConfig {
         }
         if self.service.sched_window == 0 {
             bail!("service.sched_window must be >= 1");
+        }
+        if self.wire.sub_depth == 0 {
+            bail!("wire.sub_depth must be >= 1 (progress queues need room for one stat)");
         }
         // The MRI mask gate (fraction ∈ (0,1], centre band ≥ 1, packed
         // bit widths) — same check the coordinator re-runs at submit.
@@ -374,6 +399,22 @@ mod tests {
         assert!(err.contains("cannot run on engine"), "{err}");
         c.set("engine", "native-dense").unwrap();
         c.validate().unwrap();
+    }
+
+    #[test]
+    fn wire_keys_roundtrip_and_validate() {
+        let mut c = LpcsConfig::default();
+        assert!(c.wire.listen.is_empty(), "default stays in-process");
+        c.set("wire.listen", "127.0.0.1:7070").unwrap();
+        c.set("wire.sub_depth", "8").unwrap();
+        assert_eq!(c.wire.listen, "127.0.0.1:7070");
+        assert_eq!(c.wire.sub_depth, 8);
+        c.validate().unwrap();
+        // `--listen` is the CLI-facing alias.
+        c.set("listen", "0.0.0.0:9000").unwrap();
+        assert_eq!(c.wire.listen, "0.0.0.0:9000");
+        c.set("wire.sub_depth", "0").unwrap();
+        assert!(c.validate().unwrap_err().to_string().contains("sub_depth"));
     }
 
     #[test]

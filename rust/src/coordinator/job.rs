@@ -7,7 +7,7 @@ use crate::linalg::Mat;
 use crate::mri::{self, PartialFourierOp};
 use crate::solver::{MeasurementOp, Problem, SolveRequest, SolverKey, SolverKind};
 use anyhow::Result;
-use std::collections::HashMap;
+use std::collections::{HashMap, VecDeque};
 use std::sync::{Arc, Condvar, Mutex};
 use std::time::{Duration, Instant};
 
@@ -346,6 +346,134 @@ pub struct JobOutcome {
     pub ran_for: Duration,
 }
 
+/// One event delivered to a progress subscriber: a per-iteration stat,
+/// then exactly one terminal outcome.
+#[derive(Debug, Clone)]
+pub enum ProgressEvent {
+    Stat(IterStat),
+    Terminal(JobOutcome),
+}
+
+#[derive(Debug)]
+struct SubInner {
+    /// Bounded stat buffer (drop-oldest on overflow).
+    buf: VecDeque<IterStat>,
+    /// Set once, delivered after every buffered stat.
+    terminal: Option<JobOutcome>,
+    terminal_taken: bool,
+    dropped: u64,
+    detached: bool,
+}
+
+/// A push-based progress subscription on one job: a bounded stat queue
+/// with **drop-oldest** overflow, so the producing worker NEVER blocks on
+/// a slow consumer — the consumer just sees gaps in the iteration stream
+/// (always keeping the freshest stats) and still receives exactly one
+/// [`ProgressEvent::Terminal`]. This is what the wire server bridges a
+/// `Subscribe` frame onto.
+#[derive(Debug)]
+pub struct ProgressSub {
+    depth: usize,
+    inner: Mutex<SubInner>,
+    ready: Condvar,
+}
+
+impl ProgressSub {
+    fn new(depth: usize) -> Arc<Self> {
+        Arc::new(Self {
+            depth: depth.max(1),
+            inner: Mutex::new(SubInner {
+                buf: VecDeque::new(),
+                terminal: None,
+                terminal_taken: false,
+                dropped: 0,
+                detached: false,
+            }),
+            ready: Condvar::new(),
+        })
+    }
+
+    /// Producer-side push; O(1), never blocks beyond the short buffer
+    /// lock. Returns how many stats were dropped to make room (0 or 1).
+    fn push_stat(&self, stat: IterStat) -> u64 {
+        let dropped = {
+            let mut g = self.inner.lock().unwrap();
+            if g.detached || g.terminal.is_some() {
+                return 0;
+            }
+            let mut dropped = 0;
+            if g.buf.len() >= self.depth {
+                g.buf.pop_front();
+                g.dropped += 1;
+                dropped = 1;
+            }
+            g.buf.push_back(stat);
+            dropped
+        };
+        self.ready.notify_all();
+        dropped
+    }
+
+    fn push_terminal(&self, outcome: JobOutcome) {
+        {
+            let mut g = self.inner.lock().unwrap();
+            if g.detached || g.terminal.is_some() {
+                return;
+            }
+            g.terminal = Some(outcome);
+        }
+        self.ready.notify_all();
+    }
+
+    /// Consumer-side pull: buffered stats in order, then the terminal
+    /// outcome once. `None` means timeout — or, after the terminal event
+    /// has been taken, that the stream is over.
+    pub fn recv(&self, timeout: Duration) -> Option<ProgressEvent> {
+        let deadline = Instant::now() + timeout;
+        let mut g = self.inner.lock().unwrap();
+        loop {
+            if let Some(stat) = g.buf.pop_front() {
+                return Some(ProgressEvent::Stat(stat));
+            }
+            if g.terminal_taken {
+                return None;
+            }
+            if let Some(out) = g.terminal.clone() {
+                g.terminal_taken = true;
+                return Some(ProgressEvent::Terminal(out));
+            }
+            let now = Instant::now();
+            if now >= deadline {
+                return None;
+            }
+            let (gg, _) = self.ready.wait_timeout(g, deadline - now).unwrap();
+            g = gg;
+        }
+    }
+
+    /// Total stats discarded by drop-oldest overflow.
+    pub fn dropped(&self) -> u64 {
+        self.inner.lock().unwrap().dropped
+    }
+
+    /// Whether the terminal event has been consumed (the stream is over).
+    pub fn finished(&self) -> bool {
+        let g = self.inner.lock().unwrap();
+        g.terminal_taken && g.buf.is_empty()
+    }
+
+    /// Mark the subscriber dead (client disconnected): the store prunes
+    /// detached subs on the next progress push, and further pushes are
+    /// no-ops.
+    pub fn detach(&self) {
+        self.inner.lock().unwrap().detached = true;
+    }
+
+    fn is_detached(&self) -> bool {
+        self.inner.lock().unwrap().detached
+    }
+}
+
 #[derive(Debug)]
 struct Record {
     state: JobState,
@@ -360,6 +488,31 @@ struct Record {
     /// the next iteration boundary; the job completes with its partial
     /// iterate.
     cancel: bool,
+    /// Push-based progress subscribers (wire clients); every stat fans
+    /// out here, and the terminal transition delivers the outcome.
+    subs: Vec<Arc<ProgressSub>>,
+}
+
+impl Record {
+    /// Terminal payload; callers ensure `state` is Done/Failed.
+    fn outcome(&self, id: JobId) -> JobOutcome {
+        let queued_for = self
+            .started
+            .unwrap_or_else(|| self.finished.unwrap())
+            .duration_since(self.submitted);
+        let ran_for = match (self.started, self.finished) {
+            (Some(s), Some(f)) => f.duration_since(s),
+            _ => Duration::ZERO,
+        };
+        JobOutcome {
+            id,
+            state: self.state,
+            result: self.result.clone(),
+            error: self.error.clone(),
+            queued_for,
+            ran_for,
+        }
+    }
 }
 
 /// Shared job table with completion signalling.
@@ -387,16 +540,45 @@ impl JobStore {
                 finished: None,
                 progress: None,
                 cancel: false,
+                subs: Vec::new(),
             },
         );
         assert!(prev.is_none(), "job id {id} reused");
     }
 
-    /// Stream the latest iteration stat for a running job (worker-side).
-    pub fn record_progress(&self, id: JobId, stat: IterStat) {
-        if let Some(r) = self.inner.lock().unwrap().get_mut(&id) {
-            r.progress = Some(stat);
+    /// Stream the latest iteration stat for a running job (worker-side)
+    /// and fan it out to every live subscriber. Bounded subscriber queues
+    /// drop their oldest stat instead of blocking, so this never stalls
+    /// the worker; the return value is how many stats were dropped that
+    /// way (for the service's `progress_dropped` counter). Detached
+    /// (disconnected) subscribers are pruned here.
+    pub fn record_progress(&self, id: JobId, stat: IterStat) -> u64 {
+        let mut g = self.inner.lock().unwrap();
+        let Some(r) = g.get_mut(&id) else { return 0 };
+        r.progress = Some(stat);
+        r.subs.retain(|s| !s.is_detached());
+        r.subs.iter().map(|s| s.push_stat(stat)).sum()
+    }
+
+    /// Register a push-based progress subscriber on a job: a bounded
+    /// queue of `depth` stats with drop-oldest overflow (see
+    /// [`ProgressSub`]). Subscribing to an already-terminal job yields
+    /// just the terminal event; unknown ids yield `None`. The latest
+    /// recorded stat (if any) is pre-buffered so late subscribers see
+    /// where the solve currently stands.
+    pub fn subscribe(&self, id: JobId, depth: usize) -> Option<Arc<ProgressSub>> {
+        let mut g = self.inner.lock().unwrap();
+        let r = g.get_mut(&id)?;
+        let sub = ProgressSub::new(depth);
+        if matches!(r.state, JobState::Done | JobState::Failed) {
+            sub.push_terminal(r.outcome(id));
+            return Some(sub);
         }
+        if let Some(stat) = r.progress {
+            sub.push_stat(stat);
+        }
+        r.subs.push(sub.clone());
+        Some(sub)
     }
 
     /// Latest streamed iteration stat, if the job has run any iterations.
@@ -451,6 +633,13 @@ impl JobStore {
             JobState::Queued => unreachable!(),
         }
         if matches!(next, JobState::Done | JobState::Failed) {
+            // Deliver the terminal event to every subscriber (after any
+            // still-buffered stats) and drop the registry — the stream is
+            // over, nothing further will be pushed.
+            let outcome = r.outcome(id);
+            for sub in r.subs.drain(..) {
+                sub.push_terminal(outcome.clone());
+            }
             drop(g);
             self.done.notify_all();
         }
@@ -486,22 +675,7 @@ impl JobStore {
             match g.get(&id) {
                 None => return None,
                 Some(r) if matches!(r.state, JobState::Done | JobState::Failed) => {
-                    let queued_for = r
-                        .started
-                        .unwrap_or_else(|| r.finished.unwrap())
-                        .duration_since(r.submitted);
-                    let ran_for = match (r.started, r.finished) {
-                        (Some(s), Some(f)) => f.duration_since(s),
-                        _ => Duration::ZERO,
-                    };
-                    return Some(JobOutcome {
-                        id,
-                        state: r.state,
-                        result: r.result.clone(),
-                        error: r.error.clone(),
-                        queued_for,
-                        ran_for,
-                    });
+                    return Some(r.outcome(id));
                 }
                 Some(_) => {
                     let now = Instant::now();
@@ -606,6 +780,79 @@ mod tests {
         s.complete(3, dummy_result());
         assert!(!s.request_cancel(3));
         assert!(!s.request_cancel(99), "unknown job");
+    }
+
+    fn stat(iter: usize) -> IterStat {
+        IterStat { iter, resid_nsq: 1.0 / (iter + 1) as f32, mu: 1.0, support_changed: false, shrink_count: 0 }
+    }
+
+    #[test]
+    fn subscriber_drop_oldest_keeps_latest_and_never_blocks() {
+        let s = JobStore::new();
+        s.insert_queued(1);
+        s.transition(1, JobState::Running);
+        let sub = s.subscribe(1, 3).expect("known job");
+        // Push 10 stats into a depth-3 queue: 7 drop (oldest first), the
+        // producer side never waits on the consumer.
+        let mut dropped = 0;
+        for i in 0..10 {
+            dropped += s.record_progress(1, stat(i));
+        }
+        assert_eq!(dropped, 7);
+        assert_eq!(sub.dropped(), 7);
+        s.complete(1, dummy_result());
+        // The consumer sees exactly the 3 freshest stats, in order, then
+        // the terminal event, then end-of-stream.
+        let mut iters = Vec::new();
+        loop {
+            match sub.recv(Duration::from_secs(5)) {
+                Some(ProgressEvent::Stat(st)) => iters.push(st.iter),
+                Some(ProgressEvent::Terminal(out)) => {
+                    assert_eq!(out.state, JobState::Done);
+                    break;
+                }
+                None => panic!("terminal must arrive"),
+            }
+        }
+        assert_eq!(iters, vec![7, 8, 9]);
+        assert!(sub.finished());
+        assert!(sub.recv(Duration::from_millis(1)).is_none(), "stream is over");
+    }
+
+    #[test]
+    fn subscribe_after_terminal_yields_outcome_and_unknown_is_none() {
+        let s = JobStore::new();
+        assert!(s.subscribe(42, 4).is_none(), "unknown job");
+        s.insert_queued(1);
+        s.transition(1, JobState::Running);
+        s.fail(1, "boom".into());
+        let sub = s.subscribe(1, 4).expect("terminal jobs still subscribe");
+        match sub.recv(Duration::from_secs(1)) {
+            Some(ProgressEvent::Terminal(out)) => {
+                assert_eq!(out.state, JobState::Failed);
+                assert_eq!(out.error.as_deref(), Some("boom"));
+            }
+            other => panic!("expected terminal, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn late_subscriber_sees_latest_stat_and_detached_subs_are_pruned() {
+        let s = JobStore::new();
+        s.insert_queued(1);
+        s.transition(1, JobState::Running);
+        s.record_progress(1, stat(5));
+        // A late subscriber is seeded with where the solve stands now.
+        let sub = s.subscribe(1, 4).unwrap();
+        match sub.recv(Duration::from_secs(1)) {
+            Some(ProgressEvent::Stat(st)) => assert_eq!(st.iter, 5),
+            other => panic!("expected the seeded stat, got {other:?}"),
+        }
+        // Detached (disconnected) subscribers stop accumulating.
+        sub.detach();
+        assert_eq!(s.record_progress(1, stat(6)), 0, "detached subs never drop");
+        assert!(sub.recv(Duration::from_millis(1)).is_none());
+        s.complete(1, dummy_result());
     }
 
     #[test]

@@ -35,6 +35,7 @@ pub mod sched;
 pub mod service;
 
 pub use job::{
-    JobId, JobOutcome, JobSpec, JobSpecBuilder, JobState, OpKey, OperatorSpec, ProblemHandle,
+    BatchKey, JobId, JobOutcome, JobSpec, JobSpecBuilder, JobState, OpKey, OperatorSpec,
+    ProblemHandle, ProgressEvent, ProgressSub,
 };
 pub use service::{RecoveryService, ServiceMetrics};

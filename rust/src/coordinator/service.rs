@@ -51,12 +51,19 @@ pub struct ServiceMetrics {
     /// Modeled device time accrued by performance-model engines
     /// (`fpga-model`), microseconds.
     pub modeled_us: AtomicU64,
+    /// Progress stats discarded by drop-oldest overflow on bounded
+    /// subscriber queues (slow consumers shed load here instead of
+    /// stalling workers).
+    pub progress_dropped: AtomicU64,
+    /// Wire subscribers whose connection died mid-stream (the server
+    /// dropped the subscription; the job itself kept running).
+    pub disconnects: AtomicU64,
 }
 
 impl ServiceMetrics {
     pub fn snapshot(&self) -> String {
         format!(
-            "submitted={} rejected={} invalid={} completed={} failed={} cancelled={} batches={} mean_batch={:.2} solve_ms={} modeled_ms={}",
+            "submitted={} rejected={} invalid={} completed={} failed={} cancelled={} batches={} mean_batch={:.2} solve_ms={} modeled_ms={} progress_dropped={} disconnects={}",
             self.submitted.load(Ordering::Relaxed),
             self.rejected.load(Ordering::Relaxed),
             self.invalid.load(Ordering::Relaxed),
@@ -68,6 +75,8 @@ impl ServiceMetrics {
                 / self.batches.load(Ordering::Relaxed).max(1) as f64,
             self.solve_us.load(Ordering::Relaxed) / 1000,
             self.modeled_us.load(Ordering::Relaxed) / 1000,
+            self.progress_dropped.load(Ordering::Relaxed),
+            self.disconnects.load(Ordering::Relaxed),
         )
     }
 }
@@ -151,11 +160,25 @@ impl RecoveryService {
         self.store.progress(id)
     }
 
+    /// Push-based progress stream for a job: a bounded queue of `depth`
+    /// stats with drop-oldest overflow, ending in exactly one terminal
+    /// event (see [`super::job::ProgressSub`]). A slow consumer can never
+    /// stall the worker — it just observes gaps. `None` for unknown ids.
+    /// This is what the wire server bridges `Subscribe` frames onto.
+    pub fn subscribe(&self, id: JobId, depth: usize) -> Option<Arc<super::job::ProgressSub>> {
+        self.store.subscribe(id, depth)
+    }
+
     /// Ask a job to stop at its next iteration boundary. The job still
     /// completes (with its partial iterate); returns false if it is
     /// unknown or already terminal.
     pub fn cancel(&self, id: JobId) -> bool {
         self.store.request_cancel(id)
+    }
+
+    /// Current lifecycle state of a job (`None` for unknown ids).
+    pub fn state_of(&self, id: JobId) -> Option<JobState> {
+        self.store.state(id)
     }
 
     pub fn queue_depth(&self) -> usize {
@@ -183,6 +206,7 @@ impl RecoveryService {
 /// batch members.
 struct ServiceObserver<'a> {
     store: &'a JobStore,
+    metrics: &'a ServiceMetrics,
     ids: &'a [JobId],
     started: Vec<bool>,
 }
@@ -194,7 +218,10 @@ impl BatchObserver for ServiceObserver<'_> {
             self.store.transition(id, JobState::Running);
             self.started[job_index] = true;
         }
-        self.store.record_progress(id, *stat);
+        let dropped = self.store.record_progress(id, *stat);
+        if dropped > 0 {
+            self.metrics.progress_dropped.fetch_add(dropped, Ordering::Relaxed);
+        }
         if self.store.cancel_requested(id) {
             ObserverSignal::Stop
         } else {
@@ -289,7 +316,8 @@ fn run_batch(
     let ids: Vec<JobId> = batch.jobs.iter().map(|(id, _)| *id).collect();
     let reqs: Vec<SolveRequest> =
         batch.jobs.into_iter().map(|(_, spec)| spec.into_request()).collect();
-    let mut observer = ServiceObserver { store, ids: &ids, started: vec![false; ids.len()] };
+    let mut observer =
+        ServiceObserver { store, metrics, ids: &ids, started: vec![false; ids.len()] };
     match registry.solve_batch(engine_name, &reqs, solver, &mut observer) {
         Ok(results) => {
             for (&id, result) in ids.iter().zip(results) {

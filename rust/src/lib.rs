@@ -49,6 +49,32 @@
 //!   [`solver::FpgaModelEngine`] (`"fpga-model"`) serves "what would
 //!   this job cost on the FPGA at 2/4/8 bits?" by billing modeled time
 //!   from [`perfmodel::fpga::FpgaModel`].
+//! * **Wire** ([`wire`]): the network face of the service — std-only
+//!   TCP with length-prefixed, checksummed frames (`Submit` /
+//!   `Subscribe` / `Cancel` / `Progress` / `Done` / `Metrics` / `Err`;
+//!   see [`wire::codec`] for the frame table). `lpcs serve
+//!   --listen 127.0.0.1:7070` serves it; `lpcs watch <addr> <job>` (or
+//!   [`wire::WireClient`]) streams per-iteration residuals live, with
+//!   bounded drop-oldest subscriber queues so a slow client never
+//!   stalls a worker. Wire-served results are bit-identical to
+//!   in-process ones, and operators ship by content so wire jobs batch
+//!   too:
+//!
+//!   ```no_run
+//!   # use lpcs::coordinator::{JobSpec, ProblemHandle};
+//!   # use std::sync::Arc;
+//!   # let spec = JobSpec::builder(
+//!   #     ProblemHandle::new(Arc::new(lpcs::Mat::zeros(4, 8))), vec![0.0; 4], 2,
+//!   # ).build();
+//!   let mut client = lpcs::wire::WireClient::connect("127.0.0.1:7070").unwrap();
+//!   let id = client.submit(&spec).unwrap();
+//!   for event in client.watch(id).unwrap() {
+//!       match event.unwrap() {
+//!           lpcs::wire::WatchEvent::Progress(st) => println!("iter {}: {:.3e}", st.iter, st.resid_nsq),
+//!           lpcs::wire::WatchEvent::Done(out) => println!("done: {:?}", out.state),
+//!       }
+//!   }
+//!   ```
 //! * **Algorithms** ([`algorithms`]): the Algorithm-1 NIHT driver (generic
 //!   over [`algorithms::NihtKernel`]), the quantized kernels, and the
 //!   baselines — all observable per iteration.
@@ -95,6 +121,7 @@ pub mod simd;
 pub mod solver;
 pub mod telescope;
 pub mod testkit;
+pub mod wire;
 
 pub use linalg::Mat;
 pub use quant::{QuantizedMatrix, Quantizer};

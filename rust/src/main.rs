@@ -3,7 +3,10 @@
 //! Subcommands:
 //!   solve    one recovery on a synthetic problem (gaussian | astro)
 //!   mri      matrix-free partial-Fourier MRI recovery (phantom → PGMs)
-//!   serve    run the recovery service on a stream of synthetic jobs
+//!   serve    run the recovery service — on a stream of synthetic jobs,
+//!            or (with --listen ADDR) as a network service speaking the
+//!            wire protocol (submit/subscribe/cancel/metrics frames)
+//!   watch    stream a served job's per-iteration progress over the wire
 //!   repro    regenerate a paper figure (fig1..fig11 | all)
 //!   info     list AOT artifacts and environment
 //!
@@ -35,13 +38,15 @@ fn main() {
 
 fn usage() -> ! {
     eprintln!(
-        "usage: lpcs <solve|serve|repro|info> [args] [--key value ...]\n\
+        "usage: lpcs <solve|serve|watch|repro|info> [args] [--key value ...]\n\
          \n\
          lpcs solve [gaussian|astro] [--engine native-quant|native-dense|xla-quant|xla-dense|fpga-model]\n\
          \x20          [--algorithm niht|iht|qniht|cosamp|fista|auto]\n\
          lpcs mri   [--mri.resolution N] [--mri.mask cartesian|radial] [--mri.fraction F]\n\
          \x20          [--mri.center_band B] [--mri.bits 0|2|4|8] [--mri.sparsity S]\n\
          lpcs serve [--service.workers N] [--engine ...] [--algorithm ...]\n\
+         \x20          [--listen ADDR] [--wire.sub_depth N]   (ADDR e.g. 127.0.0.1:7070)\n\
+         lpcs watch <addr> <job-id>\n\
          lpcs repro <fig1|fig3|fig4|fig5|fig6|fig7|fig8|fig9|fig10|fig11|all> [--out_dir DIR]\n\
          lpcs info"
     );
@@ -92,6 +97,10 @@ fn real_main() -> Result<()> {
         "solve" => cmd_solve(&cfg, rest.first().map(|s| s.as_str()).unwrap_or("gaussian")),
         "mri" => cmd_mri(&cfg),
         "serve" => cmd_serve(&cfg),
+        "watch" => match (rest.first(), rest.get(1)) {
+            (Some(addr), Some(job)) => cmd_watch(addr, job),
+            _ => usage(),
+        },
         "repro" => {
             let which = rest.first().map(|s| s.as_str()).unwrap_or("all");
             lpcs::repro::run(which, &cfg)
@@ -233,6 +242,9 @@ fn cmd_serve(cfg: &LpcsConfig) -> Result<()> {
     // submission below would be rejected individually by
     // `JobSpec::validate` (same shared bit-width gate).
     cfg.solver_kind().check_packed_bits().context("serve")?;
+    if !cfg.wire.listen.is_empty() {
+        return cmd_serve_wire(cfg);
+    }
     let jobs: usize =
         std::env::var("LPCS_SERVE_JOBS").ok().and_then(|v| v.parse().ok()).unwrap_or(32);
     println!(
@@ -294,6 +306,66 @@ fn cmd_serve(cfg: &LpcsConfig) -> Result<()> {
     );
     println!("metrics: {}", service.metrics().snapshot());
     service.shutdown();
+    Ok(())
+}
+
+/// `lpcs serve --listen ADDR`: the recovery service as a network
+/// service. Clients speak the wire protocol ([`lpcs::wire`]): submit
+/// jobs, stream per-iteration progress, cancel, read metrics. Runs until
+/// the process is killed.
+fn cmd_serve_wire(cfg: &LpcsConfig) -> Result<()> {
+    let service = Arc::new(RecoveryService::start(
+        cfg.service,
+        cfg.solver.clone(),
+        cfg.artifact_dir.clone(),
+    ));
+    let server = lpcs::wire::serve(service.clone(), &cfg.wire.listen, cfg.wire.sub_depth)?;
+    println!(
+        "wire server listening on {} (frames v{}; workers={} queue={} sub_depth={})",
+        server.addr(),
+        lpcs::wire::WIRE_VERSION,
+        cfg.service.workers,
+        cfg.service.queue_capacity,
+        cfg.wire.sub_depth
+    );
+    println!("watch a job with: lpcs watch {} <job-id>   (Ctrl-C stops the server)", server.addr());
+    // `server` must outlive the loop — dropping it would stop accepting.
+    loop {
+        std::thread::sleep(Duration::from_secs(60));
+        println!("metrics: {}", service.metrics().snapshot());
+    }
+}
+
+/// `lpcs watch ADDR JOB`: stream a served job's convergence live.
+fn cmd_watch(addr: &str, job: &str) -> Result<()> {
+    let id: u64 = job.parse().with_context(|| format!("job id '{job}' is not a number"))?;
+    let mut client = lpcs::wire::WireClient::connect(addr)
+        .with_context(|| format!("connecting to {addr}"))?;
+    for event in client.watch(id)? {
+        match event? {
+            lpcs::wire::WatchEvent::Progress(st) => println!(
+                "iter {:>6}  resid_nsq={:.6e}  mu={:.3e}  support_changed={}  shrinks={}",
+                st.iter, st.resid_nsq, st.mu, st.support_changed, st.shrink_count
+            ),
+            lpcs::wire::WatchEvent::Done(out) => {
+                println!(
+                    "job {} {:?}  queued_for={:.3?}  ran_for={:.3?}",
+                    out.id, out.state, out.queued_for, out.ran_for
+                );
+                if let Some(res) = out.result {
+                    println!(
+                        "result: {} iterations, converged={}, |x|_0={}",
+                        res.iterations,
+                        res.converged,
+                        res.x.iter().filter(|v| **v != 0.0).count()
+                    );
+                }
+                if let Some(err) = out.error {
+                    println!("error: {err}");
+                }
+            }
+        }
+    }
     Ok(())
 }
 

@@ -135,6 +135,32 @@ impl SamplingMask {
         Ok(Self { r, cfg: *cfg, points })
     }
 
+    /// Rebuild a mask from its acquired points. This is how the wire
+    /// protocol ships masks — by content, not by generation seed — so a
+    /// server-side reconstruction is exactly the client's operator.
+    /// Points must be strictly ascending (the [`SamplingMask::points`]
+    /// invariant) and in range; `r` must be a power of two in
+    /// `4..=8192`. The upper bound exists because these values arrive
+    /// from the network: without it a tiny frame naming an astronomical
+    /// grid would drive an unbounded FFT-plan allocation (and `r * r`
+    /// below must not overflow).
+    pub fn from_points(cfg: &MaskConfig, r: usize, points: Vec<usize>) -> Result<Self> {
+        anyhow::ensure!(
+            r.is_power_of_two() && (4..=8192).contains(&r),
+            "mask grid size {r} must be a power of two in 4..=8192"
+        );
+        anyhow::ensure!(!points.is_empty(), "mask must acquire at least one k-space point");
+        for w in points.windows(2) {
+            anyhow::ensure!(w[0] < w[1], "mask points must be strictly ascending");
+        }
+        anyhow::ensure!(
+            *points.last().unwrap() < r * r,
+            "mask point {} outside the {r}x{r} grid",
+            points.last().unwrap()
+        );
+        Ok(Self { r, cfg: *cfg, points })
+    }
+
     pub fn r(&self) -> usize {
         self.r
     }
@@ -232,6 +258,28 @@ fn radial_points(cfg: &MaskConfig, r: usize) -> Vec<usize> {
 #[cfg(test)]
 mod tests {
     use super::*;
+
+    #[test]
+    fn from_points_round_trips_generated_masks() {
+        for kind in [MaskKind::Cartesian, MaskKind::Radial] {
+            let cfg = MaskConfig { kind, ..Default::default() };
+            let mask = SamplingMask::generate(&cfg, 16, 5).unwrap();
+            let rebuilt =
+                SamplingMask::from_points(&cfg, 16, mask.points().to_vec()).unwrap();
+            assert_eq!(rebuilt.points(), mask.points());
+            assert_eq!(rebuilt.r(), mask.r());
+        }
+        let cfg = MaskConfig::default();
+        assert!(SamplingMask::from_points(&cfg, 12, vec![0]).is_err(), "non-pow2 grid");
+        assert!(
+            SamplingMask::from_points(&cfg, 1 << 31, vec![0]).is_err(),
+            "wire-controlled grid sizes are bounded"
+        );
+        assert!(SamplingMask::from_points(&cfg, 16, vec![]).is_err(), "empty mask");
+        assert!(SamplingMask::from_points(&cfg, 16, vec![3, 3]).is_err(), "not ascending");
+        assert!(SamplingMask::from_points(&cfg, 16, vec![5, 4]).is_err(), "not ascending");
+        assert!(SamplingMask::from_points(&cfg, 16, vec![256]).is_err(), "out of range");
+    }
 
     #[test]
     fn validate_gates_parameters() {

@@ -1,0 +1,96 @@
+//! End-to-end service harness: what makes a *networked* recovery
+//! service testable at all.
+//!
+//! [`ServiceHarness`] boots a real [`RecoveryService`] plus a wire
+//! server on an ephemeral port (`127.0.0.1:0` — parallel test binaries
+//! never collide), hands out connected [`WireClient`]s, and tears the
+//! whole stack down deterministically: wire server first (every
+//! connection handler joins, bounded by the server's poll tick), then
+//! the service (workers join). Teardown *asserts* nothing leaked — if a
+//! handler thread were still holding the service, the final unwrap of
+//! the service `Arc` would fail loudly instead of leaking a thread past
+//! the test.
+
+use crate::algorithms::SolveOptions;
+use crate::config::ServiceConfig;
+use crate::coordinator::RecoveryService;
+use crate::wire::{self, WireClient, WireServer};
+use std::net::SocketAddr;
+use std::path::PathBuf;
+use std::sync::Arc;
+
+/// A live service + wire server, torn down on [`ServiceHarness::shutdown`]
+/// or drop.
+pub struct ServiceHarness {
+    service: Option<Arc<RecoveryService>>,
+    server: Option<WireServer>,
+    addr: SocketAddr,
+}
+
+impl ServiceHarness {
+    /// Boot with the default subscriber-queue depth (64).
+    pub fn start(cfg: ServiceConfig, opts: SolveOptions) -> Self {
+        Self::start_with_depth(cfg, opts, 64)
+    }
+
+    /// Boot with an explicit per-subscriber progress-queue depth (small
+    /// depths make drop-oldest shedding observable in tests).
+    pub fn start_with_depth(cfg: ServiceConfig, opts: SolveOptions, sub_depth: usize) -> Self {
+        let service =
+            Arc::new(RecoveryService::start(cfg, opts, PathBuf::from("artifacts")));
+        let server = wire::serve(service.clone(), "127.0.0.1:0", sub_depth)
+            .expect("bind wire server on an ephemeral port");
+        let addr = server.addr();
+        Self { service: Some(service), server: Some(server), addr }
+    }
+
+    /// The ephemeral address the wire server actually bound.
+    pub fn addr(&self) -> SocketAddr {
+        self.addr
+    }
+
+    /// A fresh connected client (open several for concurrent streams).
+    pub fn client(&self) -> WireClient {
+        WireClient::connect(self.addr).expect("connect to harness wire server")
+    }
+
+    /// Direct access to the in-process service (for white-box asserts:
+    /// metrics, `wait`, `subscribe`, `cancel`).
+    pub fn service(&self) -> &RecoveryService {
+        self.service.as_ref().expect("harness is live")
+    }
+
+    /// Deterministic teardown; also asserts no connection handler leaked
+    /// (each handler holds a service `Arc` — all must be gone once the
+    /// server has joined).
+    pub fn shutdown(mut self) {
+        self.teardown(true);
+    }
+
+    fn teardown(&mut self, strict: bool) {
+        if let Some(server) = self.server.take() {
+            server.shutdown();
+        }
+        if let Some(service) = self.service.take() {
+            match Arc::try_unwrap(service) {
+                Ok(service) => service.shutdown(),
+                Err(_leaked) => {
+                    if strict {
+                        panic!(
+                            "service Arc still referenced after wire-server shutdown \
+                             (a connection handler thread leaked)"
+                        );
+                    }
+                }
+            }
+        }
+    }
+}
+
+impl Drop for ServiceHarness {
+    fn drop(&mut self) {
+        // Non-strict on drop: a panicking test must not double-panic in
+        // teardown; explicit `shutdown()` is the asserting path.
+        self.teardown(false);
+    }
+}

@@ -1,9 +1,14 @@
-//! In-tree property-testing driver (no proptest offline; DESIGN.md §6).
+//! In-tree property-testing driver (no proptest offline; DESIGN.md §6)
+//! plus the end-to-end service harness ([`harness::ServiceHarness`]).
 //!
 //! `forall` runs a property over `cases` pseudo-random inputs derived from a
 //! base seed; on failure it reports the exact case seed so the case can be
 //! replayed deterministically (`LPCS_PROP_SEED=<seed>` re-runs just that
 //! case). The property-test suites in `rust/tests/` are built on this.
+
+pub mod harness;
+
+pub use harness::ServiceHarness;
 
 use crate::rng::XorShift128Plus;
 

@@ -1,0 +1,200 @@
+//! Blocking wire client: submit jobs, watch their convergence live,
+//! cancel them, and read service metrics — all over one TCP connection.
+//!
+//! ```no_run
+//! # use lpcs::wire::WireClient;
+//! # use lpcs::coordinator::{JobSpec, ProblemHandle};
+//! # use std::sync::Arc;
+//! # let spec = JobSpec::builder(
+//! #     ProblemHandle::new(Arc::new(lpcs::Mat::zeros(4, 8))), vec![0.0; 4], 2,
+//! # ).build();
+//! let mut client = WireClient::connect("127.0.0.1:7070").unwrap();
+//! let id = client.submit(&spec).unwrap();
+//! for event in client.watch(id).unwrap() {
+//!     match event.unwrap() {
+//!         lpcs::wire::WatchEvent::Progress(st) => {
+//!             eprintln!("iter {} resid² {:.3e}", st.iter, st.resid_nsq)
+//!         }
+//!         lpcs::wire::WatchEvent::Done(out) => eprintln!("done: {:?}", out.state),
+//!     }
+//! }
+//! ```
+
+use super::codec::{self, FrameReader, Message, PollError, WireJobSpec};
+use crate::algorithms::IterStat;
+use crate::coordinator::{JobId, JobOutcome, JobSpec};
+use anyhow::{anyhow, bail, Context, Result};
+use std::io::Write;
+use std::net::{TcpStream, ToSocketAddrs};
+use std::time::{Duration, Instant};
+
+/// How long request/reply calls wait for the server's answer.
+const REPLY_TIMEOUT: Duration = Duration::from_secs(120);
+/// How long [`Watch`] waits between consecutive stream events. Generous:
+/// a busy service may queue the job well before its first iteration.
+const WATCH_TIMEOUT: Duration = Duration::from_secs(600);
+/// Socket read tick (the granularity at which deadlines are checked).
+const READ_TICK: Duration = Duration::from_millis(100);
+
+/// One event from a [`Watch`] stream.
+#[derive(Debug, Clone)]
+pub enum WatchEvent {
+    /// A per-iteration stat (possibly with gaps: the server sheds the
+    /// oldest stats rather than stall a worker on a slow consumer).
+    Progress(IterStat),
+    /// The terminal outcome — always the last event of a stream.
+    Done(JobOutcome),
+}
+
+/// A blocking client for the wire protocol (one request at a time; open
+/// several clients for concurrent streams).
+pub struct WireClient {
+    stream: TcpStream,
+    reader: FrameReader,
+    /// Set when a [`Watch`] was abandoned mid-stream: the server may
+    /// still be sending `Progress`/`Done` frames for it, so any further
+    /// request on this connection would read the stream's leftovers as
+    /// its reply. Poisoned clients fail fast instead of desynchronizing.
+    poisoned: bool,
+}
+
+impl WireClient {
+    pub fn connect(addr: impl ToSocketAddrs) -> Result<Self> {
+        let stream = TcpStream::connect(addr).context("connecting to wire server")?;
+        stream.set_nodelay(true).ok();
+        stream.set_read_timeout(Some(READ_TICK)).context("setting read timeout")?;
+        Ok(Self { stream, reader: FrameReader::new(), poisoned: false })
+    }
+
+    fn send(&mut self, msg: &Message) -> Result<()> {
+        if self.poisoned {
+            bail!(
+                "connection desynchronized: a watch was abandoned before its Done frame; \
+                 open a new WireClient"
+            );
+        }
+        let frame = codec::try_encode(msg).context("encoding frame")?;
+        self.stream.write_all(&frame).context("writing frame")
+    }
+
+    /// Next frame within `deadline`, surfacing protocol errors.
+    fn recv(&mut self, deadline: Duration) -> Result<Message> {
+        let until = Instant::now() + deadline;
+        loop {
+            match self.reader.poll(&mut self.stream) {
+                Ok(Some(msg)) => return Ok(msg),
+                Ok(None) => {
+                    if Instant::now() >= until {
+                        bail!("timed out after {deadline:?} waiting for the server");
+                    }
+                }
+                Err(PollError::Closed) => bail!("server closed the connection"),
+                Err(e) => bail!("reading frame: {e}"),
+            }
+        }
+    }
+
+    /// Submit a job; the spec's operator ships by content (dense entries
+    /// or mask points), so the server runs exactly this problem.
+    pub fn submit(&mut self, spec: &JobSpec) -> Result<JobId> {
+        self.send(&Message::Submit(WireJobSpec::from_spec(spec)))?;
+        match self.recv(REPLY_TIMEOUT)? {
+            Message::Submitted { id } => Ok(id),
+            Message::Err { msg } => bail!("submit rejected: {msg}"),
+            other => bail!("unexpected reply to Submit: {other:?}"),
+        }
+    }
+
+    /// Stream a job's progress: an iterator of [`WatchEvent`]s ending in
+    /// exactly one `Done`. The connection is dedicated to the stream
+    /// until then.
+    pub fn watch(&mut self, id: JobId) -> Result<Watch<'_>> {
+        self.watch_timeout(id, WATCH_TIMEOUT)
+    }
+
+    /// [`WireClient::watch`] with an explicit per-event timeout.
+    pub fn watch_timeout(&mut self, id: JobId, per_event: Duration) -> Result<Watch<'_>> {
+        self.send(&Message::Subscribe { id })?;
+        Ok(Watch { client: self, per_event, finished: false, clean: false })
+    }
+
+    /// Ask the service to stop a job at its next iteration boundary.
+    /// `Ok(false)` means the job is unknown or already terminal.
+    pub fn cancel(&mut self, id: JobId) -> Result<bool> {
+        self.send(&Message::Cancel { id })?;
+        match self.recv(REPLY_TIMEOUT)? {
+            Message::Cancelled { id: got, accepted } if got == id => Ok(accepted),
+            Message::Err { msg } => bail!("cancel rejected: {msg}"),
+            other => bail!("unexpected reply to Cancel: {other:?}"),
+        }
+    }
+
+    /// The service's metrics snapshot line.
+    pub fn metrics(&mut self) -> Result<String> {
+        self.send(&Message::MetricsReq)?;
+        match self.recv(REPLY_TIMEOUT)? {
+            Message::Metrics { snapshot } => Ok(snapshot),
+            Message::Err { msg } => bail!("metrics rejected: {msg}"),
+            other => bail!("unexpected reply to Metrics: {other:?}"),
+        }
+    }
+}
+
+/// Iterator over one job's progress stream. Yields `Err` at most once
+/// (protocol violation, timeout, or a server `Err` frame), after which
+/// the stream ends.
+///
+/// Dropping a `Watch` before the stream terminated (before `Done`, or a
+/// server `Err` that ends it) **poisons** the client: the connection may
+/// still carry this stream's frames, so later requests on it would read
+/// them as their replies. Drain the watch to its end — or open a fresh
+/// [`WireClient`] — before reusing the connection.
+pub struct Watch<'a> {
+    client: &'a mut WireClient,
+    per_event: Duration,
+    finished: bool,
+    /// The server ended the stream (Done or stream-ending Err frame):
+    /// the connection is at a frame boundary and safe to reuse.
+    clean: bool,
+}
+
+impl Iterator for Watch<'_> {
+    type Item = Result<WatchEvent>;
+
+    fn next(&mut self) -> Option<Self::Item> {
+        if self.finished {
+            return None;
+        }
+        match self.client.recv(self.per_event) {
+            Ok(Message::Progress { stat, .. }) => Some(Ok(WatchEvent::Progress(stat))),
+            Ok(Message::Done(out)) => {
+                self.finished = true;
+                self.clean = true;
+                Some(Ok(WatchEvent::Done(out.into_outcome())))
+            }
+            Ok(Message::Err { msg }) => {
+                // The server answers a bad Subscribe with one Err frame
+                // and sends nothing further for it.
+                self.finished = true;
+                self.clean = true;
+                Some(Err(anyhow!("watch failed: {msg}")))
+            }
+            Ok(other) => {
+                self.finished = true;
+                Some(Err(anyhow!("unexpected frame in watch stream: {other:?}")))
+            }
+            Err(e) => {
+                self.finished = true;
+                Some(Err(e))
+            }
+        }
+    }
+}
+
+impl Drop for Watch<'_> {
+    fn drop(&mut self) {
+        if !self.clean {
+            self.client.poisoned = true;
+        }
+    }
+}

@@ -1,0 +1,953 @@
+//! Length-prefixed binary frames for the recovery service.
+//!
+//! Frame layout (all integers little-endian):
+//!
+//! ```text
+//! +---------+-------+----------------+------------------+-------------+
+//! | version |  tag  | payload length |     payload      |  checksum   |
+//! |  1 byte | 1 byte|    u32 LE      | `length` bytes   |   u32 LE    |
+//! +---------+-------+----------------+------------------+-------------+
+//! ```
+//!
+//! The checksum is FNV-1a over header + payload, so corruption anywhere
+//! in the frame is caught before the payload is interpreted. Decoding is
+//! strictly non-panicking: every malformed input maps to a
+//! [`DecodeError`] (`Truncated` doubles as the streaming "need more
+//! bytes" signal used by [`FrameReader`]).
+//!
+//! | tag | frame        | direction        | payload |
+//! |-----|--------------|------------------|---------|
+//! | 1   | `Submit`     | client → server  | [`WireJobSpec`] |
+//! | 2   | `Submitted`  | server → client  | job id |
+//! | 3   | `Subscribe`  | client → server  | job id |
+//! | 4   | `Cancel`     | client → server  | job id |
+//! | 5   | `Cancelled`  | server → client  | job id + accepted flag |
+//! | 6   | `Progress`   | server → client  | job id + [`IterStat`] |
+//! | 7   | `Done`       | server → client  | [`WireOutcome`] |
+//! | 8   | `MetricsReq` | client → server  | (empty) |
+//! | 9   | `Metrics`    | server → client  | snapshot string |
+//! | 10  | `Err`        | server → client  | error string |
+
+use crate::algorithms::qniht::RequantMode;
+use crate::algorithms::{IterStat, SolveResult};
+use crate::config::EngineKind;
+use crate::coordinator::{JobId, JobOutcome, JobSpec, JobState, OperatorSpec, ProblemHandle};
+use crate::linalg::Mat;
+use crate::mri::{MaskConfig, MaskKind, PartialFourierOp, SamplingMask};
+use crate::solver::SolverKind;
+use std::io::Read;
+use std::sync::Arc;
+use std::time::Duration;
+
+/// Protocol version carried in every frame header.
+pub const WIRE_VERSION: u8 = 1;
+/// version + tag + payload-length bytes.
+pub const HEADER_LEN: usize = 6;
+/// Trailing checksum bytes.
+pub const TRAILER_LEN: usize = 4;
+/// Upper bound on a payload (a 4096×4096 dense Φ is ~64 MiB; 256 MiB
+/// leaves headroom while keeping a corrupt length field from allocating
+/// the address space).
+pub const MAX_PAYLOAD: usize = 256 << 20;
+
+/// FNV-1a over the given bytes — the frame checksum.
+pub fn checksum(bytes: &[u8]) -> u32 {
+    let mut h: u32 = 0x811C_9DC5;
+    for &b in bytes {
+        h ^= b as u32;
+        h = h.wrapping_mul(0x0100_0193);
+    }
+    h
+}
+
+/// Why a buffer failed to decode. `Truncated` is recoverable (read more
+/// bytes); everything else means the stream is corrupt and the
+/// connection should be dropped.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum DecodeError {
+    /// The buffer ends before the frame does (streaming: need more).
+    Truncated,
+    /// Version byte is not [`WIRE_VERSION`].
+    BadVersion(u8),
+    /// Checksum mismatch — the frame was corrupted in flight.
+    BadChecksum { expect: u32, got: u32 },
+    /// Unknown frame tag.
+    UnknownTag(u8),
+    /// Payload length field exceeds [`MAX_PAYLOAD`].
+    TooLarge(usize),
+    /// The payload is complete and checksummed but internally malformed.
+    Malformed(&'static str),
+}
+
+impl std::fmt::Display for DecodeError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            Self::Truncated => write!(f, "truncated frame"),
+            Self::BadVersion(v) => write!(f, "unknown wire version {v} (expect {WIRE_VERSION})"),
+            Self::BadChecksum { expect, got } => {
+                write!(f, "frame checksum mismatch (expect {expect:#010x}, got {got:#010x})")
+            }
+            Self::UnknownTag(t) => write!(f, "unknown frame tag {t}"),
+            Self::TooLarge(n) => write!(f, "payload length {n} exceeds {MAX_PAYLOAD}"),
+            Self::Malformed(what) => write!(f, "malformed payload: {what}"),
+        }
+    }
+}
+
+impl std::error::Error for DecodeError {}
+
+/// Everything that crosses the wire.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Message {
+    /// Submit a job (client → server); answered by `Submitted` or `Err`.
+    Submit(WireJobSpec),
+    Submitted { id: JobId },
+    /// Stream a job's progress; the connection then carries `Progress`
+    /// frames until exactly one `Done` (or an immediate `Err`).
+    Subscribe { id: JobId },
+    Cancel { id: JobId },
+    Cancelled { id: JobId, accepted: bool },
+    Progress { id: JobId, stat: IterStat },
+    Done(WireOutcome),
+    MetricsReq,
+    Metrics { snapshot: String },
+    Err { msg: String },
+}
+
+impl Message {
+    fn tag(&self) -> u8 {
+        match self {
+            Self::Submit(_) => 1,
+            Self::Submitted { .. } => 2,
+            Self::Subscribe { .. } => 3,
+            Self::Cancel { .. } => 4,
+            Self::Cancelled { .. } => 5,
+            Self::Progress { .. } => 6,
+            Self::Done(_) => 7,
+            Self::MetricsReq => 8,
+            Self::Metrics { .. } => 9,
+            Self::Err { .. } => 10,
+        }
+    }
+}
+
+/// A [`JobSpec`] in shippable form: the operator by content (dense
+/// entries, or mask points + parameters for the matrix-free path), never
+/// by pointer — so a server-side reconstruction runs exactly the math
+/// the client described.
+#[derive(Debug, Clone, PartialEq)]
+pub struct WireJobSpec {
+    pub problem: WireProblem,
+    pub y: Vec<f32>,
+    pub s: usize,
+    pub solver: SolverKind,
+    pub engine: EngineKind,
+    pub seed: u64,
+}
+
+/// The operator half of a [`WireJobSpec`].
+#[derive(Debug, Clone, PartialEq)]
+pub enum WireProblem {
+    Dense { rows: usize, cols: usize, data: Vec<f32>, shape_tag: Option<String> },
+    PartialFourier {
+        r: usize,
+        kind: MaskKind,
+        fraction: f32,
+        center_band: usize,
+        points: Vec<usize>,
+        bits: Option<u8>,
+    },
+}
+
+impl WireJobSpec {
+    /// Lower an in-process spec to wire form (copies the operator
+    /// content out of its `Arc`).
+    pub fn from_spec(spec: &JobSpec) -> Self {
+        let problem = match &spec.problem.op {
+            OperatorSpec::Dense(phi) => WireProblem::Dense {
+                rows: phi.rows,
+                cols: phi.cols,
+                data: phi.data.clone(),
+                shape_tag: spec.problem.shape_tag.clone(),
+            },
+            OperatorSpec::PartialFourier { op, bits } => {
+                let mask = op.mask();
+                let cfg = mask.config();
+                WireProblem::PartialFourier {
+                    r: mask.r(),
+                    kind: cfg.kind,
+                    fraction: cfg.fraction,
+                    center_band: cfg.center_band,
+                    points: mask.points().to_vec(),
+                    bits: *bits,
+                }
+            }
+        };
+        Self {
+            problem,
+            y: spec.y.clone(),
+            s: spec.s,
+            solver: spec.solver,
+            engine: spec.engine,
+            seed: spec.seed,
+        }
+    }
+
+    /// Reconstruct an in-process spec (fresh operator `Arc`s). The
+    /// server wraps this with a content-addressed cache so jobs shipping
+    /// the same operator share one `Arc` and stay batchable.
+    pub fn into_spec(self) -> anyhow::Result<JobSpec> {
+        let problem = self.problem.build_handle()?;
+        Ok(JobSpec {
+            problem,
+            y: self.y,
+            s: self.s,
+            solver: self.solver,
+            engine: self.engine,
+            seed: self.seed,
+        })
+    }
+}
+
+impl WireProblem {
+    /// Build the in-process operator handle this wire problem describes.
+    pub fn build_handle(&self) -> anyhow::Result<ProblemHandle> {
+        match self {
+            Self::Dense { rows, cols, data, shape_tag } => {
+                // Checked multiply: `rows`/`cols` arrive from the
+                // network, and a lying pair must fail cleanly, not
+                // overflow. The payload length bound caps `data`, so the
+                // equality gate also caps the allocation below.
+                anyhow::ensure!(
+                    rows.checked_mul(*cols) == Some(data.len()),
+                    "dense operator payload is {} values for a {}x{} matrix",
+                    data.len(),
+                    rows,
+                    cols
+                );
+                let phi = Arc::new(Mat::from_vec(*rows, *cols, data.clone()));
+                Ok(match shape_tag {
+                    Some(tag) => ProblemHandle::with_shape_tag(phi, tag),
+                    None => ProblemHandle::new(phi),
+                })
+            }
+            Self::PartialFourier { r, kind, fraction, center_band, points, bits } => {
+                let cfg =
+                    MaskConfig { kind: *kind, fraction: *fraction, center_band: *center_band };
+                let mask = SamplingMask::from_points(&cfg, *r, points.clone())?;
+                let op = Arc::new(PartialFourierOp::new(mask));
+                Ok(match bits {
+                    Some(b) => ProblemHandle::low_prec_fourier(op, *b),
+                    None => ProblemHandle::partial_fourier(op),
+                })
+            }
+        }
+    }
+}
+
+/// A [`JobOutcome`] in wire form (durations as integer microseconds, so
+/// encode/decode round-trips exactly).
+#[derive(Debug, Clone, PartialEq)]
+pub struct WireOutcome {
+    pub id: JobId,
+    pub state: JobState,
+    pub result: Option<WireResult>,
+    pub error: Option<String>,
+    pub queued_us: u64,
+    pub ran_us: u64,
+}
+
+/// [`SolveResult`] in wire form.
+#[derive(Debug, Clone, PartialEq)]
+pub struct WireResult {
+    pub x: Vec<f32>,
+    pub iterations: u64,
+    pub converged: bool,
+    pub shrink_events: u64,
+    pub history: Vec<IterStat>,
+}
+
+impl From<JobOutcome> for WireOutcome {
+    fn from(o: JobOutcome) -> Self {
+        Self {
+            id: o.id,
+            state: o.state,
+            result: o.result.map(|r| WireResult {
+                x: r.x,
+                iterations: r.iterations as u64,
+                converged: r.converged,
+                shrink_events: r.shrink_events as u64,
+                history: r.history,
+            }),
+            error: o.error,
+            queued_us: o.queued_for.as_micros() as u64,
+            ran_us: o.ran_for.as_micros() as u64,
+        }
+    }
+}
+
+impl WireOutcome {
+    pub fn into_outcome(self) -> JobOutcome {
+        JobOutcome {
+            id: self.id,
+            state: self.state,
+            result: self.result.map(|r| SolveResult {
+                x: r.x,
+                iterations: r.iterations as usize,
+                converged: r.converged,
+                shrink_events: r.shrink_events as usize,
+                history: r.history,
+            }),
+            error: self.error,
+            queued_for: Duration::from_micros(self.queued_us),
+            ran_for: Duration::from_micros(self.ran_us),
+        }
+    }
+}
+
+// ---------------------------------------------------------------------
+// Payload primitives
+// ---------------------------------------------------------------------
+
+fn put_u8(b: &mut Vec<u8>, v: u8) {
+    b.push(v);
+}
+
+fn put_bool(b: &mut Vec<u8>, v: bool) {
+    b.push(v as u8);
+}
+
+fn put_u32(b: &mut Vec<u8>, v: u32) {
+    b.extend_from_slice(&v.to_le_bytes());
+}
+
+fn put_u64(b: &mut Vec<u8>, v: u64) {
+    b.extend_from_slice(&v.to_le_bytes());
+}
+
+fn put_f32(b: &mut Vec<u8>, v: f32) {
+    b.extend_from_slice(&v.to_le_bytes());
+}
+
+fn put_str(b: &mut Vec<u8>, s: &str) {
+    put_u32(b, s.len() as u32);
+    b.extend_from_slice(s.as_bytes());
+}
+
+fn put_vec_f32(b: &mut Vec<u8>, v: &[f32]) {
+    put_u32(b, v.len() as u32);
+    for &x in v {
+        put_f32(b, x);
+    }
+}
+
+fn put_vec_u64(b: &mut Vec<u8>, v: impl ExactSizeIterator<Item = u64>) {
+    put_u32(b, v.len() as u32);
+    for x in v {
+        put_u64(b, x);
+    }
+}
+
+fn put_opt(b: &mut Vec<u8>, present: bool) {
+    b.push(present as u8);
+}
+
+/// Bounds-checked payload reader: every `take_*` fails with `Malformed`
+/// instead of slicing out of range, so a checksummed-but-lying payload
+/// can never panic the decoder.
+struct Rd<'a> {
+    b: &'a [u8],
+    off: usize,
+}
+
+impl<'a> Rd<'a> {
+    fn new(b: &'a [u8]) -> Self {
+        Self { b, off: 0 }
+    }
+
+    fn take(&mut self, n: usize) -> Result<&'a [u8], DecodeError> {
+        if self.b.len() - self.off < n {
+            return Err(DecodeError::Malformed("payload underrun"));
+        }
+        let s = &self.b[self.off..self.off + n];
+        self.off += n;
+        Ok(s)
+    }
+
+    fn u8(&mut self) -> Result<u8, DecodeError> {
+        Ok(self.take(1)?[0])
+    }
+
+    fn bool(&mut self) -> Result<bool, DecodeError> {
+        match self.u8()? {
+            0 => Ok(false),
+            1 => Ok(true),
+            _ => Err(DecodeError::Malformed("bool byte not 0/1")),
+        }
+    }
+
+    fn u32(&mut self) -> Result<u32, DecodeError> {
+        Ok(u32::from_le_bytes(self.take(4)?.try_into().unwrap()))
+    }
+
+    fn u64(&mut self) -> Result<u64, DecodeError> {
+        Ok(u64::from_le_bytes(self.take(8)?.try_into().unwrap()))
+    }
+
+    fn f32(&mut self) -> Result<f32, DecodeError> {
+        Ok(f32::from_le_bytes(self.take(4)?.try_into().unwrap()))
+    }
+
+    /// Length prefix for a sequence of `elem_size`-byte elements,
+    /// pre-checked against the remaining payload so a lying count can't
+    /// drive a huge allocation.
+    fn seq_len(&mut self, elem_size: usize) -> Result<usize, DecodeError> {
+        let n = self.u32()? as usize;
+        if n.saturating_mul(elem_size) > self.b.len() - self.off {
+            return Err(DecodeError::Malformed("sequence length exceeds payload"));
+        }
+        Ok(n)
+    }
+
+    fn string(&mut self) -> Result<String, DecodeError> {
+        let n = self.seq_len(1)?;
+        std::str::from_utf8(self.take(n)?)
+            .map(str::to_owned)
+            .map_err(|_| DecodeError::Malformed("string is not UTF-8"))
+    }
+
+    fn vec_f32(&mut self) -> Result<Vec<f32>, DecodeError> {
+        let n = self.seq_len(4)?;
+        (0..n).map(|_| self.f32()).collect()
+    }
+
+    fn vec_u64(&mut self) -> Result<Vec<u64>, DecodeError> {
+        let n = self.seq_len(8)?;
+        (0..n).map(|_| self.u64()).collect()
+    }
+
+    fn opt(&mut self) -> Result<bool, DecodeError> {
+        self.bool()
+    }
+
+    fn finish(self) -> Result<(), DecodeError> {
+        if self.off == self.b.len() {
+            Ok(())
+        } else {
+            Err(DecodeError::Malformed("trailing payload bytes"))
+        }
+    }
+}
+
+// ---------------------------------------------------------------------
+// Struct payloads
+// ---------------------------------------------------------------------
+
+fn put_stat(b: &mut Vec<u8>, st: &IterStat) {
+    put_u64(b, st.iter as u64);
+    put_f32(b, st.resid_nsq);
+    put_f32(b, st.mu);
+    put_bool(b, st.support_changed);
+    put_u64(b, st.shrink_count as u64);
+}
+
+fn rd_stat(r: &mut Rd) -> Result<IterStat, DecodeError> {
+    Ok(IterStat {
+        iter: r.u64()? as usize,
+        resid_nsq: r.f32()?,
+        mu: r.f32()?,
+        support_changed: r.bool()?,
+        shrink_count: r.u64()? as usize,
+    })
+}
+
+fn put_solver(b: &mut Vec<u8>, s: &SolverKind) {
+    match s {
+        SolverKind::Niht => put_u8(b, 0),
+        SolverKind::Iht => put_u8(b, 1),
+        SolverKind::Qniht { bits_phi, bits_y, mode } => {
+            put_u8(b, 2);
+            put_u8(b, *bits_phi);
+            put_u8(b, *bits_y);
+            put_u8(b, matches!(*mode, RequantMode::Fresh) as u8);
+        }
+        SolverKind::Cosamp => put_u8(b, 3),
+        SolverKind::Fista { lambda, debias } => {
+            put_u8(b, 4);
+            put_opt(b, lambda.is_some());
+            if let Some(l) = lambda {
+                put_f32(b, *l);
+            }
+            put_bool(b, *debias);
+        }
+    }
+}
+
+fn rd_solver(r: &mut Rd) -> Result<SolverKind, DecodeError> {
+    Ok(match r.u8()? {
+        0 => SolverKind::Niht,
+        1 => SolverKind::Iht,
+        2 => {
+            let bits_phi = r.u8()?;
+            let bits_y = r.u8()?;
+            let mode = match r.u8()? {
+                0 => RequantMode::Fixed,
+                1 => RequantMode::Fresh,
+                _ => return Err(DecodeError::Malformed("unknown requant mode")),
+            };
+            SolverKind::Qniht { bits_phi, bits_y, mode }
+        }
+        3 => SolverKind::Cosamp,
+        4 => {
+            let lambda = if r.opt()? { Some(r.f32()?) } else { None };
+            SolverKind::Fista { lambda, debias: r.bool()? }
+        }
+        _ => return Err(DecodeError::Malformed("unknown solver tag")),
+    })
+}
+
+fn put_engine(b: &mut Vec<u8>, e: EngineKind) {
+    put_u8(
+        b,
+        match e {
+            EngineKind::NativeDense => 0,
+            EngineKind::NativeQuant => 1,
+            EngineKind::XlaQuant => 2,
+            EngineKind::XlaDense => 3,
+            EngineKind::FpgaModel => 4,
+        },
+    );
+}
+
+fn rd_engine(r: &mut Rd) -> Result<EngineKind, DecodeError> {
+    Ok(match r.u8()? {
+        0 => EngineKind::NativeDense,
+        1 => EngineKind::NativeQuant,
+        2 => EngineKind::XlaQuant,
+        3 => EngineKind::XlaDense,
+        4 => EngineKind::FpgaModel,
+        _ => return Err(DecodeError::Malformed("unknown engine tag")),
+    })
+}
+
+/// Encode just the operator half — also the content key the server's op
+/// cache hashes, so "same operator" is literally "same bytes".
+pub(crate) fn encode_problem(b: &mut Vec<u8>, p: &WireProblem) {
+    match p {
+        WireProblem::Dense { rows, cols, data, shape_tag } => {
+            put_u8(b, 0);
+            put_u64(b, *rows as u64);
+            put_u64(b, *cols as u64);
+            put_vec_f32(b, data);
+            put_opt(b, shape_tag.is_some());
+            if let Some(tag) = shape_tag {
+                put_str(b, tag);
+            }
+        }
+        WireProblem::PartialFourier { r, kind, fraction, center_band, points, bits } => {
+            put_u8(b, 1);
+            put_u64(b, *r as u64);
+            put_u8(b, matches!(*kind, MaskKind::Radial) as u8);
+            put_f32(b, *fraction);
+            put_u64(b, *center_band as u64);
+            put_vec_u64(b, points.iter().map(|&p| p as u64));
+            put_opt(b, bits.is_some());
+            if let Some(bits) = bits {
+                put_u8(b, *bits);
+            }
+        }
+    }
+}
+
+fn rd_problem(r: &mut Rd) -> Result<WireProblem, DecodeError> {
+    Ok(match r.u8()? {
+        0 => {
+            let rows = r.u64()? as usize;
+            let cols = r.u64()? as usize;
+            let data = r.vec_f32()?;
+            let shape_tag = if r.opt()? { Some(r.string()?) } else { None };
+            WireProblem::Dense { rows, cols, data, shape_tag }
+        }
+        1 => {
+            let rr = r.u64()? as usize;
+            let kind = match r.u8()? {
+                0 => MaskKind::Cartesian,
+                1 => MaskKind::Radial,
+                _ => return Err(DecodeError::Malformed("unknown mask kind")),
+            };
+            let fraction = r.f32()?;
+            let center_band = r.u64()? as usize;
+            let points = r.vec_u64()?.into_iter().map(|p| p as usize).collect();
+            let bits = if r.opt()? { Some(r.u8()?) } else { None };
+            WireProblem::PartialFourier { r: rr, kind, fraction, center_band, points, bits }
+        }
+        _ => return Err(DecodeError::Malformed("unknown operator tag")),
+    })
+}
+
+fn put_outcome(b: &mut Vec<u8>, o: &WireOutcome) {
+    put_u64(b, o.id);
+    put_u8(
+        b,
+        match o.state {
+            JobState::Queued => 0,
+            JobState::Running => 1,
+            JobState::Done => 2,
+            JobState::Failed => 3,
+        },
+    );
+    put_opt(b, o.result.is_some());
+    if let Some(res) = &o.result {
+        put_vec_f32(b, &res.x);
+        put_u64(b, res.iterations);
+        put_bool(b, res.converged);
+        put_u64(b, res.shrink_events);
+        put_u32(b, res.history.len() as u32);
+        for st in &res.history {
+            put_stat(b, st);
+        }
+    }
+    put_opt(b, o.error.is_some());
+    if let Some(e) = &o.error {
+        put_str(b, e);
+    }
+    put_u64(b, o.queued_us);
+    put_u64(b, o.ran_us);
+}
+
+fn rd_outcome(r: &mut Rd) -> Result<WireOutcome, DecodeError> {
+    let id = r.u64()?;
+    let state = match r.u8()? {
+        0 => JobState::Queued,
+        1 => JobState::Running,
+        2 => JobState::Done,
+        3 => JobState::Failed,
+        _ => return Err(DecodeError::Malformed("unknown job state")),
+    };
+    let result = if r.opt()? {
+        let x = r.vec_f32()?;
+        let iterations = r.u64()?;
+        let converged = r.bool()?;
+        let shrink_events = r.u64()?;
+        let n = r.seq_len(25)?; // 8 + 4 + 4 + 1 + 8 bytes per stat
+        let history = (0..n).map(|_| rd_stat(r)).collect::<Result<_, _>>()?;
+        Some(WireResult { x, iterations, converged, shrink_events, history })
+    } else {
+        None
+    };
+    let error = if r.opt()? { Some(r.string()?) } else { None };
+    Ok(WireOutcome { id, state, result, error, queued_us: r.u64()?, ran_us: r.u64()? })
+}
+
+// ---------------------------------------------------------------------
+// Frame encode / decode
+// ---------------------------------------------------------------------
+
+/// Encode a message into one checksummed frame.
+///
+/// Panics if the payload exceeds [`MAX_PAYLOAD`] — use [`try_encode`]
+/// on trust boundaries where the message size is caller-controlled
+/// (an oversized operator must surface as an `Err`, not a panic).
+pub fn encode(msg: &Message) -> Vec<u8> {
+    try_encode(msg).expect("frame payload exceeds MAX_PAYLOAD")
+}
+
+/// [`encode`], returning [`DecodeError::TooLarge`] instead of panicking
+/// when the message cannot fit a legal frame.
+pub fn try_encode(msg: &Message) -> Result<Vec<u8>, DecodeError> {
+    let mut payload = Vec::new();
+    match msg {
+        Message::Submit(spec) => {
+            encode_problem(&mut payload, &spec.problem);
+            put_vec_f32(&mut payload, &spec.y);
+            put_u64(&mut payload, spec.s as u64);
+            put_solver(&mut payload, &spec.solver);
+            put_engine(&mut payload, spec.engine);
+            put_u64(&mut payload, spec.seed);
+        }
+        Message::Submitted { id } | Message::Subscribe { id } | Message::Cancel { id } => {
+            put_u64(&mut payload, *id);
+        }
+        Message::Cancelled { id, accepted } => {
+            put_u64(&mut payload, *id);
+            put_bool(&mut payload, *accepted);
+        }
+        Message::Progress { id, stat } => {
+            put_u64(&mut payload, *id);
+            put_stat(&mut payload, stat);
+        }
+        Message::Done(out) => put_outcome(&mut payload, out),
+        Message::MetricsReq => {}
+        Message::Metrics { snapshot } => put_str(&mut payload, snapshot),
+        Message::Err { msg } => put_str(&mut payload, msg),
+    }
+    if payload.len() > MAX_PAYLOAD {
+        return Err(DecodeError::TooLarge(payload.len()));
+    }
+    let mut frame = Vec::with_capacity(HEADER_LEN + payload.len() + TRAILER_LEN);
+    frame.push(WIRE_VERSION);
+    frame.push(msg.tag());
+    frame.extend_from_slice(&(payload.len() as u32).to_le_bytes());
+    frame.extend_from_slice(&payload);
+    let sum = checksum(&frame);
+    frame.extend_from_slice(&sum.to_le_bytes());
+    Ok(frame)
+}
+
+/// Decode one frame from the front of `buf`. Returns the message and the
+/// number of bytes consumed; [`DecodeError::Truncated`] means the buffer
+/// holds only part of a frame (read more and retry).
+pub fn decode(buf: &[u8]) -> Result<(Message, usize), DecodeError> {
+    if buf.len() < HEADER_LEN {
+        return Err(DecodeError::Truncated);
+    }
+    if buf[0] != WIRE_VERSION {
+        return Err(DecodeError::BadVersion(buf[0]));
+    }
+    let tag = buf[1];
+    let len = u32::from_le_bytes(buf[2..6].try_into().unwrap()) as usize;
+    if len > MAX_PAYLOAD {
+        return Err(DecodeError::TooLarge(len));
+    }
+    let total = HEADER_LEN + len + TRAILER_LEN;
+    if buf.len() < total {
+        return Err(DecodeError::Truncated);
+    }
+    let body_end = HEADER_LEN + len;
+    let got = u32::from_le_bytes(buf[body_end..total].try_into().unwrap());
+    let expect = checksum(&buf[..body_end]);
+    if got != expect {
+        return Err(DecodeError::BadChecksum { expect, got });
+    }
+    let mut r = Rd::new(&buf[HEADER_LEN..body_end]);
+    let msg = match tag {
+        1 => {
+            let problem = rd_problem(&mut r)?;
+            let y = r.vec_f32()?;
+            let s = r.u64()? as usize;
+            let solver = rd_solver(&mut r)?;
+            let engine = rd_engine(&mut r)?;
+            let seed = r.u64()?;
+            Message::Submit(WireJobSpec { problem, y, s, solver, engine, seed })
+        }
+        2 => Message::Submitted { id: r.u64()? },
+        3 => Message::Subscribe { id: r.u64()? },
+        4 => Message::Cancel { id: r.u64()? },
+        5 => Message::Cancelled { id: r.u64()?, accepted: r.bool()? },
+        6 => Message::Progress { id: r.u64()?, stat: rd_stat(&mut r)? },
+        7 => Message::Done(rd_outcome(&mut r)?),
+        8 => Message::MetricsReq,
+        9 => Message::Metrics { snapshot: r.string()? },
+        10 => Message::Err { msg: r.string()? },
+        t => return Err(DecodeError::UnknownTag(t)),
+    };
+    r.finish()?;
+    Ok((msg, total))
+}
+
+// ---------------------------------------------------------------------
+// Streaming reader
+// ---------------------------------------------------------------------
+
+/// Why [`FrameReader::poll`] gave up on a stream.
+#[derive(Debug)]
+pub enum PollError {
+    /// Peer closed the connection (clean EOF at a frame boundary or not).
+    Closed,
+    /// Hard I/O error (reset, broken pipe, ...).
+    Io(std::io::Error),
+    /// The byte stream is corrupt; the connection must be dropped.
+    Decode(DecodeError),
+}
+
+impl std::fmt::Display for PollError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            Self::Closed => write!(f, "connection closed"),
+            Self::Io(e) => write!(f, "io error: {e}"),
+            Self::Decode(e) => write!(f, "decode error: {e}"),
+        }
+    }
+}
+
+impl std::error::Error for PollError {}
+
+/// Incremental frame reassembly over a blocking `Read` with a read
+/// timeout: partial reads accumulate in an internal buffer, and
+/// `Ok(None)` on timeout lets the caller check shutdown flags between
+/// frames without ever tearing a frame apart.
+#[derive(Debug, Default)]
+pub struct FrameReader {
+    buf: Vec<u8>,
+}
+
+impl FrameReader {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Next complete frame, `Ok(None)` on read timeout (the reader keeps
+    /// any partial frame buffered for the next poll).
+    pub fn poll(&mut self, stream: &mut impl Read) -> Result<Option<Message>, PollError> {
+        loop {
+            match decode(&self.buf) {
+                Ok((msg, used)) => {
+                    self.buf.drain(..used);
+                    return Ok(Some(msg));
+                }
+                Err(DecodeError::Truncated) => {} // need more bytes
+                Err(e) => return Err(PollError::Decode(e)),
+            }
+            let mut chunk = [0u8; 16 * 1024];
+            match stream.read(&mut chunk) {
+                Ok(0) => return Err(PollError::Closed),
+                Ok(n) => self.buf.extend_from_slice(&chunk[..n]),
+                Err(e)
+                    if matches!(
+                        e.kind(),
+                        std::io::ErrorKind::WouldBlock | std::io::ErrorKind::TimedOut
+                    ) =>
+                {
+                    return Ok(None)
+                }
+                Err(e) => return Err(PollError::Io(e)),
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn stat(iter: usize) -> IterStat {
+        IterStat { iter, resid_nsq: 0.25, mu: 1.5, support_changed: true, shrink_count: 2 }
+    }
+
+    #[test]
+    fn simple_frames_round_trip() {
+        for msg in [
+            Message::Submitted { id: 7 },
+            Message::Subscribe { id: u64::MAX },
+            Message::Cancel { id: 0 },
+            Message::Cancelled { id: 3, accepted: true },
+            Message::Progress { id: 9, stat: stat(4) },
+            Message::MetricsReq,
+            Message::Metrics { snapshot: "submitted=1".into() },
+            Message::Metrics { snapshot: String::new() },
+            Message::Err { msg: "queue full".into() },
+        ] {
+            let frame = encode(&msg);
+            let (back, used) = decode(&frame).unwrap();
+            assert_eq!(back, msg);
+            assert_eq!(used, frame.len());
+        }
+    }
+
+    #[test]
+    fn two_frames_in_one_buffer_decode_in_order() {
+        let a = Message::Submitted { id: 1 };
+        let b = Message::Err { msg: "x".into() };
+        let mut buf = encode(&a);
+        buf.extend_from_slice(&encode(&b));
+        let (first, used) = decode(&buf).unwrap();
+        assert_eq!(first, a);
+        let (second, used2) = decode(&buf[used..]).unwrap();
+        assert_eq!(second, b);
+        assert_eq!(used + used2, buf.len());
+    }
+
+    #[test]
+    fn version_checksum_tag_and_length_are_enforced() {
+        let frame = encode(&Message::Submitted { id: 5 });
+        // Version byte.
+        let mut bad = frame.clone();
+        bad[0] = 9;
+        assert_eq!(decode(&bad), Err(DecodeError::BadVersion(9)));
+        // Flipped payload byte → checksum mismatch.
+        let mut bad = frame.clone();
+        bad[HEADER_LEN] ^= 0xFF;
+        assert!(matches!(decode(&bad), Err(DecodeError::BadChecksum { .. })));
+        // Flipped checksum byte.
+        let mut bad = frame.clone();
+        *bad.last_mut().unwrap() ^= 1;
+        assert!(matches!(decode(&bad), Err(DecodeError::BadChecksum { .. })));
+        // Unknown tag (checksum recomputed so only the tag is wrong).
+        let mut bad = frame.clone();
+        bad[1] = 200;
+        let body_end = bad.len() - TRAILER_LEN;
+        let sum = checksum(&bad[..body_end]);
+        bad[body_end..].copy_from_slice(&sum.to_le_bytes());
+        assert_eq!(decode(&bad), Err(DecodeError::UnknownTag(200)));
+        // Absurd length field.
+        let mut bad = frame;
+        bad[2..6].copy_from_slice(&u32::MAX.to_le_bytes());
+        assert!(matches!(decode(&bad), Err(DecodeError::TooLarge(_))));
+    }
+
+    #[test]
+    fn every_truncation_is_rejected_without_panicking() {
+        let msg = Message::Progress { id: 1, stat: stat(3) };
+        let frame = encode(&msg);
+        for cut in 0..frame.len() {
+            assert_eq!(
+                decode(&frame[..cut]),
+                Err(DecodeError::Truncated),
+                "prefix of {cut} bytes"
+            );
+        }
+    }
+
+    #[test]
+    fn checksummed_but_lying_payload_is_malformed_not_a_panic() {
+        // A Progress frame whose payload is too short for its fields.
+        let mut frame = vec![WIRE_VERSION, 6];
+        frame.extend_from_slice(&4u32.to_le_bytes());
+        frame.extend_from_slice(&[1, 2, 3, 4]);
+        let sum = checksum(&frame);
+        frame.extend_from_slice(&sum.to_le_bytes());
+        assert!(matches!(decode(&frame), Err(DecodeError::Malformed(_))));
+        // A string whose length prefix exceeds the payload.
+        let mut frame = vec![WIRE_VERSION, 10];
+        frame.extend_from_slice(&4u32.to_le_bytes());
+        frame.extend_from_slice(&1000u32.to_le_bytes());
+        let sum = checksum(&frame);
+        frame.extend_from_slice(&sum.to_le_bytes());
+        assert!(matches!(decode(&frame), Err(DecodeError::Malformed(_))));
+    }
+
+    #[test]
+    fn frame_reader_reassembles_split_frames() {
+        let msg = Message::Metrics { snapshot: "completed=3".into() };
+        let frame = encode(&msg);
+        // Feed the frame one byte at a time through a reader whose
+        // source times out between bytes.
+        struct Dribble {
+            data: Vec<u8>,
+            off: usize,
+        }
+        impl Read for Dribble {
+            fn read(&mut self, out: &mut [u8]) -> std::io::Result<usize> {
+                if self.off >= self.data.len() {
+                    return Err(std::io::ErrorKind::WouldBlock.into());
+                }
+                out[0] = self.data[self.off];
+                self.off += 1;
+                Ok(1)
+            }
+        }
+        let mut src = Dribble { data: frame, off: 0 };
+        let mut reader = FrameReader::new();
+        let mut got = None;
+        for _ in 0..1000 {
+            match reader.poll(&mut src).unwrap() {
+                Some(m) => {
+                    got = Some(m);
+                    break;
+                }
+                None => continue,
+            }
+        }
+        assert_eq!(got, Some(msg));
+    }
+}

@@ -1,0 +1,37 @@
+//! # Streaming wire protocol for the recovery service
+//!
+//! Turns the in-process [`crate::coordinator::RecoveryService`] into a
+//! network service with **live convergence streams**: clients *watch* a
+//! recovery converge (per-iteration residuals — the quantity NIHT's
+//! convergence theory says to monitor, and what makes low-precision
+//! trade-offs observable while a job runs) instead of polling it.
+//!
+//! Std-only TCP, no async runtime (the repo is offline/vendored):
+//!
+//! * [`codec`] — length-prefixed, version-tagged, checksummed binary
+//!   frames with non-panicking decode (see the frame table there).
+//! * [`server`] — `lpcs serve --listen <addr>`: thread-per-connection
+//!   front end that bridges `Subscribe` frames onto bounded drop-oldest
+//!   [`crate::coordinator::ProgressSub`] queues (a slow client sheds
+//!   stats, never stalls a worker), relays `Cancel` into the service,
+//!   and shares wire-shipped operators by content so wire jobs batch
+//!   exactly like in-process ones.
+//! * [`client`] — blocking [`WireClient`]: `submit`, `watch` (iterator
+//!   of stats ending in exactly one outcome), `cancel`, `metrics`; the
+//!   `lpcs watch <addr> <job>` CLI rides on it.
+//!
+//! Served results are **bit-identical** to
+//! `Recovery::service_dispatch` for every [`crate::solver::SolverKind`]
+//! and operator (dense and matrix-free MRI alike) — pinned end to end by
+//! `tests/wire_serving.rs` on a [`crate::testkit::harness::ServiceHarness`].
+
+pub mod client;
+pub mod codec;
+pub mod server;
+
+pub use client::{Watch, WatchEvent, WireClient};
+pub use codec::{
+    checksum, decode, encode, try_encode, DecodeError, FrameReader, Message, PollError,
+    WireJobSpec, WireOutcome, WireProblem, WireResult, WIRE_VERSION,
+};
+pub use server::{serve, WireServer};

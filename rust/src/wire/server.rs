@@ -1,0 +1,418 @@
+//! TCP front end for [`RecoveryService`] — thread-per-connection, std
+//! only (the repo is offline/vendored; no async runtime).
+//!
+//! Each accepted connection speaks [`super::codec`] frames: `Submit`
+//! validates + enqueues (answered by `Submitted`/`Err`), `Cancel` relays
+//! into [`RecoveryService::cancel`], `Metrics` returns the counter
+//! snapshot, and `Subscribe` bridges the connection onto a push-based
+//! [`crate::coordinator::ProgressSub`] — a bounded drop-oldest queue, so
+//! a slow or dead client sheds stats instead of ever stalling a worker.
+//! While a subscription streams, the connection carries `Progress`
+//! frames and ends the stream with exactly one `Done`.
+//!
+//! Operators arrive by content, so the server keeps a content-addressed
+//! cache (`fnv64(problem bytes)` → operator `Arc`): two clients shipping
+//! the same Φ share one `Arc`, which is the coordinator's batch identity
+//! — wire jobs amortize quantize+pack passes exactly like in-process
+//! jobs sharing a handle.
+
+use super::codec::{self, FrameReader, Message, PollError, WireJobSpec};
+use crate::coordinator::{JobId, ProgressEvent, ProgressSub, RecoveryService};
+use crate::linalg::Mat;
+use crate::mri::PartialFourierOp;
+use anyhow::{Context, Result};
+use std::collections::HashMap;
+use std::io::Write;
+use std::net::{SocketAddr, TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{Arc, Mutex};
+use std::thread::JoinHandle;
+use std::time::Duration;
+
+/// How often blocked reads/receives wake to check the shutdown flag —
+/// the bound on how long `WireServer::shutdown` can wait per thread hop.
+const POLL_TICK: Duration = Duration::from_millis(100);
+/// A peer that cannot absorb a frame for this long is declared dead
+/// (the relay drops the subscription; the job keeps running).
+const WRITE_TIMEOUT: Duration = Duration::from_secs(5);
+
+fn fnv64(bytes: &[u8]) -> u64 {
+    let mut h: u64 = 0xCBF2_9CE4_8422_2325;
+    for &b in bytes {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x0000_0100_0000_01B3);
+    }
+    h
+}
+
+/// Content-addressed operator cache: same bytes → same `Arc` → same
+/// [`crate::coordinator::BatchKey`] operator identity. Entries are
+/// `Weak`: the cache never extends an operator's lifetime (a dense Φ can
+/// be 64 MiB), it only deduplicates operators that are still alive in
+/// queued/running jobs — which is exactly when batch identity matters.
+/// Dead entries are pruned on every insert.
+#[derive(Default)]
+struct OpCache {
+    dense: HashMap<u64, std::sync::Weak<Mat>>,
+    fourier: HashMap<u64, std::sync::Weak<PartialFourierOp>>,
+}
+
+/// Reconstruct an in-process spec, sharing operator `Arc`s across
+/// submissions that ship identical operator bytes.
+///
+/// Cheap path first: upgrade the cached `Weak` under a short lock, then
+/// verify content OUTSIDE the lock (a dense Φ can be 64 MiB — comparing
+/// it must not serialize other connections), and only on a miss pay for
+/// operator construction (matrix copy / mask validation + FFT plan).
+/// Hash collisions fail the content check and simply bypass the cache.
+fn build_spec(ws: WireJobSpec, cache: &Mutex<OpCache>) -> Result<crate::coordinator::JobSpec> {
+    let mut key_bytes = Vec::new();
+    codec::encode_problem(&mut key_bytes, &ws.problem);
+    let key = fnv64(&key_bytes);
+
+    let problem = match &ws.problem {
+        codec::WireProblem::Dense { rows, cols, data, shape_tag } => {
+            let hit = cache.lock().unwrap().dense.get(&key).and_then(std::sync::Weak::upgrade);
+            let phi = match hit {
+                Some(hit)
+                    if hit.rows == *rows && hit.cols == *cols && hit.data == *data =>
+                {
+                    hit
+                }
+                _ => {
+                    let fresh = ws.problem.build_handle()?;
+                    let phi = fresh.as_dense().expect("dense wire problem").clone();
+                    let mut cache = cache.lock().unwrap();
+                    cache.dense.retain(|_, w| w.strong_count() > 0);
+                    cache.dense.insert(key, Arc::downgrade(&phi));
+                    phi
+                }
+            };
+            match shape_tag {
+                Some(tag) => crate::coordinator::ProblemHandle::with_shape_tag(phi, tag),
+                None => crate::coordinator::ProblemHandle::new(phi),
+            }
+        }
+        codec::WireProblem::PartialFourier { r, kind, fraction, center_band, points, bits } => {
+            let hit =
+                cache.lock().unwrap().fourier.get(&key).and_then(std::sync::Weak::upgrade);
+            let op = match hit {
+                Some(hit)
+                    if hit.mask().r() == *r
+                        && hit.mask().config().kind == *kind
+                        && hit.mask().config().fraction == *fraction
+                        && hit.mask().config().center_band == *center_band
+                        && hit.mask().points() == points.as_slice() =>
+                {
+                    hit
+                }
+                _ => {
+                    let fresh = ws.problem.build_handle()?;
+                    let crate::coordinator::OperatorSpec::PartialFourier { op, .. } =
+                        fresh.op
+                    else {
+                        unreachable!("partial-Fourier wire problem builds a matrix-free handle")
+                    };
+                    let mut cache = cache.lock().unwrap();
+                    cache.fourier.retain(|_, w| w.strong_count() > 0);
+                    cache.fourier.insert(key, Arc::downgrade(&op));
+                    op
+                }
+            };
+            match bits {
+                Some(b) => crate::coordinator::ProblemHandle::low_prec_fourier(op, *b),
+                None => crate::coordinator::ProblemHandle::partial_fourier(op),
+            }
+        }
+    };
+    Ok(crate::coordinator::JobSpec {
+        problem,
+        y: ws.y,
+        s: ws.s,
+        solver: ws.solver,
+        engine: ws.engine,
+        seed: ws.seed,
+    })
+}
+
+/// Handle to a running wire server. Dropping it only raises the shutdown
+/// flag; call [`WireServer::shutdown`] for the bounded join.
+pub struct WireServer {
+    addr: SocketAddr,
+    shutdown: Arc<AtomicBool>,
+    accept: Option<JoinHandle<()>>,
+    conns: Arc<Mutex<Vec<JoinHandle<()>>>>,
+}
+
+impl WireServer {
+    /// The actually-bound address (resolves `:0` ephemeral ports).
+    pub fn addr(&self) -> SocketAddr {
+        self.addr
+    }
+
+    /// Stop accepting, wake every connection handler, and join them all.
+    /// Bounded: every blocking wait in the server ticks every 100 ms and
+    /// re-checks the flag, so no handler can outlive this call.
+    pub fn shutdown(mut self) {
+        self.shutdown.store(true, Ordering::SeqCst);
+        if let Some(h) = self.accept.take() {
+            h.join().expect("wire accept thread panicked");
+        }
+        let conns = std::mem::take(&mut *self.conns.lock().unwrap());
+        for h in conns {
+            h.join().expect("wire connection handler panicked");
+        }
+    }
+}
+
+impl Drop for WireServer {
+    fn drop(&mut self) {
+        self.shutdown.store(true, Ordering::SeqCst);
+    }
+}
+
+/// Start serving `service` on `listen` (e.g. `"127.0.0.1:0"` for an
+/// ephemeral port). `sub_depth` bounds each subscriber's progress queue
+/// (drop-oldest beyond it).
+pub fn serve(
+    service: Arc<RecoveryService>,
+    listen: &str,
+    sub_depth: usize,
+) -> Result<WireServer> {
+    let listener =
+        TcpListener::bind(listen).with_context(|| format!("binding wire listener on {listen}"))?;
+    listener.set_nonblocking(true).context("non-blocking wire listener")?;
+    let addr = listener.local_addr().context("wire listener address")?;
+    let shutdown = Arc::new(AtomicBool::new(false));
+    let conns: Arc<Mutex<Vec<JoinHandle<()>>>> = Arc::new(Mutex::new(Vec::new()));
+    let ops = Arc::new(Mutex::new(OpCache::default()));
+
+    let accept = {
+        let shutdown = shutdown.clone();
+        let conns = conns.clone();
+        std::thread::Builder::new()
+            .name("lpcs-wire-accept".into())
+            .spawn(move || loop {
+                if shutdown.load(Ordering::SeqCst) {
+                    return;
+                }
+                match listener.accept() {
+                    Ok((stream, _peer)) => {
+                        let service = service.clone();
+                        let ops = ops.clone();
+                        let shutdown = shutdown.clone();
+                        let handle = std::thread::Builder::new()
+                            .name("lpcs-wire-conn".into())
+                            .spawn(move || handle_conn(stream, service, ops, sub_depth, shutdown))
+                            .expect("spawn wire connection handler");
+                        // Reap handlers that already finished so a
+                        // long-running server doesn't accumulate dead
+                        // joinable threads connection after connection;
+                        // shutdown() still joins every live one.
+                        let mut conns = conns.lock().unwrap();
+                        conns.retain(|h| !h.is_finished());
+                        conns.push(handle);
+                    }
+                    Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
+                        std::thread::sleep(Duration::from_millis(10));
+                    }
+                    Err(_) => std::thread::sleep(Duration::from_millis(10)),
+                }
+            })
+            .expect("spawn wire accept thread")
+    };
+
+    Ok(WireServer { addr, shutdown, accept: Some(accept), conns })
+}
+
+fn send(conn: &mut TcpStream, msg: &Message) -> std::io::Result<()> {
+    let frame = codec::try_encode(msg)
+        .map_err(|e| std::io::Error::new(std::io::ErrorKind::InvalidData, e))?;
+    conn.write_all(&frame)
+}
+
+fn handle_conn(
+    mut conn: TcpStream,
+    service: Arc<RecoveryService>,
+    ops: Arc<Mutex<OpCache>>,
+    sub_depth: usize,
+    shutdown: Arc<AtomicBool>,
+) {
+    conn.set_nodelay(true).ok();
+    conn.set_read_timeout(Some(POLL_TICK)).ok();
+    conn.set_write_timeout(Some(WRITE_TIMEOUT)).ok();
+    let mut reader = FrameReader::new();
+    loop {
+        if shutdown.load(Ordering::SeqCst) {
+            return;
+        }
+        let msg = match reader.poll(&mut conn) {
+            Ok(None) => continue, // read tick; re-check shutdown
+            Ok(Some(msg)) => msg,
+            Err(PollError::Closed) | Err(PollError::Io(_)) => return,
+            Err(PollError::Decode(e)) => {
+                // Corrupt stream: best-effort error frame, then drop the
+                // connection (framing can no longer be trusted).
+                let _ = send(&mut conn, &Message::Err { msg: format!("protocol error: {e}") });
+                return;
+            }
+        };
+        let ok = match msg {
+            Message::Submit(ws) => {
+                let reply = match build_spec(ws, &ops).and_then(|spec| service.submit(spec)) {
+                    Ok(id) => Message::Submitted { id },
+                    Err(e) => Message::Err { msg: format!("{e:#}") },
+                };
+                send(&mut conn, &reply).is_ok()
+            }
+            Message::Subscribe { id } => match service.subscribe(id, sub_depth) {
+                None => send(&mut conn, &Message::Err { msg: format!("unknown job {id}") })
+                    .is_ok(),
+                Some(sub) => match relay(&sub, id, &mut conn, &service, &shutdown) {
+                    RelayEnd::Done => true,
+                    RelayEnd::Disconnected | RelayEnd::Shutdown => return,
+                },
+            },
+            Message::Cancel { id } => {
+                let accepted = service.cancel(id);
+                send(&mut conn, &Message::Cancelled { id, accepted }).is_ok()
+            }
+            Message::MetricsReq => {
+                let snapshot = service.metrics().snapshot();
+                send(&mut conn, &Message::Metrics { snapshot }).is_ok()
+            }
+            // Server-bound connections must never carry server→client
+            // frames; answer once and keep the (still well-framed)
+            // connection alive.
+            _ => send(
+                &mut conn,
+                &Message::Err { msg: "unexpected server-bound frame".into() },
+            )
+            .is_ok(),
+        };
+        if !ok {
+            return; // peer vanished mid-reply
+        }
+    }
+}
+
+enum RelayEnd {
+    /// Terminal frame delivered; the connection returns to request mode.
+    Done,
+    /// The peer died mid-stream: subscription detached, disconnect
+    /// counted, job untouched.
+    Disconnected,
+    Shutdown,
+}
+
+/// Pump one subscription onto the socket. The subscription queue is
+/// bounded with drop-oldest overflow, so however slow this relay (or its
+/// peer) is, the worker thread never blocks — stats are shed here, and
+/// the terminal outcome always arrives.
+fn relay(
+    sub: &ProgressSub,
+    id: JobId,
+    conn: &mut TcpStream,
+    service: &RecoveryService,
+    shutdown: &AtomicBool,
+) -> RelayEnd {
+    loop {
+        match sub.recv(POLL_TICK) {
+            Some(ProgressEvent::Stat(stat)) => {
+                if send(conn, &Message::Progress { id, stat }).is_err() {
+                    sub.detach();
+                    service.metrics().disconnects.fetch_add(1, Ordering::Relaxed);
+                    return RelayEnd::Disconnected;
+                }
+            }
+            Some(ProgressEvent::Terminal(out)) => {
+                if send(conn, &Message::Done(out.into())).is_err() {
+                    sub.detach();
+                    service.metrics().disconnects.fetch_add(1, Ordering::Relaxed);
+                    return RelayEnd::Disconnected;
+                }
+                sub.detach();
+                return RelayEnd::Done;
+            }
+            // Timeout tick. (`None` cannot mean end-of-stream here: this
+            // relay is the sole consumer, and the Terminal event returns
+            // above the moment it is taken.)
+            None => {
+                if shutdown.load(Ordering::SeqCst) {
+                    sub.detach();
+                    return RelayEnd::Shutdown;
+                }
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::EngineKind;
+    use crate::solver::SolverKind;
+    use crate::wire::codec::WireProblem;
+
+    #[test]
+    fn op_cache_shares_dense_arcs_by_content() {
+        let cache = Mutex::new(OpCache::default());
+        let ws = |seed: u64| WireJobSpec {
+            problem: WireProblem::Dense {
+                rows: 2,
+                cols: 3,
+                data: vec![1.0, 2.0, 3.0, 4.0, 5.0, 6.0],
+                shape_tag: None,
+            },
+            y: vec![0.0; 2],
+            s: 1,
+            solver: SolverKind::Niht,
+            engine: EngineKind::NativeDense,
+            seed,
+        };
+        let a = build_spec(ws(1), &cache).unwrap();
+        let b = build_spec(ws(2), &cache).unwrap();
+        assert_eq!(a.batch_key(), b.batch_key(), "same bytes → same operator Arc → batchable");
+        // Different content gets a different operator identity.
+        let mut other = ws(3);
+        if let WireProblem::Dense { data, .. } = &mut other.problem {
+            data[0] = 9.0;
+        }
+        let c = build_spec(other, &cache).unwrap();
+        assert_ne!(a.batch_key(), c.batch_key());
+    }
+
+    #[test]
+    fn op_cache_shares_fourier_arcs_by_content() {
+        let mask = crate::mri::SamplingMask::generate(
+            &crate::mri::MaskConfig::default(),
+            16,
+            7,
+        )
+        .unwrap();
+        let points: Vec<usize> = mask.points().to_vec();
+        let m = 2 * points.len();
+        let cache = Mutex::new(OpCache::default());
+        let ws = |bits: Option<u8>| WireJobSpec {
+            problem: WireProblem::PartialFourier {
+                r: 16,
+                kind: crate::mri::MaskKind::Cartesian,
+                fraction: 0.4,
+                center_band: 4,
+                points: points.clone(),
+                bits,
+            },
+            y: vec![0.0; m],
+            s: 4,
+            solver: SolverKind::Niht,
+            engine: EngineKind::NativeDense,
+            seed: 0,
+        };
+        let a = build_spec(ws(None), &cache).unwrap();
+        let b = build_spec(ws(None), &cache).unwrap();
+        assert_eq!(a.batch_key(), b.batch_key());
+        // A different sampling bit width never shares a batch key.
+        let q = build_spec(ws(Some(8)), &cache).unwrap();
+        assert_ne!(a.batch_key(), q.batch_key());
+    }
+}

@@ -1,0 +1,347 @@
+//! Wire-codec conformance: every frame the protocol can carry must
+//! round-trip bit-identically through encode/decode over
+//! `testkit::forall`-generated payloads (including empty and max-size
+//! vectors), and the decoder must reject truncated frames, corrupted
+//! checksums, and unknown version bytes with typed errors — never a
+//! panic (a network peer controls these bytes).
+
+use lpcs::algorithms::qniht::RequantMode;
+use lpcs::algorithms::IterStat;
+use lpcs::config::EngineKind;
+use lpcs::coordinator::JobState;
+use lpcs::mri::MaskKind;
+use lpcs::rng::XorShift128Plus;
+use lpcs::solver::SolverKind;
+use lpcs::testkit;
+use lpcs::wire::{
+    checksum, decode, encode, DecodeError, Message, WireJobSpec, WireOutcome, WireProblem,
+    WireResult, WIRE_VERSION,
+};
+
+fn rand_stat(rng: &mut XorShift128Plus) -> IterStat {
+    IterStat {
+        iter: rng.below(100_000),
+        resid_nsq: rng.gaussian_f32().abs(),
+        mu: rng.gaussian_f32(),
+        support_changed: rng.below(2) == 1,
+        shrink_count: rng.below(50),
+    }
+}
+
+fn rand_problem(rng: &mut XorShift128Plus) -> WireProblem {
+    if rng.below(2) == 0 {
+        // Dense, including degenerate 0×0 (empty data vector).
+        let (rows, cols) = if rng.below(8) == 0 {
+            (0, 0)
+        } else {
+            (1 + rng.below(8), 1 + rng.below(16))
+        };
+        WireProblem::Dense {
+            rows,
+            cols,
+            data: rng.gaussian_vec(rows * cols),
+            shape_tag: if rng.below(2) == 0 {
+                Some(format!("tag_{}", rng.below(1000)))
+            } else {
+                None
+            },
+        }
+    } else {
+        let r = 1 << (2 + rng.below(3)); // 4..16
+        let n_pts = 1 + rng.below(r * r - 1);
+        // Strictly ascending in-range points.
+        let mut points: Vec<usize> = rng.choose_k(r * r, n_pts);
+        points.sort_unstable();
+        WireProblem::PartialFourier {
+            r,
+            kind: if rng.below(2) == 0 { MaskKind::Cartesian } else { MaskKind::Radial },
+            fraction: rng.uniform_f32(),
+            center_band: 1 + rng.below(4),
+            points,
+            bits: match rng.below(4) {
+                0 => None,
+                1 => Some(2),
+                2 => Some(4),
+                _ => Some(8),
+            },
+        }
+    }
+}
+
+fn rand_solver(rng: &mut XorShift128Plus) -> SolverKind {
+    match rng.below(5) {
+        0 => SolverKind::Niht,
+        1 => SolverKind::Iht,
+        2 => SolverKind::Qniht {
+            bits_phi: [2u8, 4, 8][rng.below(3)],
+            bits_y: [2u8, 4, 8][rng.below(3)],
+            mode: if rng.below(2) == 0 { RequantMode::Fixed } else { RequantMode::Fresh },
+        },
+        3 => SolverKind::Cosamp,
+        _ => SolverKind::Fista {
+            lambda: if rng.below(2) == 0 { Some(rng.gaussian_f32().abs()) } else { None },
+            debias: rng.below(2) == 1,
+        },
+    }
+}
+
+fn rand_outcome(rng: &mut XorShift128Plus) -> WireOutcome {
+    WireOutcome {
+        id: rng.next_u64(),
+        state: [JobState::Queued, JobState::Running, JobState::Done, JobState::Failed]
+            [rng.below(4)],
+        result: if rng.below(2) == 0 {
+            Some(WireResult {
+                x: rng.gaussian_vec(rng.below(64)), // includes empty
+                iterations: rng.below(100_000) as u64,
+                converged: rng.below(2) == 1,
+                shrink_events: rng.below(100) as u64,
+                history: (0..rng.below(20)).map(|_| rand_stat(rng)).collect(),
+            })
+        } else {
+            None
+        },
+        error: if rng.below(2) == 0 { Some(format!("err {}", rng.below(100))) } else { None },
+        queued_us: rng.next_u64() >> 20,
+        ran_us: rng.next_u64() >> 20,
+    }
+}
+
+fn rand_message(rng: &mut XorShift128Plus) -> Message {
+    match rng.below(10) {
+        0 => Message::Submit(WireJobSpec {
+            problem: rand_problem(rng),
+            y: rng.gaussian_vec(rng.below(32)), // includes empty
+            s: 1 + rng.below(16),
+            solver: rand_solver(rng),
+            engine: [
+                EngineKind::NativeDense,
+                EngineKind::NativeQuant,
+                EngineKind::XlaQuant,
+                EngineKind::XlaDense,
+                EngineKind::FpgaModel,
+            ][rng.below(5)],
+            seed: rng.next_u64(),
+        }),
+        1 => Message::Submitted { id: rng.next_u64() },
+        2 => Message::Subscribe { id: rng.next_u64() },
+        3 => Message::Cancel { id: rng.next_u64() },
+        4 => Message::Cancelled { id: rng.next_u64(), accepted: rng.below(2) == 1 },
+        5 => Message::Progress { id: rng.next_u64(), stat: rand_stat(rng) },
+        6 => Message::Done(rand_outcome(rng)),
+        7 => Message::MetricsReq,
+        8 => Message::Metrics {
+            snapshot: if rng.below(4) == 0 {
+                String::new()
+            } else {
+                format!("submitted={} completed={}", rng.below(100), rng.below(100))
+            },
+        },
+        _ => Message::Err {
+            msg: if rng.below(4) == 0 { String::new() } else { "queue full".into() },
+        },
+    }
+}
+
+#[test]
+fn every_frame_kind_round_trips_over_generated_payloads() {
+    testkit::forall("wire-frame-roundtrip", 0xC0DEC, 300, |rng, _| {
+        let msg = rand_message(rng);
+        let frame = encode(&msg);
+        let (back, used) = decode(&frame).unwrap_or_else(|e| panic!("{msg:?}: {e}"));
+        assert_eq!(used, frame.len(), "whole frame consumed");
+        assert_eq!(back, msg, "decode(encode(m)) == m");
+    });
+}
+
+#[test]
+fn max_size_and_empty_payloads_round_trip() {
+    // A deliberately fat frame: 64×128 dense Φ + a long history.
+    let mut rng = XorShift128Plus::new(99);
+    let fat = Message::Submit(WireJobSpec {
+        problem: WireProblem::Dense {
+            rows: 64,
+            cols: 128,
+            data: rng.gaussian_vec(64 * 128),
+            shape_tag: Some("fat".into()),
+        },
+        y: rng.gaussian_vec(64),
+        s: 8,
+        solver: SolverKind::qniht_fixed(2, 8),
+        engine: EngineKind::NativeQuant,
+        seed: 7,
+    });
+    let done = Message::Done(WireOutcome {
+        id: 1,
+        state: JobState::Done,
+        result: Some(WireResult {
+            x: rng.gaussian_vec(4096),
+            iterations: 1000,
+            converged: true,
+            shrink_events: 3,
+            history: (0..1000).map(|_| rand_stat(&mut rng)).collect(),
+        }),
+        error: None,
+        queued_us: 5,
+        ran_us: 9,
+    });
+    // And the empty extremes.
+    let empty_y = Message::Submit(WireJobSpec {
+        problem: WireProblem::Dense { rows: 0, cols: 0, data: vec![], shape_tag: None },
+        y: vec![],
+        s: 1,
+        solver: SolverKind::Niht,
+        engine: EngineKind::NativeDense,
+        seed: 0,
+    });
+    let empty_result = Message::Done(WireOutcome {
+        id: 0,
+        state: JobState::Failed,
+        result: Some(WireResult {
+            x: vec![],
+            iterations: 0,
+            converged: false,
+            shrink_events: 0,
+            history: vec![],
+        }),
+        error: Some(String::new()),
+        queued_us: 0,
+        ran_us: 0,
+    });
+    for msg in [fat, done, empty_y, empty_result] {
+        let frame = encode(&msg);
+        let (back, used) = decode(&frame).unwrap();
+        assert_eq!(used, frame.len());
+        assert_eq!(back, msg);
+    }
+}
+
+#[test]
+fn truncated_frames_are_rejected_at_every_cut_without_panicking() {
+    let mut rng = XorShift128Plus::new(0xBAD);
+    for _ in 0..20 {
+        let frame = encode(&rand_message(&mut rng));
+        // Exhaustive for small frames, sampled for big ones.
+        let cuts: Vec<usize> = if frame.len() <= 256 {
+            (0..frame.len()).collect()
+        } else {
+            (0..256).map(|_| rng.below(frame.len())).collect()
+        };
+        for cut in cuts {
+            assert_eq!(
+                decode(&frame[..cut]),
+                Err(DecodeError::Truncated),
+                "cut at {cut}/{}",
+                frame.len()
+            );
+        }
+    }
+}
+
+#[test]
+fn corrupted_frames_are_rejected_with_typed_errors() {
+    let mut rng = XorShift128Plus::new(0xC0FFEE);
+    for case in 0..50 {
+        let frame = encode(&rand_message(&mut rng));
+        // Unknown version byte (any value but the real one).
+        let mut bad = frame.clone();
+        bad[0] = bad[0].wrapping_add(1 + rng.below(254) as u8);
+        assert!(
+            matches!(decode(&bad), Err(DecodeError::BadVersion(_))),
+            "case {case}: version"
+        );
+        // A flipped bit anywhere in tag/length/payload/checksum fails the
+        // checksum (or the length/version guards) — never panics, never
+        // yields a wrong message silently.
+        let mut bad = frame.clone();
+        let pos = 1 + rng.below(bad.len() - 1);
+        bad[pos] ^= 1 << rng.below(8);
+        match decode(&bad) {
+            Err(_) => {}
+            Ok((msg, _)) => panic!("case {case}: corrupted frame decoded as {msg:?}"),
+        }
+    }
+}
+
+#[test]
+fn unknown_tag_rejected_even_with_valid_checksum() {
+    let frame = encode(&Message::MetricsReq);
+    let mut bad = frame;
+    bad[1] = 0xEE;
+    let body_end = bad.len() - 4;
+    let sum = checksum(&bad[..body_end]);
+    bad[body_end..].copy_from_slice(&sum.to_le_bytes());
+    assert_eq!(decode(&bad), Err(DecodeError::UnknownTag(0xEE)));
+}
+
+#[test]
+fn garbage_buffers_never_panic_the_decoder() {
+    testkit::forall("wire-garbage", 0xDEAD, 200, |rng, _| {
+        let n = rng.below(64);
+        let garbage: Vec<u8> = (0..n).map(|_| (rng.next_u64() & 0xFF) as u8).collect();
+        let _ = decode(&garbage); // any Err is fine; a panic is not
+        // And garbage wearing a valid header prefix.
+        let mut framed = vec![WIRE_VERSION, (rng.below(12)) as u8];
+        framed.extend_from_slice(&(n as u32).to_le_bytes());
+        framed.extend_from_slice(&garbage);
+        framed.extend_from_slice(&checksum(&framed).to_le_bytes());
+        let _ = decode(&framed);
+    });
+}
+
+#[test]
+fn wire_spec_reconstructs_the_in_process_spec() {
+    use lpcs::coordinator::{JobSpec, OperatorSpec, ProblemHandle};
+    use lpcs::mri::{MaskConfig, PartialFourierOp, SamplingMask};
+    use lpcs::Mat;
+    use std::sync::Arc;
+
+    // Dense: operator content, tag, and every scalar survive the trip.
+    let mut rng = XorShift128Plus::new(11);
+    let phi = Arc::new(Mat::from_fn(6, 10, |_, _| rng.gaussian_f32()));
+    let spec = JobSpec::builder(
+        ProblemHandle::with_shape_tag(phi.clone(), "roundtrip"),
+        rng.gaussian_vec(6),
+        3,
+    )
+    .bits(4, 8)
+    .seed(21)
+    .build();
+    let back = WireJobSpec::from_spec(&spec).into_spec().unwrap();
+    assert_eq!(back.problem.as_dense().unwrap().data, phi.data);
+    assert_eq!(back.problem.shape_tag.as_deref(), Some("roundtrip"));
+    assert_eq!(back.y, spec.y);
+    assert_eq!((back.s, back.solver, back.engine, back.seed), (3, spec.solver, spec.engine, 21));
+    back.validate().unwrap();
+
+    // Matrix-free: the reconstructed mask is the client's mask, point
+    // for point, and the low-precision bit width rides along.
+    let mask = SamplingMask::generate(&MaskConfig::default(), 16, 3).unwrap();
+    let op = Arc::new(PartialFourierOp::new(mask));
+    let m = ProblemHandle::partial_fourier(op.clone()).m();
+    let spec = JobSpec::builder(ProblemHandle::low_prec_fourier(op.clone(), 8), vec![0.5; m], 4)
+        .engine(EngineKind::NativeDense)
+        .solver(SolverKind::Niht)
+        .build();
+    let back = WireJobSpec::from_spec(&spec).into_spec().unwrap();
+    match &back.problem.op {
+        OperatorSpec::PartialFourier { op: rebuilt, bits } => {
+            assert_eq!(rebuilt.mask().points(), op.mask().points());
+            assert_eq!(rebuilt.mask().r(), 16);
+            assert_eq!(*bits, Some(8));
+        }
+        other => panic!("wrong operator: {other:?}"),
+    }
+    back.validate().unwrap();
+
+    // A lying dense payload (data ≠ rows×cols) is caught at reconstruction.
+    let lying = WireJobSpec {
+        problem: WireProblem::Dense { rows: 4, cols: 4, data: vec![0.0; 3], shape_tag: None },
+        y: vec![0.0; 4],
+        s: 1,
+        solver: SolverKind::Niht,
+        engine: EngineKind::NativeDense,
+        seed: 0,
+    };
+    assert!(lying.into_spec().unwrap_err().to_string().contains("4x4"));
+}

@@ -1,0 +1,380 @@
+//! End-to-end wire-serving conformance on a `testkit::ServiceHarness`
+//! (real `RecoveryService` + wire server on an ephemeral port):
+//!
+//! * every servable `SolverKind` × engine pair — and the matrix-free
+//!   `PartialFourier` operator, f32 and low-precision — submitted OVER
+//!   THE WIRE streams a monotone `IterStat` sequence ending in exactly
+//!   one `Done`, whose result is **bit-identical** to
+//!   `Recovery::service_dispatch` (the same conformance bar as
+//!   `tests/service_matrix.rs`);
+//! * cancel-over-the-wire stops a long job which still completes with
+//!   its partial iterate;
+//! * a slow subscriber sheds stats oldest-first (observed via
+//!   `ProgressSub::dropped` and `ServiceMetrics.progress_dropped`) and
+//!   provably never blocks the worker;
+//! * a client killed mid-stream drops only its subscription: the job
+//!   completes, the disconnect is counted, and harness shutdown proves
+//!   no threads leak (strict bounded join).
+
+use lpcs::algorithms::{IterStat, SolveOptions};
+use lpcs::config::{EngineKind, ServiceConfig};
+use lpcs::coordinator::{JobOutcome, JobSpec, JobState, ProblemHandle, ProgressEvent};
+use lpcs::mri::{self, MriConfig, MriProblem};
+use lpcs::rng::XorShift128Plus;
+use lpcs::solver::{Problem, Recovery, SolverKind};
+use lpcs::testkit::ServiceHarness;
+use lpcs::wire::{Watch, WatchEvent};
+use lpcs::Mat;
+use std::sync::atomic::Ordering;
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+fn planted(m: usize, n: usize, s: usize, seed: u64) -> (Arc<Mat>, Vec<f32>) {
+    let mut rng = XorShift128Plus::new(seed);
+    let phi = Mat::from_fn(m, n, |_, _| rng.gaussian_f32() / (m as f32).sqrt());
+    let mut x = vec![0.0f32; n];
+    for i in rng.choose_k(n, s) {
+        x[i] = 2.0 * rng.gaussian_f32().signum() + 0.3 * rng.gaussian_f32();
+    }
+    let y = phi.matvec(&x);
+    (Arc::new(phi), y)
+}
+
+fn harness(workers: usize) -> ServiceHarness {
+    ServiceHarness::start(
+        ServiceConfig { workers, queue_capacity: 64, max_batch: 4, ..Default::default() },
+        SolveOptions::default(),
+    )
+}
+
+/// Drain a watch stream asserting the protocol invariants: iteration
+/// numbers strictly increase (gaps allowed — drop-oldest), no event
+/// follows the terminal one, and exactly one `Done` arrives.
+fn collect_stream(watch: Watch<'_>) -> (Vec<IterStat>, JobOutcome) {
+    let mut stats: Vec<IterStat> = Vec::new();
+    let mut done = None;
+    for event in watch {
+        match event.expect("stream event") {
+            WatchEvent::Progress(st) => {
+                assert!(done.is_none(), "Progress after Done");
+                stats.push(st);
+            }
+            WatchEvent::Done(out) => {
+                assert!(done.is_none(), "second Done");
+                done = Some(out);
+            }
+        }
+    }
+    let done = done.expect("stream must end in exactly one Done");
+    for w in stats.windows(2) {
+        assert!(
+            w[0].iter < w[1].iter,
+            "stream monotone in iteration number: {} then {}",
+            w[0].iter,
+            w[1].iter
+        );
+    }
+    (stats, done)
+}
+
+/// The dense servable matrix (same pairs `tests/service_matrix.rs`
+/// pins in-process; XLA engines need real PJRT bindings and are covered
+/// by their dispatch-error tests).
+fn dense_matrix() -> Vec<(SolverKind, EngineKind)> {
+    vec![
+        (SolverKind::Niht, EngineKind::NativeDense),
+        (SolverKind::Iht, EngineKind::NativeDense),
+        (SolverKind::Cosamp, EngineKind::NativeDense),
+        (SolverKind::Fista { lambda: None, debias: true }, EngineKind::NativeDense),
+        (SolverKind::qniht_fixed(2, 8), EngineKind::NativeQuant),
+        (SolverKind::qniht_fixed(4, 8), EngineKind::NativeQuant),
+        (SolverKind::qniht_fixed(8, 8), EngineKind::NativeQuant),
+        (SolverKind::qniht_fixed(2, 8), EngineKind::FpgaModel),
+        (SolverKind::qniht_fixed(8, 8), EngineKind::FpgaModel),
+    ]
+}
+
+#[test]
+fn every_solver_kind_served_over_the_wire_matches_the_facade_bit_for_bit() {
+    let h = harness(2);
+    for (case, (solver, engine)) in dense_matrix().into_iter().enumerate() {
+        let (phi, y) = planted(96, 192, 5, 300 + case as u64);
+        let seed = 70 + case as u64;
+
+        let direct = Recovery::problem(Problem::new(phi.clone(), y.clone(), 5))
+            .solver(solver)
+            .engine(engine)
+            .seed(seed)
+            .service_dispatch()
+            .run()
+            .unwrap_or_else(|e| panic!("{} on {}: direct: {e:#}", solver.name(), engine.name()));
+
+        let mut client = h.client();
+        let id = client
+            .submit(
+                &JobSpec::builder(ProblemHandle::new(phi), y, 5)
+                    .solver(solver)
+                    .engine(engine)
+                    .seed(seed)
+                    .build(),
+            )
+            .unwrap_or_else(|e| panic!("{} on {}: submit: {e:#}", solver.name(), engine.name()));
+        let (_stats, out) = collect_stream(client.watch(id).unwrap());
+
+        assert_eq!(out.state, JobState::Done, "{} on {}: {:?}", solver.name(), engine.name(), out.error);
+        let served = out.result.expect("done jobs carry a result");
+        assert_eq!(
+            served.x,
+            direct.x,
+            "{} on {}: wire-served x̂ must be bit-identical to the facade",
+            solver.name(),
+            engine.name()
+        );
+        assert_eq!(served.iterations, direct.iterations, "{} on {}", solver.name(), engine.name());
+        assert_eq!(served.converged, direct.converged, "{} on {}", solver.name(), engine.name());
+    }
+    h.shutdown();
+}
+
+#[test]
+fn matrix_free_mri_jobs_served_over_the_wire_match_the_facade_bit_for_bit() {
+    // The operator ships by content (mask points), not by Arc: the
+    // server reconstructs it and must still run the client's exact math,
+    // on the f32 and the low-precision sampling paths.
+    let h = harness(2);
+    let p = MriProblem::build(&MriConfig { resolution: 16, ..Default::default() }, 5).unwrap();
+    for (case, bits) in [None, Some(8u8), Some(2)].into_iter().enumerate() {
+        let seed = 90 + case as u64;
+        let direct_problem = match bits {
+            None => Problem::with_op(p.op.clone(), p.y.clone(), p.s),
+            Some(b) => mri::lowprec_problem(p.op.clone(), &p.y, p.s, b, seed),
+        };
+        let direct = Recovery::problem(direct_problem)
+            .solver(SolverKind::Niht)
+            .engine(EngineKind::NativeDense)
+            .seed(seed)
+            .service_dispatch()
+            .run()
+            .unwrap_or_else(|e| panic!("bits={bits:?}: direct: {e:#}"));
+
+        let handle = match bits {
+            None => ProblemHandle::partial_fourier(p.op.clone()),
+            Some(b) => ProblemHandle::low_prec_fourier(p.op.clone(), b),
+        };
+        let mut client = h.client();
+        let id = client
+            .submit(
+                &JobSpec::builder(handle, p.y.clone(), p.s)
+                    .engine(EngineKind::NativeDense)
+                    .solver(SolverKind::Niht)
+                    .seed(seed)
+                    .build(),
+            )
+            .unwrap_or_else(|e| panic!("bits={bits:?}: submit: {e:#}"));
+        let (_stats, out) = collect_stream(client.watch(id).unwrap());
+        assert_eq!(out.state, JobState::Done, "bits={bits:?}: {:?}", out.error);
+        let served = out.result.unwrap();
+        assert_eq!(served.x, direct.x, "bits={bits:?}: wire-served x̂ ≠ facade x̂");
+        assert_eq!(served.iterations, direct.iterations, "bits={bits:?}");
+    }
+    h.shutdown();
+}
+
+#[test]
+fn cancel_over_the_wire_stops_the_job_which_still_completes() {
+    let h = ServiceHarness::start(
+        ServiceConfig { workers: 1, queue_capacity: 8, max_batch: 1, max_wait_ms: 0, ..Default::default() },
+        // tol 0 + huge budget: without cancellation this grinds 200k
+        // iterations of two 512×4096 matvecs each.
+        SolveOptions::default().with_tol(0.0).with_max_iters(200_000),
+    );
+    let (phi, y) = planted(512, 4096, 8, 21);
+    let spec = JobSpec::builder(ProblemHandle::new(phi), y, 8)
+        .engine(EngineKind::NativeDense)
+        .seed(1)
+        .build();
+    let mut watcher = h.client();
+    let mut canceller = h.client();
+    // Cancelling an unknown job is a clean `false`, not an error.
+    assert!(!canceller.cancel(424_242).unwrap());
+
+    let id = watcher.submit(&spec).unwrap();
+    let mut watch = watcher.watch(id).unwrap();
+    // Let the stream prove the job is iterating, then cancel from a
+    // second connection.
+    let mut seen = 0;
+    while seen < 2 {
+        match watch.next().expect("job must not finish on its own").unwrap() {
+            WatchEvent::Progress(_) => seen += 1,
+            WatchEvent::Done(out) => panic!("finished before cancel: {out:?}"),
+        }
+    }
+    assert!(canceller.cancel(id).unwrap(), "running job accepts cancellation");
+    // The stream still ends in exactly one Done, carrying the partial
+    // iterate of a non-converged solve.
+    let mut done = None;
+    for event in watch {
+        if let WatchEvent::Done(out) = event.unwrap() {
+            done = Some(out);
+        }
+    }
+    let out = done.expect("cancelled stream ends in Done");
+    assert_eq!(out.state, JobState::Done);
+    let res = out.result.unwrap();
+    assert!(!res.converged, "cancelled solve reports non-convergence");
+    assert!(res.iterations < 10_000, "stopped early, ran {}", res.iterations);
+    assert_eq!(h.service().metrics().cancelled.load(Ordering::Relaxed), 1);
+    h.shutdown();
+}
+
+#[test]
+fn slow_subscriber_sheds_oldest_and_never_blocks_the_worker() {
+    // Subscriber queues two deep: a consumer that never drains MUST shed
+    // (drop-oldest) instead of stalling the producing worker. The
+    // problem is big enough (ms-scale iterations, hundreds of them at
+    // tol 0) that the subscription always lands while the solve runs.
+    let h = ServiceHarness::start_with_depth(
+        ServiceConfig { workers: 1, queue_capacity: 8, max_batch: 1, max_wait_ms: 0, ..Default::default() },
+        SolveOptions::default().with_tol(0.0).with_max_iters(300),
+        2,
+    );
+    let (phi, y) = planted(512, 4096, 8, 31);
+    let spec = JobSpec::builder(ProblemHandle::new(phi), y, 8)
+        .engine(EngineKind::NativeDense)
+        .seed(2)
+        .build();
+
+    // In-process slow subscriber: registered, then never drained while
+    // the job runs out its whole budget.
+    let mut client = h.client();
+    let id = client.submit(&spec).unwrap();
+    let sub = h.service().subscribe(id, 2).expect("known job");
+    let out = h
+        .service()
+        .wait(id, Duration::from_secs(120))
+        .expect("worker completes while the subscriber sleeps — it was never blocked");
+    assert_eq!(out.state, JobState::Done);
+    let total_iters = out.result.as_ref().unwrap().iterations;
+    assert!(total_iters > 10, "tol 0 keeps a 512×4096 solve iterating: {total_iters}");
+
+    // Drop-oldest observed: (almost) everything was shed, the queue
+    // holds only the freshest stats, in order, then the terminal event.
+    assert!(sub.dropped() > 0, "a depth-2 queue under {total_iters} stats must shed");
+    let mut kept: Vec<usize> = Vec::new();
+    loop {
+        match sub.recv(Duration::from_secs(5)) {
+            Some(ProgressEvent::Stat(st)) => kept.push(st.iter),
+            Some(ProgressEvent::Terminal(t)) => {
+                assert_eq!(t.state, JobState::Done);
+                break;
+            }
+            None => panic!("terminal must be delivered"),
+        }
+    }
+    assert!(!kept.is_empty() && kept.len() <= 2, "bounded queue: {kept:?}");
+    assert!(kept.windows(2).all(|w| w[0] < w[1]), "shedding preserves order: {kept:?}");
+    assert_eq!(
+        *kept.last().unwrap(),
+        total_iters - 1,
+        "drop-oldest keeps the freshest stat"
+    );
+    assert!(
+        h.service().metrics().progress_dropped.load(Ordering::Relaxed) > 0,
+        "the service counts shed stats"
+    );
+
+    // Over the wire: a client that sleeps mid-stream still gets a
+    // coherent (monotone, single-Done) stream for a second job.
+    let id2 = client.submit(&spec).unwrap();
+    let watch = client.watch(id2).unwrap();
+    std::thread::sleep(Duration::from_millis(300));
+    let (_stats, out2) = collect_stream(watch);
+    assert_eq!(out2.state, JobState::Done);
+    h.shutdown();
+}
+
+#[test]
+fn client_killed_mid_stream_drops_subscription_but_job_completes() {
+    let h = ServiceHarness::start(
+        ServiceConfig { workers: 1, queue_capacity: 8, max_batch: 1, max_wait_ms: 0, ..Default::default() },
+        SolveOptions::default().with_tol(0.0).with_max_iters(150_000),
+    );
+    // ~1M flops per iteration: hundreds of milliseconds of streaming
+    // remain after the client dies, so the relay reliably hits the dead
+    // socket while the job is still running.
+    let (phi, y) = planted(256, 2048, 4, 41);
+    let spec = JobSpec::builder(ProblemHandle::new(phi), y, 4)
+        .engine(EngineKind::NativeDense)
+        .seed(3)
+        .build();
+    let id = {
+        let mut client = h.client();
+        let id = client.submit(&spec).unwrap();
+        let mut watch = client.watch(id).unwrap();
+        // The stream is live...
+        let mut seen = 0;
+        while seen < 2 {
+            match watch.next().unwrap().unwrap() {
+                WatchEvent::Progress(_) => seen += 1,
+                WatchEvent::Done(out) => panic!("finished prematurely: {out:?}"),
+            }
+        }
+        id
+        // ...and the client dies here (socket closed mid-stream).
+    };
+    // The server notices on its next writes, detaches the subscription
+    // and counts the disconnect — while the job keeps running.
+    let deadline = Instant::now() + Duration::from_secs(30);
+    while h.service().metrics().disconnects.load(Ordering::Relaxed) == 0 {
+        assert!(Instant::now() < deadline, "disconnect must be detected and counted");
+        std::thread::sleep(Duration::from_millis(20));
+    }
+    assert_ne!(
+        h.service().state_of(id),
+        None,
+        "sanity: the job is still known to the service"
+    );
+    // Finish fast (the point is the job SURVIVES the dead client, not
+    // that we burn 150k iterations) and confirm completion.
+    assert!(h.service().cancel(id));
+    let out = h.service().wait(id, Duration::from_secs(120)).expect("job completes");
+    assert_eq!(out.state, JobState::Done, "{:?}", out.error);
+    assert_eq!(h.service().metrics().disconnects.load(Ordering::Relaxed), 1);
+    // Strict shutdown: joins the accept thread and every connection
+    // handler; panics if any thread (and its service Arc) leaked.
+    h.shutdown();
+}
+
+#[test]
+fn bad_subscriptions_error_and_the_connection_stays_usable() {
+    let h = harness(1);
+    let mut client = h.client();
+    // Unknown job: the watch yields exactly one Err and ends.
+    let events: Vec<_> = client.watch(424_242).unwrap().collect();
+    assert_eq!(events.len(), 1);
+    let err = events[0].as_ref().unwrap_err().to_string();
+    assert!(err.contains("unknown job"), "{err}");
+    // The same connection still serves requests...
+    let snapshot = client.metrics().unwrap();
+    assert!(snapshot.contains("submitted="), "{snapshot}");
+    // ...including a full submit → watch → re-watch cycle: subscribing
+    // to an already-terminal job yields its Done immediately.
+    let (phi, y) = planted(32, 64, 3, 51);
+    let id = client
+        .submit(
+            &JobSpec::builder(ProblemHandle::new(phi), y, 3)
+                .engine(EngineKind::NativeDense)
+                .seed(4)
+                .build(),
+        )
+        .unwrap();
+    let (_stats, out) = collect_stream(client.watch(id).unwrap());
+    assert_eq!(out.state, JobState::Done);
+    let (late_stats, late_out) = collect_stream(client.watch(id).unwrap());
+    assert!(late_stats.is_empty(), "terminal subscription carries no stats");
+    assert_eq!(late_out.state, JobState::Done);
+    assert_eq!(late_out.result.unwrap().x, out.result.unwrap().x);
+    let snapshot = client.metrics().unwrap();
+    assert!(snapshot.contains("completed="), "{snapshot}");
+    h.shutdown();
+}

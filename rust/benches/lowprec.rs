@@ -60,6 +60,37 @@ fn main() {
             a.bytes_f32()
         );
 
+        // Multi-RHS sweep: one pass over the packed words serves R
+        // right-hand sides, decoding each row once per batch. The quotable
+        // comparison is `rhs{R}` (per the whole batch) vs `repeat{R}` (R
+        // single-RHS calls): the amortization win is their ratio. Reduced
+        // reps — the R=8 sweep at acceptance scale is ~8 matvecs per iter.
+        let mut rhs_rng = XorShift128Plus::new(0xB0 + bits as u64);
+        let xs: Vec<Vec<f32>> = (0..8).map(|_| rhs_rng.gaussian_vec(n)).collect();
+        let mut s_multi4 = None;
+        for r in [1usize, 2, 4, 8] {
+            let refs: Vec<&[f32]> = xs[..r].iter().map(|v| v.as_slice()).collect();
+            rep.run(&format!("packed_matvec_multi/scalar/{bits}bit/rhs{r}"), 2, 7, || {
+                lowprec::packed_matvec_multi_with(scalar, &p, &refs)
+            });
+            let s = rep.run(&format!("packed_matvec_multi/dispatched/{bits}bit/rhs{r}"), 2, 7, || {
+                lowprec::packed_matvec_multi_with(dispatched, &p, &refs)
+            });
+            if r == 4 {
+                s_multi4 = Some(s);
+            }
+        }
+        let s_rep4 = rep.run(&format!("packed_matvec_repeat/dispatched/{bits}bit/rhs4"), 2, 7, || {
+            xs[..4]
+                .iter()
+                .map(|xr| lowprec::packed_matvec_with(dispatched, &p, xr))
+                .collect::<Vec<_>>()
+        });
+        println!(
+            "    -> {bits}-bit multi-RHS (R=4): {:.2}x over 4 single calls",
+            s_rep4.median_s() / s_multi4.expect("r=4 ran").median_s()
+        );
+
         // Pure integer path (both operands quantized).
         let q8 = Quantizer::new(8);
         let (xq, _xscale) = q8.quantize_auto(&x, &mut rng);

@@ -45,23 +45,68 @@ pub fn solve_observed<K: NihtKernel>(
 ) -> SolveResult {
     assert!(s >= 1, "sparsity must be >= 1");
     assert!(s <= kernel.n(), "sparsity exceeds dimension");
-    let n = kernel.n();
-    let mut x = vec![0.0f32; n];
-    let mut supp = Vec::new(); // empty support at x = 0
-    let mut shrink_events = 0usize;
-    let mut history = Vec::new();
-    let mut converged = false;
-    let mut iters = 0usize;
-
+    let mut driver = IterDriver::new(kernel.n());
     for it in 0..opts.max_iters {
         kernel.begin_iteration(it);
-        let st = kernel.full_step(&x, s);
+        driver.advance(kernel, it, s, opts, observer);
+        if driver.done {
+            break;
+        }
+    }
+    driver.finish()
+}
+
+/// Per-solve state of the Algorithm-1 driver, factored out so the
+/// sequential path ([`solve_observed`]) and the batched lockstep path
+/// ([`super::qniht::solve_batch_lockstep`]) share ONE iteration body:
+/// trajectories are bit-identical by construction rather than by parallel
+/// maintenance of two copies of the control flow.
+pub(crate) struct IterDriver {
+    /// The current iterate (read by the lockstep driver to compute the
+    /// batched residuals/gradients before each [`Self::advance`]).
+    pub(crate) x: Vec<f32>,
+    supp: Vec<usize>, // empty support at x = 0
+    shrink_events: usize,
+    history: Vec<IterStat>,
+    converged: bool,
+    iters: usize,
+    /// Set when the solve finished (converged or observer-stopped); callers
+    /// must not `advance` a done driver.
+    pub(crate) done: bool,
+}
+
+impl IterDriver {
+    pub(crate) fn new(n: usize) -> Self {
+        Self {
+            x: vec![0.0f32; n],
+            supp: Vec::new(),
+            shrink_events: 0,
+            history: Vec::new(),
+            converged: false,
+            iters: 0,
+            done: false,
+        }
+    }
+
+    /// One outer iteration of Algorithm 1: full step, support-change line
+    /// search, bookkeeping, observer, convergence check. `it` must be the
+    /// number of previous `advance` calls (callers that skip iterations
+    /// would corrupt the warm-start convergence guard).
+    pub(crate) fn advance<K: NihtKernel + ?Sized>(
+        &mut self,
+        kernel: &mut K,
+        it: usize,
+        s: usize,
+        opts: &SolveOptions,
+        observer: &mut dyn IterObserver,
+    ) {
+        let st = kernel.full_step(&self.x, s);
         let mut mu = st.mu;
         let mut x_next = st.x_next;
         let mut dx_nsq = st.dx_nsq;
         let mut phi1_dx_nsq = st.phi1_dx_nsq;
         let mut supp_next = support_of(&x_next);
-        let changed = !supports_equal(&supp, &supp_next);
+        let changed = !supports_equal(&self.supp, &supp_next);
         let mut shrinks_this_iter = 0usize;
 
         if changed && it > 0 {
@@ -75,14 +120,14 @@ pub fn solve_observed<K: NihtKernel>(
                     break;
                 }
                 mu /= opts.kappa * (1.0 - opts.c);
-                let (xn, dn, pn) = kernel.apply_step(&x, &st.g, mu, s);
+                let (xn, dn, pn) = kernel.apply_step(&self.x, &st.g, mu, s);
                 x_next = xn;
                 dx_nsq = dn;
                 phi1_dx_nsq = pn;
                 shrinks_this_iter += 1;
-                shrink_events += 1;
+                self.shrink_events += 1;
                 supp_next = support_of(&x_next);
-                if supports_equal(&supp, &supp_next) {
+                if supports_equal(&self.supp, &supp_next) {
                     // Support stabilized: Algorithm 1 only requires the
                     // μ ≤ (1−c)·b guard when the support *moves*, and a
                     // small-enough μ can no longer move it — shrinking
@@ -103,23 +148,32 @@ pub fn solve_observed<K: NihtKernel>(
             shrink_count: shrinks_this_iter,
         };
         if opts.track_history {
-            history.push(stat);
+            self.history.push(stat);
         }
 
-        let x_nsq = linalg::norm2_sq(&x);
-        iters = it + 1;
-        x = x_next;
-        supp = supp_next;
+        let x_nsq = linalg::norm2_sq(&self.x);
+        self.iters = it + 1;
+        self.x = x_next;
+        self.supp = supp_next;
         if observer.on_iteration(&stat) == ObserverSignal::Stop {
-            break;
+            self.done = true;
+            return;
         }
         if it > 0 && dx_nsq <= opts.tol * opts.tol * x_nsq.max(1e-12) {
-            converged = true;
-            break;
+            self.converged = true;
+            self.done = true;
         }
     }
 
-    SolveResult { x, iterations: iters, converged, shrink_events, history }
+    pub(crate) fn finish(self) -> SolveResult {
+        SolveResult {
+            x: self.x,
+            iterations: self.iters,
+            converged: self.converged,
+            shrink_events: self.shrink_events,
+            history: self.history,
+        }
+    }
 }
 
 /// Dense full-precision kernel (the 32-bit baseline): Φ̂₁ = Φ̂₂ = Φ.

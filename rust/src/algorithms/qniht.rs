@@ -27,9 +27,9 @@
 //! batch-key-equal jobs and binds per-job kernels to the shared `Arc`
 //! via [`QuantKernel::with_prepared`].
 
-use super::niht::solve;
+use super::niht::{solve, IterDriver};
 use super::support::{hard_threshold, support_of, top_s_indices};
-use super::{NihtKernel, SolveOptions, SolveResult, StepOut};
+use super::{IterStat, NihtKernel, ObserverSignal, SolveOptions, SolveResult, StepOut};
 use crate::linalg::{self, Mat};
 use crate::lowprec;
 use crate::quant::packed::PackedMatrix;
@@ -117,6 +117,30 @@ impl PreparedPhi {
     pub fn bytes_ideal(&self) -> usize {
         self.codes2.bytes_ideal() + self.codes1_t.bytes_ideal()
     }
+
+    /// Batched gradient matvecs: Φ̂₁ᵀ rⱼ for every residual in `rs`. On
+    /// the packed path this is ONE multi-RHS sweep
+    /// ([`lowprec::packed_matvec_multi`]) that decodes each packed Φ̂ᵀ row
+    /// once for the whole batch instead of once per job; the unpacked
+    /// fallback loops the single-RHS matvec. Either way each returned
+    /// gradient is bit-identical to the sequential kernel's
+    /// `phi1t_v(rs[j])` — the multi-RHS kernel contract.
+    pub(crate) fn gradients_multi(&self, rs: &[&[f32]]) -> Vec<Vec<f32>> {
+        if let Some(p1t) = &self.packed1_t {
+            return lowprec::packed_matvec_multi(p1t, rs);
+        }
+        rs.iter()
+            .map(|r| {
+                lowprec::qmatvec(
+                    &self.codes1_t.codes,
+                    self.n(),
+                    self.m(),
+                    self.codes1_t.multiplier(),
+                    r,
+                )
+            })
+            .collect()
+    }
 }
 
 /// Quantized NIHT kernel (native execution engine).
@@ -193,7 +217,7 @@ impl QuantKernel {
     }
 
     /// Name of the SIMD kernel backend executing this kernel's matvecs
-    /// ("avx2", "neon", or "scalar") — diagnostics / bench labels.
+    /// ("vnni", "avx2", "neon", or "scalar") — diagnostics / bench labels.
     pub fn simd_backend(&self) -> &'static str {
         crate::simd::backend_name()
     }
@@ -248,9 +272,50 @@ impl QuantKernel {
         )
     }
 
-    fn residual(&self, x: &[f32]) -> Vec<f32> {
+    pub(crate) fn residual(&self, x: &[f32]) -> Vec<f32> {
         let yx = self.phi2_x(x);
         self.y_hat.iter().zip(&yx).map(|(a, b)| a - b).collect()
+    }
+
+    /// The tail of [`NihtKernel::full_step`] once the gradient is in hand:
+    /// support selection, adaptive μ, proposed iterate. Factored out so the
+    /// lockstep batch driver ([`solve_batch_lockstep`]) can substitute a
+    /// gradient computed by the batched multi-RHS matvec while reusing the
+    /// exact per-job arithmetic of the sequential path — the two stay
+    /// bit-identical by sharing this one body.
+    pub(crate) fn step_from_gradient(
+        &mut self,
+        x: &[f32],
+        s: usize,
+        g: Vec<f32>,
+        resid_nsq: f32,
+    ) -> StepOut {
+        let supp = if x.iter().any(|&v| v != 0.0) {
+            support_of(x)
+        } else {
+            top_s_indices(&g, s)
+        };
+        let vals: Vec<f32> = supp.iter().map(|&i| g[i]).collect();
+        let num: f32 = vals.iter().map(|v| v * v).sum();
+        // Φ̂₂ g_Γ restricted to the support (packed scale-and-add in
+        // Fixed mode, dense column-restricted matvec otherwise).
+        let ph = &*self.phi_hat;
+        let pg = if let Some(p1t) = &ph.packed1_t {
+            lowprec::packed_scale_add(p1t, &supp, &vals)
+        } else {
+            lowprec::qmatvec_sparse_cols(
+                &ph.codes2.codes,
+                self.m,
+                self.n,
+                ph.codes2.multiplier(),
+                &supp,
+                &vals,
+            )
+        };
+        let den = linalg::norm2_sq(&pg);
+        let mu = num / den.max(f32::MIN_POSITIVE);
+        let (x_next, dx_nsq, phi1_dx_nsq) = self.apply_step(x, &g, mu, s);
+        StepOut { x_next, g, mu, dx_nsq, phi1_dx_nsq, resid_nsq }
     }
 }
 
@@ -279,32 +344,7 @@ impl NihtKernel for QuantKernel {
         let resid_nsq = linalg::norm2_sq(&r);
         // g = Φ̂₁ᵀ r — a row-major matvec over the transposed buffer.
         let g = self.phi1t_v(&r);
-        let supp = if x.iter().any(|&v| v != 0.0) {
-            support_of(x)
-        } else {
-            top_s_indices(&g, s)
-        };
-        let vals: Vec<f32> = supp.iter().map(|&i| g[i]).collect();
-        let num: f32 = vals.iter().map(|v| v * v).sum();
-        // Φ̂₂ g_Γ restricted to the support (packed scale-and-add in
-        // Fixed mode, dense column-restricted matvec otherwise).
-        let ph = &*self.phi_hat;
-        let pg = if let Some(p1t) = &ph.packed1_t {
-            lowprec::packed_scale_add(p1t, &supp, &vals)
-        } else {
-            lowprec::qmatvec_sparse_cols(
-                &ph.codes2.codes,
-                self.m,
-                self.n,
-                ph.codes2.multiplier(),
-                &supp,
-                &vals,
-            )
-        };
-        let den = linalg::norm2_sq(&pg);
-        let mu = num / den.max(f32::MIN_POSITIVE);
-        let (x_next, dx_nsq, phi1_dx_nsq) = self.apply_step(x, &g, mu, s);
-        StepOut { x_next, g, mu, dx_nsq, phi1_dx_nsq, resid_nsq }
+        self.step_from_gradient(x, s, g, resid_nsq)
     }
 
     fn apply_step(&mut self, x: &[f32], g: &[f32], mu: f32, s: usize) -> (Vec<f32>, f32, f32) {
@@ -318,6 +358,110 @@ impl NihtKernel for QuantKernel {
         let p1dx = self.phi1_sparse(&idx, &vals);
         (x_next, dx_nsq, linalg::norm2_sq(&p1dx))
     }
+}
+
+/// One observation in a lockstep batch — what [`solve_batch_lockstep`]
+/// needs to bind a [`QuantKernel`] to the shared Φ̂. Φ̂'s own seed lives in
+/// the prepared matrix; `seed` drives only the stochastic y quantization.
+pub struct BatchJob<'a> {
+    pub y: &'a [f32],
+    pub bits_y: u8,
+    pub seed: u64,
+}
+
+/// [`NihtKernel`] adapter the lockstep driver wraps around a
+/// [`QuantKernel`] for one `advance` call: `full_step` consumes a gradient
+/// already produced by the batched multi-RHS matvec instead of issuing its
+/// own, so the per-row unpack of Φ̂ᵀ is amortized across the batch while
+/// [`IterDriver::advance`] sees the ordinary kernel interface (line-search
+/// `apply_step` calls pass straight through).
+struct PrecomputedStep<'a> {
+    inner: &'a mut QuantKernel,
+    g: Option<Vec<f32>>,
+    resid_nsq: f32,
+}
+
+impl NihtKernel for PrecomputedStep<'_> {
+    fn m(&self) -> usize {
+        self.inner.m
+    }
+
+    fn n(&self) -> usize {
+        self.inner.n
+    }
+
+    fn full_step(&mut self, x: &[f32], s: usize) -> StepOut {
+        let g = self.g.take().expect("one full_step per lockstep advance");
+        self.inner.step_from_gradient(x, s, g, self.resid_nsq)
+    }
+
+    fn apply_step(&mut self, x: &[f32], g: &[f32], mu: f32, s: usize) -> (Vec<f32>, f32, f32) {
+        self.inner.apply_step(x, g, mu, s)
+    }
+}
+
+/// Solve a batch of observations against one shared Φ̂ in LOCKSTEP: all
+/// still-running jobs advance through global iteration `it` together, and
+/// their gradients Φ̂₁ᵀrⱼ come from ONE batched multi-RHS matvec
+/// ([`PreparedPhi::gradients_multi`]) that decodes each packed Φ̂ᵀ row once
+/// for the whole batch instead of once per job — the bandwidth win the
+/// multi-RHS kernels exist for.
+///
+/// Every job's trajectory is bit-identical to a sequential
+/// [`QuantKernel::with_prepared`] + [`super::niht::solve_observed`] run
+/// with the same seeds, independent of batch composition: the iteration
+/// body is the shared [`IterDriver`], the multi-RHS kernels are
+/// bit-identical per RHS to the single-RHS kernels (their contract), and a
+/// job that finishes early simply drops out of the batched matvec without
+/// perturbing the others (active jobs never pause, so each job's local
+/// iteration count equals the global `it`).
+///
+/// `observe(j, stat)` fires once per active job per iteration, after job
+/// `j`'s iterate updates; returning [`ObserverSignal::Stop`] cancels job
+/// `j` alone.
+pub fn solve_batch_lockstep(
+    prepared: &Arc<PreparedPhi>,
+    jobs: &[BatchJob<'_>],
+    s: usize,
+    opts: &SolveOptions,
+    observe: &mut dyn FnMut(usize, &IterStat) -> ObserverSignal,
+) -> Vec<SolveResult> {
+    if jobs.is_empty() {
+        return Vec::new();
+    }
+    let n = prepared.n();
+    assert!(s >= 1, "sparsity must be >= 1");
+    assert!(s <= n, "sparsity exceeds dimension");
+    let mut kernels: Vec<QuantKernel> = jobs
+        .iter()
+        .map(|j| QuantKernel::with_prepared(prepared.clone(), j.y, j.bits_y, j.seed))
+        .collect();
+    let mut drivers: Vec<IterDriver> = (0..jobs.len()).map(|_| IterDriver::new(n)).collect();
+    let mut active: Vec<usize> = (0..jobs.len()).collect();
+    for it in 0..opts.max_iters {
+        if active.is_empty() {
+            break;
+        }
+        for &j in &active {
+            kernels[j].begin_iteration(it);
+        }
+        // Per-job residuals (sparse-x phase, cheap), then one batched
+        // gradient sweep over the shared packed Φ̂ᵀ for every RHS.
+        let rs: Vec<Vec<f32>> = active
+            .iter()
+            .map(|&j| kernels[j].residual(&drivers[j].x))
+            .collect();
+        let resid_nsqs: Vec<f32> = rs.iter().map(|r| linalg::norm2_sq(r)).collect();
+        let r_refs: Vec<&[f32]> = rs.iter().map(|r| r.as_slice()).collect();
+        let gs = prepared.gradients_multi(&r_refs);
+        for ((&j, g), &resid_nsq) in active.iter().zip(gs).zip(&resid_nsqs) {
+            let mut pk = PrecomputedStep { inner: &mut kernels[j], g: Some(g), resid_nsq };
+            let mut obs = |st: &IterStat| observe(j, st);
+            drivers[j].advance(&mut pk, it, s, opts, &mut obs);
+        }
+        active.retain(|&j| !drivers[j].done);
+    }
+    drivers.into_iter().map(IterDriver::finish).collect()
 }
 
 /// Convenience: quantized NIHT solve (the paper's `b_Φ & b_y` variants).
@@ -473,10 +617,125 @@ mod tests {
         assert_eq!(a.x, b.x, "same (phi seed, y seed) must reproduce bit-identically");
     }
 
+    fn batch_problem(
+        phi: &Mat,
+        njobs: usize,
+        seed: u64,
+    ) -> (Vec<Vec<f32>>, Vec<Vec<usize>>) {
+        let n = phi.cols;
+        let mut rng = XorShift128Plus::new(seed);
+        let (mut ys, mut supports) = (vec![], vec![]);
+        for _ in 0..njobs {
+            let mut x_true = vec![0.0f32; n];
+            for i in rng.choose_k(n, 6) {
+                x_true[i] = 2.0 * rng.gaussian_f32().signum();
+            }
+            ys.push(phi.matvec(&x_true));
+            supports.push(support_of(&x_true));
+        }
+        (ys, supports)
+    }
+
+    #[test]
+    fn lockstep_batch_matches_sequential_bit_for_bit() {
+        // The core contract of the batched path: for every packed width,
+        // each job in a lockstep batch reproduces its sequential
+        // with_prepared solve EXACTLY — same iterate bits, same iteration
+        // count — so batching is invisible to results.
+        let (phi, _, _) = planted(96, 192, 6, 10);
+        let opts = SolveOptions::default();
+        for bits in [2u8, 4, 8] {
+            let prepared = Arc::new(PreparedPhi::quantize(&phi, bits, 7));
+            let (ys, _) = batch_problem(&phi, 3, 123);
+            let jobs: Vec<BatchJob> = ys
+                .iter()
+                .enumerate()
+                .map(|(i, y)| BatchJob { y, bits_y: 8, seed: 50 + i as u64 })
+                .collect();
+            let batch = solve_batch_lockstep(&prepared, &jobs, 6, &opts, &mut |_, _| {
+                ObserverSignal::Continue
+            });
+            assert_eq!(batch.len(), 3);
+            for (i, y) in ys.iter().enumerate() {
+                let mut k = QuantKernel::with_prepared(prepared.clone(), y, 8, 50 + i as u64);
+                let seq = solve(&mut k, 6, &opts);
+                assert_eq!(batch[i].x, seq.x, "bits={bits} job={i}");
+                assert_eq!(batch[i].iterations, seq.iterations, "bits={bits} job={i}");
+                assert_eq!(batch[i].converged, seq.converged, "bits={bits} job={i}");
+            }
+        }
+    }
+
+    #[test]
+    fn lockstep_batch_recovers_supports() {
+        let (phi, _, _) = planted(96, 192, 6, 11);
+        let prepared = Arc::new(PreparedPhi::quantize(&phi, 8, 21));
+        let (ys, supports) = batch_problem(&phi, 3, 321);
+        let jobs: Vec<BatchJob> = ys
+            .iter()
+            .enumerate()
+            .map(|(i, y)| BatchJob { y, bits_y: 8, seed: i as u64 })
+            .collect();
+        let res = solve_batch_lockstep(
+            &prepared,
+            &jobs,
+            6,
+            &SolveOptions::default(),
+            &mut |_, _| ObserverSignal::Continue,
+        );
+        for (r, want) in res.iter().zip(&supports) {
+            assert_eq!(&support_of(&r.x), want);
+        }
+    }
+
+    #[test]
+    fn lockstep_observer_stops_one_job_only() {
+        // Stopping one job must not perturb the rest of the batch: the
+        // stopped job drops out of the shared gradient sweep and the others
+        // keep their exact trajectories.
+        let (phi, _, _) = planted(96, 192, 6, 12);
+        let prepared = Arc::new(PreparedPhi::quantize(&phi, 4, 33));
+        let (ys, _) = batch_problem(&phi, 3, 213);
+        let jobs: Vec<BatchJob> = ys
+            .iter()
+            .enumerate()
+            .map(|(i, y)| BatchJob { y, bits_y: 8, seed: i as u64 })
+            .collect();
+        let opts = SolveOptions::default();
+        let full = solve_batch_lockstep(&prepared, &jobs, 6, &opts, &mut |_, _| {
+            ObserverSignal::Continue
+        });
+        let stopped = solve_batch_lockstep(&prepared, &jobs, 6, &opts, &mut |j, st| {
+            if j == 1 && st.iter == 0 {
+                ObserverSignal::Stop
+            } else {
+                ObserverSignal::Continue
+            }
+        });
+        assert_eq!(stopped[1].iterations, 1);
+        assert!(!stopped[1].converged);
+        assert_eq!(stopped[0].x, full[0].x);
+        assert_eq!(stopped[2].x, full[2].x);
+    }
+
+    #[test]
+    fn lockstep_empty_batch_is_empty() {
+        let (phi, _, _) = planted(32, 64, 3, 13);
+        let prepared = Arc::new(PreparedPhi::quantize(&phi, 8, 1));
+        let res = solve_batch_lockstep(
+            &prepared,
+            &[],
+            3,
+            &SolveOptions::default(),
+            &mut |_, _| ObserverSignal::Continue,
+        );
+        assert!(res.is_empty());
+    }
+
     #[test]
     fn reports_simd_backend() {
         let (phi, y, _) = planted(16, 32, 2, 9);
         let k = QuantKernel::new(&phi, &y, 4, 8, RequantMode::Fixed, 1);
-        assert!(["scalar", "avx2", "neon"].contains(&k.simd_backend()));
+        assert!(["scalar", "avx2", "neon", "vnni"].contains(&k.simd_backend()));
     }
 }

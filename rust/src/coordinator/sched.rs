@@ -55,11 +55,25 @@ pub struct CostModel {
     /// Work-unit credit per microsecond of age: aging jobs pull their
     /// batch forward even before the starvation bound trips.
     pub age_credit_per_us: f64,
+    /// Fraction of a quantized dense job's per-iteration cost that is the
+    /// 2/4/8-bit field unpack of packed Φ words (vs the arithmetic against
+    /// the right-hand side). The engine's lockstep batched path decodes
+    /// each row ONCE per batch through the multi-RHS kernels, so this
+    /// share is paid per batch, not per job — bigger batches get cheaper
+    /// per job beyond the setup amortization. 0 disables the effect;
+    /// [`crate::perfmodel::cpu::measure_decode_fraction`] calibrates it
+    /// from the live kernels.
+    pub decode_fraction: f64,
 }
 
 impl Default for CostModel {
     fn default() -> Self {
-        Self { setup_per_entry: 2.0, nominal_iters: 64.0, age_credit_per_us: 1.0 }
+        Self {
+            setup_per_entry: 2.0,
+            nominal_iters: 64.0,
+            age_credit_per_us: 1.0,
+            decode_fraction: 0.3,
+        }
     }
 }
 
@@ -101,13 +115,33 @@ impl CostModel {
         }
     }
 
+    /// [`Self::job_cost`] as seen from inside a batch of `len` jobs:
+    /// quantized dense jobs pay the packed-Φ decode share once per batch
+    /// (the engine's multi-RHS lockstep path), so their effective per-job
+    /// iteration cost shrinks with batch size. Dense-engine and
+    /// matrix-free jobs have no packed decode and price batch-size
+    /// independent.
+    pub fn job_cost_in_batch(&self, spec: &JobSpec, len: usize) -> f64 {
+        let base = self.job_cost(spec);
+        let amortizes = spec.engine.is_quantized() && spec.problem.as_dense().is_some();
+        // len <= 1: a singleton pays the full decode — return `base`
+        // itself so the exact-equality invariant (`c1 == job_cost`) holds
+        // by construction, not by float rounding of (1−d)+d/1.
+        if !amortizes || len <= 1 {
+            return base;
+        }
+        let d = self.decode_fraction.clamp(0.0, 1.0);
+        base * (1.0 - d + d / len as f64)
+    }
+
     /// Amortized per-job score of a (key-homogeneous) batch; lower
-    /// dispatches first. Bigger batches amortize setup better, lower
-    /// precision streams fewer bytes, older jobs earn credit.
+    /// dispatches first. Bigger batches amortize setup AND the packed
+    /// decode better, lower precision streams fewer bytes, older jobs
+    /// earn credit.
     pub fn batch_score(&self, jobs: &[&QueuedJob]) -> f64 {
         let lead = &jobs[0].spec;
         let max_age = jobs.iter().map(|j| j.age_us).max().unwrap_or(0);
-        self.setup_cost(lead) / jobs.len() as f64 + self.job_cost(lead)
+        self.setup_cost(lead) / jobs.len() as f64 + self.job_cost_in_batch(lead, jobs.len())
             - self.age_credit_per_us * max_age as f64
     }
 }
@@ -342,6 +376,34 @@ mod tests {
             cm.job_cost(&pf),
             cm.job_cost(&dense)
         );
+    }
+
+    #[test]
+    fn multi_rhs_decode_amortizes_quantized_batches_only() {
+        let phi = Arc::new(Mat::zeros(4, 8));
+        let cm = CostModel::default();
+        let quant = job(0, &phi, 4, 0).spec;
+        // Quantized dense jobs get cheaper per job as the batch grows
+        // (decode once per batch), converging to the non-decode share.
+        let c1 = cm.job_cost_in_batch(&quant, 1);
+        let c4 = cm.job_cost_in_batch(&quant, 4);
+        let c8 = cm.job_cost_in_batch(&quant, 8);
+        assert_eq!(c1, cm.job_cost(&quant), "singleton pays the full decode");
+        assert!(c4 < c1 && c8 < c4, "decode amortizes with batch size: {c1} {c4} {c8}");
+        assert!(c8 > cm.job_cost(&quant) * (1.0 - cm.decode_fraction));
+        // Dense-engine jobs have no packed decode: batch-size independent.
+        let dense = JobSpec::builder(
+            ProblemHandle::new(phi.clone()),
+            vec![0.0; phi.rows],
+            2,
+        )
+        .engine(EngineKind::NativeDense)
+        .solver(crate::solver::SolverKind::Niht)
+        .build();
+        assert_eq!(cm.job_cost_in_batch(&dense, 8), cm.job_cost(&dense));
+        // Zeroing the fraction disables the effect entirely.
+        let flat = CostModel { decode_fraction: 0.0, ..CostModel::default() };
+        assert_eq!(flat.job_cost_in_batch(&quant, 8), flat.job_cost(&quant));
     }
 
     #[test]

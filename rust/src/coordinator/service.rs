@@ -63,7 +63,7 @@ pub struct ServiceMetrics {
 impl ServiceMetrics {
     pub fn snapshot(&self) -> String {
         format!(
-            "submitted={} rejected={} invalid={} completed={} failed={} cancelled={} batches={} mean_batch={:.2} solve_ms={} modeled_ms={} progress_dropped={} disconnects={}",
+            "submitted={} rejected={} invalid={} completed={} failed={} cancelled={} batches={} mean_batch={:.2} solve_ms={} modeled_ms={} progress_dropped={} disconnects={} pool_contention={}",
             self.submitted.load(Ordering::Relaxed),
             self.rejected.load(Ordering::Relaxed),
             self.invalid.load(Ordering::Relaxed),
@@ -77,6 +77,9 @@ impl ServiceMetrics {
             self.modeled_us.load(Ordering::Relaxed) / 1000,
             self.progress_dropped.load(Ordering::Relaxed),
             self.disconnects.load(Ordering::Relaxed),
+            // Process-wide kernel-pool lock contention (crate::par), not a
+            // per-service counter: the worker pool is shared.
+            crate::par::contention_count(),
         )
     }
 }

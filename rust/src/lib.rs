@@ -82,7 +82,14 @@
 //!   [`lowprec`] (packed kernels over the runtime-dispatched [`simd`]
 //!   backends on the persistent [`par`] pool), [`linalg`], [`fft`]
 //!   (radix-2 transforms behind the matrix-free Fourier operator),
-//!   [`rng`].
+//!   [`rng`]. The kernel layer dispatches over a runtime ladder —
+//!   scalar < NEON < AVX2 < AVX-512 VNNI, forceable via `LPCS_SIMD` —
+//!   and exposes a multi-RHS surface (`*_multi`) that serves several
+//!   right-hand sides from ONE decode pass over the packed Φ words;
+//!   batched QNIHT solves route through it
+//!   ([`algorithms::qniht::solve_batch_lockstep`]), decoding each row
+//!   once per batch instead of once per job, bit-identically to the
+//!   sequential path.
 //! * **Artifacts** ([`runtime`]): PJRT client + compiled-executable cache
 //!   executing the L2/L1 JAX/Pallas AOT graphs (`artifacts/*.hlo.txt`);
 //!   reached through the registry's `xla-*` engines.

@@ -14,6 +14,14 @@
 //!   * `packed_matvec_q8` — both operands quantized: pure integer dots
 //!     (the paper's "casts its computation in terms of dot-products").
 //!
+//! The batched serving path adds multi-RHS twins (`packed_matvec_multi`,
+//! `packed_matvec_q8_multi`): one pass over the packed words serves every
+//! right-hand side in the batch, so each row is streamed — and, at 2/4
+//! bits, decoded — once per batch instead of once per RHS. Element `r` of
+//! a multi result is bit-identical to the corresponding single-RHS call
+//! on the same backend (see [`crate::simd`] for the kernel-level
+//! contract), which keeps batched solves batch-composition-independent.
+//!
 //! Since the `simd` layer landed, this module owns the *shape* of each
 //! kernel (parallel decomposition, bias bookkeeping, scratch management)
 //! while the per-element inner loops dispatch through
@@ -54,8 +62,9 @@ pub fn qmatvec_t(codes: &[i8], m: usize, n: usize, mult: f32, v: &[f32]) -> Vec<
     // Grain-aligned chunks: the backend's scale-add rounds its per-chunk
     // tail differently from its vector/FMA body, so boundaries must fall on
     // the backend's block grid for every thread count (bit-identical
-    // outputs under any LPCS_THREADS).
-    par::par_chunks_mut_aligned(&mut y, 256, k.f32_grain(), |start, chunk| {
+    // outputs under any LPCS_THREADS). `chunk_align` with lanes=1 (unpacked
+    // operand) reduces to the f32 grain.
+    par::par_chunks_mut_aligned(&mut y, 256, simd::chunk_align(k, 1), |start, chunk| {
         for (i, &vi) in v.iter().enumerate() {
             if vi == 0.0 {
                 continue;
@@ -89,7 +98,7 @@ pub fn qmatvec_sparse(
     let mut y = vec![0.0f32; m];
     // Grain-aligned chunks: see qmatvec_t — keeps the backend's FMA/tail
     // split on a fixed grid so results are identical for any LPCS_THREADS.
-    par::par_chunks_mut_aligned(&mut y, 256, k.f32_grain(), |start, chunk| {
+    par::par_chunks_mut_aligned(&mut y, 256, simd::chunk_align(k, 1), |start, chunk| {
         for (&j, &xj) in idx.iter().zip(vals) {
             debug_assert!(j < n);
             let col = &codes_t[j * m + start..j * m + start + chunk.len()];
@@ -151,18 +160,6 @@ pub fn decode_row(words: &[u64], bits: u8, n: usize, scratch: &mut [i8]) {
     simd::active().decode_row(words, bits, n, scratch)
 }
 
-fn gcd(a: usize, b: usize) -> usize {
-    let (mut a, mut b) = (a, b);
-    while b != 0 {
-        (a, b) = (b, a % b);
-    }
-    a
-}
-
-fn lcm(a: usize, b: usize) -> usize {
-    a / gcd(a, b) * b
-}
-
 /// View the first `n` packed bytes of an 8-bit row (fields ARE `code + 64`
 /// bytes; rows are u64-padded so any `n ≤ 8·words` is in bounds).
 #[inline]
@@ -215,6 +212,134 @@ pub fn packed_matvec_with(k: &dyn Kernels, p: &PackedMatrix, x: &[f32]) -> Vec<f
     y
 }
 
+/// Batched `y_r = A x_r` over one packed matrix (auto-selected backend):
+/// the multi-RHS twin of [`packed_matvec`]. See [`packed_matvec_multi_with`].
+pub fn packed_matvec_multi(p: &PackedMatrix, xs: &[&[f32]]) -> Vec<Vec<f32>> {
+    packed_matvec_multi_with(simd::active(), p, xs)
+}
+
+/// [`packed_matvec_multi`] with an explicit kernel backend.
+///
+/// One pass over the packed words serves every right-hand side: each row
+/// is loaded (and, at 2/4 bits, decoded) ONCE per batch instead of once
+/// per RHS, then fed through the backend's register-blocked multi dot.
+/// CONTRACT: `out[r]` is bit-identical to
+/// `packed_matvec_with(k, p, xs[r])` — the multi kernels preserve each
+/// RHS's accumulation structure, the per-row arithmetic here matches the
+/// single-RHS path op for op, and parallel chunks cover whole rows (each
+/// output element is computed independently), so results are invariant to
+/// batch composition and thread count.
+pub fn packed_matvec_multi_with(
+    k: &dyn Kernels,
+    p: &PackedMatrix,
+    xs: &[&[f32]],
+) -> Vec<Vec<f32>> {
+    let nrhs = xs.len();
+    if nrhs == 0 {
+        return Vec::new();
+    }
+    for x in xs {
+        assert_eq!(x.len(), p.n);
+    }
+    if nrhs == 1 {
+        return vec![packed_matvec_with(k, p, xs[0])];
+    }
+    let mult = p.multiplier();
+    let wpr = p.words_per_row;
+    let words = &p.words;
+    let (bits, n, m) = (p.bits, p.n, p.m);
+    // Row-major staging [row][rhs]; aligning chunks to nrhs keeps whole
+    // rows inside one chunk.
+    let mut flat = vec![0.0f32; m * nrhs];
+    if bits == 8 {
+        let sums: Vec<f32> = xs.iter().map(|x| x.iter().sum()).collect();
+        par::par_chunks_mut_aligned(&mut flat, 32 * nrhs, nrhs, |start, chunk| {
+            let row0 = start / nrhs;
+            let mut tmp = vec![0.0f32; nrhs];
+            for (ri, out_row) in chunk.chunks_mut(nrhs).enumerate() {
+                let i = row0 + ri;
+                let row = &words[i * wpr..(i + 1) * wpr];
+                k.dot_u8_f32_multi(row_bytes(row, n), xs, &mut tmp);
+                for (o, (&d, &sx)) in out_row.iter_mut().zip(tmp.iter().zip(&sums)) {
+                    *o = mult * (d - 64.0 * sx);
+                }
+            }
+        });
+    } else {
+        par::par_chunks_mut_aligned(&mut flat, 32 * nrhs, nrhs, |start, chunk| {
+            let row0 = start / nrhs;
+            let mut scratch = vec![0i8; n];
+            for (ri, out_row) in chunk.chunks_mut(nrhs).enumerate() {
+                let i = row0 + ri;
+                let row = &words[i * wpr..(i + 1) * wpr];
+                k.decode_row(row, bits, n, &mut scratch);
+                k.dot_i8_f32_multi(&scratch[..n], xs, out_row);
+                for o in out_row.iter_mut() {
+                    *o *= mult;
+                }
+            }
+        });
+    }
+    unstage(&flat, m, nrhs)
+}
+
+/// Batched integer-dot matvec: multi-RHS twin of [`packed_matvec_q8`];
+/// `out[r]` is bit-identical to `packed_matvec_q8_with(k, p, xqs[r],
+/// x_mults[r])` (all-integer accumulation, bias removed exactly).
+pub fn packed_matvec_q8_multi(p: &PackedMatrix, xqs: &[&[i8]], x_mults: &[f32]) -> Vec<Vec<f32>> {
+    packed_matvec_q8_multi_with(simd::active(), p, xqs, x_mults)
+}
+
+/// [`packed_matvec_q8_multi`] with an explicit kernel backend.
+pub fn packed_matvec_q8_multi_with(
+    k: &dyn Kernels,
+    p: &PackedMatrix,
+    xqs: &[&[i8]],
+    x_mults: &[f32],
+) -> Vec<Vec<f32>> {
+    let nrhs = xqs.len();
+    assert_eq!(x_mults.len(), nrhs);
+    if nrhs == 0 {
+        return Vec::new();
+    }
+    for xq in xqs {
+        assert_eq!(xq.len(), p.n);
+    }
+    let half = Quantizer::new(p.bits).half() as i64;
+    let sums: Vec<i64> = xqs
+        .iter()
+        .map(|xq| xq.iter().map(|&v| v as i64).sum())
+        .collect();
+    let mults: Vec<f32> = x_mults.iter().map(|&xm| p.multiplier() * xm).collect();
+    let wpr = p.words_per_row;
+    let words = &p.words;
+    let (bits, n, m) = (p.bits, p.n, p.m);
+    let mut flat = vec![0.0f32; m * nrhs];
+    par::par_chunks_mut_aligned(&mut flat, 32 * nrhs, nrhs, |start, chunk| {
+        let row0 = start / nrhs;
+        let mut fdots = vec![0i64; nrhs];
+        for (ri, out_row) in chunk.chunks_mut(nrhs).enumerate() {
+            let i = row0 + ri;
+            let row = &words[i * wpr..(i + 1) * wpr];
+            k.packed_field_dot_q8_multi(row, bits, n, xqs, &mut fdots);
+            for (o, ((&fdot, &sq), &mu)) in out_row
+                .iter_mut()
+                .zip(fdots.iter().zip(&sums).zip(&mults))
+            {
+                *o = mu * (fdot - half * sq) as f32;
+            }
+        }
+    });
+    unstage(&flat, m, nrhs)
+}
+
+/// Split row-major `[row][rhs]` staging into one output vector per RHS.
+fn unstage(flat: &[f32], m: usize, nrhs: usize) -> Vec<Vec<f32>> {
+    (0..nrhs)
+        .map(|r| (0..m).map(|i| flat[i * nrhs + r]).collect())
+        .collect()
+}
+
 /// y += c · (decoded row) for each (row, c) pair — the packed form of the
 /// paper's dense scale-and-add (Φ·x_sparse over a transposed buffer).
 pub fn packed_scale_add(p: &PackedMatrix, idx: &[usize], vals: &[f32]) -> Vec<f32> {
@@ -242,9 +367,10 @@ pub fn packed_scale_add_with(
     let words = &p.words;
     let bits = p.bits;
     // Chunk starts must sit on word boundaries (lanes) AND the backend's
-    // f32 block grid — a true lcm, since lanes is not a power of two for
-    // hand-built odd widths (e.g. bits=5 ⇒ lanes=12).
-    let align = lcm(lanes, k.f32_grain());
+    // f32 block grid — a true lcm (lanes is not a power of two for
+    // hand-built odd widths, e.g. bits=5 ⇒ lanes=12), computed by the one
+    // shared grain helper so splits and kernels cannot disagree.
+    let align = simd::chunk_align(k, lanes);
     par::par_chunks_mut_aligned(&mut y, 256, align, |start, chunk| {
         debug_assert_eq!(start % lanes, 0);
         let w0 = start / lanes;
@@ -465,6 +591,68 @@ mod tests {
                 assert!((g - w).abs() < 1e-3 * (1.0 + w.abs()), "bits={bits}");
             }
         }
+    }
+
+    #[test]
+    fn packed_matvec_multi_bit_identical_to_single() {
+        let mut rng = XorShift128Plus::new(90);
+        for bits in [2u8, 4, 8] {
+            for n in [17usize, 64, 65, 127, 300] {
+                let (qm, _, _) = setup(13, n, bits, 600 + n as u64 + bits as u64);
+                let p = PackedMatrix::pack(&qm);
+                let xs_own: Vec<Vec<f32>> = (0..5).map(|_| rng.gaussian_vec(n)).collect();
+                for r in [1usize, 2, 3, 5] {
+                    let xs: Vec<&[f32]> = xs_own[..r].iter().map(|v| v.as_slice()).collect();
+                    let got = packed_matvec_multi(&p, &xs);
+                    assert_eq!(got.len(), r);
+                    for (j, x) in xs.iter().enumerate() {
+                        let want = packed_matvec(&p, x);
+                        assert_eq!(got[j], want, "bits={bits} n={n} r={r} j={j}");
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn packed_matvec_q8_multi_bit_identical_to_single() {
+        let mut rng = XorShift128Plus::new(91);
+        let q8 = crate::quant::Quantizer::new(8);
+        for bits in [2u8, 4, 8] {
+            for n in [33usize, 64, 127] {
+                let (qm, _, _) = setup(11, n, bits, 700 + n as u64 + bits as u64);
+                let p = PackedMatrix::pack(&qm);
+                let quantized: Vec<(Vec<i8>, f32)> = (0..4)
+                    .map(|_| {
+                        let x = rng.gaussian_vec(n);
+                        let (xq, xscale) = q8.quantize_auto(&x, &mut rng);
+                        (xq, xscale / q8.half() as f32)
+                    })
+                    .collect();
+                let xqs: Vec<&[i8]> = quantized.iter().map(|(xq, _)| xq.as_slice()).collect();
+                let mults: Vec<f32> = quantized.iter().map(|&(_, m)| m).collect();
+                let got = packed_matvec_q8_multi(&p, &xqs, &mults);
+                for (j, ((xq, xm), g)) in quantized.iter().zip(&got).enumerate() {
+                    let want = packed_matvec_q8(&p, xq, *xm);
+                    assert_eq!(*g, want, "bits={bits} n={n} j={j}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn packed_matvec_multi_empty_and_thread_invariant() {
+        let (qm, x, _) = setup(19, 130, 2, 95);
+        let p = PackedMatrix::pack(&qm);
+        assert!(packed_matvec_multi(&p, &[]).is_empty());
+        let mut rng = XorShift128Plus::new(96);
+        let x2 = rng.gaussian_vec(130);
+        let xs: Vec<&[f32]> = vec![&x, &x2, &x];
+        let par_out = packed_matvec_multi(&p, &xs);
+        crate::par::set_thread_override(Some(1));
+        let one_out = packed_matvec_multi(&p, &xs);
+        crate::par::set_thread_override(None);
+        assert_eq!(par_out, one_out);
     }
 
     #[test]

@@ -27,8 +27,8 @@
 //! created; `LPCS_THREADS=1` bypasses the pool entirely).
 
 use std::collections::VecDeque;
-use std::sync::atomic::{AtomicUsize, Ordering};
-use std::sync::{Arc, Condvar, Mutex, OnceLock};
+use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
+use std::sync::{Arc, Condvar, Mutex, MutexGuard, OnceLock, TryLockError};
 
 /// Process-wide programmatic thread-count override (0 = none). Preferred
 /// over mutating `LPCS_THREADS` at runtime: `std::env::set_var` racing a
@@ -59,11 +59,40 @@ pub fn num_threads() -> usize {
 
 const MAX_WORKERS: usize = 64;
 
+/// Tally of job-queue lock acquisitions that found the lock already held
+/// (a `try_lock` miss, then the blocking lock). Monotonic since process
+/// start; readers should compare deltas. This is the cheap always-on
+/// signal of pool pressure the service metrics expose — if it grows fast
+/// relative to job throughput, the single shared queue is the bottleneck
+/// and per-worker deques (work stealing) would pay.
+static POOL_CONTENTION: AtomicU64 = AtomicU64::new(0);
+
+/// Cumulative count of contended job-queue lock acquisitions (see
+/// [`POOL_CONTENTION`]). Exposed through the coordinator's
+/// `ServiceMetrics` snapshot as `pool_contention`.
+pub fn contention_count() -> u64 {
+    POOL_CONTENTION.load(Ordering::Relaxed)
+}
+
 type Job = Box<dyn FnOnce() + Send + 'static>;
 
 struct Queue {
     jobs: Mutex<VecDeque<Job>>,
     ready: Condvar,
+}
+
+/// Lock the job queue, tallying contention: a failed `try_lock` costs one
+/// counter bump (Relaxed — it's a statistic, not a synchronization edge)
+/// before falling back to the ordinary blocking lock.
+fn lock_jobs(q: &Queue) -> MutexGuard<'_, VecDeque<Job>> {
+    match q.jobs.try_lock() {
+        Ok(g) => g,
+        Err(TryLockError::Poisoned(e)) => e.into_inner(),
+        Err(TryLockError::WouldBlock) => {
+            POOL_CONTENTION.fetch_add(1, Ordering::Relaxed);
+            q.jobs.lock().unwrap_or_else(|e| e.into_inner())
+        }
+    }
 }
 
 struct Pool {
@@ -74,7 +103,7 @@ struct Pool {
 fn worker_loop(q: Arc<Queue>) {
     loop {
         let job = {
-            let mut jobs = q.jobs.lock().unwrap_or_else(|e| e.into_inner());
+            let mut jobs = lock_jobs(&q);
             loop {
                 if let Some(j) = jobs.pop_front() {
                     break j;
@@ -148,7 +177,7 @@ impl Latch {
                 }
             }
             let job = {
-                let mut jobs = q.jobs.lock().unwrap_or_else(|e| e.into_inner());
+                let mut jobs = lock_jobs(q);
                 jobs.pop_front()
             };
             match job {
@@ -212,7 +241,7 @@ where
     {
         let latch_ref = &latch;
         let fref = &f;
-        let mut jobs = q.jobs.lock().unwrap_or_else(|e| e.into_inner());
+        let mut jobs = lock_jobs(q);
         for (ci, head) in chunks.enumerate() {
             let start = (ci + 1) * chunk;
             let job: Box<dyn FnOnce() + Send + '_> = Box::new(move || {
@@ -331,6 +360,23 @@ mod tests {
             let want: usize = (0..50).map(|j| j + i).sum();
             assert_eq!(x, want);
         }
+    }
+
+    #[test]
+    fn contention_counter_is_monotonic_and_cheap() {
+        // The counter can only grow; actual contention depends on the
+        // machine, so the assertion is monotonicity across a workload
+        // that exercises every lock site.
+        let before = contention_count();
+        for _ in 0..8 {
+            let mut v = vec![0u64; 4096];
+            par_chunks_mut(&mut v, 1, |start, chunk| {
+                for (k, x) in chunk.iter_mut().enumerate() {
+                    *x = (start + k) as u64;
+                }
+            });
+        }
+        assert!(contention_count() >= before);
     }
 
     #[test]

@@ -45,6 +45,69 @@ pub fn measure_matvec(m: usize, n: usize, bits: u8, iters: usize, seed: u64) -> 
     MatvecMeasurement { bits: bits as u32, time_s: t_q, baseline_f32_s: t_f32 }
 }
 
+/// Measured single-RHS vs batched multi-RHS matvec time at one precision:
+/// `single_s` is one `packed_matvec`, `per_rhs_s` is one multi-RHS sweep
+/// over `nrhs` right-hand sides divided by `nrhs`. The gap is the decode
+/// work the multi-RHS kernels amortize across the batch.
+#[derive(Debug, Clone, Copy)]
+pub struct MultiRhsMeasurement {
+    pub bits: u32,
+    pub nrhs: usize,
+    pub single_s: f64,
+    pub per_rhs_s: f64,
+}
+
+impl MultiRhsMeasurement {
+    /// Implied decode share of the single-RHS matvec under the cost
+    /// model's `base·(1 − d + d/B)` amortization law, clamped to [0, 1].
+    /// Feed this into `CostModel::decode_fraction` to calibrate the
+    /// scheduler's batch pricing to the live kernels.
+    pub fn decode_fraction(&self) -> f64 {
+        if self.nrhs < 2 || self.single_s <= 0.0 {
+            return 0.0;
+        }
+        let b = self.nrhs as f64;
+        let d = (1.0 - self.per_rhs_s / self.single_s) * b / (b - 1.0);
+        d.clamp(0.0, 1.0)
+    }
+}
+
+/// Time one single-RHS packed matvec against a multi-RHS sweep over
+/// `nrhs` right-hand sides (median of `iters` runs each).
+pub fn measure_matvec_multi(
+    m: usize,
+    n: usize,
+    bits: u8,
+    nrhs: usize,
+    iters: usize,
+    seed: u64,
+) -> MultiRhsMeasurement {
+    assert!(nrhs >= 1);
+    let mut rng = XorShift128Plus::new(seed);
+    let a = Mat::from_fn(m, n, |_, _| rng.gaussian_f32());
+    let qm = QuantizedMatrix::from_mat(&a, bits, &mut rng);
+    let p = PackedMatrix::pack(&qm);
+    let xs: Vec<Vec<f32>> = (0..nrhs).map(|_| rng.gaussian_vec(n)).collect();
+    let refs: Vec<&[f32]> = xs.iter().map(|x| x.as_slice()).collect();
+
+    let single_s = benchkit::bench(2, iters, || lowprec::packed_matvec(&p, &xs[0])).median_s();
+    let multi_s =
+        benchkit::bench(2, iters, || lowprec::packed_matvec_multi(&p, &refs)).median_s();
+    MultiRhsMeasurement { bits: bits as u32, nrhs, single_s, per_rhs_s: multi_s / nrhs as f64 }
+}
+
+/// Calibrate the scheduler's decode fraction from the live kernels at a
+/// representative shape: the median implied fraction over the packed
+/// widths. Cheap enough to run once at service start.
+pub fn measure_decode_fraction(m: usize, n: usize, nrhs: usize, seed: u64) -> f64 {
+    let mut fracs: Vec<f64> = [2u8, 4, 8]
+        .iter()
+        .map(|&bits| measure_matvec_multi(m, n, bits, nrhs, 5, seed).decode_fraction())
+        .collect();
+    fracs.sort_by(f64::total_cmp);
+    fracs[1]
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -62,5 +125,28 @@ mod tests {
         let m = measure_matvec(64, 256, 4, 5, 1);
         assert!(m.time_s > 0.0 && m.baseline_f32_s > 0.0);
         assert!(m.speedup() > 0.0);
+    }
+
+    #[test]
+    fn multi_rhs_measurement_runs_and_fraction_in_range() {
+        let m = measure_matvec_multi(64, 256, 4, 4, 3, 2);
+        assert!(m.single_s > 0.0 && m.per_rhs_s > 0.0);
+        let d = m.decode_fraction();
+        assert!((0.0..=1.0).contains(&d), "decode fraction {d} out of range");
+    }
+
+    #[test]
+    fn decode_fraction_inverts_the_amortization_law() {
+        // per_rhs = single·(1 − d + d/B) must invert back to d exactly.
+        let m = MultiRhsMeasurement {
+            bits: 4,
+            nrhs: 4,
+            single_s: 1.0,
+            per_rhs_s: 1.0 - 0.4 + 0.4 / 4.0,
+        };
+        assert!((m.decode_fraction() - 0.4).abs() < 1e-9);
+        // Degenerate cases clamp instead of exploding.
+        let solo = MultiRhsMeasurement { bits: 4, nrhs: 1, single_s: 1.0, per_rhs_s: 1.0 };
+        assert_eq!(solo.decode_fraction(), 0.0);
     }
 }

@@ -83,6 +83,40 @@ impl Kernels for Avx2 {
     fn f32_grain(&self) -> usize {
         8 // _mm256_fmadd_ps over 8 converted codes per block
     }
+
+    fn dot_i8_f32_multi(&self, row: &[i8], xs: &[&[f32]], out: &mut [f32]) {
+        debug_assert_eq!(xs.len(), out.len());
+        // SAFETY: as above.
+        unsafe { dot_i8_f32_multi(row, xs, out) }
+    }
+
+    fn dot_u8_f32_multi(&self, row: &[u8], xs: &[&[f32]], out: &mut [f32]) {
+        debug_assert_eq!(xs.len(), out.len());
+        // SAFETY: as above.
+        unsafe { dot_u8_f32_multi(row, xs, out) }
+    }
+
+    fn packed_field_dot_q8_multi(
+        &self,
+        words: &[u64],
+        bits: u8,
+        n: usize,
+        xqs: &[&[i8]],
+        out: &mut [i64],
+    ) {
+        debug_assert_eq!(xqs.len(), out.len());
+        match bits {
+            // SAFETY: as above.
+            2 => unsafe { field_dot2_multi(words, n, xqs, out) },
+            4 => unsafe { field_dot4_multi(words, n, xqs, out) },
+            8 => unsafe { field_dot8_multi(words, n, xqs, out) },
+            _ => {
+                for (o, xq) in out.iter_mut().zip(xqs) {
+                    *o = super::scalar::packed_field_dot_q8(words, bits, n, xq);
+                }
+            }
+        }
+    }
 }
 
 /// Horizontal sum of 8 f32 lanes.
@@ -99,14 +133,14 @@ unsafe fn hsum_ps(v: __m256) -> f32 {
 /// caller's per-block bound only needs each lane < 2^31/4).
 #[inline]
 #[target_feature(enable = "avx2")]
-unsafe fn hsum_epi32_i64(v: __m256i) -> i64 {
+pub(super) unsafe fn hsum_epi32_i64(v: __m256i) -> i64 {
     let s = _mm_add_epi32(_mm256_castsi256_si128(v), _mm256_extracti128_si256::<1>(v));
     let s = _mm_add_epi32(s, _mm_srli_si128::<8>(s));
     _mm_cvtsi128_si32(s) as i64 + _mm_extract_epi32::<1>(s) as i64
 }
 
 #[target_feature(enable = "avx2", enable = "fma")]
-unsafe fn dot_i8_f32(row: &[i8], x: &[f32]) -> f32 {
+pub(super) unsafe fn dot_i8_f32(row: &[i8], x: &[f32]) -> f32 {
     let n = row.len();
     let rp = row.as_ptr();
     let xp = x.as_ptr();
@@ -141,7 +175,7 @@ unsafe fn dot_i8_f32(row: &[i8], x: &[f32]) -> f32 {
 }
 
 #[target_feature(enable = "avx2", enable = "fma")]
-unsafe fn dot_u8_f32(row: &[u8], x: &[f32]) -> f32 {
+pub(super) unsafe fn dot_u8_f32(row: &[u8], x: &[f32]) -> f32 {
     let n = row.len();
     let rp = row.as_ptr();
     let xp = x.as_ptr();
@@ -176,7 +210,7 @@ unsafe fn dot_u8_f32(row: &[u8], x: &[f32]) -> f32 {
 }
 
 #[target_feature(enable = "avx2", enable = "fma")]
-unsafe fn scale_add_i8(y: &mut [f32], row: &[i8], c: f32) {
+pub(super) unsafe fn scale_add_i8(y: &mut [f32], row: &[i8], c: f32) {
     let n = y.len();
     let rp = row.as_ptr();
     let yp = y.as_mut_ptr();
@@ -200,7 +234,7 @@ unsafe fn scale_add_i8(y: &mut [f32], row: &[i8], c: f32) {
 /// 4-way byte-interleave tree.
 #[inline]
 #[target_feature(enable = "avx2")]
-unsafe fn unpack2_fields(b: __m128i) -> (__m128i, __m128i, __m128i, __m128i) {
+pub(super) unsafe fn unpack2_fields(b: __m128i) -> (__m128i, __m128i, __m128i, __m128i) {
     let mask = _mm_set1_epi8(0x03);
     let q0 = _mm_and_si128(b, mask);
     let q1 = _mm_and_si128(_mm_srli_epi16::<2>(b), mask);
@@ -221,7 +255,7 @@ unsafe fn unpack2_fields(b: __m128i) -> (__m128i, __m128i, __m128i, __m128i) {
 /// 16 packed bytes → 32 raw 4-bit fields (low nibble first).
 #[inline]
 #[target_feature(enable = "avx2")]
-unsafe fn unpack4_fields(b: __m128i) -> (__m128i, __m128i) {
+pub(super) unsafe fn unpack4_fields(b: __m128i) -> (__m128i, __m128i) {
     let mask = _mm_set1_epi8(0x0F);
     let lo = _mm_and_si128(b, mask);
     let hi = _mm_and_si128(_mm_srli_epi16::<4>(b), mask);
@@ -229,7 +263,7 @@ unsafe fn unpack4_fields(b: __m128i) -> (__m128i, __m128i) {
 }
 
 #[target_feature(enable = "avx2", enable = "fma")]
-unsafe fn decode_row(words: &[u64], bits: u8, n: usize, out: &mut [i8]) {
+pub(super) unsafe fn decode_row(words: &[u64], bits: u8, n: usize, out: &mut [i8]) {
     match bits {
         2 => decode2(words, n, out),
         4 => decode4(words, n, out),
@@ -300,7 +334,7 @@ unsafe fn decode8(words: &[u64], n: usize, out: &mut [i8]) {
 /// Number of inner iterations between i32→i64 accumulator flushes. Worst
 /// case growth per iteration is 2·2·128·127 < 2^16 per lane (8-bit fields),
 /// so 2^12 iterations stay below 2^28 per lane — far from i32 overflow.
-const FLUSH: usize = 1 << 12;
+pub(super) const FLUSH: usize = 1 << 12;
 
 #[target_feature(enable = "avx2")]
 unsafe fn field_dot8(words: &[u64], n: usize, xq: &[i8]) -> i64 {
@@ -390,4 +424,280 @@ unsafe fn field_dot4(words: &[u64], n: usize, xq: &[i8]) -> i64 {
             super::scalar::packed_field_dot_q8(&words[groups * 2..], 4, n - done, &xq[done..]);
     }
     total
+}
+
+// ---------------------------------------------------------------------------
+// Register-blocked multi-RHS kernels.
+//
+// The f32 dots pair right-hand sides two at a time: 2 RHS × 4 FMA chains =
+// 8 YMM accumulators plus the 4 widened value vectors, which fits the
+// 16-register file with room for the streamed x loads. Each RHS keeps
+// EXACTLY the single-RHS op sequence (same four chains, same horizontal
+// sum, same scalar tail), so out[r] is bit-identical to the single-RHS
+// kernel — only the row load/widen is shared. The pure integer field dots
+// block up to four RHS per pass; their accumulation is exact in integers,
+// so bit-identity is automatic and only the unpack amortization matters.
+// ---------------------------------------------------------------------------
+
+#[target_feature(enable = "avx2", enable = "fma")]
+unsafe fn dot_i8_f32_x2(row: &[i8], x0: &[f32], x1: &[f32]) -> (f32, f32) {
+    let n = row.len();
+    let rp = row.as_ptr();
+    let xp0 = x0.as_ptr();
+    let xp1 = x1.as_ptr();
+    let mut a0 = _mm256_setzero_ps();
+    let mut a1 = _mm256_setzero_ps();
+    let mut a2 = _mm256_setzero_ps();
+    let mut a3 = _mm256_setzero_ps();
+    let mut b0 = _mm256_setzero_ps();
+    let mut b1 = _mm256_setzero_ps();
+    let mut b2 = _mm256_setzero_ps();
+    let mut b3 = _mm256_setzero_ps();
+    let mut i = 0usize;
+    while i + 32 <= n {
+        let b = _mm256_loadu_si256(rp.add(i) as *const __m256i);
+        let lo = _mm256_castsi256_si128(b);
+        let hi = _mm256_extracti128_si256::<1>(b);
+        let v0 = _mm256_cvtepi32_ps(_mm256_cvtepi8_epi32(lo));
+        let v1 = _mm256_cvtepi32_ps(_mm256_cvtepi8_epi32(_mm_srli_si128::<8>(lo)));
+        let v2 = _mm256_cvtepi32_ps(_mm256_cvtepi8_epi32(hi));
+        let v3 = _mm256_cvtepi32_ps(_mm256_cvtepi8_epi32(_mm_srli_si128::<8>(hi)));
+        a0 = _mm256_fmadd_ps(v0, _mm256_loadu_ps(xp0.add(i)), a0);
+        a1 = _mm256_fmadd_ps(v1, _mm256_loadu_ps(xp0.add(i + 8)), a1);
+        a2 = _mm256_fmadd_ps(v2, _mm256_loadu_ps(xp0.add(i + 16)), a2);
+        a3 = _mm256_fmadd_ps(v3, _mm256_loadu_ps(xp0.add(i + 24)), a3);
+        b0 = _mm256_fmadd_ps(v0, _mm256_loadu_ps(xp1.add(i)), b0);
+        b1 = _mm256_fmadd_ps(v1, _mm256_loadu_ps(xp1.add(i + 8)), b1);
+        b2 = _mm256_fmadd_ps(v2, _mm256_loadu_ps(xp1.add(i + 16)), b2);
+        b3 = _mm256_fmadd_ps(v3, _mm256_loadu_ps(xp1.add(i + 24)), b3);
+        i += 32;
+    }
+    let mut s0 = hsum_ps(_mm256_add_ps(_mm256_add_ps(a0, a1), _mm256_add_ps(a2, a3)));
+    let mut s1 = hsum_ps(_mm256_add_ps(_mm256_add_ps(b0, b1), _mm256_add_ps(b2, b3)));
+    while i < n {
+        let c = *rp.add(i) as f32;
+        s0 += c * *xp0.add(i);
+        s1 += c * *xp1.add(i);
+        i += 1;
+    }
+    (s0, s1)
+}
+
+#[target_feature(enable = "avx2", enable = "fma")]
+unsafe fn dot_u8_f32_x2(row: &[u8], x0: &[f32], x1: &[f32]) -> (f32, f32) {
+    let n = row.len();
+    let rp = row.as_ptr();
+    let xp0 = x0.as_ptr();
+    let xp1 = x1.as_ptr();
+    let mut a0 = _mm256_setzero_ps();
+    let mut a1 = _mm256_setzero_ps();
+    let mut a2 = _mm256_setzero_ps();
+    let mut a3 = _mm256_setzero_ps();
+    let mut b0 = _mm256_setzero_ps();
+    let mut b1 = _mm256_setzero_ps();
+    let mut b2 = _mm256_setzero_ps();
+    let mut b3 = _mm256_setzero_ps();
+    let mut i = 0usize;
+    while i + 32 <= n {
+        let b = _mm256_loadu_si256(rp.add(i) as *const __m256i);
+        let lo = _mm256_castsi256_si128(b);
+        let hi = _mm256_extracti128_si256::<1>(b);
+        let v0 = _mm256_cvtepi32_ps(_mm256_cvtepu8_epi32(lo));
+        let v1 = _mm256_cvtepi32_ps(_mm256_cvtepu8_epi32(_mm_srli_si128::<8>(lo)));
+        let v2 = _mm256_cvtepi32_ps(_mm256_cvtepu8_epi32(hi));
+        let v3 = _mm256_cvtepi32_ps(_mm256_cvtepu8_epi32(_mm_srli_si128::<8>(hi)));
+        a0 = _mm256_fmadd_ps(v0, _mm256_loadu_ps(xp0.add(i)), a0);
+        a1 = _mm256_fmadd_ps(v1, _mm256_loadu_ps(xp0.add(i + 8)), a1);
+        a2 = _mm256_fmadd_ps(v2, _mm256_loadu_ps(xp0.add(i + 16)), a2);
+        a3 = _mm256_fmadd_ps(v3, _mm256_loadu_ps(xp0.add(i + 24)), a3);
+        b0 = _mm256_fmadd_ps(v0, _mm256_loadu_ps(xp1.add(i)), b0);
+        b1 = _mm256_fmadd_ps(v1, _mm256_loadu_ps(xp1.add(i + 8)), b1);
+        b2 = _mm256_fmadd_ps(v2, _mm256_loadu_ps(xp1.add(i + 16)), b2);
+        b3 = _mm256_fmadd_ps(v3, _mm256_loadu_ps(xp1.add(i + 24)), b3);
+        i += 32;
+    }
+    let mut s0 = hsum_ps(_mm256_add_ps(_mm256_add_ps(a0, a1), _mm256_add_ps(a2, a3)));
+    let mut s1 = hsum_ps(_mm256_add_ps(_mm256_add_ps(b0, b1), _mm256_add_ps(b2, b3)));
+    while i < n {
+        let c = *rp.add(i) as f32;
+        s0 += c * *xp0.add(i);
+        s1 += c * *xp1.add(i);
+        i += 1;
+    }
+    (s0, s1)
+}
+
+#[target_feature(enable = "avx2", enable = "fma")]
+pub(super) unsafe fn dot_i8_f32_multi(row: &[i8], xs: &[&[f32]], out: &mut [f32]) {
+    let mut r = 0usize;
+    while r + 2 <= xs.len() {
+        let (s0, s1) = dot_i8_f32_x2(row, xs[r], xs[r + 1]);
+        out[r] = s0;
+        out[r + 1] = s1;
+        r += 2;
+    }
+    if r < xs.len() {
+        out[r] = dot_i8_f32(row, xs[r]);
+    }
+}
+
+#[target_feature(enable = "avx2", enable = "fma")]
+pub(super) unsafe fn dot_u8_f32_multi(row: &[u8], xs: &[&[f32]], out: &mut [f32]) {
+    let mut r = 0usize;
+    while r + 2 <= xs.len() {
+        let (s0, s1) = dot_u8_f32_x2(row, xs[r], xs[r + 1]);
+        out[r] = s0;
+        out[r + 1] = s1;
+        r += 2;
+    }
+    if r < xs.len() {
+        out[r] = dot_u8_f32(row, xs[r]);
+    }
+}
+
+/// Max RHS per integer-dot register block: 4 i32x8 accumulators + the
+/// shared unpacked field vectors stay inside the 16-register file.
+pub(super) const IDOT_BLOCK: usize = 4;
+
+#[target_feature(enable = "avx2")]
+unsafe fn field_dot8_block(words: &[u64], n: usize, xqs: &[&[i8]], out: &mut [i64]) {
+    let k = xqs.len();
+    debug_assert!(k <= IDOT_BLOCK);
+    let src = words.as_ptr() as *const u8;
+    let ones = _mm256_set1_epi16(1);
+    let mut totals = [0i64; IDOT_BLOCK];
+    let mut i = 0usize;
+    while i + 32 <= n {
+        let mut acc = [_mm256_setzero_si256(); IDOT_BLOCK];
+        let mut iters = 0usize;
+        while i + 32 <= n && iters < FLUSH {
+            let f = _mm256_loadu_si256(src.add(i) as *const __m256i);
+            for r in 0..k {
+                let xv = _mm256_loadu_si256(xqs[r].as_ptr().add(i) as *const __m256i);
+                let prod = _mm256_maddubs_epi16(f, xv);
+                acc[r] = _mm256_add_epi32(acc[r], _mm256_madd_epi16(prod, ones));
+            }
+            i += 32;
+            iters += 1;
+        }
+        for r in 0..k {
+            totals[r] += hsum_epi32_i64(acc[r]);
+        }
+    }
+    while i < n {
+        let f = *src.add(i) as i64;
+        for r in 0..k {
+            totals[r] += f * *xqs[r].as_ptr().add(i) as i64;
+        }
+        i += 1;
+    }
+    out[..k].copy_from_slice(&totals[..k]);
+}
+
+#[target_feature(enable = "avx2")]
+unsafe fn field_dot2_block(words: &[u64], n: usize, xqs: &[&[i8]], out: &mut [i64]) {
+    let k = xqs.len();
+    debug_assert!(k <= IDOT_BLOCK);
+    let src = words.as_ptr() as *const u8;
+    let ones = _mm256_set1_epi16(1);
+    let mut totals = [0i64; IDOT_BLOCK];
+    let groups = n / 64;
+    let mut g = 0usize;
+    while g < groups {
+        let mut acc = [_mm256_setzero_si256(); IDOT_BLOCK];
+        let stop = groups.min(g + FLUSH);
+        while g < stop {
+            let b = _mm_loadu_si128(src.add(g * 16) as *const __m128i);
+            let (o0, o1, o2, o3) = unpack2_fields(b);
+            let f01 = _mm256_set_m128i(o1, o0);
+            let f23 = _mm256_set_m128i(o3, o2);
+            for r in 0..k {
+                let xp = xqs[r].as_ptr();
+                let x01 = _mm256_loadu_si256(xp.add(g * 64) as *const __m256i);
+                let x23 = _mm256_loadu_si256(xp.add(g * 64 + 32) as *const __m256i);
+                acc[r] =
+                    _mm256_add_epi32(acc[r], _mm256_madd_epi16(_mm256_maddubs_epi16(f01, x01), ones));
+                acc[r] =
+                    _mm256_add_epi32(acc[r], _mm256_madd_epi16(_mm256_maddubs_epi16(f23, x23), ones));
+            }
+            g += 1;
+        }
+        for r in 0..k {
+            totals[r] += hsum_epi32_i64(acc[r]);
+        }
+    }
+    let done = groups * 64;
+    if done < n {
+        for r in 0..k {
+            totals[r] += super::scalar::packed_field_dot_q8(
+                &words[groups * 2..],
+                2,
+                n - done,
+                &xqs[r][done..],
+            );
+        }
+    }
+    out[..k].copy_from_slice(&totals[..k]);
+}
+
+#[target_feature(enable = "avx2")]
+unsafe fn field_dot4_block(words: &[u64], n: usize, xqs: &[&[i8]], out: &mut [i64]) {
+    let k = xqs.len();
+    debug_assert!(k <= IDOT_BLOCK);
+    let src = words.as_ptr() as *const u8;
+    let ones = _mm256_set1_epi16(1);
+    let mut totals = [0i64; IDOT_BLOCK];
+    let groups = n / 32;
+    let mut g = 0usize;
+    while g < groups {
+        let mut acc = [_mm256_setzero_si256(); IDOT_BLOCK];
+        let stop = groups.min(g + FLUSH);
+        while g < stop {
+            let b = _mm_loadu_si128(src.add(g * 16) as *const __m128i);
+            let (o0, o1) = unpack4_fields(b);
+            let f = _mm256_set_m128i(o1, o0);
+            for r in 0..k {
+                let xv = _mm256_loadu_si256(xqs[r].as_ptr().add(g * 32) as *const __m256i);
+                acc[r] =
+                    _mm256_add_epi32(acc[r], _mm256_madd_epi16(_mm256_maddubs_epi16(f, xv), ones));
+            }
+            g += 1;
+        }
+        for r in 0..k {
+            totals[r] += hsum_epi32_i64(acc[r]);
+        }
+    }
+    let done = groups * 32;
+    if done < n {
+        for r in 0..k {
+            totals[r] += super::scalar::packed_field_dot_q8(
+                &words[groups * 2..],
+                4,
+                n - done,
+                &xqs[r][done..],
+            );
+        }
+    }
+    out[..k].copy_from_slice(&totals[..k]);
+}
+
+#[target_feature(enable = "avx2")]
+unsafe fn field_dot8_multi(words: &[u64], n: usize, xqs: &[&[i8]], out: &mut [i64]) {
+    for (xg, og) in xqs.chunks(IDOT_BLOCK).zip(out.chunks_mut(IDOT_BLOCK)) {
+        field_dot8_block(words, n, xg, og);
+    }
+}
+
+#[target_feature(enable = "avx2")]
+unsafe fn field_dot2_multi(words: &[u64], n: usize, xqs: &[&[i8]], out: &mut [i64]) {
+    for (xg, og) in xqs.chunks(IDOT_BLOCK).zip(out.chunks_mut(IDOT_BLOCK)) {
+        field_dot2_block(words, n, xg, og);
+    }
+}
+
+#[target_feature(enable = "avx2")]
+unsafe fn field_dot4_multi(words: &[u64], n: usize, xqs: &[&[i8]], out: &mut [i64]) {
+    for (xg, og) in xqs.chunks(IDOT_BLOCK).zip(out.chunks_mut(IDOT_BLOCK)) {
+        field_dot4_block(words, n, xg, og);
+    }
 }

@@ -6,23 +6,47 @@
 //! (residual). This module gives those kernels explicit SIMD backends in the
 //! shape of ggblas's `Cpu` abstraction, adapted to packed b-bit operands:
 //!
+//! The dispatch ladder, weakest to strongest (auto-detection picks the
+//! strongest available; each rung is only reachable after its runtime
+//! feature check):
+//!
 //! * [`scalar::Scalar`] — the portable lane-hint loops that previously lived
 //!   in `lowprec`. Guaranteed correct everywhere; the reference every other
 //!   backend is tested against.
+//! * [`neon::Neon`] (aarch64 only) — `vmovl` widening + `vcvtq_f32_s32` +
+//!   four `vfmaq_f32` chains for the mixed int·f32 kernels, `vand`/`vshr` +
+//!   `vzip` in-register 2/4-bit field unpack, and `vmlal_s16` widening
+//!   integer dots for `packed_field_dot_q8` (baseline NEON — no second
+//!   feature tier; `vdotq_s32` needs the optional `dotprod` extension).
 //! * [`avx2::Avx2`] (x86/x86_64 only) — `_mm256_maddubs_epi16`-class integer
 //!   dots, in-register 2/4-bit field unpack, and `_mm256_fmadd_ps` mixed
 //!   int→f32 dots, selected at runtime via `is_x86_feature_detected!`.
-//! * [`neon::Neon`] (aarch64 only) — real NEON for the mixed int·f32
-//!   kernels (`vmovl` widening + `vcvtq_f32_s32` + four `vfmaq_f32`
-//!   chains: `dot_i8_f32`, `dot_u8_f32`, `scale_add_i8`); the pure
-//!   integer packed kernels still delegate to the scalar loops (see
-//!   ROADMAP "Open items").
+//! * [`vnni::Vnni`] (x86_64 only) — AVX-512 VNNI tier above AVX2:
+//!   `vpdpbusd` fuses the `maddubs`+`madd` pair of every pure integer
+//!   field dot into one u8×i8→i32 multiply-accumulate (the f32 kernels
+//!   and the decode are shared with AVX2, so iterates are bit-identical
+//!   between the two tiers). Requires `avx512vnni` + `avx512vl`.
+//!
+//! ## Multi-RHS (register-blocked) surface
+//!
+//! The serving stack batches many right-hand sides against one packed Φ̂;
+//! the single-row kernels would re-load (and, at 2/4 bits, re-unpack)
+//! every packed word once per RHS. The `*_multi` trait methods amortize
+//! that: one pass over the row serves a whole block of right-hand sides
+//! ([`Kernels::dot_i8_f32_multi`], [`Kernels::dot_u8_f32_multi`],
+//! [`Kernels::packed_field_dot_q8_multi`]). CONTRACT: element `r` of the
+//! multi output is **bit-identical** to the same backend's single-RHS
+//! kernel on `xs[r]` — backends hoist loads/unpacks across the block but
+//! keep each RHS's accumulation structure unchanged, so batched solves
+//! stay batch-composition-independent. The trait defaults (= the scalar
+//! reference) just loop the single-RHS kernels; AVX2/VNNI override them
+//! with register-blocked versions.
 //!
 //! Dispatch is **per call-site, not per element**: `active()` resolves once
 //! (cached) to a `&'static dyn Kernels`, callers hoist it out of their row
 //! loops, and the inner loops are statically compiled for each backend.
-//! `LPCS_SIMD=scalar|avx2|neon` forces a backend (benchmarks use this to
-//! measure the dispatched-vs-scalar win); an unavailable forced backend
+//! `LPCS_SIMD=scalar|avx2|neon|vnni` forces a backend (benchmarks use this
+//! to measure the dispatched-vs-scalar win); an unavailable forced backend
 //! falls back to scalar rather than failing.
 //!
 //! Deliberately **not** dispatched: the dense f32 baseline (`linalg::dot`).
@@ -39,6 +63,9 @@ pub mod avx2;
 #[cfg(target_arch = "aarch64")]
 pub mod neon;
 
+#[cfg(target_arch = "x86_64")]
+pub mod vnni;
+
 use std::sync::OnceLock;
 
 /// Identifies one kernel backend.
@@ -47,6 +74,7 @@ pub enum Backend {
     Scalar,
     Avx2,
     Neon,
+    Vnni,
 }
 
 /// The kernel set every backend provides — ggblas's `Cpu` trait shape,
@@ -80,9 +108,77 @@ pub trait Kernels: Sync {
     /// path, the tail through scalar ops — callers that split work across
     /// threads must align chunk boundaries to this grain so the block grid
     /// (and thus every element's rounding) is independent of the chunking.
+    /// Callers should derive their alignment via [`chunk_align`] rather than
+    /// combining this with packed-lane widths by hand.
     fn f32_grain(&self) -> usize {
         1
     }
+
+    /// Multi-RHS variant of [`Self::dot_i8_f32`]: one decoded row against a
+    /// block of right-hand sides. CONTRACT: `out[r]` is bit-identical to
+    /// `self.dot_i8_f32(row, xs[r])` — overriding backends amortize the row
+    /// load/widening across the block but keep each RHS's accumulation
+    /// structure (chain count, op order, tail) unchanged. The default is the
+    /// scalar reference: loop the single-RHS kernel.
+    fn dot_i8_f32_multi(&self, row: &[i8], xs: &[&[f32]], out: &mut [f32]) {
+        debug_assert_eq!(xs.len(), out.len());
+        for (o, x) in out.iter_mut().zip(xs) {
+            *o = self.dot_i8_f32(row, x);
+        }
+    }
+
+    /// Multi-RHS variant of [`Self::dot_u8_f32`]; same bit-identity contract
+    /// as [`Self::dot_i8_f32_multi`].
+    fn dot_u8_f32_multi(&self, row: &[u8], xs: &[&[f32]], out: &mut [f32]) {
+        debug_assert_eq!(xs.len(), out.len());
+        for (o, x) in out.iter_mut().zip(xs) {
+            *o = self.dot_u8_f32(row, x);
+        }
+    }
+
+    /// Multi-RHS variant of [`Self::packed_field_dot_q8`]: unpack each packed
+    /// word once per batch instead of once per RHS. All-integer accumulation,
+    /// so `out[r] == self.packed_field_dot_q8(words, bits, n, xqs[r])` holds
+    /// exactly for every backend by construction.
+    fn packed_field_dot_q8_multi(
+        &self,
+        words: &[u64],
+        bits: u8,
+        n: usize,
+        xqs: &[&[i8]],
+        out: &mut [i64],
+    ) {
+        debug_assert_eq!(xqs.len(), out.len());
+        for (o, xq) in out.iter_mut().zip(xqs) {
+            *o = self.packed_field_dot_q8(words, bits, n, xq);
+        }
+    }
+}
+
+fn gcd(a: usize, b: usize) -> usize {
+    let (mut a, mut b) = (a, b);
+    while b != 0 {
+        let t = a % b;
+        a = b;
+        b = t;
+    }
+    a
+}
+
+fn lcm(a: usize, b: usize) -> usize {
+    a / gcd(a, b) * b
+}
+
+/// The one place grain/tail alignment is computed. Parallel chunk
+/// boundaries over packed or decoded rows must sit on BOTH the packed-word
+/// grid (`lanes` fields per `u64`; pass 1 for unpacked operands) and the
+/// backend's f32 accumulation grid ([`Kernels::f32_grain`]), so the
+/// vector/tail split — and thus every element's rounding — is identical
+/// for every thread count and for the blocked multi-RHS kernels. Callers
+/// (`lowprec` splits, blocked kernels) all route through this helper so
+/// they cannot disagree on remainder ordering.
+pub fn chunk_align(k: &dyn Kernels, lanes: usize) -> usize {
+    lcm(lanes.max(1), k.f32_grain().max(1))
 }
 
 #[cfg(any(target_arch = "x86", target_arch = "x86_64"))]
@@ -109,21 +205,39 @@ fn neon_impl() -> Option<&'static dyn Kernels> {
     None
 }
 
+#[cfg(target_arch = "x86_64")]
+fn vnni_impl() -> Option<&'static dyn Kernels> {
+    if vnni::supported() {
+        Some(&vnni::Vnni)
+    } else {
+        None
+    }
+}
+
+#[cfg(not(target_arch = "x86_64"))]
+fn vnni_impl() -> Option<&'static dyn Kernels> {
+    None
+}
+
 fn detect() -> &'static dyn Kernels {
     match std::env::var("LPCS_SIMD").as_deref() {
         Ok("scalar") => return &scalar::Scalar,
         Ok("avx2") => return avx2_impl().unwrap_or(&scalar::Scalar),
         Ok("neon") => return neon_impl().unwrap_or(&scalar::Scalar),
+        Ok("vnni") => return vnni_impl().unwrap_or(&scalar::Scalar),
         Ok(other) => {
             // A forced-but-unrecognized backend must not silently
             // auto-detect (it would corrupt scalar-vs-dispatched bench
             // comparisons); degrade to the guaranteed-correct reference.
-            eprintln!("LPCS_SIMD={other:?} not recognized (scalar|avx2|neon): using scalar");
+            eprintln!("LPCS_SIMD={other:?} not recognized (scalar|avx2|neon|vnni): using scalar");
             return &scalar::Scalar;
         }
         Err(_) => {}
     }
-    avx2_impl().or_else(neon_impl).unwrap_or(&scalar::Scalar)
+    vnni_impl()
+        .or_else(avx2_impl)
+        .or_else(neon_impl)
+        .unwrap_or(&scalar::Scalar)
 }
 
 /// The auto-selected backend for this machine (cached after first call).
@@ -139,6 +253,7 @@ pub fn by_backend(b: Backend) -> &'static dyn Kernels {
         Backend::Scalar => &scalar::Scalar,
         Backend::Avx2 => avx2_impl().unwrap_or(&scalar::Scalar),
         Backend::Neon => neon_impl().unwrap_or(&scalar::Scalar),
+        Backend::Vnni => vnni_impl().unwrap_or(&scalar::Scalar),
     }
 }
 
@@ -167,12 +282,12 @@ mod tests {
         let a = active();
         let b = active();
         assert_eq!(a.backend(), b.backend());
-        assert!(["scalar", "avx2", "neon"].contains(&a.name()));
+        assert!(["scalar", "avx2", "neon", "vnni"].contains(&a.name()));
     }
 
     #[test]
     fn by_backend_never_fails() {
-        for b in [Backend::Scalar, Backend::Avx2, Backend::Neon] {
+        for b in [Backend::Scalar, Backend::Avx2, Backend::Neon, Backend::Vnni] {
             let k = by_backend(b);
             assert!(!k.name().is_empty());
         }
@@ -187,7 +302,7 @@ mod tests {
                 (0..n).map(|_| (rng.below(255) as i32 - 127) as i8).collect();
             let x = rng.gaussian_vec(n);
             let want = scalar::Scalar.dot_i8_f32(&row, &x);
-            for b in [Backend::Avx2, Backend::Neon] {
+            for b in [Backend::Avx2, Backend::Neon, Backend::Vnni] {
                 let got = by_backend(b).dot_i8_f32(&row, &x);
                 let tol = 1e-3 * (1.0 + want.abs());
                 assert!((got - want).abs() <= tol, "{b:?} n={n}: {got} vs {want}");
@@ -202,7 +317,7 @@ mod tests {
             let row: Vec<u8> = (0..n).map(|_| rng.below(129) as u8).collect();
             let x = rng.gaussian_vec(n);
             let want = scalar::Scalar.dot_u8_f32(&row, &x);
-            for b in [Backend::Avx2, Backend::Neon] {
+            for b in [Backend::Avx2, Backend::Neon, Backend::Vnni] {
                 let got = by_backend(b).dot_u8_f32(&row, &x);
                 let tol = 1e-3 * (1.0 + want.abs());
                 assert!((got - want).abs() <= tol, "{b:?} n={n}: {got} vs {want}");
@@ -220,7 +335,7 @@ mod tests {
                 for row in 0..2 {
                     scalar::Scalar.decode_row(p.row_words(row), bits, n, &mut want);
                     assert_eq!(&want[..], &qm.codes[row * n..(row + 1) * n]);
-                    for b in [Backend::Avx2, Backend::Neon] {
+                    for b in [Backend::Avx2, Backend::Neon, Backend::Vnni] {
                         by_backend(b).decode_row(p.row_words(row), bits, n, &mut got);
                         assert_eq!(got, want, "{b:?} bits={bits} n={n} row={row}");
                     }
@@ -246,7 +361,7 @@ mod tests {
                     .map(|(&c, &v)| (c as i64 + half) * v as i64)
                     .sum();
                 assert_eq!(want, naive, "scalar field dot bits={bits} n={n}");
-                for b in [Backend::Avx2, Backend::Neon] {
+                for b in [Backend::Avx2, Backend::Neon, Backend::Vnni] {
                     let got = by_backend(b).packed_field_dot_q8(p.row_words(0), bits, n, &xq);
                     assert_eq!(got, want, "{b:?} bits={bits} n={n}");
                 }
@@ -263,7 +378,7 @@ mod tests {
             let base = rng.gaussian_vec(n);
             let mut want = base.clone();
             scalar::Scalar.scale_add_i8(&mut want, &row, 0.37);
-            for b in [Backend::Avx2, Backend::Neon] {
+            for b in [Backend::Avx2, Backend::Neon, Backend::Vnni] {
                 let mut got = base.clone();
                 by_backend(b).scale_add_i8(&mut got, &row, 0.37);
                 for (g, w) in got.iter().zip(&want) {
@@ -271,5 +386,79 @@ mod tests {
                 }
             }
         }
+    }
+
+    #[test]
+    fn multi_rhs_dots_bit_identical_to_single() {
+        // The core multi-RHS contract: out[r] of every `_multi` kernel must
+        // equal the same backend's single-RHS result bit-for-bit, for every
+        // block width (including widths past the register-blocked factor,
+        // which exercise the odd-remainder path) and ragged n.
+        let mut rng = XorShift128Plus::new(31);
+        for b in [Backend::Scalar, Backend::Avx2, Backend::Neon, Backend::Vnni] {
+            let k = by_backend(b);
+            for n in [0usize, 1, 17, 32, 33, 64, 100, 257] {
+                let irow: Vec<i8> =
+                    (0..n).map(|_| (rng.below(255) as i32 - 127) as i8).collect();
+                let urow: Vec<u8> = (0..n).map(|_| rng.below(129) as u8).collect();
+                let xs_own: Vec<Vec<f32>> = (0..9).map(|_| rng.gaussian_vec(n)).collect();
+                for r in [1usize, 2, 3, 4, 5, 8, 9] {
+                    let xs: Vec<&[f32]> = xs_own[..r].iter().map(|v| v.as_slice()).collect();
+                    let mut got = vec![0.0f32; r];
+                    k.dot_i8_f32_multi(&irow, &xs, &mut got);
+                    for (j, x) in xs.iter().enumerate() {
+                        assert_eq!(got[j], k.dot_i8_f32(&irow, x), "{b:?} i8 n={n} r={r} j={j}");
+                    }
+                    k.dot_u8_f32_multi(&urow, &xs, &mut got);
+                    for (j, x) in xs.iter().enumerate() {
+                        assert_eq!(got[j], k.dot_u8_f32(&urow, x), "{b:?} u8 n={n} r={r} j={j}");
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn multi_rhs_packed_field_dot_exact() {
+        let mut rng = XorShift128Plus::new(32);
+        for bits in [2u8, 4, 8] {
+            for n in [1usize, 63, 64, 65, 127, 256, 301] {
+                let (_, p) = packed(1, n, bits, 1500 + n as u64 + bits as u64);
+                let xq_own: Vec<Vec<i8>> = (0..9)
+                    .map(|_| (0..n).map(|_| (rng.below(255) as i32 - 127) as i8).collect())
+                    .collect();
+                for b in [Backend::Scalar, Backend::Avx2, Backend::Neon, Backend::Vnni] {
+                    let k = by_backend(b);
+                    for r in [1usize, 3, 5, 9] {
+                        let xqs: Vec<&[i8]> =
+                            xq_own[..r].iter().map(|v| v.as_slice()).collect();
+                        let mut got = vec![0i64; r];
+                        k.packed_field_dot_q8_multi(p.row_words(0), bits, n, &xqs, &mut got);
+                        for (j, xq) in xqs.iter().enumerate() {
+                            let want = scalar::Scalar.packed_field_dot_q8(
+                                p.row_words(0),
+                                bits,
+                                n,
+                                xq,
+                            );
+                            assert_eq!(got[j], want, "{b:?} bits={bits} n={n} r={r} j={j}");
+                        }
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn chunk_align_covers_both_grids() {
+        for b in [Backend::Scalar, Backend::Avx2, Backend::Neon, Backend::Vnni] {
+            let k = by_backend(b);
+            for lanes in [1usize, 8, 16, 32] {
+                let a = chunk_align(k, lanes);
+                assert_eq!(a % lanes, 0, "{b:?} lanes={lanes}");
+                assert_eq!(a % k.f32_grain(), 0, "{b:?} lanes={lanes}");
+            }
+        }
+        assert_eq!(chunk_align(&scalar::Scalar, 32), 32);
     }
 }

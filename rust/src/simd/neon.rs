@@ -1,16 +1,30 @@
 //! NEON backend (aarch64).
 //!
-//! The mixed int·f32 kernels are real NEON now: `vmovl`-chain widening
-//! (i8 → i16 → i32), `vcvtq_f32_s32`/`vcvtq_f32_u32` conversion and four
-//! independent `vfmaq_f32` accumulator chains — the aarch64 twin of the
-//! AVX2 `VPMOVSXBD` + `VFMADD` path, covering [`Kernels::dot_i8_f32`],
+//! The mixed int·f32 kernels: `vmovl`-chain widening (i8 → i16 → i32),
+//! `vcvtq_f32_s32`/`vcvtq_f32_u32` conversion and four independent
+//! `vfmaq_f32` accumulator chains — the aarch64 twin of the AVX2
+//! `VPMOVSXBD` + `VFMADD` path, covering [`Kernels::dot_i8_f32`],
 //! [`Kernels::dot_u8_f32`] and [`Kernels::scale_add_i8`]. NEON is a
 //! baseline feature of every aarch64 target rustc supports, so there is
 //! no runtime feature check to fail.
 //!
-//! Still delegating to the scalar reference (see ROADMAP "Open items"):
-//! * `vdotq_s32`/`smull`-based integer dots for `packed_field_dot_q8`;
-//! * `vtbl`-free 2/4-bit field unpack via `vand`/`vshr` + `vzip`.
+//! The packed integer kernels are native too:
+//! * 2/4-bit decode — per-byte `vand`/`vshr` into per-position field
+//!   vectors, then a `vzip1q`/`vzip2q` interleave tree (the NEON twin of
+//!   the AVX2 `PUNPCKLBW` tree) restores element order; `vsubq_s8`
+//!   removes the bias;
+//! * `packed_field_dot_q8` — unpacked u8 fields widened with `vmovl_u8`
+//!   (fields ≤ 128 fit i16), int8 vector widened with `vmovl_s8`, four
+//!   `vmlal_s16` i32x4 accumulator chains flushed to i64 via
+//!   `vaddlvq_s32` every block — exact for any row length. This is
+//!   baseline NEON by design: `vdotq_s32` would need the optional
+//!   `dotprod` extension and a second runtime dispatch tier for an
+//!   instruction-count win the widening chains mostly capture.
+//!
+//! The multi-RHS methods use the trait defaults (loop the single-RHS
+//! kernel); on aarch64 the decode-once amortization happens one level up
+//! in `lowprec::packed_matvec_multi`, which decodes each row once and
+//! loops the dot.
 //!
 //! The parity matrix (`tests/simd_parity.rs` + the unit tests in
 //! [`super`]) exercises every kernel here against the scalar reference on
@@ -44,11 +58,29 @@ impl Kernels for Neon {
     }
 
     fn decode_row(&self, words: &[u64], bits: u8, n: usize, out: &mut [i8]) {
-        super::scalar::decode_row(words, bits, n, out)
+        debug_assert!(out.len() >= n);
+        // SAFETY: NEON is unconditionally available on aarch64.
+        unsafe {
+            match bits {
+                2 => decode2(words, n, out),
+                4 => decode4(words, n, out),
+                8 => decode8(words, n, out),
+                _ => super::scalar::decode_row(words, bits, n, out),
+            }
+        }
     }
 
     fn packed_field_dot_q8(&self, words: &[u64], bits: u8, n: usize, xq: &[i8]) -> i64 {
-        super::scalar::packed_field_dot_q8(words, bits, n, xq)
+        debug_assert!(xq.len() >= n);
+        // SAFETY: as above.
+        unsafe {
+            match bits {
+                2 => field_dot2(words, n, xq),
+                4 => field_dot4(words, n, xq),
+                8 => field_dot8(words, n, xq),
+                _ => super::scalar::packed_field_dot_q8(words, bits, n, xq),
+            }
+        }
     }
 
     fn scale_add_i8(&self, y: &mut [f32], row: &[i8], c: f32) {
@@ -153,4 +185,216 @@ unsafe fn scale_add_i8(y: &mut [f32], row: &[i8], c: f32) {
         *yp.add(i) += c * *rp.add(i) as f32;
         i += 1;
     }
+}
+
+// ---------------------------------------------------------------------------
+// Packed 2/4/8-bit decode: per-byte shift/mask into per-position field
+// vectors, then a vzip interleave tree (the NEON unpacklo/unpackhi twin of
+// the AVX2 tree in `avx2::unpack2_fields`) restores element order. Output
+// codes are exact, so bit-identity with the scalar reference is automatic;
+// ragged tails delegate to the scalar decoder on the remaining words.
+// ---------------------------------------------------------------------------
+
+/// 16 packed bytes → 64 raw 2-bit fields in element order (four u8x16).
+#[inline]
+#[target_feature(enable = "neon")]
+unsafe fn unpack2_fields(b: uint8x16_t) -> (uint8x16_t, uint8x16_t, uint8x16_t, uint8x16_t) {
+    let mask = vdupq_n_u8(0x03);
+    let q0 = vandq_u8(b, mask);
+    let q1 = vandq_u8(vshrq_n_u8::<2>(b), mask);
+    let q2 = vandq_u8(vshrq_n_u8::<4>(b), mask);
+    let q3 = vandq_u8(vshrq_n_u8::<6>(b), mask);
+    // out[4k + j] = qj[k]: interleave (q0,q2) and (q1,q3), then each other.
+    let t0l = vzip1q_u8(q0, q2);
+    let t0h = vzip2q_u8(q0, q2);
+    let t1l = vzip1q_u8(q1, q3);
+    let t1h = vzip2q_u8(q1, q3);
+    (
+        vzip1q_u8(t0l, t1l),
+        vzip2q_u8(t0l, t1l),
+        vzip1q_u8(t0h, t1h),
+        vzip2q_u8(t0h, t1h),
+    )
+}
+
+/// 16 packed bytes → 32 raw 4-bit fields in element order (low nibble first).
+#[inline]
+#[target_feature(enable = "neon")]
+unsafe fn unpack4_fields(b: uint8x16_t) -> (uint8x16_t, uint8x16_t) {
+    let lo = vandq_u8(b, vdupq_n_u8(0x0F));
+    let hi = vshrq_n_u8::<4>(b); // per-byte shift: zero-filled, no mask needed
+    (vzip1q_u8(lo, hi), vzip2q_u8(lo, hi))
+}
+
+#[target_feature(enable = "neon")]
+unsafe fn decode2(words: &[u64], n: usize, out: &mut [i8]) {
+    let src = words.as_ptr() as *const u8;
+    let dst = out.as_mut_ptr();
+    let half = vdupq_n_s8(1);
+    // 16 packed bytes (2 words) → 64 codes per iteration.
+    let groups = n / 64;
+    for g in 0..groups {
+        let b = vld1q_u8(src.add(g * 16));
+        let (o0, o1, o2, o3) = unpack2_fields(b);
+        let o = dst.add(g * 64);
+        vst1q_s8(o, vsubq_s8(vreinterpretq_s8_u8(o0), half));
+        vst1q_s8(o.add(16), vsubq_s8(vreinterpretq_s8_u8(o1), half));
+        vst1q_s8(o.add(32), vsubq_s8(vreinterpretq_s8_u8(o2), half));
+        vst1q_s8(o.add(48), vsubq_s8(vreinterpretq_s8_u8(o3), half));
+    }
+    let done = groups * 64;
+    if done < n {
+        super::scalar::decode_row(&words[groups * 2..], 2, n - done, &mut out[done..]);
+    }
+}
+
+#[target_feature(enable = "neon")]
+unsafe fn decode4(words: &[u64], n: usize, out: &mut [i8]) {
+    let src = words.as_ptr() as *const u8;
+    let dst = out.as_mut_ptr();
+    let half = vdupq_n_s8(4);
+    // 16 packed bytes (2 words) → 32 codes per iteration.
+    let groups = n / 32;
+    for g in 0..groups {
+        let b = vld1q_u8(src.add(g * 16));
+        let (o0, o1) = unpack4_fields(b);
+        let o = dst.add(g * 32);
+        vst1q_s8(o, vsubq_s8(vreinterpretq_s8_u8(o0), half));
+        vst1q_s8(o.add(16), vsubq_s8(vreinterpretq_s8_u8(o1), half));
+    }
+    let done = groups * 32;
+    if done < n {
+        super::scalar::decode_row(&words[groups * 2..], 4, n - done, &mut out[done..]);
+    }
+}
+
+#[target_feature(enable = "neon")]
+unsafe fn decode8(words: &[u64], n: usize, out: &mut [i8]) {
+    let src = words.as_ptr() as *const u8;
+    let dst = out.as_mut_ptr();
+    let half = vdupq_n_s8(64);
+    // 16 packed bytes (2 words) → 16 codes per iteration; vsubq_s8 wraps,
+    // matching the scalar `wrapping_sub` (field 128 → code 64).
+    let groups = n / 16;
+    for g in 0..groups {
+        let b = vld1q_u8(src.add(g * 16));
+        vst1q_s8(dst.add(g * 16), vsubq_s8(vreinterpretq_s8_u8(b), half));
+    }
+    let done = groups * 16;
+    if done < n {
+        super::scalar::decode_row(&words[groups * 2..], 8, n - done, &mut out[done..]);
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Pure integer field dots: widen the raw u8 fields and the i8 vector to
+// i16 halves, accumulate through four vmlal_s16 i32x4 chains, flush to an
+// i64 scalar every FLUSH 16-element blocks. Exact in integers.
+// ---------------------------------------------------------------------------
+
+/// i32→i64 flush cadence. Each 16-element block adds ≤ 128·127·4 < 2^17
+/// per i32 lane across the four chains (≤ 2·16256 < 2^16 per lane per
+/// chain), so 2^12 blocks stay far below i32 overflow.
+const FLUSH: usize = 1 << 12;
+
+/// Accumulate 16 raw u8 fields against 16 i8 values into four i32x4 chains.
+#[inline]
+#[target_feature(enable = "neon")]
+unsafe fn mlal_fields(acc: &mut [int32x4_t; 4], fields: uint8x16_t, xv: int8x16_t) {
+    // fields ≤ 255 fit i16 after zero-extension; reinterpret is exact.
+    let flo = vreinterpretq_s16_u16(vmovl_u8(vget_low_u8(fields)));
+    let fhi = vreinterpretq_s16_u16(vmovl_u8(vget_high_u8(fields)));
+    let xlo = vmovl_s8(vget_low_s8(xv));
+    let xhi = vmovl_s8(vget_high_s8(xv));
+    acc[0] = vmlal_s16(acc[0], vget_low_s16(flo), vget_low_s16(xlo));
+    acc[1] = vmlal_s16(acc[1], vget_high_s16(flo), vget_high_s16(xlo));
+    acc[2] = vmlal_s16(acc[2], vget_low_s16(fhi), vget_low_s16(xhi));
+    acc[3] = vmlal_s16(acc[3], vget_high_s16(fhi), vget_high_s16(xhi));
+}
+
+#[inline]
+#[target_feature(enable = "neon")]
+unsafe fn flush_acc(acc: &[int32x4_t; 4]) -> i64 {
+    vaddlvq_s32(acc[0]) + vaddlvq_s32(acc[1]) + vaddlvq_s32(acc[2]) + vaddlvq_s32(acc[3])
+}
+
+#[target_feature(enable = "neon")]
+unsafe fn field_dot8(words: &[u64], n: usize, xq: &[i8]) -> i64 {
+    let src = words.as_ptr() as *const u8;
+    let xp = xq.as_ptr();
+    let mut total: i64 = 0;
+    let mut i = 0usize;
+    while i + 16 <= n {
+        let mut acc = [vdupq_n_s32(0); 4];
+        let mut iters = 0usize;
+        while i + 16 <= n && iters < FLUSH {
+            mlal_fields(&mut acc, vld1q_u8(src.add(i)), vld1q_s8(xp.add(i)));
+            i += 16;
+            iters += 1;
+        }
+        total += flush_acc(&acc);
+    }
+    while i < n {
+        total += *src.add(i) as i64 * *xp.add(i) as i64;
+        i += 1;
+    }
+    total
+}
+
+#[target_feature(enable = "neon")]
+unsafe fn field_dot2(words: &[u64], n: usize, xq: &[i8]) -> i64 {
+    let src = words.as_ptr() as *const u8;
+    let xp = xq.as_ptr();
+    let mut total: i64 = 0;
+    // 16 packed bytes → 64 fields per group.
+    let groups = n / 64;
+    let mut g = 0usize;
+    while g < groups {
+        let mut acc = [vdupq_n_s32(0); 4];
+        let stop = groups.min(g + FLUSH / 4);
+        while g < stop {
+            let (o0, o1, o2, o3) = unpack2_fields(vld1q_u8(src.add(g * 16)));
+            let x = xp.add(g * 64);
+            mlal_fields(&mut acc, o0, vld1q_s8(x));
+            mlal_fields(&mut acc, o1, vld1q_s8(x.add(16)));
+            mlal_fields(&mut acc, o2, vld1q_s8(x.add(32)));
+            mlal_fields(&mut acc, o3, vld1q_s8(x.add(48)));
+            g += 1;
+        }
+        total += flush_acc(&acc);
+    }
+    let done = groups * 64;
+    if done < n {
+        total +=
+            super::scalar::packed_field_dot_q8(&words[groups * 2..], 2, n - done, &xq[done..]);
+    }
+    total
+}
+
+#[target_feature(enable = "neon")]
+unsafe fn field_dot4(words: &[u64], n: usize, xq: &[i8]) -> i64 {
+    let src = words.as_ptr() as *const u8;
+    let xp = xq.as_ptr();
+    let mut total: i64 = 0;
+    // 16 packed bytes → 32 fields per group.
+    let groups = n / 32;
+    let mut g = 0usize;
+    while g < groups {
+        let mut acc = [vdupq_n_s32(0); 4];
+        let stop = groups.min(g + FLUSH / 2);
+        while g < stop {
+            let (o0, o1) = unpack4_fields(vld1q_u8(src.add(g * 16)));
+            let x = xp.add(g * 32);
+            mlal_fields(&mut acc, o0, vld1q_s8(x));
+            mlal_fields(&mut acc, o1, vld1q_s8(x.add(16)));
+            g += 1;
+        }
+        total += flush_acc(&acc);
+    }
+    let done = groups * 32;
+    if done < n {
+        total +=
+            super::scalar::packed_field_dot_q8(&words[groups * 2..], 4, n - done, &xq[done..]);
+    }
+    total
 }

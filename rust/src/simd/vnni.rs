@@ -1,0 +1,296 @@
+//! AVX-512 VNNI backend tier (x86_64 only) — one rung above AVX2 in the
+//! dispatch ladder.
+//!
+//! The only thing this tier changes is the pure integer field dot:
+//! `vpdpbusd` (u8 × i8 → i32 multiply-accumulate over groups of four)
+//! replaces the AVX2 `_mm256_maddubs_epi16` + `_mm256_madd_epi16` pair,
+//! halving the instruction count of the packed hot loop and removing the
+//! i16 saturation concern entirely (the accumulate widens straight to
+//! i32, which is exact for b ≤ 8 fields against int8). We use the 256-bit
+//! EVEX form via inline `asm!` rather than the `_mm256_dpbusd_epi32`
+//! intrinsic so the backend builds on any stable toolchain; the register
+//! operands keep the loop structure identical to the AVX2 field dots.
+//! Requires `avx512vnni` + `avx512vl` (the ymm EVEX encoding) at runtime.
+//!
+//! Everything else — the f32 dots, the 2/4/8-bit decode, scale-and-add —
+//! delegates to the AVX2 implementations, so iterates produced under the
+//! `vnni` backend are **bit-identical** to the `avx2` backend: the tier
+//! only buys integer-dot throughput, it cannot change results.
+
+use super::{avx2, Backend, Kernels};
+
+use core::arch::x86_64::*;
+
+/// Runtime check: the AVX2 base this tier delegates to, plus the VNNI
+/// extension and the AVX512VL ymm encodings it needs.
+pub(crate) fn supported() -> bool {
+    avx2::supported()
+        && is_x86_feature_detected!("avx512vnni")
+        && is_x86_feature_detected!("avx512vl")
+}
+
+/// The VNNI backend (unit struct; stateless).
+pub struct Vnni;
+
+impl Kernels for Vnni {
+    fn backend(&self) -> Backend {
+        Backend::Vnni
+    }
+
+    fn name(&self) -> &'static str {
+        "vnni"
+    }
+
+    fn dot_i8_f32(&self, row: &[i8], x: &[f32]) -> f32 {
+        debug_assert_eq!(row.len(), x.len());
+        // SAFETY: Vnni is only constructed behind `supported()`, which
+        // implies the AVX2+FMA features of the delegated kernel.
+        unsafe { avx2::dot_i8_f32(row, x) }
+    }
+
+    fn dot_u8_f32(&self, row: &[u8], x: &[f32]) -> f32 {
+        debug_assert_eq!(row.len(), x.len());
+        // SAFETY: as above.
+        unsafe { avx2::dot_u8_f32(row, x) }
+    }
+
+    fn decode_row(&self, words: &[u64], bits: u8, n: usize, out: &mut [i8]) {
+        debug_assert!(out.len() >= n);
+        // SAFETY: as above.
+        unsafe { avx2::decode_row(words, bits, n, out) }
+    }
+
+    fn packed_field_dot_q8(&self, words: &[u64], bits: u8, n: usize, xq: &[i8]) -> i64 {
+        debug_assert!(xq.len() >= n);
+        // SAFETY: as above, plus avx512vnni+avx512vl for `vpdpbusd`.
+        unsafe {
+            match bits {
+                2 => field_dot2(words, n, xq),
+                4 => field_dot4(words, n, xq),
+                8 => field_dot8(words, n, xq),
+                _ => super::scalar::packed_field_dot_q8(words, bits, n, xq),
+            }
+        }
+    }
+
+    fn scale_add_i8(&self, y: &mut [f32], row: &[i8], c: f32) {
+        debug_assert_eq!(y.len(), row.len());
+        // SAFETY: as above.
+        unsafe { avx2::scale_add_i8(y, row, c) }
+    }
+
+    fn f32_grain(&self) -> usize {
+        8 // same FMA grid as the delegated AVX2 f32 kernels
+    }
+
+    fn dot_i8_f32_multi(&self, row: &[i8], xs: &[&[f32]], out: &mut [f32]) {
+        debug_assert_eq!(xs.len(), out.len());
+        // SAFETY: as above.
+        unsafe { avx2::dot_i8_f32_multi(row, xs, out) }
+    }
+
+    fn dot_u8_f32_multi(&self, row: &[u8], xs: &[&[f32]], out: &mut [f32]) {
+        debug_assert_eq!(xs.len(), out.len());
+        // SAFETY: as above.
+        unsafe { avx2::dot_u8_f32_multi(row, xs, out) }
+    }
+
+    fn packed_field_dot_q8_multi(
+        &self,
+        words: &[u64],
+        bits: u8,
+        n: usize,
+        xqs: &[&[i8]],
+        out: &mut [i64],
+    ) {
+        debug_assert_eq!(xqs.len(), out.len());
+        match bits {
+            // SAFETY: as above.
+            2 => unsafe { field_dot2_multi(words, n, xqs, out) },
+            4 => unsafe { field_dot4_multi(words, n, xqs, out) },
+            8 => unsafe { field_dot8_multi(words, n, xqs, out) },
+            _ => {
+                for (o, xq) in out.iter_mut().zip(xqs) {
+                    *o = super::scalar::packed_field_dot_q8(words, bits, n, xq);
+                }
+            }
+        }
+    }
+}
+
+/// `acc += Σ_groups-of-4 (u8 field · i8 x)` per i32 lane — the EVEX ymm
+/// form of `vpdpbusd`. Emitted as inline asm so the crate builds on
+/// toolchains without the AVX-512 intrinsics stabilized; callers must have
+/// verified `avx512vnni` + `avx512vl` at runtime.
+#[inline]
+#[target_feature(enable = "avx2")]
+unsafe fn dpbusd(acc: __m256i, f: __m256i, x: __m256i) -> __m256i {
+    let mut out = acc;
+    core::arch::asm!(
+        "vpdpbusd {acc}, {f}, {x}",
+        acc = inout(ymm_reg) out,
+        f = in(ymm_reg) f,
+        x = in(ymm_reg) x,
+        options(pure, nomem, nostack)
+    );
+    out
+}
+
+#[target_feature(enable = "avx2")]
+unsafe fn field_dot8_block(words: &[u64], n: usize, xqs: &[&[i8]], out: &mut [i64]) {
+    let k = xqs.len();
+    debug_assert!(k <= avx2::IDOT_BLOCK);
+    let src = words.as_ptr() as *const u8;
+    let mut totals = [0i64; avx2::IDOT_BLOCK];
+    let mut i = 0usize;
+    while i + 32 <= n {
+        let mut acc = [_mm256_setzero_si256(); avx2::IDOT_BLOCK];
+        let mut iters = 0usize;
+        // Per iteration each i32 lane grows by ≤ 4·128·127 < 2^17, so
+        // FLUSH=2^12 iterations stay below 2^29 — no i32 overflow.
+        while i + 32 <= n && iters < avx2::FLUSH {
+            let f = _mm256_loadu_si256(src.add(i) as *const __m256i);
+            for r in 0..k {
+                let xv = _mm256_loadu_si256(xqs[r].as_ptr().add(i) as *const __m256i);
+                acc[r] = dpbusd(acc[r], f, xv);
+            }
+            i += 32;
+            iters += 1;
+        }
+        for r in 0..k {
+            totals[r] += avx2::hsum_epi32_i64(acc[r]);
+        }
+    }
+    while i < n {
+        let f = *src.add(i) as i64;
+        for r in 0..k {
+            totals[r] += f * *xqs[r].as_ptr().add(i) as i64;
+        }
+        i += 1;
+    }
+    out[..k].copy_from_slice(&totals[..k]);
+}
+
+#[target_feature(enable = "avx2")]
+unsafe fn field_dot2_block(words: &[u64], n: usize, xqs: &[&[i8]], out: &mut [i64]) {
+    let k = xqs.len();
+    debug_assert!(k <= avx2::IDOT_BLOCK);
+    let src = words.as_ptr() as *const u8;
+    let mut totals = [0i64; avx2::IDOT_BLOCK];
+    let groups = n / 64;
+    let mut g = 0usize;
+    while g < groups {
+        let mut acc = [_mm256_setzero_si256(); avx2::IDOT_BLOCK];
+        let stop = groups.min(g + avx2::FLUSH);
+        while g < stop {
+            let b = _mm_loadu_si128(src.add(g * 16) as *const __m128i);
+            let (o0, o1, o2, o3) = avx2::unpack2_fields(b);
+            let f01 = _mm256_set_m128i(o1, o0);
+            let f23 = _mm256_set_m128i(o3, o2);
+            for r in 0..k {
+                let xp = xqs[r].as_ptr();
+                let x01 = _mm256_loadu_si256(xp.add(g * 64) as *const __m256i);
+                let x23 = _mm256_loadu_si256(xp.add(g * 64 + 32) as *const __m256i);
+                acc[r] = dpbusd(acc[r], f01, x01);
+                acc[r] = dpbusd(acc[r], f23, x23);
+            }
+            g += 1;
+        }
+        for r in 0..k {
+            totals[r] += avx2::hsum_epi32_i64(acc[r]);
+        }
+    }
+    let done = groups * 64;
+    if done < n {
+        for r in 0..k {
+            totals[r] += super::scalar::packed_field_dot_q8(
+                &words[groups * 2..],
+                2,
+                n - done,
+                &xqs[r][done..],
+            );
+        }
+    }
+    out[..k].copy_from_slice(&totals[..k]);
+}
+
+#[target_feature(enable = "avx2")]
+unsafe fn field_dot4_block(words: &[u64], n: usize, xqs: &[&[i8]], out: &mut [i64]) {
+    let k = xqs.len();
+    debug_assert!(k <= avx2::IDOT_BLOCK);
+    let src = words.as_ptr() as *const u8;
+    let mut totals = [0i64; avx2::IDOT_BLOCK];
+    let groups = n / 32;
+    let mut g = 0usize;
+    while g < groups {
+        let mut acc = [_mm256_setzero_si256(); avx2::IDOT_BLOCK];
+        let stop = groups.min(g + avx2::FLUSH);
+        while g < stop {
+            let b = _mm_loadu_si128(src.add(g * 16) as *const __m128i);
+            let (o0, o1) = avx2::unpack4_fields(b);
+            let f = _mm256_set_m128i(o1, o0);
+            for r in 0..k {
+                let xv = _mm256_loadu_si256(xqs[r].as_ptr().add(g * 32) as *const __m256i);
+                acc[r] = dpbusd(acc[r], f, xv);
+            }
+            g += 1;
+        }
+        for r in 0..k {
+            totals[r] += avx2::hsum_epi32_i64(acc[r]);
+        }
+    }
+    let done = groups * 32;
+    if done < n {
+        for r in 0..k {
+            totals[r] += super::scalar::packed_field_dot_q8(
+                &words[groups * 2..],
+                4,
+                n - done,
+                &xqs[r][done..],
+            );
+        }
+    }
+    out[..k].copy_from_slice(&totals[..k]);
+}
+
+#[target_feature(enable = "avx2")]
+unsafe fn field_dot8(words: &[u64], n: usize, xq: &[i8]) -> i64 {
+    let mut out = [0i64; 1];
+    field_dot8_block(words, n, &[xq], &mut out);
+    out[0]
+}
+
+#[target_feature(enable = "avx2")]
+unsafe fn field_dot2(words: &[u64], n: usize, xq: &[i8]) -> i64 {
+    let mut out = [0i64; 1];
+    field_dot2_block(words, n, &[xq], &mut out);
+    out[0]
+}
+
+#[target_feature(enable = "avx2")]
+unsafe fn field_dot4(words: &[u64], n: usize, xq: &[i8]) -> i64 {
+    let mut out = [0i64; 1];
+    field_dot4_block(words, n, &[xq], &mut out);
+    out[0]
+}
+
+#[target_feature(enable = "avx2")]
+unsafe fn field_dot8_multi(words: &[u64], n: usize, xqs: &[&[i8]], out: &mut [i64]) {
+    for (xg, og) in xqs.chunks(avx2::IDOT_BLOCK).zip(out.chunks_mut(avx2::IDOT_BLOCK)) {
+        field_dot8_block(words, n, xg, og);
+    }
+}
+
+#[target_feature(enable = "avx2")]
+unsafe fn field_dot2_multi(words: &[u64], n: usize, xqs: &[&[i8]], out: &mut [i64]) {
+    for (xg, og) in xqs.chunks(avx2::IDOT_BLOCK).zip(out.chunks_mut(avx2::IDOT_BLOCK)) {
+        field_dot2_block(words, n, xg, og);
+    }
+}
+
+#[target_feature(enable = "avx2")]
+unsafe fn field_dot4_multi(words: &[u64], n: usize, xqs: &[&[i8]], out: &mut [i64]) {
+    for (xg, og) in xqs.chunks(avx2::IDOT_BLOCK).zip(out.chunks_mut(avx2::IDOT_BLOCK)) {
+        field_dot4_block(words, n, xg, og);
+    }
+}

@@ -7,7 +7,7 @@
 //! [`EngineRegistry::register`] without touching the serving layer.
 
 use crate::algorithms::niht::solve_observed;
-use crate::algorithms::qniht::{PreparedPhi, QuantKernel, RequantMode};
+use crate::algorithms::qniht::{solve_batch_lockstep, BatchJob, PreparedPhi, RequantMode};
 use crate::algorithms::{IterObserver, IterStat, ObserverSignal, SolveOptions, SolveResult};
 use crate::config::EngineKind;
 use crate::runtime::{Runtime, XlaDenseKernel, XlaQuantKernel};
@@ -313,11 +313,16 @@ impl Engine for NativeQuantEngine {
     }
 
     /// The amortized path: one quantize+pack of Φ shared by every job in
-    /// the batch (jobs differ only in y and seed). Singleton batches take
-    /// it too, so a job's result NEVER depends on which jobs happened to
-    /// coalesce with it. Falls back to the per-job path when the batch is
-    /// not actually compatible or uses Fresh mode (which re-quantizes per
-    /// iteration anyway, so each job's Φ̂ stream is its own seed's).
+    /// the batch (jobs differ only in y and seed), then a LOCKSTEP solve
+    /// ([`solve_batch_lockstep`]) whose per-iteration gradients stream the
+    /// packed Φ̂ᵀ once for the whole batch through the multi-RHS kernels —
+    /// each row is decoded once per batch, not once per job. Singleton
+    /// batches take it too, and the lockstep driver is bit-identical to
+    /// the sequential path per job, so a job's result NEVER depends on
+    /// which jobs happened to coalesce with it. Falls back to the per-job
+    /// path when the batch is not actually compatible or uses Fresh mode
+    /// (which re-quantizes per iteration anyway, so each job's Φ̂ stream is
+    /// its own seed's).
     fn solve_batch(
         &mut self,
         reqs: &[SolveRequest],
@@ -349,16 +354,19 @@ impl Engine for NativeQuantEngine {
         let prepared = Arc::new(PreparedPhi::quantize(phi, bits_phi, batch_phi_seed(bits_phi)));
         self.metrics.phi_quantizations += 1;
         self.metrics.amortized_batches += 1;
-        reqs.iter()
-            .enumerate()
-            .map(|(i, r)| {
-                self.metrics.solves += 1;
-                let mut k =
-                    QuantKernel::with_prepared(prepared.clone(), r.problem.y(), bits_y, r.seed);
-                let mut obs = IndexedObserver { index: i, inner: &mut *observer };
-                Ok(solve_observed(&mut k, r.problem.s(), opts, &mut obs))
-            })
-            .collect()
+        self.metrics.solves += reqs.len() as u64;
+        let jobs: Vec<BatchJob> = reqs
+            .iter()
+            .map(|r| BatchJob { y: r.problem.y(), bits_y, seed: r.seed })
+            .collect();
+        let results = solve_batch_lockstep(
+            &prepared,
+            &jobs,
+            reqs[0].problem.s(),
+            opts,
+            &mut |j, st| observer.on_iteration(j, st),
+        );
+        results.into_iter().map(Ok).collect()
     }
 
     fn metrics(&self) -> EngineMetrics {

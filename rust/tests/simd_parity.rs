@@ -124,7 +124,7 @@ fn mixed_dot_kernels_backend_matrix() {
         let want_u = scalar.dot_u8_f32(&urow, &x);
         let mut want_sa = base.clone();
         scalar.scale_add_i8(&mut want_sa, &irow, -0.61);
-        for b in [Backend::Avx2, Backend::Neon, Backend::Scalar] {
+        for b in [Backend::Avx2, Backend::Neon, Backend::Vnni, Backend::Scalar] {
             let k = simd::by_backend(b);
             let gi = k.dot_i8_f32(&irow, &x);
             assert!(
@@ -146,6 +146,106 @@ fn mixed_dot_kernels_backend_matrix() {
             }
         }
     }
+}
+
+#[test]
+fn ragged_tail_property_matrix_every_backend_bit_identical() {
+    // EVERY n mod word-capacity: n in 1..=70 sweeps all residues of the
+    // 2-bit (32/word), 4-bit (16/word) and 8-bit (8/word) packings, plus
+    // SIMD-group residues (16/32/64-lane groups); larger ragged sizes
+    // catch the FLUSH / multi-group paths. decode_row and the integer
+    // field dot must be bit-identical to scalar on every named backend,
+    // single-RHS and multi-RHS alike (unavailable backends resolve to
+    // scalar, so the matrix runs everywhere).
+    let scalar = simd::by_backend(Backend::Scalar);
+    let backends = [Backend::Avx2, Backend::Neon, Backend::Vnni];
+    let mut rng = XorShift128Plus::new(99);
+    let sizes: Vec<usize> = (1..=70).chain([127, 128, 129, 255, 257, 384]).collect();
+    for bits in [2u8, 4, 8] {
+        let q = Quantizer::new(bits);
+        for &n in &sizes {
+            // Random codes straight through the packer (one row).
+            let codes: Vec<i8> = (0..n)
+                .map(|_| (rng.below(2 * q.half() as u64 + 1) as i32 - q.half()) as i8)
+                .collect();
+            let qm = QuantizedMatrix { codes: codes.clone(), m: 1, n, bits, scale: 1.0 };
+            let p = PackedMatrix::pack(&qm);
+            let words = p.row_words(0);
+            let xqs: Vec<Vec<i8>> = (0..3)
+                .map(|_| (0..n).map(|_| (rng.below(255) as i32 - 127) as i8).collect())
+                .collect();
+            let xq_refs: Vec<&[i8]> = xqs.iter().map(|v| v.as_slice()).collect();
+
+            let mut want_dec = vec![0i8; n];
+            scalar.decode_row(words, bits, n, &mut want_dec);
+            assert_eq!(want_dec, codes, "scalar decode vs source codes bits={bits} n={n}");
+            let want_dots: Vec<i64> = xq_refs
+                .iter()
+                .map(|xq| scalar.packed_field_dot_q8(words, bits, n, xq))
+                .collect();
+            let mut want_multi = vec![0i64; 3];
+            scalar.packed_field_dot_q8_multi(words, bits, n, &xq_refs, &mut want_multi);
+            assert_eq!(want_multi, want_dots, "scalar multi vs single bits={bits} n={n}");
+
+            for b in backends {
+                let k = simd::by_backend(b);
+                let mut got_dec = vec![0i8; n];
+                k.decode_row(words, bits, n, &mut got_dec);
+                assert_eq!(got_dec, want_dec, "{b:?} decode bits={bits} n={n}");
+                for (xq, want) in xq_refs.iter().zip(&want_dots) {
+                    let got = k.packed_field_dot_q8(words, bits, n, xq);
+                    assert_eq!(got, *want, "{b:?} field_dot bits={bits} n={n}");
+                }
+                let mut got_multi = vec![0i64; 3];
+                k.packed_field_dot_q8_multi(words, bits, n, &xq_refs, &mut got_multi);
+                assert_eq!(got_multi, want_dots, "{b:?} multi field_dot bits={bits} n={n}");
+            }
+        }
+    }
+}
+
+#[test]
+fn multi_rhs_matvec_matches_single_across_backends() {
+    // packed_matvec_multi must be bit-identical per RHS to repeated
+    // single-RHS calls on the same backend — the contract that lets the
+    // batched solver substitute the amortized sweep for per-job matvecs.
+    let scalar = simd::by_backend(Backend::Scalar);
+    let dispatched = simd::active();
+    let mut rng = XorShift128Plus::new(31);
+    for bits in [2u8, 4, 8] {
+        for n in [17usize, 64, 65, 127, 300] {
+            let (_, p, _) = setup(19, n, bits, 6000 + n as u64 + bits as u64);
+            let xs: Vec<Vec<f32>> = (0..5).map(|_| rng.gaussian_vec(n)).collect();
+            let refs: Vec<&[f32]> = xs.iter().map(|v| v.as_slice()).collect();
+            for k in [scalar, dispatched] {
+                let got = lowprec::packed_matvec_multi_with(k, &p, &refs);
+                for (j, x) in xs.iter().enumerate() {
+                    let want = lowprec::packed_matvec_with(k, &p, x);
+                    assert_eq!(
+                        got[j],
+                        want,
+                        "{} bits={bits} n={n} rhs={j}",
+                        k.name()
+                    );
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn multi_rhs_matvec_thread_count_invariant() {
+    // Same sweep, pool pinned to one thread: bit-identical outputs. Uses
+    // par::set_thread_override, not env mutation (getenv race is UB).
+    let (_, p, _) = setup(37, 300, 4, 7000);
+    let mut rng = XorShift128Plus::new(41);
+    let xs: Vec<Vec<f32>> = (0..3).map(|_| rng.gaussian_vec(300)).collect();
+    let refs: Vec<&[f32]> = xs.iter().map(|v| v.as_slice()).collect();
+    let par = lowprec::packed_matvec_multi(&p, &refs);
+    lpcs::par::set_thread_override(Some(1));
+    let one = lowprec::packed_matvec_multi(&p, &refs);
+    lpcs::par::set_thread_override(None);
+    assert_eq!(par, one, "multi-RHS matvec must not depend on thread count");
 }
 
 #[test]

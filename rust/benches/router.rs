@@ -1,0 +1,126 @@
+//! Bench: the router tier's cost and payoff — per-job relay overhead
+//! (routed submit→Done, two wire hops, vs a direct backend, one hop)
+//! and the batch-affinity win: a burst of jobs over several operators
+//! under consistent hashing (each Φ's jobs land together and batch
+//! wide) vs round-robin scatter (each backend sees a mix of keys and
+//! the scheduler must cut smaller per-key batches, repeating the
+//! quantize+pack). Writes `BENCH_router.json`.
+
+use lpcs::algorithms::SolveOptions;
+use lpcs::benchkit::{BenchStats, JsonReporter};
+use lpcs::config::{EngineKind, ServiceConfig};
+use lpcs::coordinator::{JobSpec, JobState, ProblemHandle};
+use lpcs::rng::XorShift128Plus;
+use lpcs::testkit::{RouterHarness, ServiceHarness};
+use lpcs::wire::{WatchEvent, WireClient};
+use lpcs::Mat;
+use std::sync::atomic::Ordering;
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+fn planted(m: usize, n: usize, s: usize, seed: u64) -> (Arc<Mat>, Vec<f32>) {
+    let mut rng = XorShift128Plus::new(seed);
+    let phi = Mat::from_fn(m, n, |_, _| rng.gaussian_f32() / (m as f32).sqrt());
+    let mut x = vec![0.0f32; n];
+    for i in rng.choose_k(n, s) {
+        x[i] = 1.5;
+    }
+    let y = phi.matvec(&x);
+    (Arc::new(phi), y)
+}
+
+fn spec(phi: &Arc<Mat>, y: &[f32], s: usize, seed: u64) -> JobSpec {
+    JobSpec::builder(ProblemHandle::new(phi.clone()), y.to_vec(), s)
+        .bits(4, 8)
+        .engine(EngineKind::NativeQuant)
+        .seed(seed)
+        .build()
+}
+
+fn solve_to_done(client: &mut WireClient, spec: &JobSpec) {
+    let id = client.submit(spec).expect("submit");
+    for event in client.watch(id).expect("watch") {
+        if let WatchEvent::Done(out) = event.expect("stream event") {
+            assert_eq!(out.state, JobState::Done, "{:?}", out.error);
+        }
+    }
+}
+
+/// A single wall-clock measurement as recordable stats.
+fn once(d: Duration) -> BenchStats {
+    BenchStats { iters: 1, median: d, mean: d, p10: d, p90: d }
+}
+
+fn main() {
+    let (m, n, s) = (128usize, 256usize, 8usize);
+    let (phi, y) = planted(m, n, s, 1);
+    let opts = SolveOptions { max_iters: 40, ..Default::default() };
+    let svc = ServiceConfig {
+        workers: 2,
+        queue_capacity: 256,
+        max_batch: 8,
+        max_wait_ms: 2,
+        ..Default::default()
+    };
+    let mut rep = JsonReporter::new("router");
+
+    // Per-job relay overhead: the same solve through one wire hop
+    // (client→backend) and through two (client→router→backend).
+    {
+        let h = ServiceHarness::start(svc, opts.clone());
+        let mut c = h.client();
+        rep.run("submit→Done direct (1 hop)", 2, 15, || solve_to_done(&mut c, &spec(&phi, &y, s, 1)));
+        h.shutdown();
+    }
+    {
+        let h = RouterHarness::start(2, svc, opts.clone());
+        let mut c = h.client();
+        rep.run("submit→Done routed (2 hops)", 2, 15, || solve_to_done(&mut c, &spec(&phi, &y, s, 1)));
+        h.shutdown();
+    }
+
+    // Affinity payoff: 32 jobs over 4 operators, submitted interleaved.
+    let problems: Vec<(Arc<Mat>, Vec<f32>)> = (0..4).map(|k| planted(m, n, s, 10 + k)).collect();
+    let jobs = 32usize;
+    for (label, affinity) in
+        [("burst 32 jobs × 4 Φ, affinity", true), ("burst 32 jobs × 4 Φ, round-robin", false)]
+    {
+        let h = RouterHarness::start_with(2, svc, opts.clone(), |c| c.affinity = affinity);
+        let mut client = h.client();
+        let t0 = Instant::now();
+        let ids: Vec<_> = (0..jobs)
+            .map(|k| {
+                let (phi, y) = &problems[k % problems.len()];
+                client.submit(&spec(phi, y, s, k as u64)).expect("routed submit")
+            })
+            .collect();
+        for id in ids {
+            for event in client.watch(id).expect("watch") {
+                if let WatchEvent::Done(out) = event.expect("stream event") {
+                    assert_eq!(out.state, JobState::Done, "{:?}", out.error);
+                }
+            }
+        }
+        let wall = t0.elapsed();
+        let (batched_jobs, batches) = (0..2)
+            .map(|i| {
+                let sm = h.backend_service(i).metrics();
+                (sm.batched_jobs.load(Ordering::Relaxed), sm.batches.load(Ordering::Relaxed))
+            })
+            .fold((0u64, 0u64), |acc, t| (acc.0 + t.0, acc.1 + t.1));
+        println!(
+            "{label}: {jobs} jobs in {wall:>9.3?} = {:>6.1} jobs/s, mean batch {:.2} \
+             ({batched_jobs} jobs / {batches} batches)   router: {}",
+            jobs as f64 / wall.as_secs_f64(),
+            batched_jobs as f64 / batches.max(1) as f64,
+            h.router().metrics().snapshot()
+        );
+        rep.record(label, &once(wall));
+        h.shutdown();
+    }
+
+    match rep.write_file(".") {
+        Ok(path) => println!("\nwrote {}", path.display()),
+        Err(e) => eprintln!("\nfailed to write BENCH_router.json: {e}"),
+    }
+}

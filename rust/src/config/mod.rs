@@ -158,6 +158,53 @@ impl Default for WireConfig {
     }
 }
 
+/// Router-tier settings (`lpcs route`): the sharded serving front end
+/// that consistent-hashes jobs across several `lpcs serve` backends.
+#[derive(Debug, Clone)]
+pub struct RouterConfig {
+    /// Backend `lpcs serve` addresses to shard over. Set with
+    /// `router.backends=a:1,b:2` or accumulated one at a time with the
+    /// `backend=` alias.
+    pub backends: Vec<String>,
+    /// Health-probe period in milliseconds.
+    pub probe_ms: u64,
+    /// Per-probe connect/reply deadline in milliseconds; also bounds
+    /// each forwarded submit, so a dead backend fails over quickly
+    /// instead of stalling the client behind a kernel TCP timeout.
+    pub probe_timeout_ms: u64,
+    /// Consecutive probe failures before a backend is marked down and
+    /// removed from the hash ring (re-admitted on the next success).
+    pub down_after: u32,
+    /// Admission bound on the router's in-flight job table: submits
+    /// beyond it are rejected with a typed `queue-full` error.
+    pub max_inflight: usize,
+    /// Reject a submit whose chosen backend last probed at least this
+    /// many queued jobs (0 = disabled — backends still enforce their own
+    /// capacity, which the router propagates typed).
+    pub queue_limit: usize,
+    /// Virtual nodes per backend on the consistent-hash ring.
+    pub vnodes: usize,
+    /// Route by operator/batch-key hash (default) so same-Φ jobs land on
+    /// one backend and keep batching; `false` = round-robin (the bench
+    /// baseline that destroys batch affinity).
+    pub affinity: bool,
+}
+
+impl Default for RouterConfig {
+    fn default() -> Self {
+        Self {
+            backends: Vec::new(),
+            probe_ms: 250,
+            probe_timeout_ms: 1000,
+            down_after: 2,
+            max_inflight: 1024,
+            queue_limit: 0,
+            vnodes: 64,
+            affinity: true,
+        }
+    }
+}
+
 /// Top-level configuration.
 #[derive(Debug, Clone)]
 pub struct LpcsConfig {
@@ -176,6 +223,7 @@ pub struct LpcsConfig {
     pub mri: MriConfig,
     pub service: ServiceConfig,
     pub wire: WireConfig,
+    pub router: RouterConfig,
 }
 
 impl Default for LpcsConfig {
@@ -193,6 +241,7 @@ impl Default for LpcsConfig {
             mri: MriConfig::default(),
             service: ServiceConfig::default(),
             wire: WireConfig::default(),
+            router: RouterConfig::default(),
         }
     }
 }
@@ -269,6 +318,19 @@ impl LpcsConfig {
             "service.starvation_ms" => self.service.starvation_ms = vf()? as u64,
             "wire.listen" | "listen" => self.wire.listen = value.to_string(),
             "wire.sub_depth" => self.wire.sub_depth = vf()? as usize,
+            "router.backends" => {
+                self.router.backends =
+                    value.split(',').map(str::trim).filter(|s| !s.is_empty()).map(String::from).collect()
+            }
+            // Accumulating alias: `backend=a:1 backend=b:2` appends.
+            "backend" | "router.backend" => self.router.backends.push(value.to_string()),
+            "router.probe_ms" => self.router.probe_ms = vf()? as u64,
+            "router.probe_timeout_ms" => self.router.probe_timeout_ms = vf()? as u64,
+            "router.down_after" => self.router.down_after = vf()? as u32,
+            "router.max_inflight" => self.router.max_inflight = vf()? as usize,
+            "router.queue_limit" => self.router.queue_limit = vf()? as usize,
+            "router.vnodes" => self.router.vnodes = vf()? as usize,
+            "router.affinity" => self.router.affinity = value == "true",
             other => bail!("unknown config key '{other}'"),
         }
         Ok(())
@@ -315,6 +377,10 @@ impl LpcsConfig {
         }
         if self.wire.sub_depth == 0 {
             bail!("wire.sub_depth must be >= 1 (progress queues need room for one stat)");
+        }
+        if self.router.vnodes == 0 || self.router.max_inflight == 0 || self.router.down_after == 0
+        {
+            bail!("router.vnodes, router.max_inflight and router.down_after must be >= 1");
         }
         // The MRI mask gate (fraction ∈ (0,1], centre band ≥ 1, packed
         // bit widths) — same check the coordinator re-runs at submit.
@@ -415,6 +481,34 @@ mod tests {
         assert_eq!(c.wire.listen, "0.0.0.0:9000");
         c.set("wire.sub_depth", "0").unwrap();
         assert!(c.validate().unwrap_err().to_string().contains("sub_depth"));
+    }
+
+    #[test]
+    fn router_keys_roundtrip_and_validate() {
+        let mut c = LpcsConfig::default();
+        assert!(c.router.backends.is_empty());
+        c.set("router.backends", "127.0.0.1:1, 127.0.0.1:2").unwrap();
+        assert_eq!(c.router.backends, vec!["127.0.0.1:1", "127.0.0.1:2"]);
+        // The accumulating alias appends (one flag per backend).
+        c.set("backend", "127.0.0.1:3").unwrap();
+        assert_eq!(c.router.backends.len(), 3);
+        c.set("router.probe_ms", "100").unwrap();
+        c.set("router.probe_timeout_ms", "500").unwrap();
+        c.set("router.down_after", "3").unwrap();
+        c.set("router.max_inflight", "16").unwrap();
+        c.set("router.queue_limit", "8").unwrap();
+        c.set("router.vnodes", "32").unwrap();
+        c.set("router.affinity", "false").unwrap();
+        assert_eq!(c.router.probe_ms, 100);
+        assert_eq!(c.router.probe_timeout_ms, 500);
+        assert_eq!(c.router.down_after, 3);
+        assert_eq!(c.router.max_inflight, 16);
+        assert_eq!(c.router.queue_limit, 8);
+        assert_eq!(c.router.vnodes, 32);
+        assert!(!c.router.affinity);
+        c.validate().unwrap();
+        c.set("router.vnodes", "0").unwrap();
+        assert!(c.validate().unwrap_err().to_string().contains("router.vnodes"));
     }
 
     #[test]

@@ -38,4 +38,5 @@ pub use job::{
     BatchKey, JobId, JobOutcome, JobSpec, JobSpecBuilder, JobState, OpKey, OperatorSpec,
     ProblemHandle, ProgressEvent, ProgressSub,
 };
-pub use service::{RecoveryService, ServiceMetrics};
+pub use queue::Priority;
+pub use service::{RecoveryService, ServiceMetrics, SubmitError};

@@ -198,6 +198,16 @@ impl<T> BoundedQueue<T> {
         self.not_empty.notify_all();
     }
 
+    /// 0-based position of the first item matching `pred` in pop order
+    /// (High class ahead of Normal), i.e. how many items a worker will
+    /// take before it — the queue-position a subscribed client sees.
+    /// `None` if no queued item matches (popped into a worker window or
+    /// never queued).
+    pub fn position_where(&self, pred: impl Fn(&T) -> bool) -> Option<usize> {
+        let g = self.inner.lock().unwrap();
+        g.high.iter().chain(g.normal.iter()).position(pred)
+    }
+
     /// Close: pushes fail, pops drain the remainder then return None.
     pub fn close(&self) {
         self.inner.lock().unwrap().closed = true;
@@ -305,6 +315,21 @@ mod tests {
         }
         let got = q.drain_matching(3, |_| true);
         assert_eq!(got.len(), 3);
+    }
+
+    #[test]
+    fn position_where_counts_across_priority_classes() {
+        let q = BoundedQueue::new(10);
+        q.try_push(1, Priority::Normal).unwrap();
+        q.try_push(2, Priority::Normal).unwrap();
+        q.try_push(99, Priority::High).unwrap();
+        // Pop order is [99, 1, 2].
+        assert_eq!(q.position_where(|v| *v == 99), Some(0));
+        assert_eq!(q.position_where(|v| *v == 1), Some(1));
+        assert_eq!(q.position_where(|v| *v == 2), Some(2));
+        assert_eq!(q.position_where(|v| *v == 7), None);
+        q.pop_timeout(Duration::from_millis(1)).unwrap();
+        assert_eq!(q.position_where(|v| *v == 2), Some(1));
     }
 
     #[test]

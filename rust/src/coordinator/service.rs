@@ -24,7 +24,7 @@ use super::sched::{self, CostModel, QueuedJob, SchedConfig};
 use crate::algorithms::{IterStat, ObserverSignal, SolveOptions};
 use crate::config::ServiceConfig;
 use crate::solver::{BatchObserver, EngineRegistry, SolveRequest};
-use anyhow::{anyhow, Context, Result};
+use anyhow::{anyhow, Result};
 use std::path::PathBuf;
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::Arc;
@@ -84,6 +84,32 @@ impl ServiceMetrics {
     }
 }
 
+/// Why a submission was refused, as a typed value — the wire server
+/// maps these onto the protocol's [`crate::wire::ErrCode`]s so routers
+/// and clients can react by category instead of parsing strings.
+#[derive(Debug)]
+pub enum SubmitError {
+    /// The spec failed [`JobSpec::validate`]; no job id was allocated.
+    Invalid(anyhow::Error),
+    /// Backpressure: the bounded queue is full (a job id was allocated
+    /// and immediately failed in the store so `wait` still resolves).
+    QueueFull,
+    /// The service is shutting down.
+    Closed,
+}
+
+impl std::fmt::Display for SubmitError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            Self::Invalid(e) => write!(f, "invalid job spec: {e:#}"),
+            Self::QueueFull => write!(f, "queue full"),
+            Self::Closed => write!(f, "service closed"),
+        }
+    }
+}
+
+impl std::error::Error for SubmitError {}
+
 /// What flows through the queue: the job plus its submit priority (the
 /// scheduler must see the priority so the cost order cannot invert it).
 type QueueItem = (JobId, JobSpec, Priority);
@@ -131,9 +157,19 @@ impl RecoveryService {
     }
 
     pub fn submit_prio(&self, spec: JobSpec, prio: Priority) -> Result<JobId> {
+        self.try_submit(spec, prio).map_err(|e| anyhow!("{e}"))
+    }
+
+    /// [`RecoveryService::submit_prio`] with the refusal category kept
+    /// typed (validation vs. backpressure vs. shutdown).
+    pub fn try_submit(
+        &self,
+        spec: JobSpec,
+        prio: Priority,
+    ) -> std::result::Result<JobId, SubmitError> {
         if let Err(e) = spec.validate() {
             self.metrics.invalid.fetch_add(1, Ordering::Relaxed);
-            return Err(e).context("invalid job spec");
+            return Err(SubmitError::Invalid(e));
         }
         let id = self.next_id.fetch_add(1, Ordering::Relaxed);
         self.store.insert_queued(id);
@@ -143,11 +179,11 @@ impl RecoveryService {
             Err(PushError::Full(_)) => {
                 self.metrics.rejected.fetch_add(1, Ordering::Relaxed);
                 self.store.fail(id, "rejected: queue full (backpressure)".into());
-                Err(anyhow!("queue full"))
+                Err(SubmitError::QueueFull)
             }
             Err(PushError::Closed(_)) => {
                 self.store.fail(id, "rejected: service shutting down".into());
-                Err(anyhow!("service closed"))
+                Err(SubmitError::Closed)
             }
         }
     }
@@ -186,6 +222,23 @@ impl RecoveryService {
 
     pub fn queue_depth(&self) -> usize {
         self.queue.len()
+    }
+
+    pub fn queue_capacity(&self) -> usize {
+        self.queue.capacity()
+    }
+
+    /// Worker threads serving the queue.
+    pub fn worker_count(&self) -> usize {
+        self.workers.len()
+    }
+
+    /// 0-based position of a still-queued job in pop order (how many
+    /// jobs a worker will take before it), `None` once a worker has
+    /// pulled it into a scheduling window or for unknown ids. This is
+    /// what the wire server pushes as `QueuePos` to subscribers.
+    pub fn queue_position(&self, id: JobId) -> Option<usize> {
+        self.queue.position_where(|(qid, _, _)| *qid == id)
     }
 
     pub fn metrics(&self) -> &ServiceMetrics {

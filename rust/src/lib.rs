@@ -70,11 +70,35 @@
 //!   let id = client.submit(&spec).unwrap();
 //!   for event in client.watch(id).unwrap() {
 //!       match event.unwrap() {
+//!           lpcs::wire::WatchEvent::Queued { position, depth } => {
+//!               println!("queued at {position}/{depth}")
+//!           }
 //!           lpcs::wire::WatchEvent::Progress(st) => println!("iter {}: {:.3e}", st.iter, st.resid_nsq),
 //!           lpcs::wire::WatchEvent::Done(out) => println!("done: {:?}", out.state),
 //!       }
 //!   }
 //!   ```
+//! * **Router** ([`router`]): the fleet tier. `lpcs route --listen A
+//!   backend=B backend=C` speaks the same wire protocol on both faces
+//!   and shards jobs across several `lpcs serve` backends by
+//!   consistent-hashing [`wire::route_key`] (operator content +
+//!   batch-relevant spec fields), so same-Φ jobs keep landing on one
+//!   backend and keep batching:
+//!
+//!   ```text
+//!                        ┌──────────────┐
+//!   WireClient ──wire──▶ │  lpcs route  │ ──wire──▶ lpcs serve #0 (Φ_a)
+//!   WireClient ──wire──▶ │ ring·health  │ ──wire──▶ lpcs serve #1 (Φ_b)
+//!                        └──────────────┘     ✗───▶ lpcs serve #2 (down)
+//!   ```
+//!
+//!   Backends are health-probed (down after consecutive failures,
+//!   removed from the ring, re-admitted on recovery); watch streams
+//!   *resume* across a backend dying mid-solve (deterministic re-solve
+//!   elsewhere, replayed iterations filtered, epoch bumped — the client
+//!   sees one monotone stream with exactly one `Done`); and admission
+//!   control answers saturation with typed `queue-full` errors instead
+//!   of buffering.
 //! * **Algorithms** ([`algorithms`]): the Algorithm-1 NIHT driver (generic
 //!   over [`algorithms::NihtKernel`]), the quantized kernels, and the
 //!   baselines — all observable per iteration.
@@ -123,6 +147,7 @@ pub mod quant;
 pub mod repro;
 pub mod rip;
 pub mod rng;
+pub mod router;
 pub mod runtime;
 pub mod simd;
 pub mod solver;

@@ -6,6 +6,10 @@
 //!   serve    run the recovery service — on a stream of synthetic jobs,
 //!            or (with --listen ADDR) as a network service speaking the
 //!            wire protocol (submit/subscribe/cancel/metrics frames)
+//!   route    shard jobs across several serve backends: same wire
+//!            protocol on both faces, consistent-hash batch affinity,
+//!            health-checked backends, watch streams that resume across
+//!            a backend dying mid-solve
 //!   watch    stream a served job's per-iteration progress over the wire
 //!   repro    regenerate a paper figure (fig1..fig11 | all)
 //!   info     list AOT artifacts and environment
@@ -38,7 +42,7 @@ fn main() {
 
 fn usage() -> ! {
     eprintln!(
-        "usage: lpcs <solve|serve|watch|repro|info> [args] [--key value ...]\n\
+        "usage: lpcs <solve|serve|route|watch|repro|info> [args] [--key value ...]\n\
          \n\
          lpcs solve [gaussian|astro] [--engine native-quant|native-dense|xla-quant|xla-dense|fpga-model]\n\
          \x20          [--algorithm niht|iht|qniht|cosamp|fista|auto]\n\
@@ -46,6 +50,9 @@ fn usage() -> ! {
          \x20          [--mri.center_band B] [--mri.bits 0|2|4|8] [--mri.sparsity S]\n\
          lpcs serve [--service.workers N] [--engine ...] [--algorithm ...]\n\
          \x20          [--listen ADDR] [--wire.sub_depth N]   (ADDR e.g. 127.0.0.1:7070)\n\
+         lpcs route --listen ADDR backend=ADDR [backend=ADDR ...]\n\
+         \x20          [--router.probe_ms N] [--router.max_inflight N] [--router.queue_limit N]\n\
+         \x20          [--router.vnodes N] [--router.affinity true|false]\n\
          lpcs watch <addr> <job-id>\n\
          lpcs repro <fig1|fig3|fig4|fig5|fig6|fig7|fig8|fig9|fig10|fig11|all> [--out_dir DIR]\n\
          lpcs info"
@@ -97,6 +104,7 @@ fn real_main() -> Result<()> {
         "solve" => cmd_solve(&cfg, rest.first().map(|s| s.as_str()).unwrap_or("gaussian")),
         "mri" => cmd_mri(&cfg),
         "serve" => cmd_serve(&cfg),
+        "route" => cmd_route(&cfg),
         "watch" => match (rest.first(), rest.get(1)) {
             (Some(addr), Some(job)) => cmd_watch(addr, job),
             _ => usage(),
@@ -336,6 +344,36 @@ fn cmd_serve_wire(cfg: &LpcsConfig) -> Result<()> {
     }
 }
 
+/// `lpcs route --listen ADDR backend=B1 backend=B2 …`: the sharded
+/// serving tier. Clients speak to it exactly as to `lpcs serve`; jobs
+/// shard across the backends by batch-affine consistent hashing, with
+/// health-checked membership and resume-on-failover watch streams.
+fn cmd_route(cfg: &LpcsConfig) -> Result<()> {
+    if cfg.wire.listen.is_empty() {
+        bail!("route needs --listen ADDR");
+    }
+    let router = lpcs::router::serve(cfg.router.clone(), &cfg.wire.listen)?;
+    println!(
+        "router listening on {} (frames v{}; {} backends, vnodes={} affinity={} \
+         max_inflight={} queue_limit={})",
+        router.addr(),
+        lpcs::wire::WIRE_VERSION,
+        cfg.router.backends.len(),
+        cfg.router.vnodes,
+        cfg.router.affinity,
+        cfg.router.max_inflight,
+        cfg.router.queue_limit,
+    );
+    for b in &cfg.router.backends {
+        println!("  backend {b}");
+    }
+    // `router` must outlive the loop — dropping it would stop accepting.
+    loop {
+        std::thread::sleep(Duration::from_secs(60));
+        println!("metrics: {}", router.metrics().snapshot());
+    }
+}
+
 /// `lpcs watch ADDR JOB`: stream a served job's convergence live.
 fn cmd_watch(addr: &str, job: &str) -> Result<()> {
     let id: u64 = job.parse().with_context(|| format!("job id '{job}' is not a number"))?;
@@ -343,6 +381,9 @@ fn cmd_watch(addr: &str, job: &str) -> Result<()> {
         .with_context(|| format!("connecting to {addr}"))?;
     for event in client.watch(id)? {
         match event? {
+            lpcs::wire::WatchEvent::Queued { position, depth } => {
+                println!("queued: position {position} of {depth}")
+            }
             lpcs::wire::WatchEvent::Progress(st) => println!(
                 "iter {:>6}  resid_nsq={:.6e}  mu={:.3e}  support_changed={}  shrinks={}",
                 st.iter, st.resid_nsq, st.mu, st.support_changed, st.shrink_count

@@ -1,0 +1,101 @@
+//! Backend liveness: per-backend health state and the prober thread.
+//!
+//! The prober walks every configured backend each round, sampling its
+//! load with a `StatsReq` under the probe deadline. `down_after`
+//! consecutive failures mark a backend down (removed from the hash
+//! ring); one success re-admits it immediately and refreshes the cached
+//! queue depth the admission check reads. Data-path failures (a forward
+//! or relay losing its connection) mark a backend down without waiting
+//! for the prober — the prober is how it comes *back*.
+
+use super::relay::Upstream;
+use super::RouterState;
+use crate::wire::codec::{BackendStats, Message};
+use anyhow::{bail, Result};
+use std::sync::atomic::{AtomicBool, AtomicU32, AtomicU64, Ordering};
+use std::sync::Arc;
+use std::time::Duration;
+
+/// Shared health/load view of one configured backend. Lock-free: the
+/// data path reads `up`/`queue_depth` on every submit.
+#[derive(Debug)]
+pub struct BackendState {
+    pub addr: String,
+    /// Starts optimistic (`true`) so the router serves immediately; the
+    /// first probe round corrects it.
+    up: AtomicBool,
+    /// Consecutive probe failures (reset on success).
+    failures: AtomicU32,
+    /// Last probed queue depth/capacity — the admission check's view of
+    /// backend load (staleness bounded by the probe period).
+    pub queue_depth: AtomicU64,
+    pub queue_capacity: AtomicU64,
+}
+
+impl BackendState {
+    pub(crate) fn new(addr: String) -> Self {
+        Self {
+            addr,
+            up: AtomicBool::new(true),
+            failures: AtomicU32::new(0),
+            queue_depth: AtomicU64::new(0),
+            queue_capacity: AtomicU64::new(0),
+        }
+    }
+
+    pub fn is_up(&self) -> bool {
+        self.up.load(Ordering::SeqCst)
+    }
+
+    /// Flip the up flag, returning the previous value (so callers act
+    /// only on actual transitions).
+    pub(crate) fn set_up(&self, up: bool) -> bool {
+        self.up.swap(up, Ordering::SeqCst)
+    }
+}
+
+/// One probe: connect + `StatsReq`, both under `timeout`.
+/// [`crate::wire::WireClient::stats`] would wait its 120 s reply
+/// deadline — far too long for a health check — so this goes through the
+/// relay's raw [`Upstream`] with the probe deadline applied end to end.
+fn probe(addr: &str, timeout: Duration) -> Result<BackendStats> {
+    let mut up = Upstream::connect(addr, timeout)?;
+    up.send(&Message::StatsReq)?;
+    match up.recv(timeout)? {
+        Message::Stats(st) => Ok(st),
+        other => bail!("unexpected probe reply: {other:?}"),
+    }
+}
+
+/// The prober loop (one thread per router).
+pub(crate) fn run_prober(state: Arc<RouterState>) {
+    let period = Duration::from_millis(state.cfg.probe_ms.max(10));
+    let timeout = Duration::from_millis(state.cfg.probe_timeout_ms.max(10));
+    while !state.is_shutdown() {
+        for (i, b) in state.backends.iter().enumerate() {
+            if state.is_shutdown() {
+                return;
+            }
+            match probe(&b.addr, timeout) {
+                Ok(st) => {
+                    b.queue_depth.store(st.queue_depth, Ordering::Relaxed);
+                    b.queue_capacity.store(st.queue_capacity, Ordering::Relaxed);
+                    b.failures.store(0, Ordering::Relaxed);
+                    if !b.set_up(true) {
+                        // Recovered: rejoin the ring. Keys it owned
+                        // before the outage route back to it (the ring
+                        // build is deterministic), restoring affinity.
+                        state.rebuild_ring();
+                    }
+                }
+                Err(_) => {
+                    let failures = b.failures.fetch_add(1, Ordering::Relaxed) + 1;
+                    if failures >= state.cfg.down_after && b.is_up() {
+                        state.mark_backend_down(i);
+                    }
+                }
+            }
+        }
+        state.sleep_ticked(period);
+    }
+}

@@ -1,0 +1,462 @@
+//! # Sharded serving tier (`lpcs route`) — L4
+//!
+//! A routing front end that fans one wire-protocol listen address out
+//! over several `lpcs serve` backends, **preserving batch affinity**:
+//! jobs are placed by consistent-hashing [`crate::wire::route_key`] —
+//! the operator content hash plus the batch-relevant spec fields — so
+//! every job that could share a backend batch (same Φ, same solver/
+//! engine/sparsity) lands on the *same* backend and amortizes one
+//! quantize+pack exactly as it would against a single server.
+//!
+//! ```text
+//!                         ┌──────────────────┐
+//!   WireClient ──Submit──▶│   lpcs route     │──▶ lpcs serve #0 (Φ_a jobs)
+//!   WireClient ──Watch───▶│  ring · health   │──▶ lpcs serve #1 (Φ_b jobs)
+//!   WireClient ──Cancel──▶│  table · relay   │──▶ lpcs serve #2 (down: ring drops it)
+//!                         └──────────────────┘
+//! ```
+//!
+//! Both faces speak the same [`crate::wire`] protocol, so a
+//! [`crate::wire::WireClient`] talks to a router or a backend unchanged.
+//! Production shape:
+//!
+//! * [`ring`] — deterministic consistent-hash ring (vnodes, minimal
+//!   disruption on membership change).
+//! * [`health`] — a prober thread marks backends down after
+//!   `down_after` failed `StatsReq` probes (removing them from the
+//!   ring) and re-admits them on recovery.
+//! * [`relay`] — the data path. Watch streams survive a backend dying
+//!   mid-solve: the router resubmits the stored spec to a surviving
+//!   backend and *resumes* the stream — deterministic seeded re-solves
+//!   replay the same trajectory, replayed iterations are filtered, the
+//!   `Progress` epoch increments, and the client still sees one
+//!   strictly monotone stream ending in exactly one `Done`.
+//! * Admission control — submits are rejected with typed
+//!   [`ErrCode::QueueFull`] when the router's in-flight table hits
+//!   `max_inflight` or a backend's probed queue depth crosses
+//!   `queue_limit`; backend rejections propagate typed. The router
+//!   never buffers jobs it cannot place.
+//!
+//! End-to-end conformance (routed results bit-identical to
+//! `Recovery::service_dispatch`, failover resume, typed saturation) is
+//! pinned by `tests/router_serving.rs`.
+
+pub mod health;
+pub mod relay;
+pub mod ring;
+
+pub use health::BackendState;
+pub use ring::HashRing;
+
+use crate::config::RouterConfig;
+use crate::coordinator::JobId;
+use crate::wire::codec::{route_key, ErrCode, WireJobSpec};
+use anyhow::{bail, Context, Result};
+use std::collections::HashMap;
+use std::net::{SocketAddr, TcpListener};
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+use std::thread::JoinHandle;
+use std::time::Duration;
+
+/// Where the router believes one of its jobs lives.
+struct RouteEntry {
+    backend: usize,
+    /// The backend's id for this job (ids are per-service counters, so
+    /// the router re-numbers and translates on every relayed frame).
+    backend_job: JobId,
+    /// The wire spec, kept while the job is live so a watch relay can
+    /// resubmit it after a backend loss; dropped at `Done` (a dense Φ
+    /// can be tens of MiB — terminal entries must not pin it).
+    spec: Option<WireJobSpec>,
+    done: bool,
+    /// Bumped on every failover. Relays present the generation they
+    /// acted on, so two relays watching the same job cannot both
+    /// resubmit it for one loss.
+    generation: u64,
+}
+
+/// A relay's snapshot of a [`RouteEntry`]'s placement.
+#[derive(Debug, Clone, Copy)]
+pub(crate) struct EntryView {
+    pub(crate) backend: usize,
+    pub(crate) backend_job: JobId,
+    pub(crate) generation: u64,
+}
+
+/// Per-backend slice of the router counters.
+#[derive(Debug, Default)]
+pub struct PerBackendMetrics {
+    pub routed: AtomicU64,
+    pub resumed: AtomicU64,
+    pub down_events: AtomicU64,
+}
+
+/// Router counters, mirroring the backend
+/// [`crate::coordinator::ServiceMetrics`] discipline: monotone atomics,
+/// one-line text snapshot.
+#[derive(Debug)]
+pub struct RouterMetrics {
+    /// Submits successfully placed on a backend.
+    pub routed: AtomicU64,
+    /// Typed `queue-full` rejections: router table saturation, probed
+    /// backend queue limit, or a propagated backend rejection.
+    pub rejected_full: AtomicU64,
+    /// Submits rejected because no backend was available.
+    pub rejected_down: AtomicU64,
+    /// Watch streams resumed onto another backend after a loss.
+    pub resumed: AtomicU64,
+    /// Up→down transitions across all backends.
+    pub backend_down_events: AtomicU64,
+    per_backend: Vec<PerBackendMetrics>,
+}
+
+impl RouterMetrics {
+    fn new(backends: usize) -> Self {
+        Self {
+            routed: AtomicU64::new(0),
+            rejected_full: AtomicU64::new(0),
+            rejected_down: AtomicU64::new(0),
+            resumed: AtomicU64::new(0),
+            backend_down_events: AtomicU64::new(0),
+            per_backend: (0..backends).map(|_| PerBackendMetrics::default()).collect(),
+        }
+    }
+
+    pub fn backend(&self, i: usize) -> &PerBackendMetrics {
+        &self.per_backend[i]
+    }
+
+    pub fn snapshot(&self) -> String {
+        let mut s = format!(
+            "routed={} rejected_full={} rejected_down={} resumed={} backend_down={}",
+            self.routed.load(Ordering::Relaxed),
+            self.rejected_full.load(Ordering::Relaxed),
+            self.rejected_down.load(Ordering::Relaxed),
+            self.resumed.load(Ordering::Relaxed),
+            self.backend_down_events.load(Ordering::Relaxed),
+        );
+        for (i, b) in self.per_backend.iter().enumerate() {
+            s.push_str(&format!(
+                " b{i}[routed={} resumed={} down={}]",
+                b.routed.load(Ordering::Relaxed),
+                b.resumed.load(Ordering::Relaxed),
+                b.down_events.load(Ordering::Relaxed),
+            ));
+        }
+        s
+    }
+}
+
+/// Everything the router's threads share.
+pub struct RouterState {
+    pub cfg: RouterConfig,
+    pub backends: Vec<BackendState>,
+    ring: Mutex<HashRing>,
+    table: Mutex<HashMap<JobId, RouteEntry>>,
+    next_id: AtomicU64,
+    /// Round-robin cursor (`affinity: false` mode — the bench baseline).
+    rr: AtomicU64,
+    pub metrics: RouterMetrics,
+    shutdown: Arc<AtomicBool>,
+}
+
+impl RouterState {
+    fn new(cfg: RouterConfig, shutdown: Arc<AtomicBool>) -> Self {
+        let backends: Vec<BackendState> =
+            cfg.backends.iter().cloned().map(BackendState::new).collect();
+        let metrics = RouterMetrics::new(backends.len());
+        let state = Self {
+            backends,
+            ring: Mutex::new(HashRing::default()),
+            table: Mutex::new(HashMap::new()),
+            next_id: AtomicU64::new(1),
+            rr: AtomicU64::new(0),
+            metrics,
+            cfg,
+            shutdown,
+        };
+        state.rebuild_ring();
+        state
+    }
+
+    pub(crate) fn is_shutdown(&self) -> bool {
+        self.shutdown.load(Ordering::SeqCst)
+    }
+
+    /// Sleep `total`, waking every 20 ms to honor shutdown promptly.
+    pub(crate) fn sleep_ticked(&self, total: Duration) {
+        let tick = Duration::from_millis(20);
+        let mut left = total;
+        while !left.is_zero() {
+            if self.is_shutdown() {
+                return;
+            }
+            let step = left.min(tick);
+            std::thread::sleep(step);
+            left -= step;
+        }
+    }
+
+    /// Deadline for every upstream connect/submit — the probe timeout,
+    /// so data-path failover is as fast as health detection.
+    pub(crate) fn forward_timeout(&self) -> Duration {
+        Duration::from_millis(self.cfg.probe_timeout_ms.max(10))
+    }
+
+    /// Rebuild the ring over the currently-up backends (called on every
+    /// membership transition; the ring itself is immutable between).
+    pub(crate) fn rebuild_ring(&self) {
+        let up = self
+            .backends
+            .iter()
+            .enumerate()
+            .filter(|(_, b)| b.is_up())
+            .map(|(i, b)| (i, b.addr.as_str()));
+        *self.ring.lock().unwrap() = HashRing::build(up, self.cfg.vnodes);
+    }
+
+    /// Record a down transition once: counters + ring rebuild. Safe to
+    /// call from the prober and the data path concurrently.
+    pub(crate) fn mark_backend_down(&self, i: usize) {
+        if self.backends[i].set_up(false) {
+            self.metrics.backend_down_events.fetch_add(1, Ordering::Relaxed);
+            self.metrics.backend(i).down_events.fetch_add(1, Ordering::Relaxed);
+            self.rebuild_ring();
+        }
+    }
+
+    pub fn up_count(&self) -> usize {
+        self.backends.iter().filter(|b| b.is_up()).count()
+    }
+
+    /// Choose a backend for `key`: the ring owner under affinity, a
+    /// round-robin pick otherwise. Falls back to a deterministic
+    /// key-indexed pick over the live set when the ring briefly lags a
+    /// concurrent mark-down.
+    pub(crate) fn pick_backend(&self, key: u64) -> Option<usize> {
+        if self.cfg.affinity {
+            if let Some(i) = self.ring.lock().unwrap().route(key) {
+                if self.backends[i].is_up() {
+                    return Some(i);
+                }
+            }
+        }
+        let ups: Vec<usize> = self
+            .backends
+            .iter()
+            .enumerate()
+            .filter(|(_, b)| b.is_up())
+            .map(|(i, _)| i)
+            .collect();
+        if ups.is_empty() {
+            return None;
+        }
+        if self.cfg.affinity {
+            Some(ups[(key % ups.len() as u64) as usize])
+        } else {
+            Some(ups[(self.rr.fetch_add(1, Ordering::Relaxed) as usize) % ups.len()])
+        }
+    }
+
+    /// Non-terminal entries — the admission measure. Drained when a
+    /// watch relays the job's `Done` (the CLI always watches); an
+    /// unwatched job pins its slot, which is exactly what `max_inflight`
+    /// is there to bound.
+    pub fn inflight(&self) -> usize {
+        self.table.lock().unwrap().values().filter(|e| !e.done).count()
+    }
+
+    /// Register a placed job and hand out its router-scoped id.
+    pub(crate) fn admit(&self, backend: usize, backend_job: JobId, ws: WireJobSpec) -> JobId {
+        let id = self.next_id.fetch_add(1, Ordering::Relaxed);
+        self.table.lock().unwrap().insert(
+            id,
+            RouteEntry { backend, backend_job, spec: Some(ws), done: false, generation: 0 },
+        );
+        self.metrics.routed.fetch_add(1, Ordering::Relaxed);
+        self.metrics.backend(backend).routed.fetch_add(1, Ordering::Relaxed);
+        id
+    }
+
+    pub(crate) fn entry_view(&self, id: JobId) -> Option<EntryView> {
+        self.table.lock().unwrap().get(&id).map(|e| EntryView {
+            backend: e.backend,
+            backend_job: e.backend_job,
+            generation: e.generation,
+        })
+    }
+
+    pub(crate) fn mark_done(&self, id: JobId) {
+        if let Some(e) = self.table.lock().unwrap().get_mut(&id) {
+            e.done = true;
+            e.spec = None; // release the operator bytes; outcomes live on the backend
+        }
+    }
+
+    /// Re-place `id` after its upstream stream was lost: resubmit the
+    /// stored spec to a (possibly different) live backend. The
+    /// generation guard makes concurrent relays converge on one
+    /// resubmission — a loser's duplicate runs out unwatched on its
+    /// backend, but never reaches a stream.
+    pub(crate) fn failover(
+        &self,
+        id: JobId,
+        seen_generation: u64,
+    ) -> Result<EntryView, ErrCode> {
+        let spec = {
+            let table = self.table.lock().unwrap();
+            let e = table.get(&id).ok_or(ErrCode::UnknownJob)?;
+            if e.done {
+                // Another relay already delivered this job's Done.
+                return Err(ErrCode::Internal);
+            }
+            if e.generation != seen_generation {
+                // A concurrent relay already re-placed it; ride along.
+                return Ok(EntryView {
+                    backend: e.backend,
+                    backend_job: e.backend_job,
+                    generation: e.generation,
+                });
+            }
+            e.spec.clone().ok_or(ErrCode::Internal)?
+        };
+        let key = route_key(&spec);
+        for _ in 0..self.backends.len() {
+            let Some(i) = self.pick_backend(key) else { break };
+            match relay::forward_submit(self, i, &spec) {
+                Ok(backend_job) => {
+                    let mut table = self.table.lock().unwrap();
+                    let e = table.get_mut(&id).ok_or(ErrCode::UnknownJob)?;
+                    if e.generation != seen_generation {
+                        return Ok(EntryView {
+                            backend: e.backend,
+                            backend_job: e.backend_job,
+                            generation: e.generation,
+                        });
+                    }
+                    e.backend = i;
+                    e.backend_job = backend_job;
+                    e.generation += 1;
+                    return Ok(EntryView { backend: i, backend_job, generation: e.generation });
+                }
+                Err(we) => match we.code {
+                    // A live backend refused the resubmit (queue full,
+                    // …): surface its verdict to the watcher.
+                    Some(code) => return Err(code),
+                    None => {
+                        self.mark_backend_down(i);
+                        continue;
+                    }
+                },
+            }
+        }
+        Err(ErrCode::BackendDown)
+    }
+}
+
+/// Handle to a running router. Dropping it only raises the shutdown
+/// flag; call [`RouterServer::shutdown`] for the bounded join.
+pub struct RouterServer {
+    addr: SocketAddr,
+    shutdown: Arc<AtomicBool>,
+    accept: Option<JoinHandle<()>>,
+    health: Option<JoinHandle<()>>,
+    conns: Arc<Mutex<Vec<JoinHandle<()>>>>,
+    state: Arc<RouterState>,
+}
+
+impl RouterServer {
+    /// The actually-bound address (resolves `:0` ephemeral ports).
+    pub fn addr(&self) -> SocketAddr {
+        self.addr
+    }
+
+    pub fn state(&self) -> &RouterState {
+        &self.state
+    }
+
+    pub fn metrics(&self) -> &RouterMetrics {
+        &self.state.metrics
+    }
+
+    /// Stop accepting, wake every relay and the prober, join them all.
+    /// Bounded: every blocking wait in the router ticks and re-checks
+    /// the flag.
+    pub fn shutdown(mut self) {
+        self.shutdown.store(true, Ordering::SeqCst);
+        if let Some(h) = self.accept.take() {
+            h.join().expect("router accept thread panicked");
+        }
+        if let Some(h) = self.health.take() {
+            h.join().expect("router health prober panicked");
+        }
+        let conns = std::mem::take(&mut *self.conns.lock().unwrap());
+        for h in conns {
+            h.join().expect("router connection handler panicked");
+        }
+    }
+}
+
+impl Drop for RouterServer {
+    fn drop(&mut self) {
+        self.shutdown.store(true, Ordering::SeqCst);
+    }
+}
+
+/// Start routing on `listen` (e.g. `"127.0.0.1:0"`) across
+/// `cfg.backends`.
+pub fn serve(cfg: RouterConfig, listen: &str) -> Result<RouterServer> {
+    if cfg.backends.is_empty() {
+        bail!("router needs at least one backend (router.backends=… or backend=…)");
+    }
+    let listener = TcpListener::bind(listen)
+        .with_context(|| format!("binding router listener on {listen}"))?;
+    listener.set_nonblocking(true).context("non-blocking router listener")?;
+    let addr = listener.local_addr().context("router listener address")?;
+    let shutdown = Arc::new(AtomicBool::new(false));
+    let state = Arc::new(RouterState::new(cfg, shutdown.clone()));
+    let conns: Arc<Mutex<Vec<JoinHandle<()>>>> = Arc::new(Mutex::new(Vec::new()));
+
+    let health = {
+        let state = state.clone();
+        std::thread::Builder::new()
+            .name("lpcs-router-health".into())
+            .spawn(move || health::run_prober(state))
+            .expect("spawn router health prober")
+    };
+
+    let accept = {
+        let shutdown = shutdown.clone();
+        let conns = conns.clone();
+        let state = state.clone();
+        std::thread::Builder::new()
+            .name("lpcs-router-accept".into())
+            .spawn(move || loop {
+                if shutdown.load(Ordering::SeqCst) {
+                    return;
+                }
+                match listener.accept() {
+                    Ok((stream, _peer)) => {
+                        let state = state.clone();
+                        let handle = std::thread::Builder::new()
+                            .name("lpcs-router-conn".into())
+                            .spawn(move || relay::handle_conn(stream, state))
+                            .expect("spawn router connection handler");
+                        // Reap finished handlers so a long-running
+                        // router doesn't accumulate joinable threads.
+                        let mut conns = conns.lock().unwrap();
+                        conns.retain(|h| !h.is_finished());
+                        conns.push(handle);
+                    }
+                    Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
+                        std::thread::sleep(Duration::from_millis(10));
+                    }
+                    Err(_) => std::thread::sleep(Duration::from_millis(10)),
+                }
+            })
+            .expect("spawn router accept thread")
+    };
+
+    Ok(RouterServer { addr, shutdown, accept: Some(accept), health: Some(health), conns, state })
+}

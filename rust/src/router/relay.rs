@@ -1,0 +1,386 @@
+//! The router's data path: per-connection request handling, submit
+//! routing with failover, and the resume-capable watch relay.
+//!
+//! A client-facing connection looks exactly like one to `lpcs serve` —
+//! same frames, same request/stream discipline — so [`crate::wire::WireClient`]
+//! works against either tier unchanged. Underneath, `Submit` is
+//! forwarded to the ring-chosen backend, `Subscribe` opens a raw
+//! upstream subscription and pumps it through, and when that upstream
+//! dies mid-stream the relay resubmits the stored spec to a surviving
+//! backend and *resumes*: the re-solve is deterministic (seeded), so the
+//! replayed iterations are filtered and the client sees one strictly
+//! monotone stream with a bumped epoch and exactly one `Done`.
+
+use super::{EntryView, RouterState};
+use crate::coordinator::JobId;
+use crate::wire::codec::{
+    self, BackendStats, ErrCode, FrameReader, Message, PollError, WireJobSpec,
+};
+use crate::wire::{WireClient, WireError};
+use anyhow::{bail, Context, Result};
+use std::io::Write;
+use std::net::{TcpStream, ToSocketAddrs};
+use std::sync::atomic::Ordering;
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+/// How often blocked reads wake to check the shutdown flag.
+const POLL_TICK: Duration = Duration::from_millis(100);
+/// A peer that cannot absorb a frame for this long is declared dead.
+const WRITE_TIMEOUT: Duration = Duration::from_secs(5);
+/// Upstream losses one watch stream tolerates before reporting the job
+/// lost — bounds resubmit storms when the whole fleet is flapping.
+const MAX_FAILOVERS: usize = 5;
+
+/// A raw connection to a backend. Deliberately *not* a [`WireClient`]:
+/// the relay must see every frame kind verbatim (epoched `Progress`,
+/// `QueuePos`) and apply its own per-call deadlines, so it stays at the
+/// codec layer. The health prober shares it for the same reason.
+pub(crate) struct Upstream {
+    stream: TcpStream,
+    reader: FrameReader,
+}
+
+impl Upstream {
+    pub(crate) fn connect(addr: &str, timeout: Duration) -> Result<Self> {
+        let sa = addr
+            .to_socket_addrs()
+            .context("resolving backend address")?
+            .next()
+            .context("backend address resolved to nothing")?;
+        let stream = TcpStream::connect_timeout(&sa, timeout)
+            .with_context(|| format!("connecting to backend {addr}"))?;
+        stream.set_nodelay(true).ok();
+        stream.set_read_timeout(Some(POLL_TICK)).context("setting backend read timeout")?;
+        stream.set_write_timeout(Some(WRITE_TIMEOUT)).context("setting backend write timeout")?;
+        Ok(Self { stream, reader: FrameReader::new() })
+    }
+
+    pub(crate) fn send(&mut self, msg: &Message) -> Result<()> {
+        let frame = codec::try_encode(msg).context("encoding backend frame")?;
+        self.stream.write_all(&frame).context("writing to backend")
+    }
+
+    /// Next frame within `deadline` (checked at `POLL_TICK` granularity).
+    pub(crate) fn recv(&mut self, deadline: Duration) -> Result<Message> {
+        let until = Instant::now() + deadline;
+        loop {
+            match self.poll()? {
+                Some(msg) => return Ok(msg),
+                None => {
+                    if Instant::now() >= until {
+                        bail!("backend reply timed out after {deadline:?}");
+                    }
+                }
+            }
+        }
+    }
+
+    /// One read tick: `Ok(None)` = nothing complete yet.
+    pub(crate) fn poll(&mut self) -> Result<Option<Message>> {
+        match self.reader.poll(&mut self.stream) {
+            Ok(m) => Ok(m),
+            Err(PollError::Closed) => bail!("backend closed the connection"),
+            Err(e) => bail!("reading backend frame: {e}"),
+        }
+    }
+}
+
+/// Submit `ws` to backend `i`. A typed error (`code: Some`) is a live
+/// backend's verdict and must be propagated, not failed over; `code:
+/// None` is transport loss and the caller should mark the backend down
+/// and try the next one.
+pub(crate) fn forward_submit(
+    state: &RouterState,
+    backend: usize,
+    ws: &WireJobSpec,
+) -> std::result::Result<JobId, WireError> {
+    let addr = &state.backends[backend].addr;
+    let mut client = WireClient::connect_timeout(addr, state.forward_timeout())
+        .map_err(|e| WireError { code: None, msg: format!("{e:#}") })?;
+    client.submit_wire(ws)
+}
+
+fn send(conn: &mut TcpStream, msg: &Message) -> std::io::Result<()> {
+    let frame = codec::try_encode(msg)
+        .map_err(|e| std::io::Error::new(std::io::ErrorKind::InvalidData, e))?;
+    conn.write_all(&frame)
+}
+
+/// One client-facing connection (mirrors the wire server's handler).
+pub(crate) fn handle_conn(mut conn: TcpStream, state: Arc<RouterState>) {
+    conn.set_nodelay(true).ok();
+    conn.set_read_timeout(Some(POLL_TICK)).ok();
+    conn.set_write_timeout(Some(WRITE_TIMEOUT)).ok();
+    let mut reader = FrameReader::new();
+    loop {
+        if state.is_shutdown() {
+            return;
+        }
+        let msg = match reader.poll(&mut conn) {
+            Ok(None) => continue, // read tick; re-check shutdown
+            Ok(Some(msg)) => msg,
+            Err(PollError::Closed) | Err(PollError::Io(_)) => return,
+            Err(PollError::Decode(e)) => {
+                let code = match e {
+                    codec::DecodeError::BadVersion(_) => ErrCode::VersionMismatch,
+                    _ => ErrCode::Protocol,
+                };
+                let _ =
+                    send(&mut conn, &Message::Err { code, msg: format!("protocol error: {e}") });
+                return;
+            }
+        };
+        let ok = match msg {
+            Message::Submit(ws) => send(&mut conn, &submit(&state, ws)).is_ok(),
+            Message::Subscribe { id } => match relay_watch(&state, id, &mut conn) {
+                WatchEnd::Clean => true,
+                WatchEnd::Disconnected | WatchEnd::Shutdown => return,
+            },
+            Message::Cancel { id } => send(&mut conn, &do_cancel(&state, id)).is_ok(),
+            Message::MetricsReq => {
+                send(&mut conn, &Message::Metrics { snapshot: state.metrics.snapshot() }).is_ok()
+            }
+            // The router's own load sample, in the same frame backends
+            // answer with: table occupancy against its bound, and how
+            // many backends are currently up where a backend reports
+            // workers.
+            Message::StatsReq => send(
+                &mut conn,
+                &Message::Stats(BackendStats {
+                    queue_depth: state.inflight() as u64,
+                    queue_capacity: state.cfg.max_inflight as u64,
+                    workers: state.up_count() as u64,
+                }),
+            )
+            .is_ok(),
+            _ => send(
+                &mut conn,
+                &Message::Err {
+                    code: ErrCode::Protocol,
+                    msg: "unexpected router-bound frame".into(),
+                },
+            )
+            .is_ok(),
+        };
+        if !ok {
+            return;
+        }
+    }
+}
+
+/// Route one submit: admission checks, ring choice, forward, and
+/// failover across backends that prove dead on contact.
+fn submit(state: &RouterState, ws: WireJobSpec) -> Message {
+    let inflight = state.inflight();
+    if inflight >= state.cfg.max_inflight {
+        state.metrics.rejected_full.fetch_add(1, Ordering::Relaxed);
+        return Message::Err {
+            code: ErrCode::QueueFull,
+            msg: format!(
+                "router in-flight table full ({inflight}/{}); retry later",
+                state.cfg.max_inflight
+            ),
+        };
+    }
+    let key = codec::route_key(&ws);
+    // Each pass either succeeds, returns a typed verdict, or marks a
+    // backend down — so the up-set shrinks and this terminates.
+    for _ in 0..state.backends.len() {
+        let Some(i) = state.pick_backend(key) else { break };
+        if state.cfg.queue_limit > 0
+            && state.backends[i].queue_depth.load(Ordering::Relaxed)
+                >= state.cfg.queue_limit as u64
+        {
+            state.metrics.rejected_full.fetch_add(1, Ordering::Relaxed);
+            return Message::Err {
+                code: ErrCode::QueueFull,
+                msg: format!(
+                    "backend {} at queue limit ({} queued >= {})",
+                    state.backends[i].addr,
+                    state.backends[i].queue_depth.load(Ordering::Relaxed),
+                    state.cfg.queue_limit
+                ),
+            };
+        }
+        match forward_submit(state, i, &ws) {
+            Ok(backend_job) => {
+                let id = state.admit(i, backend_job, ws);
+                return Message::Submitted { id };
+            }
+            Err(we) => match we.code {
+                Some(code) => {
+                    // A live backend rejected (queue full, invalid spec,
+                    // …): propagate its typed verdict — never buffer the
+                    // job router-side hoping for capacity.
+                    if code == ErrCode::QueueFull {
+                        state.metrics.rejected_full.fetch_add(1, Ordering::Relaxed);
+                    }
+                    return Message::Err { code, msg: we.msg };
+                }
+                None => {
+                    state.mark_backend_down(i);
+                    continue;
+                }
+            },
+        }
+    }
+    state.metrics.rejected_down.fetch_add(1, Ordering::Relaxed);
+    Message::Err { code: ErrCode::BackendDown, msg: "no backend available".into() }
+}
+
+fn do_cancel(state: &RouterState, id: JobId) -> Message {
+    let Some(view) = state.entry_view(id) else {
+        // Mirrors the wire server: unknown/terminal jobs answer
+        // `accepted: false` rather than an error.
+        return Message::Cancelled { id, accepted: false };
+    };
+    let accepted = WireClient::connect_timeout(
+        &state.backends[view.backend].addr,
+        state.forward_timeout(),
+    )
+    .ok()
+    .and_then(|mut c| c.cancel(view.backend_job).ok())
+    .unwrap_or(false);
+    Message::Cancelled { id, accepted }
+}
+
+enum WatchEnd {
+    /// Stream terminated with a frame; connection back in request mode.
+    Clean,
+    /// The watching client died mid-stream.
+    Disconnected,
+    Shutdown,
+}
+
+enum PumpEnd {
+    /// Terminal `Done` relayed (`true`) or the client died taking it.
+    Done(bool),
+    ClientGone,
+    Shutdown,
+    /// The upstream stream was lost before its terminal frame.
+    /// `backend_dead` distinguishes transport loss (mark the backend
+    /// down) from a live backend that no longer knows the job (it
+    /// bounced and lost state — resume elsewhere, don't mark it down).
+    Lost { backend_dead: bool },
+}
+
+/// Relay one watch stream, failing over across backend losses.
+fn relay_watch(state: &RouterState, id: JobId, conn: &mut TcpStream) -> WatchEnd {
+    let Some(mut view) = state.entry_view(id) else {
+        let reply =
+            Message::Err { code: ErrCode::UnknownJob, msg: format!("unknown job {id}") };
+        return if send(conn, &reply).is_ok() { WatchEnd::Clean } else { WatchEnd::Disconnected };
+    };
+    let mut epoch: u32 = 0;
+    let mut last_iter: Option<usize> = None;
+    let mut failovers = 0usize;
+    loop {
+        let backend_dead = match subscribe_upstream(state, &view) {
+            Ok(mut up) => match pump(state, id, epoch, &mut last_iter, &mut up, conn) {
+                PumpEnd::Done(true) => return WatchEnd::Clean,
+                PumpEnd::Done(false) | PumpEnd::ClientGone => return WatchEnd::Disconnected,
+                PumpEnd::Shutdown => return WatchEnd::Shutdown,
+                PumpEnd::Lost { backend_dead } => backend_dead,
+            },
+            Err(()) => true,
+        };
+        failovers += 1;
+        if failovers > MAX_FAILOVERS {
+            let reply = Message::Err {
+                code: ErrCode::BackendDown,
+                msg: format!("job {id} lost after {MAX_FAILOVERS} failovers"),
+            };
+            return if send(conn, &reply).is_ok() {
+                WatchEnd::Clean
+            } else {
+                WatchEnd::Disconnected
+            };
+        }
+        if backend_dead {
+            state.mark_backend_down(view.backend);
+        }
+        match state.failover(id, view.generation) {
+            Ok(next) => {
+                // Resume: new upstream job, next epoch; `last_iter`
+                // persists so replayed iterations are swallowed.
+                state.metrics.resumed.fetch_add(1, Ordering::Relaxed);
+                state.metrics.backend(next.backend).resumed.fetch_add(1, Ordering::Relaxed);
+                view = next;
+                epoch += 1;
+            }
+            Err(code) => {
+                let reply = Message::Err {
+                    code,
+                    msg: format!("job {id}: resume after backend loss failed"),
+                };
+                return if send(conn, &reply).is_ok() {
+                    WatchEnd::Clean
+                } else {
+                    WatchEnd::Disconnected
+                };
+            }
+        }
+    }
+}
+
+/// Open a subscription to the entry's current backend. `Err` is always
+/// transport-level (connect or first write failed).
+fn subscribe_upstream(state: &RouterState, view: &EntryView) -> Result<Upstream, ()> {
+    let mut up = Upstream::connect(&state.backends[view.backend].addr, state.forward_timeout())
+        .map_err(|_| ())?;
+    up.send(&Message::Subscribe { id: view.backend_job }).map_err(|_| ())?;
+    Ok(up)
+}
+
+/// Pump one upstream subscription onto the client connection until a
+/// terminal frame, a loss, client death, or shutdown.
+fn pump(
+    state: &RouterState,
+    id: JobId,
+    epoch: u32,
+    last_iter: &mut Option<usize>,
+    up: &mut Upstream,
+    conn: &mut TcpStream,
+) -> PumpEnd {
+    loop {
+        match up.poll() {
+            Ok(None) => {
+                if state.is_shutdown() {
+                    return PumpEnd::Shutdown;
+                }
+            }
+            Ok(Some(Message::Progress { stat, .. })) => {
+                // Replay filter: after a resume the re-solve restarts at
+                // iteration 0 and (being seeded) replays the same
+                // trajectory; forward only iterations this stream has
+                // not already delivered, under the router's epoch.
+                if last_iter.is_some_and(|last| stat.iter <= last) {
+                    continue;
+                }
+                *last_iter = Some(stat.iter);
+                if send(conn, &Message::Progress { id, epoch, stat }).is_err() {
+                    return PumpEnd::ClientGone;
+                }
+            }
+            Ok(Some(Message::QueuePos { position, depth, .. })) => {
+                if send(conn, &Message::QueuePos { id, position, depth }).is_err() {
+                    return PumpEnd::ClientGone;
+                }
+            }
+            Ok(Some(Message::Done(mut out))) => {
+                out.id = id; // the client knows its router-assigned id
+                state.mark_done(id);
+                return PumpEnd::Done(send(conn, &Message::Done(out)).is_ok());
+            }
+            // A live backend ended the stream without a Done — after a
+            // bounce it answers Subscribe with `unknown job`. The job is
+            // recoverable even though the backend is healthy.
+            Ok(Some(Message::Err { .. })) => return PumpEnd::Lost { backend_dead: false },
+            // Any other frame is a protocol violation from the backend;
+            // treat the stream as lost but leave liveness to the prober.
+            Ok(Some(_)) => return PumpEnd::Lost { backend_dead: false },
+            Err(_) => return PumpEnd::Lost { backend_dead: true },
+        }
+    }
+}

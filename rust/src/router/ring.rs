@@ -1,0 +1,122 @@
+//! Consistent-hash ring over backend indices.
+//!
+//! Each backend contributes `vnodes` points at
+//! `fnv64("{addr}#{v}")`; a key routes to the first point clockwise
+//! (ties broken by backend index so rebuilds are deterministic). The
+//! construction gives the two properties the router leans on:
+//!
+//! * **Determinism** — same up-set, same vnode count → identical ring,
+//!   so every router connection (and a restarted router) routes a given
+//!   [`crate::wire::route_key`] identically.
+//! * **Minimal disruption** — removing a backend deletes only its own
+//!   points; every key that routed to a surviving backend keeps routing
+//!   to it, so one crash never reshuffles the whole fleet's batch
+//!   affinity.
+//!
+//! Both are pinned by the in-module tests and the `tests/router_serving.rs`
+//! property suite.
+
+use crate::wire::codec::fnv64;
+
+/// An immutable routing snapshot: `(point_hash, backend_index)` sorted
+/// by hash. Rebuilt (never mutated) whenever the up-set changes.
+#[derive(Debug, Clone, Default)]
+pub struct HashRing {
+    points: Vec<(u64, usize)>,
+}
+
+impl HashRing {
+    /// Build from `(backend_index, address)` pairs — typically the
+    /// currently-up subset of the configured backends.
+    pub fn build<'a, I>(nodes: I, vnodes: usize) -> Self
+    where
+        I: IntoIterator<Item = (usize, &'a str)>,
+    {
+        let mut points = Vec::new();
+        for (idx, addr) in nodes {
+            for v in 0..vnodes.max(1) {
+                let h = fnv64(format!("{addr}#{v}").as_bytes());
+                points.push((h, idx));
+            }
+        }
+        points.sort_unstable();
+        Self { points }
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.points.is_empty()
+    }
+
+    /// The backend owning `key`: the first ring point at or after it,
+    /// wrapping past the top of the u64 space to the first point.
+    pub fn route(&self, key: u64) -> Option<usize> {
+        if self.points.is_empty() {
+            return None;
+        }
+        let i = self.points.partition_point(|&(h, _)| h < key);
+        let i = if i == self.points.len() { 0 } else { i };
+        Some(self.points[i].1)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn addrs(n: usize) -> Vec<String> {
+        (0..n).map(|i| format!("10.0.0.{i}:7070")).collect()
+    }
+
+    fn ring_over(addrs: &[String], up: &[usize], vnodes: usize) -> HashRing {
+        HashRing::build(up.iter().map(|&i| (i, addrs[i].as_str())), vnodes)
+    }
+
+    #[test]
+    fn empty_ring_routes_nothing() {
+        assert!(HashRing::default().is_empty());
+        assert_eq!(HashRing::default().route(42), None);
+    }
+
+    #[test]
+    fn routing_is_deterministic_and_total() {
+        let a = addrs(3);
+        let r1 = ring_over(&a, &[0, 1, 2], 64);
+        let r2 = ring_over(&a, &[0, 1, 2], 64);
+        let mut hit = [false; 3];
+        for k in 0..4096u64 {
+            let key = k.wrapping_mul(0x9E37_79B9_7F4A_7C15);
+            let b = r1.route(key).unwrap();
+            assert_eq!(Some(b), r2.route(key), "same build → same routes");
+            hit[b] = true;
+        }
+        assert_eq!(hit, [true; 3], "64 vnodes spread 4096 keys over every backend");
+    }
+
+    #[test]
+    fn removing_a_backend_only_moves_its_own_keys() {
+        let a = addrs(4);
+        let full = ring_over(&a, &[0, 1, 2, 3], 64);
+        let without_2 = ring_over(&a, &[0, 1, 3], 64);
+        for k in 0..4096u64 {
+            let key = k.wrapping_mul(0x9E37_79B9_7F4A_7C15).wrapping_add(17);
+            let before = full.route(key).unwrap();
+            let after = without_2.route(key).unwrap();
+            if before != 2 {
+                assert_eq!(before, after, "key {key} moved off a surviving backend");
+            } else {
+                assert_ne!(after, 2);
+            }
+        }
+    }
+
+    #[test]
+    fn wraparound_routes_to_first_point() {
+        let a = addrs(2);
+        let ring = ring_over(&a, &[0, 1], 4);
+        // u64::MAX is ≥ every point with overwhelming likelihood, so it
+        // must wrap to whatever backend owns the lowest point — i.e. the
+        // same answer as key 0 unless a point sits above u64::MAX - 1.
+        assert!(ring.route(u64::MAX).is_some());
+        assert!(ring.route(0).is_some());
+    }
+}

@@ -12,8 +12,9 @@
 //! the test.
 
 use crate::algorithms::SolveOptions;
-use crate::config::ServiceConfig;
+use crate::config::{RouterConfig, ServiceConfig};
 use crate::coordinator::RecoveryService;
+use crate::router::{self, RouterServer};
 use crate::wire::{self, WireClient, WireServer};
 use std::net::SocketAddr;
 use std::path::PathBuf;
@@ -91,6 +92,143 @@ impl Drop for ServiceHarness {
     fn drop(&mut self) {
         // Non-strict on drop: a panicking test must not double-panic in
         // teardown; explicit `shutdown()` is the asserting path.
+        self.teardown(false);
+    }
+}
+
+/// One backend of a [`RouterHarness`]: its service and its (killable)
+/// network face, held separately so a test can crash the wire server
+/// while the service — and any in-flight solve — keeps running.
+struct Backend {
+    service: Option<Arc<RecoveryService>>,
+    server: Option<WireServer>,
+    addr: SocketAddr,
+}
+
+/// A full routed fleet: `n` real backends (each a [`RecoveryService`] +
+/// wire server on an ephemeral port) behind a [`RouterServer`]. Probe
+/// cadence defaults fast (50 ms / 250 ms timeout) so
+/// kill-detect-failover sequences fit a test budget; override via the
+/// `tweak` hook of [`RouterHarness::start_with`].
+pub struct RouterHarness {
+    backends: Vec<Backend>,
+    router: Option<RouterServer>,
+    addr: SocketAddr,
+}
+
+impl RouterHarness {
+    /// Boot `n` backends and a router over them.
+    pub fn start(n: usize, cfg: ServiceConfig, opts: SolveOptions) -> Self {
+        Self::start_with(n, cfg, opts, |_| {})
+    }
+
+    /// [`RouterHarness::start`] with a hook that edits the router config
+    /// after the harness fills in backend addresses and test cadence.
+    pub fn start_with(
+        n: usize,
+        cfg: ServiceConfig,
+        opts: SolveOptions,
+        tweak: impl FnOnce(&mut RouterConfig),
+    ) -> Self {
+        assert!(n >= 1, "a router needs at least one backend");
+        let backends: Vec<Backend> = (0..n)
+            .map(|_| {
+                let service = Arc::new(RecoveryService::start(
+                    cfg,
+                    opts.clone(),
+                    PathBuf::from("artifacts"),
+                ));
+                let server = wire::serve(service.clone(), "127.0.0.1:0", 64)
+                    .expect("bind backend wire server on an ephemeral port");
+                let addr = server.addr();
+                Backend { service: Some(service), server: Some(server), addr }
+            })
+            .collect();
+        let mut rcfg = RouterConfig::default();
+        rcfg.backends = backends.iter().map(|b| b.addr.to_string()).collect();
+        rcfg.probe_ms = 50;
+        rcfg.probe_timeout_ms = 250;
+        tweak(&mut rcfg);
+        let router =
+            router::serve(rcfg, "127.0.0.1:0").expect("bind router on an ephemeral port");
+        let addr = router.addr();
+        Self { backends, router: Some(router), addr }
+    }
+
+    /// The router's listen address — what clients connect to.
+    pub fn addr(&self) -> SocketAddr {
+        self.addr
+    }
+
+    /// A fresh client connected *through the router*.
+    pub fn client(&self) -> WireClient {
+        WireClient::connect(self.addr).expect("connect to harness router")
+    }
+
+    /// A client connected directly to backend `i` (bypassing the
+    /// router) — the conformance baseline.
+    pub fn backend_client(&self, i: usize) -> WireClient {
+        WireClient::connect(self.backends[i].addr).expect("connect to harness backend")
+    }
+
+    pub fn backend_addr(&self, i: usize) -> SocketAddr {
+        self.backends[i].addr
+    }
+
+    /// White-box access to backend `i`'s in-process service (metrics,
+    /// cancel — e.g. to reap a ghost job after a failover test).
+    pub fn backend_service(&self, i: usize) -> &RecoveryService {
+        self.backends[i].service.as_ref().expect("backend service is live")
+    }
+
+    /// White-box access to the router (metrics, backend up/down state).
+    pub fn router(&self) -> &RouterServer {
+        self.router.as_ref().expect("harness is live")
+    }
+
+    /// Crash backend `i` as the router sees it: shut down its wire
+    /// server (connections drop, further connects are refused) while its
+    /// service keeps running — so a mid-solve job behaves exactly like
+    /// one lost to a machine partition, without blocking teardown.
+    pub fn kill_backend_server(&mut self, i: usize) {
+        if let Some(server) = self.backends[i].server.take() {
+            server.shutdown();
+        }
+    }
+
+    /// Deterministic teardown: router first (relays join), then each
+    /// backend's wire server, then its service; asserts nothing leaked.
+    pub fn shutdown(mut self) {
+        self.teardown(true);
+    }
+
+    fn teardown(&mut self, strict: bool) {
+        if let Some(router) = self.router.take() {
+            router.shutdown();
+        }
+        for b in &mut self.backends {
+            if let Some(server) = b.server.take() {
+                server.shutdown();
+            }
+            if let Some(service) = b.service.take() {
+                match Arc::try_unwrap(service) {
+                    Ok(service) => service.shutdown(),
+                    Err(_leaked) => {
+                        if strict {
+                            panic!(
+                                "backend service Arc still referenced after shutdown \
+                                 (a handler thread leaked)"
+                            );
+                        }
+                    }
+                }
+            }
+        }
+    }
+}
+
+impl Drop for RouterHarness {
+    fn drop(&mut self) {
         self.teardown(false);
     }
 }

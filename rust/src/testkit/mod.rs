@@ -8,7 +8,7 @@
 
 pub mod harness;
 
-pub use harness::ServiceHarness;
+pub use harness::{RouterHarness, ServiceHarness};
 
 use crate::rng::XorShift128Plus;
 

@@ -12,6 +12,9 @@
 //! let id = client.submit(&spec).unwrap();
 //! for event in client.watch(id).unwrap() {
 //!     match event.unwrap() {
+//!         lpcs::wire::WatchEvent::Queued { position, depth } => {
+//!             eprintln!("queued at {position}/{depth}")
+//!         }
 //!         lpcs::wire::WatchEvent::Progress(st) => {
 //!             eprintln!("iter {} resid² {:.3e}", st.iter, st.resid_nsq)
 //!         }
@@ -19,8 +22,13 @@
 //!     }
 //! }
 //! ```
+//!
+//! Rejections keep their wire [`ErrCode`]: [`WireClient::submit`]
+//! returns a typed [`WireError`], so callers (the router above all) can
+//! distinguish queue-full backpressure from validation failures without
+//! parsing strings.
 
-use super::codec::{self, FrameReader, Message, PollError, WireJobSpec};
+use super::codec::{self, BackendStats, ErrCode, FrameReader, Message, PollError, WireJobSpec};
 use crate::algorithms::IterStat;
 use crate::coordinator::{JobId, JobOutcome, JobSpec};
 use anyhow::{anyhow, bail, Context, Result};
@@ -39,12 +47,51 @@ const READ_TICK: Duration = Duration::from_millis(100);
 /// One event from a [`Watch`] stream.
 #[derive(Debug, Clone)]
 pub enum WatchEvent {
+    /// The job is still queued: `position` jobs will be taken before
+    /// it, out of `depth` currently queued. Re-pushed whenever the
+    /// position moves.
+    Queued { position: u64, depth: u64 },
     /// A per-iteration stat (possibly with gaps: the server sheds the
     /// oldest stats rather than stall a worker on a slow consumer).
     Progress(IterStat),
     /// The terminal outcome — always the last event of a stream.
     Done(JobOutcome),
 }
+
+/// A failed wire request with its rejection category preserved. The
+/// vendored `anyhow` shim flattens errors to strings, so typed codes
+/// must survive in the error value itself — this is that value.
+/// Implements `std::error::Error`, so `?` still lifts it into
+/// `anyhow::Result` contexts at call sites that don't care.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct WireError {
+    /// The server's typed rejection code; `None` for client-local
+    /// failures (connect, timeout, frame corruption).
+    pub code: Option<ErrCode>,
+    pub msg: String,
+}
+
+impl WireError {
+    /// True iff the server rejected with exactly this code.
+    pub fn is(&self, code: ErrCode) -> bool {
+        self.code == Some(code)
+    }
+
+    fn local(e: impl std::fmt::Display) -> Self {
+        Self { code: None, msg: e.to_string() }
+    }
+}
+
+impl std::fmt::Display for WireError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self.code {
+            Some(code) => write!(f, "{code}: {}", self.msg),
+            None => f.write_str(&self.msg),
+        }
+    }
+}
+
+impl std::error::Error for WireError {}
 
 /// A blocking client for the wire protocol (one request at a time; open
 /// several clients for concurrent streams).
@@ -61,6 +108,24 @@ pub struct WireClient {
 impl WireClient {
     pub fn connect(addr: impl ToSocketAddrs) -> Result<Self> {
         let stream = TcpStream::connect(addr).context("connecting to wire server")?;
+        Self::over(stream)
+    }
+
+    /// [`WireClient::connect`] with a connect deadline — what the
+    /// router's health prober uses, so one dead backend can never stall
+    /// a probe round behind a long kernel connect timeout.
+    pub fn connect_timeout(addr: impl ToSocketAddrs, timeout: Duration) -> Result<Self> {
+        let sa = addr
+            .to_socket_addrs()
+            .context("resolving wire server address")?
+            .next()
+            .context("wire server address resolved to nothing")?;
+        let stream =
+            TcpStream::connect_timeout(&sa, timeout).context("connecting to wire server")?;
+        Self::over(stream)
+    }
+
+    fn over(stream: TcpStream) -> Result<Self> {
         stream.set_nodelay(true).ok();
         stream.set_read_timeout(Some(READ_TICK)).context("setting read timeout")?;
         Ok(Self { stream, reader: FrameReader::new(), poisoned: false })
@@ -95,13 +160,24 @@ impl WireClient {
     }
 
     /// Submit a job; the spec's operator ships by content (dense entries
-    /// or mask points), so the server runs exactly this problem.
-    pub fn submit(&mut self, spec: &JobSpec) -> Result<JobId> {
-        self.send(&Message::Submit(WireJobSpec::from_spec(spec)))?;
-        match self.recv(REPLY_TIMEOUT)? {
+    /// or mask points), so the server runs exactly this problem. The
+    /// error keeps the server's typed [`ErrCode`] (queue-full vs.
+    /// validation vs. backend-down) — see [`WireError`].
+    pub fn submit(&mut self, spec: &JobSpec) -> std::result::Result<JobId, WireError> {
+        self.submit_wire(&WireJobSpec::from_spec(spec))
+    }
+
+    /// [`WireClient::submit`] for a spec already in wire form (what a
+    /// router holds — forwarding must not round-trip through operator
+    /// reconstruction).
+    pub fn submit_wire(&mut self, ws: &WireJobSpec) -> std::result::Result<JobId, WireError> {
+        self.send(&Message::Submit(ws.clone())).map_err(WireError::local)?;
+        match self.recv(REPLY_TIMEOUT).map_err(WireError::local)? {
             Message::Submitted { id } => Ok(id),
-            Message::Err { msg } => bail!("submit rejected: {msg}"),
-            other => bail!("unexpected reply to Submit: {other:?}"),
+            Message::Err { code, msg } => {
+                Err(WireError { code: Some(code), msg: format!("submit rejected: {msg}") })
+            }
+            other => Err(WireError::local(format!("unexpected reply to Submit: {other:?}"))),
         }
     }
 
@@ -115,7 +191,7 @@ impl WireClient {
     /// [`WireClient::watch`] with an explicit per-event timeout.
     pub fn watch_timeout(&mut self, id: JobId, per_event: Duration) -> Result<Watch<'_>> {
         self.send(&Message::Subscribe { id })?;
-        Ok(Watch { client: self, per_event, finished: false, clean: false })
+        Ok(Watch { client: self, per_event, finished: false, clean: false, last_iter: None })
     }
 
     /// Ask the service to stop a job at its next iteration boundary.
@@ -124,7 +200,7 @@ impl WireClient {
         self.send(&Message::Cancel { id })?;
         match self.recv(REPLY_TIMEOUT)? {
             Message::Cancelled { id: got, accepted } if got == id => Ok(accepted),
-            Message::Err { msg } => bail!("cancel rejected: {msg}"),
+            Message::Err { code, msg } => bail!("cancel rejected ({code}): {msg}"),
             other => bail!("unexpected reply to Cancel: {other:?}"),
         }
     }
@@ -134,8 +210,19 @@ impl WireClient {
         self.send(&Message::MetricsReq)?;
         match self.recv(REPLY_TIMEOUT)? {
             Message::Metrics { snapshot } => Ok(snapshot),
-            Message::Err { msg } => bail!("metrics rejected: {msg}"),
+            Message::Err { code, msg } => bail!("metrics rejected ({code}): {msg}"),
             other => bail!("unexpected reply to Metrics: {other:?}"),
+        }
+    }
+
+    /// One load sample (`StatsReq` → `Stats`): queue depth/capacity and
+    /// worker count — the router's health probe.
+    pub fn stats(&mut self) -> Result<BackendStats> {
+        self.send(&Message::StatsReq)?;
+        match self.recv(REPLY_TIMEOUT)? {
+            Message::Stats(st) => Ok(st),
+            Message::Err { code, msg } => bail!("stats rejected ({code}): {msg}"),
+            other => bail!("unexpected reply to StatsReq: {other:?}"),
         }
     }
 }
@@ -156,6 +243,12 @@ pub struct Watch<'a> {
     /// The server ended the stream (Done or stream-ending Err frame):
     /// the connection is at a frame boundary and safe to reuse.
     clean: bool,
+    /// Highest iteration already yielded — the resume filter. After a
+    /// router failover the upstream job restarts from iteration 0 (the
+    /// re-solve is deterministic, so it replays the same trajectory);
+    /// already-seen iterations are swallowed here so consumers always
+    /// observe one strictly monotone stream across a backend bounce.
+    last_iter: Option<usize>,
 }
 
 impl Iterator for Watch<'_> {
@@ -165,28 +258,41 @@ impl Iterator for Watch<'_> {
         if self.finished {
             return None;
         }
-        match self.client.recv(self.per_event) {
-            Ok(Message::Progress { stat, .. }) => Some(Ok(WatchEvent::Progress(stat))),
-            Ok(Message::Done(out)) => {
-                self.finished = true;
-                self.clean = true;
-                Some(Ok(WatchEvent::Done(out.into_outcome())))
-            }
-            Ok(Message::Err { msg }) => {
-                // The server answers a bad Subscribe with one Err frame
-                // and sends nothing further for it.
-                self.finished = true;
-                self.clean = true;
-                Some(Err(anyhow!("watch failed: {msg}")))
-            }
-            Ok(other) => {
-                self.finished = true;
-                Some(Err(anyhow!("unexpected frame in watch stream: {other:?}")))
-            }
-            Err(e) => {
-                self.finished = true;
-                Some(Err(e))
-            }
+        loop {
+            return match self.client.recv(self.per_event) {
+                Ok(Message::Progress { stat, .. }) => {
+                    if self.last_iter.is_some_and(|last| stat.iter <= last) {
+                        continue; // replayed iteration after a resume
+                    }
+                    self.last_iter = Some(stat.iter);
+                    Some(Ok(WatchEvent::Progress(stat)))
+                }
+                Ok(Message::QueuePos { position, depth, .. }) => {
+                    Some(Ok(WatchEvent::Queued { position, depth }))
+                }
+                Ok(Message::Done(out)) => {
+                    self.finished = true;
+                    self.clean = true;
+                    Some(Ok(WatchEvent::Done(out.into_outcome())))
+                }
+                Ok(Message::Err { code, msg }) => {
+                    // The server answers a bad Subscribe with one Err
+                    // frame and sends nothing further for it.
+                    self.finished = true;
+                    self.clean = true;
+                    let we =
+                        WireError { code: Some(code), msg: format!("watch failed: {msg}") };
+                    Some(Err(we.into()))
+                }
+                Ok(other) => {
+                    self.finished = true;
+                    Some(Err(anyhow!("unexpected frame in watch stream: {other:?}")))
+                }
+                Err(e) => {
+                    self.finished = true;
+                    Some(Err(e))
+                }
+            };
         }
     }
 }

@@ -22,11 +22,21 @@
 //! | 3   | `Subscribe`  | client → server  | job id |
 //! | 4   | `Cancel`     | client → server  | job id |
 //! | 5   | `Cancelled`  | server → client  | job id + accepted flag |
-//! | 6   | `Progress`   | server → client  | job id + [`IterStat`] |
+//! | 6   | `Progress`   | server → client  | job id + epoch + [`IterStat`] |
 //! | 7   | `Done`       | server → client  | [`WireOutcome`] |
 //! | 8   | `MetricsReq` | client → server  | (empty) |
 //! | 9   | `Metrics`    | server → client  | snapshot string |
-//! | 10  | `Err`        | server → client  | error string |
+//! | 10  | `Err`        | server → client  | [`ErrCode`] (u16) + error string |
+//! | 11  | `QueuePos`   | server → client  | job id + queue position + queue depth |
+//! | 12  | `StatsReq`   | client → server  | (empty) |
+//! | 13  | `Stats`      | server → client  | [`BackendStats`] |
+//!
+//! The `epoch` on `Progress` is 0 for frames straight off a server; the
+//! router bumps it each time it re-subscribes upstream after a backend
+//! bounce, so a `watch` client can tell "same stream, resumed" from
+//! consecutive iterations. `QueuePos` frames are pushed while a
+//! subscribed job is still `Queued`. `StatsReq`/`Stats` is the cheap
+//! health/load probe the router polls backends with.
 
 use crate::algorithms::qniht::RequantMode;
 use crate::algorithms::{IterStat, SolveResult};
@@ -39,8 +49,11 @@ use std::io::Read;
 use std::sync::Arc;
 use std::time::Duration;
 
-/// Protocol version carried in every frame header.
-pub const WIRE_VERSION: u8 = 1;
+/// Protocol version carried in every frame header. v2 added typed
+/// `Err` codes, the `Progress` epoch, and the `QueuePos`/`Stats`
+/// frames; v1 peers are rejected with `BadVersion` (surfaced as
+/// [`ErrCode::VersionMismatch`] by the server).
+pub const WIRE_VERSION: u8 = 2;
 /// version + tag + payload-length bytes.
 pub const HEADER_LEN: usize = 6;
 /// Trailing checksum bytes.
@@ -58,6 +71,32 @@ pub fn checksum(bytes: &[u8]) -> u32 {
         h = h.wrapping_mul(0x0100_0193);
     }
     h
+}
+
+/// 64-bit FNV-1a — the content hash behind the server's operator cache
+/// and the router's consistent-hash ring (see [`route_key`]).
+pub fn fnv64(bytes: &[u8]) -> u64 {
+    let mut h: u64 = 0xCBF2_9CE4_8422_2325;
+    for &b in bytes {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x0000_0100_0000_01B3);
+    }
+    h
+}
+
+/// The routing key for a wire job: a content hash over exactly the
+/// spec fields that enter `BatchKey` on a backend — the operator bytes
+/// (the same encoding the server's op cache hashes), sparsity, solver
+/// and engine. Deliberately excludes `y` and `seed`, so every job that
+/// would batch together on one node hashes to the same key and the
+/// router's consistent-hash ring sends them to the same backend.
+pub fn route_key(spec: &WireJobSpec) -> u64 {
+    let mut b = Vec::new();
+    encode_problem(&mut b, &spec.problem);
+    put_u64(&mut b, spec.s as u64);
+    put_solver(&mut b, &spec.solver);
+    put_engine(&mut b, spec.engine);
+    fnv64(&b)
 }
 
 /// Why a buffer failed to decode. `Truncated` is recoverable (read more
@@ -96,22 +135,127 @@ impl std::fmt::Display for DecodeError {
 
 impl std::error::Error for DecodeError {}
 
+/// Machine-readable rejection category carried on every `Err` frame
+/// (u16 on the wire). Stable: codes are append-only so routers and
+/// clients built against different minor revisions keep agreeing on
+/// what a rejection means.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum ErrCode {
+    /// The job spec failed validation (shape mismatch, bad bits, ...).
+    Validation,
+    /// A bounded queue or in-flight table is full — back off and retry;
+    /// the apollographql/router `queue_is_full` rejection model: reject
+    /// at admission instead of buffering unboundedly.
+    QueueFull,
+    /// No backend is available to take the job (router-side).
+    BackendDown,
+    /// The peer speaks a different [`WIRE_VERSION`].
+    VersionMismatch,
+    /// Subscribe/Cancel named a job id this server never issued.
+    UnknownJob,
+    /// The peer sent a frame that is illegal in this direction/state.
+    Protocol,
+    /// Anything else (I/O to a backend, service shutting down, ...).
+    Internal,
+}
+
+impl ErrCode {
+    /// The u16 wire form.
+    pub fn code(self) -> u16 {
+        match self {
+            Self::Validation => 1,
+            Self::QueueFull => 2,
+            Self::BackendDown => 3,
+            Self::VersionMismatch => 4,
+            Self::UnknownJob => 5,
+            Self::Protocol => 6,
+            Self::Internal => 7,
+        }
+    }
+
+    /// Inverse of [`ErrCode::code`]; `None` for codes this build does
+    /// not know (the decoder rejects those frames as malformed).
+    pub fn from_code(c: u16) -> Option<Self> {
+        Some(match c {
+            1 => Self::Validation,
+            2 => Self::QueueFull,
+            3 => Self::BackendDown,
+            4 => Self::VersionMismatch,
+            5 => Self::UnknownJob,
+            6 => Self::Protocol,
+            7 => Self::Internal,
+            _ => return None,
+        })
+    }
+
+    /// Stable lowercase name, used in rendered errors and metrics.
+    pub fn name(self) -> &'static str {
+        match self {
+            Self::Validation => "validation",
+            Self::QueueFull => "queue-full",
+            Self::BackendDown => "backend-down",
+            Self::VersionMismatch => "version-mismatch",
+            Self::UnknownJob => "unknown-job",
+            Self::Protocol => "protocol",
+            Self::Internal => "internal",
+        }
+    }
+
+    /// All variants, in wire-code order (test matrices iterate this).
+    pub const ALL: [ErrCode; 7] = [
+        ErrCode::Validation,
+        ErrCode::QueueFull,
+        ErrCode::BackendDown,
+        ErrCode::VersionMismatch,
+        ErrCode::UnknownJob,
+        ErrCode::Protocol,
+        ErrCode::Internal,
+    ];
+}
+
+impl std::fmt::Display for ErrCode {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(self.name())
+    }
+}
+
+/// Load snapshot a server answers `StatsReq` with — the router's
+/// health probe and admission control read these.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct BackendStats {
+    /// Jobs currently waiting in the bounded queue.
+    pub queue_depth: u64,
+    /// Capacity of that queue (admission headroom = capacity − depth).
+    pub queue_capacity: u64,
+    /// Worker threads serving the queue. A router answers with its
+    /// count of *up backends* here.
+    pub workers: u64,
+}
+
 /// Everything that crosses the wire.
 #[derive(Debug, Clone, PartialEq)]
 pub enum Message {
     /// Submit a job (client → server); answered by `Submitted` or `Err`.
     Submit(WireJobSpec),
     Submitted { id: JobId },
-    /// Stream a job's progress; the connection then carries `Progress`
-    /// frames until exactly one `Done` (or an immediate `Err`).
+    /// Stream a job's progress; the connection then carries `QueuePos`/
+    /// `Progress` frames until exactly one `Done` (or an immediate
+    /// `Err`).
     Subscribe { id: JobId },
     Cancel { id: JobId },
     Cancelled { id: JobId, accepted: bool },
-    Progress { id: JobId, stat: IterStat },
+    /// One iteration of a running job. `epoch` is 0 from a direct
+    /// server; the router bumps it per upstream re-subscription.
+    Progress { id: JobId, epoch: u32, stat: IterStat },
     Done(WireOutcome),
     MetricsReq,
     Metrics { snapshot: String },
-    Err { msg: String },
+    Err { code: ErrCode, msg: String },
+    /// Pushed while a subscribed job is still queued: how many jobs sit
+    /// ahead of it, and the total queue depth.
+    QueuePos { id: JobId, position: u64, depth: u64 },
+    StatsReq,
+    Stats(BackendStats),
 }
 
 impl Message {
@@ -127,6 +271,9 @@ impl Message {
             Self::MetricsReq => 8,
             Self::Metrics { .. } => 9,
             Self::Err { .. } => 10,
+            Self::QueuePos { .. } => 11,
+            Self::StatsReq => 12,
+            Self::Stats(_) => 13,
         }
     }
 }
@@ -317,6 +464,10 @@ fn put_bool(b: &mut Vec<u8>, v: bool) {
     b.push(v as u8);
 }
 
+fn put_u16(b: &mut Vec<u8>, v: u16) {
+    b.extend_from_slice(&v.to_le_bytes());
+}
+
 fn put_u32(b: &mut Vec<u8>, v: u32) {
     b.extend_from_slice(&v.to_le_bytes());
 }
@@ -384,6 +535,10 @@ impl<'a> Rd<'a> {
             1 => Ok(true),
             _ => Err(DecodeError::Malformed("bool byte not 0/1")),
         }
+    }
+
+    fn u16(&mut self) -> Result<u16, DecodeError> {
+        Ok(u16::from_le_bytes(self.take(2)?.try_into().unwrap()))
     }
 
     fn u32(&mut self) -> Result<u32, DecodeError> {
@@ -672,14 +827,29 @@ pub fn try_encode(msg: &Message) -> Result<Vec<u8>, DecodeError> {
             put_u64(&mut payload, *id);
             put_bool(&mut payload, *accepted);
         }
-        Message::Progress { id, stat } => {
+        Message::Progress { id, epoch, stat } => {
             put_u64(&mut payload, *id);
+            put_u32(&mut payload, *epoch);
             put_stat(&mut payload, stat);
         }
         Message::Done(out) => put_outcome(&mut payload, out),
         Message::MetricsReq => {}
         Message::Metrics { snapshot } => put_str(&mut payload, snapshot),
-        Message::Err { msg } => put_str(&mut payload, msg),
+        Message::Err { code, msg } => {
+            put_u16(&mut payload, code.code());
+            put_str(&mut payload, msg);
+        }
+        Message::QueuePos { id, position, depth } => {
+            put_u64(&mut payload, *id);
+            put_u64(&mut payload, *position);
+            put_u64(&mut payload, *depth);
+        }
+        Message::StatsReq => {}
+        Message::Stats(st) => {
+            put_u64(&mut payload, st.queue_depth);
+            put_u64(&mut payload, st.queue_capacity);
+            put_u64(&mut payload, st.workers);
+        }
     }
     if payload.len() > MAX_PAYLOAD {
         return Err(DecodeError::TooLarge(payload.len()));
@@ -734,11 +904,22 @@ pub fn decode(buf: &[u8]) -> Result<(Message, usize), DecodeError> {
         3 => Message::Subscribe { id: r.u64()? },
         4 => Message::Cancel { id: r.u64()? },
         5 => Message::Cancelled { id: r.u64()?, accepted: r.bool()? },
-        6 => Message::Progress { id: r.u64()?, stat: rd_stat(&mut r)? },
+        6 => Message::Progress { id: r.u64()?, epoch: r.u32()?, stat: rd_stat(&mut r)? },
         7 => Message::Done(rd_outcome(&mut r)?),
         8 => Message::MetricsReq,
         9 => Message::Metrics { snapshot: r.string()? },
-        10 => Message::Err { msg: r.string()? },
+        10 => {
+            let code = ErrCode::from_code(r.u16()?)
+                .ok_or(DecodeError::Malformed("unknown err code"))?;
+            Message::Err { code, msg: r.string()? }
+        }
+        11 => Message::QueuePos { id: r.u64()?, position: r.u64()?, depth: r.u64()? },
+        12 => Message::StatsReq,
+        13 => Message::Stats(BackendStats {
+            queue_depth: r.u64()?,
+            queue_capacity: r.u64()?,
+            workers: r.u64()?,
+        }),
         t => return Err(DecodeError::UnknownTag(t)),
     };
     r.finish()?;
@@ -831,11 +1012,14 @@ mod tests {
             Message::Subscribe { id: u64::MAX },
             Message::Cancel { id: 0 },
             Message::Cancelled { id: 3, accepted: true },
-            Message::Progress { id: 9, stat: stat(4) },
+            Message::Progress { id: 9, epoch: 2, stat: stat(4) },
             Message::MetricsReq,
             Message::Metrics { snapshot: "submitted=1".into() },
             Message::Metrics { snapshot: String::new() },
-            Message::Err { msg: "queue full".into() },
+            Message::Err { code: ErrCode::QueueFull, msg: "queue full".into() },
+            Message::QueuePos { id: 11, position: 3, depth: 9 },
+            Message::StatsReq,
+            Message::Stats(BackendStats { queue_depth: 5, queue_capacity: 256, workers: 2 }),
         ] {
             let frame = encode(&msg);
             let (back, used) = decode(&frame).unwrap();
@@ -886,8 +1070,29 @@ mod tests {
     }
 
     #[test]
+    fn err_codes_round_trip_and_unknown_codes_are_malformed() {
+        for code in ErrCode::ALL {
+            assert_eq!(ErrCode::from_code(code.code()), Some(code));
+            let frame = encode(&Message::Err { code, msg: "x".into() });
+            let (back, _) = decode(&frame).unwrap();
+            assert_eq!(back, Message::Err { code, msg: "x".into() });
+        }
+        // An Err frame carrying a code this build does not know must be
+        // rejected as malformed, not mapped to some arbitrary variant.
+        let mut frame = vec![WIRE_VERSION, 10];
+        let mut payload = Vec::new();
+        put_u16(&mut payload, 999);
+        put_str(&mut payload, "future code");
+        frame.extend_from_slice(&(payload.len() as u32).to_le_bytes());
+        frame.extend_from_slice(&payload);
+        let sum = checksum(&frame);
+        frame.extend_from_slice(&sum.to_le_bytes());
+        assert_eq!(decode(&frame), Err(DecodeError::Malformed("unknown err code")));
+    }
+
+    #[test]
     fn every_truncation_is_rejected_without_panicking() {
-        let msg = Message::Progress { id: 1, stat: stat(3) };
+        let msg = Message::Progress { id: 1, epoch: 0, stat: stat(3) };
         let frame = encode(&msg);
         for cut in 0..frame.len() {
             assert_eq!(
@@ -907,9 +1112,11 @@ mod tests {
         let sum = checksum(&frame);
         frame.extend_from_slice(&sum.to_le_bytes());
         assert!(matches!(decode(&frame), Err(DecodeError::Malformed(_))));
-        // A string whose length prefix exceeds the payload.
+        // A string whose length prefix exceeds the payload (valid err
+        // code first, so the failure is the string read, not the code).
         let mut frame = vec![WIRE_VERSION, 10];
-        frame.extend_from_slice(&4u32.to_le_bytes());
+        frame.extend_from_slice(&6u32.to_le_bytes());
+        frame.extend_from_slice(&ErrCode::Validation.code().to_le_bytes());
         frame.extend_from_slice(&1000u32.to_le_bytes());
         let sum = checksum(&frame);
         frame.extend_from_slice(&sum.to_le_bytes());

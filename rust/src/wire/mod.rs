@@ -24,14 +24,20 @@
 //! `Recovery::service_dispatch` for every [`crate::solver::SolverKind`]
 //! and operator (dense and matrix-free MRI alike) — pinned end to end by
 //! `tests/wire_serving.rs` on a [`crate::testkit::harness::ServiceHarness`].
+//!
+//! The [`crate::router`] tier speaks this same protocol on both of its
+//! faces: v2 frames carry typed [`ErrCode`]s, a resume epoch on
+//! `Progress`, queue-position pushes while a job is `Queued`, and the
+//! `StatsReq`/`Stats` load probe the router's health checker polls.
 
 pub mod client;
 pub mod codec;
 pub mod server;
 
-pub use client::{Watch, WatchEvent, WireClient};
+pub use client::{Watch, WatchEvent, WireClient, WireError};
 pub use codec::{
-    checksum, decode, encode, try_encode, DecodeError, FrameReader, Message, PollError,
-    WireJobSpec, WireOutcome, WireProblem, WireResult, WIRE_VERSION,
+    checksum, decode, encode, fnv64, route_key, try_encode, BackendStats, DecodeError, ErrCode,
+    FrameReader, Message, PollError, WireJobSpec, WireOutcome, WireProblem, WireResult,
+    WIRE_VERSION,
 };
 pub use server::{serve, WireServer};

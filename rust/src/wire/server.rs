@@ -16,8 +16,12 @@
 //! — wire jobs amortize quantize+pack passes exactly like in-process
 //! jobs sharing a handle.
 
-use super::codec::{self, FrameReader, Message, PollError, WireJobSpec};
-use crate::coordinator::{JobId, ProgressEvent, ProgressSub, RecoveryService};
+use super::codec::{
+    self, fnv64, BackendStats, ErrCode, FrameReader, Message, PollError, WireJobSpec,
+};
+use crate::coordinator::{
+    JobId, Priority, ProgressEvent, ProgressSub, RecoveryService, SubmitError,
+};
 use crate::linalg::Mat;
 use crate::mri::PartialFourierOp;
 use anyhow::{Context, Result};
@@ -35,15 +39,6 @@ const POLL_TICK: Duration = Duration::from_millis(100);
 /// A peer that cannot absorb a frame for this long is declared dead
 /// (the relay drops the subscription; the job keeps running).
 const WRITE_TIMEOUT: Duration = Duration::from_secs(5);
-
-fn fnv64(bytes: &[u8]) -> u64 {
-    let mut h: u64 = 0xCBF2_9CE4_8422_2325;
-    for &b in bytes {
-        h ^= b as u64;
-        h = h.wrapping_mul(0x0000_0100_0000_01B3);
-    }
-    h
-}
 
 /// Content-addressed operator cache: same bytes → same `Arc` → same
 /// [`crate::coordinator::BatchKey`] operator identity. Entries are
@@ -252,22 +247,45 @@ fn handle_conn(
             Err(PollError::Closed) | Err(PollError::Io(_)) => return,
             Err(PollError::Decode(e)) => {
                 // Corrupt stream: best-effort error frame, then drop the
-                // connection (framing can no longer be trusted).
-                let _ = send(&mut conn, &Message::Err { msg: format!("protocol error: {e}") });
+                // connection (framing can no longer be trusted). A
+                // version mismatch gets its own code so mixed-revision
+                // fleets diagnose themselves.
+                let code = match e {
+                    codec::DecodeError::BadVersion(_) => ErrCode::VersionMismatch,
+                    _ => ErrCode::Protocol,
+                };
+                let _ =
+                    send(&mut conn, &Message::Err { code, msg: format!("protocol error: {e}") });
                 return;
             }
         };
         let ok = match msg {
             Message::Submit(ws) => {
-                let reply = match build_spec(ws, &ops).and_then(|spec| service.submit(spec)) {
-                    Ok(id) => Message::Submitted { id },
-                    Err(e) => Message::Err { msg: format!("{e:#}") },
+                let reply = match build_spec(ws, &ops) {
+                    Err(e) => Message::Err {
+                        code: ErrCode::Validation,
+                        msg: format!("{e:#}"),
+                    },
+                    Ok(spec) => match service.try_submit(spec, Priority::Normal) {
+                        Ok(id) => Message::Submitted { id },
+                        Err(e) => {
+                            let code = match e {
+                                SubmitError::Invalid(_) => ErrCode::Validation,
+                                SubmitError::QueueFull => ErrCode::QueueFull,
+                                SubmitError::Closed => ErrCode::Internal,
+                            };
+                            Message::Err { code, msg: format!("{e}") }
+                        }
+                    },
                 };
                 send(&mut conn, &reply).is_ok()
             }
             Message::Subscribe { id } => match service.subscribe(id, sub_depth) {
-                None => send(&mut conn, &Message::Err { msg: format!("unknown job {id}") })
-                    .is_ok(),
+                None => send(
+                    &mut conn,
+                    &Message::Err { code: ErrCode::UnknownJob, msg: format!("unknown job {id}") },
+                )
+                .is_ok(),
                 Some(sub) => match relay(&sub, id, &mut conn, &service, &shutdown) {
                     RelayEnd::Done => true,
                     RelayEnd::Disconnected | RelayEnd::Shutdown => return,
@@ -278,15 +296,33 @@ fn handle_conn(
                 send(&mut conn, &Message::Cancelled { id, accepted }).is_ok()
             }
             Message::MetricsReq => {
-                let snapshot = service.metrics().snapshot();
+                // Instantaneous queue depth rides along with the counter
+                // snapshot — same line, same format discipline.
+                let snapshot = format!(
+                    "{} queue_depth={}",
+                    service.metrics().snapshot(),
+                    service.queue_depth()
+                );
                 send(&mut conn, &Message::Metrics { snapshot }).is_ok()
             }
+            Message::StatsReq => send(
+                &mut conn,
+                &Message::Stats(BackendStats {
+                    queue_depth: service.queue_depth() as u64,
+                    queue_capacity: service.queue_capacity() as u64,
+                    workers: service.worker_count() as u64,
+                }),
+            )
+            .is_ok(),
             // Server-bound connections must never carry server→client
             // frames; answer once and keep the (still well-framed)
             // connection alive.
             _ => send(
                 &mut conn,
-                &Message::Err { msg: "unexpected server-bound frame".into() },
+                &Message::Err {
+                    code: ErrCode::Protocol,
+                    msg: "unexpected server-bound frame".into(),
+                },
             )
             .is_ok(),
         };
@@ -308,7 +344,11 @@ enum RelayEnd {
 /// Pump one subscription onto the socket. The subscription queue is
 /// bounded with drop-oldest overflow, so however slow this relay (or its
 /// peer) is, the worker thread never blocks — stats are shed here, and
-/// the terminal outcome always arrives.
+/// the terminal outcome always arrives. While the job is still
+/// `Queued`, poll ticks push `QueuePos` frames (only when the position
+/// moves), so a subscribed client watches its job walk up the queue.
+/// Progress frames carry epoch 0 — the router is the only party that
+/// restarts streams and bumps epochs.
 fn relay(
     sub: &ProgressSub,
     id: JobId,
@@ -316,10 +356,11 @@ fn relay(
     service: &RecoveryService,
     shutdown: &AtomicBool,
 ) -> RelayEnd {
+    let mut last_pos: Option<(u64, u64)> = None;
     loop {
         match sub.recv(POLL_TICK) {
             Some(ProgressEvent::Stat(stat)) => {
-                if send(conn, &Message::Progress { id, stat }).is_err() {
+                if send(conn, &Message::Progress { id, epoch: 0, stat }).is_err() {
                     sub.detach();
                     service.metrics().disconnects.fetch_add(1, Ordering::Relaxed);
                     return RelayEnd::Disconnected;
@@ -341,6 +382,19 @@ fn relay(
                 if shutdown.load(Ordering::SeqCst) {
                     sub.detach();
                     return RelayEnd::Shutdown;
+                }
+                if let Some(position) = service.queue_position(id) {
+                    let pos = (position as u64, service.queue_depth() as u64);
+                    if last_pos != Some(pos) {
+                        last_pos = Some(pos);
+                        let frame =
+                            Message::QueuePos { id, position: pos.0, depth: pos.1 };
+                        if send(conn, &frame).is_err() {
+                            sub.detach();
+                            service.metrics().disconnects.fetch_add(1, Ordering::Relaxed);
+                            return RelayEnd::Disconnected;
+                        }
+                    }
                 }
             }
         }

@@ -1,0 +1,465 @@
+//! End-to-end routed-serving conformance on a `testkit::RouterHarness`
+//! (real backends + a real `RouterServer`, all on ephemeral ports):
+//!
+//! * every servable dense `SolverKind` × engine pair — and matrix-free
+//!   MRI, f32 and low-precision — submitted THROUGH THE ROUTER over two
+//!   backends is **bit-identical** to `Recovery::service_dispatch` (the
+//!   same bar `tests/wire_serving.rs` pins for a single server);
+//! * batch affinity is provable: jobs sharing a `route_key` (same Φ,
+//!   solver, engine, sparsity — differing seeds) all land on ONE
+//!   backend and actually batch there;
+//! * a watch stream survives the owning backend dying mid-solve: the
+//!   router resubmits to the survivor and the client sees one strictly
+//!   monotone stream ending in exactly one `Done`;
+//! * admission control rejects with typed [`ErrCode::QueueFull`] — both
+//!   when the router's in-flight table saturates and when a probed
+//!   backend queue crosses `queue_limit` — and never buffers the job;
+//! * the consistent-hash ring is deterministic and minimally disruptive
+//!   under membership change (property-tested over random fleets).
+
+use lpcs::algorithms::{IterStat, SolveOptions};
+use lpcs::config::{EngineKind, ServiceConfig};
+use lpcs::coordinator::{JobOutcome, JobSpec, JobState, ProblemHandle};
+use lpcs::mri::{self, MriConfig, MriProblem};
+use lpcs::rng::XorShift128Plus;
+use lpcs::router::HashRing;
+use lpcs::solver::{Problem, Recovery, SolverKind};
+use lpcs::testkit::{self, RouterHarness};
+use lpcs::wire::{ErrCode, Watch, WatchEvent};
+use lpcs::Mat;
+use std::sync::atomic::Ordering;
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+fn planted(m: usize, n: usize, s: usize, seed: u64) -> (Arc<Mat>, Vec<f32>) {
+    let mut rng = XorShift128Plus::new(seed);
+    let phi = Mat::from_fn(m, n, |_, _| rng.gaussian_f32() / (m as f32).sqrt());
+    let mut x = vec![0.0f32; n];
+    for i in rng.choose_k(n, s) {
+        x[i] = 2.0 * rng.gaussian_f32().signum() + 0.3 * rng.gaussian_f32();
+    }
+    let y = phi.matvec(&x);
+    (Arc::new(phi), y)
+}
+
+/// Drain a watch stream asserting the protocol invariants — identical
+/// discipline to `tests/wire_serving.rs`, now applied across a router
+/// hop: strictly increasing iterations, `Queued` only before the solve,
+/// exactly one `Done`.
+fn collect_stream(watch: Watch<'_>) -> (Vec<IterStat>, JobOutcome) {
+    let mut stats: Vec<IterStat> = Vec::new();
+    let mut done = None;
+    for event in watch {
+        match event.expect("stream event") {
+            WatchEvent::Queued { .. } => {
+                assert!(done.is_none() && stats.is_empty(), "Queued after the solve started");
+            }
+            WatchEvent::Progress(st) => {
+                assert!(done.is_none(), "Progress after Done");
+                stats.push(st);
+            }
+            WatchEvent::Done(out) => {
+                assert!(done.is_none(), "second Done");
+                done = Some(out);
+            }
+        }
+    }
+    let done = done.expect("stream must end in exactly one Done");
+    for w in stats.windows(2) {
+        assert!(w[0].iter < w[1].iter, "monotone stream: {} then {}", w[0].iter, w[1].iter);
+    }
+    (stats, done)
+}
+
+/// The dense servable matrix (the pairs `tests/service_matrix.rs` and
+/// `tests/wire_serving.rs` pin; XLA engines need real PJRT bindings).
+fn dense_matrix() -> Vec<(SolverKind, EngineKind)> {
+    vec![
+        (SolverKind::Niht, EngineKind::NativeDense),
+        (SolverKind::Iht, EngineKind::NativeDense),
+        (SolverKind::Cosamp, EngineKind::NativeDense),
+        (SolverKind::Fista { lambda: None, debias: true }, EngineKind::NativeDense),
+        (SolverKind::qniht_fixed(2, 8), EngineKind::NativeQuant),
+        (SolverKind::qniht_fixed(4, 8), EngineKind::NativeQuant),
+        (SolverKind::qniht_fixed(8, 8), EngineKind::NativeQuant),
+        (SolverKind::qniht_fixed(2, 8), EngineKind::FpgaModel),
+        (SolverKind::qniht_fixed(8, 8), EngineKind::FpgaModel),
+    ]
+}
+
+#[test]
+fn every_dense_pair_routed_over_two_backends_matches_the_facade_bit_for_bit() {
+    let h = RouterHarness::start(
+        2,
+        ServiceConfig { workers: 2, queue_capacity: 64, max_batch: 4, ..Default::default() },
+        SolveOptions::default(),
+    );
+    let cases = dense_matrix();
+    let total = cases.len() as u64;
+    for (case, (solver, engine)) in cases.into_iter().enumerate() {
+        let (phi, y) = planted(96, 192, 5, 500 + case as u64);
+        let seed = 80 + case as u64;
+
+        let direct = Recovery::problem(Problem::new(phi.clone(), y.clone(), 5))
+            .solver(solver)
+            .engine(engine)
+            .seed(seed)
+            .service_dispatch()
+            .run()
+            .unwrap_or_else(|e| panic!("{} on {}: direct: {e:#}", solver.name(), engine.name()));
+
+        let mut client = h.client();
+        let id = client
+            .submit(
+                &JobSpec::builder(ProblemHandle::new(phi), y, 5)
+                    .solver(solver)
+                    .engine(engine)
+                    .seed(seed)
+                    .build(),
+            )
+            .unwrap_or_else(|e| panic!("{} on {}: submit: {e}", solver.name(), engine.name()));
+        let (_stats, out) = collect_stream(client.watch(id).unwrap());
+
+        assert_eq!(out.state, JobState::Done, "{} on {}: {:?}", solver.name(), engine.name(), out.error);
+        let served = out.result.expect("done jobs carry a result");
+        assert_eq!(
+            served.x,
+            direct.x,
+            "{} on {}: routed x̂ must be bit-identical to the facade",
+            solver.name(),
+            engine.name()
+        );
+        assert_eq!(served.iterations, direct.iterations, "{} on {}", solver.name(), engine.name());
+        assert_eq!(served.converged, direct.converged, "{} on {}", solver.name(), engine.name());
+    }
+    let m = h.router().metrics();
+    assert_eq!(m.routed.load(Ordering::Relaxed), total, "every case was placed");
+    assert_eq!(
+        m.backend(0).routed.load(Ordering::Relaxed) + m.backend(1).routed.load(Ordering::Relaxed),
+        total,
+        "per-backend counters account for every placement"
+    );
+    assert_eq!(m.rejected_full.load(Ordering::Relaxed), 0);
+    assert_eq!(m.rejected_down.load(Ordering::Relaxed), 0);
+    h.shutdown();
+}
+
+#[test]
+fn matrix_free_mri_jobs_routed_match_the_facade_bit_for_bit() {
+    // Operators ship by content (mask points) through BOTH hops —
+    // client→router→backend — and the backend must still run the
+    // client's exact math, f32 and low-precision alike.
+    let h = RouterHarness::start(
+        2,
+        ServiceConfig { workers: 2, queue_capacity: 64, max_batch: 4, ..Default::default() },
+        SolveOptions::default(),
+    );
+    let p = MriProblem::build(&MriConfig { resolution: 16, ..Default::default() }, 5).unwrap();
+    for (case, bits) in [None, Some(8u8), Some(2)].into_iter().enumerate() {
+        let seed = 90 + case as u64;
+        let direct_problem = match bits {
+            None => Problem::with_op(p.op.clone(), p.y.clone(), p.s),
+            Some(b) => mri::lowprec_problem(p.op.clone(), &p.y, p.s, b, seed),
+        };
+        let direct = Recovery::problem(direct_problem)
+            .solver(SolverKind::Niht)
+            .engine(EngineKind::NativeDense)
+            .seed(seed)
+            .service_dispatch()
+            .run()
+            .unwrap_or_else(|e| panic!("bits={bits:?}: direct: {e:#}"));
+
+        let handle = match bits {
+            None => ProblemHandle::partial_fourier(p.op.clone()),
+            Some(b) => ProblemHandle::low_prec_fourier(p.op.clone(), b),
+        };
+        let mut client = h.client();
+        let id = client
+            .submit(
+                &JobSpec::builder(handle, p.y.clone(), p.s)
+                    .engine(EngineKind::NativeDense)
+                    .solver(SolverKind::Niht)
+                    .seed(seed)
+                    .build(),
+            )
+            .unwrap_or_else(|e| panic!("bits={bits:?}: submit: {e}"));
+        let (_stats, out) = collect_stream(client.watch(id).unwrap());
+        assert_eq!(out.state, JobState::Done, "bits={bits:?}: {:?}", out.error);
+        let served = out.result.unwrap();
+        assert_eq!(served.x, direct.x, "bits={bits:?}: routed x̂ ≠ facade x̂");
+        assert_eq!(served.iterations, direct.iterations, "bits={bits:?}");
+    }
+    h.shutdown();
+}
+
+#[test]
+fn same_route_key_jobs_land_on_one_backend_and_batch_there() {
+    // Twelve jobs sharing Φ/solver/engine/sparsity (only seeds differ —
+    // `route_key` excludes seed and y) must all consistent-hash to the
+    // SAME backend, where they amortize quantize+pack by batching —
+    // the whole point of affinity routing.
+    let h = RouterHarness::start(
+        2,
+        ServiceConfig { workers: 2, queue_capacity: 64, max_batch: 8, ..Default::default() },
+        SolveOptions::default().with_tol(0.0).with_max_iters(300),
+    );
+    let (phi, y) = planted(96, 192, 5, 777);
+    let mut client = h.client();
+    let ids: Vec<_> = (0..12)
+        .map(|k| {
+            client
+                .submit(
+                    &JobSpec::builder(ProblemHandle::new(phi.clone()), y.clone(), 5)
+                        .engine(EngineKind::NativeDense)
+                        .seed(1000 + k)
+                        .build(),
+                )
+                .expect("routed submit")
+        })
+        .collect();
+    for id in ids {
+        let (_stats, out) = collect_stream(client.watch(id).unwrap());
+        assert_eq!(out.state, JobState::Done, "{:?}", out.error);
+    }
+
+    let m = h.router().metrics();
+    let routed: Vec<u64> =
+        (0..2).map(|i| m.backend(i).routed.load(Ordering::Relaxed)).collect();
+    assert_eq!(routed.iter().sum::<u64>(), 12);
+    assert!(
+        routed.contains(&12) && routed.contains(&0),
+        "same-route_key jobs must all land on one backend, got {routed:?}"
+    );
+    let owner = routed.iter().position(|&r| r == 12).unwrap();
+    let sm = h.backend_service(owner).metrics();
+    assert_eq!(sm.submitted.load(Ordering::Relaxed), 12);
+    assert_eq!(sm.batched_jobs.load(Ordering::Relaxed), 12);
+    let batches = sm.batches.load(Ordering::Relaxed);
+    assert!(
+        (1..12).contains(&batches),
+        "co-routed jobs must share batches: 12 jobs in {batches} batches"
+    );
+    assert_eq!(
+        h.backend_service(1 - owner).metrics().submitted.load(Ordering::Relaxed),
+        0,
+        "the other backend never sees this key"
+    );
+    h.shutdown();
+}
+
+#[test]
+fn watch_stream_survives_a_backend_loss_mid_solve() {
+    let mut h = RouterHarness::start(
+        2,
+        ServiceConfig { workers: 1, queue_capacity: 8, max_batch: 1, max_wait_ms: 0, ..Default::default() },
+        // tol 0 + huge budget: the job cannot finish on its own inside
+        // the test window — only the relayed cancel ends it.
+        SolveOptions::default().with_tol(0.0).with_max_iters(150_000),
+    );
+    let (phi, y) = planted(256, 2048, 4, 41);
+    let spec = JobSpec::builder(ProblemHandle::new(phi), y, 4)
+        .engine(EngineKind::NativeDense)
+        .seed(9)
+        .build();
+    let mut client = h.client();
+    let id = client.submit(&spec).unwrap();
+    let owner = (0..2)
+        .find(|&i| h.router().metrics().backend(i).routed.load(Ordering::Relaxed) == 1)
+        .expect("exactly one backend owns the job");
+
+    let mut watch = client.watch(id).unwrap();
+    let mut iters: Vec<usize> = Vec::new();
+    while iters.len() < 2 {
+        match watch.next().expect("job must not finish on its own").unwrap() {
+            WatchEvent::Queued { .. } => {}
+            WatchEvent::Progress(st) => iters.push(st.iter),
+            WatchEvent::Done(out) => panic!("finished before the kill: {out:?}"),
+        }
+    }
+    // Partition the owning backend: its wire server dies (connections
+    // drop, reconnects refused) while its service — and the now-ghost
+    // solve — keeps running, exactly like a machine loss.
+    h.kill_backend_server(owner);
+
+    // The relay must detect the loss, resubmit to the survivor and
+    // resume the stream (observable as the `resumed` counter).
+    let deadline = Instant::now() + Duration::from_secs(30);
+    while h.router().metrics().resumed.load(Ordering::Relaxed) == 0 {
+        assert!(Instant::now() < deadline, "router must resume the stream onto the survivor");
+        std::thread::sleep(Duration::from_millis(20));
+    }
+
+    // The resumed job still honors cancel through the router…
+    let mut canceller = h.client();
+    assert!(canceller.cancel(id).unwrap(), "resumed job accepts cancellation");
+    // …and the stream stays monotone to its single Done, which can only
+    // come from the survivor: the owner's network face is gone.
+    let mut done = None;
+    for event in watch {
+        match event.unwrap() {
+            WatchEvent::Queued { .. } => {}
+            WatchEvent::Progress(st) => iters.push(st.iter),
+            WatchEvent::Done(out) => {
+                assert!(done.is_none(), "second Done");
+                done = Some(out);
+            }
+        }
+    }
+    let out = done.expect("stream ends in exactly one Done despite the loss");
+    assert_eq!(out.state, JobState::Done, "{:?}", out.error);
+    assert!(!out.result.unwrap().converged, "cancelled resume reports non-convergence");
+    assert!(iters.windows(2).all(|w| w[0] < w[1]), "monotone across the failover: {iters:?}");
+
+    let m = h.router().metrics();
+    assert!(m.resumed.load(Ordering::Relaxed) >= 1);
+    assert!(m.backend_down_events.load(Ordering::Relaxed) >= 1, "the loss was recorded");
+    assert!(m.backend(owner).down_events.load(Ordering::Relaxed) >= 1);
+    assert!(
+        m.backend(1 - owner).resumed.load(Ordering::Relaxed) >= 1,
+        "the survivor hosts the resume"
+    );
+
+    // Reap the ghost: the killed backend's service still grinds the
+    // original submission (its first job — backend-local id 1).
+    assert!(h.backend_service(owner).cancel(1), "ghost job is still running");
+    h.backend_service(owner)
+        .wait(1, Duration::from_secs(120))
+        .expect("ghost completes after cancel");
+    h.shutdown();
+}
+
+#[test]
+fn saturated_inflight_table_rejects_typed_and_drains() {
+    let h = RouterHarness::start_with(
+        1,
+        ServiceConfig { workers: 1, queue_capacity: 8, max_batch: 1, max_wait_ms: 0, ..Default::default() },
+        SolveOptions::default().with_tol(0.0).with_max_iters(150_000),
+        |c| c.max_inflight = 1,
+    );
+    let (phi, y) = planted(256, 2048, 4, 51);
+    let spec = JobSpec::builder(ProblemHandle::new(phi), y, 4)
+        .engine(EngineKind::NativeDense)
+        .seed(11)
+        .build();
+    let mut holder = h.client();
+    let id = holder.submit(&spec).unwrap();
+
+    // Table full: the second submit is refused with the TYPED code —
+    // never queued router-side, never forwarded.
+    let mut second = h.client();
+    let err = second.submit(&spec).unwrap_err();
+    assert!(err.is(ErrCode::QueueFull), "typed queue-full rejection, got: {err}");
+    assert!(err.msg.contains("in-flight"), "{err}");
+    assert_eq!(h.router().metrics().rejected_full.load(Ordering::Relaxed), 1);
+    assert_eq!(h.router().state().inflight(), 1);
+    assert_eq!(
+        h.backend_service(0).metrics().submitted.load(Ordering::Relaxed),
+        1,
+        "the rejected job never reached a backend"
+    );
+
+    // The router answers the ops frames on its own behalf: metrics in
+    // the service snapshot discipline, StatsReq with table occupancy.
+    let snap = second.metrics().unwrap();
+    assert!(snap.contains("rejected_full=1"), "{snap}");
+    let st = second.stats().unwrap();
+    assert_eq!((st.queue_depth, st.queue_capacity, st.workers), (1, 1, 1), "{st:?}");
+
+    // Draining the slot (Done relayed to a watcher) re-opens admission.
+    assert!(second.cancel(id).unwrap());
+    let (_stats, out) = collect_stream(holder.watch(id).unwrap());
+    assert_eq!(out.state, JobState::Done, "{:?}", out.error);
+    assert_eq!(h.router().state().inflight(), 0, "Done drains the in-flight table");
+    let id2 = second.submit(&spec).expect("admission reopens once the table drains");
+    assert!(second.cancel(id2).unwrap());
+    let (_stats, out2) = collect_stream(second.watch(id2).unwrap());
+    assert_eq!(out2.state, JobState::Done, "{:?}", out2.error);
+    h.shutdown();
+}
+
+#[test]
+fn probed_backend_queue_limit_gates_admission_with_typed_rejection() {
+    let h = RouterHarness::start_with(
+        1,
+        ServiceConfig { workers: 1, queue_capacity: 8, max_batch: 1, max_wait_ms: 0, ..Default::default() },
+        SolveOptions::default().with_tol(0.0).with_max_iters(150_000),
+        |c| c.queue_limit = 1,
+    );
+    let (phi, y) = planted(256, 2048, 4, 71);
+    let spec = JobSpec::builder(ProblemHandle::new(phi), y, 4)
+        .engine(EngineKind::NativeDense)
+        .seed(13)
+        .build();
+    let mut client = h.client();
+    let a = client.submit(&spec).unwrap();
+    // Let the lone worker take job A so B lands in an empty queue.
+    let deadline = Instant::now() + Duration::from_secs(30);
+    while h.backend_service(0).queue_depth() > 0 {
+        assert!(Instant::now() < deadline, "worker must pick up the first job");
+        std::thread::sleep(Duration::from_millis(10));
+    }
+    // …and let a fresh probe observe the now-empty queue, so B is not
+    // bounced off a stale depth sample taken while A still sat queued.
+    let deadline = Instant::now() + Duration::from_secs(30);
+    while h.router().state().backends[0].queue_depth.load(Ordering::Relaxed) > 0 {
+        assert!(Instant::now() < deadline, "a probe must observe the drained queue");
+        std::thread::sleep(Duration::from_millis(10));
+    }
+    let b = client.submit(&spec).unwrap();
+    // The health probe carries the backend's queue depth back to the
+    // router; once it crosses `queue_limit`, admission closes.
+    let deadline = Instant::now() + Duration::from_secs(30);
+    while h.router().state().backends[0].queue_depth.load(Ordering::Relaxed) < 1 {
+        assert!(Instant::now() < deadline, "a probe must observe the queued job");
+        std::thread::sleep(Duration::from_millis(10));
+    }
+    let err = client.submit(&spec).unwrap_err();
+    assert!(err.is(ErrCode::QueueFull), "typed queue-limit rejection, got: {err}");
+    assert!(err.msg.contains("queue limit"), "{err}");
+    assert!(h.router().metrics().rejected_full.load(Ordering::Relaxed) >= 1);
+
+    // Drain: cancel both jobs (B may still be queued — a queued cancel
+    // stops it at its first iteration boundary) and watch them out.
+    assert!(client.cancel(a).unwrap());
+    let (_stats, oa) = collect_stream(client.watch(a).unwrap());
+    assert_eq!(oa.state, JobState::Done, "{:?}", oa.error);
+    assert!(client.cancel(b).unwrap());
+    let (_stats, ob) = collect_stream(client.watch(b).unwrap());
+    assert_eq!(ob.state, JobState::Done, "{:?}", ob.error);
+    h.shutdown();
+}
+
+#[test]
+fn hash_ring_is_deterministic_and_minimally_disruptive() {
+    // Over random fleets: (a) the same membership always yields the
+    // same placement (what makes affinity stable across router
+    // restarts); (b) removing one backend moves ONLY that backend's
+    // keys (what keeps a down event from scattering every job's
+    // affinity fleet-wide).
+    testkit::forall("hash-ring-fleet", 0x51C6_A11, 60, |rng, _| {
+        let n = 2 + rng.below(5);
+        let vnodes = 1 + rng.below(64);
+        let addrs: Vec<String> = (0..n)
+            .map(|i| format!("10.{}.{}.{}:7070", rng.below(200), rng.below(200), i))
+            .collect();
+        let build = |alive: &[usize]| {
+            HashRing::build(alive.iter().map(|&i| (i, addrs[i].as_str())), vnodes)
+        };
+        let all: Vec<usize> = (0..n).collect();
+        let ring = build(&all);
+        let again = build(&all);
+        let gone = rng.below(n);
+        let survivors: Vec<usize> = (0..n).filter(|&i| i != gone).collect();
+        let shrunk = build(&survivors);
+        for _ in 0..256 {
+            let key = rng.next_u64();
+            let before = ring.route(key).expect("non-empty ring routes every key");
+            assert_eq!(again.route(key), Some(before), "same fleet ⇒ same placement");
+            let after = shrunk.route(key).expect("survivors still route");
+            assert_ne!(after, gone, "a removed backend receives nothing");
+            if before != gone {
+                assert_eq!(after, before, "removal moves only the dead backend's keys");
+            }
+        }
+    });
+}

@@ -14,8 +14,8 @@ use lpcs::rng::XorShift128Plus;
 use lpcs::solver::SolverKind;
 use lpcs::testkit;
 use lpcs::wire::{
-    checksum, decode, encode, DecodeError, Message, WireJobSpec, WireOutcome, WireProblem,
-    WireResult, WIRE_VERSION,
+    checksum, decode, encode, route_key, BackendStats, DecodeError, ErrCode, Message,
+    WireJobSpec, WireOutcome, WireProblem, WireResult, WIRE_VERSION,
 };
 
 fn rand_stat(rng: &mut XorShift128Plus) -> IterStat {
@@ -108,7 +108,7 @@ fn rand_outcome(rng: &mut XorShift128Plus) -> WireOutcome {
 }
 
 fn rand_message(rng: &mut XorShift128Plus) -> Message {
-    match rng.below(10) {
+    match rng.below(13) {
         0 => Message::Submit(WireJobSpec {
             problem: rand_problem(rng),
             y: rng.gaussian_vec(rng.below(32)), // includes empty
@@ -127,7 +127,11 @@ fn rand_message(rng: &mut XorShift128Plus) -> Message {
         2 => Message::Subscribe { id: rng.next_u64() },
         3 => Message::Cancel { id: rng.next_u64() },
         4 => Message::Cancelled { id: rng.next_u64(), accepted: rng.below(2) == 1 },
-        5 => Message::Progress { id: rng.next_u64(), stat: rand_stat(rng) },
+        5 => Message::Progress {
+            id: rng.next_u64(),
+            epoch: rng.below(8) as u32, // router resume epochs
+            stat: rand_stat(rng),
+        },
         6 => Message::Done(rand_outcome(rng)),
         7 => Message::MetricsReq,
         8 => Message::Metrics {
@@ -137,9 +141,21 @@ fn rand_message(rng: &mut XorShift128Plus) -> Message {
                 format!("submitted={} completed={}", rng.below(100), rng.below(100))
             },
         },
-        _ => Message::Err {
+        9 => Message::Err {
+            code: ErrCode::ALL[rng.below(ErrCode::ALL.len())],
             msg: if rng.below(4) == 0 { String::new() } else { "queue full".into() },
         },
+        10 => Message::QueuePos {
+            id: rng.next_u64(),
+            position: rng.below(1000) as u64,
+            depth: rng.below(1000) as u64,
+        },
+        11 => Message::StatsReq,
+        _ => Message::Stats(BackendStats {
+            queue_depth: rng.below(1000) as u64,
+            queue_capacity: rng.below(1000) as u64,
+            workers: rng.below(64) as u64,
+        }),
     }
 }
 
@@ -280,8 +296,9 @@ fn garbage_buffers_never_panic_the_decoder() {
         let n = rng.below(64);
         let garbage: Vec<u8> = (0..n).map(|_| (rng.next_u64() & 0xFF) as u8).collect();
         let _ = decode(&garbage); // any Err is fine; a panic is not
-        // And garbage wearing a valid header prefix.
-        let mut framed = vec![WIRE_VERSION, (rng.below(12)) as u8];
+        // And garbage wearing a valid header prefix (tag range covers
+        // every real tag plus unknown ones).
+        let mut framed = vec![WIRE_VERSION, (rng.below(16)) as u8];
         framed.extend_from_slice(&(n as u32).to_le_bytes());
         framed.extend_from_slice(&garbage);
         framed.extend_from_slice(&checksum(&framed).to_le_bytes());
@@ -344,4 +361,44 @@ fn wire_spec_reconstructs_the_in_process_spec() {
         seed: 0,
     };
     assert!(lying.into_spec().unwrap_err().to_string().contains("4x4"));
+}
+
+#[test]
+fn route_key_tracks_batch_identity_not_payload() {
+    // The router's placement key must be blind to everything that does
+    // NOT affect batchability (y, seed) and sensitive to everything
+    // that does (operator content, s, solver, engine) — that is what
+    // makes same-BatchKey jobs land on one backend and keep batching.
+    testkit::forall("route-key-batch-identity", 0x40F7E, 100, |rng, _| {
+        let base = WireJobSpec {
+            problem: rand_problem(rng),
+            y: rng.gaussian_vec(rng.below(32)),
+            s: 1 + rng.below(16),
+            solver: rand_solver(rng),
+            engine: EngineKind::NativeDense,
+            seed: rng.next_u64(),
+        };
+        let key = route_key(&base);
+        assert_eq!(key, route_key(&base), "deterministic");
+
+        let mut other_payload = base.clone();
+        other_payload.y = rng.gaussian_vec(other_payload.y.len() + 1);
+        other_payload.seed = base.seed.wrapping_add(1);
+        assert_eq!(key, route_key(&other_payload), "y and seed are not batch identity");
+
+        let mut other_s = base.clone();
+        other_s.s += 1;
+        assert_ne!(key, route_key(&other_s), "sparsity is batch identity");
+
+        let mut other_engine = base.clone();
+        other_engine.engine = EngineKind::NativeQuant;
+        assert_ne!(key, route_key(&other_engine), "engine is batch identity");
+
+        let mut other_solver = base.clone();
+        other_solver.solver = match base.solver {
+            SolverKind::Niht => SolverKind::Cosamp,
+            _ => SolverKind::Niht,
+        };
+        assert_ne!(key, route_key(&other_solver), "solver is batch identity");
+    });
 }

@@ -55,6 +55,11 @@ fn collect_stream(watch: Watch<'_>) -> (Vec<IterStat>, JobOutcome) {
     let mut done = None;
     for event in watch {
         match event.expect("stream event") {
+            WatchEvent::Queued { .. } => {
+                // Positions are only pushed while the job still sits in
+                // the queue — strictly before its first iteration.
+                assert!(done.is_none() && stats.is_empty(), "Queued after the solve started");
+            }
             WatchEvent::Progress(st) => {
                 assert!(done.is_none(), "Progress after Done");
                 stats.push(st);
@@ -205,6 +210,7 @@ fn cancel_over_the_wire_stops_the_job_which_still_completes() {
     let mut seen = 0;
     while seen < 2 {
         match watch.next().expect("job must not finish on its own").unwrap() {
+            WatchEvent::Queued { .. } => {}
             WatchEvent::Progress(_) => seen += 1,
             WatchEvent::Done(out) => panic!("finished before cancel: {out:?}"),
         }
@@ -315,6 +321,7 @@ fn client_killed_mid_stream_drops_subscription_but_job_completes() {
         let mut seen = 0;
         while seen < 2 {
             match watch.next().unwrap().unwrap() {
+                WatchEvent::Queued { .. } => {}
                 WatchEvent::Progress(_) => seen += 1,
                 WatchEvent::Done(out) => panic!("finished prematurely: {out:?}"),
             }
@@ -342,6 +349,53 @@ fn client_killed_mid_stream_drops_subscription_but_job_completes() {
     assert_eq!(h.service().metrics().disconnects.load(Ordering::Relaxed), 1);
     // Strict shutdown: joins the accept thread and every connection
     // handler; panics if any thread (and its service Arc) leaked.
+    h.shutdown();
+}
+
+#[test]
+fn queue_position_streams_while_a_job_waits() {
+    // One worker, batch size 1: the second job must sit queued while the
+    // first runs, and its watcher must see `QueuePos` pushes (satellite
+    // of the wire v2 protocol) before the first `Progress`.
+    let h = ServiceHarness::start(
+        ServiceConfig { workers: 1, queue_capacity: 8, max_batch: 1, max_wait_ms: 0, ..Default::default() },
+        SolveOptions::default().with_tol(0.0).with_max_iters(800),
+    );
+    let (phi, y) = planted(256, 2048, 4, 61);
+    let spec = JobSpec::builder(ProblemHandle::new(phi), y, 4)
+        .engine(EngineKind::NativeDense)
+        .seed(5)
+        .build();
+    let mut blocker = h.client();
+    blocker.submit(&spec).unwrap(); // occupies the only worker
+    let mut client = h.client();
+    let id = client.submit(&spec).unwrap();
+
+    let mut queued: Vec<(u64, u64)> = Vec::new();
+    let mut progressed = 0usize;
+    let mut done = None;
+    for event in client.watch(id).unwrap() {
+        match event.unwrap() {
+            WatchEvent::Queued { position, depth } => {
+                assert!(done.is_none() && progressed == 0, "Queued only before the solve");
+                assert!(position < depth, "position {position} out of depth {depth}");
+                queued.push((position, depth));
+            }
+            WatchEvent::Progress(_) => progressed += 1,
+            WatchEvent::Done(out) => done = Some(out),
+        }
+    }
+    let out = done.expect("stream ends in Done");
+    assert_eq!(out.state, JobState::Done, "{:?}", out.error);
+    assert!(progressed > 0, "the queued job eventually runs and streams");
+    assert!(
+        !queued.is_empty(),
+        "a job stuck behind a ~1 s solve must surface at least one queue position"
+    );
+    assert!(
+        queued.windows(2).all(|w| w[0].0 >= w[1].0),
+        "positions never move backwards: {queued:?}"
+    );
     h.shutdown();
 }
 

@@ -1,21 +1,19 @@
 //! Bench: PJRT engine step latency vs the native engines — the cost of
 //! running the AOT JAX/Pallas artifact per NIHT step (compile amortization,
-//! literal marshalling, execute).
+//! literal marshalling, execute) — plus the `obsv` recording overhead on
+//! the serving solve path (budget: <1% of a job's wall time).
 
 use lpcs::algorithms::qniht::{QuantKernel, RequantMode};
 use lpcs::algorithms::NihtKernel;
 use lpcs::benchkit::JsonReporter;
 use lpcs::linalg::Mat;
+use lpcs::obsv::{Histogram, JobLabels, Outcome, ServiceObsv};
 use lpcs::rng::XorShift128Plus;
 use lpcs::runtime::{XlaDenseKernel, XlaQuantKernel};
 use std::path::Path;
 
 fn main() {
     let dir = Path::new("artifacts");
-    if !dir.join("manifest.json").exists() {
-        println!("run `make artifacts` first — skipping runtime bench");
-        return;
-    }
     let (m, n, s) = (256usize, 512usize, 32usize);
     let mut rng = XorShift128Plus::new(1);
     let phi = Mat::from_fn(m, n, |_, _| rng.gaussian_f32() / (m as f32).sqrt());
@@ -39,6 +37,54 @@ fn main() {
     let mut rep = JsonReporter::new("runtime");
     let mut nk = QuantKernel::new(&phi, &y, 8, 8, RequantMode::Fixed, 1);
     rep.run("native quant full_step", 2, 21, || nk.full_step(&x_mid, s));
+
+    // Observability overhead. A served job records into the histograms a
+    // fixed number of times (queue-wait, setup, exec, e2e + outcome), so
+    // the right comparison is a whole solve vs the same solve plus one
+    // job's worth of recording — the delta is the serving-path cost.
+    let hist = Histogram::new();
+    rep.run("obsv hist record x1024", 2, 21, || {
+        let mut acc = 1u64;
+        for _ in 0..1024 {
+            acc = acc.wrapping_mul(6364136223846793005).wrapping_add(1);
+            hist.record(acc % 4_000_000);
+        }
+        acc
+    });
+    let steps = 40usize;
+    let solve = |obsv: Option<&ServiceObsv>| {
+        let labels = JobLabels { solver: "qniht", engine: "native-quant", bits: 8 };
+        if let Some(o) = obsv {
+            o.inflight.add(1);
+            o.on_running(labels, 120);
+        }
+        let mut k = QuantKernel::new(&phi, &y, 8, 8, RequantMode::Fixed, 1);
+        let mut x = x0.clone();
+        if let Some(o) = obsv {
+            o.on_setup(labels, 90);
+        }
+        for _ in 0..steps {
+            x = k.full_step(&x, s).x_next;
+        }
+        if let Some(o) = obsv {
+            o.on_terminal(labels, Outcome::Ok, Some(1_800), 2_000);
+        }
+        x
+    };
+    let obsv = ServiceObsv::new();
+    let bare = rep.run("qniht solve path (bare)", 2, 11, || solve(None));
+    let instr = rep.run("qniht solve path (+obsv recording)", 2, 11, || solve(Some(&obsv)));
+    let delta = (instr.median_s() - bare.median_s()) / bare.median_s() * 100.0;
+    println!("obsv recording overhead on the solve path: {delta:+.3}% (budget <1%)");
+
+    if !dir.join("manifest.json").exists() {
+        println!("run `make artifacts` first — skipping the XLA engine rows");
+        match rep.write_file(".") {
+            Ok(path) => println!("\nwrote {}", path.display()),
+            Err(e) => eprintln!("\nfailed to write BENCH_runtime.json: {e}"),
+        }
+        return;
+    }
 
     // The XLA engines fail cleanly when PJRT is unavailable (the offline
     // xla stub errors at client construction) — record the native rows and

@@ -125,6 +125,12 @@ pub struct ServiceConfig {
     /// Starvation bound for the scheduler: a batch whose oldest job has
     /// waited at least this long dispatches ahead of every cheaper batch.
     pub starvation_ms: u64,
+    /// Let the cost-aware scheduler EWMA-calibrate per-`BatchKey` costs
+    /// from the observed setup/execution timings
+    /// (`sched::CostModel::observe`). `false` freezes the model at its
+    /// static nominal-iteration estimate — what deterministic tests and
+    /// reproducible scheduling traces want.
+    pub calibrate_cost: bool,
 }
 
 impl Default for ServiceConfig {
@@ -136,6 +142,7 @@ impl Default for ServiceConfig {
             max_wait_ms: 5,
             sched_window: 16,
             starvation_ms: 250,
+            calibrate_cost: true,
         }
     }
 }
@@ -316,6 +323,7 @@ impl LpcsConfig {
             "service.max_wait_ms" => self.service.max_wait_ms = vf()? as u64,
             "service.sched_window" => self.service.sched_window = vf()? as usize,
             "service.starvation_ms" => self.service.starvation_ms = vf()? as u64,
+            "service.calibrate_cost" => self.service.calibrate_cost = value == "true",
             "wire.listen" | "listen" => self.wire.listen = value.to_string(),
             "wire.sub_depth" => self.wire.sub_depth = vf()? as usize,
             "router.backends" => {
@@ -518,6 +526,9 @@ mod tests {
         c.set("service.starvation_ms", "100").unwrap();
         assert_eq!(c.service.sched_window, 32);
         assert_eq!(c.service.starvation_ms, 100);
+        assert!(c.service.calibrate_cost, "calibration defaults on");
+        c.set("service.calibrate_cost", "false").unwrap();
+        assert!(!c.service.calibrate_cost);
         c.set("service.sched_window", "0").unwrap();
         assert!(c.validate().is_err());
     }

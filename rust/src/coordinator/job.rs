@@ -586,15 +586,30 @@ impl JobStore {
         self.inner.lock().unwrap().get(&id).and_then(|r| r.progress)
     }
 
-    /// Microseconds since the job was submitted (0 for unknown ids) —
-    /// the age the cost-aware scheduler feeds its starvation bound.
+    /// Microseconds a still-**Queued** job has waited since submit (0 for
+    /// unknown ids *and* for jobs already Running or terminal) — the age
+    /// the cost-aware scheduler feeds its starvation bound. Dispatched
+    /// jobs must not report a growing "age": their true queue wait is
+    /// frozen at the Queued→Running transition (see
+    /// [`JobStore::transition`]) and that is what the queue-wait
+    /// histogram records.
     pub fn queued_age_us(&self, id: JobId) -> u64 {
         self.inner
             .lock()
             .unwrap()
             .get(&id)
+            .filter(|r| r.state == JobState::Queued)
             .map(|r| r.submitted.elapsed().as_micros() as u64)
             .unwrap_or(0)
+    }
+
+    /// Submit/start instants for a job (`None` for unknown ids; the
+    /// second slot is `None` until the job starts running). The worker
+    /// derives execution and end-to-end durations from these *before*
+    /// marking the job terminal, so observability recording is complete
+    /// by the time `wait` callers unblock.
+    pub fn stamps(&self, id: JobId) -> Option<(Instant, Option<Instant>)> {
+        self.inner.lock().unwrap().get(&id).map(|r| (r.submitted, r.started))
     }
 
     /// Ask a job to stop at its next iteration boundary. Returns false if
@@ -615,8 +630,12 @@ impl JobStore {
         self.inner.lock().unwrap().get(&id).map(|r| r.cancel).unwrap_or(false)
     }
 
-    /// Transition enforcing state-machine legality.
-    pub fn transition(&self, id: JobId, next: JobState) {
+    /// Transition enforcing state-machine legality. Entering `Running`
+    /// returns the job's true queue wait (started − submitted), measured
+    /// under the store lock at the instant it is frozen — the sample the
+    /// queue-wait histogram records.
+    pub fn transition(&self, id: JobId, next: JobState) -> Option<Duration> {
+        let mut queue_wait = None;
         let mut g = self.inner.lock().unwrap();
         let r = g.get_mut(&id).unwrap_or_else(|| panic!("unknown job {id}"));
         assert!(
@@ -626,7 +645,11 @@ impl JobStore {
         );
         r.state = next;
         match next {
-            JobState::Running => r.started = Some(Instant::now()),
+            JobState::Running => {
+                let now = Instant::now();
+                r.started = Some(now);
+                queue_wait = Some(now.duration_since(r.submitted));
+            }
             JobState::Done | JobState::Failed => {
                 r.finished = Some(Instant::now());
             }
@@ -643,6 +666,7 @@ impl JobStore {
             drop(g);
             self.done.notify_all();
         }
+        queue_wait
     }
 
     pub fn complete(&self, id: JobId, result: SolveResult) {
@@ -706,6 +730,27 @@ mod tests {
         s.transition(1, JobState::Running);
         s.complete(1, dummy_result());
         assert_eq!(s.state(1), Some(JobState::Done));
+    }
+
+    #[test]
+    fn queued_age_is_zero_once_dispatched_and_wait_is_frozen_at_running() {
+        let s = JobStore::new();
+        s.insert_queued(1);
+        std::thread::sleep(Duration::from_millis(5));
+        assert!(s.queued_age_us(1) > 0, "a queued job ages");
+        let wait = s.transition(1, JobState::Running).expect("Running returns the queue wait");
+        assert!(wait >= Duration::from_millis(4));
+        // Dispatched: age must stop growing (the old behavior returned
+        // elapsed-since-submit forever).
+        assert_eq!(s.queued_age_us(1), 0);
+        let (submitted, started) = s.stamps(1).unwrap();
+        assert_eq!(started.unwrap().duration_since(submitted), wait);
+        s.complete(1, dummy_result());
+        assert_eq!(s.queued_age_us(1), 0);
+        assert_eq!(s.queued_age_us(999), 0);
+        // The outcome's queued_for is the same frozen wait.
+        let out = s.wait(1, Duration::from_millis(10)).unwrap();
+        assert_eq!(out.queued_for, wait);
     }
 
     #[test]

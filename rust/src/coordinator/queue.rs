@@ -208,6 +208,16 @@ impl<T> BoundedQueue<T> {
         g.high.iter().chain(g.normal.iter()).position(pred)
     }
 
+    /// [`BoundedQueue::position_where`] plus the queue depth, read under
+    /// ONE lock acquisition. Reading them in two calls lets a concurrent
+    /// dispatch drain the queue in between, producing an impossible
+    /// `position ≥ depth` pair; this snapshot guarantees
+    /// `position < depth` whenever it returns `Some`.
+    pub fn position_and_depth(&self, pred: impl Fn(&T) -> bool) -> Option<(usize, usize)> {
+        let g = self.inner.lock().unwrap();
+        g.high.iter().chain(g.normal.iter()).position(pred).map(|p| (p, g.len()))
+    }
+
     /// Close: pushes fail, pops drain the remainder then return None.
     pub fn close(&self) {
         self.inner.lock().unwrap().closed = true;
@@ -330,6 +340,67 @@ mod tests {
         assert_eq!(q.position_where(|v| *v == 7), None);
         q.pop_timeout(Duration::from_millis(1)).unwrap();
         assert_eq!(q.position_where(|v| *v == 2), Some(1));
+    }
+
+    #[test]
+    fn position_and_depth_snapshot_is_internally_consistent() {
+        let q = BoundedQueue::new(10);
+        q.try_push(1, Priority::Normal).unwrap();
+        q.try_push(2, Priority::Normal).unwrap();
+        assert_eq!(q.position_and_depth(|v| *v == 2), Some((1, 2)));
+        assert_eq!(q.position_and_depth(|v| *v == 7), None);
+        q.pop_timeout(Duration::from_millis(1)).unwrap();
+        assert_eq!(q.position_and_depth(|v| *v == 2), Some((0, 1)));
+    }
+
+    /// Regression for the wire server's `QueuePos` race: hammer
+    /// submit/drain from two threads while a watcher snapshots a tracked
+    /// item's position — the one-lock snapshot must never report
+    /// `position >= depth` (the two-call read could, whenever a drain
+    /// landed between the calls).
+    #[test]
+    fn position_and_depth_invariant_holds_under_concurrent_submit_drain() {
+        let q = Arc::new(BoundedQueue::new(64));
+        let stop = Arc::new(std::sync::atomic::AtomicBool::new(false));
+
+        let producer = {
+            let (q, stop) = (q.clone(), stop.clone());
+            std::thread::spawn(move || {
+                let mut next = 1i64;
+                while !stop.load(std::sync::atomic::Ordering::Relaxed) {
+                    // Item 0 is the tracked one; keep re-adding it among chaff.
+                    let _ = q.try_push(0, Priority::Normal);
+                    for _ in 0..8 {
+                        let _ = q.try_push(next, Priority::Normal);
+                        next += 1;
+                    }
+                }
+            })
+        };
+        let drainer = {
+            let (q, stop) = (q.clone(), stop.clone());
+            std::thread::spawn(move || {
+                while !stop.load(std::sync::atomic::Ordering::Relaxed) {
+                    let _ = q.drain_upto(5);
+                }
+            })
+        };
+
+        let t0 = Instant::now();
+        let mut observed = 0u64;
+        while t0.elapsed() < Duration::from_millis(200) {
+            if let Some((pos, depth)) = q.position_and_depth(|v| *v == 0) {
+                assert!(
+                    pos < depth,
+                    "snapshot reported position {pos} >= depth {depth}"
+                );
+                observed += 1;
+            }
+        }
+        stop.store(true, std::sync::atomic::Ordering::Relaxed);
+        producer.join().unwrap();
+        drainer.join().unwrap();
+        assert!(observed > 0, "the watcher never saw the tracked item queued");
     }
 
     #[test]

@@ -23,7 +23,7 @@
 //!    snapshot order, whatever the scores say — a job is never overtaken
 //!    by a later job with its key.
 
-use std::collections::VecDeque;
+use std::collections::{HashMap, VecDeque};
 
 use super::batcher::Batch;
 use super::job::{BatchKey, JobId, JobSpec};
@@ -41,10 +41,28 @@ pub struct QueuedJob {
     pub high: bool,
 }
 
+/// Measured per-key batch cost, EWMA-smoothed (microseconds).
+#[derive(Debug, Clone, Copy, Default)]
+struct ObservedCost {
+    setup_us: f64,
+    job_exec_us: f64,
+    samples: u64,
+}
+
 /// Pure cost model in abstract work units (bytes of operand traffic).
 /// Only relative magnitudes matter: the scheduler compares scores, it
 /// never converts them to seconds.
-#[derive(Debug, Clone, Copy)]
+///
+/// With `calibrate` on, the model additionally learns from the service's
+/// recorded timings: [`CostModel::observe`] feeds each executed batch's
+/// measured quantize+pack setup and per-job execution time (the same
+/// samples the [`crate::obsv`] histograms record) into a per-[`BatchKey`]
+/// EWMA, and `setup_cost`/`job_cost` answer from the calibrated estimate
+/// — in real microseconds — once a key has samples, falling back to the
+/// static nominal-iteration estimate for keys never seen. `calibrate`
+/// defaults off (`Default` is the frozen, deterministic static model;
+/// the service enables it per `ServiceConfig::calibrate_cost`).
+#[derive(Debug, Clone)]
 pub struct CostModel {
     /// Work to quantize+pack one entry of Φ (batch setup; dense engines
     /// pay none). Charged once per batch, amortized over its size.
@@ -64,6 +82,14 @@ pub struct CostModel {
     /// [`crate::perfmodel::cpu::measure_decode_fraction`] calibrates it
     /// from the live kernels.
     pub decode_fraction: f64,
+    /// Learn per-key costs from [`CostModel::observe`] samples. Off =
+    /// the model is frozen: observations are discarded and every
+    /// estimate is the static one (what deterministic tests want).
+    pub calibrate: bool,
+    /// EWMA smoothing factor for observations in `(0, 1]`: weight of the
+    /// newest sample. 1.0 = always trust the latest measurement.
+    pub ewma_alpha: f64,
+    observed: HashMap<BatchKey, ObservedCost>,
 }
 
 impl Default for CostModel {
@@ -73,11 +99,54 @@ impl Default for CostModel {
             nominal_iters: 64.0,
             age_credit_per_us: 1.0,
             decode_fraction: 0.3,
+            calibrate: false,
+            ewma_alpha: 0.3,
+            observed: HashMap::new(),
         }
     }
 }
 
 impl CostModel {
+    /// The calibrating variant of the default model (what the service
+    /// workers run unless `service.calibrate_cost=false`).
+    pub fn calibrating() -> Self {
+        Self { calibrate: true, ..Self::default() }
+    }
+
+    /// Feed one executed batch's measured costs: `setup_us` is the batch
+    /// quantize+pack setup (solve start → first iteration), `job_exec_us`
+    /// the mean per-job execution time inside that batch. EWMA-smoothed
+    /// per key; a no-op when the model is frozen. Non-finite or negative
+    /// samples are discarded (a clock hiccup must not poison the model).
+    pub fn observe(&mut self, key: &BatchKey, setup_us: f64, job_exec_us: f64) {
+        if !self.calibrate
+            || !setup_us.is_finite()
+            || !job_exec_us.is_finite()
+            || setup_us < 0.0
+            || job_exec_us < 0.0
+        {
+            return;
+        }
+        let e = self.observed.entry(*key).or_default();
+        e.samples += 1;
+        if e.samples == 1 {
+            e.setup_us = setup_us;
+            e.job_exec_us = job_exec_us;
+        } else {
+            let a = self.ewma_alpha.clamp(f64::EPSILON, 1.0);
+            e.setup_us += a * (setup_us - e.setup_us);
+            e.job_exec_us += a * (job_exec_us - e.job_exec_us);
+        }
+    }
+
+    /// The calibrated `(setup_us, job_exec_us)` estimate for a key, if
+    /// any observations have been folded in.
+    pub fn observed_cost(&self, key: &BatchKey) -> Option<(f64, f64)> {
+        self.observed
+            .get(key)
+            .filter(|o| o.samples > 0)
+            .map(|o| (o.setup_us, o.job_exec_us))
+    }
     /// Bits of Φ streamed per entry per iteration: the quantized width
     /// for QNIHT jobs, f32 for the dense algorithms.
     fn stream_bits(spec: &JobSpec) -> f64 {
@@ -92,6 +161,11 @@ impl CostModel {
     /// Matrix-free operators have no entries to quantize — zero setup
     /// (they are also only servable on the dense engine).
     pub fn setup_cost(&self, spec: &JobSpec) -> f64 {
+        if self.calibrate {
+            if let Some((setup_us, _)) = self.observed_cost(&spec.batch_key()) {
+                return setup_us;
+            }
+        }
         match spec.problem.as_dense() {
             Some(phi) if spec.engine.is_quantized() => {
                 self.setup_per_entry * (phi.rows * phi.cols) as f64
@@ -107,6 +181,11 @@ impl CostModel {
     /// that asymptotic gap is exactly why the scheduler must not price
     /// them like dense jobs of the same shape.
     pub fn job_cost(&self, spec: &JobSpec) -> f64 {
+        if self.calibrate {
+            if let Some((_, job_exec_us)) = self.observed_cost(&spec.batch_key()) {
+                return job_exec_us;
+            }
+        }
         let (m, n) = (spec.problem.m() as f64, spec.problem.n() as f64);
         match spec.problem.as_dense() {
             Some(_) => m * n * Self::stream_bits(spec) / 8.0 * self.nominal_iters,
@@ -409,5 +488,79 @@ mod tests {
     #[test]
     fn empty_snapshot_schedules_nothing() {
         assert!(schedule(vec![], &SchedConfig::default(), &CostModel::default()).is_empty());
+    }
+
+    /// Property: over many randomized noisy timing streams, the
+    /// calibrated estimate converges to the measured mean — within the
+    /// noise band — and always stays inside the observed sample range.
+    #[test]
+    fn calibrated_costs_converge_to_measured_timings() {
+        use crate::rng::XorShift128Plus;
+        let phi = Arc::new(Mat::zeros(4, 8));
+        let spec = job(0, &phi, 4, 0).spec;
+        let key = spec.batch_key();
+        for case in 0..50u64 {
+            let mut rng = XorShift128Plus::new(0xC0_57 ^ case);
+            let true_setup = 500.0 + (rng.next_u64() % 20_000) as f64;
+            let true_exec = 100.0 + (rng.next_u64() % 5_000) as f64;
+            let mut cm = CostModel::calibrating();
+            let (mut lo_s, mut hi_s) = (f64::MAX, f64::MIN);
+            for _ in 0..200 {
+                // ±10% multiplicative noise around the true cost.
+                let mut noise = || 0.9 + 0.2 * (rng.next_u64() % 1000) as f64 / 1000.0;
+                let s = true_setup * noise();
+                let e = true_exec * noise();
+                lo_s = lo_s.min(s);
+                hi_s = hi_s.max(s);
+                cm.observe(&key, s, e);
+            }
+            let got_setup = cm.setup_cost(&spec);
+            let got_exec = cm.job_cost(&spec);
+            assert!(
+                (got_setup - true_setup).abs() <= 0.15 * true_setup,
+                "case {case}: setup {got_setup} vs true {true_setup}"
+            );
+            assert!(
+                (got_exec - true_exec).abs() <= 0.15 * true_exec,
+                "case {case}: exec {got_exec} vs true {true_exec}"
+            );
+            // EWMA of samples can never leave the samples' convex hull.
+            assert!(got_setup >= lo_s && got_setup <= hi_s);
+        }
+    }
+
+    #[test]
+    fn frozen_model_ignores_observations_and_matches_static_estimates() {
+        let phi = Arc::new(Mat::zeros(4, 8));
+        let spec = job(0, &phi, 4, 0).spec;
+        let key = spec.batch_key();
+        let static_model = CostModel::default();
+        let mut frozen = CostModel::default();
+        assert!(!frozen.calibrate, "Default must be the frozen static model");
+        frozen.observe(&key, 1.0, 1.0);
+        assert_eq!(frozen.observed_cost(&key), None, "frozen: observations discarded");
+        assert_eq!(frozen.setup_cost(&spec), static_model.setup_cost(&spec));
+        assert_eq!(frozen.job_cost(&spec), static_model.job_cost(&spec));
+    }
+
+    #[test]
+    fn calibration_is_per_key_and_falls_back_statically_for_unseen_keys() {
+        let phi = Arc::new(Mat::zeros(4, 8));
+        let seen = job(0, &phi, 4, 0).spec;
+        let unseen = job(1, &phi, 2, 0).spec; // different bits → different key
+        let mut cm = CostModel::calibrating();
+        cm.observe(&seen.batch_key(), 777.0, 333.0);
+        assert_eq!(cm.setup_cost(&seen), 777.0);
+        assert_eq!(cm.job_cost(&seen), 333.0);
+        // The 2-bit key has no samples: static estimate, as if frozen.
+        let static_model = CostModel::default();
+        assert_eq!(cm.job_cost(&unseen), static_model.job_cost(&unseen));
+        assert_eq!(cm.setup_cost(&unseen), static_model.setup_cost(&unseen));
+        // Garbage samples are discarded.
+        cm.observe(&seen.batch_key(), f64::NAN, 1.0);
+        cm.observe(&seen.batch_key(), -5.0, 1.0);
+        assert_eq!(cm.setup_cost(&seen), 777.0);
+        // The batch amortization law still applies on the calibrated base.
+        assert!(cm.job_cost_in_batch(&seen, 8) < cm.job_cost(&seen));
     }
 }

@@ -23,12 +23,13 @@ use super::queue::{BoundedQueue, Priority, PushError};
 use super::sched::{self, CostModel, QueuedJob, SchedConfig};
 use crate::algorithms::{IterStat, ObserverSignal, SolveOptions};
 use crate::config::ServiceConfig;
-use crate::solver::{BatchObserver, EngineRegistry, SolveRequest};
+use crate::obsv::{JobLabels, Outcome, ServiceCounters, ServiceObsv};
+use crate::solver::{BatchObserver, EngineRegistry, SolveRequest, SolverKind};
 use anyhow::{anyhow, Result};
 use std::path::PathBuf;
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::Arc;
-use std::time::Duration;
+use std::time::{Duration, Instant};
 
 /// Atomic counters exported by the service.
 #[derive(Debug, Default)]
@@ -61,27 +62,46 @@ pub struct ServiceMetrics {
 }
 
 impl ServiceMetrics {
-    pub fn snapshot(&self) -> String {
-        format!(
-            "submitted={} rejected={} invalid={} completed={} failed={} cancelled={} batches={} mean_batch={:.2} solve_ms={} modeled_ms={} progress_dropped={} disconnects={} pool_contention={}",
-            self.submitted.load(Ordering::Relaxed),
-            self.rejected.load(Ordering::Relaxed),
-            self.invalid.load(Ordering::Relaxed),
-            self.completed.load(Ordering::Relaxed),
-            self.failed.load(Ordering::Relaxed),
-            self.cancelled.load(Ordering::Relaxed),
-            self.batches.load(Ordering::Relaxed),
-            self.batched_jobs.load(Ordering::Relaxed) as f64
-                / self.batches.load(Ordering::Relaxed).max(1) as f64,
-            self.solve_us.load(Ordering::Relaxed) / 1000,
-            self.modeled_us.load(Ordering::Relaxed) / 1000,
-            self.progress_dropped.load(Ordering::Relaxed),
-            self.disconnects.load(Ordering::Relaxed),
+    /// The counters at one instant, as the structured snapshot every
+    /// face plumbs ([`crate::obsv::MetricsSnapshot`]). `queue_depth` is
+    /// left `None`; the wire server fills it in from its atomic
+    /// queue-lock snapshot.
+    pub fn snapshot_struct(&self) -> ServiceCounters {
+        ServiceCounters {
+            submitted: self.submitted.load(Ordering::Relaxed),
+            rejected: self.rejected.load(Ordering::Relaxed),
+            invalid: self.invalid.load(Ordering::Relaxed),
+            completed: self.completed.load(Ordering::Relaxed),
+            failed: self.failed.load(Ordering::Relaxed),
+            cancelled: self.cancelled.load(Ordering::Relaxed),
+            batches: self.batches.load(Ordering::Relaxed),
+            batched_jobs: self.batched_jobs.load(Ordering::Relaxed),
+            solve_us: self.solve_us.load(Ordering::Relaxed),
+            modeled_us: self.modeled_us.load(Ordering::Relaxed),
+            progress_dropped: self.progress_dropped.load(Ordering::Relaxed),
+            disconnects: self.disconnects.load(Ordering::Relaxed),
             // Process-wide kernel-pool lock contention (crate::par), not a
             // per-service counter: the worker pool is shared.
-            crate::par::contention_count(),
-        )
+            pool_contention: crate::par::contention_count(),
+            queue_depth: None,
+        }
     }
+
+    /// The legacy one-line text form (byte-compatible with the
+    /// pre-structured renderer; see [`ServiceCounters::render_legacy`]).
+    pub fn snapshot(&self) -> String {
+        self.snapshot_struct().render_legacy()
+    }
+}
+
+/// Histogram labels for a job: solver × engine × Φ's stored bit width
+/// (32 for the full-precision baselines).
+fn labels_of(spec: &JobSpec) -> JobLabels {
+    let bits = match spec.solver {
+        SolverKind::Qniht { bits_phi, .. } => bits_phi,
+        _ => 32,
+    };
+    JobLabels { solver: spec.solver.name(), engine: spec.engine.name(), bits }
 }
 
 /// Why a submission was refused, as a typed value — the wire server
@@ -119,6 +139,7 @@ pub struct RecoveryService {
     queue: Arc<BoundedQueue<QueueItem>>,
     store: Arc<JobStore>,
     metrics: Arc<ServiceMetrics>,
+    obsv: Arc<ServiceObsv>,
     workers: Vec<std::thread::JoinHandle<()>>,
     next_id: AtomicU64,
     solver: SolveOptions,
@@ -130,20 +151,25 @@ impl RecoveryService {
         let queue = Arc::new(BoundedQueue::new(cfg.queue_capacity));
         let store = Arc::new(JobStore::new());
         let metrics = Arc::new(ServiceMetrics::default());
+        let obsv = Arc::new(ServiceObsv::new());
+        obsv.workers_total.set(cfg.workers as i64);
         let workers = (0..cfg.workers)
             .map(|w| {
                 let queue = queue.clone();
                 let store = store.clone();
                 let metrics = metrics.clone();
+                let obsv = obsv.clone();
                 let solver = solver.clone();
                 let artifact_dir = artifact_dir.clone();
                 std::thread::Builder::new()
                     .name(format!("lpcs-worker-{w}"))
-                    .spawn(move || worker_loop(cfg, queue, store, metrics, solver, artifact_dir))
+                    .spawn(move || {
+                        worker_loop(cfg, queue, store, metrics, obsv, solver, artifact_dir)
+                    })
                     .expect("spawn worker")
             })
             .collect();
-        Self { queue, store, metrics, workers, next_id: AtomicU64::new(1), solver }
+        Self { queue, store, metrics, obsv, workers, next_id: AtomicU64::new(1), solver }
     }
 
     pub fn solver_options(&self) -> &SolveOptions {
@@ -171,17 +197,23 @@ impl RecoveryService {
             self.metrics.invalid.fetch_add(1, Ordering::Relaxed);
             return Err(SubmitError::Invalid(e));
         }
+        let labels = labels_of(&spec);
         let id = self.next_id.fetch_add(1, Ordering::Relaxed);
         self.store.insert_queued(id);
         self.metrics.submitted.fetch_add(1, Ordering::Relaxed);
+        // Admitted from the store's point of view; terminal recording
+        // (worker side or the rejection below) balances the gauge.
+        self.obsv.inflight.add(1);
         match self.queue.try_push((id, spec, prio), prio) {
             Ok(()) => Ok(id),
             Err(PushError::Full(_)) => {
                 self.metrics.rejected.fetch_add(1, Ordering::Relaxed);
+                self.obsv.on_terminal(labels, Outcome::RejectedFull, None, 0);
                 self.store.fail(id, "rejected: queue full (backpressure)".into());
                 Err(SubmitError::QueueFull)
             }
             Err(PushError::Closed(_)) => {
+                self.obsv.inflight.add(-1);
                 self.store.fail(id, "rejected: service shutting down".into());
                 Err(SubmitError::Closed)
             }
@@ -241,8 +273,31 @@ impl RecoveryService {
         self.queue.position_where(|(qid, _, _)| *qid == id)
     }
 
+    /// Atomic `(position, depth)` snapshot for a queued job, taken under
+    /// ONE queue lock so `position < depth` always holds — the invariant
+    /// the wire `QueuePos` frame promises its subscribers.
+    pub fn queue_position_and_depth(&self, id: JobId) -> Option<(usize, usize)> {
+        self.queue.position_and_depth(|(qid, _, _)| *qid == id)
+    }
+
     pub fn metrics(&self) -> &ServiceMetrics {
         &self.metrics
+    }
+
+    /// The observability registry: latency histograms and saturation
+    /// gauges (see [`crate::obsv`]).
+    pub fn obsv(&self) -> &ServiceObsv {
+        &self.obsv
+    }
+
+    /// Prometheus text exposition for this service — what the wire
+    /// `ScrapeReq` frame returns and `lpcs scrape ADDR` prints.
+    pub fn scrape(&self) -> String {
+        self.obsv.render_prometheus(
+            &self.metrics.snapshot_struct(),
+            self.queue_depth() as u64,
+            self.queue_capacity() as u64,
+        )
     }
 
     /// Drain and stop; joins all workers.
@@ -263,15 +318,29 @@ impl RecoveryService {
 struct ServiceObserver<'a> {
     store: &'a JobStore,
     metrics: &'a ServiceMetrics,
+    obsv: &'a ServiceObsv,
+    /// Batches are key-homogeneous, so one label set covers every job.
+    labels: JobLabels,
     ids: &'a [JobId],
     started: Vec<bool>,
+    /// When the worker called `solve_batch` — the first observed
+    /// iteration stamps the quantize+pack setup latency against it.
+    solve_start: Instant,
+    setup_us: Option<u64>,
 }
 
 impl BatchObserver for ServiceObserver<'_> {
     fn on_iteration(&mut self, job_index: usize, stat: &IterStat) -> ObserverSignal {
         let id = self.ids[job_index];
+        if self.setup_us.is_none() {
+            let us = self.solve_start.elapsed().as_micros() as u64;
+            self.setup_us = Some(us);
+            self.obsv.on_setup(self.labels, us);
+        }
         if !self.started[job_index] {
-            self.store.transition(id, JobState::Running);
+            if let Some(wait) = self.store.transition(id, JobState::Running) {
+                self.obsv.on_running(self.labels, wait.as_micros() as u64);
+            }
             self.started[job_index] = true;
         }
         let dropped = self.store.record_progress(id, *stat);
@@ -291,6 +360,7 @@ fn worker_loop(
     queue: Arc<BoundedQueue<QueueItem>>,
     store: Arc<JobStore>,
     metrics: Arc<ServiceMetrics>,
+    obsv: Arc<ServiceObsv>,
     solver: SolveOptions,
     artifact_dir: PathBuf,
 ) {
@@ -298,7 +368,12 @@ fn worker_loop(
     // per-worker because PJRT handles are not Send: each worker's XLA
     // engines own their runtime + compiled-executable cache.
     let mut registry = EngineRegistry::with_defaults(artifact_dir);
-    let cost = CostModel::default();
+    // Per-worker cost model: when calibration is on, each executed batch
+    // feeds its measured setup/exec timings back in (EWMA per BatchKey),
+    // so scheduling decisions track this worker's real hardware instead
+    // of the static nominal-iteration estimate.
+    let mut cost = CostModel::default();
+    cost.calibrate = cfg.calibrate_cost;
     let sched_cfg = SchedConfig {
         // Clamp: callers constructing ServiceConfig literally (benches,
         // tests) may pass 0; the old loop tolerated it as "singletons".
@@ -350,7 +425,23 @@ fn worker_loop(
         let give_back: Vec<QueueItem> =
             rest.into_iter().map(|(id, spec)| (id, spec, prio_of[&id])).collect();
         queue.unpop(give_back, |(_, _, p)| *p);
-        run_batch(head, &mut registry, &store, &metrics, &solver);
+        obsv.workers_busy.add(1);
+        run_batch(head, &mut registry, &store, &metrics, &obsv, &mut cost, &solver);
+        obsv.workers_busy.add(-1);
+    }
+}
+
+/// Execution/end-to-end latencies for a job about to go terminal, read
+/// from the store's stamps so they are final BEFORE `complete`/`fail`
+/// unblocks waiters (a waiter that immediately scrapes sees its job).
+fn job_times(store: &JobStore, id: JobId) -> (Option<u64>, u64) {
+    let now = Instant::now();
+    match store.stamps(id) {
+        Some((submitted, started)) => (
+            started.map(|s| now.duration_since(s).as_micros() as u64),
+            now.duration_since(submitted).as_micros() as u64,
+        ),
+        None => (None, 0),
     }
 }
 
@@ -361,19 +452,34 @@ fn run_batch(
     registry: &mut EngineRegistry,
     store: &JobStore,
     metrics: &ServiceMetrics,
+    obsv: &ServiceObsv,
+    cost: &mut CostModel,
     solver: &SolveOptions,
 ) {
-    let engine_name = batch.key.engine.name();
+    let key = batch.key;
+    let engine_name = key.engine.name();
     metrics.batches.fetch_add(1, Ordering::Relaxed);
     metrics.batched_jobs.fetch_add(batch.len() as u64, Ordering::Relaxed);
 
-    let t0 = std::time::Instant::now();
+    let t0 = Instant::now();
     let modeled_before = registry.metrics(engine_name).map(|m| m.modeled_time_us).unwrap_or(0);
     let ids: Vec<JobId> = batch.jobs.iter().map(|(id, _)| *id).collect();
+    let labels = match batch.jobs.first() {
+        Some((_, spec)) => labels_of(spec),
+        None => return,
+    };
     let reqs: Vec<SolveRequest> =
         batch.jobs.into_iter().map(|(_, spec)| spec.into_request()).collect();
-    let mut observer =
-        ServiceObserver { store, metrics, ids: &ids, started: vec![false; ids.len()] };
+    let mut observer = ServiceObserver {
+        store,
+        metrics,
+        obsv,
+        labels,
+        ids: &ids,
+        started: vec![false; ids.len()],
+        solve_start: t0,
+        setup_us: None,
+    };
     match registry.solve_batch(engine_name, &reqs, solver, &mut observer) {
         Ok(results) => {
             for (&id, result) in ids.iter().zip(results) {
@@ -382,21 +488,29 @@ fn run_batch(
                 // max_iters = 0) are still Queued; the state machine
                 // requires passing through Running.
                 if store.state(id) == Some(JobState::Queued) {
-                    store.transition(id, JobState::Running);
+                    if let Some(wait) = store.transition(id, JobState::Running) {
+                        obsv.on_running(labels, wait.as_micros() as u64);
+                    }
                 }
                 // Count before completing: `wait` returns as soon as
-                // the store transitions, so the counter must already
-                // be visible then.
+                // the store transitions, so the counter — and the
+                // histogram samples — must already be visible then.
+                let (exec_us, e2e_us) = job_times(store, id);
                 match result {
                     Ok(res) => {
-                        if store.cancel_requested(id) {
+                        let outcome = if store.cancel_requested(id) {
                             metrics.cancelled.fetch_add(1, Ordering::Relaxed);
-                        }
+                            Outcome::Cancelled
+                        } else {
+                            Outcome::Ok
+                        };
                         metrics.completed.fetch_add(1, Ordering::Relaxed);
+                        obsv.on_terminal(labels, outcome, exec_us, e2e_us);
                         store.complete(id, res);
                     }
                     Err(e) => {
                         metrics.failed.fetch_add(1, Ordering::Relaxed);
+                        obsv.on_terminal(labels, Outcome::Failed, exec_us, e2e_us);
                         store.fail(id, format!("{e:#}"));
                     }
                 }
@@ -406,9 +520,13 @@ fn run_batch(
             // Unknown engine: fail the whole batch.
             for &id in &ids {
                 if store.state(id) == Some(JobState::Queued) {
-                    store.transition(id, JobState::Running);
+                    if let Some(wait) = store.transition(id, JobState::Running) {
+                        obsv.on_running(labels, wait.as_micros() as u64);
+                    }
                 }
+                let (exec_us, e2e_us) = job_times(store, id);
                 metrics.failed.fetch_add(1, Ordering::Relaxed);
+                obsv.on_terminal(labels, Outcome::Failed, exec_us, e2e_us);
                 store.fail(id, format!("{e:#}"));
             }
         }
@@ -417,7 +535,17 @@ fn run_batch(
     metrics
         .modeled_us
         .fetch_add(modeled_after.saturating_sub(modeled_before), Ordering::Relaxed);
-    metrics.solve_us.fetch_add(t0.elapsed().as_micros() as u64, Ordering::Relaxed);
+    let wall_us = t0.elapsed().as_micros() as u64;
+    metrics.solve_us.fetch_add(wall_us, Ordering::Relaxed);
+    // Close the loop into the scheduler: feed the measured quantize+pack
+    // setup and per-job execution time back into the cost model (no-op
+    // when calibration is frozen).
+    let setup_us = observer.setup_us.unwrap_or(0);
+    cost.observe(
+        &key,
+        setup_us as f64,
+        wall_us.saturating_sub(setup_us) as f64 / ids.len().max(1) as f64,
+    );
 }
 
 #[cfg(test)]
@@ -590,6 +718,64 @@ mod tests {
         assert!(rejected > 0, "queue of capacity 2 must reject a 40-job burst");
         for id in ids {
             service.wait(id, Duration::from_secs(120)).expect("accepted jobs finish");
+        }
+        let rej: u64 = service
+            .obsv()
+            .outcome_totals()
+            .iter()
+            .filter(|(_, o, _)| *o == Outcome::RejectedFull)
+            .map(|(_, _, n)| *n)
+            .sum();
+        assert_eq!(rej, rejected as u64, "every backpressure reject is an outcome-labeled sample");
+        service.shutdown();
+    }
+
+    #[test]
+    fn observability_records_job_lifecycle() {
+        let service = svc(1);
+        let (phi, y, _) = planted(64, 128, 4, 21);
+        let ids: Vec<_> = (0..3)
+            .map(|k| {
+                service
+                    .submit(
+                        JobSpec::builder(ProblemHandle::new(phi.clone()), y.clone(), 4)
+                            .bits(8, 8)
+                            .seed(k)
+                            .build(),
+                    )
+                    .unwrap()
+            })
+            .collect();
+        for id in ids {
+            let out = service.wait(id, Duration::from_secs(60)).expect("finishes");
+            assert_eq!(out.state, JobState::Done, "{:?}", out.error);
+        }
+        let obsv = service.obsv();
+        let labels = JobLabels { solver: "qniht", engine: "native-quant", bits: 8 };
+        let ok: u64 = obsv
+            .outcome_totals()
+            .iter()
+            .filter(|(l, o, _)| *l == labels && *o == Outcome::Ok)
+            .map(|(_, _, n)| *n)
+            .sum();
+        assert_eq!(ok, 3, "every completion is an ok-labeled e2e sample");
+        assert_eq!(obsv.inflight.get(), 0, "terminal recording balanced the gauge");
+        assert_eq!(obsv.queue_wait.get(labels, None).snapshot().count, 3);
+        assert_eq!(obsv.exec.get(labels, None).snapshot().count, 3);
+        let setup = obsv.setup.get(labels, None).snapshot();
+        assert!(setup.count >= 1, "at least one batch recorded its setup");
+        let e2e = obsv.e2e.get(labels, Some(Outcome::Ok)).snapshot();
+        assert!(e2e.sum_us >= obsv.exec.get(labels, None).snapshot().sum_us,
+            "end-to-end dominates execution");
+        let text = service.scrape();
+        for needle in [
+            "# TYPE lpcs_job_e2e_us histogram",
+            "lpcs_job_e2e_us_bucket{solver=\"qniht\",engine=\"native-quant\",bits=\"8\",outcome=\"ok\",le=\"+Inf\"} 3",
+            "lpcs_jobs_total{solver=\"qniht\",engine=\"native-quant\",bits=\"8\",outcome=\"ok\"} 3",
+            "lpcs_workers_total 1",
+            "lpcs_inflight_jobs 0",
+        ] {
+            assert!(text.contains(needle), "scrape missing {needle:?}:\n{text}");
         }
         service.shutdown();
     }

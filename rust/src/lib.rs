@@ -99,6 +99,20 @@
 //!   sees one monotone stream with exactly one `Done`); and admission
 //!   control answers saturation with typed `queue-full` errors instead
 //!   of buffering.
+//! * **Observability** ([`obsv`]): lock-light log-bucket latency
+//!   histograms (queue-wait, quantize+pack setup, execution, end-to-end)
+//!   labeled `SolverKind` × engine × bits with outcome-labeled terminal
+//!   counters (`ok`/`failed`/`cancelled`/`rejected_full`), worker-pool
+//!   saturation and in-flight gauges, and a structured
+//!   [`obsv::MetricsSnapshot`] behind the legacy `metrics=` text line.
+//!   Exposed as Prometheus text exposition over the wire
+//!   (`ScrapeReq`/`Scrape`, `lpcs scrape ADDR`) from both the service
+//!   and the router face. The recorded per-`BatchKey` setup/execution
+//!   times feed back into the scheduler:
+//!   `sched::CostModel::observe` EWMA-calibrates batch pricing from
+//!   measurements instead of the static nominal-iteration estimate
+//!   (freezable via `service.calibrate_cost=false` for deterministic
+//!   tests).
 //! * **Algorithms** ([`algorithms`]): the Algorithm-1 NIHT driver (generic
 //!   over [`algorithms::NihtKernel`]), the quantized kernels, and the
 //!   baselines — all observable per iteration.
@@ -141,6 +155,7 @@ pub mod linalg;
 pub mod lowprec;
 pub mod metrics;
 pub mod mri;
+pub mod obsv;
 pub mod par;
 pub mod perfmodel;
 pub mod quant;

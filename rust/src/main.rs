@@ -11,6 +11,7 @@
 //!            health-checked backends, watch streams that resume across
 //!            a backend dying mid-solve
 //!   watch    stream a served job's per-iteration progress over the wire
+//!   scrape   print a server's or router's Prometheus text exposition
 //!   repro    regenerate a paper figure (fig1..fig11 | all)
 //!   info     list AOT artifacts and environment
 //!
@@ -42,7 +43,7 @@ fn main() {
 
 fn usage() -> ! {
     eprintln!(
-        "usage: lpcs <solve|serve|route|watch|repro|info> [args] [--key value ...]\n\
+        "usage: lpcs <solve|serve|route|watch|scrape|repro|info> [args] [--key value ...]\n\
          \n\
          lpcs solve [gaussian|astro] [--engine native-quant|native-dense|xla-quant|xla-dense|fpga-model]\n\
          \x20          [--algorithm niht|iht|qniht|cosamp|fista|auto]\n\
@@ -54,6 +55,7 @@ fn usage() -> ! {
          \x20          [--router.probe_ms N] [--router.max_inflight N] [--router.queue_limit N]\n\
          \x20          [--router.vnodes N] [--router.affinity true|false]\n\
          lpcs watch <addr> <job-id>\n\
+         lpcs scrape <addr>                    (Prometheus text exposition)\n\
          lpcs repro <fig1|fig3|fig4|fig5|fig6|fig7|fig8|fig9|fig10|fig11|all> [--out_dir DIR]\n\
          lpcs info"
     );
@@ -108,6 +110,10 @@ fn real_main() -> Result<()> {
         "watch" => match (rest.first(), rest.get(1)) {
             (Some(addr), Some(job)) => cmd_watch(addr, job),
             _ => usage(),
+        },
+        "scrape" => match rest.first() {
+            Some(addr) => cmd_scrape(addr),
+            None => usage(),
         },
         "repro" => {
             let which = rest.first().map(|s| s.as_str()).unwrap_or("all");
@@ -337,6 +343,37 @@ fn cmd_serve_wire(cfg: &LpcsConfig) -> Result<()> {
         cfg.wire.sub_depth
     );
     println!("watch a job with: lpcs watch {} <job-id>   (Ctrl-C stops the server)", server.addr());
+    // Optional self-traffic: with LPCS_SERVE_JOBS set, run that many
+    // synthetic jobs through the service before settling into the serve
+    // loop, so a following `lpcs scrape` sees populated series (used by
+    // the CI smoke test).
+    if let Some(jobs) = std::env::var("LPCS_SERVE_JOBS").ok().and_then(|v| v.parse::<usize>().ok())
+    {
+        let (phi, _, _, s, _) = gaussian_problem(cfg.seed);
+        let phi = Arc::new(phi);
+        let mut rng = XorShift128Plus::new(cfg.seed ^ 0x5EEE);
+        let mut ids = Vec::new();
+        for j in 0..jobs {
+            let mut x = vec![0.0f32; phi.cols];
+            for i in rng.choose_k(phi.cols, s) {
+                x[i] = 1.0 + rng.uniform_f32();
+            }
+            let y = phi.matvec(&x);
+            let spec = JobSpec::builder(ProblemHandle::new(phi.clone()), y, s)
+                .engine(cfg.engine)
+                .solver(cfg.solver_kind())
+                .seed(j as u64)
+                .build();
+            match service.submit(spec) {
+                Ok(id) => ids.push(id),
+                Err(e) => println!("self-traffic job {j} rejected: {e}"),
+            }
+        }
+        for id in ids {
+            let _ = service.wait(id, Duration::from_secs(600));
+        }
+        println!("self-traffic: {jobs} jobs done");
+    }
     // `server` must outlive the loop — dropping it would stop accepting.
     loop {
         std::thread::sleep(Duration::from_secs(60));
@@ -407,6 +444,16 @@ fn cmd_watch(addr: &str, job: &str) -> Result<()> {
             }
         }
     }
+    Ok(())
+}
+
+/// `lpcs scrape ADDR`: fetch one Prometheus text exposition from a
+/// serve or route listener and print it. A router answers with its own
+/// routing metrics; a server answers with the full solver histograms.
+fn cmd_scrape(addr: &str) -> Result<()> {
+    let mut client = lpcs::wire::WireClient::connect(addr)
+        .with_context(|| format!("connecting to {addr}"))?;
+    print!("{}", client.scrape()?);
     Ok(())
 }
 

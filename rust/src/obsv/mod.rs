@@ -1,0 +1,1014 @@
+//! Observability layer: lock-light latency histograms, gauges, and the
+//! structured metrics snapshot every serving face renders from.
+//!
+//! The paper's headline is a *measured* accuracy-vs-speed tradeoff, so the
+//! serving stack has to be able to observe its own latency. This module
+//! gives it:
+//!
+//! * [`Histogram`] — fixed log-spaced buckets (powers of two in
+//!   microseconds), every slot an `AtomicU64`, so recording on the solve
+//!   hot path is three relaxed atomic adds and a 27-entry binary search:
+//!   no locks, no allocation. Merge and quantile estimation operate on
+//!   [`HistSnapshot`]s (a consistent point-in-time read).
+//! * [`HistogramSet`] — a labeled family keyed by
+//!   [`JobLabels`] (`SolverKind` × engine × bits) and optionally an
+//!   [`Outcome`] (`ok` / `failed` / `cancelled` / `rejected_full` —
+//!   the apollographql/router compute-pool taxonomy: keep queue wait,
+//!   execution and end-to-end duration separate, and label terminal
+//!   duration by outcome).
+//! * [`ServiceObsv`] — the registry the coordinator records into:
+//!   queue-wait, quantize+pack setup, execution and end-to-end
+//!   histograms plus worker-saturation and in-flight gauges.
+//! * Prometheus text exposition (`# HELP`/`# TYPE`, `_bucket`/`_sum`/
+//!   `_count` series) — served over the wire via `ScrapeReq`/`Scrape`
+//!   and `lpcs scrape ADDR`. The outcome counters
+//!   (`lpcs_jobs_total{...,outcome=...}`) are rendered from the *same*
+//!   snapshot as the end-to-end histogram, so a scrape taken mid-load is
+//!   internally consistent: `lpcs_job_e2e_us_count` equals the sum of
+//!   the outcome counters for the same label set, always.
+//! * [`MetricsSnapshot`] — the structured form of the legacy
+//!   `metrics=` text line; the wire server, router and CLI all render
+//!   through [`MetricsSnapshot::render_legacy`] instead of
+//!   concatenating strings ad hoc (the text form stays byte-compatible
+//!   with what parsing consumers already scrape).
+
+use std::collections::HashMap;
+use std::sync::atomic::{AtomicI64, AtomicU64, Ordering};
+use std::sync::Mutex;
+
+/// Finite histogram bucket upper bounds, in microseconds: powers of two
+/// from 1 µs to ~67 s. Values above the last bound land in the implicit
+/// `+Inf` overflow slot. Log spacing keeps relative quantile error
+/// bounded (≤ 2×) across six decades with a fixed, tiny footprint.
+pub const BUCKET_BOUNDS_US: [u64; 27] = [
+    1,
+    2,
+    4,
+    8,
+    16,
+    32,
+    64,
+    128,
+    256,
+    512,
+    1024,
+    2048,
+    4096,
+    8192,
+    16384,
+    32768,
+    65536,
+    131072,
+    262144,
+    524288,
+    1048576,
+    2097152,
+    4194304,
+    8388608,
+    16777216,
+    33554432,
+    67108864,
+];
+
+/// Bucket count including the `+Inf` overflow slot.
+pub const BUCKETS: usize = BUCKET_BOUNDS_US.len() + 1;
+
+/// A fixed log-spaced-bucket latency histogram with atomic slots.
+/// Recording never locks; readers take a [`HistSnapshot`].
+#[derive(Debug)]
+pub struct Histogram {
+    buckets: [AtomicU64; BUCKETS],
+    count: AtomicU64,
+    sum_us: AtomicU64,
+}
+
+impl Default for Histogram {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Histogram {
+    pub fn new() -> Self {
+        Self {
+            buckets: std::array::from_fn(|_| AtomicU64::new(0)),
+            count: AtomicU64::new(0),
+            sum_us: AtomicU64::new(0),
+        }
+    }
+
+    /// Index of the bucket a value falls in: the first bound ≥ `us`, or
+    /// the overflow slot.
+    pub fn bucket_index(us: u64) -> usize {
+        BUCKET_BOUNDS_US.partition_point(|b| *b < us)
+    }
+
+    /// Record one latency sample (microseconds). Three relaxed atomic
+    /// adds — safe on any thread, including the solve hot path.
+    pub fn record(&self, us: u64) {
+        self.buckets[Self::bucket_index(us)].fetch_add(1, Ordering::Relaxed);
+        self.sum_us.fetch_add(us, Ordering::Relaxed);
+        self.count.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Fold another histogram's counts into this one (shard merge).
+    pub fn merge_from(&self, other: &Histogram) {
+        let snap = other.snapshot();
+        for (slot, n) in self.buckets.iter().zip(snap.buckets.iter()) {
+            if *n > 0 {
+                slot.fetch_add(*n, Ordering::Relaxed);
+            }
+        }
+        self.sum_us.fetch_add(snap.sum_us, Ordering::Relaxed);
+        self.count.fetch_add(snap.count, Ordering::Relaxed);
+    }
+
+    /// Point-in-time copy of all slots.
+    pub fn snapshot(&self) -> HistSnapshot {
+        HistSnapshot {
+            buckets: std::array::from_fn(|i| self.buckets[i].load(Ordering::Relaxed)),
+            count: self.count.load(Ordering::Relaxed),
+            sum_us: self.sum_us.load(Ordering::Relaxed),
+        }
+    }
+}
+
+/// A consistent read of a [`Histogram`]; quantile math and rendering
+/// operate here so concurrent recording can't skew one exposition line
+/// against another.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct HistSnapshot {
+    pub buckets: [u64; BUCKETS],
+    pub count: u64,
+    pub sum_us: u64,
+}
+
+impl HistSnapshot {
+    pub fn empty() -> Self {
+        Self { buckets: [0; BUCKETS], count: 0, sum_us: 0 }
+    }
+
+    /// Total recorded samples. Concurrent recording can leave the
+    /// `count` cell one behind the bucket slots (bucket is bumped
+    /// first); rendering uses the max so cumulative `_bucket` series
+    /// stay monotone through `+Inf` and `_count` can never undercount
+    /// the buckets it sits above.
+    pub fn total(&self) -> u64 {
+        self.count.max(self.buckets.iter().sum())
+    }
+
+    /// Estimated `q`-quantile in microseconds (`0.0 ≤ q ≤ 1.0`), linear
+    /// interpolation within the winning bucket. `None` when empty. The
+    /// estimate is bounded by the bucket: it is never below the bucket's
+    /// lower bound nor above its upper bound.
+    pub fn quantile_us(&self, q: f64) -> Option<f64> {
+        let total = self.total();
+        if total == 0 {
+            return None;
+        }
+        let q = q.clamp(0.0, 1.0);
+        let target = (q * total as f64).ceil().max(1.0) as u64;
+        let mut cum = 0u64;
+        for (i, n) in self.buckets.iter().enumerate() {
+            let next = cum + n;
+            if next >= target && *n > 0 {
+                let lo = (if i == 0 { 0 } else { BUCKET_BOUNDS_US[i - 1] }) as f64;
+                let hi = if i < BUCKET_BOUNDS_US.len() {
+                    BUCKET_BOUNDS_US[i] as f64
+                } else {
+                    // Overflow bucket: all we know is "above the last
+                    // bound" — report that bound (a lower bound on truth).
+                    return Some(*BUCKET_BOUNDS_US.last().unwrap() as f64);
+                };
+                let frac = (target - cum) as f64 / *n as f64;
+                return Some(lo + frac * (hi - lo));
+            }
+            cum = next;
+        }
+        Some(*BUCKET_BOUNDS_US.last().unwrap() as f64)
+    }
+
+    /// Merge = pointwise sum (equals the histogram of concatenated
+    /// sample streams — pinned by a unit test).
+    pub fn merged(&self, other: &HistSnapshot) -> HistSnapshot {
+        HistSnapshot {
+            buckets: std::array::from_fn(|i| self.buckets[i] + other.buckets[i]),
+            count: self.count + other.count,
+            sum_us: self.sum_us + other.sum_us,
+        }
+    }
+}
+
+/// The per-job label set every latency series carries:
+/// solver name × engine name × operand bit width (32 = full precision).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub struct JobLabels {
+    pub solver: &'static str,
+    pub engine: &'static str,
+    pub bits: u8,
+}
+
+/// Terminal job outcomes, following the apollographql compute-pool
+/// taxonomy (executed-ok / executed-error / abandoned / rejected-full).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub enum Outcome {
+    Ok,
+    Failed,
+    Cancelled,
+    RejectedFull,
+}
+
+impl Outcome {
+    pub fn name(self) -> &'static str {
+        match self {
+            Outcome::Ok => "ok",
+            Outcome::Failed => "failed",
+            Outcome::Cancelled => "cancelled",
+            Outcome::RejectedFull => "rejected_full",
+        }
+    }
+
+    pub const ALL: [Outcome; 4] =
+        [Outcome::Ok, Outcome::Failed, Outcome::Cancelled, Outcome::RejectedFull];
+}
+
+/// A labeled histogram family. Label sets materialize on first record;
+/// the map lock guards only the (rare) lookup/insert — the histograms
+/// themselves are lock-free to record into. Callers on a hot loop can
+/// hold the returned `Arc` and skip the map entirely.
+#[derive(Debug, Default)]
+pub struct HistogramSet {
+    inner: Mutex<HashMap<(JobLabels, Option<Outcome>), std::sync::Arc<Histogram>>>,
+}
+
+impl HistogramSet {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Get-or-create the histogram for a series.
+    pub fn get(
+        &self,
+        labels: JobLabels,
+        outcome: Option<Outcome>,
+    ) -> std::sync::Arc<Histogram> {
+        self.inner
+            .lock()
+            .unwrap()
+            .entry((labels, outcome))
+            .or_insert_with(|| std::sync::Arc::new(Histogram::new()))
+            .clone()
+    }
+
+    pub fn record(&self, labels: JobLabels, outcome: Option<Outcome>, us: u64) {
+        self.get(labels, outcome).record(us);
+    }
+
+    /// Snapshot every series, deterministically ordered (by labels then
+    /// outcome) so exposition output is stable.
+    pub fn snapshot(&self) -> Vec<(JobLabels, Option<Outcome>, HistSnapshot)> {
+        let mut out: Vec<_> = self
+            .inner
+            .lock()
+            .unwrap()
+            .iter()
+            .map(|((l, o), h)| (*l, *o, h.snapshot()))
+            .collect();
+        out.sort_by_key(|(l, o, _)| (*l, o.map(|o| o.name())));
+        out
+    }
+}
+
+/// An integer gauge (in-flight jobs, busy workers).
+#[derive(Debug, Default)]
+pub struct Gauge(AtomicI64);
+
+impl Gauge {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn add(&self, d: i64) {
+        self.0.fetch_add(d, Ordering::Relaxed);
+    }
+
+    pub fn set(&self, v: i64) {
+        self.0.store(v, Ordering::Relaxed);
+    }
+
+    pub fn get(&self) -> i64 {
+        self.0.load(Ordering::Relaxed)
+    }
+}
+
+/// The coordinator's observability registry: four labeled latency
+/// histograms plus the saturation gauges. One per [`crate::coordinator::
+/// RecoveryService`], shared by every worker and connection handler.
+#[derive(Debug, Default)]
+pub struct ServiceObsv {
+    /// Submit → execution start, per job.
+    pub queue_wait: HistogramSet,
+    /// Quantize+pack batch setup: solve-call start → first iteration.
+    pub setup: HistogramSet,
+    /// Execution-start → terminal, per job.
+    pub exec: HistogramSet,
+    /// Submit → terminal, per job, labeled by [`Outcome`]. The outcome
+    /// counters are *this family's* counts — one source of truth.
+    pub e2e: HistogramSet,
+    /// Jobs admitted and not yet terminal.
+    pub inflight: Gauge,
+    /// Workers currently executing a batch.
+    pub workers_busy: Gauge,
+    /// Worker pool size (static after start).
+    pub workers_total: Gauge,
+}
+
+impl ServiceObsv {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// A job left the queue and started executing.
+    pub fn on_running(&self, labels: JobLabels, wait_us: u64) {
+        self.queue_wait.record(labels, None, wait_us);
+    }
+
+    /// One batch's quantize+pack setup latency (solve start → first
+    /// observed iteration).
+    pub fn on_setup(&self, labels: JobLabels, setup_us: u64) {
+        self.setup.record(labels, None, setup_us);
+    }
+
+    /// A job reached a terminal state. `exec_us` is `None` for jobs that
+    /// never executed (admission rejects).
+    pub fn on_terminal(
+        &self,
+        labels: JobLabels,
+        outcome: Outcome,
+        exec_us: Option<u64>,
+        e2e_us: u64,
+    ) {
+        if let Some(us) = exec_us {
+            self.exec.record(labels, None, us);
+        }
+        self.e2e.record(labels, Some(outcome), e2e_us);
+        self.inflight.add(-1);
+    }
+
+    /// Outcome totals summed from the end-to-end family (the counters a
+    /// scrape exposes — consistent with `_count` by construction).
+    pub fn outcome_totals(&self) -> Vec<(JobLabels, Outcome, u64)> {
+        self.e2e
+            .snapshot()
+            .into_iter()
+            .filter_map(|(l, o, s)| o.map(|o| (l, o, s.total())))
+            .collect()
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Structured metrics snapshot (the legacy text line, typed).
+// ---------------------------------------------------------------------------
+
+/// Structured form of `ServiceMetrics::snapshot()` — the coordinator's
+/// counters at one instant. `queue_depth` is `Some` on the wire face
+/// (the legacy wire `Metrics` reply appended ` queue_depth=N`; the
+/// renderer keeps that key order byte-compatible).
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct ServiceCounters {
+    pub submitted: u64,
+    pub rejected: u64,
+    pub invalid: u64,
+    pub completed: u64,
+    pub failed: u64,
+    pub cancelled: u64,
+    pub batches: u64,
+    pub batched_jobs: u64,
+    pub solve_us: u64,
+    pub modeled_us: u64,
+    pub progress_dropped: u64,
+    pub disconnects: u64,
+    pub pool_contention: u64,
+    pub queue_depth: Option<u64>,
+}
+
+impl ServiceCounters {
+    /// Mean jobs per executed batch. Same expression as the historical
+    /// string formatter (`batched_jobs / batches.max(1)`) so the legacy
+    /// line is byte-identical in every state, including the torn read
+    /// where `batched_jobs` is bumped a beat before `batches`.
+    pub fn mean_batch(&self) -> f64 {
+        self.batched_jobs as f64 / self.batches.max(1) as f64
+    }
+
+    /// The legacy one-line text form. Key order and formatting are
+    /// byte-compatible with the pre-structured `snapshot()` string that
+    /// parsing consumers scrape — pinned by a unit test below.
+    pub fn render_legacy(&self) -> String {
+        let mut s = format!(
+            "submitted={} rejected={} invalid={} completed={} failed={} cancelled={} \
+             batches={} mean_batch={:.2} solve_ms={} modeled_ms={} progress_dropped={} \
+             disconnects={} pool_contention={}",
+            self.submitted,
+            self.rejected,
+            self.invalid,
+            self.completed,
+            self.failed,
+            self.cancelled,
+            self.batches,
+            self.mean_batch(),
+            self.solve_us / 1000,
+            self.modeled_us / 1000,
+            self.progress_dropped,
+            self.disconnects,
+            self.pool_contention,
+        );
+        if let Some(depth) = self.queue_depth {
+            s.push_str(&format!(" queue_depth={depth}"));
+        }
+        s
+    }
+}
+
+/// One backend's slice of the router counters, plus its health-prober
+/// view (up/down, last probed queue depth) — structured where the prober
+/// previously only flipped atomics nobody could read out.
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct BackendCounters {
+    pub addr: String,
+    pub routed: u64,
+    pub resumed: u64,
+    pub down_events: u64,
+    pub up: bool,
+    pub queue_depth: u64,
+    pub queue_capacity: u64,
+}
+
+/// Structured form of `RouterMetrics::snapshot()`.
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct RouterCounters {
+    pub routed: u64,
+    pub rejected_full: u64,
+    pub rejected_down: u64,
+    pub resumed: u64,
+    pub backend_down: u64,
+    pub inflight: u64,
+    pub per_backend: Vec<BackendCounters>,
+}
+
+impl RouterCounters {
+    /// Legacy one-line text form (byte-compatible key order).
+    pub fn render_legacy(&self) -> String {
+        let mut s = format!(
+            "routed={} rejected_full={} rejected_down={} resumed={} backend_down={}",
+            self.routed, self.rejected_full, self.rejected_down, self.resumed, self.backend_down,
+        );
+        for (i, b) in self.per_backend.iter().enumerate() {
+            s.push_str(&format!(
+                " b{i}[routed={} resumed={} down={}]",
+                b.routed, b.resumed, b.down_events
+            ));
+        }
+        s
+    }
+}
+
+/// The one structured snapshot type every face plumbs instead of ad-hoc
+/// strings: wire server and `lpcs serve` carry `Service`, the router and
+/// `lpcs route` carry `Router`; both render the legacy text through
+/// [`MetricsSnapshot::render_legacy`].
+#[derive(Debug, Clone, PartialEq)]
+pub enum MetricsSnapshot {
+    Service(ServiceCounters),
+    Router(RouterCounters),
+}
+
+impl MetricsSnapshot {
+    pub fn render_legacy(&self) -> String {
+        match self {
+            MetricsSnapshot::Service(c) => c.render_legacy(),
+            MetricsSnapshot::Router(c) => c.render_legacy(),
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Prometheus text exposition.
+// ---------------------------------------------------------------------------
+
+/// Escape a label value per the Prometheus text format: backslash,
+/// double-quote and newline.
+pub fn escape_label(s: &str) -> String {
+    let mut out = String::with_capacity(s.len());
+    for c in s.chars() {
+        match c {
+            '\\' => out.push_str("\\\\"),
+            '"' => out.push_str("\\\""),
+            '\n' => out.push_str("\\n"),
+            c => out.push(c),
+        }
+    }
+    out
+}
+
+fn fmt_labels(labels: JobLabels, outcome: Option<Outcome>) -> String {
+    let mut s = format!(
+        "solver=\"{}\",engine=\"{}\",bits=\"{}\"",
+        escape_label(labels.solver),
+        escape_label(labels.engine),
+        labels.bits
+    );
+    if let Some(o) = outcome {
+        s.push_str(&format!(",outcome=\"{}\"", o.name()));
+    }
+    s
+}
+
+fn render_histogram_family(
+    out: &mut String,
+    name: &str,
+    help: &str,
+    series: &[(JobLabels, Option<Outcome>, HistSnapshot)],
+) {
+    out.push_str(&format!("# HELP {name} {help}\n# TYPE {name} histogram\n"));
+    for (labels, outcome, snap) in series {
+        let lab = fmt_labels(*labels, *outcome);
+        let mut cum = 0u64;
+        for (i, n) in snap.buckets[..BUCKET_BOUNDS_US.len()].iter().enumerate() {
+            cum += n;
+            out.push_str(&format!(
+                "{name}_bucket{{{lab},le=\"{}\"}} {cum}\n",
+                BUCKET_BOUNDS_US[i]
+            ));
+        }
+        let total = snap.total();
+        out.push_str(&format!("{name}_bucket{{{lab},le=\"+Inf\"}} {total}\n"));
+        out.push_str(&format!("{name}_sum{{{lab}}} {}\n", snap.sum_us));
+        out.push_str(&format!("{name}_count{{{lab}}} {total}\n"));
+    }
+}
+
+fn render_scalar(out: &mut String, name: &str, kind: &str, help: &str, value: impl std::fmt::Display) {
+    out.push_str(&format!(
+        "# HELP {name} {help}\n# TYPE {name} {kind}\n{name} {value}\n"
+    ));
+}
+
+impl ServiceObsv {
+    /// The full Prometheus text exposition for one service: the four
+    /// latency histograms, outcome counters (rendered from the same
+    /// end-to-end snapshot — see module docs), saturation gauges, and
+    /// the legacy counters as plain counter series.
+    pub fn render_prometheus(
+        &self,
+        counters: &ServiceCounters,
+        queue_depth: u64,
+        queue_capacity: u64,
+    ) -> String {
+        let mut out = String::new();
+        render_histogram_family(
+            &mut out,
+            "lpcs_job_queue_wait_us",
+            "Time from submit to execution start, microseconds.",
+            &self.queue_wait.snapshot(),
+        );
+        render_histogram_family(
+            &mut out,
+            "lpcs_job_setup_us",
+            "Quantize+pack batch setup: solve start to first iteration, microseconds.",
+            &self.setup.snapshot(),
+        );
+        render_histogram_family(
+            &mut out,
+            "lpcs_job_exec_us",
+            "Per-job execution time, microseconds.",
+            &self.exec.snapshot(),
+        );
+        // ONE snapshot of the e2e family feeds both the histogram series
+        // and the outcome counters, so `_count` == sum of outcomes holds
+        // at any instant a scrape can observe.
+        let e2e = self.e2e.snapshot();
+        render_histogram_family(
+            &mut out,
+            "lpcs_job_e2e_us",
+            "End-to-end latency submit to terminal, microseconds, by outcome.",
+            &e2e,
+        );
+        out.push_str(
+            "# HELP lpcs_jobs_total Terminal jobs by solver/engine/bits and outcome.\n\
+             # TYPE lpcs_jobs_total counter\n",
+        );
+        for (labels, outcome, snap) in &e2e {
+            if let Some(o) = outcome {
+                out.push_str(&format!(
+                    "lpcs_jobs_total{{{}}} {}\n",
+                    fmt_labels(*labels, Some(*o)),
+                    snap.total()
+                ));
+            }
+        }
+        render_scalar(
+            &mut out,
+            "lpcs_inflight_jobs",
+            "gauge",
+            "Jobs admitted and not yet terminal.",
+            self.inflight.get(),
+        );
+        render_scalar(
+            &mut out,
+            "lpcs_workers_busy",
+            "gauge",
+            "Workers currently executing a batch.",
+            self.workers_busy.get(),
+        );
+        render_scalar(
+            &mut out,
+            "lpcs_workers_total",
+            "gauge",
+            "Worker pool size.",
+            self.workers_total.get(),
+        );
+        render_scalar(&mut out, "lpcs_queue_depth", "gauge", "Jobs waiting in the queue.", queue_depth);
+        render_scalar(
+            &mut out,
+            "lpcs_queue_capacity",
+            "gauge",
+            "Bounded queue capacity.",
+            queue_capacity,
+        );
+        for (name, help, v) in [
+            ("lpcs_jobs_submitted_total", "Jobs accepted at submit.", counters.submitted),
+            ("lpcs_jobs_rejected_total", "Jobs rejected by backpressure.", counters.rejected),
+            ("lpcs_jobs_invalid_total", "Jobs rejected by validation.", counters.invalid),
+            ("lpcs_batches_total", "Executed batches.", counters.batches),
+            (
+                "lpcs_progress_dropped_total",
+                "Progress events shed by slow subscribers.",
+                counters.progress_dropped,
+            ),
+            ("lpcs_disconnects_total", "Clients that died mid-stream.", counters.disconnects),
+            (
+                "lpcs_pool_contention_total",
+                "Parallel-pool lock contention events.",
+                counters.pool_contention,
+            ),
+        ] {
+            render_scalar(&mut out, name, "counter", help, v);
+        }
+        out
+    }
+}
+
+/// Prometheus exposition for the router face: routing counters plus
+/// per-backend health (the prober's structured view).
+pub fn render_router_prometheus(c: &RouterCounters) -> String {
+    let mut out = String::new();
+    for (name, help, v) in [
+        ("lpcs_router_routed_total", "Jobs placed on a backend.", c.routed),
+        ("lpcs_router_rejected_full_total", "Jobs rejected: saturation.", c.rejected_full),
+        ("lpcs_router_rejected_down_total", "Jobs rejected: no live backend.", c.rejected_down),
+        ("lpcs_router_resumed_total", "Watch streams resumed after failover.", c.resumed),
+        ("lpcs_router_backend_down_total", "Backend down events.", c.backend_down),
+    ] {
+        render_scalar(&mut out, name, "counter", help, v);
+    }
+    render_scalar(
+        &mut out,
+        "lpcs_router_inflight",
+        "gauge",
+        "Jobs routed and not yet done.",
+        c.inflight,
+    );
+    out.push_str(
+        "# HELP lpcs_router_backend_up Backend health as the prober sees it.\n\
+         # TYPE lpcs_router_backend_up gauge\n",
+    );
+    for (i, b) in c.per_backend.iter().enumerate() {
+        out.push_str(&format!(
+            "lpcs_router_backend_up{{backend=\"{i}\",addr=\"{}\"}} {}\n",
+            escape_label(&b.addr),
+            u64::from(b.up)
+        ));
+    }
+    out.push_str(
+        "# HELP lpcs_router_backend_queue_depth Last probed backend queue depth.\n\
+         # TYPE lpcs_router_backend_queue_depth gauge\n",
+    );
+    for (i, b) in c.per_backend.iter().enumerate() {
+        out.push_str(&format!(
+            "lpcs_router_backend_queue_depth{{backend=\"{i}\",addr=\"{}\"}} {}\n",
+            escape_label(&b.addr),
+            b.queue_depth
+        ));
+    }
+    out.push_str(
+        "# HELP lpcs_router_backend_routed_total Jobs placed per backend.\n\
+         # TYPE lpcs_router_backend_routed_total counter\n",
+    );
+    for (i, b) in c.per_backend.iter().enumerate() {
+        out.push_str(&format!(
+            "lpcs_router_backend_routed_total{{backend=\"{i}\",addr=\"{}\"}} {}\n",
+            escape_label(&b.addr),
+            b.routed
+        ));
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rng::XorShift128Plus;
+
+    fn labels() -> JobLabels {
+        JobLabels { solver: "qniht", engine: "native-quant", bits: 2 }
+    }
+
+    #[test]
+    fn bucket_bounds_are_strictly_increasing_and_indexing_is_monotone() {
+        for w in BUCKET_BOUNDS_US.windows(2) {
+            assert!(w[0] < w[1]);
+        }
+        let mut last = 0;
+        for us in [0u64, 1, 2, 3, 100, 1023, 1024, 1025, 1 << 20, u64::MAX] {
+            let i = Histogram::bucket_index(us);
+            assert!(i >= last || us == 0, "index must be monotone in the value");
+            last = i;
+            // The chosen bucket actually covers the value.
+            if i < BUCKET_BOUNDS_US.len() {
+                assert!(us <= BUCKET_BOUNDS_US[i]);
+                if i > 0 {
+                    assert!(us > BUCKET_BOUNDS_US[i - 1]);
+                }
+            } else {
+                assert!(us > *BUCKET_BOUNDS_US.last().unwrap());
+            }
+        }
+    }
+
+    #[test]
+    fn cumulative_bucket_series_is_monotone() {
+        let h = Histogram::new();
+        let mut rng = XorShift128Plus::new(7);
+        for _ in 0..500 {
+            h.record(rng.next_u64() % 10_000_000);
+        }
+        let s = h.snapshot();
+        let mut cum = 0u64;
+        let mut prev = 0u64;
+        for n in s.buckets.iter() {
+            cum += n;
+            assert!(cum >= prev);
+            prev = cum;
+        }
+        assert_eq!(cum, s.total());
+        assert_eq!(s.count, 500);
+    }
+
+    #[test]
+    fn merge_equals_concatenated_samples() {
+        let mut rng = XorShift128Plus::new(42);
+        let a: Vec<u64> = (0..200).map(|_| rng.next_u64() % 1_000_000).collect();
+        let b: Vec<u64> = (0..300).map(|_| rng.next_u64() % 100_000_000).collect();
+        let ha = Histogram::new();
+        let hb = Histogram::new();
+        let hc = Histogram::new();
+        for &v in &a {
+            ha.record(v);
+            hc.record(v);
+        }
+        for &v in &b {
+            hb.record(v);
+            hc.record(v);
+        }
+        // merge via the atomic path…
+        let merged = Histogram::new();
+        merged.merge_from(&ha);
+        merged.merge_from(&hb);
+        assert_eq!(merged.snapshot(), hc.snapshot());
+        // …and via the snapshot path.
+        assert_eq!(ha.snapshot().merged(&hb.snapshot()), hc.snapshot());
+    }
+
+    #[test]
+    fn quantile_estimates_are_bucket_bounded_and_monotone() {
+        let h = Histogram::new();
+        let mut rng = XorShift128Plus::new(3);
+        let mut vals: Vec<u64> = (0..1000).map(|_| 10 + rng.next_u64() % 500_000).collect();
+        for &v in &vals {
+            h.record(v);
+        }
+        vals.sort_unstable();
+        let s = h.snapshot();
+        let mut prev = 0.0;
+        for q in [0.0, 0.1, 0.5, 0.9, 0.99, 1.0] {
+            let est = s.quantile_us(q).unwrap();
+            assert!(est >= prev, "quantile must be monotone in q");
+            prev = est;
+            // Bucket-bounded error: the estimate's bucket contains (or
+            // neighbors, at bucket edges) the true order statistic.
+            let rank = ((q * vals.len() as f64).ceil().max(1.0) as usize).min(vals.len()) - 1;
+            let truth = vals[rank];
+            let bi = Histogram::bucket_index(truth);
+            let lo = if bi == 0 { 0.0 } else { BUCKET_BOUNDS_US[bi - 1] as f64 };
+            let hi = BUCKET_BOUNDS_US[bi.min(BUCKET_BOUNDS_US.len() - 1)] as f64;
+            assert!(
+                est >= lo && est <= hi,
+                "q={q}: est {est} outside bucket [{lo},{hi}] of truth {truth}"
+            );
+        }
+        assert!(HistSnapshot::empty().quantile_us(0.5).is_none());
+    }
+
+    #[test]
+    fn label_escaping_covers_quote_backslash_newline() {
+        assert_eq!(escape_label(r#"a"b\c"#), r#"a\"b\\c"#);
+        assert_eq!(escape_label("x\ny"), "x\\ny");
+        assert_eq!(escape_label("plain"), "plain");
+    }
+
+    #[test]
+    fn exposition_format_is_exact_for_a_tiny_family() {
+        let obsv = ServiceObsv::new();
+        obsv.inflight.add(3);
+        obsv.workers_total.set(2);
+        obsv.on_terminal(labels(), Outcome::Ok, Some(3), 5);
+        let text = obsv.render_prometheus(&ServiceCounters::default(), 1, 256);
+        assert!(text.contains("# TYPE lpcs_job_e2e_us histogram\n"));
+        assert!(text.contains(
+            "lpcs_job_e2e_us_bucket{solver=\"qniht\",engine=\"native-quant\",bits=\"2\",\
+             outcome=\"ok\",le=\"8\"} 1\n"
+        ));
+        assert!(text.contains(
+            "lpcs_job_e2e_us_bucket{solver=\"qniht\",engine=\"native-quant\",bits=\"2\",\
+             outcome=\"ok\",le=\"4\"} 0\n"
+        ));
+        assert!(text.contains(
+            "lpcs_job_e2e_us_bucket{solver=\"qniht\",engine=\"native-quant\",bits=\"2\",\
+             outcome=\"ok\",le=\"+Inf\"} 1\n"
+        ));
+        assert!(text.contains(
+            "lpcs_job_e2e_us_sum{solver=\"qniht\",engine=\"native-quant\",bits=\"2\",\
+             outcome=\"ok\"} 5\n"
+        ));
+        assert!(text.contains(
+            "lpcs_job_e2e_us_count{solver=\"qniht\",engine=\"native-quant\",bits=\"2\",\
+             outcome=\"ok\"} 1\n"
+        ));
+        assert!(text.contains(
+            "lpcs_jobs_total{solver=\"qniht\",engine=\"native-quant\",bits=\"2\",\
+             outcome=\"ok\"} 1\n"
+        ));
+        assert!(text.contains("lpcs_inflight_jobs 2\n")); // 3 admitted − 1 terminal
+        assert!(text.contains("lpcs_workers_total 2\n"));
+        assert!(text.contains("lpcs_queue_depth 1\n"));
+        assert!(text.contains("lpcs_queue_capacity 256\n"));
+        // exec was recorded too (no outcome label on that family).
+        assert!(text.contains(
+            "lpcs_job_exec_us_count{solver=\"qniht\",engine=\"native-quant\",bits=\"2\"} 1\n"
+        ));
+    }
+
+    /// A minimal exposition parser: `name{labels} value` → map. Enough
+    /// to prove the text round-trips (series naming + label order).
+    fn parse_back(text: &str) -> HashMap<String, u64> {
+        let mut out = HashMap::new();
+        for line in text.lines() {
+            if line.starts_with('#') || line.is_empty() {
+                continue;
+            }
+            let (series, value) = line.rsplit_once(' ').expect("metric line has a value");
+            if let Ok(v) = value.parse::<u64>() {
+                out.insert(series.to_string(), v);
+            } else {
+                // gauges can be negative; store wrapped for presence checks
+                let v: i64 = value.parse().expect("metric value parses as a number");
+                out.insert(series.to_string(), v as u64);
+            }
+        }
+        out
+    }
+
+    #[test]
+    fn exposition_parses_back_consistently() {
+        let obsv = ServiceObsv::new();
+        let l2 = labels();
+        let l8 = JobLabels { solver: "niht", engine: "native-dense", bits: 32 };
+        for us in [2u64, 9, 70, 1500] {
+            obsv.inflight.add(1);
+            obsv.on_terminal(l2, Outcome::Ok, Some(us), us + 1);
+        }
+        obsv.inflight.add(1);
+        obsv.on_terminal(l2, Outcome::Failed, Some(11), 12);
+        obsv.inflight.add(1);
+        obsv.on_terminal(l8, Outcome::Cancelled, None, 40);
+        let parsed =
+            parse_back(&obsv.render_prometheus(&ServiceCounters::default(), 0, 16));
+        // _count == sum of outcome counters, per label set.
+        let c2: u64 = [
+            "lpcs_jobs_total{solver=\"qniht\",engine=\"native-quant\",bits=\"2\",outcome=\"ok\"}",
+            "lpcs_jobs_total{solver=\"qniht\",engine=\"native-quant\",bits=\"2\",outcome=\"failed\"}",
+        ]
+        .iter()
+        .map(|k| parsed.get(*k).copied().unwrap_or(0))
+        .sum();
+        let e2e2: u64 = [
+            "lpcs_job_e2e_us_count{solver=\"qniht\",engine=\"native-quant\",bits=\"2\",outcome=\"ok\"}",
+            "lpcs_job_e2e_us_count{solver=\"qniht\",engine=\"native-quant\",bits=\"2\",outcome=\"failed\"}",
+        ]
+        .iter()
+        .map(|k| parsed.get(*k).copied().unwrap_or(0))
+        .sum();
+        assert_eq!(c2, 5);
+        assert_eq!(e2e2, 5);
+        assert_eq!(
+            parsed["lpcs_jobs_total{solver=\"niht\",engine=\"native-dense\",bits=\"32\",outcome=\"cancelled\"}"],
+            1
+        );
+        // +Inf bucket equals _count for every series that has one.
+        for (k, v) in &parsed {
+            if let Some(prefix) = k.strip_suffix(",le=\"+Inf\"}") {
+                let count_key = format!(
+                    "{}}}",
+                    prefix.replacen("_bucket{", "_count{", 1)
+                );
+                assert_eq!(parsed[&count_key], *v, "+Inf bucket != _count for {k}");
+            }
+        }
+        assert_eq!(parsed["lpcs_inflight_jobs"], 0); // 6 admitted − 6 terminal
+    }
+
+    #[test]
+    fn legacy_service_text_is_byte_compatible() {
+        let c = ServiceCounters {
+            submitted: 10,
+            rejected: 1,
+            invalid: 2,
+            completed: 7,
+            failed: 1,
+            cancelled: 1,
+            batches: 4,
+            batched_jobs: 9,
+            solve_us: 123_456,
+            modeled_us: 42_000,
+            progress_dropped: 3,
+            disconnects: 1,
+            pool_contention: 5,
+            queue_depth: None,
+        };
+        assert_eq!(
+            c.render_legacy(),
+            "submitted=10 rejected=1 invalid=2 completed=7 failed=1 cancelled=1 \
+             batches=4 mean_batch=2.25 solve_ms=123 modeled_ms=42 progress_dropped=3 \
+             disconnects=1 pool_contention=5"
+        );
+        let wire = ServiceCounters { queue_depth: Some(6), ..c };
+        assert!(wire.render_legacy().ends_with(" pool_contention=5 queue_depth=6"));
+        // Zero batches: mean is 0.00, not NaN.
+        let empty = ServiceCounters::default();
+        assert!(empty.render_legacy().contains("mean_batch=0.00"));
+    }
+
+    #[test]
+    fn legacy_router_text_is_byte_compatible() {
+        let c = RouterCounters {
+            routed: 5,
+            rejected_full: 1,
+            rejected_down: 0,
+            resumed: 2,
+            backend_down: 1,
+            inflight: 3,
+            per_backend: vec![
+                BackendCounters { routed: 3, resumed: 2, down_events: 1, ..Default::default() },
+                BackendCounters { routed: 2, ..Default::default() },
+            ],
+        };
+        assert_eq!(
+            MetricsSnapshot::Router(c).render_legacy(),
+            "routed=5 rejected_full=1 rejected_down=0 resumed=2 backend_down=1 \
+             b0[routed=3 resumed=2 down=1] b1[routed=2 resumed=0 down=0]"
+        );
+    }
+
+    #[test]
+    fn router_prometheus_renders_backend_series() {
+        let c = RouterCounters {
+            routed: 5,
+            per_backend: vec![BackendCounters {
+                addr: "127.0.0.1:7070".into(),
+                routed: 5,
+                up: true,
+                queue_depth: 2,
+                ..Default::default()
+            }],
+            ..Default::default()
+        };
+        let text = render_router_prometheus(&c);
+        assert!(text.contains("lpcs_router_routed_total 5\n"));
+        assert!(text
+            .contains("lpcs_router_backend_up{backend=\"0\",addr=\"127.0.0.1:7070\"} 1\n"));
+        assert!(text.contains(
+            "lpcs_router_backend_queue_depth{backend=\"0\",addr=\"127.0.0.1:7070\"} 2\n"
+        ));
+    }
+}

@@ -14,7 +14,7 @@ use crate::wire::codec::{BackendStats, Message};
 use anyhow::{bail, Result};
 use std::sync::atomic::{AtomicBool, AtomicU32, AtomicU64, Ordering};
 use std::sync::Arc;
-use std::time::Duration;
+use std::time::{Duration, Instant};
 
 /// Shared health/load view of one configured backend. Lock-free: the
 /// data path reads `up`/`queue_depth` on every submit.
@@ -67,11 +67,22 @@ fn probe(addr: &str, timeout: Duration) -> Result<BackendStats> {
     }
 }
 
+/// Remaining sleep after a probe round: the configured period minus the
+/// time the round itself took, floored at zero. Probes run serially
+/// under a per-probe timeout, so k unreachable backends cost up to
+/// k×timeout of round time — the cadence must absorb that instead of
+/// adding a full period on top (which would stretch down-detection and
+/// re-admission linearly in the number of dead backends).
+fn cooldown(period: Duration, round_elapsed: Duration) -> Duration {
+    period.saturating_sub(round_elapsed)
+}
+
 /// The prober loop (one thread per router).
 pub(crate) fn run_prober(state: Arc<RouterState>) {
     let period = Duration::from_millis(state.cfg.probe_ms.max(10));
     let timeout = Duration::from_millis(state.cfg.probe_timeout_ms.max(10));
     while !state.is_shutdown() {
+        let round = Instant::now();
         for (i, b) in state.backends.iter().enumerate() {
             if state.is_shutdown() {
                 return;
@@ -96,6 +107,71 @@ pub(crate) fn run_prober(state: Arc<RouterState>) {
                 }
             }
         }
-        state.sleep_ticked(period);
+        state.sleep_ticked(cooldown(period, round.elapsed()));
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::RouterConfig;
+    use std::net::TcpListener;
+
+    #[test]
+    fn cooldown_deducts_round_time_and_floors_at_zero() {
+        let p = Duration::from_millis(200);
+        assert_eq!(cooldown(p, Duration::from_millis(0)), p);
+        assert_eq!(cooldown(p, Duration::from_millis(150)), Duration::from_millis(50));
+        assert_eq!(cooldown(p, Duration::from_millis(200)), Duration::ZERO);
+        assert_eq!(cooldown(p, Duration::from_millis(900)), Duration::ZERO);
+    }
+
+    #[test]
+    fn dead_backends_do_not_stretch_round_cadence() {
+        // Two backends that accept but never answer: every probe burns
+        // the full probe timeout, so a round takes ~2×timeout > period
+        // and the cooldown must collapse to zero. The old loop slept a
+        // FULL period on top of the round (cadence period + 2×timeout
+        // ≈ 500 ms); the fixed loop's cadence is the round time itself
+        // (~300 ms). Counting probe attempts over a fixed window
+        // separates the two cleanly.
+        let mut addrs = Vec::new();
+        for _ in 0..2 {
+            let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+            addrs.push(listener.local_addr().unwrap().to_string());
+            std::thread::spawn(move || {
+                // Hold accepted sockets open, never reply.
+                let mut held = Vec::new();
+                while let Ok((s, _)) = listener.accept() {
+                    held.push(s);
+                }
+            });
+        }
+        let cfg = RouterConfig {
+            backends: addrs,
+            probe_ms: 200,
+            probe_timeout_ms: 150,
+            // Never transitions down: this test pins cadence, not
+            // membership (and keeps ring rebuilds out of the picture).
+            down_after: u32::MAX,
+            ..Default::default()
+        };
+        let shutdown = Arc::new(AtomicBool::new(false));
+        let state = Arc::new(RouterState::new(cfg, shutdown.clone()));
+        let prober = {
+            let state = state.clone();
+            std::thread::spawn(move || run_prober(state))
+        };
+        std::thread::sleep(Duration::from_millis(1300));
+        shutdown.store(true, Ordering::SeqCst);
+        prober.join().unwrap();
+        let attempts: u64 = state
+            .backends
+            .iter()
+            .map(|b| b.failures.load(Ordering::Relaxed) as u64)
+            .sum();
+        // Fixed cadence: ~4 full rounds in 1.3 s → ≥ 7 attempts (the
+        // un-fixed 500 ms cadence manages ~5).
+        assert!(attempts >= 7, "prober made only {attempts} probe attempts in 1.3s");
     }
 }

@@ -50,6 +50,7 @@ pub use ring::HashRing;
 
 use crate::config::RouterConfig;
 use crate::coordinator::JobId;
+use crate::obsv::{BackendCounters, RouterCounters};
 use crate::wire::codec::{route_key, ErrCode, WireJobSpec};
 use anyhow::{bail, Context, Result};
 use std::collections::HashMap;
@@ -127,24 +128,34 @@ impl RouterMetrics {
         &self.per_backend[i]
     }
 
-    pub fn snapshot(&self) -> String {
-        let mut s = format!(
-            "routed={} rejected_full={} rejected_down={} resumed={} backend_down={}",
-            self.routed.load(Ordering::Relaxed),
-            self.rejected_full.load(Ordering::Relaxed),
-            self.rejected_down.load(Ordering::Relaxed),
-            self.resumed.load(Ordering::Relaxed),
-            self.backend_down_events.load(Ordering::Relaxed),
-        );
-        for (i, b) in self.per_backend.iter().enumerate() {
-            s.push_str(&format!(
-                " b{i}[routed={} resumed={} down={}]",
-                b.routed.load(Ordering::Relaxed),
-                b.resumed.load(Ordering::Relaxed),
-                b.down_events.load(Ordering::Relaxed),
-            ));
+    /// The counter half of [`RouterCounters`] — just this struct's
+    /// atomics; [`RouterState::snapshot_struct`] fills in the health
+    /// prober's per-backend view and the in-flight gauge.
+    fn counters_only(&self) -> RouterCounters {
+        RouterCounters {
+            routed: self.routed.load(Ordering::Relaxed),
+            rejected_full: self.rejected_full.load(Ordering::Relaxed),
+            rejected_down: self.rejected_down.load(Ordering::Relaxed),
+            resumed: self.resumed.load(Ordering::Relaxed),
+            backend_down: self.backend_down_events.load(Ordering::Relaxed),
+            inflight: 0,
+            per_backend: self
+                .per_backend
+                .iter()
+                .map(|b| BackendCounters {
+                    routed: b.routed.load(Ordering::Relaxed),
+                    resumed: b.resumed.load(Ordering::Relaxed),
+                    down_events: b.down_events.load(Ordering::Relaxed),
+                    ..BackendCounters::default()
+                })
+                .collect(),
         }
-        s
+    }
+
+    /// The legacy one-line text form (byte-compatible key order; pinned
+    /// by `obsv` tests).
+    pub fn snapshot(&self) -> String {
+        self.counters_only().render_legacy()
     }
 }
 
@@ -265,6 +276,27 @@ impl RouterState {
     /// is there to bound.
     pub fn inflight(&self) -> usize {
         self.table.lock().unwrap().values().filter(|e| !e.done).count()
+    }
+
+    /// The structured metrics snapshot for this router: routing counters
+    /// plus the health prober's per-backend view (up flag, last probed
+    /// queue depth/capacity) and the in-flight table size.
+    pub fn snapshot_struct(&self) -> RouterCounters {
+        let mut c = self.metrics.counters_only();
+        c.inflight = self.inflight() as u64;
+        for (b, bc) in self.backends.iter().zip(c.per_backend.iter_mut()) {
+            bc.addr = b.addr.clone();
+            bc.up = b.is_up();
+            bc.queue_depth = b.queue_depth.load(Ordering::Relaxed);
+            bc.queue_capacity = b.queue_capacity.load(Ordering::Relaxed);
+        }
+        c
+    }
+
+    /// Prometheus text exposition for the router face (`ScrapeReq` →
+    /// `Scrape` on the router listener; `lpcs scrape ADDR` prints it).
+    pub fn scrape(&self) -> String {
+        crate::obsv::render_router_prometheus(&self.snapshot_struct())
     }
 
     /// Register a placed job and hand out its router-scoped id.

@@ -139,7 +139,14 @@ pub(crate) fn handle_conn(mut conn: TcpStream, state: Arc<RouterState>) {
             },
             Message::Cancel { id } => send(&mut conn, &do_cancel(&state, id)).is_ok(),
             Message::MetricsReq => {
-                send(&mut conn, &Message::Metrics { snapshot: state.metrics.snapshot() }).is_ok()
+                let snapshot =
+                    crate::obsv::MetricsSnapshot::Router(state.snapshot_struct()).render_legacy();
+                send(&mut conn, &Message::Metrics { snapshot }).is_ok()
+            }
+            // The router face answers scrapes with its own exposition
+            // (routing counters + per-backend health), not a backend's.
+            Message::ScrapeReq => {
+                send(&mut conn, &Message::Scrape { text: state.scrape() }).is_ok()
             }
             // The router's own load sample, in the same frame backends
             // answer with: table occupancy against its bound, and how

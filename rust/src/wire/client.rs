@@ -215,6 +215,18 @@ impl WireClient {
         }
     }
 
+    /// The full Prometheus text exposition (`ScrapeReq` → `Scrape`) —
+    /// latency histograms, outcome counters and gauges per
+    /// [`crate::obsv`]. What `lpcs scrape ADDR` prints.
+    pub fn scrape(&mut self) -> Result<String> {
+        self.send(&Message::ScrapeReq)?;
+        match self.recv(REPLY_TIMEOUT)? {
+            Message::Scrape { text } => Ok(text),
+            Message::Err { code, msg } => bail!("scrape rejected ({code}): {msg}"),
+            other => bail!("unexpected reply to ScrapeReq: {other:?}"),
+        }
+    }
+
     /// One load sample (`StatsReq` → `Stats`): queue depth/capacity and
     /// worker count — the router's health probe.
     pub fn stats(&mut self) -> Result<BackendStats> {

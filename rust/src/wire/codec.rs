@@ -30,6 +30,8 @@
 //! | 11  | `QueuePos`   | server → client  | job id + queue position + queue depth |
 //! | 12  | `StatsReq`   | client → server  | (empty) |
 //! | 13  | `Stats`      | server → client  | [`BackendStats`] |
+//! | 14  | `ScrapeReq`  | client → server  | (empty) |
+//! | 15  | `Scrape`     | server → client  | Prometheus exposition text |
 //!
 //! The `epoch` on `Progress` is 0 for frames straight off a server; the
 //! router bumps it each time it re-subscribes upstream after a backend
@@ -37,6 +39,9 @@
 //! consecutive iterations. `QueuePos` frames are pushed while a
 //! subscribed job is still `Queued`. `StatsReq`/`Stats` is the cheap
 //! health/load probe the router polls backends with.
+//! `ScrapeReq`/`Scrape` (v3) is the observability face: the server
+//! answers with its full Prometheus text exposition (see
+//! [`crate::obsv`]); `lpcs scrape ADDR` is a one-shot client for it.
 
 use crate::algorithms::qniht::RequantMode;
 use crate::algorithms::{IterStat, SolveResult};
@@ -51,9 +56,14 @@ use std::time::Duration;
 
 /// Protocol version carried in every frame header. v2 added typed
 /// `Err` codes, the `Progress` epoch, and the `QueuePos`/`Stats`
-/// frames; v1 peers are rejected with `BadVersion` (surfaced as
+/// frames; v3 added the `ScrapeReq`/`Scrape` observability pair. The
+/// decoder stays tolerant of v2 peers ([`MIN_WIRE_VERSION`]) — v3 only
+/// *adds* frames, every v2 frame is byte-identical — while v1 peers
+/// are rejected with `BadVersion` (surfaced as
 /// [`ErrCode::VersionMismatch`] by the server).
-pub const WIRE_VERSION: u8 = 2;
+pub const WIRE_VERSION: u8 = 3;
+/// Oldest peer version [`decode`] accepts.
+pub const MIN_WIRE_VERSION: u8 = 2;
 /// version + tag + payload-length bytes.
 pub const HEADER_LEN: usize = 6;
 /// Trailing checksum bytes.
@@ -106,7 +116,7 @@ pub fn route_key(spec: &WireJobSpec) -> u64 {
 pub enum DecodeError {
     /// The buffer ends before the frame does (streaming: need more).
     Truncated,
-    /// Version byte is not [`WIRE_VERSION`].
+    /// Version byte is outside [`MIN_WIRE_VERSION`]..=[`WIRE_VERSION`].
     BadVersion(u8),
     /// Checksum mismatch — the frame was corrupted in flight.
     BadChecksum { expect: u32, got: u32 },
@@ -122,7 +132,10 @@ impl std::fmt::Display for DecodeError {
     fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
         match self {
             Self::Truncated => write!(f, "truncated frame"),
-            Self::BadVersion(v) => write!(f, "unknown wire version {v} (expect {WIRE_VERSION})"),
+            Self::BadVersion(v) => write!(
+                f,
+                "unknown wire version {v} (expect {MIN_WIRE_VERSION}..={WIRE_VERSION})"
+            ),
             Self::BadChecksum { expect, got } => {
                 write!(f, "frame checksum mismatch (expect {expect:#010x}, got {got:#010x})")
             }
@@ -256,6 +269,10 @@ pub enum Message {
     QueuePos { id: JobId, position: u64, depth: u64 },
     StatsReq,
     Stats(BackendStats),
+    /// Ask for the Prometheus text exposition (v3).
+    ScrapeReq,
+    /// The exposition text (`# HELP`/`# TYPE` + series lines; v3).
+    Scrape { text: String },
 }
 
 impl Message {
@@ -274,6 +291,8 @@ impl Message {
             Self::QueuePos { .. } => 11,
             Self::StatsReq => 12,
             Self::Stats(_) => 13,
+            Self::ScrapeReq => 14,
+            Self::Scrape { .. } => 15,
         }
     }
 }
@@ -850,6 +869,8 @@ pub fn try_encode(msg: &Message) -> Result<Vec<u8>, DecodeError> {
             put_u64(&mut payload, st.queue_capacity);
             put_u64(&mut payload, st.workers);
         }
+        Message::ScrapeReq => {}
+        Message::Scrape { text } => put_str(&mut payload, text),
     }
     if payload.len() > MAX_PAYLOAD {
         return Err(DecodeError::TooLarge(payload.len()));
@@ -871,7 +892,9 @@ pub fn decode(buf: &[u8]) -> Result<(Message, usize), DecodeError> {
     if buf.len() < HEADER_LEN {
         return Err(DecodeError::Truncated);
     }
-    if buf[0] != WIRE_VERSION {
+    // Tolerant of older peers back to MIN_WIRE_VERSION: v3 only ADDED
+    // the Scrape pair, so every v2 frame decodes identically.
+    if !(MIN_WIRE_VERSION..=WIRE_VERSION).contains(&buf[0]) {
         return Err(DecodeError::BadVersion(buf[0]));
     }
     let tag = buf[1];
@@ -920,6 +943,8 @@ pub fn decode(buf: &[u8]) -> Result<(Message, usize), DecodeError> {
             queue_capacity: r.u64()?,
             workers: r.u64()?,
         }),
+        14 => Message::ScrapeReq,
+        15 => Message::Scrape { text: r.string()? },
         t => return Err(DecodeError::UnknownTag(t)),
     };
     r.finish()?;
@@ -1020,6 +1045,9 @@ mod tests {
             Message::QueuePos { id: 11, position: 3, depth: 9 },
             Message::StatsReq,
             Message::Stats(BackendStats { queue_depth: 5, queue_capacity: 256, workers: 2 }),
+            Message::ScrapeReq,
+            Message::Scrape { text: "# TYPE lpcs_jobs_total counter\n".into() },
+            Message::Scrape { text: String::new() },
         ] {
             let frame = encode(&msg);
             let (back, used) = decode(&frame).unwrap();
@@ -1031,7 +1059,7 @@ mod tests {
     #[test]
     fn two_frames_in_one_buffer_decode_in_order() {
         let a = Message::Submitted { id: 1 };
-        let b = Message::Err { msg: "x".into() };
+        let b = Message::Err { code: ErrCode::Internal, msg: "x".into() };
         let mut buf = encode(&a);
         buf.extend_from_slice(&encode(&b));
         let (first, used) = decode(&buf).unwrap();
@@ -1042,12 +1070,41 @@ mod tests {
     }
 
     #[test]
+    fn v2_frames_still_decode() {
+        // A v2 peer's frame is byte-identical except the version byte —
+        // rewrite it and recompute the checksum (which covers the
+        // header) to fabricate exactly what a v2 sender emits.
+        for msg in [
+            Message::Submitted { id: 42 },
+            Message::MetricsReq,
+            Message::QueuePos { id: 1, position: 0, depth: 4 },
+        ] {
+            let mut frame = encode(&msg);
+            frame[0] = 2;
+            let body_end = frame.len() - TRAILER_LEN;
+            let sum = checksum(&frame[..body_end]);
+            let end = frame.len();
+            frame[body_end..end].copy_from_slice(&sum.to_le_bytes());
+            let (back, used) = decode(&frame).expect("v2 peer frames stay decodable");
+            assert_eq!(back, msg);
+            assert_eq!(used, frame.len());
+        }
+    }
+
+    #[test]
     fn version_checksum_tag_and_length_are_enforced() {
         let frame = encode(&Message::Submitted { id: 5 });
-        // Version byte.
-        let mut bad = frame.clone();
-        bad[0] = 9;
-        assert_eq!(decode(&bad), Err(DecodeError::BadVersion(9)));
+        // Version byte (v1 and future versions are both rejected; the
+        // checksum is recomputed so version is the only fault).
+        for v in [1u8, 9] {
+            let mut bad = frame.clone();
+            bad[0] = v;
+            let body_end = bad.len() - TRAILER_LEN;
+            let sum = checksum(&bad[..body_end]);
+            let end = bad.len();
+            bad[body_end..end].copy_from_slice(&sum.to_le_bytes());
+            assert_eq!(decode(&bad), Err(DecodeError::BadVersion(v)));
+        }
         // Flipped payload byte → checksum mismatch.
         let mut bad = frame.clone();
         bad[HEADER_LEN] ^= 0xFF;

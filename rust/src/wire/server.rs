@@ -297,13 +297,16 @@ fn handle_conn(
             }
             Message::MetricsReq => {
                 // Instantaneous queue depth rides along with the counter
-                // snapshot — same line, same format discipline.
-                let snapshot = format!(
-                    "{} queue_depth={}",
-                    service.metrics().snapshot(),
-                    service.queue_depth()
-                );
+                // snapshot — one structured value, one renderer (the
+                // legacy key order is pinned byte-compatible by
+                // `obsv::ServiceCounters` tests).
+                let mut counters = service.metrics().snapshot_struct();
+                counters.queue_depth = Some(service.queue_depth() as u64);
+                let snapshot = crate::obsv::MetricsSnapshot::Service(counters).render_legacy();
                 send(&mut conn, &Message::Metrics { snapshot }).is_ok()
+            }
+            Message::ScrapeReq => {
+                send(&mut conn, &Message::Scrape { text: service.scrape() }).is_ok()
             }
             Message::StatsReq => send(
                 &mut conn,
@@ -383,8 +386,11 @@ fn relay(
                     sub.detach();
                     return RelayEnd::Shutdown;
                 }
-                if let Some(position) = service.queue_position(id) {
-                    let pos = (position as u64, service.queue_depth() as u64);
+                // Position and depth MUST come from one queue-lock
+                // snapshot: reading them in two calls lets a drain slip
+                // between, publishing a frame where position >= depth.
+                if let Some((position, depth)) = service.queue_position_and_depth(id) {
+                    let pos = (position as u64, depth as u64);
                     if last_pos != Some(pos) {
                         last_pos = Some(pos);
                         let frame =

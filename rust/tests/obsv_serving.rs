@@ -1,0 +1,237 @@
+//! Observability conformance over the wire, on real serving stacks
+//! (`testkit::ServiceHarness` / `RouterHarness`):
+//!
+//! * a `ScrapeReq` frame against a live server returns a Prometheus
+//!   text exposition that is **internally consistent even mid-load**:
+//!   for every label set, `lpcs_job_e2e_us_count` equals the
+//!   outcome-labeled `lpcs_jobs_total` counter (both must come from one
+//!   snapshot of the same histogram family — the structural invariant
+//!   the `obsv` layer guarantees), every cumulative `_bucket` series is
+//!   monotone in `le`, and the `+Inf` bucket equals `_count`;
+//! * after the load drains, the `ok` totals account for every job per
+//!   (solver, engine, bits) label set and the in-flight gauge is back
+//!   to zero;
+//! * the router face answers `ScrapeReq` with its own exposition
+//!   (routing counters + per-backend health series), not the backend's.
+
+use lpcs::algorithms::SolveOptions;
+use lpcs::config::{EngineKind, ServiceConfig};
+use lpcs::coordinator::{JobSpec, ProblemHandle};
+use lpcs::rng::XorShift128Plus;
+use lpcs::solver::SolverKind;
+use lpcs::testkit::{RouterHarness, ServiceHarness};
+use lpcs::wire::WatchEvent;
+use lpcs::Mat;
+use std::collections::HashMap;
+use std::sync::Arc;
+use std::time::Duration;
+
+fn planted(m: usize, n: usize, s: usize, seed: u64) -> (Arc<Mat>, Vec<f32>) {
+    let mut rng = XorShift128Plus::new(seed);
+    let phi = Mat::from_fn(m, n, |_, _| rng.gaussian_f32() / (m as f32).sqrt());
+    let mut x = vec![0.0f32; n];
+    for i in rng.choose_k(n, s) {
+        x[i] = 2.0 * rng.gaussian_f32().signum() + 0.3 * rng.gaussian_f32();
+    }
+    let y = phi.matvec(&x);
+    (Arc::new(phi), y)
+}
+
+/// Parse an exposition into `series{labels} -> value`, ignoring
+/// `# HELP`/`# TYPE` lines. Values in our expositions are integral.
+fn parse(text: &str) -> HashMap<String, u64> {
+    let mut out = HashMap::new();
+    for line in text.lines().filter(|l| !l.is_empty() && !l.starts_with('#')) {
+        let (series, value) = line.rsplit_once(' ').unwrap_or_else(|| panic!("bad line: {line}"));
+        let value: u64 = value.parse().unwrap_or_else(|_| panic!("non-integer value: {line}"));
+        assert!(out.insert(series.to_string(), value).is_none(), "duplicate series: {series}");
+    }
+    out
+}
+
+/// The `le` bound of a `_bucket` series key, as a sortable float.
+fn le_bound(series: &str) -> f64 {
+    let le = series.split("le=\"").nth(1).expect("bucket has le").trim_end_matches("\"}");
+    if le == "+Inf" {
+        f64::INFINITY
+    } else {
+        le.parse().unwrap_or_else(|_| panic!("bad le bound in {series}"))
+    }
+}
+
+/// The structural invariants a scrape must satisfy *at any instant*,
+/// including with jobs queued and running while we parse.
+fn assert_internally_consistent(parsed: &HashMap<String, u64>) {
+    // Cumulative buckets are monotone in `le` and end at `_count`.
+    let mut families: HashMap<(String, String), Vec<(f64, u64)>> = HashMap::new();
+    for (k, v) in parsed {
+        let Some(idx) = k.find("_bucket{") else { continue };
+        let name = k[..idx].to_string();
+        let labels = k[idx + 7..].split(",le=").next().expect("labels before le").to_string();
+        families.entry((name, labels)).or_default().push((le_bound(k), *v));
+    }
+    assert!(!families.is_empty(), "no _bucket series in the exposition");
+    for ((name, labels), mut buckets) in families {
+        buckets.sort_by(|a, b| a.0.total_cmp(&b.0));
+        assert!(
+            buckets.windows(2).all(|w| w[0].1 <= w[1].1),
+            "{name}{labels}: cumulative buckets not monotone: {buckets:?}"
+        );
+        let (inf, inf_v) = *buckets.last().unwrap();
+        assert!(inf.is_infinite(), "{name}{labels}: missing +Inf bucket");
+        let count = parsed[&format!("{name}_count{labels}}}")];
+        assert_eq!(inf_v, count, "{name}{labels}: +Inf bucket != _count");
+    }
+    // The e2e histogram count and the outcome counter are two renderings
+    // of the SAME family snapshot: they must agree series-for-series.
+    let mut checked = 0;
+    for (k, v) in parsed {
+        if let Some(labels) = k.strip_prefix("lpcs_job_e2e_us_count") {
+            let total = parsed
+                .get(&format!("lpcs_jobs_total{labels}"))
+                .unwrap_or_else(|| panic!("no lpcs_jobs_total for {k}"));
+            assert_eq!(v, total, "e2e count and outcome counter disagree for {labels}");
+            checked += 1;
+        }
+    }
+    for (k, _) in parsed {
+        if let Some(labels) = k.strip_prefix("lpcs_jobs_total") {
+            assert!(
+                parsed.contains_key(&format!("lpcs_job_e2e_us_count{labels}")),
+                "outcome counter {k} has no e2e histogram"
+            );
+        }
+    }
+    assert!(checked > 0, "no terminal label sets to check yet");
+}
+
+#[test]
+fn mid_load_scrape_is_internally_consistent_and_drains_to_exact_totals() {
+    // One worker, batch size 1: jobs queue behind a slow one, so the
+    // mid-load scrape observes a mix of terminal, running, and queued
+    // jobs under two distinct label sets.
+    let h = ServiceHarness::start(
+        ServiceConfig {
+            workers: 1,
+            queue_capacity: 8,
+            max_batch: 1,
+            max_wait_ms: 0,
+            ..Default::default()
+        },
+        SolveOptions::default().with_tol(0.0).with_max_iters(600),
+    );
+    let mut client = h.client();
+
+    // Two short qniht jobs, fully drained first: guaranteed terminal
+    // series for the quantized label set before the load phase.
+    let (phi_q, y_q) = planted(96, 192, 5, 11);
+    let qspec = JobSpec::builder(ProblemHandle::new(phi_q), y_q, 5)
+        .solver(SolverKind::qniht_fixed(8, 8))
+        .engine(EngineKind::NativeQuant)
+        .seed(1)
+        .build();
+    for _ in 0..2 {
+        let id = client.submit(&qspec).unwrap();
+        h.service().wait(id, Duration::from_secs(60)).expect("qniht job drains");
+    }
+
+    // A slow dense blocker plus three dense jobs queued behind it.
+    let (phi_b, y_b) = planted(256, 2048, 4, 12);
+    let blocker = JobSpec::builder(ProblemHandle::new(phi_b), y_b, 4)
+        .solver(SolverKind::Niht)
+        .engine(EngineKind::NativeDense)
+        .seed(2)
+        .build();
+    let (phi_d, y_d) = planted(96, 192, 5, 13);
+    let dense = JobSpec::builder(ProblemHandle::new(phi_d), y_d, 5)
+        .solver(SolverKind::Niht)
+        .engine(EngineKind::NativeDense)
+        .seed(3)
+        .build();
+    let mut ids = vec![client.submit(&blocker).unwrap()];
+    for _ in 0..3 {
+        ids.push(client.submit(&dense).unwrap());
+    }
+
+    // Mid-load: scrape over the wire while the blocker runs.
+    let mid = client.scrape().expect("scrape mid-load");
+    let parsed = parse(&mid);
+    assert_internally_consistent(&parsed);
+    assert_eq!(parsed["lpcs_workers_total"], 1);
+    assert_eq!(parsed["lpcs_queue_capacity"], 8);
+    assert_eq!(
+        parsed["lpcs_jobs_total{solver=\"qniht\",engine=\"native-quant\",bits=\"8\",outcome=\"ok\"}"],
+        2,
+        "the drained qniht jobs are terminal before the load phase"
+    );
+    assert!(parsed["lpcs_inflight_jobs"] <= 4, "at most the four dense jobs are in flight");
+
+    // Drain and re-scrape: exact totals per label set, gauge at zero.
+    for id in ids {
+        h.service().wait(id, Duration::from_secs(120)).expect("dense job drains");
+    }
+    let parsed = parse(&client.scrape().expect("scrape after drain"));
+    assert_internally_consistent(&parsed);
+    assert_eq!(
+        parsed["lpcs_jobs_total{solver=\"qniht\",engine=\"native-quant\",bits=\"8\",outcome=\"ok\"}"],
+        2
+    );
+    assert_eq!(
+        parsed["lpcs_jobs_total{solver=\"niht\",engine=\"native-dense\",bits=\"32\",outcome=\"ok\"}"],
+        4
+    );
+    assert_eq!(parsed["lpcs_inflight_jobs"], 0);
+    assert_eq!(parsed["lpcs_jobs_submitted_total"], 6);
+    // All four timing histograms exist for the dense label set.
+    for family in ["queue_wait", "setup", "exec"] {
+        assert!(
+            parsed.contains_key(&format!(
+                "lpcs_job_{family}_us_count{{solver=\"niht\",engine=\"native-dense\",bits=\"32\"}}"
+            )),
+            "missing lpcs_job_{family}_us for the dense label set"
+        );
+    }
+    h.shutdown();
+}
+
+#[test]
+fn router_face_answers_scrape_with_its_own_exposition() {
+    let h = RouterHarness::start(
+        2,
+        ServiceConfig { workers: 1, queue_capacity: 8, max_batch: 2, ..Default::default() },
+        SolveOptions::default(),
+    );
+    let mut client = h.client();
+    let (phi, y) = planted(96, 192, 5, 21);
+    let spec = JobSpec::builder(ProblemHandle::new(phi), y, 5)
+        .solver(SolverKind::Niht)
+        .engine(EngineKind::NativeDense)
+        .seed(4)
+        .build();
+    let id = client.submit(&spec).unwrap();
+    for event in client.watch(id).unwrap() {
+        if let WatchEvent::Done(out) = event.unwrap() {
+            assert!(out.error.is_none(), "{:?}", out.error);
+        }
+    }
+
+    let parsed = parse(&client.scrape().expect("scrape through the router"));
+    assert!(parsed["lpcs_router_routed_total"] >= 1);
+    assert_eq!(parsed["lpcs_router_inflight"], 0);
+    for i in 0..2 {
+        assert!(
+            parsed.keys().any(|k| k.starts_with(&format!(
+                "lpcs_router_backend_up{{backend=\"{i}\","
+            ))),
+            "backend {i} missing from the router exposition"
+        );
+    }
+    // Router metrics only — the solver histograms belong to the
+    // backends' own scrape faces.
+    assert!(!parsed.keys().any(|k| k.starts_with("lpcs_job_")));
+
+    // A backend scraped directly still serves the full solver view.
+    let backend = parse(&h.backend_client(0).scrape().expect("scrape backend 0"));
+    assert!(backend.contains_key("lpcs_workers_total"));
+    h.shutdown();
+}

@@ -1,0 +1,81 @@
+//! Bench: federated-scrape latency vs fleet size. One `ScrapeReq` at
+//! the router fans out to every healthy backend, parses each
+//! exposition and merges the histogram families into a single fleet
+//! view — so the scrape path costs one serial wire round-trip per
+//! backend plus the parse/merge work. This pins how that grows with
+//! backend count (1, 2, 4) against the single-backend direct scrape
+//! baseline. Writes `BENCH_obsv.json`.
+
+use lpcs::algorithms::SolveOptions;
+use lpcs::benchkit::JsonReporter;
+use lpcs::config::{EngineKind, ServiceConfig};
+use lpcs::coordinator::{JobSpec, JobState, ProblemHandle};
+use lpcs::rng::XorShift128Plus;
+use lpcs::testkit::RouterHarness;
+use lpcs::wire::WatchEvent;
+use lpcs::Mat;
+use std::sync::Arc;
+
+fn planted(m: usize, n: usize, s: usize, seed: u64) -> (Arc<Mat>, Vec<f32>) {
+    let mut rng = XorShift128Plus::new(seed);
+    let phi = Mat::from_fn(m, n, |_, _| rng.gaussian_f32() / (m as f32).sqrt());
+    let mut x = vec![0.0f32; n];
+    for i in rng.choose_k(n, s) {
+        x[i] = 1.5;
+    }
+    let y = phi.matvec(&x);
+    (Arc::new(phi), y)
+}
+
+fn main() {
+    let (m, n, s) = (128usize, 256usize, 8usize);
+    let opts = SolveOptions { max_iters: 40, ..Default::default() };
+    let svc = ServiceConfig {
+        workers: 2,
+        queue_capacity: 256,
+        max_batch: 8,
+        max_wait_ms: 2,
+        ..Default::default()
+    };
+    let mut rep = JsonReporter::new("obsv");
+
+    for backends in [1usize, 2, 4] {
+        let h = RouterHarness::start(backends, svc, opts.clone());
+        // Populate every backend's histograms with real terminal jobs so
+        // the scrape parses and merges non-trivial expositions (the
+        // round-robin in the affinity-less case would do, but affinity
+        // hashing over distinct operators spreads load well enough here).
+        for k in 0..(4 * backends as u64) {
+            let (phi, y) = planted(m, n, s, 10 + k);
+            let spec = JobSpec::builder(ProblemHandle::new(phi), y, s)
+                .bits(4, 8)
+                .engine(EngineKind::NativeQuant)
+                .seed(k)
+                .build();
+            let mut c = h.client();
+            let id = c.submit(&spec).expect("routed submit");
+            for event in c.watch(id).expect("watch") {
+                if let WatchEvent::Done(out) = event.expect("stream event") {
+                    assert_eq!(out.state, JobState::Done, "{:?}", out.error);
+                }
+            }
+        }
+
+        if backends == 1 {
+            let mut direct = h.backend_client(0);
+            rep.run("backend scrape direct (baseline)", 2, 31, || {
+                direct.scrape().expect("direct scrape").len()
+            });
+        }
+        let mut c = h.client();
+        let label = format!("federated scrape, {backends} backend(s)");
+        let stats = rep.run(&label, 2, 31, || c.scrape().expect("federated scrape").len());
+        println!("{label}: median {:?}", stats.median);
+        h.shutdown();
+    }
+
+    match rep.write_file(".") {
+        Ok(path) => println!("\nwrote {}", path.display()),
+        Err(e) => eprintln!("\nfailed to write BENCH_obsv.json: {e}"),
+    }
+}

@@ -7,7 +7,7 @@ use lpcs::algorithms::qniht::{QuantKernel, RequantMode};
 use lpcs::algorithms::NihtKernel;
 use lpcs::benchkit::JsonReporter;
 use lpcs::linalg::Mat;
-use lpcs::obsv::{Histogram, JobLabels, Outcome, ServiceObsv};
+use lpcs::obsv::{Histogram, JobLabels, Outcome, ServiceObsv, TraceId};
 use lpcs::rng::XorShift128Plus;
 use lpcs::runtime::{XlaDenseKernel, XlaQuantKernel};
 use std::path::Path;
@@ -67,7 +67,7 @@ fn main() {
             x = k.full_step(&x, s).x_next;
         }
         if let Some(o) = obsv {
-            o.on_terminal(labels, Outcome::Ok, Some(1_800), 2_000);
+            o.on_terminal(labels, Outcome::Ok, Some(1_800), 2_000, TraceId(0xbe11));
         }
         x
     };

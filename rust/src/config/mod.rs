@@ -131,6 +131,13 @@ pub struct ServiceConfig {
     /// static nominal-iteration estimate — what deterministic tests and
     /// reproducible scheduling traces want.
     pub calibrate_cost: bool,
+    /// Persist the calibrated cost model across restarts: graceful
+    /// shutdown writes the observed per-cost-class EWMAs to
+    /// `<artifact_dir>/cost_model.v1` and the next boot warm-starts the
+    /// scheduler from it (corrupt file ⇒ counted cold start). Only
+    /// meaningful with `calibrate_cost`; off by default so tests and
+    /// benches stay hermetic.
+    pub persist_cost: bool,
 }
 
 impl Default for ServiceConfig {
@@ -143,6 +150,7 @@ impl Default for ServiceConfig {
             sched_window: 16,
             starvation_ms: 250,
             calibrate_cost: true,
+            persist_cost: false,
         }
     }
 }
@@ -324,6 +332,7 @@ impl LpcsConfig {
             "service.sched_window" => self.service.sched_window = vf()? as usize,
             "service.starvation_ms" => self.service.starvation_ms = vf()? as u64,
             "service.calibrate_cost" => self.service.calibrate_cost = value == "true",
+            "service.persist_cost" => self.service.persist_cost = value == "true",
             "wire.listen" | "listen" => self.wire.listen = value.to_string(),
             "wire.sub_depth" => self.wire.sub_depth = vf()? as usize,
             "router.backends" => {
@@ -529,6 +538,9 @@ mod tests {
         assert!(c.service.calibrate_cost, "calibration defaults on");
         c.set("service.calibrate_cost", "false").unwrap();
         assert!(!c.service.calibrate_cost);
+        assert!(!c.service.persist_cost, "persistence defaults off");
+        c.set("service.persist_cost", "true").unwrap();
+        assert!(c.service.persist_cost);
         c.set("service.sched_window", "0").unwrap();
         assert!(c.validate().is_err());
     }

@@ -130,6 +130,10 @@ pub struct JobSpec {
     pub solver: SolverKind,
     pub engine: EngineKind,
     pub seed: u64,
+    /// Fleet trace id (see [`crate::obsv::TraceId`]); 0 = untraced.
+    /// Deliberately excluded from [`JobSpec::batch_key`] and the wire
+    /// `route_key` — tracing must never change batching or placement.
+    pub trace: u64,
 }
 
 impl JobSpec {
@@ -147,6 +151,7 @@ impl JobSpec {
             bits_y: q.bits_y,
             solver: None,
             seed: 0,
+            trace: 0,
         }
     }
 
@@ -256,6 +261,7 @@ pub struct JobSpecBuilder {
     bits_y: u8,
     solver: Option<SolverKind>,
     seed: u64,
+    trace: u64,
 }
 
 impl JobSpecBuilder {
@@ -284,6 +290,13 @@ impl JobSpecBuilder {
         self
     }
 
+    /// Attach a fleet trace id (0 = untraced; see
+    /// [`crate::obsv::TraceId`]).
+    pub fn trace(mut self, trace: u64) -> Self {
+        self.trace = trace;
+        self
+    }
+
     pub fn build(self) -> JobSpec {
         let solver = self.solver.unwrap_or(if self.engine.is_quantized() {
             SolverKind::Qniht {
@@ -301,6 +314,7 @@ impl JobSpecBuilder {
             solver,
             engine: self.engine,
             seed: self.seed,
+            trace: self.trace,
         }
     }
 }
@@ -344,6 +358,8 @@ pub struct JobOutcome {
     pub error: Option<String>,
     pub queued_for: Duration,
     pub ran_for: Duration,
+    /// Fleet trace id the job carried (0 = untraced).
+    pub trace: u64,
 }
 
 /// One event delivered to a progress subscriber: a per-iteration stat,
@@ -491,6 +507,8 @@ struct Record {
     /// Push-based progress subscribers (wire clients); every stat fans
     /// out here, and the terminal transition delivers the outcome.
     subs: Vec<Arc<ProgressSub>>,
+    /// Fleet trace id carried from the submit face (0 = untraced).
+    trace: u64,
 }
 
 impl Record {
@@ -511,6 +529,7 @@ impl Record {
             error: self.error.clone(),
             queued_for,
             ran_for,
+            trace: self.trace,
         }
     }
 }
@@ -527,7 +546,7 @@ impl JobStore {
         Self::default()
     }
 
-    pub fn insert_queued(&self, id: JobId) {
+    pub fn insert_queued(&self, id: JobId, trace: u64) {
         let mut g = self.inner.lock().unwrap();
         let prev = g.insert(
             id,
@@ -541,9 +560,15 @@ impl JobStore {
                 progress: None,
                 cancel: false,
                 subs: Vec::new(),
+                trace,
             },
         );
         assert!(prev.is_none(), "job id {id} reused");
+    }
+
+    /// The fleet trace id a job carries (0 for untraced or unknown ids).
+    pub fn trace_of(&self, id: JobId) -> u64 {
+        self.inner.lock().unwrap().get(&id).map(|r| r.trace).unwrap_or(0)
     }
 
     /// Stream the latest iteration stat for a running job (worker-side)
@@ -725,7 +750,7 @@ mod tests {
     #[test]
     fn legal_lifecycle() {
         let s = JobStore::new();
-        s.insert_queued(1);
+        s.insert_queued(1, 0);
         assert_eq!(s.state(1), Some(JobState::Queued));
         s.transition(1, JobState::Running);
         s.complete(1, dummy_result());
@@ -735,7 +760,7 @@ mod tests {
     #[test]
     fn queued_age_is_zero_once_dispatched_and_wait_is_frozen_at_running() {
         let s = JobStore::new();
-        s.insert_queued(1);
+        s.insert_queued(1, 0);
         std::thread::sleep(Duration::from_millis(5));
         assert!(s.queued_age_us(1) > 0, "a queued job ages");
         let wait = s.transition(1, JobState::Running).expect("Running returns the queue wait");
@@ -757,7 +782,7 @@ mod tests {
     #[should_panic(expected = "illegal transition")]
     fn illegal_transition_panics() {
         let s = JobStore::new();
-        s.insert_queued(1);
+        s.insert_queued(1, 0);
         s.transition(1, JobState::Done); // must pass through Running
     }
 
@@ -765,14 +790,14 @@ mod tests {
     #[should_panic(expected = "reused")]
     fn duplicate_id_panics() {
         let s = JobStore::new();
-        s.insert_queued(1);
-        s.insert_queued(1);
+        s.insert_queued(1, 0);
+        s.insert_queued(1, 0);
     }
 
     #[test]
     fn wait_returns_outcome() {
         let s = Arc::new(JobStore::new());
-        s.insert_queued(5);
+        s.insert_queued(5, 0);
         let s2 = s.clone();
         let h = std::thread::spawn(move || {
             std::thread::sleep(Duration::from_millis(10));
@@ -788,14 +813,14 @@ mod tests {
     #[test]
     fn wait_times_out() {
         let s = JobStore::new();
-        s.insert_queued(9);
+        s.insert_queued(9, 0);
         assert!(s.wait(9, Duration::from_millis(20)).is_none());
     }
 
     #[test]
     fn failed_jobs_carry_error() {
         let s = JobStore::new();
-        s.insert_queued(2);
+        s.insert_queued(2, 0);
         s.transition(2, JobState::Running);
         s.fail(2, "boom".into());
         let out = s.wait(2, Duration::from_millis(10)).unwrap();
@@ -806,7 +831,7 @@ mod tests {
     #[test]
     fn progress_and_cancel_roundtrip() {
         let s = JobStore::new();
-        s.insert_queued(3);
+        s.insert_queued(3, 0);
         assert!(s.progress(3).is_none());
         assert!(!s.cancel_requested(3));
         let stat = IterStat {
@@ -834,7 +859,7 @@ mod tests {
     #[test]
     fn subscriber_drop_oldest_keeps_latest_and_never_blocks() {
         let s = JobStore::new();
-        s.insert_queued(1);
+        s.insert_queued(1, 0);
         s.transition(1, JobState::Running);
         let sub = s.subscribe(1, 3).expect("known job");
         // Push 10 stats into a depth-3 queue: 7 drop (oldest first), the
@@ -868,7 +893,7 @@ mod tests {
     fn subscribe_after_terminal_yields_outcome_and_unknown_is_none() {
         let s = JobStore::new();
         assert!(s.subscribe(42, 4).is_none(), "unknown job");
-        s.insert_queued(1);
+        s.insert_queued(1, 0);
         s.transition(1, JobState::Running);
         s.fail(1, "boom".into());
         let sub = s.subscribe(1, 4).expect("terminal jobs still subscribe");
@@ -884,7 +909,7 @@ mod tests {
     #[test]
     fn late_subscriber_sees_latest_stat_and_detached_subs_are_pruned() {
         let s = JobStore::new();
-        s.insert_queued(1);
+        s.insert_queued(1, 0);
         s.transition(1, JobState::Running);
         s.record_progress(1, stat(5));
         // A late subscriber is seeded with where the solve stands now.

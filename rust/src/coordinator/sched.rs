@@ -24,9 +24,10 @@
 //!    by a later job with its key.
 
 use std::collections::{HashMap, VecDeque};
+use std::path::Path;
 
 use super::batcher::Batch;
-use super::job::{BatchKey, JobId, JobSpec};
+use super::job::{BatchKey, JobId, JobSpec, OperatorSpec};
 use crate::solver::SolverKind;
 
 /// One queued job as the scheduler sees it. `age_us` is the time since
@@ -41,12 +42,53 @@ pub struct QueuedJob {
     pub high: bool,
 }
 
-/// Measured per-key batch cost, EWMA-smoothed (microseconds).
-#[derive(Debug, Clone, Copy, Default)]
-struct ObservedCost {
-    setup_us: f64,
-    job_exec_us: f64,
-    samples: u64,
+/// Measured per-key batch cost, EWMA-smoothed (microseconds). Also the
+/// unit the warm-start cost file persists across restarts (see
+/// [`save_cost_file`]).
+#[derive(Debug, Clone, Copy, Default, PartialEq)]
+pub struct ObservedCost {
+    pub setup_us: f64,
+    pub job_exec_us: f64,
+    pub samples: u64,
+}
+
+impl ObservedCost {
+    /// Fold one sample into the EWMA (first sample seeds the estimate).
+    fn fold(&mut self, alpha: f64, setup_us: f64, job_exec_us: f64) {
+        self.samples += 1;
+        if self.samples == 1 {
+            self.setup_us = setup_us;
+            self.job_exec_us = job_exec_us;
+        } else {
+            let a = alpha.clamp(f64::EPSILON, 1.0);
+            self.setup_us += a * (setup_us - self.setup_us);
+            self.job_exec_us += a * (job_exec_us - self.job_exec_us);
+        }
+    }
+}
+
+/// Restart-survivable identity of a job's cost class. [`BatchKey`] keys
+/// the live EWMA but embeds `Arc` pointers, which change every process;
+/// this hashes what those pointers stand for — operator shape and kind
+/// (dense vs partial-Fourier and its sampling bit width, plus any AOT
+/// shape tag), sparsity, engine, and the full solver configuration — so
+/// a calibration persisted at shutdown can warm-start the next boot.
+pub fn stable_cost_key(spec: &JobSpec) -> u64 {
+    let op = match &spec.problem.op {
+        OperatorSpec::Dense(_) => "dense".to_string(),
+        OperatorSpec::PartialFourier { bits, .. } => format!("pf:{bits:?}"),
+    };
+    let line = format!(
+        "{}x{} {} tag={} s={} {} {:?}",
+        spec.problem.m(),
+        spec.problem.n(),
+        op,
+        spec.problem.shape_tag.as_deref().unwrap_or("-"),
+        spec.s,
+        spec.engine.name(),
+        spec.solver,
+    );
+    crate::wire::fnv64(line.as_bytes())
 }
 
 /// Pure cost model in abstract work units (bytes of operand traffic).
@@ -90,6 +132,11 @@ pub struct CostModel {
     /// newest sample. 1.0 = always trust the latest measurement.
     pub ewma_alpha: f64,
     observed: HashMap<BatchKey, ObservedCost>,
+    /// Warm-start ledger keyed by [`stable_cost_key`]: seeded from the
+    /// persisted cost file on boot, updated alongside `observed` by
+    /// [`CostModel::observe_job`], consulted when a key has no live
+    /// samples yet. Empty unless the service persists calibration.
+    warm: HashMap<u64, ObservedCost>,
 }
 
 impl Default for CostModel {
@@ -102,6 +149,7 @@ impl Default for CostModel {
             calibrate: false,
             ewma_alpha: 0.3,
             observed: HashMap::new(),
+            warm: HashMap::new(),
         }
     }
 }
@@ -127,16 +175,56 @@ impl CostModel {
         {
             return;
         }
-        let e = self.observed.entry(*key).or_default();
-        e.samples += 1;
-        if e.samples == 1 {
-            e.setup_us = setup_us;
-            e.job_exec_us = job_exec_us;
-        } else {
-            let a = self.ewma_alpha.clamp(f64::EPSILON, 1.0);
-            e.setup_us += a * (setup_us - e.setup_us);
-            e.job_exec_us += a * (job_exec_us - e.job_exec_us);
+        let a = self.ewma_alpha;
+        self.observed.entry(*key).or_default().fold(a, setup_us, job_exec_us);
+    }
+
+    /// [`CostModel::observe`] plus the restart-survivable ledger: the
+    /// same sample also folds into the warm entry under
+    /// [`stable_cost_key`], which [`CostModel::export_warm`] /
+    /// [`save_cost_file`] persist across restarts. This is what the
+    /// service workers call per executed batch.
+    pub fn observe_job(&mut self, spec: &JobSpec, setup_us: f64, job_exec_us: f64) {
+        self.observe_keyed(&spec.batch_key(), stable_cost_key(spec), setup_us, job_exec_us);
+    }
+
+    /// [`CostModel::observe_job`] with both keys precomputed (callers
+    /// that consumed the spec before the timings were final).
+    pub fn observe_keyed(&mut self, key: &BatchKey, stable: u64, setup_us: f64, job_exec_us: f64) {
+        self.observe(key, setup_us, job_exec_us);
+        if !self.calibrate
+            || !setup_us.is_finite()
+            || !job_exec_us.is_finite()
+            || setup_us < 0.0
+            || job_exec_us < 0.0
+        {
+            return;
         }
+        let a = self.ewma_alpha;
+        self.warm.entry(stable).or_default().fold(a, setup_us, job_exec_us);
+    }
+
+    /// Warm-start the model from a persisted calibration (see
+    /// [`load_cost_file`]). Warm entries answer `setup_cost`/`job_cost`
+    /// for cost classes with no live observations yet; the live EWMA
+    /// takes over per [`BatchKey`] as batches execute.
+    pub fn seed_warm(&mut self, warm: HashMap<u64, ObservedCost>) {
+        self.warm = warm;
+    }
+
+    /// The restart-survivable ledger accumulated by
+    /// [`CostModel::observe_job`] (plus whatever seeded it).
+    pub fn export_warm(&self) -> &HashMap<u64, ObservedCost> {
+        &self.warm
+    }
+
+    /// The warm estimate for a spec's cost class, if the persisted
+    /// ledger holds one.
+    fn warm_cost(&self, spec: &JobSpec) -> Option<(f64, f64)> {
+        self.warm
+            .get(&stable_cost_key(spec))
+            .filter(|o| o.samples > 0)
+            .map(|o| (o.setup_us, o.job_exec_us))
     }
 
     /// The calibrated `(setup_us, job_exec_us)` estimate for a key, if
@@ -165,6 +253,9 @@ impl CostModel {
             if let Some((setup_us, _)) = self.observed_cost(&spec.batch_key()) {
                 return setup_us;
             }
+            if let Some((setup_us, _)) = self.warm_cost(spec) {
+                return setup_us;
+            }
         }
         match spec.problem.as_dense() {
             Some(phi) if spec.engine.is_quantized() => {
@@ -183,6 +274,9 @@ impl CostModel {
     pub fn job_cost(&self, spec: &JobSpec) -> f64 {
         if self.calibrate {
             if let Some((_, job_exec_us)) = self.observed_cost(&spec.batch_key()) {
+                return job_exec_us;
+            }
+            if let Some((_, job_exec_us)) = self.warm_cost(spec) {
                 return job_exec_us;
             }
         }
@@ -223,6 +317,79 @@ impl CostModel {
         self.setup_cost(lead) / jobs.len() as f64 + self.job_cost_in_batch(lead, jobs.len())
             - self.age_credit_per_us * max_age as f64
     }
+}
+
+/// First line of the persisted cost file; anything else is a corrupt
+/// (or future-versioned) file and loads as a cold start.
+pub const COST_FILE_HEADER: &str = "lpcs-cost-model v1";
+
+/// Merge `from` into `into`, weighting each cost class by its sample
+/// count — how workers fold their private ledgers into the service
+/// vault at shutdown without one idle worker diluting a busy one.
+pub fn merge_warm(into: &mut HashMap<u64, ObservedCost>, from: &HashMap<u64, ObservedCost>) {
+    for (k, f) in from {
+        if f.samples == 0 {
+            continue;
+        }
+        let e = into.entry(*k).or_default();
+        let total = e.samples + f.samples;
+        let wf = f.samples as f64 / total as f64;
+        e.setup_us += wf * (f.setup_us - e.setup_us);
+        e.job_exec_us += wf * (f.job_exec_us - e.job_exec_us);
+        e.samples = total;
+    }
+}
+
+/// Write the warm ledger as the small versioned text file the service
+/// reloads on boot: the header line, then one
+/// `<key_hex16> <setup_us> <exec_us> <samples>` row per cost class,
+/// key-sorted so the file is deterministic.
+pub fn save_cost_file(path: &Path, warm: &HashMap<u64, ObservedCost>) -> std::io::Result<()> {
+    let mut rows: Vec<(&u64, &ObservedCost)> =
+        warm.iter().filter(|(_, o)| o.samples > 0).collect();
+    rows.sort_by_key(|(k, _)| **k);
+    let mut out = String::from(COST_FILE_HEADER);
+    out.push('\n');
+    for (k, o) in rows {
+        out.push_str(&format!("{k:016x} {} {} {}\n", o.setup_us, o.job_exec_us, o.samples));
+    }
+    std::fs::write(path, out)
+}
+
+/// Corrupt-tolerant loader: any structural problem — unreadable file,
+/// wrong header, short row, unparsable or non-finite field — is an
+/// `Err` the service maps to a cold start (counted in its metrics,
+/// never a panic).
+pub fn load_cost_file(path: &Path) -> Result<HashMap<u64, ObservedCost>, String> {
+    let text =
+        std::fs::read_to_string(path).map_err(|e| format!("read {}: {e}", path.display()))?;
+    let mut lines = text.lines();
+    match lines.next() {
+        Some(h) if h == COST_FILE_HEADER => {}
+        other => return Err(format!("bad cost-file header: {other:?}")),
+    }
+    let mut warm = HashMap::new();
+    for (i, line) in lines.enumerate() {
+        let row = i + 2; // 1-based, after the header
+        if line.trim().is_empty() {
+            continue;
+        }
+        let f: Vec<&str> = line.split_whitespace().collect();
+        if f.len() != 4 {
+            return Err(format!("row {row}: expected 4 fields, got {}", f.len()));
+        }
+        let key =
+            u64::from_str_radix(f[0], 16).map_err(|e| format!("row {row}: key: {e}"))?;
+        let setup_us: f64 = f[1].parse().map_err(|e| format!("row {row}: setup: {e}"))?;
+        let job_exec_us: f64 = f[2].parse().map_err(|e| format!("row {row}: exec: {e}"))?;
+        let samples: u64 = f[3].parse().map_err(|e| format!("row {row}: samples: {e}"))?;
+        if !setup_us.is_finite() || !job_exec_us.is_finite() || setup_us < 0.0 || job_exec_us < 0.0
+        {
+            return Err(format!("row {row}: non-finite or negative cost"));
+        }
+        warm.insert(key, ObservedCost { setup_us, job_exec_us, samples });
+    }
+    Ok(warm)
 }
 
 /// Scheduler knobs (the service derives them from
@@ -562,5 +729,96 @@ mod tests {
         assert_eq!(cm.setup_cost(&seen), 777.0);
         // The batch amortization law still applies on the calibrated base.
         assert!(cm.job_cost_in_batch(&seen, 8) < cm.job_cost(&seen));
+    }
+
+    #[test]
+    fn stable_cost_key_survives_operator_identity_but_not_configuration() {
+        // Same shape/config, different Arc: the BatchKeys differ (pointer
+        // identity) but the stable keys — what the persisted file uses —
+        // must match, or a restart could never warm-start anything.
+        let phi_a = Arc::new(Mat::zeros(4, 8));
+        let phi_b = Arc::new(Mat::zeros(4, 8));
+        let a = job(0, &phi_a, 4, 0).spec;
+        let b = job(1, &phi_b, 4, 0).spec;
+        assert_ne!(a.batch_key(), b.batch_key());
+        assert_eq!(stable_cost_key(&a), stable_cost_key(&b));
+        // Anything that changes the executed math changes the key.
+        let other_bits = job(2, &phi_a, 2, 0).spec;
+        assert_ne!(stable_cost_key(&a), stable_cost_key(&other_bits));
+        let other_shape =
+            job(3, &Arc::new(Mat::zeros(8, 8)), 4, 0).spec;
+        assert_ne!(stable_cost_key(&a), stable_cost_key(&other_shape));
+    }
+
+    #[test]
+    fn warm_ledger_round_trips_through_the_cost_file() {
+        let phi = Arc::new(Mat::zeros(4, 8));
+        let spec = job(0, &phi, 4, 0).spec;
+        let mut cm = CostModel::calibrating();
+        cm.observe_job(&spec, 900.0, 450.0);
+        cm.observe_job(&spec, 900.0, 450.0);
+
+        let path = std::env::temp_dir()
+            .join(format!("lpcs-cost-roundtrip-{}.v1", std::process::id()));
+        save_cost_file(&path, cm.export_warm()).unwrap();
+        let loaded = load_cost_file(&path).unwrap();
+        std::fs::remove_file(&path).ok();
+        assert_eq!(&loaded, cm.export_warm());
+
+        // A fresh process: new Arc (new BatchKey), no live samples — the
+        // warm ledger answers, exactly.
+        let phi2 = Arc::new(Mat::zeros(4, 8));
+        let rebooted = job(1, &phi2, 4, 0).spec;
+        let mut next = CostModel::calibrating();
+        next.seed_warm(loaded);
+        assert_eq!(next.setup_cost(&rebooted), 900.0);
+        assert_eq!(next.job_cost(&rebooted), 450.0);
+        // Live observations take over per key once batches execute.
+        next.observe(&rebooted.batch_key(), 100.0, 50.0);
+        assert_eq!(next.setup_cost(&rebooted), 100.0);
+        // A frozen model ignores the warm ledger like everything else.
+        let mut frozen = CostModel::default();
+        frozen.seed_warm(next.export_warm().clone());
+        assert_eq!(frozen.setup_cost(&rebooted), CostModel::default().setup_cost(&rebooted));
+    }
+
+    #[test]
+    fn corrupt_cost_files_load_as_errors_never_panics() {
+        let dir = std::env::temp_dir();
+        let path = dir.join(format!("lpcs-cost-corrupt-{}.v1", std::process::id()));
+        for (case, text) in [
+            ("empty", ""),
+            ("wrong header", "lpcs-cost-model v9\n"),
+            ("short row", "lpcs-cost-model v1\ndeadbeef 1.0 2.0\n"),
+            ("non-hex key", "lpcs-cost-model v1\nzz 1.0 2.0 3\n"),
+            ("nan cost", "lpcs-cost-model v1\n00000000000000aa NaN 2.0 3\n"),
+            ("negative cost", "lpcs-cost-model v1\n00000000000000aa -1.0 2.0 3\n"),
+            ("binary junk", "\u{0}\u{1}\u{2}\n"),
+        ] {
+            std::fs::write(&path, text).unwrap();
+            assert!(load_cost_file(&path).is_err(), "case {case:?} must be rejected");
+        }
+        std::fs::remove_file(&path).ok();
+        assert!(load_cost_file(&path).is_err(), "missing file is an error, not a panic");
+    }
+
+    #[test]
+    fn merge_warm_weights_by_sample_count() {
+        let mut into = HashMap::from([(
+            7u64,
+            ObservedCost { setup_us: 100.0, job_exec_us: 10.0, samples: 3 },
+        )]);
+        let from = HashMap::from([
+            (7u64, ObservedCost { setup_us: 200.0, job_exec_us: 30.0, samples: 1 }),
+            (9u64, ObservedCost { setup_us: 50.0, job_exec_us: 5.0, samples: 2 }),
+            (11u64, ObservedCost::default()), // zero samples: ignored
+        ]);
+        merge_warm(&mut into, &from);
+        let e = into[&7];
+        assert_eq!(e.samples, 4);
+        assert!((e.setup_us - 125.0).abs() < 1e-9, "3:1 weighting: {}", e.setup_us);
+        assert!((e.job_exec_us - 15.0).abs() < 1e-9);
+        assert_eq!(into[&9].samples, 2, "new classes copy over");
+        assert!(!into.contains_key(&11));
     }
 }

@@ -20,15 +20,16 @@
 
 use super::job::{JobId, JobOutcome, JobSpec, JobState, JobStore};
 use super::queue::{BoundedQueue, Priority, PushError};
-use super::sched::{self, CostModel, QueuedJob, SchedConfig};
+use super::sched::{self, CostModel, ObservedCost, QueuedJob, SchedConfig};
 use crate::algorithms::{IterStat, ObserverSignal, SolveOptions};
 use crate::config::ServiceConfig;
-use crate::obsv::{JobLabels, Outcome, ServiceCounters, ServiceObsv};
+use crate::obsv::{JobLabels, Outcome, ServiceCounters, ServiceObsv, TraceId};
 use crate::solver::{BatchObserver, EngineRegistry, SolveRequest, SolverKind};
 use anyhow::{anyhow, Result};
+use std::collections::HashMap;
 use std::path::PathBuf;
 use std::sync::atomic::{AtomicU64, Ordering};
-use std::sync::Arc;
+use std::sync::{Arc, Mutex};
 use std::time::{Duration, Instant};
 
 /// Atomic counters exported by the service.
@@ -59,6 +60,13 @@ pub struct ServiceMetrics {
     /// Wire subscribers whose connection died mid-stream (the server
     /// dropped the subscription; the job itself kept running).
     pub disconnects: AtomicU64,
+    /// EWMA of per-job execution time (µs), fed by every executed batch.
+    /// This is what [`RecoveryService::retry_after_ms`] scales by queue
+    /// depth to derive the backpressure retry hint; 0 = no samples yet.
+    pub exec_ewma_us: AtomicU64,
+    /// Persisted cost-model files that failed to load at boot (corrupt
+    /// or unreadable ⇒ cold start, counted here, never a panic).
+    pub cost_load_errors: AtomicU64,
 }
 
 impl ServiceMetrics {
@@ -143,6 +151,13 @@ pub struct RecoveryService {
     workers: Vec<std::thread::JoinHandle<()>>,
     next_id: AtomicU64,
     solver: SolveOptions,
+    /// Where graceful shutdown persists the calibrated cost model
+    /// (`None` unless `service.persist_cost` is on).
+    cost_path: Option<PathBuf>,
+    /// Shared warm-cost vault: seeded from the persisted file at boot,
+    /// workers merge their private ledgers in as they exit, shutdown
+    /// writes it back out.
+    cost_vault: Arc<Mutex<HashMap<u64, ObservedCost>>>,
 }
 
 impl RecoveryService {
@@ -153,6 +168,19 @@ impl RecoveryService {
         let metrics = Arc::new(ServiceMetrics::default());
         let obsv = Arc::new(ServiceObsv::new());
         obsv.workers_total.set(cfg.workers as i64);
+        let cost_path = cfg.persist_cost.then(|| artifact_dir.join("cost_model.v1"));
+        let warm: HashMap<u64, ObservedCost> = match &cost_path {
+            Some(p) if p.exists() => match sched::load_cost_file(p) {
+                Ok(m) => m,
+                Err(_) => {
+                    // Corrupt file ⇒ cold start, counted, never a panic.
+                    metrics.cost_load_errors.fetch_add(1, Ordering::Relaxed);
+                    HashMap::new()
+                }
+            },
+            _ => HashMap::new(),
+        };
+        let cost_vault = Arc::new(Mutex::new(warm.clone()));
         let workers = (0..cfg.workers)
             .map(|w| {
                 let queue = queue.clone();
@@ -161,15 +189,29 @@ impl RecoveryService {
                 let obsv = obsv.clone();
                 let solver = solver.clone();
                 let artifact_dir = artifact_dir.clone();
+                let warm = warm.clone();
+                let vault = cost_vault.clone();
                 std::thread::Builder::new()
                     .name(format!("lpcs-worker-{w}"))
                     .spawn(move || {
-                        worker_loop(cfg, queue, store, metrics, obsv, solver, artifact_dir)
+                        worker_loop(
+                            cfg, queue, store, metrics, obsv, solver, artifact_dir, warm, vault,
+                        )
                     })
                     .expect("spawn worker")
             })
             .collect();
-        Self { queue, store, metrics, obsv, workers, next_id: AtomicU64::new(1), solver }
+        Self {
+            queue,
+            store,
+            metrics,
+            obsv,
+            workers,
+            next_id: AtomicU64::new(1),
+            solver,
+            cost_path,
+            cost_vault,
+        }
     }
 
     pub fn solver_options(&self) -> &SolveOptions {
@@ -190,25 +232,37 @@ impl RecoveryService {
     /// typed (validation vs. backpressure vs. shutdown).
     pub fn try_submit(
         &self,
-        spec: JobSpec,
+        mut spec: JobSpec,
         prio: Priority,
     ) -> std::result::Result<JobId, SubmitError> {
         if let Err(e) = spec.validate() {
             self.metrics.invalid.fetch_add(1, Ordering::Relaxed);
             return Err(SubmitError::Invalid(e));
         }
+        // This is the first submit face for in-process callers: untraced
+        // specs get their fleet trace id here (wire submits arrive with
+        // one already minted by the client or server face).
+        if spec.trace == 0 {
+            spec.trace = TraceId::mint_submit(&spec.y, spec.s).0;
+        }
         let labels = labels_of(&spec);
         let id = self.next_id.fetch_add(1, Ordering::Relaxed);
-        self.store.insert_queued(id);
+        self.store.insert_queued(id, spec.trace);
         self.metrics.submitted.fetch_add(1, Ordering::Relaxed);
         // Admitted from the store's point of view; terminal recording
         // (worker side or the rejection below) balances the gauge.
         self.obsv.inflight.add(1);
         match self.queue.try_push((id, spec, prio), prio) {
             Ok(()) => Ok(id),
-            Err(PushError::Full(_)) => {
+            Err(PushError::Full((_, spec, _))) => {
                 self.metrics.rejected.fetch_add(1, Ordering::Relaxed);
-                self.obsv.on_terminal(labels, Outcome::RejectedFull, None, 0);
+                self.obsv.on_terminal(
+                    labels,
+                    Outcome::RejectedFull,
+                    None,
+                    0,
+                    TraceId(spec.trace),
+                );
                 self.store.fail(id, "rejected: queue full (backpressure)".into());
                 Err(SubmitError::QueueFull)
             }
@@ -218,6 +272,28 @@ impl RecoveryService {
                 Err(SubmitError::Closed)
             }
         }
+    }
+
+    /// The fleet trace id minted (or carried) for a submitted job, 0 for
+    /// unknown ids — what `lpcs watch`/`trace` correlate against the
+    /// e2e histogram exemplars.
+    pub fn trace_of(&self, id: JobId) -> u64 {
+        self.store.trace_of(id)
+    }
+
+    /// Backpressure retry hint: observed per-job execution EWMA scaled
+    /// by the current queue depth and divided across workers. `None`
+    /// until the first batch has executed. The wire server attaches this
+    /// to `QueueFull` `Err` frames so clients can back off intelligently
+    /// instead of hammering a saturated node.
+    pub fn retry_after_ms(&self) -> Option<u64> {
+        let ewma = self.metrics.exec_ewma_us.load(Ordering::Relaxed);
+        if ewma == 0 {
+            return None;
+        }
+        let depth = self.queue_depth() as u64;
+        let workers = self.workers.len().max(1) as u64;
+        Some((ewma.saturating_mul(depth + 1) / workers / 1000).max(1))
     }
 
     /// Block until a job finishes.
@@ -300,11 +376,19 @@ impl RecoveryService {
         )
     }
 
-    /// Drain and stop; joins all workers.
+    /// Drain and stop; joins all workers, then persists the calibrated
+    /// cost model (when `service.persist_cost` is on) so the next boot
+    /// schedules from observed costs instead of the static estimate.
     pub fn shutdown(self) {
         self.queue.close();
         for w in self.workers {
             w.join().expect("worker panicked");
+        }
+        if let Some(path) = &self.cost_path {
+            let vault = self.cost_vault.lock().expect("cost vault poisoned");
+            // Persistence is best-effort: an unwritable artifact dir must
+            // not turn a clean shutdown into a failure.
+            let _ = sched::save_cost_file(path, &vault);
         }
     }
 }
@@ -355,6 +439,7 @@ impl BatchObserver for ServiceObserver<'_> {
     }
 }
 
+#[allow(clippy::too_many_arguments)]
 fn worker_loop(
     cfg: ServiceConfig,
     queue: Arc<BoundedQueue<QueueItem>>,
@@ -363,6 +448,8 @@ fn worker_loop(
     obsv: Arc<ServiceObsv>,
     solver: SolveOptions,
     artifact_dir: PathBuf,
+    warm: HashMap<u64, ObservedCost>,
+    vault: Arc<Mutex<HashMap<u64, ObservedCost>>>,
 ) {
     // All execution dispatch lives behind the engine registry. It is
     // per-worker because PJRT handles are not Send: each worker's XLA
@@ -371,9 +458,12 @@ fn worker_loop(
     // Per-worker cost model: when calibration is on, each executed batch
     // feeds its measured setup/exec timings back in (EWMA per BatchKey),
     // so scheduling decisions track this worker's real hardware instead
-    // of the static nominal-iteration estimate.
+    // of the static nominal-iteration estimate. The warm ledger seeds it
+    // with the previous boot's calibration (empty unless persisting).
+    let seeded = warm.clone();
     let mut cost = CostModel::default();
     cost.calibrate = cfg.calibrate_cost;
+    cost.seed_warm(warm);
     let sched_cfg = SchedConfig {
         // Clamp: callers constructing ServiceConfig literally (benches,
         // tests) may pass 0; the old loop tolerated it as "singletons".
@@ -383,6 +473,13 @@ fn worker_loop(
     loop {
         let Some(lead) = queue.pop_timeout(Duration::from_millis(50)) else {
             if queue.is_closed() {
+                // Fold this worker's live observations into the shared
+                // vault for shutdown to persist (skip the no-op merge:
+                // an idle worker has nothing beyond its seed).
+                if cost.export_warm() != &seeded {
+                    let mut v = vault.lock().expect("cost vault poisoned");
+                    sched::merge_warm(&mut v, cost.export_warm());
+                }
                 return;
             }
             continue;
@@ -464,8 +561,8 @@ fn run_batch(
     let t0 = Instant::now();
     let modeled_before = registry.metrics(engine_name).map(|m| m.modeled_time_us).unwrap_or(0);
     let ids: Vec<JobId> = batch.jobs.iter().map(|(id, _)| *id).collect();
-    let labels = match batch.jobs.first() {
-        Some((_, spec)) => labels_of(spec),
+    let (labels, stable_key) = match batch.jobs.first() {
+        Some((_, spec)) => (labels_of(spec), sched::stable_cost_key(spec)),
         None => return,
     };
     let reqs: Vec<SolveRequest> =
@@ -496,6 +593,7 @@ fn run_batch(
                 // the store transitions, so the counter — and the
                 // histogram samples — must already be visible then.
                 let (exec_us, e2e_us) = job_times(store, id);
+                let trace = TraceId(store.trace_of(id));
                 match result {
                     Ok(res) => {
                         let outcome = if store.cancel_requested(id) {
@@ -505,12 +603,12 @@ fn run_batch(
                             Outcome::Ok
                         };
                         metrics.completed.fetch_add(1, Ordering::Relaxed);
-                        obsv.on_terminal(labels, outcome, exec_us, e2e_us);
+                        obsv.on_terminal(labels, outcome, exec_us, e2e_us, trace);
                         store.complete(id, res);
                     }
                     Err(e) => {
                         metrics.failed.fetch_add(1, Ordering::Relaxed);
-                        obsv.on_terminal(labels, Outcome::Failed, exec_us, e2e_us);
+                        obsv.on_terminal(labels, Outcome::Failed, exec_us, e2e_us, trace);
                         store.fail(id, format!("{e:#}"));
                     }
                 }
@@ -526,7 +624,13 @@ fn run_batch(
                 }
                 let (exec_us, e2e_us) = job_times(store, id);
                 metrics.failed.fetch_add(1, Ordering::Relaxed);
-                obsv.on_terminal(labels, Outcome::Failed, exec_us, e2e_us);
+                obsv.on_terminal(
+                    labels,
+                    Outcome::Failed,
+                    exec_us,
+                    e2e_us,
+                    TraceId(store.trace_of(id)),
+                );
                 store.fail(id, format!("{e:#}"));
             }
         }
@@ -538,14 +642,18 @@ fn run_batch(
     let wall_us = t0.elapsed().as_micros() as u64;
     metrics.solve_us.fetch_add(wall_us, Ordering::Relaxed);
     // Close the loop into the scheduler: feed the measured quantize+pack
-    // setup and per-job execution time back into the cost model (no-op
-    // when calibration is frozen).
+    // setup and per-job execution time back into the cost model — both
+    // the live per-BatchKey EWMA and the restart-survivable warm ledger
+    // (no-op when calibration is frozen).
     let setup_us = observer.setup_us.unwrap_or(0);
-    cost.observe(
-        &key,
-        setup_us as f64,
-        wall_us.saturating_sub(setup_us) as f64 / ids.len().max(1) as f64,
-    );
+    let per_job_us = wall_us.saturating_sub(setup_us) / ids.len().max(1) as u64;
+    cost.observe_keyed(&key, stable_key, setup_us as f64, per_job_us as f64);
+    // And into the backpressure hint: a coarse service-wide exec EWMA
+    // (weight 1/8 on the newest sample) that retry_after_ms scales by
+    // queue depth.
+    let old = metrics.exec_ewma_us.load(Ordering::Relaxed);
+    let new = if old == 0 { per_job_us } else { old - old / 8 + per_job_us / 8 };
+    metrics.exec_ewma_us.store(new.max(1), Ordering::Relaxed);
 }
 
 #[cfg(test)]
@@ -844,5 +952,88 @@ mod tests {
             "cancellations are counted"
         );
         service.shutdown();
+    }
+
+    #[test]
+    fn submits_mint_nonzero_distinct_trace_ids() {
+        let service = svc(1);
+        let (phi, y, _) = planted(64, 128, 4, 31);
+        let spec = JobSpec::builder(ProblemHandle::new(phi), y, 4).bits(8, 8).build();
+        let a = service.submit(spec.clone()).unwrap();
+        let b = service.submit(spec).unwrap();
+        let (ta, tb) = (service.trace_of(a), service.trace_of(b));
+        assert_ne!(ta, 0, "every admitted job carries a trace id");
+        assert_ne!(ta, tb, "identical submit bytes still mint distinct ids");
+        for id in [a, b] {
+            service.wait(id, Duration::from_secs(30)).expect("finishes");
+        }
+        // The e2e histogram carries one of them as its exemplar.
+        let labels = JobLabels { solver: "qniht", engine: "native-quant", bits: 8 };
+        let snap = service.obsv().e2e.get(labels, Some(Outcome::Ok)).snapshot();
+        let (trace, _) = snap.exemplar.expect("a terminal job tagged the e2e exemplar");
+        assert!(trace == ta || trace == tb, "exemplar {trace:#x} vs {ta:#x}/{tb:#x}");
+        service.shutdown();
+    }
+
+    #[test]
+    fn retry_hint_appears_after_first_batch_and_scales_sanely() {
+        let service = svc(1);
+        assert_eq!(service.retry_after_ms(), None, "no samples yet, no hint");
+        let (phi, y, _) = planted(64, 128, 4, 5);
+        let id = service
+            .submit(JobSpec::builder(ProblemHandle::new(phi), y, 4).bits(8, 8).build())
+            .unwrap();
+        service.wait(id, Duration::from_secs(30)).expect("finishes");
+        let hint = service.retry_after_ms().expect("one executed batch seeds the EWMA");
+        assert!(hint >= 1, "hint is a positive millisecond estimate");
+        assert!(service.metrics().exec_ewma_us.load(Ordering::Relaxed) > 0);
+        service.shutdown();
+    }
+
+    #[test]
+    fn cost_model_persists_across_restarts_and_tolerates_corruption() {
+        let dir = std::env::temp_dir().join(format!("lpcs-svc-cost-{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let cfg = ServiceConfig {
+            workers: 1,
+            queue_capacity: 64,
+            max_batch: 4,
+            max_wait_ms: 0,
+            calibrate_cost: true,
+            persist_cost: true,
+            ..Default::default()
+        };
+        let boot = || RecoveryService::start(cfg, SolveOptions::default(), dir.clone());
+
+        let service = boot();
+        let (phi, y, _) = planted(64, 128, 4, 7);
+        let id = service
+            .submit(JobSpec::builder(ProblemHandle::new(phi), y, 4).bits(8, 8).build())
+            .unwrap();
+        service.wait(id, Duration::from_secs(30)).expect("finishes");
+        service.shutdown();
+
+        let path = dir.join("cost_model.v1");
+        let warm = crate::coordinator::sched::load_cost_file(&path)
+            .expect("graceful shutdown wrote a loadable cost file");
+        assert!(
+            warm.values().any(|o| o.samples > 0),
+            "the executed batch was persisted: {warm:?}"
+        );
+
+        // A clean reboot loads it without errors.
+        let service = boot();
+        assert_eq!(service.metrics().cost_load_errors.load(Ordering::Relaxed), 0);
+        service.shutdown();
+
+        // Corruption ⇒ counted cold start, never a panic; the next
+        // graceful shutdown rewrites a valid file.
+        std::fs::write(&path, "not a cost file\n\u{0}\u{1}").unwrap();
+        let service = boot();
+        assert_eq!(service.metrics().cost_load_errors.load(Ordering::Relaxed), 1);
+        service.shutdown();
+        crate::coordinator::sched::load_cost_file(&path)
+            .expect("shutdown replaced the corrupt file");
+        std::fs::remove_dir_all(&dir).ok();
     }
 }

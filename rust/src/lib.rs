@@ -99,20 +99,56 @@
 //!   sees one monotone stream with exactly one `Done`); and admission
 //!   control answers saturation with typed `queue-full` errors instead
 //!   of buffering.
-//! * **Observability** ([`obsv`]): lock-light log-bucket latency
-//!   histograms (queue-wait, quantize+pack setup, execution, end-to-end)
-//!   labeled `SolverKind` × engine × bits with outcome-labeled terminal
-//!   counters (`ok`/`failed`/`cancelled`/`rejected_full`), worker-pool
+//! * **Observability** ([`obsv`]): the fleet view. Lock-light
+//!   log-bucket latency histograms (queue-wait, quantize+pack setup,
+//!   execution, end-to-end) labeled `SolverKind` × engine × bits with
+//!   outcome-labeled terminal counters
+//!   (`ok`/`failed`/`cancelled`/`rejected_full`), worker-pool
 //!   saturation and in-flight gauges, and a structured
 //!   [`obsv::MetricsSnapshot`] behind the legacy `metrics=` text line.
-//!   Exposed as Prometheus text exposition over the wire
-//!   (`ScrapeReq`/`Scrape`, `lpcs scrape ADDR`) from both the service
-//!   and the router face. The recorded per-`BatchKey` setup/execution
-//!   times feed back into the scheduler:
-//!   `sched::CostModel::observe` EWMA-calibrates batch pricing from
-//!   measurements instead of the static nominal-iteration estimate
-//!   (freezable via `service.calibrate_cost=false` for deterministic
-//!   tests).
+//!   Three fleet-wide pieces ride on top:
+//!
+//!   - **Trace ids end to end.** Every job gets an
+//!     [`obsv::TraceId`] minted at its first submit face (client,
+//!     server or router — a content hash of the measurement vector
+//!     plus a process-local counter, stable with no wall clock) and
+//!     carried on every wire-v4 `Submit`/`Submitted`/`Progress`/`Done`
+//!     frame, through `JobSpec` into the job table, and out again as
+//!     an exemplar on the end-to-end histogram
+//!     (`lpcs_job_e2e_us_bucket{...} # {trace_id="..."}`):
+//!
+//!     ```text
+//!     submit ──▶ router ──▶ backend ──▶ queue ──▶ solve ──▶ Done
+//!       mint      carry       carry      stamp     stamp     exemplar
+//!     trace_id ────────────────────────────────────────────▶ scrape
+//!     ```
+//!
+//!     `lpcs watch` prints the id on the terminal frame and
+//!     `lpcs trace ADDR JOB` turns it into a per-stage breakdown
+//!     (queued / ran / e2e), so one grep connects a client-side solve
+//!     to its series in any exposition.
+//!   - **Per-hop router histograms.** The relay records its own
+//!     families, labeled `backend="i"`: `lpcs_router_submit_forward_us`
+//!     (submit → backend ack), `lpcs_router_first_progress_us`
+//!     (subscribe → first relayed iteration),
+//!     `lpcs_router_fanout_delay_us` (backend frame → client write)
+//!     and `lpcs_router_failover_resume_us` (stream lost → resumed
+//!     elsewhere) — separating routing cost from solve cost per hop.
+//!   - **Federated scrape.** A `ScrapeReq` at the router fans out to
+//!     every healthy backend under a bounded per-backend timeout and
+//!     merges the parsed expositions ([`obsv::Histogram::merge_from`]
+//!     on identical bucket bounds; counters summed per label set;
+//!     per-backend scalars re-labeled `backend="i"`), so one
+//!     `lpcs scrape ROUTER` shows the whole fleet. A dead or garbled
+//!     backend never stalls the scrape — it shows up as an
+//!     `lpcs_backend_scrape_errors{backend="i"}` increment instead.
+//!
+//!   The recorded per-`BatchKey` setup/execution times feed back into
+//!   the scheduler: `sched::CostModel::observe` EWMA-calibrates batch
+//!   pricing from measurements instead of the static nominal-iteration
+//!   estimate (freezable via `service.calibrate_cost=false` for
+//!   deterministic tests), and the calibrated state persists across
+//!   restarts via `service.persist_cost`.
 //! * **Algorithms** ([`algorithms`]): the Algorithm-1 NIHT driver (generic
 //!   over [`algorithms::NihtKernel`]), the quantized kernels, and the
 //!   baselines — all observable per iteration.

@@ -11,7 +11,10 @@
 //!            health-checked backends, watch streams that resume across
 //!            a backend dying mid-solve
 //!   watch    stream a served job's per-iteration progress over the wire
-//!   scrape   print a server's or router's Prometheus text exposition
+//!   trace    follow one job to its terminal frame and print its fleet
+//!            trace id with the per-stage timing breakdown
+//!   scrape   print a server's Prometheus text exposition — against a
+//!            router, the federated fleet-wide exposition
 //!   repro    regenerate a paper figure (fig1..fig11 | all)
 //!   info     list AOT artifacts and environment
 //!
@@ -43,7 +46,7 @@ fn main() {
 
 fn usage() -> ! {
     eprintln!(
-        "usage: lpcs <solve|serve|route|watch|scrape|repro|info> [args] [--key value ...]\n\
+        "usage: lpcs <solve|serve|route|watch|trace|scrape|repro|info> [args] [--key value ...]\n\
          \n\
          lpcs solve [gaussian|astro] [--engine native-quant|native-dense|xla-quant|xla-dense|fpga-model]\n\
          \x20          [--algorithm niht|iht|qniht|cosamp|fista|auto]\n\
@@ -55,7 +58,8 @@ fn usage() -> ! {
          \x20          [--router.probe_ms N] [--router.max_inflight N] [--router.queue_limit N]\n\
          \x20          [--router.vnodes N] [--router.affinity true|false]\n\
          lpcs watch <addr> <job-id>\n\
-         lpcs scrape <addr>                    (Prometheus text exposition)\n\
+         lpcs trace <addr> <job-id>            (trace id + per-stage timing breakdown)\n\
+         lpcs scrape <addr>                    (Prometheus text exposition; federated on a router)\n\
          lpcs repro <fig1|fig3|fig4|fig5|fig6|fig7|fig8|fig9|fig10|fig11|all> [--out_dir DIR]\n\
          lpcs info"
     );
@@ -109,6 +113,10 @@ fn real_main() -> Result<()> {
         "route" => cmd_route(&cfg),
         "watch" => match (rest.first(), rest.get(1)) {
             (Some(addr), Some(job)) => cmd_watch(addr, job),
+            _ => usage(),
+        },
+        "trace" => match (rest.first(), rest.get(1)) {
+            (Some(addr), Some(job)) => cmd_trace(addr, job),
             _ => usage(),
         },
         "scrape" => match rest.first() {
@@ -404,6 +412,39 @@ fn cmd_route(cfg: &LpcsConfig) -> Result<()> {
     for b in &cfg.router.backends {
         println!("  backend {b}");
     }
+    // Optional self-traffic mirroring LPCS_SERVE_JOBS: with
+    // LPCS_ROUTE_JOBS set, drive that many synthetic jobs through the
+    // router's own wire face (one Φ per job, so consistent hashing
+    // spreads the keys over the ring) and drain their watch streams.
+    // A following `lpcs scrape` then sees populated per-hop router
+    // histograms plus merged backend families — the CI federation smoke.
+    if let Some(jobs) = std::env::var("LPCS_ROUTE_JOBS").ok().and_then(|v| v.parse::<usize>().ok())
+    {
+        let mut rng = XorShift128Plus::new(cfg.seed ^ 0x0907E);
+        for j in 0..jobs {
+            let (phi, _, _, s, _) = gaussian_problem(cfg.seed + 1 + j as u64);
+            let phi = Arc::new(phi);
+            let mut x = vec![0.0f32; phi.cols];
+            for i in rng.choose_k(phi.cols, s) {
+                x[i] = 1.0 + rng.uniform_f32();
+            }
+            let y = phi.matvec(&x);
+            let spec = JobSpec::builder(ProblemHandle::new(phi), y, s)
+                .engine(cfg.engine)
+                .solver(cfg.solver_kind())
+                .seed(j as u64)
+                .build();
+            let mut client = lpcs::wire::WireClient::connect(router.addr())
+                .context("self-traffic connect")?;
+            let id = client.submit(&spec).context("self-traffic submit")?;
+            for event in client.watch(id)? {
+                if let lpcs::wire::WatchEvent::Done(out) = event? {
+                    println!("self-traffic job {j}: {:?} trace {:016x}", out.state, out.trace);
+                }
+            }
+        }
+        println!("self-traffic: {jobs} jobs done");
+    }
     // `router` must outlive the loop — dropping it would stop accepting.
     loop {
         std::thread::sleep(Duration::from_secs(60));
@@ -426,6 +467,9 @@ fn cmd_watch(addr: &str, job: &str) -> Result<()> {
                 st.iter, st.resid_nsq, st.mu, st.support_changed, st.shrink_count
             ),
             lpcs::wire::WatchEvent::Done(out) => {
+                if out.trace != 0 {
+                    println!("trace {:016x}", out.trace);
+                }
                 println!(
                     "job {} {:?}  queued_for={:.3?}  ran_for={:.3?}",
                     out.id, out.state, out.queued_for, out.ran_for
@@ -447,9 +491,48 @@ fn cmd_watch(addr: &str, job: &str) -> Result<()> {
     Ok(())
 }
 
+/// `lpcs trace ADDR JOB`: follow one served job to its terminal frame
+/// and print its fleet trace id with the per-stage timing breakdown —
+/// the same id the end-to-end histogram exemplar carries, so a scrape's
+/// exemplar points straight back at what this prints.
+fn cmd_trace(addr: &str, job: &str) -> Result<()> {
+    let id: u64 = job.parse().with_context(|| format!("job id '{job}' is not a number"))?;
+    let mut client = lpcs::wire::WireClient::connect(addr)
+        .with_context(|| format!("connecting to {addr}"))?;
+    let mut progress = 0usize;
+    for event in client.watch(id)? {
+        match event? {
+            lpcs::wire::WatchEvent::Queued { .. } => {}
+            lpcs::wire::WatchEvent::Progress(_) => progress += 1,
+            lpcs::wire::WatchEvent::Done(out) => {
+                println!("job {}  state {:?}", out.id, out.state);
+                if out.trace != 0 {
+                    println!("trace {:016x}", out.trace);
+                } else {
+                    println!("trace - (pre-v4 server; no trace id on the stream)");
+                }
+                println!("  queued  {:.3?}", out.queued_for);
+                println!("  ran     {:.3?}  ({progress} progress frames)", out.ran_for);
+                println!("  e2e     {:.3?}", out.queued_for + out.ran_for);
+                if let Some(res) = out.result {
+                    println!(
+                        "  result  {} iterations, converged={}",
+                        res.iterations, res.converged
+                    );
+                }
+                if let Some(err) = out.error {
+                    println!("  error   {err}");
+                }
+            }
+        }
+    }
+    Ok(())
+}
+
 /// `lpcs scrape ADDR`: fetch one Prometheus text exposition from a
-/// serve or route listener and print it. A router answers with its own
-/// routing metrics; a server answers with the full solver histograms.
+/// serve or route listener and print it. A server answers with the full
+/// solver histograms; a router answers with the *federated* fleet view —
+/// its own per-hop histograms plus every backend's families, merged.
 fn cmd_scrape(addr: &str) -> Result<()> {
     let mut client = lpcs::wire::WireClient::connect(addr)
         .with_context(|| format!("connecting to {addr}"))?;

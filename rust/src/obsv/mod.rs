@@ -31,8 +31,18 @@
 //!   through [`MetricsSnapshot::render_legacy`] instead of
 //!   concatenating strings ad hoc (the text form stays byte-compatible
 //!   with what parsing consumers already scrape).
+//! * [`TraceId`] — the fleet-wide trace id minted at the first submit
+//!   face (FNV-1a of the submit bytes mixed with a per-process counter,
+//!   no clock) and carried on every wire v4 frame a job's lifecycle
+//!   touches; the coordinator attaches it as an exemplar on the
+//!   end-to-end histogram so one scrape links a latency bucket to a
+//!   concrete, watchable job.
+//! * [`parse_exposition`] / [`Histogram::from_cumulative`] — the
+//!   federation path: the router parses each backend's text exposition
+//!   back into histograms and folds them together with
+//!   [`Histogram::merge_from`], so one router scrape shows the fleet.
 
-use std::collections::HashMap;
+use std::collections::{BTreeMap, HashMap};
 use std::sync::atomic::{AtomicI64, AtomicU64, Ordering};
 use std::sync::Mutex;
 
@@ -73,6 +83,73 @@ pub const BUCKET_BOUNDS_US: [u64; 27] = [
 /// Bucket count including the `+Inf` overflow slot.
 pub const BUCKETS: usize = BUCKET_BOUNDS_US.len() + 1;
 
+/// FNV-1a over a byte slice — the same cheap content hash the wire layer
+/// uses, duplicated privately so this module stays dependency-free.
+fn fnv64(bytes: &[u8]) -> u64 {
+    let mut h: u64 = 0xcbf2_9ce4_8422_2325;
+    for &b in bytes {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x0000_0100_0000_01b3);
+    }
+    h
+}
+
+/// Per-process mint counter for [`TraceId`]: two jobs submitting the
+/// same bytes still get distinct ids, with no clock involved.
+static TRACE_COUNTER: AtomicU64 = AtomicU64::new(0);
+
+/// The fleet-wide trace id: minted once at the first submit face
+/// (client CLI or in-process submit), carried on every wire v4
+/// `Submit`/`Submitted`/`Progress`/`Done` frame the job's lifecycle
+/// touches, stored in the coordinator's `JobStore`, and attached as an
+/// exemplar to the end-to-end latency histogram. Zero means "absent" —
+/// a pre-v4 peer submitted the job.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord, Default)]
+pub struct TraceId(pub u64);
+
+impl TraceId {
+    /// The absent id (pre-v4 peers, untraced in-process submits).
+    pub const NONE: TraceId = TraceId(0);
+
+    /// Mint a fresh id: FNV-1a of the submit bytes mixed with a
+    /// per-process counter (golden-ratio stride so consecutive mints
+    /// differ in high bits too). Deterministic per process — no
+    /// `Date::now` — and never zero, so zero stays reserved for
+    /// "absent".
+    pub fn mint(submit_bytes: &[u8]) -> TraceId {
+        let n = TRACE_COUNTER.fetch_add(1, Ordering::Relaxed).wrapping_add(1);
+        let id = fnv64(submit_bytes) ^ n.wrapping_mul(0x9e37_79b9_7f4a_7c15);
+        TraceId(if id == 0 { 1 } else { id })
+    }
+
+    /// [`TraceId::mint`] over the canonical submit bytes every submit
+    /// face uses: observation length, sparsity, and a bounded prefix of
+    /// y — cheap whatever the problem size; the mint counter breaks any
+    /// remaining ties.
+    pub fn mint_submit(y: &[f32], s: usize) -> TraceId {
+        let mut bytes = Vec::with_capacity(16 + 4 * y.len().min(64));
+        bytes.extend_from_slice(&(y.len() as u64).to_le_bytes());
+        bytes.extend_from_slice(&(s as u64).to_le_bytes());
+        for v in y.iter().take(64) {
+            bytes.extend_from_slice(&v.to_le_bytes());
+        }
+        Self::mint(&bytes)
+    }
+
+    /// Whether this id was actually minted (nonzero).
+    pub fn is_set(self) -> bool {
+        self.0 != 0
+    }
+}
+
+/// Trace ids render as fixed-width lowercase hex — the form `lpcs
+/// watch`/`lpcs trace` print and exemplar labels carry.
+impl std::fmt::Display for TraceId {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "{:016x}", self.0)
+    }
+}
+
 /// A fixed log-spaced-bucket latency histogram with atomic slots.
 /// Recording never locks; readers take a [`HistSnapshot`].
 #[derive(Debug)]
@@ -80,6 +157,12 @@ pub struct Histogram {
     buckets: [AtomicU64; BUCKETS],
     count: AtomicU64,
     sum_us: AtomicU64,
+    /// Last exemplar: the trace id (0 = none) and the sample it tagged.
+    /// Stored value-then-id so a reader that sees a nonzero id sees a
+    /// plausible value; a torn pair across two exemplars is acceptable
+    /// for observability (both halves are real recorded samples).
+    exemplar_trace: AtomicU64,
+    exemplar_us: AtomicU64,
 }
 
 impl Default for Histogram {
@@ -94,6 +177,8 @@ impl Histogram {
             buckets: std::array::from_fn(|_| AtomicU64::new(0)),
             count: AtomicU64::new(0),
             sum_us: AtomicU64::new(0),
+            exemplar_trace: AtomicU64::new(0),
+            exemplar_us: AtomicU64::new(0),
         }
     }
 
@@ -111,7 +196,19 @@ impl Histogram {
         self.count.fetch_add(1, Ordering::Relaxed);
     }
 
-    /// Fold another histogram's counts into this one (shard merge).
+    /// Tag the series with an exemplar: the concrete (latency, trace id)
+    /// pair a scrape can surface next to the bucket the sample fell in.
+    /// Latest-wins; a no-op for unset trace ids.
+    pub fn record_exemplar(&self, us: u64, trace: TraceId) {
+        if trace.is_set() {
+            self.exemplar_us.store(us, Ordering::Relaxed);
+            self.exemplar_trace.store(trace.0, Ordering::Relaxed);
+        }
+    }
+
+    /// Fold another histogram's counts into this one (shard merge). If
+    /// this histogram carries no exemplar yet, the other's is adopted —
+    /// a federated merge keeps at least one trace id per family.
     pub fn merge_from(&self, other: &Histogram) {
         let snap = other.snapshot();
         for (slot, n) in self.buckets.iter().zip(snap.buckets.iter()) {
@@ -121,15 +218,58 @@ impl Histogram {
         }
         self.sum_us.fetch_add(snap.sum_us, Ordering::Relaxed);
         self.count.fetch_add(snap.count, Ordering::Relaxed);
+        if let Some((trace, us)) = snap.exemplar {
+            if self.exemplar_trace.load(Ordering::Relaxed) == 0 {
+                self.record_exemplar(us, TraceId(trace));
+            }
+        }
     }
 
     /// Point-in-time copy of all slots.
     pub fn snapshot(&self) -> HistSnapshot {
+        let trace = self.exemplar_trace.load(Ordering::Relaxed);
         HistSnapshot {
             buckets: std::array::from_fn(|i| self.buckets[i].load(Ordering::Relaxed)),
             count: self.count.load(Ordering::Relaxed),
             sum_us: self.sum_us.load(Ordering::Relaxed),
+            exemplar: (trace != 0)
+                .then(|| (trace, self.exemplar_us.load(Ordering::Relaxed))),
         }
+    }
+
+    /// Rebuild a histogram from a parsed cumulative series — the
+    /// federation path: a backend's text exposition, parsed back into
+    /// the shape [`Histogram::merge_from`] understands. Returns `None`
+    /// when the series does not use this crate's bucket bounds or the
+    /// cumulative counts are not monotone, so a foreign or corrupt
+    /// exposition can never poison a merge.
+    pub fn from_cumulative(p: &ParsedHist) -> Option<Histogram> {
+        if p.bounds.len() != BUCKETS || p.cumulative.len() != BUCKETS {
+            return None;
+        }
+        for (b, want) in p.bounds.iter().zip(BUCKET_BOUNDS_US.iter()) {
+            if *b != *want as f64 {
+                return None;
+            }
+        }
+        if !p.bounds[BUCKETS - 1].is_infinite() {
+            return None;
+        }
+        let h = Histogram::new();
+        let mut prev = 0u64;
+        for (slot, &cum) in h.buckets.iter().zip(p.cumulative.iter()) {
+            if cum < prev {
+                return None;
+            }
+            slot.store(cum - prev, Ordering::Relaxed);
+            prev = cum;
+        }
+        h.count.store(p.count.max(prev), Ordering::Relaxed);
+        h.sum_us.store(p.sum_us, Ordering::Relaxed);
+        if let Some((trace, us)) = p.exemplar {
+            h.record_exemplar(us, TraceId(trace));
+        }
+        Some(h)
     }
 }
 
@@ -141,11 +281,14 @@ pub struct HistSnapshot {
     pub buckets: [u64; BUCKETS],
     pub count: u64,
     pub sum_us: u64,
+    /// Last recorded exemplar, as `(trace id, sample µs)`; `None` when
+    /// the series has never been tagged.
+    pub exemplar: Option<(u64, u64)>,
 }
 
 impl HistSnapshot {
     pub fn empty() -> Self {
-        Self { buckets: [0; BUCKETS], count: 0, sum_us: 0 }
+        Self { buckets: [0; BUCKETS], count: 0, sum_us: 0, exemplar: None }
     }
 
     /// Total recorded samples. Concurrent recording can leave the
@@ -189,12 +332,14 @@ impl HistSnapshot {
     }
 
     /// Merge = pointwise sum (equals the histogram of concatenated
-    /// sample streams — pinned by a unit test).
+    /// sample streams — pinned by a unit test). Keeps this snapshot's
+    /// exemplar, falling back to the other's.
     pub fn merged(&self, other: &HistSnapshot) -> HistSnapshot {
         HistSnapshot {
             buckets: std::array::from_fn(|i| self.buckets[i] + other.buckets[i]),
             count: self.count + other.count,
             sum_us: self.sum_us + other.sum_us,
+            exemplar: self.exemplar.or(other.exemplar),
         }
     }
 }
@@ -340,18 +485,23 @@ impl ServiceObsv {
     }
 
     /// A job reached a terminal state. `exec_us` is `None` for jobs that
-    /// never executed (admission rejects).
+    /// never executed (admission rejects). A set `trace` additionally
+    /// tags the end-to-end series with an exemplar, so a scrape links
+    /// the latency bucket to the concrete job `lpcs watch` showed.
     pub fn on_terminal(
         &self,
         labels: JobLabels,
         outcome: Outcome,
         exec_us: Option<u64>,
         e2e_us: u64,
+        trace: TraceId,
     ) {
         if let Some(us) = exec_us {
             self.exec.record(labels, None, us);
         }
-        self.e2e.record(labels, Some(outcome), e2e_us);
+        let e2e = self.e2e.get(labels, Some(outcome));
+        e2e.record(e2e_us);
+        e2e.record_exemplar(e2e_us, trace);
         self.inflight.add(-1);
     }
 
@@ -524,6 +674,59 @@ fn fmt_labels(labels: JobLabels, outcome: Option<Outcome>) -> String {
     s
 }
 
+/// Render one histogram series — cumulative `_bucket` lines, `_sum`,
+/// `_count` — under a pre-formatted label string (no braces, no `le`;
+/// may be empty). The snapshot's exemplar, if any, rides on the bucket
+/// line covering its sample as an OpenMetrics-style
+/// `# {trace_id="…"} value` suffix. Public so the router can render
+/// merged backend families and per-hop series under its own labels.
+pub fn render_histogram_series(out: &mut String, name: &str, lab: &str, snap: &HistSnapshot) {
+    let sep = if lab.is_empty() { "" } else { "," };
+    let exemplar_bucket = snap.exemplar.map(|(_, us)| Histogram::bucket_index(us));
+    let push_exemplar = |out: &mut String, i: usize| {
+        if exemplar_bucket == Some(i) {
+            let (trace, us) = snap.exemplar.unwrap();
+            out.push_str(&format!(" # {{trace_id=\"{}\"}} {us}", TraceId(trace)));
+        }
+    };
+    let mut cum = 0u64;
+    for (i, n) in snap.buckets[..BUCKET_BOUNDS_US.len()].iter().enumerate() {
+        cum += n;
+        out.push_str(&format!(
+            "{name}_bucket{{{lab}{sep}le=\"{}\"}} {cum}",
+            BUCKET_BOUNDS_US[i]
+        ));
+        push_exemplar(out, i);
+        out.push('\n');
+    }
+    let total = snap.total();
+    out.push_str(&format!("{name}_bucket{{{lab}{sep}le=\"+Inf\"}} {total}"));
+    push_exemplar(out, BUCKET_BOUNDS_US.len());
+    out.push('\n');
+    if lab.is_empty() {
+        out.push_str(&format!("{name}_sum {}\n", snap.sum_us));
+        out.push_str(&format!("{name}_count {total}\n"));
+    } else {
+        out.push_str(&format!("{name}_sum{{{lab}}} {}\n", snap.sum_us));
+        out.push_str(&format!("{name}_count{{{lab}}} {total}\n"));
+    }
+}
+
+/// Render a whole histogram family (`# HELP`/`# TYPE` header plus every
+/// series) keyed by arbitrary pre-formatted label strings — the form
+/// the router's per-hop families (labeled by backend) use.
+pub fn render_labeled_histogram_family(
+    out: &mut String,
+    name: &str,
+    help: &str,
+    series: &[(String, HistSnapshot)],
+) {
+    out.push_str(&format!("# HELP {name} {help}\n# TYPE {name} histogram\n"));
+    for (lab, snap) in series {
+        render_histogram_series(out, name, lab, snap);
+    }
+}
+
 fn render_histogram_family(
     out: &mut String,
     name: &str,
@@ -532,23 +735,19 @@ fn render_histogram_family(
 ) {
     out.push_str(&format!("# HELP {name} {help}\n# TYPE {name} histogram\n"));
     for (labels, outcome, snap) in series {
-        let lab = fmt_labels(*labels, *outcome);
-        let mut cum = 0u64;
-        for (i, n) in snap.buckets[..BUCKET_BOUNDS_US.len()].iter().enumerate() {
-            cum += n;
-            out.push_str(&format!(
-                "{name}_bucket{{{lab},le=\"{}\"}} {cum}\n",
-                BUCKET_BOUNDS_US[i]
-            ));
-        }
-        let total = snap.total();
-        out.push_str(&format!("{name}_bucket{{{lab},le=\"+Inf\"}} {total}\n"));
-        out.push_str(&format!("{name}_sum{{{lab}}} {}\n", snap.sum_us));
-        out.push_str(&format!("{name}_count{{{lab}}} {total}\n"));
+        render_histogram_series(out, name, &fmt_labels(*labels, *outcome), snap);
     }
 }
 
-fn render_scalar(out: &mut String, name: &str, kind: &str, help: &str, value: impl std::fmt::Display) {
+/// Render an unlabeled scalar series with its `# HELP`/`# TYPE` header.
+/// Public for the router's federated exposition assembly.
+pub fn render_scalar(
+    out: &mut String,
+    name: &str,
+    kind: &str,
+    help: &str,
+    value: impl std::fmt::Display,
+) {
     out.push_str(&format!(
         "# HELP {name} {help}\n# TYPE {name} {kind}\n{name} {value}\n"
     ));
@@ -715,6 +914,144 @@ pub fn render_router_prometheus(c: &RouterCounters) -> String {
     out
 }
 
+// ---------------------------------------------------------------------------
+// Exposition parsing (the federation path).
+// ---------------------------------------------------------------------------
+
+/// One histogram series parsed back out of a text exposition: bucket
+/// bounds and cumulative counts exactly as printed, in print order.
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct ParsedHist {
+    pub bounds: Vec<f64>,
+    pub cumulative: Vec<u64>,
+    pub sum_us: u64,
+    pub count: u64,
+    /// `(trace id, sample µs)` from a `# {trace_id="…"} v` bucket suffix.
+    pub exemplar: Option<(u64, u64)>,
+}
+
+/// A Prometheus text exposition, parsed back into structure. This is
+/// how the router federates: each backend's `Scrape` reply is parsed,
+/// histogram families are rebuilt via [`Histogram::from_cumulative`]
+/// and folded together with [`Histogram::merge_from`], and scalars are
+/// re-emitted under a disambiguating `backend` label. `BTreeMap`s keep
+/// iteration (and thus the merged exposition) deterministic.
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct ParsedExposition {
+    /// Family name → `# TYPE` kind.
+    pub kinds: BTreeMap<String, String>,
+    /// Family name → `# HELP` text.
+    pub helps: BTreeMap<String, String>,
+    /// `(family name, label string without the le label)` → series.
+    pub hists: BTreeMap<(String, String), ParsedHist>,
+    /// `(series name, label string)` → value, for counters and gauges.
+    pub scalars: BTreeMap<(String, String), i64>,
+}
+
+/// Split `name{a="b",…}` into the bare name and the brace-free label
+/// string (empty when unlabeled).
+fn split_series(series: &str) -> (String, String) {
+    match series.split_once('{') {
+        Some((name, rest)) => {
+            (name.to_string(), rest.trim_end_matches('}').to_string())
+        }
+        None => (series.to_string(), String::new()),
+    }
+}
+
+/// Parse a Prometheus text exposition as this module renders it (and
+/// tolerantly enough for close dialects: unknown comment lines are
+/// skipped, label order is preserved verbatim). Errors name the
+/// offending line; the router treats a parse failure like a dead
+/// backend — a scrape-error counter, never a poisoned merge.
+pub fn parse_exposition(text: &str) -> Result<ParsedExposition, String> {
+    let mut out = ParsedExposition::default();
+    for line in text.lines() {
+        if line.is_empty() {
+            continue;
+        }
+        if let Some(rest) = line.strip_prefix("# HELP ") {
+            let (name, help) =
+                rest.split_once(' ').ok_or_else(|| format!("bad HELP line: {line}"))?;
+            out.helps.insert(name.to_string(), help.to_string());
+            continue;
+        }
+        if let Some(rest) = line.strip_prefix("# TYPE ") {
+            let (name, kind) =
+                rest.split_once(' ').ok_or_else(|| format!("bad TYPE line: {line}"))?;
+            out.kinds.insert(name.to_string(), kind.to_string());
+            continue;
+        }
+        if line.starts_with('#') {
+            continue;
+        }
+        // Peel an OpenMetrics-style exemplar suffix off bucket lines:
+        // `series value # {trace_id="…"} exemplar-value`.
+        let (metric, exemplar) = match line.split_once(" # ") {
+            Some((m, ex)) => (m, Some(ex)),
+            None => (line, None),
+        };
+        let (series, value) =
+            metric.rsplit_once(' ').ok_or_else(|| format!("metric line has no value: {line}"))?;
+        let (name, labs) = split_series(series);
+        // A histogram member iff the family (name minus the member
+        // suffix) was declared `# TYPE … histogram` — scalars whose
+        // names merely end in `_count` stay scalars.
+        let member = ["_bucket", "_sum", "_count"].iter().find_map(|suf| {
+            let fam = name.strip_suffix(suf)?;
+            (out.kinds.get(fam).map(String::as_str) == Some("histogram"))
+                .then(|| (fam.to_string(), *suf))
+        });
+        let Some((family, suffix)) = member else {
+            let v: i64 =
+                value.parse().map_err(|_| format!("bad scalar value: {line}"))?;
+            out.scalars.insert((name, labs), v);
+            continue;
+        };
+        let v: u64 = value.parse().map_err(|_| format!("bad histogram value: {line}"))?;
+        // Separate the `le` label from the series-identifying labels.
+        let mut le = None;
+        let mut rest_labs = Vec::new();
+        for item in labs.split(',').filter(|s| !s.is_empty()) {
+            match item.strip_prefix("le=\"") {
+                Some(b) => le = Some(b.trim_end_matches('"').to_string()),
+                None => rest_labs.push(item),
+            }
+        }
+        let h = out.hists.entry((family, rest_labs.join(","))).or_default();
+        match suffix {
+            "_bucket" => {
+                let le = le.ok_or_else(|| format!("bucket line without le: {line}"))?;
+                let bound = if le == "+Inf" {
+                    f64::INFINITY
+                } else {
+                    le.parse().map_err(|_| format!("bad le bound: {line}"))?
+                };
+                h.bounds.push(bound);
+                h.cumulative.push(v);
+                if let Some(ex) = exemplar {
+                    let (exlab, exval) = ex
+                        .rsplit_once(' ')
+                        .ok_or_else(|| format!("bad exemplar: {line}"))?;
+                    let hex = exlab
+                        .strip_prefix("{trace_id=\"")
+                        .and_then(|s| s.strip_suffix("\"}"))
+                        .ok_or_else(|| format!("bad exemplar labels: {line}"))?;
+                    let trace = u64::from_str_radix(hex, 16)
+                        .map_err(|_| format!("bad exemplar trace id: {line}"))?;
+                    let us = exval
+                        .parse()
+                        .map_err(|_| format!("bad exemplar value: {line}"))?;
+                    h.exemplar = Some((trace, us));
+                }
+            }
+            "_sum" => h.sum_us = v,
+            _ => h.count = v,
+        }
+    }
+    Ok(out)
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -832,7 +1169,7 @@ mod tests {
         let obsv = ServiceObsv::new();
         obsv.inflight.add(3);
         obsv.workers_total.set(2);
-        obsv.on_terminal(labels(), Outcome::Ok, Some(3), 5);
+        obsv.on_terminal(labels(), Outcome::Ok, Some(3), 5, TraceId::NONE);
         let text = obsv.render_prometheus(&ServiceCounters::default(), 1, 256);
         assert!(text.contains("# TYPE lpcs_job_e2e_us histogram\n"));
         assert!(text.contains(
@@ -871,12 +1208,14 @@ mod tests {
 
     /// A minimal exposition parser: `name{labels} value` → map. Enough
     /// to prove the text round-trips (series naming + label order).
+    /// Exemplar suffixes are stripped — they ride after the value.
     fn parse_back(text: &str) -> HashMap<String, u64> {
         let mut out = HashMap::new();
         for line in text.lines() {
             if line.starts_with('#') || line.is_empty() {
                 continue;
             }
+            let line = line.split(" # ").next().unwrap();
             let (series, value) = line.rsplit_once(' ').expect("metric line has a value");
             if let Ok(v) = value.parse::<u64>() {
                 out.insert(series.to_string(), v);
@@ -896,12 +1235,12 @@ mod tests {
         let l8 = JobLabels { solver: "niht", engine: "native-dense", bits: 32 };
         for us in [2u64, 9, 70, 1500] {
             obsv.inflight.add(1);
-            obsv.on_terminal(l2, Outcome::Ok, Some(us), us + 1);
+            obsv.on_terminal(l2, Outcome::Ok, Some(us), us + 1, TraceId::mint(b"t"));
         }
         obsv.inflight.add(1);
-        obsv.on_terminal(l2, Outcome::Failed, Some(11), 12);
+        obsv.on_terminal(l2, Outcome::Failed, Some(11), 12, TraceId::NONE);
         obsv.inflight.add(1);
-        obsv.on_terminal(l8, Outcome::Cancelled, None, 40);
+        obsv.on_terminal(l8, Outcome::Cancelled, None, 40, TraceId::NONE);
         let parsed =
             parse_back(&obsv.render_prometheus(&ServiceCounters::default(), 0, 16));
         // _count == sum of outcome counters, per label set.
@@ -1010,5 +1349,157 @@ mod tests {
         assert!(text.contains(
             "lpcs_router_backend_queue_depth{backend=\"0\",addr=\"127.0.0.1:7070\"} 2\n"
         ));
+    }
+
+    #[test]
+    fn trace_ids_are_nonzero_distinct_and_render_as_fixed_hex() {
+        let a = TraceId::mint(b"same bytes");
+        let b = TraceId::mint(b"same bytes");
+        assert!(a.is_set() && b.is_set());
+        assert_ne!(a, b, "the process counter must separate identical submits");
+        assert!(!TraceId::NONE.is_set());
+        let hex = a.to_string();
+        assert_eq!(hex.len(), 16);
+        assert!(hex.chars().all(|c| c.is_ascii_hexdigit()));
+        assert_eq!(TraceId(0xabc).to_string(), "0000000000000abc");
+    }
+
+    #[test]
+    fn exemplar_rides_the_covering_bucket_line_and_survives_merges() {
+        let h = Histogram::new();
+        h.record(3);
+        h.record_exemplar(3, TraceId(0xabc));
+        let snap = h.snapshot();
+        assert_eq!(snap.exemplar, Some((0xabc, 3)));
+        let mut text = String::new();
+        render_histogram_series(&mut text, "demo_us", "backend=\"0\"", &snap);
+        assert!(text
+            .contains("demo_us_bucket{backend=\"0\",le=\"4\"} 1 # {trace_id=\"0000000000000abc\"} 3\n"));
+        // Unset trace ids never tag.
+        h.record_exemplar(9, TraceId::NONE);
+        assert_eq!(h.snapshot().exemplar, Some((0xabc, 3)));
+        // A merge into an untagged histogram adopts the exemplar…
+        let m = Histogram::new();
+        m.merge_from(&h);
+        assert_eq!(m.snapshot().exemplar, Some((0xabc, 3)));
+        // …but never overwrites one that is already set.
+        m.record_exemplar(7, TraceId(0xdef));
+        m.merge_from(&h);
+        assert_eq!(m.snapshot().exemplar, Some((0xdef, 7)));
+    }
+
+    #[test]
+    fn parse_exposition_round_trips_the_service_render() {
+        let obsv = ServiceObsv::new();
+        obsv.inflight.add(2);
+        obsv.workers_total.set(3);
+        obsv.on_terminal(labels(), Outcome::Ok, Some(3), 5, TraceId(0x1f));
+        obsv.on_terminal(labels(), Outcome::Failed, Some(40), 90, TraceId::NONE);
+        let text = obsv.render_prometheus(&ServiceCounters::default(), 1, 64);
+        let parsed = parse_exposition(&text).expect("our own render parses");
+        assert_eq!(parsed.kinds["lpcs_job_e2e_us"], "histogram");
+        let lab = "solver=\"qniht\",engine=\"native-quant\",bits=\"2\",outcome=\"ok\"";
+        let h = &parsed.hists[&("lpcs_job_e2e_us".to_string(), lab.to_string())];
+        assert_eq!(h.bounds.len(), BUCKETS);
+        assert_eq!(h.count, 1);
+        assert_eq!(h.sum_us, 5);
+        assert_eq!(h.exemplar, Some((0x1f, 5)));
+        assert_eq!(h.cumulative[BUCKETS - 1], 1);
+        // Scalars land keyed by (name, labels) with the gauge values.
+        assert_eq!(parsed.scalars[&("lpcs_inflight_jobs".to_string(), String::new())], 0);
+        assert_eq!(parsed.scalars[&("lpcs_workers_total".to_string(), String::new())], 3);
+        assert_eq!(
+            parsed.scalars[&("lpcs_jobs_total".to_string(), lab.to_string())],
+            1,
+            "jobs_total is a counter, not a histogram member"
+        );
+        // The parsed histogram rebuilds into an identical merge source.
+        let rebuilt = Histogram::from_cumulative(h).expect("own bounds are accepted");
+        let snap = rebuilt.snapshot();
+        assert_eq!(snap.count, 1);
+        assert_eq!(snap.sum_us, 5);
+        assert_eq!(snap.exemplar, Some((0x1f, 5)));
+        assert_eq!(snap.buckets[Histogram::bucket_index(5)], 1);
+    }
+
+    #[test]
+    fn from_cumulative_rejects_foreign_bounds_and_nonmonotone_counts() {
+        let h = Histogram::new();
+        h.record(17);
+        h.record(1_000);
+        let mut text = String::new();
+        render_histogram_series(&mut text, "x_us", "b=\"0\"", &h.snapshot());
+        let full = format!("# HELP x_us x.\n# TYPE x_us histogram\n{text}");
+        let parsed = parse_exposition(&full).unwrap();
+        let p = &parsed.hists[&("x_us".to_string(), "b=\"0\"".to_string())];
+        let ok = Histogram::from_cumulative(p).expect("round trip");
+        assert_eq!(ok.snapshot().buckets, h.snapshot().buckets);
+        // Foreign bounds: wrong bucket count.
+        let mut short = p.clone();
+        short.bounds.pop();
+        short.cumulative.pop();
+        assert!(Histogram::from_cumulative(&short).is_none());
+        // Foreign bounds: same count, different edge.
+        let mut skewed = p.clone();
+        skewed.bounds[0] = 3.0;
+        assert!(Histogram::from_cumulative(&skewed).is_none());
+        // Corrupt: cumulative counts must be monotone.
+        let mut corrupt = p.clone();
+        corrupt.cumulative[5] = 10;
+        corrupt.cumulative[6] = 3;
+        assert!(Histogram::from_cumulative(&corrupt).is_none());
+    }
+
+    /// The canonical per-hop render the crate docs describe — a router
+    /// family labeled by backend with an exemplar on the covering
+    /// bucket — pinned byte-for-byte. If the renderer changes shape,
+    /// this test and the crate docs must move together.
+    #[test]
+    fn docs_example_exposition_is_exact() {
+        let h = Histogram::new();
+        h.record(1);
+        h.record(3);
+        h.record_exemplar(3, TraceId(0xabc));
+        let mut text = String::new();
+        render_labeled_histogram_family(
+            &mut text,
+            "lpcs_router_submit_forward_us",
+            "Router submit forward latency, microseconds.",
+            &[("backend=\"0\"".to_string(), h.snapshot())],
+        );
+        let expected = "\
+# HELP lpcs_router_submit_forward_us Router submit forward latency, microseconds.\n\
+# TYPE lpcs_router_submit_forward_us histogram\n\
+lpcs_router_submit_forward_us_bucket{backend=\"0\",le=\"1\"} 1\n\
+lpcs_router_submit_forward_us_bucket{backend=\"0\",le=\"2\"} 1\n\
+lpcs_router_submit_forward_us_bucket{backend=\"0\",le=\"4\"} 2 # {trace_id=\"0000000000000abc\"} 3\n\
+lpcs_router_submit_forward_us_bucket{backend=\"0\",le=\"8\"} 2\n\
+lpcs_router_submit_forward_us_bucket{backend=\"0\",le=\"16\"} 2\n\
+lpcs_router_submit_forward_us_bucket{backend=\"0\",le=\"32\"} 2\n\
+lpcs_router_submit_forward_us_bucket{backend=\"0\",le=\"64\"} 2\n\
+lpcs_router_submit_forward_us_bucket{backend=\"0\",le=\"128\"} 2\n\
+lpcs_router_submit_forward_us_bucket{backend=\"0\",le=\"256\"} 2\n\
+lpcs_router_submit_forward_us_bucket{backend=\"0\",le=\"512\"} 2\n\
+lpcs_router_submit_forward_us_bucket{backend=\"0\",le=\"1024\"} 2\n\
+lpcs_router_submit_forward_us_bucket{backend=\"0\",le=\"2048\"} 2\n\
+lpcs_router_submit_forward_us_bucket{backend=\"0\",le=\"4096\"} 2\n\
+lpcs_router_submit_forward_us_bucket{backend=\"0\",le=\"8192\"} 2\n\
+lpcs_router_submit_forward_us_bucket{backend=\"0\",le=\"16384\"} 2\n\
+lpcs_router_submit_forward_us_bucket{backend=\"0\",le=\"32768\"} 2\n\
+lpcs_router_submit_forward_us_bucket{backend=\"0\",le=\"65536\"} 2\n\
+lpcs_router_submit_forward_us_bucket{backend=\"0\",le=\"131072\"} 2\n\
+lpcs_router_submit_forward_us_bucket{backend=\"0\",le=\"262144\"} 2\n\
+lpcs_router_submit_forward_us_bucket{backend=\"0\",le=\"524288\"} 2\n\
+lpcs_router_submit_forward_us_bucket{backend=\"0\",le=\"1048576\"} 2\n\
+lpcs_router_submit_forward_us_bucket{backend=\"0\",le=\"2097152\"} 2\n\
+lpcs_router_submit_forward_us_bucket{backend=\"0\",le=\"4194304\"} 2\n\
+lpcs_router_submit_forward_us_bucket{backend=\"0\",le=\"8388608\"} 2\n\
+lpcs_router_submit_forward_us_bucket{backend=\"0\",le=\"16777216\"} 2\n\
+lpcs_router_submit_forward_us_bucket{backend=\"0\",le=\"33554432\"} 2\n\
+lpcs_router_submit_forward_us_bucket{backend=\"0\",le=\"67108864\"} 2\n\
+lpcs_router_submit_forward_us_bucket{backend=\"0\",le=\"+Inf\"} 2\n\
+lpcs_router_submit_forward_us_sum{backend=\"0\"} 4\n\
+lpcs_router_submit_forward_us_count{backend=\"0\"} 2\n";
+        assert_eq!(text, expected);
     }
 }

@@ -30,6 +30,11 @@ pub struct BackendState {
     /// backend load (staleness bounded by the probe period).
     pub queue_depth: AtomicU64,
     pub queue_capacity: AtomicU64,
+    /// Federated-scrape failures against this backend (down at scrape
+    /// time, or up but unreachable within the per-backend deadline).
+    /// Exposed as `lpcs_backend_scrape_errors{backend="i"}` so a dead
+    /// backend shows up in the fleet exposition instead of stalling it.
+    pub scrape_errors: AtomicU64,
 }
 
 impl BackendState {
@@ -40,6 +45,7 @@ impl BackendState {
             failures: AtomicU32::new(0),
             queue_depth: AtomicU64::new(0),
             queue_capacity: AtomicU64::new(0),
+            scrape_errors: AtomicU64::new(0),
         }
     }
 

@@ -50,10 +50,10 @@ pub use ring::HashRing;
 
 use crate::config::RouterConfig;
 use crate::coordinator::JobId;
-use crate::obsv::{BackendCounters, RouterCounters};
-use crate::wire::codec::{route_key, ErrCode, WireJobSpec};
+use crate::obsv::{self, BackendCounters, Histogram, RouterCounters};
+use crate::wire::codec::{route_key, ErrCode, Message, WireJobSpec};
 use anyhow::{bail, Context, Result};
-use std::collections::HashMap;
+use std::collections::{BTreeMap, HashMap};
 use std::net::{SocketAddr, TcpListener};
 use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
 use std::sync::{Arc, Mutex};
@@ -91,6 +91,75 @@ pub struct PerBackendMetrics {
     pub routed: AtomicU64,
     pub resumed: AtomicU64,
     pub down_events: AtomicU64,
+}
+
+/// The router's own per-hop latency families, one [`Histogram`] per
+/// configured backend so every series carries a `backend="i"` label.
+/// These measure what only the router can see — the cost of each hop it
+/// adds — and sit next to the *merged backend* families in the
+/// federated exposition, so one scrape separates "the fleet is slow"
+/// from "the routing tier is slow".
+#[derive(Debug)]
+pub struct RouterHops {
+    /// Submit forward: route decision → backend `Submitted`, including
+    /// the upstream connect. Exemplar-tagged with the job's trace id.
+    pub submit_forward: Vec<Histogram>,
+    /// Subscribe sent upstream → first `Progress` frame received.
+    pub first_progress: Vec<Histogram>,
+    /// Fan-out delay: upstream `Progress` received → relayed frame
+    /// written to the watching client.
+    pub fanout_delay: Vec<Histogram>,
+    /// Failover resume: upstream loss detected → spec resubmitted and
+    /// the stream re-placed (labeled by the backend resumed *onto*).
+    pub failover_resume: Vec<Histogram>,
+}
+
+impl RouterHops {
+    fn new(backends: usize) -> Self {
+        let mk = || (0..backends).map(|_| Histogram::new()).collect();
+        Self {
+            submit_forward: mk(),
+            first_progress: mk(),
+            fanout_delay: mk(),
+            failover_resume: mk(),
+        }
+    }
+
+    /// Append the four families to `out`. Headers always render (so a
+    /// scrape names every hop family even before traffic); zero-sample
+    /// series are elided to keep the exposition proportional to use.
+    fn render(&self, out: &mut String) {
+        for (name, help, hists) in [
+            (
+                "lpcs_router_submit_forward_us",
+                "Router hop: submit forward to backend Submitted, microseconds.",
+                &self.submit_forward,
+            ),
+            (
+                "lpcs_router_first_progress_us",
+                "Router hop: upstream subscribe to first Progress frame, microseconds.",
+                &self.first_progress,
+            ),
+            (
+                "lpcs_router_fanout_delay_us",
+                "Router hop: upstream frame received to client write completed, microseconds.",
+                &self.fanout_delay,
+            ),
+            (
+                "lpcs_router_failover_resume_us",
+                "Router hop: upstream loss to stream resumed on a new backend, microseconds.",
+                &self.failover_resume,
+            ),
+        ] {
+            let series: Vec<(String, obsv::HistSnapshot)> = hists
+                .iter()
+                .enumerate()
+                .map(|(i, h)| (format!("backend=\"{i}\""), h.snapshot()))
+                .filter(|(_, s)| s.total() > 0)
+                .collect();
+            obsv::render_labeled_histogram_family(out, name, help, &series);
+        }
+    }
 }
 
 /// Router counters, mirroring the backend
@@ -169,6 +238,8 @@ pub struct RouterState {
     /// Round-robin cursor (`affinity: false` mode — the bench baseline).
     rr: AtomicU64,
     pub metrics: RouterMetrics,
+    /// Per-hop latency histograms, labeled by backend index.
+    pub hops: RouterHops,
     shutdown: Arc<AtomicBool>,
 }
 
@@ -177,6 +248,7 @@ impl RouterState {
         let backends: Vec<BackendState> =
             cfg.backends.iter().cloned().map(BackendState::new).collect();
         let metrics = RouterMetrics::new(backends.len());
+        let hops = RouterHops::new(backends.len());
         let state = Self {
             backends,
             ring: Mutex::new(HashRing::default()),
@@ -184,6 +256,7 @@ impl RouterState {
             next_id: AtomicU64::new(1),
             rr: AtomicU64::new(0),
             metrics,
+            hops,
             cfg,
             shutdown,
         };
@@ -293,10 +366,121 @@ impl RouterState {
         c
     }
 
-    /// Prometheus text exposition for the router face (`ScrapeReq` →
-    /// `Scrape` on the router listener; `lpcs scrape ADDR` prints it).
+    /// The federated Prometheus exposition for the whole fleet
+    /// (`ScrapeReq` → `Scrape` on the router listener; `lpcs scrape
+    /// ADDR` prints it). One scrape yields, in order:
+    ///
+    /// 1. the router's own counters and per-backend health,
+    /// 2. the router's per-hop latency families (labeled `backend="i"`),
+    /// 3. `lpcs_backend_scrape_errors{backend="i"}` — federation
+    ///    failures per backend, bumped this very scrape,
+    /// 4. every backend histogram family merged across the fleet
+    ///    ([`Histogram::from_cumulative`] + [`Histogram::merge_from`],
+    ///    exemplars preserved), `lpcs_jobs_total` summed per label set,
+    /// 5. remaining backend scalars re-emitted verbatim under a
+    ///    disambiguating `backend="i"` label.
+    ///
+    /// Each backend is scraped serially under [`Self::forward_timeout`],
+    /// so a dead or wedged backend costs one bounded timeout and a
+    /// scrape-error increment — never a stalled or poisoned exposition.
     pub fn scrape(&self) -> String {
-        crate::obsv::render_router_prometheus(&self.snapshot_struct())
+        let mut out = obsv::render_router_prometheus(&self.snapshot_struct());
+        self.hops.render(&mut out);
+
+        let timeout = self.forward_timeout();
+        let mut parsed: Vec<(usize, obsv::ParsedExposition)> = Vec::new();
+        for (i, b) in self.backends.iter().enumerate() {
+            let text = if b.is_up() { scrape_backend(&b.addr, timeout).ok() } else { None };
+            match text.and_then(|t| obsv::parse_exposition(&t).ok()) {
+                Some(p) => parsed.push((i, p)),
+                None => {
+                    b.scrape_errors.fetch_add(1, Ordering::Relaxed);
+                }
+            }
+        }
+        out.push_str(
+            "# HELP lpcs_backend_scrape_errors Federated scrape failures per backend.\n\
+             # TYPE lpcs_backend_scrape_errors counter\n",
+        );
+        for (i, b) in self.backends.iter().enumerate() {
+            out.push_str(&format!(
+                "lpcs_backend_scrape_errors{{backend=\"{i}\"}} {}\n",
+                b.scrape_errors.load(Ordering::Relaxed)
+            ));
+        }
+
+        // Merge the backends' parsed expositions. BTreeMaps keep family
+        // and label-set order deterministic, so repeated scrapes of a
+        // quiescent fleet render byte-identical text.
+        let mut helps: BTreeMap<String, String> = BTreeMap::new();
+        let mut kinds: BTreeMap<String, String> = BTreeMap::new();
+        let mut merged: BTreeMap<(String, String), Histogram> = BTreeMap::new();
+        let mut jobs_total: BTreeMap<String, i64> = BTreeMap::new();
+        let mut scalars: BTreeMap<String, Vec<(usize, String, i64)>> = BTreeMap::new();
+        for (i, p) in &parsed {
+            for (name, h) in &p.helps {
+                helps.entry(name.clone()).or_insert_with(|| h.clone());
+            }
+            for (name, k) in &p.kinds {
+                kinds.entry(name.clone()).or_insert_with(|| k.clone());
+            }
+            for ((fam, labs), ph) in &p.hists {
+                // A series with foreign bucket bounds or non-monotone
+                // cumulative counts is skipped, not merged: one odd
+                // backend cannot poison the fleet view.
+                let Some(h) = Histogram::from_cumulative(ph) else { continue };
+                match merged.entry((fam.clone(), labs.clone())) {
+                    std::collections::btree_map::Entry::Occupied(e) => e.get().merge_from(&h),
+                    std::collections::btree_map::Entry::Vacant(v) => {
+                        v.insert(h);
+                    }
+                }
+            }
+            for ((name, labs), v) in &p.scalars {
+                if name == "lpcs_jobs_total" {
+                    *jobs_total.entry(labs.clone()).or_default() += v;
+                } else {
+                    scalars.entry(name.clone()).or_default().push((*i, labs.clone(), *v));
+                }
+            }
+        }
+
+        let mut cur_fam: Option<&str> = None;
+        for ((fam, labs), h) in &merged {
+            if cur_fam != Some(fam.as_str()) {
+                cur_fam = Some(fam.as_str());
+                let help =
+                    helps.get(fam).map(String::as_str).unwrap_or("Merged backend family.");
+                out.push_str(&format!("# HELP {fam} {help}\n# TYPE {fam} histogram\n"));
+            }
+            obsv::render_histogram_series(&mut out, fam, labs, &h.snapshot());
+        }
+        if !jobs_total.is_empty() {
+            let help = helps
+                .get("lpcs_jobs_total")
+                .map(String::as_str)
+                .unwrap_or("Terminal jobs by solver/engine/bits and outcome.");
+            out.push_str(&format!(
+                "# HELP lpcs_jobs_total {help}\n# TYPE lpcs_jobs_total counter\n"
+            ));
+            for (labs, v) in &jobs_total {
+                out.push_str(&format!("lpcs_jobs_total{{{labs}}} {v}\n"));
+            }
+        }
+        for (name, rows) in &scalars {
+            let kind = kinds.get(name).map(String::as_str).unwrap_or("gauge");
+            let help = helps.get(name).map(String::as_str).unwrap_or("Backend series.");
+            out.push_str(&format!("# HELP {name} {help}\n# TYPE {name} {kind}\n"));
+            for (i, labs, v) in rows {
+                let lab = if labs.is_empty() {
+                    format!("backend=\"{i}\"")
+                } else {
+                    format!("backend=\"{i}\",{labs}")
+                };
+                out.push_str(&format!("{name}{{{lab}}} {v}\n"));
+            }
+        }
+        out
     }
 
     /// Register a placed job and hand out its router-scoped id.
@@ -357,7 +541,7 @@ impl RouterState {
         for _ in 0..self.backends.len() {
             let Some(i) = self.pick_backend(key) else { break };
             match relay::forward_submit(self, i, &spec) {
-                Ok(backend_job) => {
+                Ok((backend_job, _trace)) => {
                     let mut table = self.table.lock().unwrap();
                     let e = table.get_mut(&id).ok_or(ErrCode::UnknownJob)?;
                     if e.generation != seen_generation {
@@ -384,6 +568,19 @@ impl RouterState {
             }
         }
         Err(ErrCode::BackendDown)
+    }
+}
+
+/// One backend's `ScrapeReq` → `Scrape` round trip under `timeout` —
+/// the federation fan-out leg. Goes through the relay's raw
+/// [`relay::Upstream`] (not [`crate::wire::WireClient`]) so the
+/// per-backend deadline applies end to end.
+fn scrape_backend(addr: &str, timeout: Duration) -> Result<String> {
+    let mut up = relay::Upstream::connect(addr, timeout)?;
+    up.send(&Message::ScrapeReq)?;
+    match up.recv(timeout)? {
+        Message::Scrape { text } => Ok(text),
+        other => bail!("unexpected scrape reply: {other:?}"),
     }
 }
 

@@ -86,19 +86,33 @@ impl Upstream {
     }
 }
 
-/// Submit `ws` to backend `i`. A typed error (`code: Some`) is a live
-/// backend's verdict and must be propagated, not failed over; `code:
-/// None` is transport loss and the caller should mark the backend down
-/// and try the next one.
+/// Submit `ws` to backend `i`, returning the backend's job id and the
+/// job's trace id (minted client-side if the submitter sent none). A
+/// typed error (`code: Some`) is a live backend's verdict and must be
+/// propagated, not failed over; `code: None` is transport loss and the
+/// caller should mark the backend down and try the next one.
+///
+/// Successful forwards record the submit-forward hop latency (connect
+/// included — that's part of the hop the router adds) into
+/// `lpcs_router_submit_forward_us{backend="i"}`, exemplar-tagged with
+/// the trace id.
 pub(crate) fn forward_submit(
     state: &RouterState,
     backend: usize,
     ws: &WireJobSpec,
-) -> std::result::Result<JobId, WireError> {
+) -> std::result::Result<(JobId, u64), WireError> {
     let addr = &state.backends[backend].addr;
+    let t0 = Instant::now();
     let mut client = WireClient::connect_timeout(addr, state.forward_timeout())
-        .map_err(|e| WireError { code: None, msg: format!("{e:#}") })?;
-    client.submit_wire(ws)
+        .map_err(|e| WireError { code: None, msg: format!("{e:#}"), retry_after_ms: None })?;
+    let res = client.submit_traced(ws);
+    if let Ok((_, trace)) = &res {
+        let us = t0.elapsed().as_micros() as u64;
+        let h = &state.hops.submit_forward[backend];
+        h.record(us);
+        h.record_exemplar(us, crate::obsv::TraceId(*trace));
+    }
+    res
 }
 
 fn send(conn: &mut TcpStream, msg: &Message) -> std::io::Result<()> {
@@ -126,8 +140,14 @@ pub(crate) fn handle_conn(mut conn: TcpStream, state: Arc<RouterState>) {
                     codec::DecodeError::BadVersion(_) => ErrCode::VersionMismatch,
                     _ => ErrCode::Protocol,
                 };
-                let _ =
-                    send(&mut conn, &Message::Err { code, msg: format!("protocol error: {e}") });
+                let _ = send(
+                    &mut conn,
+                    &Message::Err {
+                        code,
+                        msg: format!("protocol error: {e}"),
+                        retry_after_ms: None,
+                    },
+                );
                 return;
             }
         };
@@ -143,8 +163,9 @@ pub(crate) fn handle_conn(mut conn: TcpStream, state: Arc<RouterState>) {
                     crate::obsv::MetricsSnapshot::Router(state.snapshot_struct()).render_legacy();
                 send(&mut conn, &Message::Metrics { snapshot }).is_ok()
             }
-            // The router face answers scrapes with its own exposition
-            // (routing counters + per-backend health), not a backend's.
+            // The router face answers scrapes with the *federated*
+            // exposition: its own counters and per-hop histograms plus
+            // every live backend's families, merged.
             Message::ScrapeReq => {
                 send(&mut conn, &Message::Scrape { text: state.scrape() }).is_ok()
             }
@@ -166,6 +187,7 @@ pub(crate) fn handle_conn(mut conn: TcpStream, state: Arc<RouterState>) {
                 &Message::Err {
                     code: ErrCode::Protocol,
                     msg: "unexpected router-bound frame".into(),
+                    retry_after_ms: None,
                 },
             )
             .is_ok(),
@@ -188,6 +210,7 @@ fn submit(state: &RouterState, ws: WireJobSpec) -> Message {
                 "router in-flight table full ({inflight}/{}); retry later",
                 state.cfg.max_inflight
             ),
+            retry_after_ms: None,
         };
     }
     let key = codec::route_key(&ws);
@@ -208,22 +231,28 @@ fn submit(state: &RouterState, ws: WireJobSpec) -> Message {
                     state.backends[i].queue_depth.load(Ordering::Relaxed),
                     state.cfg.queue_limit
                 ),
+                retry_after_ms: None,
             };
         }
         match forward_submit(state, i, &ws) {
-            Ok(backend_job) => {
+            Ok((backend_job, trace)) => {
                 let id = state.admit(i, backend_job, ws);
-                return Message::Submitted { id };
+                return Message::Submitted { id, trace };
             }
             Err(we) => match we.code {
                 Some(code) => {
                     // A live backend rejected (queue full, invalid spec,
-                    // …): propagate its typed verdict — never buffer the
-                    // job router-side hoping for capacity.
+                    // …): propagate its typed verdict — and its retry
+                    // hint — never buffer the job router-side hoping
+                    // for capacity.
                     if code == ErrCode::QueueFull {
                         state.metrics.rejected_full.fetch_add(1, Ordering::Relaxed);
                     }
-                    return Message::Err { code, msg: we.msg };
+                    return Message::Err {
+                        code,
+                        msg: we.msg,
+                        retry_after_ms: we.retry_after_ms,
+                    };
                 }
                 None => {
                     state.mark_backend_down(i);
@@ -233,7 +262,11 @@ fn submit(state: &RouterState, ws: WireJobSpec) -> Message {
         }
     }
     state.metrics.rejected_down.fetch_add(1, Ordering::Relaxed);
-    Message::Err { code: ErrCode::BackendDown, msg: "no backend available".into() }
+    Message::Err {
+        code: ErrCode::BackendDown,
+        msg: "no backend available".into(),
+        retry_after_ms: None,
+    }
 }
 
 fn do_cancel(state: &RouterState, id: JobId) -> Message {
@@ -275,8 +308,11 @@ enum PumpEnd {
 /// Relay one watch stream, failing over across backend losses.
 fn relay_watch(state: &RouterState, id: JobId, conn: &mut TcpStream) -> WatchEnd {
     let Some(mut view) = state.entry_view(id) else {
-        let reply =
-            Message::Err { code: ErrCode::UnknownJob, msg: format!("unknown job {id}") };
+        let reply = Message::Err {
+            code: ErrCode::UnknownJob,
+            msg: format!("unknown job {id}"),
+            retry_after_ms: None,
+        };
         return if send(conn, &reply).is_ok() { WatchEnd::Clean } else { WatchEnd::Disconnected };
     };
     let mut epoch: u32 = 0;
@@ -284,12 +320,14 @@ fn relay_watch(state: &RouterState, id: JobId, conn: &mut TcpStream) -> WatchEnd
     let mut failovers = 0usize;
     loop {
         let backend_dead = match subscribe_upstream(state, &view) {
-            Ok(mut up) => match pump(state, id, epoch, &mut last_iter, &mut up, conn) {
-                PumpEnd::Done(true) => return WatchEnd::Clean,
-                PumpEnd::Done(false) | PumpEnd::ClientGone => return WatchEnd::Disconnected,
-                PumpEnd::Shutdown => return WatchEnd::Shutdown,
-                PumpEnd::Lost { backend_dead } => backend_dead,
-            },
+            Ok(mut up) => {
+                match pump(state, id, view.backend, epoch, &mut last_iter, &mut up, conn) {
+                    PumpEnd::Done(true) => return WatchEnd::Clean,
+                    PumpEnd::Done(false) | PumpEnd::ClientGone => return WatchEnd::Disconnected,
+                    PumpEnd::Shutdown => return WatchEnd::Shutdown,
+                    PumpEnd::Lost { backend_dead } => backend_dead,
+                }
+            }
             Err(()) => true,
         };
         failovers += 1;
@@ -297,6 +335,7 @@ fn relay_watch(state: &RouterState, id: JobId, conn: &mut TcpStream) -> WatchEnd
             let reply = Message::Err {
                 code: ErrCode::BackendDown,
                 msg: format!("job {id} lost after {MAX_FAILOVERS} failovers"),
+                retry_after_ms: None,
             };
             return if send(conn, &reply).is_ok() {
                 WatchEnd::Clean
@@ -307,12 +346,15 @@ fn relay_watch(state: &RouterState, id: JobId, conn: &mut TcpStream) -> WatchEnd
         if backend_dead {
             state.mark_backend_down(view.backend);
         }
+        let lost_at = Instant::now();
         match state.failover(id, view.generation) {
             Ok(next) => {
                 // Resume: new upstream job, next epoch; `last_iter`
                 // persists so replayed iterations are swallowed.
                 state.metrics.resumed.fetch_add(1, Ordering::Relaxed);
                 state.metrics.backend(next.backend).resumed.fetch_add(1, Ordering::Relaxed);
+                state.hops.failover_resume[next.backend]
+                    .record(lost_at.elapsed().as_micros() as u64);
                 view = next;
                 epoch += 1;
             }
@@ -320,6 +362,7 @@ fn relay_watch(state: &RouterState, id: JobId, conn: &mut TcpStream) -> WatchEnd
                 let reply = Message::Err {
                     code,
                     msg: format!("job {id}: resume after backend loss failed"),
+                    retry_after_ms: None,
                 };
                 return if send(conn, &reply).is_ok() {
                     WatchEnd::Clean
@@ -341,15 +384,22 @@ fn subscribe_upstream(state: &RouterState, view: &EntryView) -> Result<Upstream,
 }
 
 /// Pump one upstream subscription onto the client connection until a
-/// terminal frame, a loss, client death, or shutdown.
+/// terminal frame, a loss, client death, or shutdown. Records the
+/// subscribe→first-`Progress` hop latency once per upstream stream and
+/// the per-frame fan-out delay (upstream receipt → client write done),
+/// both labeled by `backend`.
+#[allow(clippy::too_many_arguments)]
 fn pump(
     state: &RouterState,
     id: JobId,
+    backend: usize,
     epoch: u32,
     last_iter: &mut Option<usize>,
     up: &mut Upstream,
     conn: &mut TcpStream,
 ) -> PumpEnd {
+    let subscribed_at = Instant::now();
+    let mut first_progress_seen = false;
     loop {
         match up.poll() {
             Ok(None) => {
@@ -357,7 +407,14 @@ fn pump(
                     return PumpEnd::Shutdown;
                 }
             }
-            Ok(Some(Message::Progress { stat, .. })) => {
+            Ok(Some(Message::Progress { stat, trace, .. })) => {
+                if !first_progress_seen {
+                    first_progress_seen = true;
+                    let us = subscribed_at.elapsed().as_micros() as u64;
+                    let h = &state.hops.first_progress[backend];
+                    h.record(us);
+                    h.record_exemplar(us, crate::obsv::TraceId(trace));
+                }
                 // Replay filter: after a resume the re-solve restarts at
                 // iteration 0 and (being seeded) replays the same
                 // trajectory; forward only iterations this stream has
@@ -366,9 +423,12 @@ fn pump(
                     continue;
                 }
                 *last_iter = Some(stat.iter);
-                if send(conn, &Message::Progress { id, epoch, stat }).is_err() {
+                let received_at = Instant::now();
+                if send(conn, &Message::Progress { id, epoch, stat, trace }).is_err() {
                     return PumpEnd::ClientGone;
                 }
+                state.hops.fanout_delay[backend]
+                    .record(received_at.elapsed().as_micros() as u64);
             }
             Ok(Some(Message::QueuePos { position, depth, .. })) => {
                 if send(conn, &Message::QueuePos { id, position, depth }).is_err() {

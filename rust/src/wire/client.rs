@@ -69,6 +69,10 @@ pub struct WireError {
     /// failures (connect, timeout, frame corruption).
     pub code: Option<ErrCode>,
     pub msg: String,
+    /// Server-estimated backoff for `ErrCode::QueueFull` rejections
+    /// (observed exec cost × queue depth); `None` on every other error
+    /// and on servers predating wire v4.
+    pub retry_after_ms: Option<u64>,
 }
 
 impl WireError {
@@ -78,16 +82,23 @@ impl WireError {
     }
 
     fn local(e: impl std::fmt::Display) -> Self {
-        Self { code: None, msg: e.to_string() }
+        Self { code: None, msg: e.to_string(), retry_after_ms: None }
     }
 }
 
 impl std::fmt::Display for WireError {
     fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
         match self.code {
-            Some(code) => write!(f, "{code}: {}", self.msg),
-            None => f.write_str(&self.msg),
+            Some(code) => write!(f, "{code}: {}", self.msg)?,
+            None => f.write_str(&self.msg)?,
         }
+        // The hint must live in the rendered message: the vendored
+        // anyhow shim flattens errors to strings, and `lpcs solve`/
+        // `watch` print exactly this.
+        if let Some(ms) = self.retry_after_ms {
+            write!(f, " (retry after ~{ms} ms)")?;
+        }
+        Ok(())
     }
 }
 
@@ -171,12 +182,34 @@ impl WireClient {
     /// router holds — forwarding must not round-trip through operator
     /// reconstruction).
     pub fn submit_wire(&mut self, ws: &WireJobSpec) -> std::result::Result<JobId, WireError> {
-        self.send(&Message::Submit(ws.clone())).map_err(WireError::local)?;
+        self.submit_traced(ws).map(|(id, _)| id)
+    }
+
+    /// [`WireClient::submit_wire`] returning `(job id, trace id)`. This
+    /// is the fleet's first submit face: an untraced spec (`trace == 0`)
+    /// gets its [`crate::obsv::TraceId`] minted here, so the id printed
+    /// by `lpcs solve`/`watch` is the one every downstream hop carries.
+    pub fn submit_traced(
+        &mut self,
+        ws: &WireJobSpec,
+    ) -> std::result::Result<(JobId, u64), WireError> {
+        let mut ws = ws.clone();
+        if ws.trace == 0 {
+            ws.trace = crate::obsv::TraceId::mint_submit(&ws.y, ws.s).0;
+        }
+        let sent = ws.trace;
+        self.send(&Message::Submit(ws)).map_err(WireError::local)?;
         match self.recv(REPLY_TIMEOUT).map_err(WireError::local)? {
-            Message::Submitted { id } => Ok(id),
-            Message::Err { code, msg } => {
-                Err(WireError { code: Some(code), msg: format!("submit rejected: {msg}") })
+            // A v2/v3 server zeroes the echoed trace; keep the minted one
+            // locally so the caller can still label its own records.
+            Message::Submitted { id, trace } => {
+                Ok((id, if trace != 0 { trace } else { sent }))
             }
+            Message::Err { code, msg, retry_after_ms } => Err(WireError {
+                code: Some(code),
+                msg: format!("submit rejected: {msg}"),
+                retry_after_ms,
+            }),
             other => Err(WireError::local(format!("unexpected reply to Submit: {other:?}"))),
         }
     }
@@ -191,7 +224,14 @@ impl WireClient {
     /// [`WireClient::watch`] with an explicit per-event timeout.
     pub fn watch_timeout(&mut self, id: JobId, per_event: Duration) -> Result<Watch<'_>> {
         self.send(&Message::Subscribe { id })?;
-        Ok(Watch { client: self, per_event, finished: false, clean: false, last_iter: None })
+        Ok(Watch {
+            client: self,
+            per_event,
+            finished: false,
+            clean: false,
+            last_iter: None,
+            trace: 0,
+        })
     }
 
     /// Ask the service to stop a job at its next iteration boundary.
@@ -200,7 +240,7 @@ impl WireClient {
         self.send(&Message::Cancel { id })?;
         match self.recv(REPLY_TIMEOUT)? {
             Message::Cancelled { id: got, accepted } if got == id => Ok(accepted),
-            Message::Err { code, msg } => bail!("cancel rejected ({code}): {msg}"),
+            Message::Err { code, msg, .. } => bail!("cancel rejected ({code}): {msg}"),
             other => bail!("unexpected reply to Cancel: {other:?}"),
         }
     }
@@ -210,7 +250,7 @@ impl WireClient {
         self.send(&Message::MetricsReq)?;
         match self.recv(REPLY_TIMEOUT)? {
             Message::Metrics { snapshot } => Ok(snapshot),
-            Message::Err { code, msg } => bail!("metrics rejected ({code}): {msg}"),
+            Message::Err { code, msg, .. } => bail!("metrics rejected ({code}): {msg}"),
             other => bail!("unexpected reply to Metrics: {other:?}"),
         }
     }
@@ -222,7 +262,7 @@ impl WireClient {
         self.send(&Message::ScrapeReq)?;
         match self.recv(REPLY_TIMEOUT)? {
             Message::Scrape { text } => Ok(text),
-            Message::Err { code, msg } => bail!("scrape rejected ({code}): {msg}"),
+            Message::Err { code, msg, .. } => bail!("scrape rejected ({code}): {msg}"),
             other => bail!("unexpected reply to ScrapeReq: {other:?}"),
         }
     }
@@ -233,7 +273,7 @@ impl WireClient {
         self.send(&Message::StatsReq)?;
         match self.recv(REPLY_TIMEOUT)? {
             Message::Stats(st) => Ok(st),
-            Message::Err { code, msg } => bail!("stats rejected ({code}): {msg}"),
+            Message::Err { code, msg, .. } => bail!("stats rejected ({code}): {msg}"),
             other => bail!("unexpected reply to StatsReq: {other:?}"),
         }
     }
@@ -261,6 +301,19 @@ pub struct Watch<'a> {
     /// already-seen iterations are swallowed here so consumers always
     /// observe one strictly monotone stream across a backend bounce.
     last_iter: Option<usize>,
+    /// Fleet trace id observed on the stream's frames (0 until the
+    /// first `Progress`/`Done` carries one, or forever against a v2/v3
+    /// server).
+    trace: u64,
+}
+
+impl Watch<'_> {
+    /// The job's fleet trace id as observed on the stream so far — what
+    /// `lpcs watch` prints and the e2e histogram exemplars carry. 0 =
+    /// not seen yet (no traced frame has arrived).
+    pub fn trace(&self) -> u64 {
+        self.trace
+    }
 }
 
 impl Iterator for Watch<'_> {
@@ -272,7 +325,10 @@ impl Iterator for Watch<'_> {
         }
         loop {
             return match self.client.recv(self.per_event) {
-                Ok(Message::Progress { stat, .. }) => {
+                Ok(Message::Progress { stat, trace, .. }) => {
+                    if trace != 0 {
+                        self.trace = trace;
+                    }
                     if self.last_iter.is_some_and(|last| stat.iter <= last) {
                         continue; // replayed iteration after a resume
                     }
@@ -283,17 +339,23 @@ impl Iterator for Watch<'_> {
                     Some(Ok(WatchEvent::Queued { position, depth }))
                 }
                 Ok(Message::Done(out)) => {
+                    if out.trace != 0 {
+                        self.trace = out.trace;
+                    }
                     self.finished = true;
                     self.clean = true;
                     Some(Ok(WatchEvent::Done(out.into_outcome())))
                 }
-                Ok(Message::Err { code, msg }) => {
+                Ok(Message::Err { code, msg, retry_after_ms }) => {
                     // The server answers a bad Subscribe with one Err
                     // frame and sends nothing further for it.
                     self.finished = true;
                     self.clean = true;
-                    let we =
-                        WireError { code: Some(code), msg: format!("watch failed: {msg}") };
+                    let we = WireError {
+                        code: Some(code),
+                        msg: format!("watch failed: {msg}"),
+                        retry_after_ms,
+                    };
                     Some(Err(we.into()))
                 }
                 Ok(other) => {

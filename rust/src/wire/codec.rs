@@ -42,6 +42,12 @@
 //! `ScrapeReq`/`Scrape` (v3) is the observability face: the server
 //! answers with its full Prometheus text exposition (see
 //! [`crate::obsv`]); `lpcs scrape ADDR` is a one-shot client for it.
+//!
+//! v4 appends *trailing* fields to existing payloads: a trace id
+//! (u64, 0 = absent) on `Submit`/`Submitted`/`Progress`/`Done`, and an
+//! optional `retry_after_ms` hint on `Err`. The decoder reads them only
+//! when the frame's version byte says v4, so v2/v3 peers keep decoding
+//! unchanged and their frames decode here with zero/`None` defaults.
 
 use crate::algorithms::qniht::RequantMode;
 use crate::algorithms::{IterStat, SolveResult};
@@ -56,12 +62,15 @@ use std::time::Duration;
 
 /// Protocol version carried in every frame header. v2 added typed
 /// `Err` codes, the `Progress` epoch, and the `QueuePos`/`Stats`
-/// frames; v3 added the `ScrapeReq`/`Scrape` observability pair. The
-/// decoder stays tolerant of v2 peers ([`MIN_WIRE_VERSION`]) — v3 only
-/// *adds* frames, every v2 frame is byte-identical — while v1 peers
-/// are rejected with `BadVersion` (surfaced as
-/// [`ErrCode::VersionMismatch`] by the server).
-pub const WIRE_VERSION: u8 = 3;
+/// frames; v3 added the `ScrapeReq`/`Scrape` observability pair; v4
+/// added the trailing trace id on `Submit`/`Submitted`/`Progress`/
+/// `Done` and the `retry_after_ms` hint on `Err`. The decoder stays
+/// tolerant of older peers back to [`MIN_WIRE_VERSION`] — v4 fields
+/// are read only from v4 frames, every older frame decodes with
+/// zero/`None` defaults — while v1 peers are rejected with
+/// `BadVersion` (surfaced as [`ErrCode::VersionMismatch`] by the
+/// server).
+pub const WIRE_VERSION: u8 = 4;
 /// Oldest peer version [`decode`] accepts.
 pub const MIN_WIRE_VERSION: u8 = 2;
 /// version + tag + payload-length bytes.
@@ -250,7 +259,9 @@ pub struct BackendStats {
 pub enum Message {
     /// Submit a job (client → server); answered by `Submitted` or `Err`.
     Submit(WireJobSpec),
-    Submitted { id: JobId },
+    /// Job accepted; echoes the trace id the job will carry (v4; 0 from
+    /// an older server or for an untraced submit).
+    Submitted { id: JobId, trace: u64 },
     /// Stream a job's progress; the connection then carries `QueuePos`/
     /// `Progress` frames until exactly one `Done` (or an immediate
     /// `Err`).
@@ -259,11 +270,16 @@ pub enum Message {
     Cancelled { id: JobId, accepted: bool },
     /// One iteration of a running job. `epoch` is 0 from a direct
     /// server; the router bumps it per upstream re-subscription.
-    Progress { id: JobId, epoch: u32, stat: IterStat },
+    /// `trace` is the job's trace id (v4; 0 when absent).
+    Progress { id: JobId, epoch: u32, stat: IterStat, trace: u64 },
     Done(WireOutcome),
     MetricsReq,
     Metrics { snapshot: String },
-    Err { code: ErrCode, msg: String },
+    /// Typed rejection. `retry_after_ms` (v4) is the server's estimate
+    /// of when a `QueueFull` retry is worth attempting; `None` on other
+    /// codes, from older peers, or when the server has no calibrated
+    /// cost yet.
+    Err { code: ErrCode, msg: String, retry_after_ms: Option<u64> },
     /// Pushed while a subscribed job is still queued: how many jobs sit
     /// ahead of it, and the total queue depth.
     QueuePos { id: JobId, position: u64, depth: u64 },
@@ -309,6 +325,9 @@ pub struct WireJobSpec {
     pub solver: SolverKind,
     pub engine: EngineKind,
     pub seed: u64,
+    /// Fleet trace id (v4; 0 = absent). Excluded from [`route_key`] —
+    /// tracing must never perturb placement.
+    pub trace: u64,
 }
 
 /// The operator half of a [`WireJobSpec`].
@@ -356,6 +375,7 @@ impl WireJobSpec {
             solver: spec.solver,
             engine: spec.engine,
             seed: spec.seed,
+            trace: spec.trace,
         }
     }
 
@@ -371,6 +391,7 @@ impl WireJobSpec {
             solver: self.solver,
             engine: self.engine,
             seed: self.seed,
+            trace: self.trace,
         })
     }
 }
@@ -421,6 +442,8 @@ pub struct WireOutcome {
     pub error: Option<String>,
     pub queued_us: u64,
     pub ran_us: u64,
+    /// Fleet trace id (v4; 0 = absent).
+    pub trace: u64,
 }
 
 /// [`SolveResult`] in wire form.
@@ -448,6 +471,7 @@ impl From<JobOutcome> for WireOutcome {
             error: o.error,
             queued_us: o.queued_for.as_micros() as u64,
             ran_us: o.ran_for.as_micros() as u64,
+            trace: o.trace,
         }
     }
 }
@@ -467,6 +491,7 @@ impl WireOutcome {
             error: self.error,
             queued_for: Duration::from_micros(self.queued_us),
             ran_for: Duration::from_micros(self.ran_us),
+            trace: self.trace,
         }
     }
 }
@@ -759,6 +784,9 @@ fn rd_problem(r: &mut Rd) -> Result<WireProblem, DecodeError> {
     })
 }
 
+// v4 trailing fields (the outcome trace id) are appended by the caller
+// and read back version-conditionally in `decode` — `put_outcome`/
+// `rd_outcome` cover the v2/v3-stable prefix.
 fn put_outcome(b: &mut Vec<u8>, o: &WireOutcome) {
     put_u64(b, o.id);
     put_u8(
@@ -810,7 +838,7 @@ fn rd_outcome(r: &mut Rd) -> Result<WireOutcome, DecodeError> {
         None
     };
     let error = if r.opt()? { Some(r.string()?) } else { None };
-    Ok(WireOutcome { id, state, result, error, queued_us: r.u64()?, ran_us: r.u64()? })
+    Ok(WireOutcome { id, state, result, error, queued_us: r.u64()?, ran_us: r.u64()?, trace: 0 })
 }
 
 // ---------------------------------------------------------------------
@@ -838,25 +866,39 @@ pub fn try_encode(msg: &Message) -> Result<Vec<u8>, DecodeError> {
             put_solver(&mut payload, &spec.solver);
             put_engine(&mut payload, spec.engine);
             put_u64(&mut payload, spec.seed);
+            put_u64(&mut payload, spec.trace); // v4 trailing field
         }
-        Message::Submitted { id } | Message::Subscribe { id } | Message::Cancel { id } => {
+        Message::Submitted { id, trace } => {
+            put_u64(&mut payload, *id);
+            put_u64(&mut payload, *trace); // v4 trailing field
+        }
+        Message::Subscribe { id } | Message::Cancel { id } => {
             put_u64(&mut payload, *id);
         }
         Message::Cancelled { id, accepted } => {
             put_u64(&mut payload, *id);
             put_bool(&mut payload, *accepted);
         }
-        Message::Progress { id, epoch, stat } => {
+        Message::Progress { id, epoch, stat, trace } => {
             put_u64(&mut payload, *id);
             put_u32(&mut payload, *epoch);
             put_stat(&mut payload, stat);
+            put_u64(&mut payload, *trace); // v4 trailing field
         }
-        Message::Done(out) => put_outcome(&mut payload, out),
+        Message::Done(out) => {
+            put_outcome(&mut payload, out);
+            put_u64(&mut payload, out.trace); // v4 trailing field
+        }
         Message::MetricsReq => {}
         Message::Metrics { snapshot } => put_str(&mut payload, snapshot),
-        Message::Err { code, msg } => {
+        Message::Err { code, msg, retry_after_ms } => {
             put_u16(&mut payload, code.code());
             put_str(&mut payload, msg);
+            // v4 trailing field
+            put_opt(&mut payload, retry_after_ms.is_some());
+            if let Some(ms) = retry_after_ms {
+                put_u64(&mut payload, *ms);
+            }
         }
         Message::QueuePos { id, position, depth } => {
             put_u64(&mut payload, *id);
@@ -893,10 +935,12 @@ pub fn decode(buf: &[u8]) -> Result<(Message, usize), DecodeError> {
         return Err(DecodeError::Truncated);
     }
     // Tolerant of older peers back to MIN_WIRE_VERSION: v3 only ADDED
-    // the Scrape pair, so every v2 frame decodes identically.
+    // the Scrape pair, and v4 fields are trailing — read them only when
+    // the sender's version byte says they are there.
     if !(MIN_WIRE_VERSION..=WIRE_VERSION).contains(&buf[0]) {
         return Err(DecodeError::BadVersion(buf[0]));
     }
+    let v4 = buf[0] >= 4;
     let tag = buf[1];
     let len = u32::from_le_bytes(buf[2..6].try_into().unwrap()) as usize;
     if len > MAX_PAYLOAD {
@@ -921,20 +965,43 @@ pub fn decode(buf: &[u8]) -> Result<(Message, usize), DecodeError> {
             let solver = rd_solver(&mut r)?;
             let engine = rd_engine(&mut r)?;
             let seed = r.u64()?;
-            Message::Submit(WireJobSpec { problem, y, s, solver, engine, seed })
+            let trace = if v4 { r.u64()? } else { 0 };
+            Message::Submit(WireJobSpec { problem, y, s, solver, engine, seed, trace })
         }
-        2 => Message::Submitted { id: r.u64()? },
+        2 => {
+            let id = r.u64()?;
+            let trace = if v4 { r.u64()? } else { 0 };
+            Message::Submitted { id, trace }
+        }
         3 => Message::Subscribe { id: r.u64()? },
         4 => Message::Cancel { id: r.u64()? },
         5 => Message::Cancelled { id: r.u64()?, accepted: r.bool()? },
-        6 => Message::Progress { id: r.u64()?, epoch: r.u32()?, stat: rd_stat(&mut r)? },
-        7 => Message::Done(rd_outcome(&mut r)?),
+        6 => {
+            let id = r.u64()?;
+            let epoch = r.u32()?;
+            let stat = rd_stat(&mut r)?;
+            let trace = if v4 { r.u64()? } else { 0 };
+            Message::Progress { id, epoch, stat, trace }
+        }
+        7 => {
+            let mut out = rd_outcome(&mut r)?;
+            if v4 {
+                out.trace = r.u64()?;
+            }
+            Message::Done(out)
+        }
         8 => Message::MetricsReq,
         9 => Message::Metrics { snapshot: r.string()? },
         10 => {
             let code = ErrCode::from_code(r.u16()?)
                 .ok_or(DecodeError::Malformed("unknown err code"))?;
-            Message::Err { code, msg: r.string()? }
+            let msg = r.string()?;
+            let retry_after_ms = if v4 {
+                if r.opt()? { Some(r.u64()?) } else { None }
+            } else {
+                None
+            };
+            Message::Err { code, msg, retry_after_ms }
         }
         11 => Message::QueuePos { id: r.u64()?, position: r.u64()?, depth: r.u64()? },
         12 => Message::StatsReq,
@@ -1033,15 +1100,21 @@ mod tests {
     #[test]
     fn simple_frames_round_trip() {
         for msg in [
-            Message::Submitted { id: 7 },
+            Message::Submitted { id: 7, trace: 0xfeed },
+            Message::Submitted { id: 8, trace: 0 },
             Message::Subscribe { id: u64::MAX },
             Message::Cancel { id: 0 },
             Message::Cancelled { id: 3, accepted: true },
-            Message::Progress { id: 9, epoch: 2, stat: stat(4) },
+            Message::Progress { id: 9, epoch: 2, stat: stat(4), trace: 0xabc },
             Message::MetricsReq,
             Message::Metrics { snapshot: "submitted=1".into() },
             Message::Metrics { snapshot: String::new() },
-            Message::Err { code: ErrCode::QueueFull, msg: "queue full".into() },
+            Message::Err {
+                code: ErrCode::QueueFull,
+                msg: "queue full".into(),
+                retry_after_ms: Some(120),
+            },
+            Message::Err { code: ErrCode::Internal, msg: "x".into(), retry_after_ms: None },
             Message::QueuePos { id: 11, position: 3, depth: 9 },
             Message::StatsReq,
             Message::Stats(BackendStats { queue_depth: 5, queue_capacity: 256, workers: 2 }),
@@ -1058,8 +1131,8 @@ mod tests {
 
     #[test]
     fn two_frames_in_one_buffer_decode_in_order() {
-        let a = Message::Submitted { id: 1 };
-        let b = Message::Err { code: ErrCode::Internal, msg: "x".into() };
+        let a = Message::Submitted { id: 1, trace: 0 };
+        let b = Message::Err { code: ErrCode::Internal, msg: "x".into(), retry_after_ms: None };
         let mut buf = encode(&a);
         buf.extend_from_slice(&encode(&b));
         let (first, used) = decode(&buf).unwrap();
@@ -1069,31 +1142,69 @@ mod tests {
         assert_eq!(used + used2, buf.len());
     }
 
+    /// Fabricate what an older-version peer would have sent: strip the
+    /// v4 trailing bytes from the payload, rewrite the version byte,
+    /// fix the length field and recompute the checksum (which covers
+    /// header + payload).
+    fn downgrade(frame: &[u8], version: u8, strip: usize) -> Vec<u8> {
+        let len = u32::from_le_bytes(frame[2..6].try_into().unwrap()) as usize;
+        let mut out = frame[..HEADER_LEN + len - strip].to_vec();
+        out[0] = version;
+        out[2..6].copy_from_slice(&((len - strip) as u32).to_le_bytes());
+        let sum = checksum(&out);
+        out.extend_from_slice(&sum.to_le_bytes());
+        out
+    }
+
     #[test]
-    fn v2_frames_still_decode() {
-        // A v2 peer's frame is byte-identical except the version byte —
-        // rewrite it and recompute the checksum (which covers the
-        // header) to fabricate exactly what a v2 sender emits.
-        for msg in [
-            Message::Submitted { id: 42 },
-            Message::MetricsReq,
-            Message::QueuePos { id: 1, position: 0, depth: 4 },
-        ] {
-            let mut frame = encode(&msg);
-            frame[0] = 2;
-            let body_end = frame.len() - TRAILER_LEN;
-            let sum = checksum(&frame[..body_end]);
-            let end = frame.len();
-            frame[body_end..end].copy_from_slice(&sum.to_le_bytes());
-            let (back, used) = decode(&frame).expect("v2 peer frames stay decodable");
-            assert_eq!(back, msg);
-            assert_eq!(used, frame.len());
+    fn v2_and_v3_frames_still_decode_with_zeroed_v4_fields() {
+        // (sent message, bytes a pre-v4 sender would not have appended,
+        //  what this decoder should see)
+        let cases: Vec<(Message, usize, Message)> = vec![
+            (
+                Message::Submitted { id: 42, trace: 0xbeef },
+                8,
+                Message::Submitted { id: 42, trace: 0 },
+            ),
+            (Message::MetricsReq, 0, Message::MetricsReq),
+            (
+                Message::QueuePos { id: 1, position: 0, depth: 4 },
+                0,
+                Message::QueuePos { id: 1, position: 0, depth: 4 },
+            ),
+            (
+                Message::Progress { id: 3, epoch: 1, stat: stat(6), trace: 7 },
+                8,
+                Message::Progress { id: 3, epoch: 1, stat: stat(6), trace: 0 },
+            ),
+            (
+                Message::Err { code: ErrCode::Internal, msg: "x".into(), retry_after_ms: None },
+                1,
+                Message::Err { code: ErrCode::Internal, msg: "x".into(), retry_after_ms: None },
+            ),
+            (
+                Message::Err {
+                    code: ErrCode::QueueFull,
+                    msg: "full".into(),
+                    retry_after_ms: Some(55),
+                },
+                9,
+                Message::Err { code: ErrCode::QueueFull, msg: "full".into(), retry_after_ms: None },
+            ),
+        ];
+        for (sent, strip, want) in cases {
+            for version in [2u8, 3] {
+                let frame = downgrade(&encode(&sent), version, strip);
+                let (back, used) = decode(&frame).expect("older peer frames stay decodable");
+                assert_eq!(back, want, "v{version} fabrication of {sent:?}");
+                assert_eq!(used, frame.len());
+            }
         }
     }
 
     #[test]
     fn version_checksum_tag_and_length_are_enforced() {
-        let frame = encode(&Message::Submitted { id: 5 });
+        let frame = encode(&Message::Submitted { id: 5, trace: 0 });
         // Version byte (v1 and future versions are both rejected; the
         // checksum is recomputed so version is the only fault).
         for v in [1u8, 9] {
@@ -1130,9 +1241,9 @@ mod tests {
     fn err_codes_round_trip_and_unknown_codes_are_malformed() {
         for code in ErrCode::ALL {
             assert_eq!(ErrCode::from_code(code.code()), Some(code));
-            let frame = encode(&Message::Err { code, msg: "x".into() });
+            let frame = encode(&Message::Err { code, msg: "x".into(), retry_after_ms: None });
             let (back, _) = decode(&frame).unwrap();
-            assert_eq!(back, Message::Err { code, msg: "x".into() });
+            assert_eq!(back, Message::Err { code, msg: "x".into(), retry_after_ms: None });
         }
         // An Err frame carrying a code this build does not know must be
         // rejected as malformed, not mapped to some arbitrary variant.
@@ -1149,7 +1260,7 @@ mod tests {
 
     #[test]
     fn every_truncation_is_rejected_without_panicking() {
-        let msg = Message::Progress { id: 1, epoch: 0, stat: stat(3) };
+        let msg = Message::Progress { id: 1, epoch: 0, stat: stat(3), trace: 9 };
         let frame = encode(&msg);
         for cut in 0..frame.len() {
             assert_eq!(

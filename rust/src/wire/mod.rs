@@ -26,9 +26,12 @@
 //! `tests/wire_serving.rs` on a [`crate::testkit::harness::ServiceHarness`].
 //!
 //! The [`crate::router`] tier speaks this same protocol on both of its
-//! faces: v2 frames carry typed [`ErrCode`]s, a resume epoch on
+//! faces: frames carry typed [`ErrCode`]s, a resume epoch on
 //! `Progress`, queue-position pushes while a job is `Queued`, and the
 //! `StatsReq`/`Stats` load probe the router's health checker polls.
+//! v4 threads a fleet trace id through `Submit`/`Submitted`/`Progress`/
+//! `Done` and a `retry_after_ms` hint on queue-full `Err` frames; the
+//! decoder stays tolerant back to [`MIN_WIRE_VERSION`].
 
 pub mod client;
 pub mod codec;
@@ -38,6 +41,6 @@ pub use client::{Watch, WatchEvent, WireClient, WireError};
 pub use codec::{
     checksum, decode, encode, fnv64, route_key, try_encode, BackendStats, DecodeError, ErrCode,
     FrameReader, Message, PollError, WireJobSpec, WireOutcome, WireProblem, WireResult,
-    WIRE_VERSION,
+    MIN_WIRE_VERSION, WIRE_VERSION,
 };
 pub use server::{serve, WireServer};

@@ -127,6 +127,7 @@ fn build_spec(ws: WireJobSpec, cache: &Mutex<OpCache>) -> Result<crate::coordina
         solver: ws.solver,
         engine: ws.engine,
         seed: ws.seed,
+        trace: ws.trace,
     })
 }
 
@@ -254,8 +255,14 @@ fn handle_conn(
                     codec::DecodeError::BadVersion(_) => ErrCode::VersionMismatch,
                     _ => ErrCode::Protocol,
                 };
-                let _ =
-                    send(&mut conn, &Message::Err { code, msg: format!("protocol error: {e}") });
+                let _ = send(
+                    &mut conn,
+                    &Message::Err {
+                        code,
+                        msg: format!("protocol error: {e}"),
+                        retry_after_ms: None,
+                    },
+                );
                 return;
             }
         };
@@ -265,25 +272,46 @@ fn handle_conn(
                     Err(e) => Message::Err {
                         code: ErrCode::Validation,
                         msg: format!("{e:#}"),
+                        retry_after_ms: None,
                     },
-                    Ok(spec) => match service.try_submit(spec, Priority::Normal) {
-                        Ok(id) => Message::Submitted { id },
-                        Err(e) => {
-                            let code = match e {
-                                SubmitError::Invalid(_) => ErrCode::Validation,
-                                SubmitError::QueueFull => ErrCode::QueueFull,
-                                SubmitError::Closed => ErrCode::Internal,
-                            };
-                            Message::Err { code, msg: format!("{e}") }
+                    Ok(mut spec) => {
+                        // v2/v3 clients submit untraced; this face mints
+                        // so the echoed Submitted (and every later frame)
+                        // carries the id the fleet will observe.
+                        if spec.trace == 0 {
+                            spec.trace =
+                                crate::obsv::TraceId::mint_submit(&spec.y, spec.s).0;
                         }
-                    },
+                        let trace = spec.trace;
+                        match service.try_submit(spec, Priority::Normal) {
+                            Ok(id) => Message::Submitted { id, trace },
+                            Err(e) => {
+                                let code = match e {
+                                    SubmitError::Invalid(_) => ErrCode::Validation,
+                                    SubmitError::QueueFull => ErrCode::QueueFull,
+                                    SubmitError::Closed => ErrCode::Internal,
+                                };
+                                // Backpressure rejections carry the
+                                // scheduler-derived backoff hint.
+                                let retry_after_ms = match code {
+                                    ErrCode::QueueFull => service.retry_after_ms(),
+                                    _ => None,
+                                };
+                                Message::Err { code, msg: format!("{e}"), retry_after_ms }
+                            }
+                        }
+                    }
                 };
                 send(&mut conn, &reply).is_ok()
             }
             Message::Subscribe { id } => match service.subscribe(id, sub_depth) {
                 None => send(
                     &mut conn,
-                    &Message::Err { code: ErrCode::UnknownJob, msg: format!("unknown job {id}") },
+                    &Message::Err {
+                        code: ErrCode::UnknownJob,
+                        msg: format!("unknown job {id}"),
+                        retry_after_ms: None,
+                    },
                 )
                 .is_ok(),
                 Some(sub) => match relay(&sub, id, &mut conn, &service, &shutdown) {
@@ -325,6 +353,7 @@ fn handle_conn(
                 &Message::Err {
                     code: ErrCode::Protocol,
                     msg: "unexpected server-bound frame".into(),
+                    retry_after_ms: None,
                 },
             )
             .is_ok(),
@@ -360,10 +389,11 @@ fn relay(
     shutdown: &AtomicBool,
 ) -> RelayEnd {
     let mut last_pos: Option<(u64, u64)> = None;
+    let trace = service.trace_of(id);
     loop {
         match sub.recv(POLL_TICK) {
             Some(ProgressEvent::Stat(stat)) => {
-                if send(conn, &Message::Progress { id, epoch: 0, stat }).is_err() {
+                if send(conn, &Message::Progress { id, epoch: 0, stat, trace }).is_err() {
                     sub.detach();
                     service.metrics().disconnects.fetch_add(1, Ordering::Relaxed);
                     return RelayEnd::Disconnected;
@@ -429,6 +459,7 @@ mod tests {
             solver: SolverKind::Niht,
             engine: EngineKind::NativeDense,
             seed,
+            trace: 0,
         };
         let a = build_spec(ws(1), &cache).unwrap();
         let b = build_spec(ws(2), &cache).unwrap();
@@ -467,6 +498,7 @@ mod tests {
             solver: SolverKind::Niht,
             engine: EngineKind::NativeDense,
             seed: 0,
+            trace: 0,
         };
         let a = build_spec(ws(None), &cache).unwrap();
         let b = build_spec(ws(None), &cache).unwrap();

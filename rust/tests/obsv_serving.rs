@@ -11,8 +11,13 @@
 //! * after the load drains, the `ok` totals account for every job per
 //!   (solver, engine, bits) label set and the in-flight gauge is back
 //!   to zero;
-//! * the router face answers `ScrapeReq` with its own exposition
-//!   (routing counters + per-backend health series), not the backend's.
+//! * the router face answers `ScrapeReq` with the **federated** fleet
+//!   exposition: its own routing counters and per-hop histograms
+//!   (labeled by backend) plus every backend's families merged — with
+//!   the same internal-consistency invariants holding on the merge, a
+//!   trace-id exemplar surviving the round trip, and a killed backend
+//!   degrading to a `lpcs_backend_scrape_errors` increment instead of a
+//!   stalled or inconsistent scrape.
 
 use lpcs::algorithms::SolveOptions;
 use lpcs::config::{EngineKind, ServiceConfig};
@@ -38,10 +43,12 @@ fn planted(m: usize, n: usize, s: usize, seed: u64) -> (Arc<Mat>, Vec<f32>) {
 }
 
 /// Parse an exposition into `series{labels} -> value`, ignoring
-/// `# HELP`/`# TYPE` lines. Values in our expositions are integral.
+/// `# HELP`/`# TYPE` lines and OpenMetrics exemplar suffixes
+/// (`… # {trace_id="…"} v`). Values in our expositions are integral.
 fn parse(text: &str) -> HashMap<String, u64> {
     let mut out = HashMap::new();
     for line in text.lines().filter(|l| !l.is_empty() && !l.starts_with('#')) {
+        let line = line.split(" # ").next().unwrap();
         let (series, value) = line.rsplit_once(' ').unwrap_or_else(|| panic!("bad line: {line}"));
         let value: u64 = value.parse().unwrap_or_else(|_| panic!("non-integer value: {line}"));
         assert!(out.insert(series.to_string(), value).is_none(), "duplicate series: {series}");
@@ -195,7 +202,7 @@ fn mid_load_scrape_is_internally_consistent_and_drains_to_exact_totals() {
 }
 
 #[test]
-fn router_face_answers_scrape_with_its_own_exposition() {
+fn router_scrape_federates_backend_families_with_hop_series_and_exemplars() {
     let h = RouterHarness::start(
         2,
         ServiceConfig { workers: 1, queue_capacity: 8, max_batch: 2, ..Default::default() },
@@ -209,13 +216,18 @@ fn router_face_answers_scrape_with_its_own_exposition() {
         .seed(4)
         .build();
     let id = client.submit(&spec).unwrap();
+    let mut trace = 0u64;
     for event in client.watch(id).unwrap() {
         if let WatchEvent::Done(out) = event.unwrap() {
             assert!(out.error.is_none(), "{:?}", out.error);
+            trace = out.trace;
         }
     }
+    assert_ne!(trace, 0, "a routed job must carry a minted trace id to its watcher");
 
-    let parsed = parse(&client.scrape().expect("scrape through the router"));
+    let text = client.scrape().expect("scrape through the router");
+    let parsed = parse(&text);
+    // Router-own counters still lead the exposition.
     assert!(parsed["lpcs_router_routed_total"] >= 1);
     assert_eq!(parsed["lpcs_router_inflight"], 0);
     for i in 0..2 {
@@ -226,12 +238,87 @@ fn router_face_answers_scrape_with_its_own_exposition() {
             "backend {i} missing from the router exposition"
         );
     }
-    // Router metrics only — the solver histograms belong to the
-    // backends' own scrape faces.
-    assert!(!parsed.keys().any(|k| k.starts_with("lpcs_job_")));
+    // The router's own hop family, labeled by the backend the job was
+    // forwarded to.
+    assert!(
+        parsed
+            .keys()
+            .any(|k| k.starts_with("lpcs_router_submit_forward_us_count{backend=\"")),
+        "no per-backend submit-forward hop series in the federated scrape"
+    );
+    // The backends' solver families, merged into the same exposition.
+    assert_eq!(
+        parsed["lpcs_jobs_total{solver=\"niht\",engine=\"native-dense\",bits=\"32\",outcome=\"ok\"}"],
+        1
+    );
+    assert!(
+        parsed.keys().any(|k| k.starts_with("lpcs_job_e2e_us_count{")),
+        "merged backend e2e family missing"
+    );
+    // Both backends were reachable: no scrape errors.
+    assert_eq!(parsed["lpcs_backend_scrape_errors{backend=\"0\"}"], 0);
+    assert_eq!(parsed["lpcs_backend_scrape_errors{backend=\"1\"}"], 0);
+    // The merge preserves the structural invariants and the trace-id
+    // exemplar the watcher saw rides the merged e2e family.
+    assert_internally_consistent(&parsed);
+    assert!(
+        text.contains(&format!("trace_id=\"{trace:016x}\"")),
+        "the watched job's trace id is not carried by any exemplar in:\n{text}"
+    );
 
     // A backend scraped directly still serves the full solver view.
     let backend = parse(&h.backend_client(0).scrape().expect("scrape backend 0"));
     assert!(backend.contains_key("lpcs_workers_total"));
+    h.shutdown();
+}
+
+#[test]
+fn killing_a_backend_degrades_the_federated_scrape_to_an_error_counter() {
+    // Round-robin placement so both backends hold terminal jobs before
+    // one dies; the routed ids alternate 0,1 deterministically.
+    let mut h = RouterHarness::start_with(
+        2,
+        ServiceConfig { workers: 1, queue_capacity: 8, max_batch: 2, ..Default::default() },
+        SolveOptions::default(),
+        |rcfg| rcfg.affinity = false,
+    );
+    for seed in [31u64, 32] {
+        let mut client = h.client();
+        let (phi, y) = planted(96, 192, 5, seed);
+        let spec = JobSpec::builder(ProblemHandle::new(phi), y, 5)
+            .solver(SolverKind::Niht)
+            .engine(EngineKind::NativeDense)
+            .seed(seed)
+            .build();
+        let id = client.submit(&spec).unwrap();
+        for event in client.watch(id).unwrap() {
+            if let WatchEvent::Done(out) = event.unwrap() {
+                assert!(out.error.is_none(), "{:?}", out.error);
+            }
+        }
+    }
+
+    // Kill backend 1's network face; its service keeps running, exactly
+    // like a machine partition. The very next scrape must not stall and
+    // must stay internally consistent over the surviving backend.
+    h.kill_backend_server(1);
+    let mut client = h.client();
+    let parsed = parse(&client.scrape().expect("scrape with a dead backend"));
+    assert_internally_consistent(&parsed);
+    assert_eq!(parsed["lpcs_backend_scrape_errors{backend=\"0\"}"], 0);
+    let errs = parsed["lpcs_backend_scrape_errors{backend=\"1\"}"];
+    assert!(errs >= 1, "dead backend must count a scrape error, got {errs}");
+    // Only the surviving backend's jobs are visible in the merge.
+    assert_eq!(
+        parsed["lpcs_jobs_total{solver=\"niht\",engine=\"native-dense\",bits=\"32\",outcome=\"ok\"}"],
+        1
+    );
+    // Errors are a monotone counter: the next scrape fails the same
+    // backend again.
+    let again = parse(&client.scrape().expect("second scrape with a dead backend"));
+    assert!(
+        again["lpcs_backend_scrape_errors{backend=\"1\"}"] > errs,
+        "scrape-error counter must increment on every failed federation leg"
+    );
     h.shutdown();
 }

@@ -15,7 +15,7 @@ use lpcs::solver::SolverKind;
 use lpcs::testkit;
 use lpcs::wire::{
     checksum, decode, encode, route_key, BackendStats, DecodeError, ErrCode, Message,
-    WireJobSpec, WireOutcome, WireProblem, WireResult, WIRE_VERSION,
+    WireJobSpec, WireOutcome, WireProblem, WireResult, MIN_WIRE_VERSION, WIRE_VERSION,
 };
 
 fn rand_stat(rng: &mut XorShift128Plus) -> IterStat {
@@ -104,6 +104,7 @@ fn rand_outcome(rng: &mut XorShift128Plus) -> WireOutcome {
         error: if rng.below(2) == 0 { Some(format!("err {}", rng.below(100))) } else { None },
         queued_us: rng.next_u64() >> 20,
         ran_us: rng.next_u64() >> 20,
+        trace: if rng.below(2) == 0 { rng.next_u64() } else { 0 },
     }
 }
 
@@ -122,8 +123,12 @@ fn rand_message(rng: &mut XorShift128Plus) -> Message {
                 EngineKind::FpgaModel,
             ][rng.below(5)],
             seed: rng.next_u64(),
+            trace: if rng.below(2) == 0 { rng.next_u64() } else { 0 },
         }),
-        1 => Message::Submitted { id: rng.next_u64() },
+        1 => Message::Submitted {
+            id: rng.next_u64(),
+            trace: if rng.below(2) == 0 { rng.next_u64() } else { 0 },
+        },
         2 => Message::Subscribe { id: rng.next_u64() },
         3 => Message::Cancel { id: rng.next_u64() },
         4 => Message::Cancelled { id: rng.next_u64(), accepted: rng.below(2) == 1 },
@@ -131,6 +136,7 @@ fn rand_message(rng: &mut XorShift128Plus) -> Message {
             id: rng.next_u64(),
             epoch: rng.below(8) as u32, // router resume epochs
             stat: rand_stat(rng),
+            trace: if rng.below(2) == 0 { rng.next_u64() } else { 0 },
         },
         6 => Message::Done(rand_outcome(rng)),
         7 => Message::MetricsReq,
@@ -144,6 +150,11 @@ fn rand_message(rng: &mut XorShift128Plus) -> Message {
         9 => Message::Err {
             code: ErrCode::ALL[rng.below(ErrCode::ALL.len())],
             msg: if rng.below(4) == 0 { String::new() } else { "queue full".into() },
+            retry_after_ms: if rng.below(2) == 0 {
+                Some(rng.next_u64() >> 40)
+            } else {
+                None
+            },
         },
         10 => Message::QueuePos {
             id: rng.next_u64(),
@@ -186,6 +197,7 @@ fn max_size_and_empty_payloads_round_trip() {
         solver: SolverKind::qniht_fixed(2, 8),
         engine: EngineKind::NativeQuant,
         seed: 7,
+        trace: u64::MAX,
     });
     let done = Message::Done(WireOutcome {
         id: 1,
@@ -200,6 +212,7 @@ fn max_size_and_empty_payloads_round_trip() {
         error: None,
         queued_us: 5,
         ran_us: 9,
+        trace: 0x1122_3344_5566_7788,
     });
     // And the empty extremes.
     let empty_y = Message::Submit(WireJobSpec {
@@ -209,6 +222,7 @@ fn max_size_and_empty_payloads_round_trip() {
         solver: SolverKind::Niht,
         engine: EngineKind::NativeDense,
         seed: 0,
+        trace: 0,
     });
     let empty_result = Message::Done(WireOutcome {
         id: 0,
@@ -223,6 +237,7 @@ fn max_size_and_empty_payloads_round_trip() {
         error: Some(String::new()),
         queued_us: 0,
         ran_us: 0,
+        trace: 0,
     });
     for msg in [fat, done, empty_y, empty_result] {
         let frame = encode(&msg);
@@ -259,9 +274,16 @@ fn corrupted_frames_are_rejected_with_typed_errors() {
     let mut rng = XorShift128Plus::new(0xC0FFEE);
     for case in 0..50 {
         let frame = encode(&rand_message(&mut rng));
-        // Unknown version byte (any value but the real one).
+        // Unknown version byte. The decoder accepts the whole tolerant
+        // window MIN_WIRE_VERSION..=WIRE_VERSION, so step the perturbed
+        // byte past any accepted version it lands on (a still-accepted
+        // version fails later, at the checksum, not as BadVersion).
         let mut bad = frame.clone();
-        bad[0] = bad[0].wrapping_add(1 + rng.below(254) as u8);
+        let mut v = bad[0].wrapping_add(1 + rng.below(254) as u8);
+        while (MIN_WIRE_VERSION..=WIRE_VERSION).contains(&v) {
+            v = v.wrapping_add(1);
+        }
+        bad[0] = v;
         assert!(
             matches!(decode(&bad), Err(DecodeError::BadVersion(_))),
             "case {case}: version"

@@ -1,0 +1,83 @@
+//! Telescope operator + recovery bench: dense-materialized vs
+//! matrix-free vs low-precision sampling paths. Writes
+//! `BENCH_astro.json` (uploaded by CI's `bench-json` artifact).
+//!
+//! What the numbers show: the on-the-fly operator trades `O(M·N)` trig
+//! per application for zero operator storage (a dense unique-baseline Φ
+//! at L=30/r=64 is ~28 MB), the cached-row mode buys back the trig at
+//! the dense path's memory cost, and the quantized path adds only the
+//! per-baseline-block quantize/dequantize of the visibility traffic on
+//! top of the f32 transform.
+
+use lpcs::algorithms::SolveOptions;
+use lpcs::benchkit::JsonReporter;
+use lpcs::rng::XorShift128Plus;
+use lpcs::solver::{MeasurementOp, Problem, Recovery, SolverKind};
+use lpcs::telescope::{op as astro_op, AntennaArray, AstroConfig, ImageGrid, SkyProblem, VisibilityOp};
+use std::sync::Arc;
+
+fn main() {
+    let mut rep = JsonReporter::new("astro");
+
+    println!("== operator application: on-the-fly trig vs cached rows vs dense ==");
+    for r in [32usize, 64] {
+        let mut rng = XorShift128Plus::new(7);
+        let array = AntennaArray::lofar_like(10, 50e6, &mut rng);
+        let op = VisibilityOp::new(array, ImageGrid::new(r, 0.4));
+        let cached = op.clone().cached();
+        let dense = op.to_mat();
+        let x = rng.gaussian_vec(MeasurementOp::n(&op));
+        let y = op.apply(&x);
+        println!(
+            "  r={r}: n={}, m={} ({} unique baselines); dense Φ holds {:.1} MB",
+            MeasurementOp::n(&op),
+            MeasurementOp::m(&op),
+            op.baseline_count(),
+            dense.bytes_f32() as f64 / 1e6,
+        );
+        rep.run(&format!("apply/matrix-free/r{r}"), 2, 15, || op.apply(&x));
+        rep.run(&format!("apply/cached-rows/r{r}"), 2, 15, || cached.apply(&x));
+        rep.run(&format!("apply/dense/r{r}"), 2, 15, || dense.matvec(&x));
+        rep.run(&format!("adjoint/matrix-free/r{r}"), 2, 15, || op.apply_t(&y));
+        rep.run(&format!("adjoint/cached-rows/r{r}"), 2, 15, || cached.apply_t(&y));
+        rep.run(&format!("adjoint/dense/r{r}"), 2, 15, || dense.matvec_t(&y));
+    }
+
+    println!("\n== end-to-end recovery (L=10, 32x32 sky, 25-iteration cap) ==");
+    let cfg = AstroConfig {
+        antennas: 10,
+        resolution: 32,
+        sources: 12,
+        snr_db: 10.0,
+        ..Default::default()
+    };
+    let p = SkyProblem::build(&cfg, 7).expect("problem");
+    let opts = SolveOptions::default().with_max_iters(25);
+    let dense = Arc::new(p.op.to_mat());
+    rep.run("solve/matrix-free-f32/r32", 1, 7, || {
+        Recovery::problem(Problem::with_op(p.op.clone(), p.y.clone(), p.s))
+            .solver(SolverKind::Niht)
+            .options(opts.clone())
+            .run()
+            .expect("solve")
+    });
+    rep.run("solve/matrix-free-q8/r32", 1, 7, || {
+        Recovery::problem(astro_op::lowprec_problem(p.op.clone(), &p.y, p.s, 8, 1))
+            .solver(SolverKind::Niht)
+            .options(opts.clone())
+            .run()
+            .expect("solve")
+    });
+    rep.run("solve/dense-materialized-f32/r32", 1, 7, || {
+        Recovery::problem(Problem::new(dense.clone(), p.y.clone(), p.s))
+            .solver(SolverKind::Niht)
+            .options(opts.clone())
+            .run()
+            .expect("solve")
+    });
+
+    match rep.write_file(".") {
+        Ok(path) => println!("\nwrote {}", path.display()),
+        Err(e) => eprintln!("\nfailed to write BENCH_astro.json: {e}"),
+    }
+}

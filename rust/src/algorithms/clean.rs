@@ -163,7 +163,7 @@ mod tests {
         for i in rng.choose_k(g.pixels(), 3) {
             x[i] = 1.0;
         }
-        let (y, _) = visibility::observe(&phi, &x, 0.0, &mut rng);
+        let (y, _) = visibility::observe(&phi, &x, 0.0, &mut rng, 10);
         let img = dirty::dirty_image(&phi, &y);
         let beam = dirty::dirty_beam(&a, &g);
         let res = clean(&img, &beam, 16, &CleanOptions::default());

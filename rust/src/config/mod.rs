@@ -325,6 +325,9 @@ impl LpcsConfig {
             "astro.sources" => self.astro.sources = vf()? as usize,
             "astro.snr_db" => self.astro.snr_db = vf()?,
             "astro.freq_hz" => self.astro.freq_hz = vf()?,
+            "astro.bits" => self.astro.bits = vf()? as u8,
+            "astro.sparsity" => self.astro.sparsity = vf()? as usize,
+            "astro.full_baselines" => self.astro.full_baselines = value == "true",
             "service.workers" => self.service.workers = vf()? as usize,
             "service.queue_capacity" => self.service.queue_capacity = vf()? as usize,
             "service.max_batch" => self.service.max_batch = vf()? as usize,
@@ -402,6 +405,9 @@ impl LpcsConfig {
         // The MRI mask gate (fraction ∈ (0,1], centre band ≥ 1, packed
         // bit widths) — same check the coordinator re-runs at submit.
         self.mri.validate()?;
+        // The telescope gate (station size, grid, packed bit widths) —
+        // same check `SkyProblem::build` and the submit face re-run.
+        self.astro.validate()?;
         let solver = self.solver_kind();
         if !solver.runs_on(self.engine) {
             bail!(
@@ -430,13 +436,27 @@ mod tests {
         c.set("bits_phi", "4").unwrap();
         c.set("engine", "xla-quant").unwrap();
         c.set("astro.resolution", "128").unwrap();
+        c.set("astro.bits", "2").unwrap();
+        c.set("astro.sparsity", "12").unwrap();
+        c.set("astro.full_baselines", "true").unwrap();
         c.set("quant.mode", "fresh").unwrap();
         c.set("solver.max_shrinks_per_iter", "7").unwrap();
         assert_eq!(c.quant.bits_phi, 4);
         assert_eq!(c.engine, EngineKind::XlaQuant);
         assert_eq!(c.astro.resolution, 128);
+        assert_eq!(c.astro.bits, 2);
+        assert_eq!(c.astro.sparsity, 12);
+        assert!(c.astro.full_baselines);
         assert_eq!(c.quant.mode, RequantMode::Fresh);
         assert_eq!(c.solver.max_shrinks_per_iter, 7);
+        // The astro gate rides config-level validate (on a fresh config:
+        // `c` above pairs xla-quant with fresh requantization, which the
+        // engine gate rejects on its own).
+        let mut v = LpcsConfig::default();
+        v.set("astro.bits", "2").unwrap();
+        v.validate().unwrap();
+        v.set("astro.bits", "5").unwrap();
+        assert!(v.validate().unwrap_err().to_string().contains("astro.bits"));
     }
 
     #[test]

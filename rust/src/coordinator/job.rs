@@ -6,6 +6,7 @@ use crate::config::{EngineKind, QuantConfig};
 use crate::linalg::Mat;
 use crate::mri::{self, PartialFourierOp};
 use crate::solver::{MeasurementOp, Problem, SolveRequest, SolverKey, SolverKind};
+use crate::telescope::{op as astro_op, VisibilityOp};
 use anyhow::Result;
 use std::collections::{HashMap, VecDeque};
 use std::sync::{Arc, Condvar, Mutex};
@@ -28,6 +29,15 @@ pub enum OperatorSpec {
     /// see [`crate::mri::op`]). Servable under `SolverKind::Niht` on the
     /// dense native engine (the facade's generic `OpKernel` driver).
     PartialFourier { op: Arc<PartialFourierOp>, bits: Option<u8> },
+    /// Matrix-free radio-interferometry visibility operator
+    /// ([`crate::telescope::op`]). `bits = None` runs the f32 path;
+    /// `Some(b)` the low-precision sampling path (observation and
+    /// per-iteration visibility traffic quantized to b ∈ {2, 4, 8} with
+    /// per-baseline-block scales). Same matrix-free serving surface as
+    /// partial-Fourier: `SolverKind::Niht` on the dense native engine.
+    /// Serving defaults to unique-baseline operators; the full L² set
+    /// (rank-deficient stacked-real) is for paper-parity figures.
+    Visibility { op: Arc<VisibilityOp>, bits: Option<u8> },
 }
 
 impl OperatorSpec {
@@ -36,6 +46,7 @@ impl OperatorSpec {
         match self {
             Self::Dense(phi) => phi.rows,
             Self::PartialFourier { op, .. } => MeasurementOp::m(&**op),
+            Self::Visibility { op, .. } => MeasurementOp::m(&**op),
         }
     }
 
@@ -44,6 +55,7 @@ impl OperatorSpec {
         match self {
             Self::Dense(phi) => phi.cols,
             Self::PartialFourier { op, .. } => MeasurementOp::n(&**op),
+            Self::Visibility { op, .. } => MeasurementOp::n(&**op),
         }
     }
 
@@ -51,7 +63,7 @@ impl OperatorSpec {
     pub fn as_dense(&self) -> Option<&Arc<Mat>> {
         match self {
             Self::Dense(phi) => Some(phi),
-            Self::PartialFourier { .. } => None,
+            Self::PartialFourier { .. } | Self::Visibility { .. } => None,
         }
     }
 
@@ -63,6 +75,9 @@ impl OperatorSpec {
             Self::PartialFourier { op, bits } => {
                 OpKey::PartialFourier { op: Arc::as_ptr(op) as usize, bits: *bits }
             }
+            Self::Visibility { op, bits } => {
+                OpKey::Visibility { op: Arc::as_ptr(op) as usize, bits: *bits }
+            }
         }
     }
 }
@@ -72,6 +87,7 @@ impl OperatorSpec {
 pub enum OpKey {
     Dense { phi: usize },
     PartialFourier { op: usize, bits: Option<u8> },
+    Visibility { op: usize, bits: Option<u8> },
 }
 
 /// The operator a job recovers against plus its artifact shape tag. Jobs
@@ -102,6 +118,17 @@ impl ProblemHandle {
     /// path at `bits` ∈ {2, 4, 8}.
     pub fn low_prec_fourier(op: Arc<PartialFourierOp>, bits: u8) -> Self {
         Self { op: OperatorSpec::PartialFourier { op, bits: Some(bits) }, shape_tag: None }
+    }
+
+    /// Matrix-free visibility operator, f32 path.
+    pub fn visibility(op: Arc<VisibilityOp>) -> Self {
+        Self { op: OperatorSpec::Visibility { op, bits: None }, shape_tag: None }
+    }
+
+    /// Matrix-free visibility operator on the low-precision sampling path
+    /// at `bits` ∈ {2, 4, 8}.
+    pub fn low_prec_visibility(op: Arc<VisibilityOp>, bits: u8) -> Self {
+        Self { op: OperatorSpec::Visibility { op, bits: Some(bits) }, shape_tag: None }
     }
 
     pub fn m(&self) -> usize {
@@ -210,6 +237,27 @@ impl JobSpec {
                 );
             }
         }
+        if let OperatorSpec::Visibility { op, bits } = &self.problem.op {
+            op.validate()?;
+            anyhow::ensure!(
+                self.solver == SolverKind::Niht,
+                "matrix-free visibility jobs run solver 'niht' (the generic \
+                 OpKernel driver); solver '{}' needs an explicit measurement matrix",
+                self.solver.name()
+            );
+            anyhow::ensure!(
+                self.engine == EngineKind::NativeDense,
+                "matrix-free visibility jobs are servable on engine \
+                 'native-dense' only (engine '{}' needs an explicit matrix)",
+                self.engine.name()
+            );
+            if let Some(b) = bits {
+                anyhow::ensure!(
+                    matches!(b, 2 | 4 | 8),
+                    "astro bits = {b} is not servable (packed widths: 2, 4, 8)"
+                );
+            }
+        }
         anyhow::ensure!(
             self.solver.runs_on(self.engine),
             "solver '{}' cannot run on engine '{}'",
@@ -238,6 +286,12 @@ impl JobSpec {
             }
             OperatorSpec::PartialFourier { op, bits: Some(b) } => {
                 mri::lowprec_problem(op, &self.y, self.s, b, self.seed)
+            }
+            OperatorSpec::Visibility { op, bits: None } => {
+                Problem::with_op(op, self.y, self.s)
+            }
+            OperatorSpec::Visibility { op, bits: Some(b) } => {
+                astro_op::lowprec_problem(op, &self.y, self.s, b, self.seed)
             }
         };
         if let Some(tag) = self.problem.shape_tag {
@@ -1111,6 +1165,121 @@ mod tests {
         assert_eq!((req.problem.m(), req.problem.n()), (m, 256));
         // The quantized lowering perturbs y (stochastic Q_b) but keeps shape.
         let q_spec = JobSpec::builder(ProblemHandle::low_prec_fourier(op, 8), vec![0.5; m], 4)
+            .engine(EngineKind::NativeDense)
+            .solver(SolverKind::Niht)
+            .seed(9)
+            .build();
+        let q_req = q_spec.into_request();
+        assert_eq!(q_req.problem.m(), m);
+        assert!(q_req.problem.as_mat().is_none());
+    }
+
+    fn vis_op(l: usize, r: usize) -> Arc<VisibilityOp> {
+        let mut rng = crate::rng::XorShift128Plus::new(1);
+        let a = crate::telescope::AntennaArray::lofar_like(l, 50e6, &mut rng);
+        Arc::new(VisibilityOp::new(a, crate::telescope::ImageGrid::new(r, 0.4)))
+    }
+
+    #[test]
+    fn visibility_specs_validate_and_batch_by_op_and_bits() {
+        let op = vis_op(5, 8);
+        let m = ProblemHandle::visibility(op.clone()).m();
+        let spec = |h: ProblemHandle| {
+            JobSpec::builder(h, vec![0.0; m], 4)
+                .engine(EngineKind::NativeDense)
+                .solver(SolverKind::Niht)
+                .build()
+        };
+        let f32_a = spec(ProblemHandle::visibility(op.clone()));
+        f32_a.validate().unwrap();
+        let f32_b = spec(ProblemHandle::visibility(op.clone()));
+        assert_eq!(f32_a.batch_key(), f32_b.batch_key(), "shared op Arc batches");
+        let q8 = spec(ProblemHandle::low_prec_visibility(op.clone(), 8));
+        q8.validate().unwrap();
+        assert_ne!(f32_a.batch_key(), q8.batch_key(), "bit width splits the key");
+        let q2 = spec(ProblemHandle::low_prec_visibility(op.clone(), 2));
+        assert_ne!(q8.batch_key(), q2.batch_key());
+        // A different op instance (same parameters) never batches.
+        let other = spec(ProblemHandle::visibility(vis_op(5, 8)));
+        assert_ne!(f32_a.batch_key(), other.batch_key());
+        // Visibility keys never collide with partial-Fourier or dense ones.
+        let mri = JobSpec::builder(
+            ProblemHandle::partial_fourier(mri_op(16)),
+            vec![0.0; ProblemHandle::partial_fourier(mri_op(16)).m()],
+            4,
+        )
+        .engine(EngineKind::NativeDense)
+        .solver(SolverKind::Niht)
+        .build();
+        assert_ne!(f32_a.batch_key(), mri.batch_key());
+    }
+
+    #[test]
+    fn visibility_validation_rejects_wrong_surface() {
+        let op = vis_op(5, 8);
+        let m = ProblemHandle::visibility(op.clone()).m();
+        let base = |h: ProblemHandle| JobSpec::builder(h, vec![0.0; m], 4);
+        // Wrong solver: matrix-free runs NIHT only.
+        let err = base(ProblemHandle::visibility(op.clone()))
+            .engine(EngineKind::NativeDense)
+            .solver(SolverKind::Cosamp)
+            .build()
+            .validate()
+            .unwrap_err()
+            .to_string();
+        assert!(err.contains("matrix-free visibility"), "{err}");
+        // Wrong engine: quantized/XLA engines need an explicit matrix.
+        let err = base(ProblemHandle::visibility(op.clone()))
+            .engine(EngineKind::NativeQuant)
+            .solver(SolverKind::Niht)
+            .build()
+            .validate()
+            .unwrap_err()
+            .to_string();
+        assert!(err.contains("native-dense"), "{err}");
+        // Non-packed astro bit width.
+        let mut bad_bits = base(ProblemHandle::low_prec_visibility(op.clone(), 8))
+            .engine(EngineKind::NativeDense)
+            .solver(SolverKind::Niht)
+            .build();
+        if let OperatorSpec::Visibility { bits, .. } = &mut bad_bits.problem.op {
+            *bits = Some(3);
+        }
+        assert!(bad_bits.validate().unwrap_err().to_string().contains("packed widths"));
+        // Observation length mismatch against the operator's m.
+        let short = JobSpec::builder(ProblemHandle::visibility(op.clone()), vec![0.0; m - 1], 4)
+            .engine(EngineKind::NativeDense)
+            .solver(SolverKind::Niht)
+            .build();
+        assert!(short.validate().unwrap_err().to_string().contains("y length"));
+        // An ill-formed station surfaces at submit with a clear error.
+        let one = crate::telescope::AntennaArray { positions: vec![[0.0, 0.0]], freq_hz: 50e6 };
+        let bad_op = Arc::new(VisibilityOp::new(one, crate::telescope::ImageGrid::new(8, 0.4)));
+        let bad_m = ProblemHandle::visibility(bad_op.clone()).m();
+        let err = JobSpec::builder(ProblemHandle::visibility(bad_op), vec![0.0; bad_m], 1)
+            .engine(EngineKind::NativeDense)
+            .solver(SolverKind::Niht)
+            .build()
+            .validate()
+            .unwrap_err()
+            .to_string();
+        assert!(err.contains("antennas"), "{err}");
+    }
+
+    #[test]
+    fn visibility_spec_lowers_to_matrix_free_request() {
+        let op = vis_op(5, 8);
+        let m = ProblemHandle::visibility(op.clone()).m();
+        let f32_spec = JobSpec::builder(ProblemHandle::visibility(op.clone()), vec![0.5; m], 4)
+            .engine(EngineKind::NativeDense)
+            .solver(SolverKind::Niht)
+            .seed(9)
+            .build();
+        let req = f32_spec.into_request();
+        assert!(req.problem.as_mat().is_none(), "matrix-free problems expose no Mat");
+        assert_eq!((req.problem.m(), req.problem.n()), (m, 64));
+        // The quantized lowering perturbs y (stochastic Q_b) but keeps shape.
+        let q_spec = JobSpec::builder(ProblemHandle::low_prec_visibility(op, 8), vec![0.5; m], 4)
             .engine(EngineKind::NativeDense)
             .solver(SolverKind::Niht)
             .seed(9)

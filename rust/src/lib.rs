@@ -31,11 +31,20 @@
 //!   servable — `JobSpec` carries an explicit solver selector (validated
 //!   at submit time) that is part of the batching key — and so are
 //!   **matrix-free operators**: `coordinator::OperatorSpec` describes
-//!   either an explicit dense Φ or a shared
-//!   [`mri::PartialFourierOp`] (with an optional low-precision bit
-//!   width), folded into `BatchKey` by operator identity and gated at
-//!   submit (mask parameters, the NIHT/native-dense matrix-free
-//!   surface). Jobs flow through
+//!   an explicit dense Φ, a shared [`mri::PartialFourierOp`], or a
+//!   shared [`telescope::VisibilityOp`] (each matrix-free variant with
+//!   an optional low-precision sampling bit width), folded into
+//!   `BatchKey` by operator identity and gated at
+//!   submit (mask/station parameters, the NIHT/native-dense matrix-free
+//!   surface). A telescope station is the motivating serving workload:
+//!   a stream of visibility snapshots shares ONE `VisibilityOp` (the
+//!   geometry is fixed while the pointing is), so jobs batch by
+//!   operator identity locally and by operator *content* over the
+//!   wire, and the low-precision path quantizes the observation and
+//!   each iteration's visibility-domain residual at 2/4/8 bits with
+//!   per-baseline-block scales — the paper's sampling model on the
+//!   measurement traffic, while the image-domain state stays f32.
+//!   Jobs flow through
 //!   a bounded queue with backpressure into worker-local snapshot
 //!   windows that the **cost-aware scheduler** ([`coordinator::sched`])
 //!   partitions into key-homogeneous batches and orders cheapest-first

@@ -3,6 +3,10 @@
 //! Subcommands:
 //!   solve    one recovery on a synthetic problem (gaussian | astro)
 //!   mri      matrix-free partial-Fourier MRI recovery (phantom → PGMs)
+//!   astro    matrix-free visibility recovery on a synthetic sky — local
+//!            (sky → unique-baseline visibilities → NIHT → PGMs), or
+//!            (with --addr ADDR) submitted to a serve/route listener as
+//!            an `OperatorSpec::Visibility` wire job
 //!   serve    run the recovery service — on a stream of synthetic jobs,
 //!            or (with --listen ADDR) as a network service speaking the
 //!            wire protocol (submit/subscribe/cancel/metrics frames)
@@ -52,6 +56,9 @@ fn usage() -> ! {
          \x20          [--algorithm niht|iht|qniht|cosamp|fista|auto]\n\
          lpcs mri   [--mri.resolution N] [--mri.mask cartesian|radial] [--mri.fraction F]\n\
          \x20          [--mri.center_band B] [--mri.bits 0|2|4|8] [--mri.sparsity S]\n\
+         lpcs astro [--astro.antennas L] [--astro.resolution N] [--astro.sources K]\n\
+         \x20          [--astro.snr_db DB] [--astro.bits 0|2|4|8] [--astro.sparsity S]\n\
+         \x20          [--astro.full_baselines true|false] [--addr ADDR]\n\
          lpcs serve [--service.workers N] [--engine ...] [--algorithm ...]\n\
          \x20          [--listen ADDR] [--wire.sub_depth N]   (ADDR e.g. 127.0.0.1:7070)\n\
          lpcs route --listen ADDR backend=ADDR [backend=ADDR ...]\n\
@@ -103,12 +110,21 @@ fn real_main() -> Result<()> {
     let args: Vec<String> = std::env::args().skip(1).collect();
     let Some(cmd) = args.first() else { usage() };
     let mut cfg = LpcsConfig::default();
-    let rest = parse_args(&mut cfg, &args[1..])?;
+    // `--addr` targets a wire listener, not a config key — peel it off
+    // before the config parser sees it.
+    let mut tail = args[1..].to_vec();
+    let mut addr = None;
+    if let Some(i) = tail.iter().position(|a| a == "--addr") {
+        addr = Some(tail.get(i + 1).context("--addr needs a value")?.clone());
+        tail.drain(i..=i + 1);
+    }
+    let rest = parse_args(&mut cfg, &tail)?;
     cfg.validate()?;
 
     match cmd.as_str() {
         "solve" => cmd_solve(&cfg, rest.first().map(|s| s.as_str()).unwrap_or("gaussian")),
         "mri" => cmd_mri(&cfg),
+        "astro" => cmd_astro(&cfg, addr.as_deref()),
         "serve" => cmd_serve(&cfg),
         "route" => cmd_route(&cfg),
         "watch" => match (rest.first(), rest.get(1)) {
@@ -256,6 +272,137 @@ fn cmd_mri(cfg: &LpcsConfig) -> Result<()> {
         pgm::write_pgm(&out.join(format!("mri_recon_q{b}.pgm")), &q.x, p.r, p.r, range)?;
     }
     println!("wrote PGM panels to {out:?}");
+    Ok(())
+}
+
+/// The telescope workload end to end: synthetic sky → unique-baseline
+/// visibilities with conjugate-structured noise → matrix-free NIHT
+/// recovery (f32 and, when `astro.bits` > 0, the low-precision sampling
+/// path). Locally this writes PGM panels; with `--addr` the same problem
+/// ships to a serve/route listener as an `OperatorSpec::Visibility` job
+/// and this process streams its progress.
+fn cmd_astro(cfg: &LpcsConfig, addr: Option<&str>) -> Result<()> {
+    let t0 = Instant::now();
+    let p = lpcs::telescope::SkyProblem::build(&cfg.astro, cfg.seed)?;
+    let r = cfg.astro.resolution;
+    println!(
+        "astro: L={l} antennas -> {mb} {set} baselines, {r}x{r} sky, {src} sources, \
+         M={m} stacked-real rows, s={s}, snr={snr} dB  [built in {dt:.2?}]",
+        l = cfg.astro.antennas,
+        mb = p.op.baseline_count(),
+        set = if p.op.full_baselines() { "full-set" } else { "unique" },
+        src = cfg.astro.sources,
+        m = p.m(),
+        s = p.s,
+        snr = cfg.astro.snr_db,
+        dt = t0.elapsed(),
+    );
+    match addr {
+        Some(addr) => cmd_astro_wire(cfg, &p, addr),
+        None => cmd_astro_local(cfg, &p),
+    }
+}
+
+fn cmd_astro_local(cfg: &LpcsConfig, p: &lpcs::telescope::SkyProblem) -> Result<()> {
+    let r = cfg.astro.resolution;
+    let range = Some((0.0f32, p.x_true.iter().cloned().fold(0.0, f32::max)));
+    let out = &cfg.out_dir;
+    pgm::write_pgm(&out.join("astro_truth.pgm"), &p.x_true, r, r, range)?;
+    let dirty = p.op.dirty_image(&p.y);
+    pgm::write_pgm(&out.join("astro_dirty.pgm"), &dirty, r, r, None)?;
+    println!(
+        "dirty-image Φᵀy baseline: err={:.4} (the classical estimate CLEAN deconvolves)",
+        metrics::recovery_error(&dirty, &p.x_true)
+    );
+
+    let report = Recovery::problem(Problem::with_op(p.op.clone(), p.y.clone(), p.s))
+        .solver(lpcs::solver::SolverKind::Niht)
+        .options(cfg.solver.clone())
+        .run()?;
+    let psnr32 = metrics::psnr(&report.x, &p.x_true);
+    println!(
+        "f32 matrix-free NIHT: {} iters in {:.3?}  psnr={psnr32:.2} dB  err={:.4}",
+        report.iterations,
+        report.wall,
+        metrics::recovery_error(&report.x, &p.x_true)
+    );
+    pgm::write_pgm(&out.join("astro_recon_f32.pgm"), &report.x, r, r, range)?;
+
+    if cfg.astro.bits != 0 {
+        let b = cfg.astro.bits;
+        let problem = lpcs::telescope::op::lowprec_problem(
+            p.op.clone(),
+            &p.y,
+            p.s,
+            b,
+            cfg.seed,
+        );
+        let q = Recovery::problem(problem)
+            .solver(lpcs::solver::SolverKind::Niht)
+            .options(cfg.solver.clone())
+            .seed(cfg.seed)
+            .run()?;
+        let psnrq = metrics::psnr(&q.x, &p.x_true);
+        println!(
+            "{b}-bit sampling path:  {} iters in {:.3?}  psnr={psnrq:.2} dB  (Δ vs f32 {:+.2} dB)",
+            q.iterations,
+            q.wall,
+            psnrq - psnr32
+        );
+        pgm::write_pgm(&out.join(format!("astro_recon_q{b}.pgm")), &q.x, r, r, range)?;
+    }
+    println!("wrote PGM panels to {out:?}");
+    Ok(())
+}
+
+/// Ship the sky problem to a wire listener and stream its progress.
+/// Visibility jobs are servable on NIHT × native-dense only, so those
+/// are forced regardless of the configured engine.
+fn cmd_astro_wire(cfg: &LpcsConfig, p: &lpcs::telescope::SkyProblem, addr: &str) -> Result<()> {
+    let handle = match cfg.astro.bits {
+        0 => ProblemHandle::visibility(p.op.clone()),
+        b => ProblemHandle::low_prec_visibility(p.op.clone(), b),
+    };
+    let spec = JobSpec::builder(handle, p.y.clone(), p.s)
+        .engine(lpcs::config::EngineKind::NativeDense)
+        .solver(lpcs::solver::SolverKind::Niht)
+        .seed(cfg.seed)
+        .build();
+    let mut client = lpcs::wire::WireClient::connect(addr)
+        .with_context(|| format!("connecting to {addr}"))?;
+    let id = client.submit(&spec).context("submitting visibility job")?;
+    println!("submitted visibility job {id} to {addr} (bits={})", cfg.astro.bits);
+    for event in client.watch(id)? {
+        match event? {
+            lpcs::wire::WatchEvent::Queued { position, depth } => {
+                println!("queued: position {position} of {depth}")
+            }
+            lpcs::wire::WatchEvent::Progress(st) => println!(
+                "iter {:>6}  resid_nsq={:.6e}  mu={:.3e}",
+                st.iter, st.resid_nsq, st.mu
+            ),
+            lpcs::wire::WatchEvent::Done(out) => {
+                if out.trace != 0 {
+                    println!("trace {:016x}", out.trace);
+                }
+                println!(
+                    "job {} {:?}  queued_for={:.3?}  ran_for={:.3?}",
+                    out.id, out.state, out.queued_for, out.ran_for
+                );
+                if let Some(res) = out.result {
+                    println!(
+                        "result: {} iterations, converged={}, recovery_error={:.6}",
+                        res.iterations,
+                        res.converged,
+                        metrics::recovery_error(&res.x, &p.x_true)
+                    );
+                }
+                if let Some(err) = out.error {
+                    println!("error: {err}");
+                }
+            }
+        }
+    }
     Ok(())
 }
 

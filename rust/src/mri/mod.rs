@@ -34,7 +34,7 @@ pub mod op;
 pub mod phantom;
 
 pub use mask::{MaskConfig, MaskKind, SamplingMask};
-pub use op::{lowprec_problem, LowPrecFourierOp, PartialFourierOp, QUANT_BLOCK};
+pub use op::{lowprec_problem, quantize_blocked, LowPrecFourierOp, PartialFourierOp, QUANT_BLOCK};
 
 use crate::solver::MeasurementOp;
 use anyhow::Result;

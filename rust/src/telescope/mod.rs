@@ -10,16 +10,33 @@
 //! the identical code path. The complex system is embedded into stacked
 //! real form (`[[Re Φ];[Im Φ]]`, exact for a real-valued sky), which keeps
 //! every solver and kernel in f32 real arithmetic.
+//!
+//! Two problem constructions coexist:
+//!
+//! * [`AstroProblem`] materializes Φ over the **full L² ordered-pair
+//!   set** — the paper-parity figure path.
+//! * [`op::SkyProblem`] builds on the matrix-free [`op::VisibilityOp`]
+//!   over the **unique baselines** (the full set's stacked-real embedding
+//!   is rank-deficient; see [`geometry`]) — the served/CLI/bench path,
+//!   with the low-precision sampling variant ([`op::LowPrecVisibilityOp`]
+//!   + [`op::lowprec_problem`]) behind
+//!   `coordinator::OperatorSpec::Visibility`.
+//!
+//! Noise in both is physically structured ([`visibility::add_noise`]):
+//! independent draws only on unique baselines + autocorrelations, with
+//! conjugate components mirrored.
 
 pub mod dirty;
 pub mod geometry;
 pub mod grid;
+pub mod op;
 pub mod sky;
 pub mod steering;
 pub mod visibility;
 
 pub use geometry::AntennaArray;
 pub use grid::ImageGrid;
+pub use op::{LowPrecVisibilityOp, SkyProblem, VisibilityOp};
 pub use sky::SkyModel;
 
 use crate::linalg::Mat;
@@ -56,6 +73,15 @@ pub struct AstroConfig {
     pub snr_db: f64,
     /// Observation frequency in Hz (LOFAR low band: 15–80 MHz).
     pub freq_hz: f64,
+    /// Bit width of the low-precision sampling path (2 | 4 | 8), or 0 to
+    /// run the f32 path only.
+    pub bits: u8,
+    /// Recovery sparsity s, or 0 to default to the source count.
+    pub sparsity: usize,
+    /// Build [`op::SkyProblem`] on the full L² ordered-pair set instead
+    /// of the unique-baseline default (paper-parity figures only — the
+    /// full set's stacked-real embedding is rank-deficient).
+    pub full_baselines: bool,
 }
 
 impl Default for AstroConfig {
@@ -67,7 +93,63 @@ impl Default for AstroConfig {
             sources: 30,
             snr_db: 0.0,
             freq_hz: 50e6,
+            bits: 8,
+            sparsity: 0,
+            full_baselines: false,
         }
+    }
+}
+
+impl AstroConfig {
+    /// The resolved sparsity target (0 ⇒ the synthesized source count).
+    pub fn effective_sparsity(&self) -> usize {
+        if self.sparsity == 0 {
+            self.sources
+        } else {
+            self.sparsity
+        }
+    }
+
+    /// Cross-field gate (config file / CLI parse, and
+    /// [`op::SkyProblem::build`]).
+    pub fn validate(&self) -> anyhow::Result<()> {
+        anyhow::ensure!(
+            (2..=512).contains(&self.antennas),
+            "astro.antennas {} must be in 2..=512",
+            self.antennas
+        );
+        anyhow::ensure!(
+            (2..=1024).contains(&self.resolution),
+            "astro.resolution {} must be in 2..=1024",
+            self.resolution
+        );
+        anyhow::ensure!(
+            self.fov_half_width > 0.0 && self.fov_half_width <= 1.0,
+            "astro.fov_half_width {} needs 0 < d <= 1 (direction cosines)",
+            self.fov_half_width
+        );
+        anyhow::ensure!(
+            self.sources >= 1 && self.sources <= self.resolution * self.resolution,
+            "astro.sources {} must be in 1..=r²",
+            self.sources
+        );
+        anyhow::ensure!(self.snr_db.is_finite(), "astro.snr_db must be finite");
+        anyhow::ensure!(
+            self.freq_hz.is_finite() && self.freq_hz > 0.0,
+            "astro.freq_hz {} must be finite and positive",
+            self.freq_hz
+        );
+        anyhow::ensure!(
+            matches!(self.bits, 0 | 2 | 4 | 8),
+            "astro.bits {} must be 0 (f32) or a packed width (2|4|8)",
+            self.bits
+        );
+        anyhow::ensure!(
+            self.effective_sparsity() <= self.resolution * self.resolution,
+            "astro.sparsity {} exceeds the image dimension",
+            self.sparsity
+        );
+        Ok(())
     }
 }
 
@@ -80,7 +162,8 @@ impl AstroProblem {
         let phi = steering::stacked_measurement_matrix(&array, &grid);
         let sky = SkyModel::random_points(&grid, cfg.sources, &mut rng);
         let x_true = sky.to_vector(grid.pixels());
-        let (y, sigma_n) = visibility::observe(&phi, &x_true, cfg.snr_db, &mut rng);
+        let (y, sigma_n) =
+            visibility::observe(&phi, &x_true, cfg.snr_db, &mut rng, cfg.antennas);
         Self { phi, y, x_true, sigma_n, array, grid, sky }
     }
 
@@ -119,6 +202,20 @@ mod tests {
         assert_eq!(a.x_true, b.x_true);
         let c = AstroProblem::build(&cfg, 8);
         assert_ne!(a.y, c.y);
+    }
+
+    #[test]
+    fn config_validates_and_resolves_sparsity() {
+        let cfg = AstroConfig::default();
+        cfg.validate().unwrap();
+        assert_eq!(cfg.effective_sparsity(), 30, "defaults to source count");
+        assert_eq!(AstroConfig { sparsity: 12, ..cfg.clone() }.effective_sparsity(), 12);
+        assert!(AstroConfig { antennas: 1, ..cfg.clone() }.validate().is_err());
+        assert!(AstroConfig { resolution: 1, ..cfg.clone() }.validate().is_err());
+        assert!(AstroConfig { bits: 16, ..cfg.clone() }.validate().is_err());
+        assert!(AstroConfig { fov_half_width: 1.5, ..cfg.clone() }.validate().is_err());
+        assert!(AstroConfig { sources: 0, ..cfg.clone() }.validate().is_err());
+        AstroConfig { bits: 0, ..cfg }.validate().unwrap();
     }
 
     #[test]

@@ -1,0 +1,545 @@
+//! The matrix-free visibility measurement operator and its low-precision
+//! sampling variant — the telescope workload's analogue of
+//! [`crate::mri::PartialFourierOp`].
+//!
+//! [`VisibilityOp`] applies the paper's Eqn. 75 steering matrix without
+//! materializing it: `Φ_{z,w} = exp(-j 2π ⟨p_z, r_w⟩)` over baselines
+//! `p_z` (wavelengths) and pixel directions `r_w`, embedded stacked-real
+//! (`y = [Re Φ; Im Φ]·x`, Re rows first). `apply` and the *exact* adjoint
+//! `apply_t` evaluate the steering phases on the fly from the
+//! [`AntennaArray`] positions and the [`ImageGrid`] — **zero** operator
+//! storage at `O(M·N)` trig work — or from an optional cached-row mode
+//! ([`VisibilityOp::cached`]) that materializes the rows once (in
+//! parallel row chunks) and replays them trig-free, bit-identically to
+//! the on-the-fly path. [`VisibilityOp::to_mat`] materializes the same
+//! operator through [`super::steering`]'s closed form — the dense-parity
+//! reference and the dense-baseline operand of `benches/astro.rs`.
+//!
+//! By default the operator covers the **unique baselines** (ordered
+//! pairs i < k): the full L² set's stacked-real embedding is
+//! rank-deficient (identical autocorrelation rows, conjugate-duplicate
+//! pairs — see [`super::geometry`]), so serving defaults to the
+//! L(L−1)/2 distinct visibilities an interferometer actually measures.
+//! The full set stays available behind
+//! [`VisibilityOp::with_full_baselines`] for paper-parity figures.
+//!
+//! ## What is quantized when Φ is implicit
+//!
+//! Exactly the MRI convention ([`crate::mri::op`]): the operator has no
+//! entries worth storing, so the paper's low-precision representation
+//! maps onto the **measurement-domain data streams**
+//! ([`LowPrecVisibilityOp`]):
+//!
+//! * the observation ŷ = Q_b(y), quantized once at acquisition
+//!   ([`lowprec_problem`]) — the correlator output at `b` bits;
+//! * the per-iteration visibility-domain residual entering the adjoint,
+//!   re-quantized stochastically every gradient step.
+//!
+//! Both use the shared [`crate::mri::quantize_blocked`] with one scale
+//! per [`crate::mri::QUANT_BLOCK`]-sample **baseline block**: short
+//! baselines sit on the bright low-spatial-frequency flux while long
+//! baselines measure faint fine structure, so visibility amplitudes span
+//! orders of magnitude and a single global scale would round the long
+//! baselines — the resolution information — to zero at any practical
+//! bit width. Dequantization streams the int8 codes through the
+//! runtime-dispatched SIMD backend, the same mixed-precision kernel the
+//! packed dense path uses. Image-domain iterates stay f32 — solver
+//! state, not operator traffic.
+
+use super::visibility::{self, NoiseShape};
+use super::{steering, AntennaArray, AstroConfig, ImageGrid, SkyModel};
+use crate::linalg::Mat;
+use crate::mri::quantize_blocked;
+use crate::par;
+use crate::rng::XorShift128Plus;
+use crate::solver::{MeasurementOp, Problem};
+use anyhow::Result;
+use std::sync::{Arc, Mutex};
+
+/// Matrix-free stacked-real visibility operator (see module docs).
+#[derive(Clone)]
+pub struct VisibilityOp {
+    array: AntennaArray,
+    grid: ImageGrid,
+    /// Full L² baseline set (paper parity) instead of the unique default.
+    full: bool,
+    /// Baselines in wavelengths, one complex visibility each.
+    baselines: Vec<[f64; 2]>,
+    /// Pixel direction cosines, precomputed once.
+    dirs: Vec<[f64; 2]>,
+    n: usize,
+    /// Cached-row mode: the materialized rows (`to_mat` layout), so the
+    /// transforms replay trig-free. `2·M·N` f32 of memory when enabled.
+    cache: Option<Arc<Vec<f32>>>,
+}
+
+impl std::fmt::Debug for VisibilityOp {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("VisibilityOp")
+            .field("antennas", &self.array.len())
+            .field("resolution", &self.grid.resolution)
+            .field("full", &self.full)
+            .field("m", &MeasurementOp::m(self))
+            .field("cached", &self.cache.is_some())
+            .finish()
+    }
+}
+
+impl VisibilityOp {
+    /// Unique-baseline operator (i < k pairs): M = L(L−1)/2 complex
+    /// visibilities, the serving default.
+    pub fn new(array: AntennaArray, grid: ImageGrid) -> Self {
+        Self::build(array, grid, false)
+    }
+
+    /// Full ordered-pair operator (M = L², includes autocorrelations and
+    /// conjugate duplicates) for paper-parity figures. Its stacked-real
+    /// embedding is rank-deficient — keep recovery on the unique set.
+    pub fn with_full_baselines(array: AntennaArray, grid: ImageGrid) -> Self {
+        Self::build(array, grid, true)
+    }
+
+    fn build(array: AntennaArray, grid: ImageGrid, full: bool) -> Self {
+        let baselines = if full {
+            array.baselines_wavelengths()
+        } else {
+            array.unique_baselines_wavelengths()
+        };
+        let dirs: Vec<[f64; 2]> = (0..grid.pixels()).map(|w| grid.direction_of(w)).collect();
+        let n = grid.pixels();
+        Self { array, grid, full, baselines, dirs, n, cache: None }
+    }
+
+    /// Enable cached-row mode: materialize the rows once (parallel row
+    /// chunks via [`Self::to_mat`]) and replay them trig-free. The cached
+    /// transforms are bit-identical to the on-the-fly ones — same f32
+    /// entries, same accumulation order.
+    pub fn cached(mut self) -> Self {
+        if self.cache.is_none() {
+            self.cache = Some(Arc::new(self.to_mat().data));
+        }
+        self
+    }
+
+    pub fn array(&self) -> &AntennaArray {
+        &self.array
+    }
+
+    pub fn grid(&self) -> ImageGrid {
+        self.grid
+    }
+
+    /// Whether this operator covers the full L² ordered-pair set.
+    pub fn full_baselines(&self) -> bool {
+        self.full
+    }
+
+    /// Number of complex visibilities M (half the stacked-real rows).
+    pub fn baseline_count(&self) -> usize {
+        self.baselines.len()
+    }
+
+    pub fn is_cached(&self) -> bool {
+        self.cache.is_some()
+    }
+
+    /// Submit-time gate (the coordinator calls this from
+    /// `JobSpec::validate`): station and grid parameters re-checked so an
+    /// ill-formed operator fails at submission, not inside a worker.
+    pub fn validate(&self) -> Result<()> {
+        anyhow::ensure!(
+            self.array.len() >= 2,
+            "visibility operator needs >= 2 antennas, got {}",
+            self.array.len()
+        );
+        anyhow::ensure!(
+            self.array.positions.iter().all(|p| p[0].is_finite() && p[1].is_finite()),
+            "antenna positions must be finite"
+        );
+        anyhow::ensure!(
+            self.array.freq_hz.is_finite() && self.array.freq_hz > 0.0,
+            "observing frequency {} Hz must be finite and positive",
+            self.array.freq_hz
+        );
+        anyhow::ensure!(
+            (2..=1024).contains(&self.grid.resolution),
+            "image resolution {} out of the servable 2..=1024 range",
+            self.grid.resolution
+        );
+        Ok(())
+    }
+
+    /// Materialize the operator as an explicit dense [`Mat`] through the
+    /// closed-form steering matrix (independent of the matrix-free code
+    /// path — the parity reference and the dense bench baseline).
+    pub fn to_mat(&self) -> Mat {
+        if self.full {
+            steering::stacked_measurement_matrix(&self.array, &self.grid)
+        } else {
+            steering::stacked_measurement_matrix_unique(&self.array, &self.grid)
+        }
+    }
+
+    /// The classical dirty-image reconstruction `Φᵀ y` (the zero-order
+    /// baseline next to the recovered sky).
+    pub fn dirty_image(&self, y: &[f32]) -> Vec<f32> {
+        self.apply_t(y)
+    }
+
+    #[inline]
+    fn phase(&self, z: usize, w: usize) -> f64 {
+        let b = self.baselines[z];
+        let d = self.dirs[w];
+        -2.0 * std::f64::consts::PI * (b[0] * d[0] + b[1] * d[1])
+    }
+}
+
+impl MeasurementOp for VisibilityOp {
+    fn m(&self) -> usize {
+        2 * self.baselines.len()
+    }
+
+    fn n(&self) -> usize {
+        self.n
+    }
+
+    fn apply(&self, x: &[f32]) -> Vec<f32> {
+        assert_eq!(x.len(), self.n);
+        let mb = self.baselines.len();
+        let n = self.n;
+        let mut out = vec![0.0f32; 2 * mb];
+        // One output component per chunk element: each costs an n-length
+        // trig'd dot, plenty of grain for the pool.
+        par::par_chunks_mut(&mut out, 1, |start, chunk| {
+            for (j, cell) in chunk.iter_mut().enumerate() {
+                let row = start + j;
+                let (z, imag) = if row < mb { (row, false) } else { (row - mb, true) };
+                let mut acc = 0.0f32;
+                if let Some(cache) = &self.cache {
+                    let r = &cache[row * n..(row + 1) * n];
+                    for (e, &xv) in r.iter().zip(x) {
+                        acc += e * xv;
+                    }
+                } else {
+                    for (w, &xv) in x.iter().enumerate() {
+                        let phase = self.phase(z, w);
+                        let e = if imag { phase.sin() } else { phase.cos() } as f32;
+                        acc += e * xv;
+                    }
+                }
+                *cell = acc;
+            }
+        });
+        out
+    }
+
+    fn apply_t(&self, v: &[f32]) -> Vec<f32> {
+        let mb = self.baselines.len();
+        let n = self.n;
+        assert_eq!(v.len(), 2 * mb);
+        let mut out = vec![0.0f32; n];
+        par::par_chunks_mut(&mut out, 16, |start, chunk| {
+            for (j, cell) in chunk.iter_mut().enumerate() {
+                let w = start + j;
+                let mut acc = 0.0f32;
+                if let Some(cache) = &self.cache {
+                    for z in 0..mb {
+                        acc += cache[z * n + w] * v[z] + cache[(mb + z) * n + w] * v[mb + z];
+                    }
+                } else {
+                    for z in 0..mb {
+                        let phase = self.phase(z, w);
+                        acc += (phase.cos() as f32) * v[z] + (phase.sin() as f32) * v[mb + z];
+                    }
+                }
+                *cell = acc;
+            }
+        });
+        out
+    }
+}
+
+/// Low-precision sampling variant of [`VisibilityOp`]: the same
+/// transforms, with the per-iteration visibility-domain traffic (the
+/// residual entering the adjoint) stochastically quantized to `bits` per
+/// [`crate::mri::QUANT_BLOCK`]-sample baseline block. See the module
+/// docs for what is (and is not) quantized when Φ is implicit.
+///
+/// The RNG driving the stochastic rounding lives behind a `Mutex`: calls
+/// consume draws in sequence, so two solves issuing the same call
+/// sequence from the same seed are bit-identical — which is how
+/// `tests/astro_serving.rs` pins the served path against the facade.
+pub struct LowPrecVisibilityOp {
+    inner: Arc<VisibilityOp>,
+    bits: u8,
+    rng: Mutex<XorShift128Plus>,
+}
+
+impl std::fmt::Debug for LowPrecVisibilityOp {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("LowPrecVisibilityOp")
+            .field("bits", &self.bits)
+            .field("inner", &self.inner)
+            .finish()
+    }
+}
+
+impl LowPrecVisibilityOp {
+    pub fn new(inner: Arc<VisibilityOp>, bits: u8, rng: XorShift128Plus) -> Self {
+        assert!(matches!(bits, 2 | 4 | 8), "packed widths only, got {bits}");
+        Self { inner, bits, rng: Mutex::new(rng) }
+    }
+
+    pub fn bits(&self) -> u8 {
+        self.bits
+    }
+}
+
+impl MeasurementOp for LowPrecVisibilityOp {
+    fn m(&self) -> usize {
+        self.inner.m()
+    }
+
+    fn n(&self) -> usize {
+        self.inner.n()
+    }
+
+    fn apply(&self, x: &[f32]) -> Vec<f32> {
+        // Image-domain input: solver state, streamed at full precision.
+        self.inner.apply(x)
+    }
+
+    fn apply_t(&self, v: &[f32]) -> Vec<f32> {
+        let vq = quantize_blocked(v, self.bits, &mut self.rng.lock().unwrap());
+        self.inner.apply_t(&vq)
+    }
+}
+
+/// Lower a sky problem onto the low-precision sampling path: quantize
+/// the observation to `bits` (per-baseline-block stochastic rounding
+/// seeded by `seed`) and wrap the operator so per-iteration visibility
+/// traffic is quantized with the same RNG stream.
+///
+/// This is the single lowering both
+/// [`crate::coordinator::JobSpec::into_request`] and direct facade
+/// callers use, so a served job and a local `Recovery` run of the same
+/// spec produce bit-identical iterates.
+pub fn lowprec_problem(
+    op: Arc<VisibilityOp>,
+    y: &[f32],
+    s: usize,
+    bits: u8,
+    seed: u64,
+) -> Problem {
+    let mut rng = XorShift128Plus::new(seed ^ 0x4C50_5653); // "LPVS"
+    let y_hat = quantize_blocked(y, bits, &mut rng);
+    Problem::with_op(Arc::new(LowPrecVisibilityOp::new(op, bits, rng)), y_hat, s)
+}
+
+/// A fully synthesized sky-recovery problem over the matrix-free
+/// operator — the served/CLI/bench counterpart of
+/// [`super::AstroProblem`] (which materializes Φ and keeps the full L²
+/// set for paper-parity figures).
+#[derive(Debug, Clone)]
+pub struct SkyProblem {
+    /// The matrix-free operator, shareable across jobs (batch identity).
+    pub op: Arc<VisibilityOp>,
+    /// f32 observations with the physical conjugate-symmetric noise
+    /// (quantize via [`lowprec_problem`]).
+    pub y: Vec<f32>,
+    /// Ground-truth sky vector.
+    pub x_true: Vec<f32>,
+    /// Per-visibility complex noise std actually applied.
+    pub sigma_n: f32,
+    pub s: usize,
+}
+
+impl SkyProblem {
+    /// Build from validated configuration; `seed` drives the station
+    /// layout, the sky draw and the noise. Defaults to the unique
+    /// baseline set; `cfg.full_baselines` opts into the full L² set.
+    pub fn build(cfg: &AstroConfig, seed: u64) -> Result<Self> {
+        cfg.validate()?;
+        let mut rng = XorShift128Plus::new(seed);
+        let array = AntennaArray::lofar_like(cfg.antennas, cfg.freq_hz, &mut rng);
+        let grid = ImageGrid::new(cfg.resolution, cfg.fov_half_width);
+        let op = if cfg.full_baselines {
+            VisibilityOp::with_full_baselines(array, grid)
+        } else {
+            VisibilityOp::new(array, grid)
+        };
+        let sky = SkyModel::random_points(&grid, cfg.sources, &mut rng);
+        let x_true = sky.to_vector(grid.pixels());
+        let clean = op.apply(&x_true);
+        let shape = if cfg.full_baselines {
+            NoiseShape::Full { antennas: cfg.antennas }
+        } else {
+            NoiseShape::Unique
+        };
+        let (y, sigma_n) = visibility::add_noise(&clean, cfg.snr_db, &mut rng, shape);
+        Ok(Self { op: Arc::new(op), y, x_true, sigma_n, s: cfg.effective_sparsity() })
+    }
+
+    pub fn n(&self) -> usize {
+        MeasurementOp::n(&*self.op)
+    }
+
+    pub fn m(&self) -> usize {
+        self.y.len()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::linalg;
+
+    fn tiny(l: usize, r: usize) -> VisibilityOp {
+        let mut rng = XorShift128Plus::new(1);
+        let a = AntennaArray::lofar_like(l, 50e6, &mut rng);
+        VisibilityOp::new(a, ImageGrid::new(r, 0.4))
+    }
+
+    #[test]
+    fn shapes_unique_and_full() {
+        let op = tiny(5, 8);
+        assert_eq!(MeasurementOp::m(&op), 5 * 4); // 2 · L(L−1)/2
+        assert_eq!(MeasurementOp::n(&op), 64);
+        assert!(!op.full_baselines());
+        let mut rng = XorShift128Plus::new(1);
+        let a = AntennaArray::lofar_like(5, 50e6, &mut rng);
+        let full = VisibilityOp::with_full_baselines(a, ImageGrid::new(8, 0.4));
+        assert_eq!(MeasurementOp::m(&full), 2 * 25);
+        assert!(full.full_baselines());
+    }
+
+    #[test]
+    fn dense_parity_against_to_mat() {
+        for full in [false, true] {
+            let mut rng = XorShift128Plus::new(2);
+            let a = AntennaArray::lofar_like(4, 50e6, &mut rng);
+            let g = ImageGrid::new(8, 0.4);
+            let op = if full {
+                VisibilityOp::with_full_baselines(a, g)
+            } else {
+                VisibilityOp::new(a, g)
+            };
+            let dense = op.to_mat();
+            assert_eq!((dense.rows, dense.cols), (MeasurementOp::m(&op), MeasurementOp::n(&op)));
+            let x = rng.gaussian_vec(MeasurementOp::n(&op));
+            let y_free = op.apply(&x);
+            let y_dense = dense.matvec(&x);
+            for (a, b) in y_free.iter().zip(&y_dense) {
+                assert!((a - b).abs() <= 1e-3 * (1.0 + b.abs()), "full={full}: {a} vs {b}");
+            }
+            let v = rng.gaussian_vec(MeasurementOp::m(&op));
+            let bt_free = op.apply_t(&v);
+            let bt_dense = dense.matvec_t(&v);
+            for (a, b) in bt_free.iter().zip(&bt_dense) {
+                assert!((a - b).abs() <= 1e-3 * (1.0 + b.abs()), "full={full}: {a} vs {b}");
+            }
+        }
+    }
+
+    #[test]
+    fn adjoint_inner_product_property() {
+        let op = tiny(6, 8);
+        let mut rng = XorShift128Plus::new(3);
+        let x = rng.gaussian_vec(MeasurementOp::n(&op));
+        let v = rng.gaussian_vec(MeasurementOp::m(&op));
+        let lhs = linalg::dot(&op.apply(&x), &v);
+        let rhs = linalg::dot(&x, &op.apply_t(&v));
+        assert!((lhs - rhs).abs() <= 1e-3 * (1.0 + lhs.abs()), "{lhs} vs {rhs}");
+    }
+
+    #[test]
+    fn cached_mode_is_bit_identical() {
+        let op = tiny(5, 8);
+        let cached = op.clone().cached();
+        assert!(cached.is_cached() && !op.is_cached());
+        let mut rng = XorShift128Plus::new(4);
+        let x = rng.gaussian_vec(MeasurementOp::n(&op));
+        let v = rng.gaussian_vec(MeasurementOp::m(&op));
+        assert_eq!(op.apply(&x), cached.apply(&x));
+        assert_eq!(op.apply_t(&v), cached.apply_t(&v));
+    }
+
+    #[test]
+    fn validate_gates_station_parameters() {
+        let op = tiny(4, 8);
+        op.validate().unwrap();
+        let mut rng = XorShift128Plus::new(5);
+        let mut a = AntennaArray::lofar_like(4, 50e6, &mut rng);
+        a.freq_hz = 0.0;
+        let bad = VisibilityOp::new(a, ImageGrid::new(8, 0.4));
+        assert!(bad.validate().unwrap_err().to_string().contains("frequency"));
+        let one = AntennaArray { positions: vec![[0.0, 0.0]], freq_hz: 50e6 };
+        assert!(VisibilityOp::new(one, ImageGrid::new(8, 0.4))
+            .validate()
+            .unwrap_err()
+            .to_string()
+            .contains("antennas"));
+    }
+
+    #[test]
+    fn lowprec_op_quantizes_adjoint_traffic_only() {
+        let inner = Arc::new(tiny(6, 8));
+        let lp = LowPrecVisibilityOp::new(inner.clone(), 8, XorShift128Plus::new(1));
+        let mut rng = XorShift128Plus::new(6);
+        let x = rng.gaussian_vec(MeasurementOp::n(&*inner));
+        assert_eq!(lp.apply(&x), inner.apply(&x), "forward path is exact");
+        let v = rng.gaussian_vec(MeasurementOp::m(&*inner));
+        let exact = inner.apply_t(&v);
+        let noisy = lp.apply_t(&v);
+        assert_ne!(noisy, exact, "adjoint input is quantized");
+        let rel = linalg::norm2(&linalg::sub(&noisy, &exact)) / linalg::norm2(&exact);
+        assert!(rel < 0.05, "8-bit noise is small: rel={rel}");
+    }
+
+    #[test]
+    fn lowprec_problem_is_deterministic_in_seed() {
+        let inner = Arc::new(tiny(5, 8));
+        let mut rng = XorShift128Plus::new(7);
+        let x = rng.gaussian_vec(MeasurementOp::n(&*inner));
+        let y = inner.apply(&x);
+        let run = |seed: u64| {
+            let p = lowprec_problem(inner.clone(), &y, 4, 8, seed);
+            let a = p.op().apply_t(p.y());
+            (p.y().to_vec(), a)
+        };
+        assert_eq!(run(3), run(3), "same seed reproduces");
+        assert_ne!(run(3), run(4), "seed matters");
+    }
+
+    #[test]
+    fn sky_problem_builds_on_unique_set_by_default() {
+        let cfg = AstroConfig {
+            antennas: 6,
+            resolution: 12,
+            sources: 4,
+            ..Default::default()
+        };
+        let p = SkyProblem::build(&cfg, 1).unwrap();
+        assert_eq!(p.m(), 6 * 5); // 2 · L(L−1)/2
+        assert_eq!(p.n(), 144);
+        assert!(!p.op.full_baselines());
+        assert_eq!(p.s, 4, "sparsity defaults to the source count");
+        let q = SkyProblem::build(&cfg, 1).unwrap();
+        assert_eq!(p.y, q.y, "deterministic in seed");
+        let full = SkyProblem::build(
+            &AstroConfig { full_baselines: true, ..cfg.clone() },
+            1,
+        )
+        .unwrap();
+        assert_eq!(full.m(), 2 * 36);
+        assert!(full.op.full_baselines());
+    }
+
+    #[test]
+    fn sky_problem_rejects_invalid_config() {
+        let cfg = AstroConfig { bits: 3, ..Default::default() };
+        assert!(SkyProblem::build(&cfg, 0).is_err());
+        let cfg = AstroConfig { antennas: 1, ..Default::default() };
+        assert!(SkyProblem::build(&cfg, 0).is_err());
+    }
+}

@@ -48,6 +48,15 @@
 //! optional `retry_after_ms` hint on `Err`. The decoder reads them only
 //! when the frame's version byte says v4, so v2/v3 peers keep decoding
 //! unchanged and their frames decode here with zero/`None` defaults.
+//!
+//! v5 adds operator tag 2 (`Visibility`) inside `Submit` payloads: the
+//! matrix-free telescope operator shipped by content — antenna
+//! positions and frequency as f64 bit patterns (`f64::to_bits`, exact
+//! round-trip), grid resolution + half-width, the unique/full baseline
+//! flag and the optional sampling bit width. No frame layout changed,
+//! so v2–v4 frames decode as before; only a pre-v5 peer *receiving* a
+//! visibility submit rejects it (unknown operator tag → `Malformed`),
+//! which the server surfaces as a normal typed `Err`.
 
 use crate::algorithms::qniht::RequantMode;
 use crate::algorithms::{IterStat, SolveResult};
@@ -56,6 +65,7 @@ use crate::coordinator::{JobId, JobOutcome, JobSpec, JobState, OperatorSpec, Pro
 use crate::linalg::Mat;
 use crate::mri::{MaskConfig, MaskKind, PartialFourierOp, SamplingMask};
 use crate::solver::SolverKind;
+use crate::telescope::{AntennaArray, ImageGrid, VisibilityOp};
 use std::io::Read;
 use std::sync::Arc;
 use std::time::Duration;
@@ -64,13 +74,14 @@ use std::time::Duration;
 /// `Err` codes, the `Progress` epoch, and the `QueuePos`/`Stats`
 /// frames; v3 added the `ScrapeReq`/`Scrape` observability pair; v4
 /// added the trailing trace id on `Submit`/`Submitted`/`Progress`/
-/// `Done` and the `retry_after_ms` hint on `Err`. The decoder stays
-/// tolerant of older peers back to [`MIN_WIRE_VERSION`] — v4 fields
-/// are read only from v4 frames, every older frame decodes with
-/// zero/`None` defaults — while v1 peers are rejected with
+/// `Done` and the `retry_after_ms` hint on `Err`; v5 added the
+/// `Visibility` operator tag inside `Submit` payloads. The decoder
+/// stays tolerant of older peers back to [`MIN_WIRE_VERSION`] — v4
+/// fields are read only from v4+ frames, every older frame decodes
+/// with zero/`None` defaults — while v1 peers are rejected with
 /// `BadVersion` (surfaced as [`ErrCode::VersionMismatch`] by the
 /// server).
-pub const WIRE_VERSION: u8 = 4;
+pub const WIRE_VERSION: u8 = 5;
 /// Oldest peer version [`decode`] accepts.
 pub const MIN_WIRE_VERSION: u8 = 2;
 /// version + tag + payload-length bytes.
@@ -342,6 +353,24 @@ pub enum WireProblem {
         points: Vec<usize>,
         bits: Option<u8>,
     },
+    /// Matrix-free telescope operator by content (v5): everything that
+    /// determines its math, so two clients describing the same station
+    /// and grid hash to the same [`route_key`] and share one server-side
+    /// operator. f64 parameters travel as exact bit patterns.
+    Visibility {
+        /// Antenna positions in meters, (x, y) on the station plane.
+        positions: Vec<[f64; 2]>,
+        /// Observing frequency in Hz.
+        freq_hz: f64,
+        /// Image grid resolution r (pixels per axis).
+        resolution: usize,
+        /// Field-of-view half width in direction cosines.
+        half_width: f64,
+        /// Full L² ordered-pair set instead of the unique baselines.
+        full: bool,
+        /// Sampling bit width (2|4|8), `None` for the f32 path.
+        bits: Option<u8>,
+    },
 }
 
 impl WireJobSpec {
@@ -367,6 +396,14 @@ impl WireJobSpec {
                     bits: *bits,
                 }
             }
+            OperatorSpec::Visibility { op, bits } => WireProblem::Visibility {
+                positions: op.array().positions.clone(),
+                freq_hz: op.array().freq_hz,
+                resolution: op.grid().resolution,
+                half_width: op.grid().half_width,
+                full: op.full_baselines(),
+                bits: *bits,
+            },
         };
         Self {
             problem,
@@ -426,6 +463,37 @@ impl WireProblem {
                 Ok(match bits {
                     Some(b) => ProblemHandle::low_prec_fourier(op, *b),
                     None => ProblemHandle::partial_fourier(op),
+                })
+            }
+            Self::Visibility { positions, freq_hz, resolution, half_width, full, bits } => {
+                // Gate the grid constructor's preconditions first — these
+                // values arrive from the network and `ImageGrid::new`
+                // asserts; a lying peer must get an error, not a panic.
+                anyhow::ensure!(
+                    (2..=1024).contains(resolution),
+                    "visibility resolution {} out of the servable 2..=1024 range",
+                    resolution
+                );
+                anyhow::ensure!(
+                    *half_width > 0.0 && *half_width <= 1.0,
+                    "visibility half width {} needs 0 < d <= 1",
+                    half_width
+                );
+                let array =
+                    AntennaArray { positions: positions.clone(), freq_hz: *freq_hz };
+                let grid = ImageGrid::new(*resolution, *half_width);
+                let op = if *full {
+                    VisibilityOp::with_full_baselines(array, grid)
+                } else {
+                    VisibilityOp::new(array, grid)
+                };
+                // Same station gate the submit face runs, so a hostile
+                // operator dies here with the same message.
+                op.validate()?;
+                let op = Arc::new(op);
+                Ok(match bits {
+                    Some(b) => ProblemHandle::low_prec_visibility(op, *b),
+                    None => ProblemHandle::visibility(op),
                 })
             }
         }
@@ -755,6 +823,25 @@ pub(crate) fn encode_problem(b: &mut Vec<u8>, p: &WireProblem) {
                 put_u8(b, *bits);
             }
         }
+        WireProblem::Visibility { positions, freq_hz, resolution, half_width, full, bits } => {
+            put_u8(b, 2);
+            // f64 parameters as exact bit patterns: encode/decode must
+            // reconstruct the identical steering phases, and the op
+            // cache hashes these bytes as the operator's identity.
+            put_u32(b, positions.len() as u32);
+            for p in positions {
+                put_u64(b, p[0].to_bits());
+                put_u64(b, p[1].to_bits());
+            }
+            put_u64(b, freq_hz.to_bits());
+            put_u64(b, *resolution as u64);
+            put_u64(b, half_width.to_bits());
+            put_bool(b, *full);
+            put_opt(b, bits.is_some());
+            if let Some(bits) = bits {
+                put_u8(b, *bits);
+            }
+        }
     }
 }
 
@@ -779,6 +866,19 @@ fn rd_problem(r: &mut Rd) -> Result<WireProblem, DecodeError> {
             let points = r.vec_u64()?.into_iter().map(|p| p as usize).collect();
             let bits = if r.opt()? { Some(r.u8()?) } else { None };
             WireProblem::PartialFourier { r: rr, kind, fraction, center_band, points, bits }
+        }
+        2 => {
+            let np = r.seq_len(16)?;
+            let mut positions = Vec::with_capacity(np);
+            for _ in 0..np {
+                positions.push([f64::from_bits(r.u64()?), f64::from_bits(r.u64()?)]);
+            }
+            let freq_hz = f64::from_bits(r.u64()?);
+            let resolution = r.u64()? as usize;
+            let half_width = f64::from_bits(r.u64()?);
+            let full = r.bool()?;
+            let bits = if r.opt()? { Some(r.u8()?) } else { None };
+            WireProblem::Visibility { positions, freq_hz, resolution, half_width, full, bits }
         }
         _ => return Err(DecodeError::Malformed("unknown operator tag")),
     })
@@ -935,8 +1035,9 @@ pub fn decode(buf: &[u8]) -> Result<(Message, usize), DecodeError> {
         return Err(DecodeError::Truncated);
     }
     // Tolerant of older peers back to MIN_WIRE_VERSION: v3 only ADDED
-    // the Scrape pair, and v4 fields are trailing — read them only when
-    // the sender's version byte says they are there.
+    // the Scrape pair, v4 fields are trailing — read them only when the
+    // sender's version byte says they are there — and v5 only added an
+    // operator tag no older peer emits.
     if !(MIN_WIRE_VERSION..=WIRE_VERSION).contains(&buf[0]) {
         return Err(DecodeError::BadVersion(buf[0]));
     }
@@ -1200,6 +1301,12 @@ mod tests {
                 assert_eq!(used, frame.len());
             }
         }
+        // A v4 peer appends the trailing fields itself; its frames
+        // decode here (v5) with nothing zeroed.
+        let sent = Message::Submitted { id: 42, trace: 0xbeef };
+        let frame = downgrade(&encode(&sent), 4, 0);
+        let (back, _) = decode(&frame).expect("v4 frames stay decodable");
+        assert_eq!(back, sent);
     }
 
     #[test]
@@ -1289,6 +1396,95 @@ mod tests {
         let sum = checksum(&frame);
         frame.extend_from_slice(&sum.to_le_bytes());
         assert!(matches!(decode(&frame), Err(DecodeError::Malformed(_))));
+    }
+
+    fn vis_spec(bits: Option<u8>) -> WireJobSpec {
+        WireJobSpec {
+            problem: WireProblem::Visibility {
+                positions: vec![[0.0, 0.0], [35.0, -4.0], [-11.5, 20.25]],
+                freq_hz: 50e6,
+                resolution: 4,
+                half_width: 0.4,
+                full: false,
+                bits,
+            },
+            y: vec![0.5; 6],
+            s: 2,
+            solver: SolverKind::Niht,
+            engine: EngineKind::NativeDense,
+            seed: 9,
+            trace: 0,
+        }
+    }
+
+    #[test]
+    fn visibility_submits_round_trip_and_build() {
+        for bits in [None, Some(2), Some(8)] {
+            let spec = vis_spec(bits);
+            let frame = encode(&Message::Submit(spec.clone()));
+            let (back, used) = decode(&frame).unwrap();
+            assert_eq!(used, frame.len());
+            let Message::Submit(got) = back else { panic!("expected a submit frame") };
+            assert_eq!(got, spec);
+            let handle = got.problem.build_handle().unwrap();
+            assert_eq!(handle.op.m(), 2 * 3, "L=3 unique baselines stacked-real");
+            assert_eq!(handle.op.n(), 16);
+        }
+    }
+
+    #[test]
+    fn visibility_route_key_tracks_operator_content_and_bits() {
+        let a = vis_spec(Some(8));
+        let mut b = vis_spec(Some(8));
+        b.y = vec![9.0; 6];
+        b.seed = 77;
+        assert_eq!(route_key(&a), route_key(&b), "y and seed never perturb placement");
+        assert_ne!(route_key(&a), route_key(&vis_spec(Some(2))), "bits enter the key");
+        let mut d = vis_spec(Some(8));
+        let WireProblem::Visibility { positions, .. } = &mut d.problem else { unreachable!() };
+        positions[1][0] += 1.0;
+        assert_ne!(route_key(&a), route_key(&d), "station content enters the key");
+    }
+
+    #[test]
+    fn hostile_visibility_parameters_fail_cleanly() {
+        let break_one = |f: &mut dyn FnMut(&mut WireProblem)| {
+            let mut spec = vis_spec(None);
+            f(&mut spec.problem);
+            spec.problem.build_handle()
+        };
+        let half = break_one(&mut |p| {
+            let WireProblem::Visibility { half_width, .. } = p else { unreachable!() };
+            *half_width = 3.0;
+        });
+        assert!(half.unwrap_err().to_string().contains("half width"));
+        let res = break_one(&mut |p| {
+            let WireProblem::Visibility { resolution, .. } = p else { unreachable!() };
+            *resolution = 0;
+        });
+        assert!(res.unwrap_err().to_string().contains("resolution"));
+        let nan = break_one(&mut |p| {
+            let WireProblem::Visibility { positions, .. } = p else { unreachable!() };
+            positions[0][1] = f64::NAN;
+        });
+        assert!(nan.unwrap_err().to_string().contains("finite"));
+        let lone = break_one(&mut |p| {
+            let WireProblem::Visibility { positions, .. } = p else { unreachable!() };
+            positions.truncate(1);
+        });
+        assert!(lone.unwrap_err().to_string().contains("antennas"));
+    }
+
+    #[test]
+    fn visibility_submit_truncations_are_rejected() {
+        let frame = encode(&Message::Submit(vis_spec(Some(8))));
+        for cut in 0..frame.len() {
+            assert_eq!(
+                decode(&frame[..cut]),
+                Err(DecodeError::Truncated),
+                "prefix of {cut} bytes"
+            );
+        }
     }
 
     #[test]

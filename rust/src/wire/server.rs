@@ -24,6 +24,7 @@ use crate::coordinator::{
 };
 use crate::linalg::Mat;
 use crate::mri::PartialFourierOp;
+use crate::telescope::VisibilityOp;
 use anyhow::{Context, Result};
 use std::collections::HashMap;
 use std::io::Write;
@@ -50,6 +51,7 @@ const WRITE_TIMEOUT: Duration = Duration::from_secs(5);
 struct OpCache {
     dense: HashMap<u64, std::sync::Weak<Mat>>,
     fourier: HashMap<u64, std::sync::Weak<PartialFourierOp>>,
+    visibility: HashMap<u64, std::sync::Weak<VisibilityOp>>,
 }
 
 /// Reconstruct an in-process spec, sharing operator `Arc`s across
@@ -117,6 +119,43 @@ fn build_spec(ws: WireJobSpec, cache: &Mutex<OpCache>) -> Result<crate::coordina
             match bits {
                 Some(b) => crate::coordinator::ProblemHandle::low_prec_fourier(op, *b),
                 None => crate::coordinator::ProblemHandle::partial_fourier(op),
+            }
+        }
+        codec::WireProblem::Visibility {
+            positions,
+            freq_hz,
+            resolution,
+            half_width,
+            full,
+            bits,
+        } => {
+            let hit =
+                cache.lock().unwrap().visibility.get(&key).and_then(std::sync::Weak::upgrade);
+            let op = match hit {
+                Some(hit)
+                    if hit.array().positions == *positions
+                        && hit.array().freq_hz == *freq_hz
+                        && hit.grid().resolution == *resolution
+                        && hit.grid().half_width == *half_width
+                        && hit.full_baselines() == *full =>
+                {
+                    hit
+                }
+                _ => {
+                    let fresh = ws.problem.build_handle()?;
+                    let crate::coordinator::OperatorSpec::Visibility { op, .. } = fresh.op
+                    else {
+                        unreachable!("visibility wire problem builds a matrix-free handle")
+                    };
+                    let mut cache = cache.lock().unwrap();
+                    cache.visibility.retain(|_, w| w.strong_count() > 0);
+                    cache.visibility.insert(key, Arc::downgrade(&op));
+                    op
+                }
+            };
+            match bits {
+                Some(b) => crate::coordinator::ProblemHandle::low_prec_visibility(op, *b),
+                None => crate::coordinator::ProblemHandle::visibility(op),
             }
         }
     };
@@ -506,5 +545,34 @@ mod tests {
         // A different sampling bit width never shares a batch key.
         let q = build_spec(ws(Some(8)), &cache).unwrap();
         assert_ne!(a.batch_key(), q.batch_key());
+    }
+
+    #[test]
+    fn op_cache_shares_visibility_arcs_by_content() {
+        let cache = Mutex::new(OpCache::default());
+        let ws = |bits: Option<u8>, freq_hz: f64| WireJobSpec {
+            problem: WireProblem::Visibility {
+                positions: vec![[0.0, 0.0], [30.0, 0.0], [0.0, 30.0], [-22.0, 8.5]],
+                freq_hz,
+                resolution: 6,
+                half_width: 0.4,
+                full: false,
+                bits,
+            },
+            y: vec![0.0; 12], // 2 · L(L−1)/2, L = 4
+            s: 2,
+            solver: SolverKind::Niht,
+            engine: EngineKind::NativeDense,
+            seed: 0,
+            trace: 0,
+        };
+        let a = build_spec(ws(None, 50e6), &cache).unwrap();
+        let b = build_spec(ws(None, 50e6), &cache).unwrap();
+        assert_eq!(a.batch_key(), b.batch_key(), "same station bytes share one operator Arc");
+        // Bit width and station content both split the batch.
+        let q = build_spec(ws(Some(8), 50e6), &cache).unwrap();
+        assert_ne!(a.batch_key(), q.batch_key());
+        let other = build_spec(ws(None, 60e6), &cache).unwrap();
+        assert_ne!(a.batch_key(), other.batch_key());
     }
 }

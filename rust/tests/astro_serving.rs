@@ -1,0 +1,287 @@
+//! Telescope serving conformance: matrix-free `OperatorSpec::Visibility`
+//! jobs round-trip the wire bit-for-bit against the facade
+//! (`Recovery::service_dispatch`) on the f32 and the low-precision
+//! sampling paths, streams stay monotone with exactly one `Done`,
+//! submit-time validation gates ill-formed stations and wrong
+//! solver/engine surfaces, and the physics regressions hold: the
+//! matrix-free operator matches its materialized matrix, the full-set
+//! noise is conjugate-symmetric at the requested SNR, and 8-bit
+//! sampling lands within ~1 dB of f32 on the L=10/r=32 sky.
+
+use lpcs::algorithms::{IterStat, SolveOptions};
+use lpcs::config::{EngineKind, ServiceConfig};
+use lpcs::coordinator::{JobOutcome, JobSpec, JobState, ProblemHandle};
+use lpcs::linalg::norm2_sq;
+use lpcs::metrics;
+use lpcs::rng::XorShift128Plus;
+use lpcs::solver::{MeasurementOp, Problem, Recovery, SolverKind};
+use lpcs::telescope::visibility::{self, NoiseShape};
+use lpcs::telescope::{op as astro_op, AntennaArray, AstroConfig, ImageGrid, SkyProblem, VisibilityOp};
+use lpcs::testkit::ServiceHarness;
+use lpcs::wire::{Watch, WatchEvent};
+use std::sync::atomic::Ordering;
+use std::time::Duration;
+
+fn harness(workers: usize) -> ServiceHarness {
+    ServiceHarness::start(
+        ServiceConfig { workers, queue_capacity: 64, max_batch: 4, ..Default::default() },
+        SolveOptions::default(),
+    )
+}
+
+fn sky(antennas: usize, resolution: usize, sources: usize, seed: u64) -> SkyProblem {
+    let cfg = AstroConfig {
+        antennas,
+        resolution,
+        sources,
+        snr_db: 10.0,
+        ..Default::default()
+    };
+    SkyProblem::build(&cfg, seed).unwrap()
+}
+
+/// Drain a watch stream asserting the protocol invariants: iteration
+/// numbers strictly increase, nothing follows the terminal frame, and
+/// exactly one `Done` arrives.
+fn collect_stream(watch: Watch<'_>) -> (Vec<IterStat>, JobOutcome) {
+    let mut stats: Vec<IterStat> = Vec::new();
+    let mut done = None;
+    for event in watch {
+        match event.expect("stream event") {
+            WatchEvent::Queued { .. } => {
+                assert!(done.is_none() && stats.is_empty(), "Queued after the solve started");
+            }
+            WatchEvent::Progress(st) => {
+                assert!(done.is_none(), "Progress after Done");
+                stats.push(st);
+            }
+            WatchEvent::Done(out) => {
+                assert!(done.is_none(), "second Done");
+                done = Some(out);
+            }
+        }
+    }
+    let done = done.expect("stream must end in exactly one Done");
+    for w in stats.windows(2) {
+        assert!(w[0].iter < w[1].iter, "monotone stream: {} then {}", w[0].iter, w[1].iter);
+    }
+    (stats, done)
+}
+
+#[test]
+fn visibility_jobs_served_over_the_wire_match_the_facade_bit_for_bit() {
+    // The operator ships by content (station positions + grid + freq),
+    // not by Arc: the server reconstructs it and must still run the
+    // client's exact math — f32 and both quantized widths.
+    let h = harness(2);
+    let p = sky(5, 12, 4, 6);
+    for (case, bits) in [None, Some(8u8), Some(2)].into_iter().enumerate() {
+        let seed = 120 + case as u64;
+        let direct_problem = match bits {
+            None => Problem::with_op(p.op.clone(), p.y.clone(), p.s),
+            Some(b) => astro_op::lowprec_problem(p.op.clone(), &p.y, p.s, b, seed),
+        };
+        let direct = Recovery::problem(direct_problem)
+            .solver(SolverKind::Niht)
+            .engine(EngineKind::NativeDense)
+            .seed(seed)
+            .service_dispatch()
+            .run()
+            .unwrap_or_else(|e| panic!("bits={bits:?}: direct: {e:#}"));
+
+        let handle = match bits {
+            None => ProblemHandle::visibility(p.op.clone()),
+            Some(b) => ProblemHandle::low_prec_visibility(p.op.clone(), b),
+        };
+        let mut client = h.client();
+        let id = client
+            .submit(
+                &JobSpec::builder(handle, p.y.clone(), p.s)
+                    .engine(EngineKind::NativeDense)
+                    .solver(SolverKind::Niht)
+                    .seed(seed)
+                    .build(),
+            )
+            .unwrap_or_else(|e| panic!("bits={bits:?}: submit: {e:#}"));
+        let (_stats, out) = collect_stream(client.watch(id).unwrap());
+        assert_eq!(out.state, JobState::Done, "bits={bits:?}: {:?}", out.error);
+        let served = out.result.unwrap();
+        assert_eq!(served.x, direct.x, "bits={bits:?}: wire-served x̂ ≠ facade x̂");
+        assert_eq!(served.iterations, direct.iterations, "bits={bits:?}");
+        assert_eq!(served.converged, direct.converged, "bits={bits:?}");
+    }
+    h.shutdown();
+}
+
+#[test]
+fn invalid_visibility_jobs_rejected_at_submit_and_counted() {
+    let h = harness(1);
+    let p = sky(4, 8, 3, 7);
+    let m = p.m();
+    // Wrong solver for the matrix-free surface.
+    assert!(h
+        .service()
+        .submit(
+            JobSpec::builder(ProblemHandle::visibility(p.op.clone()), vec![0.0; m], 2)
+                .engine(EngineKind::NativeDense)
+                .solver(SolverKind::Cosamp)
+                .build(),
+        )
+        .is_err());
+    // Wrong engine.
+    assert!(h
+        .service()
+        .submit(
+            JobSpec::builder(ProblemHandle::visibility(p.op.clone()), vec![0.0; m], 2)
+                .engine(EngineKind::NativeQuant)
+                .solver(SolverKind::Niht)
+                .build(),
+        )
+        .is_err());
+    // Unpacked bit width.
+    assert!(h
+        .service()
+        .submit(
+            JobSpec::builder(ProblemHandle::low_prec_visibility(p.op.clone(), 3), vec![0.0; m], 2)
+                .engine(EngineKind::NativeDense)
+                .solver(SolverKind::Niht)
+                .build(),
+        )
+        .is_err());
+    // Ill-formed station (zero frequency) dies at submit, not in a worker.
+    let mut rng = XorShift128Plus::new(1);
+    let mut bad_array = AntennaArray::lofar_like(4, 50e6, &mut rng);
+    bad_array.freq_hz = 0.0;
+    let bad = std::sync::Arc::new(VisibilityOp::new(bad_array, ImageGrid::new(8, 0.4)));
+    let bad_m = MeasurementOp::m(&*bad);
+    assert!(h
+        .service()
+        .submit(
+            JobSpec::builder(ProblemHandle::visibility(bad), vec![0.0; bad_m], 2)
+                .engine(EngineKind::NativeDense)
+                .solver(SolverKind::Niht)
+                .build(),
+        )
+        .is_err());
+    let metrics = h.service().metrics();
+    assert_eq!(metrics.invalid.load(Ordering::Relaxed), 4, "all four counted invalid");
+    assert_eq!(metrics.submitted.load(Ordering::Relaxed), 0, "no job id allocated");
+    h.shutdown();
+}
+
+#[test]
+fn shared_visibility_op_jobs_batch_and_all_recover() {
+    // Several jobs against ONE shared operator Arc — the telescope
+    // snapshot stream. All complete with the operator as batch identity.
+    let h = harness(2);
+    let p = sky(6, 12, 4, 8);
+    let mut ids = Vec::new();
+    for k in 0..6u64 {
+        let handle = if k % 2 == 0 {
+            ProblemHandle::visibility(p.op.clone())
+        } else {
+            ProblemHandle::low_prec_visibility(p.op.clone(), 8)
+        };
+        let id = h
+            .service()
+            .submit(
+                JobSpec::builder(handle, p.y.clone(), p.s)
+                    .engine(EngineKind::NativeDense)
+                    .solver(SolverKind::Niht)
+                    .seed(k)
+                    .build(),
+            )
+            .unwrap();
+        ids.push(id);
+    }
+    for id in ids {
+        let out = h.service().wait(id, Duration::from_secs(120)).expect("finishes");
+        assert_eq!(out.state, JobState::Done, "{:?}", out.error);
+        assert_eq!(out.result.unwrap().x.len(), p.n());
+    }
+    assert_eq!(h.service().metrics().completed.load(Ordering::Relaxed), 6);
+    h.shutdown();
+}
+
+#[test]
+fn matrix_free_operator_matches_its_materialized_matrix() {
+    // Integration-level parity: the operator a served job runs and the
+    // dense matrix the paper-parity path materializes are the same map.
+    let p = sky(6, 16, 4, 9);
+    let dense = p.op.to_mat();
+    assert_eq!((dense.rows, dense.cols), (p.m(), p.n()));
+    let mut rng = XorShift128Plus::new(2);
+    let x = rng.gaussian_vec(p.n());
+    let free = p.op.apply(&x);
+    let mat = dense.matvec(&x);
+    for (a, b) in free.iter().zip(&mat) {
+        assert!((a - b).abs() <= 1e-3 * (1.0 + b.abs()), "{a} vs {b}");
+    }
+    let v = rng.gaussian_vec(p.m());
+    let free_t = p.op.apply_t(&v);
+    let mat_t = dense.matvec_t(&v);
+    for (a, b) in free_t.iter().zip(&mat_t) {
+        assert!((a - b).abs() <= 1e-3 * (1.0 + b.abs()), "{a} vs {b}");
+    }
+}
+
+#[test]
+fn full_set_noise_is_conjugate_symmetric_and_snr_calibrated() {
+    // Regression for the noise bugfix: draws happen only on unique
+    // baselines + autocorrelations, conjugates mirror them, and the
+    // achieved SNR over the whole stacked vector still hits the target.
+    let l = 6;
+    let mut rng = XorShift128Plus::new(3);
+    let array = AntennaArray::lofar_like(l, 50e6, &mut rng);
+    let op = VisibilityOp::with_full_baselines(array, ImageGrid::new(12, 0.4));
+    let mb = l * l;
+    let mut x = vec![0.0f32; MeasurementOp::n(&op)];
+    x[7] = 1.0;
+    x[100] = 0.6;
+    let clean = op.apply(&x);
+    let mut ratios = Vec::new();
+    for seed in 0..20 {
+        let mut r = rng.fork(seed);
+        let (y, _) = visibility::add_noise(&clean, 0.0, &mut r, NoiseShape::Full { antennas: l });
+        for i in 0..l {
+            assert_eq!(y[mb + i * l + i], clean[mb + i * l + i], "Im(auto) carries no noise");
+            for k in (i + 1)..l {
+                let (z1, z2) = (i * l + k, k * l + i);
+                let (re1, re2) = (y[z1] - clean[z1], y[z2] - clean[z2]);
+                let (im1, im2) = (y[mb + z1] - clean[mb + z1], y[mb + z2] - clean[mb + z2]);
+                assert!((re1 - re2).abs() < 1e-6, "Re noise mirrored");
+                assert!((im1 + im2).abs() < 1e-6, "Im noise conjugated");
+            }
+        }
+        let noise: Vec<f32> = y.iter().zip(&clean).map(|(a, b)| a - b).collect();
+        ratios.push((norm2_sq(&clean) / norm2_sq(&noise)) as f64);
+    }
+    let mean = ratios.iter().sum::<f64>() / ratios.len() as f64;
+    assert!((10.0 * mean.log10()).abs() < 1.0, "achieved snr = {}", 10.0 * mean.log10());
+}
+
+#[test]
+fn eight_bit_recovery_within_one_db_of_f32_on_the_l10_r32_sky() {
+    // The acceptance pin: on the bench-scale sky (L=10 antennas, 32×32
+    // grid) the 8-bit sampling path reconstructs within ~1 dB of the
+    // f32 matrix-free baseline.
+    let p = sky(10, 32, 12, 1);
+    let f32_rep = Recovery::problem(Problem::with_op(p.op.clone(), p.y.clone(), p.s))
+        .solver(SolverKind::Niht)
+        .run()
+        .unwrap();
+    let psnr_f32 = metrics::psnr(&f32_rep.x, &p.x_true);
+
+    let q8_rep = Recovery::problem(astro_op::lowprec_problem(p.op.clone(), &p.y, p.s, 8, 1))
+        .solver(SolverKind::Niht)
+        .seed(1)
+        .run()
+        .unwrap();
+    let psnr_q8 = metrics::psnr(&q8_rep.x, &p.x_true);
+
+    assert!(psnr_f32 > 15.0, "f32 baseline must reconstruct the sky at all: {psnr_f32:.2} dB");
+    assert!(
+        psnr_q8 >= psnr_f32 - 1.5,
+        "8-bit sampling path within ~1 dB of f32: {psnr_q8:.2} vs {psnr_f32:.2} dB"
+    );
+}
